@@ -1,0 +1,140 @@
+//! END-TO-END driver (DESIGN.md §6): concurrently train M = 4 MLP
+//! classifiers on the synthetic corpus with **real gradient computation**
+//! through the AOT-compiled PJRT artifacts, under each coding scheme,
+//! on a simulated straggling serverless cluster. Logs per-model loss
+//! curves and the completed-jobs-vs-time curve (Fig. 2), and saves JSON
+//! to `target/experiments/multi_model_training.json`.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```text
+//! cargo run --release --example multi_model_training [--n 16 --iters 30]
+//! ```
+
+use sgc::cluster::SimCluster;
+use sgc::coding::SchemeConfig;
+use sgc::runtime::{artifacts_dir, ComputePool};
+use sgc::straggler::GilbertElliot;
+use sgc::train::{Dataset, DatasetConfig, MultiModelTrainer, TrainConfig};
+use sgc::util::cli::Args;
+use sgc::util::json::Json;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_parse("n", 16usize);
+    let iters = args.get_parse("iters", 30usize);
+    let models = args.get_parse("models", 4usize);
+    let batch = args.get_parse("batch", 256usize);
+    let lanes = args.get_parse("lanes", 4usize);
+
+    if !artifacts_dir().join("model.hlo.txt").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let pool = Arc::new(ComputePool::new(artifacts_dir(), lanes)?);
+    let dims = pool.dims();
+    println!(
+        "model: {}-{}-{}-{} MLP ({} params), chunk capacity {}",
+        dims.input,
+        dims.hidden1,
+        dims.hidden2,
+        dims.classes,
+        dims.param_count(),
+        dims.chunk
+    );
+    let dataset = Dataset::generate(DatasetConfig::default());
+    println!(
+        "dataset: {} synthetic samples, {} classes | cluster: n={n}, GE stragglers\n",
+        dataset.len(),
+        dataset.cfg.classes
+    );
+
+    let mut out = Json::obj();
+    // λ ≈ n/4 scaled from the paper's 27/256; s ≈ n/16 scaled from 15/256.
+    let schemes = [
+        format!("m-sgc:1,2,{}", (n / 4).max(1)),
+        format!("sr-sgc:2,3,{}", (n / 4).max(2)),
+        format!("gc:{}", (n / 8).max(1)),
+        "uncoded".to_string(),
+    ];
+    for spec in &schemes {
+        let scheme = SchemeConfig::parse(n, spec)?;
+        let cfg = TrainConfig {
+            models,
+            iterations: iters,
+            batch,
+            lr: 2e-3,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut trainer =
+            MultiModelTrainer::new(scheme.clone(), cfg, Arc::clone(&pool), dataset.clone())?;
+        let mut cluster =
+            SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 7), 31);
+        let report = trainer.run(&mut cluster)?;
+        println!(
+            "{:<16} load={:.4} | {} jobs | sim {:>7.1}s | wall {:>6.1}s | violations {}",
+            report.scheme,
+            scheme.load(),
+            report.jobs_completed,
+            report.sim_runtime_s,
+            report.wall_runtime_s,
+            report.deadline_violations
+        );
+        for (m, curve) in report.losses.iter().enumerate() {
+            if let (Some(f), Some(l)) = (curve.first(), curve.last()) {
+                println!(
+                    "    model {m}: loss {:.4} → {:.4} ({} iters)",
+                    f.loss, l.loss, l.iteration
+                );
+            }
+        }
+        let mut j = Json::obj();
+        j.set("load", scheme.load())
+            .set("sim_runtime_s", report.sim_runtime_s)
+            .set("jobs", report.jobs_completed)
+            .set(
+                "completion_curve",
+                Json::Arr(
+                    report
+                        .completion_curve
+                        .iter()
+                        .map(|&(t, c)| {
+                            let mut o = Json::obj();
+                            o.set("t", t).set("jobs", c);
+                            o
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "loss_curves",
+                Json::Arr(
+                    report
+                        .losses
+                        .iter()
+                        .map(|curve| {
+                            Json::Arr(
+                                curve
+                                    .iter()
+                                    .map(|p| {
+                                        let mut o = Json::obj();
+                                        o.set("iter", p.iteration)
+                                            .set("t", p.sim_time_s)
+                                            .set("loss", p.loss);
+                                        o
+                                    })
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            );
+        out.set(&scheme.label(), j);
+    }
+    let path = "target/experiments/multi_model_training.json";
+    out.save(path)?;
+    println!("\nsaved {path}");
+    println!("expected shape (Fig. 2): all curves reach the same loss; M-SGC reaches it fastest.");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Appendix-J parameter selection, end to end:
+//!
+//! 1. calibrate the load→runtime slope α (Fig. 16),
+//! 2. capture a `T_probe`-round uncoded reference delay profile,
+//! 3. grid-search (B, W, λ) / s by replaying the load-adjusted profile
+//!    through the real master logic,
+//! 4. print the per-scheme winners (Table 1 "Parameters" column).
+//!
+//! ```text
+//! cargo run --release --example param_selection [--n 128 --t-probe 40]
+//! ```
+
+use sgc::cluster::SimCluster;
+use sgc::probe::{grid_search, DelayProfile, SearchSpace};
+use sgc::straggler::GilbertElliot;
+use sgc::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_parse("n", 128usize);
+    let t_probe = args.get_parse("t-probe", 40usize);
+    let jobs = args.get_parse("jobs", 80usize);
+
+    // Step 1: Fig-16 calibration — mean worker time at a few loads.
+    let mut cal = SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 5), 17);
+    let mut points = Vec::new();
+    for load in [0.0, 0.1, 0.25, 0.5, 0.75, 1.0] {
+        let profile = DelayProfile::capture(&mut cal, 5, load);
+        points.push((load, profile.mean_time()));
+    }
+    let alpha = DelayProfile::fit_alpha(&points);
+    println!("fitted load slope α = {alpha:.2} s/unit-load (true: {:.2})", cal.latency.alpha_s_per_load);
+
+    // Step 2: reference (uncoded) delay profile.
+    let mut cluster = SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 5), 29);
+    let profile = DelayProfile::capture(&mut cluster, t_probe, 1.0 / n as f64);
+    println!("captured T_probe = {t_probe} rounds of reference delays\n");
+
+    // Steps 3-4: grid search per scheme family.
+    let space = SearchSpace::paper_default(n);
+    println!(
+        "{:<10} {:<18} {:>10} {:>14} {:>12}",
+        "family", "best params", "load", "est. runtime", "candidates"
+    );
+    for (name, cands) in [
+        ("GC", space.gc_candidates()),
+        ("SR-SGC", space.sr_sgc_candidates()),
+        ("M-SGC", space.m_sgc_candidates()),
+    ] {
+        let ranked = grid_search(&cands, &profile, alpha, jobs);
+        let best = &ranked[0];
+        println!(
+            "{:<10} {:<18} {:>10.4} {:>12.1}s {:>12}",
+            name,
+            best.config.label(),
+            best.load,
+            best.estimated_runtime_s,
+            ranked.len()
+        );
+    }
+    println!("\n(expected shape: M-SGC wins with ~8x lower load than GC — Table 1)");
+}

@@ -1,0 +1,66 @@
+"""AOT: lower the L2 grad program to HLO text for the rust runtime.
+
+HLO *text* (never ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the published xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts/model.hlo.txt \
+        [--input 64 --classes 10 --hidden1 128 --hidden2 64 --chunk 64]
+
+Also writes ``model_meta.txt`` next to the HLO with the lowered shapes so
+the rust loader can validate its inputs.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_grad_program(input_dim, classes, hidden1, hidden2, chunk):
+    shapes = model.make_shapes(input_dim, classes, hidden1, hidden2, chunk)
+    args = tuple(shapes["params"]) + (shapes["x"], shapes["y"], shapes["wgt"])
+    return jax.jit(model.grad_program).lower(*args)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--input", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--hidden1", type=int, default=128)
+    ap.add_argument("--hidden2", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=64)
+    ns = ap.parse_args()
+
+    lowered = lower_grad_program(ns.input, ns.classes, ns.hidden1, ns.hidden2, ns.chunk)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(os.path.abspath(ns.out)), exist_ok=True)
+    with open(ns.out, "w") as f:
+        f.write(text)
+    meta_path = os.path.join(os.path.dirname(os.path.abspath(ns.out)), "model_meta.txt")
+    with open(meta_path, "w") as f:
+        f.write(
+            f"input={ns.input}\nclasses={ns.classes}\n"
+            f"hidden1={ns.hidden1}\nhidden2={ns.hidden2}\nchunk={ns.chunk}\n"
+        )
+    print(f"wrote {len(text)} chars to {ns.out} (+ {meta_path})")
+
+
+if __name__ == "__main__":
+    main()

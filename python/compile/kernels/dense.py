@@ -1,0 +1,129 @@
+"""L1: Pallas fused dense-layer kernels.
+
+The gradient computation's hot spot is the dense matmul in each layer of
+the model (fwd and bwd). The kernel is written TPU-style:
+
+* ``(bm, bn, bk)`` tiles sized for VMEM residency (default 128, matching
+  the MXU systolic array's 128x128 shape);
+* the grid expresses the HBM->VMEM schedule: ``(M/bm, N/bn, K/bk)`` with a
+  VMEM accumulator scratch, so each output tile streams K-blocks through
+  the MXU without round-tripping HBM;
+* a fused bias+activation epilogue kernel avoids a second HBM pass.
+
+On this image Pallas MUST run ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the BlockSpec structure is what we optimize and what
+DESIGN.md's TPU-efficiency estimate is based on.
+
+Autodiff: ``pallas_call`` has no JVP rule, so ``dense`` is a
+``jax.custom_vjp`` whose forward and backward passes are both built from
+the same Pallas matmul kernel (dx = dz @ W^T, dW = x^T @ dz).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU-shaped tile. Small problems shrink to the padded size.
+DEFAULT_BLOCK = 128
+
+
+def _block(dim: int, preferred: int) -> int:
+    """Pick a block size: the full (padded) dim for small problems, the
+    preferred MXU tile otherwise."""
+    return min(preferred, max(8, _round_up(dim, 8)))
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int):
+    """One (bm, bn) output tile; grid axis 2 streams K-blocks."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x, y, *, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK,
+           interpret=True):
+    """Tiled Pallas matmul ``x @ y`` with zero-padding to block multiples.
+
+    ``x``: (M, K), ``y``: (K, N) -> (M, N) in float32 accumulation.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims: {k} vs {k2}"
+    bm = _block(m, bm)
+    bn = _block(n, bn)
+    bk = _block(k, bk)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _bias_act_kernel(z_ref, b_ref, o_ref, *, relu: bool):
+    z = z_ref[...] + b_ref[...]
+    o_ref[...] = jnp.maximum(z, 0.0) if relu else z
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
+def bias_act(z, b, *, relu=True, interpret=True):
+    """Fused bias-add + optional ReLU epilogue (elementwise, VPU-bound)."""
+    m, n = z.shape
+    assert b.shape == (n,)
+    return pl.pallas_call(
+        functools.partial(_bias_act_kernel, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((m, n), z.dtype),
+        interpret=interpret,
+    )(z, jnp.broadcast_to(b, (m, n)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, relu=True):
+    """Fused dense layer ``act(x @ w + b)`` with a Pallas fwd and bwd."""
+    return bias_act(matmul(x, w), b, relu=relu)
+
+
+def _dense_fwd(x, w, b, relu):
+    z = bias_act(matmul(x, w), b, relu=False)
+    y = jnp.maximum(z, 0.0) if relu else z
+    return y, (x, w, z)
+
+
+def _dense_bwd(relu, res, dy):
+    x, w, z = res
+    dz = jnp.where(z > 0, dy, 0.0) if relu else dy
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

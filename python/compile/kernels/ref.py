@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracle for the Pallas kernels and the L2 model.
+
+Everything here is the straightforward jax.numpy implementation — no
+Pallas, no custom_vjp — so jax's own autodiff provides the ground-truth
+gradients that pytest compares the kernel stack against.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.matmul(x, y)
+
+
+def dense_ref(x, w, b, relu=True):
+    z = x @ w + b
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def forward_ref(params, x):
+    """3-layer MLP forward -> logits."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = dense_ref(x, w1, b1, relu=True)
+    h2 = dense_ref(h1, w2, b2, relu=True)
+    return dense_ref(h2, w3, b3, relu=False)
+
+
+def weighted_ce_ref(params, x, y_onehot, wgt):
+    """Weighted-sum cross entropy: sum_i w_i * CE_i.
+
+    With w_i = 1/batch for real samples and 0 for padding, partial
+    gradients over chunks sum to the full-batch mean gradient.
+    """
+    logits = forward_ref(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.sum(y_onehot * logp, axis=-1)
+    return jnp.sum(wgt * ce)
+
+
+def grad_program_ref(w1, b1, w2, b2, w3, b3, x, y_onehot, wgt):
+    """(loss, grads...) oracle with the same signature as the AOT program."""
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(weighted_ce_ref)(params, x, y_onehot, wgt)
+    return (loss,) + tuple(grads)

@@ -1,0 +1,62 @@
+"""L2: the model's forward/backward as a jax program over one data chunk.
+
+The model is the 3-layer MLP classifier whose dense layers run through the
+L1 Pallas kernels (`kernels.dense`). The exported program computes the
+*weighted partial gradient* of one padded chunk:
+
+    grad_program(W1, b1, W2, b2, W3, b3, x, y_onehot, wgt)
+        -> (loss_sum, gW1, gb1, gW2, gb2, gW3, gb3)
+
+Per-sample weights make chunk gradients additive: with w_i = 1/batch for
+real rows and 0 for padding, summing the per-chunk outputs over all chunks
+yields exactly the full-batch mean gradient the paper's master decodes.
+
+Python runs only at build time: `aot.py` lowers `grad_program` once to HLO
+text; the rust runtime executes it via PJRT on every worker task.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as K
+
+
+def forward(params, x):
+    """MLP forward through the Pallas dense kernels -> logits."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = K.dense(x, w1, b1, True)
+    h2 = K.dense(h1, w2, b2, True)
+    return K.dense(h2, w3, b3, False)
+
+
+def weighted_ce(params, x, y_onehot, wgt):
+    """Weighted-sum softmax cross entropy (see module docstring)."""
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.sum(y_onehot * logp, axis=-1)
+    return jnp.sum(wgt * ce)
+
+
+def grad_program(w1, b1, w2, b2, w3, b3, x, y_onehot, wgt):
+    """The AOT-exported (loss, grads...) program."""
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(weighted_ce)(params, x, y_onehot, wgt)
+    return (loss,) + tuple(grads)
+
+
+def make_shapes(input_dim=64, classes=10, hidden1=128, hidden2=64, chunk=64):
+    """ShapeDtypeStructs for lowering, in program argument order."""
+    f32 = jnp.float32
+    return dict(
+        params=[
+            jax.ShapeDtypeStruct((input_dim, hidden1), f32),
+            jax.ShapeDtypeStruct((hidden1,), f32),
+            jax.ShapeDtypeStruct((hidden1, hidden2), f32),
+            jax.ShapeDtypeStruct((hidden2,), f32),
+            jax.ShapeDtypeStruct((hidden2, classes), f32),
+            jax.ShapeDtypeStruct((classes,), f32),
+        ],
+        x=jax.ShapeDtypeStruct((chunk, input_dim), f32),
+        y=jax.ShapeDtypeStruct((chunk, classes), f32),
+        wgt=jax.ShapeDtypeStruct((chunk,), f32),
+    )

@@ -1,0 +1,75 @@
+"""AOT path: the lowered HLO text must be parseable, numerically faithful
+(executed back through xla_client), and stable in its I/O signature."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_hlo_text_structure():
+    lowered = aot.lower_grad_program(16, 5, 12, 8, 8)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[16,12]" in text  # W1 shape appears
+    assert "f32[8,16]" in text   # x chunk shape appears
+    # tuple of 7 results (loss + 6 grads)
+    assert "tuple(" in text.replace(") )", "))")
+
+
+def test_hlo_text_parses_back():
+    """The emitted text must parse through XLA's HLO parser — the exact
+    entry point the rust loader uses (HloModuleProto::from_text_file).
+    Full load-compile-execute numerics are validated on the rust side in
+    rust/tests/end_to_end.rs (this jaxlib's python `Client.compile` no
+    longer accepts XlaComputation objects)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = aot.lower_grad_program(16, 5, 12, 8, 8)
+    text = aot.to_hlo_text(lowered)
+    hlo_module = xc._xla.hlo_module_from_text(text)
+    back = hlo_module.to_string()
+    assert "HloModule" in back
+    # parameter/result signature survives the round trip
+    assert "f32[16,12]" in back and "f32[8,16]" in back
+    # proto ids were re-assigned into 32-bit range (the xla_extension
+    # 0.5.1 constraint that forces the text interchange)
+    proto = hlo_module.as_serialized_hlo_module_proto()
+    assert len(proto) > 1000
+
+
+def test_lowered_jit_matches_oracle():
+    """Numerics of the exact lowered computation (same jit) vs oracle."""
+    dims = dict(input_dim=16, classes=5, hidden1=12, hidden2=8, chunk=8)
+    rng = np.random.default_rng(5)
+    f = lambda *s: rng.standard_normal(s).astype(np.float32) * 0.3
+    args = [
+        f(16, 12), f(12), f(12, 8), f(8), f(8, 5), f(5),
+        f(8, 16),
+        np.eye(5, dtype=np.float32)[rng.integers(0, 5, 8)],
+        np.full((8,), 1 / 8, np.float32),
+    ]
+    got = jax.jit(model.grad_program)(*[jnp.asarray(a) for a in args])
+    want = ref.grad_program_ref(*[jnp.asarray(a) for a in args])
+    assert len(got) == 7
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=2e-4, atol=2e-4)
+
+
+def test_cli_writes_artifacts(tmp_path):
+    import subprocess, sys, os
+    out = tmp_path / "model.hlo.txt"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--input", "16", "--classes", "5", "--hidden1", "12",
+         "--hidden2", "8", "--chunk", "8"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert out.exists() and out.stat().st_size > 1000
+    meta = (tmp_path / "model_meta.txt").read_text()
+    assert "input=16" in meta and "chunk=8" in meta

@@ -1,0 +1,84 @@
+"""L2 correctness: the exported grad program vs the pure-jnp oracle, plus
+the chunk-additivity property the coding schemes rely on."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_params(rng, input_dim=16, classes=5, h1=12, h2=8):
+    f = lambda *s: jnp.asarray(rng.standard_normal(s).astype(np.float32) * 0.3)
+    return (f(input_dim, h1), f(h1), f(h1, h2), f(h2), f(h2, classes), f(classes))
+
+
+def make_batch(rng, n, input_dim=16, classes=5, weight=None):
+    x = jnp.asarray(rng.standard_normal((n, input_dim)).astype(np.float32))
+    labels = rng.integers(0, classes, size=n)
+    y = jnp.asarray(np.eye(classes, dtype=np.float32)[labels])
+    w = jnp.full((n,), 1.0 / n if weight is None else weight, dtype=jnp.float32)
+    return x, y, w
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 24))
+def test_grad_program_matches_oracle(seed, n):
+    rng = np.random.default_rng(seed)
+    params = make_params(rng)
+    x, y, w = make_batch(rng, n)
+    got = model.grad_program(*params, x, y, w)
+    want = ref.grad_program_ref(*params, x, y, w)
+    assert len(got) == len(want) == 7
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=2e-4, atol=2e-4)
+
+
+def test_padding_rows_contribute_nothing():
+    rng = np.random.default_rng(7)
+    params = make_params(rng)
+    x, y, w = make_batch(rng, 8)
+    # pad with garbage rows at weight 0
+    xp = jnp.concatenate([x, jnp.full((4, x.shape[1]), 1e3, jnp.float32)])
+    yp = jnp.concatenate([y, jnp.zeros((4, y.shape[1]), jnp.float32)])
+    wp = jnp.concatenate([w, jnp.zeros((4,), jnp.float32)])
+    a = model.grad_program(*params, x, y, w)
+    b = model.grad_program(*params, xp, yp, wp)
+    for g, e in zip(a, b):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=1e-4, atol=1e-5)
+
+
+def test_chunk_gradients_are_additive():
+    """sum of per-chunk weighted grads == full-batch grad (the property
+    that makes GC's linear decoding correct)."""
+    rng = np.random.default_rng(11)
+    params = make_params(rng)
+    n = 24
+    x, y, _ = make_batch(rng, n)
+    w_full = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    full = model.grad_program(*params, x, y, w_full)
+    # three chunks of 8
+    acc = None
+    for c in range(3):
+        sl = slice(8 * c, 8 * (c + 1))
+        out = model.grad_program(*params, x[sl], y[sl], w_full[sl])
+        if acc is None:
+            acc = list(out)
+        else:
+            acc = [a + o for a, o in zip(acc, out)]
+    for a, e in zip(acc, full):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e), rtol=1e-4, atol=1e-5)
+
+
+def test_loss_decreases_under_sgd():
+    rng = np.random.default_rng(3)
+    params = list(make_params(rng))
+    x, y, w = make_batch(rng, 32)
+    losses = []
+    for _ in range(40):
+        out = model.grad_program(*params, x, y, w)
+        losses.append(float(out[0]))
+        params = [p - 0.2 * g for p, g in zip(params, out[1:])]
+    assert losses[-1] < losses[0] * 0.7, losses[::10]

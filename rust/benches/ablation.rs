@@ -1,0 +1,140 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. **Wait-out policy** — Remark-2.3 conformance repair vs lazy
+//!    deadline-decode waiting vs wait-all.
+//! 2. **Decode-coefficient memoization** — the L3 hot-path cache.
+//! 3. **GC vs GC-Rep base** (Appendix G) — same load, different straggler
+//!    sets tolerated.
+//! 4. **Within-burst severity decay** — the latency-model assumption the
+//!    Table-1 calibration rests on.
+
+use sgc::bench_harness::Bench;
+use sgc::cluster::{LatencyParams, SimCluster};
+use sgc::coding::{GcCode, SchemeConfig};
+use sgc::coordinator::{Master, RunConfig, WaitPolicy};
+use sgc::experiments::{fast_mode, save_json, PaperSetup};
+use sgc::straggler::GilbertElliot;
+use sgc::util::json::Json;
+use sgc::util::rng::Pcg32;
+
+fn main() {
+    let setup = PaperSetup::table1();
+    let jobs = if fast_mode() { 40 } else { 240 };
+    let mut json = Json::obj();
+
+    // --- 1. wait policy --------------------------------------------------
+    println!("== ablation 1: wait-out policy (m-sgc(1,2,λ), n={}) ==", setup.n);
+    let lam = (setup.n / 10).max(2);
+    let scheme = SchemeConfig::msgc(setup.n, 1, 2, lam);
+    let mut pol_json = Json::obj();
+    for (name, policy) in [
+        ("conformance-repair", WaitPolicy::ConformanceRepair),
+        ("deadline-decode", WaitPolicy::DeadlineDecode),
+        ("wait-all", WaitPolicy::WaitAll),
+    ] {
+        let mut master = Master::new(
+            scheme.clone(),
+            RunConfig { jobs, wait_policy: policy, ..Default::default() },
+        );
+        let mut cluster = setup.cluster(71);
+        let rep = master.run(&mut cluster);
+        println!(
+            "  {name:<20} runtime {:>8.1}s  waitouts {:>4}  violations {}",
+            rep.total_runtime_s,
+            rep.waitout_rounds(),
+            rep.deadline_violations
+        );
+        let mut o = Json::obj();
+        o.set("runtime_s", rep.total_runtime_s)
+            .set("waitouts", rep.waitout_rounds())
+            .set("violations", rep.deadline_violations);
+        pol_json.set(name, o);
+    }
+    json.set("wait_policy", pol_json);
+
+    // --- 2. decode-coefficient cache --------------------------------------
+    println!("\n== ablation 2: decode-coefficient memoization (n=256, s=15) ==");
+    let mut b = Bench::new("ablation-decode-cache");
+    let n = 256;
+    let s = 15;
+    let mut rng = Pcg32::seeded(5);
+    // GE-like repeating straggler sets: high cache-hit regime
+    let subsets: Vec<Vec<usize>> = (0..8).map(|_| rng.sample_indices(n, n - s)).collect();
+    {
+        let mut code = GcCode::new(n, s, 7);
+        let mut i = 0;
+        b.run("with-cache(8 repeating patterns)", || {
+            let _ = code.decode_coeffs(&subsets[i % 8]).unwrap();
+            i += 1;
+        });
+    }
+    {
+        let mut i = 0;
+        b.run("no-cache(fresh code each call)", || {
+            let mut code = GcCode::new(n, s, 7);
+            let _ = code.decode_coeffs(&subsets[i % 8]).unwrap();
+            i += 1;
+        });
+    }
+
+    // --- 3. GC vs GC-Rep --------------------------------------------------
+    println!("\n== ablation 3: GC vs GC-Rep base (same load) ==");
+    let n3 = if setup.n % 16 == 0 { setup.n } else { 64 };
+    let s3 = 15; // (s+1)=16 divides n3
+    let mut rep_json = Json::obj();
+    for (name, cfg) in [
+        ("gc", SchemeConfig::gc(n3, s3)),
+        ("gc-rep", SchemeConfig::gc_rep(n3, s3)),
+    ] {
+        let xs: Vec<f64> = (0..3)
+            .map(|r| {
+                let mut master =
+                    Master::new(cfg.clone(), RunConfig { jobs, ..Default::default() });
+                let mut cluster = setup.cluster(900 + r);
+                master.run(&mut cluster).total_runtime_s
+            })
+            .collect();
+        let m = sgc::util::stats::mean(&xs);
+        println!("  {name:<8} load {:.4}  runtime {m:>8.1}s", cfg.load());
+        let mut o = Json::obj();
+        o.set("load", cfg.load()).set("runtime_s", m);
+        rep_json.set(name, o);
+    }
+    json.set("gc_vs_gc_rep", rep_json);
+
+    // --- 4. severity decay ------------------------------------------------
+    println!("\n== ablation 4: within-burst severity decay ==");
+    let mut decay_json = Json::obj();
+    for decay in [1.0, 0.45, 0.1] {
+        let latency = LatencyParams { straggle_decay: decay, ..Default::default() };
+        let mut runtimes = Vec::new();
+        for (label, cfg) in [
+            ("m-sgc", SchemeConfig::msgc(setup.n, 1, 2, (setup.n / 10).max(2))),
+            ("gc", SchemeConfig::gc(setup.n, (setup.n / 17).max(2))),
+        ] {
+            let mut master = Master::new(cfg, RunConfig { jobs, ..Default::default() });
+            let mut cluster = SimCluster::new(
+                setup.n,
+                latency.clone(),
+                Box::new(GilbertElliot::default_fit(setup.n, 7)),
+                55,
+            );
+            let rep = master.run(&mut cluster);
+            runtimes.push((label, rep.total_runtime_s));
+        }
+        let msgc = runtimes[0].1;
+        let gc = runtimes[1].1;
+        println!(
+            "  decay={decay:<5} m-sgc {msgc:>8.1}s  gc {gc:>8.1}s  ratio {:.2}",
+            msgc / gc
+        );
+        let mut o = Json::obj();
+        o.set("m_sgc_s", msgc).set("gc_s", gc).set("ratio", msgc / gc);
+        decay_json.set(&format!("{decay}"), o);
+    }
+    json.set("severity_decay", decay_json);
+    println!("  (decay=1: burst continuers stay slow → M-SGC's B=1 wait-outs erase its load win)");
+
+    save_json("ablation", &json);
+    b.save();
+}

@@ -1,0 +1,67 @@
+//! Fig. 1: response-time statistics of 256 workers across 100 rounds —
+//! (a) straggler-map density, (b) burst-length histogram, (c) empirical
+//! completion-time CDF.
+
+use sgc::cluster::SimCluster;
+use sgc::experiments::{fast_mode, save_json};
+use sgc::straggler::{GilbertElliot, Pattern};
+use sgc::util::json::Json;
+use sgc::util::stats;
+
+fn main() {
+    let (n, rounds) = if fast_mode() { (64, 40) } else { (256, 100) };
+    let mu = 1.0;
+    let load = 1.0 / n as f64; // one MNIST-batch-sized task per worker
+    let mut cluster = SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 7), 13);
+
+    let mut detected = Pattern::new(n);
+    let mut times = Vec::with_capacity(n * rounds);
+    for _ in 0..rounds {
+        let s = cluster.sample_round(&vec![load; n]);
+        let kappa = s.finish.iter().cloned().fold(f64::INFINITY, f64::min);
+        detected.push_round(s.finish.iter().map(|&f| f > (1.0 + mu) * kappa).collect());
+        times.extend_from_slice(&s.finish);
+    }
+
+    println!("== Fig 1 (n={n}, {rounds} rounds, μ={mu}) ==\n");
+    println!("(a) straggler map: {:.2}% white cells", 100.0 * detected.straggle_fraction());
+    let per_round: Vec<f64> = (1..=rounds).map(|r| detected.count_in_round(r) as f64).collect();
+    println!(
+        "    stragglers/round mean {:.1} (min {:.0}, max {:.0})",
+        stats::mean(&per_round),
+        stats::min(&per_round),
+        stats::max(&per_round)
+    );
+
+    println!("\n(b) burst-length histogram:");
+    let bursts = detected.burst_lengths();
+    let maxlen = bursts.iter().cloned().max().unwrap_or(1);
+    let mut hist = vec![0usize; maxlen + 1];
+    for &b in &bursts {
+        hist[b] += 1;
+    }
+    for (len, &c) in hist.iter().enumerate().skip(1) {
+        if c > 0 {
+            println!("    len {len:>2}: {c:>5}");
+        }
+    }
+    println!("    (paper shape: short isolated bursts dominate)");
+
+    println!("\n(c) completion-time CDF:");
+    let mut sorted = times.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for q in [25.0, 50.0, 75.0, 90.0, 95.0, 99.0] {
+        println!("    p{q:<4}: {:>7.2}s", stats::percentile_sorted(&sorted, q));
+    }
+    let tail = stats::percentile_sorted(&sorted, 99.0) / stats::percentile_sorted(&sorted, 50.0);
+    println!("    p99/p50 = {tail:.2} (long tail ⇒ stragglers)");
+    assert!(tail > 1.5, "CDF must have a straggler tail");
+
+    let mut json = Json::obj();
+    json.set("straggle_fraction", detected.straggle_fraction())
+        .set("stragglers_per_round_mean", stats::mean(&per_round))
+        .set("burst_hist", hist.iter().map(|&c| c as u64).collect::<Vec<_>>())
+        .set("cdf_p50", stats::percentile_sorted(&sorted, 50.0))
+        .set("cdf_p99", stats::percentile_sorted(&sorted, 99.0));
+    save_json("fig1", &json);
+}

@@ -1,0 +1,47 @@
+//! Fig. 11: normalized loads of SR-SGC and M-SGC vs the Theorem-F.1 lower
+//! bound, at n=20, B=3, λ=4 with W varied (W = 3x+1 for SR-SGC validity).
+
+use sgc::coding::bounds;
+use sgc::experiments::{save_json, TablePrinter};
+use sgc::util::json::Json;
+
+fn main() {
+    let (n, b, lambda) = (20usize, 3usize, 4usize);
+    println!("== Fig 11: normalized load vs W (n={n}, B={b}, λ={lambda}) ==\n");
+    let t = TablePrinter::new(
+        &["W", "SR-SGC", "M-SGC", "bound L_B*", "M-SGC gap"],
+        &[4, 10, 10, 12, 11],
+    );
+    let mut rows = Vec::new();
+    let mut prev_gap = f64::INFINITY;
+    for x in 1..=8usize {
+        let w = 3 * x + 1;
+        let sr = bounds::sr_sgc_load(n, b, w, lambda);
+        let m = bounds::m_sgc_load(n, b, w, lambda);
+        let lb = bounds::bursty_lower_bound(n, b, w, lambda);
+        let gap = m / lb;
+        t.row(&[
+            w.to_string(),
+            format!("{sr:.4}"),
+            format!("{m:.4}"),
+            format!("{lb:.4}"),
+            format!("{:.2}%", 100.0 * (gap - 1.0)),
+        ]);
+        assert!(m < sr, "M-SGC below SR-SGC at W={w}");
+        assert!(m >= lb - 1e-12, "no bound violation at W={w}");
+        assert!(gap <= prev_gap + 1e-12, "gap must shrink with W (O(1/W))");
+        prev_gap = gap;
+        let mut o = Json::obj();
+        o.set("w", w).set("sr_sgc", sr).set("m_sgc", m).set("bound", lb);
+        rows.push(o);
+    }
+    // optimality spot checks (Remark F.1)
+    for lam in [n - 1, n] {
+        let gap = bounds::m_sgc_gap(n, b, 7, lam);
+        println!("\nλ={lam}: M-SGC/bound = {gap:.6} (Remark F.1: optimal)");
+        assert!((gap - 1.0).abs() < 1e-9);
+    }
+    let mut json = Json::obj();
+    json.set("rows", Json::Arr(rows));
+    save_json("fig11", &json);
+}

@@ -1,0 +1,44 @@
+//! Fig. 16: average worker run time scales linearly with the per-worker
+//! computational load — the observation parameter selection builds on.
+
+use sgc::cluster::SimCluster;
+use sgc::experiments::{fast_mode, save_json};
+use sgc::straggler::GilbertElliot;
+use sgc::util::json::Json;
+use sgc::util::stats;
+
+fn main() {
+    let (n, rounds) = if fast_mode() { (64, 20) } else { (256, 100) };
+    println!("== Fig 16: worker runtime vs load (n={n}, {rounds} rounds/point) ==\n");
+    let mut cluster = SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 7), 3);
+    let loads: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    println!("{:>6}  {:>12}", "load", "avg time (s)");
+    for &load in &loads {
+        let mut acc = Vec::new();
+        for _ in 0..rounds {
+            let s = cluster.sample_round(&vec![load; n]);
+            // average of *non-straggler* completions (the paper's workers'
+            // run time, not the straggler tail)
+            let normal: Vec<f64> = s
+                .finish
+                .iter()
+                .zip(&s.state)
+                .filter(|(_, &st)| !st)
+                .map(|(&f, _)| f)
+                .collect();
+            acc.push(stats::mean(&normal));
+        }
+        let avg = stats::mean(&acc);
+        println!("{load:>6.2}  {avg:>12.3}");
+        xs.push(load);
+        ys.push(avg);
+    }
+    let (a, slope, r2) = stats::linear_fit(&xs, &ys);
+    println!("\nlinear fit: t = {a:.3} + {slope:.3}·L, R² = {r2:.5}");
+    assert!(r2 > 0.99, "Fig 16 linearity must hold (R²={r2})");
+    let mut json = Json::obj();
+    json.set("loads", xs).set("avg_time_s", ys).set("intercept", a).set("slope", slope).set("r2", r2);
+    save_json("fig16", &json);
+}

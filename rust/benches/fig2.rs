@@ -1,0 +1,99 @@
+//! Fig. 2: (a) completed jobs vs clock time, (b) training loss vs clock
+//! time, for all four schemes (averaged over repetitions).
+//!
+//! (a) uses the metadata simulator at the paper's scale; (b) attaches the
+//! real-compute trainer when artifacts are available.
+
+use sgc::experiments::{fast_mode, save_json, PaperSetup};
+use sgc::util::json::Json;
+
+fn main() {
+    let setup = PaperSetup::table1();
+    println!("== Fig 2(a): completed jobs vs time (n={}, J={}) ==\n", setup.n, setup.jobs);
+    let mut json = Json::obj();
+    let checkpoints = [0.25, 0.5, 0.75, 1.0];
+    println!(
+        "{:<12} {}",
+        "scheme",
+        checkpoints.map(|c| format!("t@{:3.0}% jobs", 100.0 * c)).join("  ")
+    );
+    let mut final_times = Vec::new();
+    for (name, scheme) in setup.table1_schemes() {
+        // average the completion curve over reps at fixed job counts
+        let mut at = vec![0.0f64; checkpoints.len()];
+        for rep in 0..setup.reps {
+            let report = setup.run_once(&scheme, 2000 + rep as u64, false);
+            let curve = report.completion_curve();
+            for (k, &frac) in checkpoints.iter().enumerate() {
+                let target = ((setup.jobs as f64) * frac).ceil() as usize;
+                let t = curve
+                    .iter()
+                    .find(|&&(_, done)| done >= target)
+                    .map(|&(t, _)| t)
+                    .unwrap_or(report.total_runtime_s);
+                at[k] += t / setup.reps as f64;
+            }
+        }
+        println!(
+            "{:<12} {}",
+            name,
+            at.iter().map(|t| format!("{t:>11.1}s")).collect::<Vec<_>>().join("  ")
+        );
+        let mut o = Json::obj();
+        o.set("checkpoints_t_s", at.clone());
+        json.set(name, o);
+        final_times.push((name, *at.last().unwrap()));
+    }
+    let get = |n: &str| final_times.iter().find(|(k, _)| *k == n).unwrap().1;
+    assert!(get("M-SGC") < get("No Coding"), "M-SGC curve must dominate");
+
+    // Fig 2(b): loss vs time through the real-compute trainer.
+    let artifacts = sgc::runtime::artifacts_dir();
+    if artifacts.join("model.hlo.txt").exists() {
+        println!("\n== Fig 2(b): training loss vs time (real PJRT compute) ==\n");
+        use sgc::cluster::SimCluster;
+        use sgc::straggler::GilbertElliot;
+        use sgc::train::{Dataset, DatasetConfig, MultiModelTrainer, TrainConfig};
+        use std::sync::Arc;
+        let n = 16;
+        let iters = if fast_mode() { 8 } else { 25 };
+        let pool = Arc::new(sgc::runtime::ComputePool::new(artifacts, 4).expect("pool"));
+        let dataset = Dataset::generate(DatasetConfig::default());
+        let mut loss_json = Json::obj();
+        for spec in ["m-sgc:1,2,4", "sr-sgc:2,3,4", "gc:2", "uncoded"] {
+            let scheme = sgc::coding::SchemeConfig::parse(n, spec).unwrap();
+            let cfg = TrainConfig {
+                models: 4,
+                iterations: iters,
+                batch: 256,
+                seed: 7,
+                ..Default::default()
+            };
+            let mut tr =
+                MultiModelTrainer::new(scheme, cfg, Arc::clone(&pool), dataset.clone()).unwrap();
+            let mut cluster =
+                SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 7), 31);
+            let rep = tr.run(&mut cluster).expect("train");
+            let c0 = &rep.losses[0];
+            println!(
+                "{spec:<14} model-0 loss {:.3} → {:.3} by sim t={:.0}s",
+                c0.first().map(|p| p.loss).unwrap_or(f64::NAN),
+                c0.last().map(|p| p.loss).unwrap_or(f64::NAN),
+                rep.sim_runtime_s
+            );
+            let series: Vec<Json> = c0
+                .iter()
+                .map(|p| {
+                    let mut o = Json::obj();
+                    o.set("t", p.sim_time_s).set("loss", p.loss);
+                    o
+                })
+                .collect();
+            loss_json.set(spec, Json::Arr(series));
+        }
+        json.set("loss_vs_time_model0", loss_json);
+    } else {
+        println!("\n(fig 2(b) skipped: run `make artifacts` for the real-compute loss curves)");
+    }
+    save_json("fig2", &json);
+}

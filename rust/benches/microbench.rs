@@ -1,0 +1,116 @@
+//! Hot-path microbenchmarks (§Perf): GC decode solve (cold + cached),
+//! M-SGC assignment, conformance checking, one full simulated round, and
+//! the end-to-end Table-1-scale run.
+
+use sgc::bench_harness::Bench;
+use sgc::cluster::SimCluster;
+use sgc::coding::{GcCode, MSgcParams, MSgcScheme, Scheme, SchemeConfig};
+use sgc::coordinator::{Master, RunConfig};
+use sgc::straggler::{GilbertElliot, ToleranceChecker};
+use sgc::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("microbench");
+    b.header();
+    let n = 256;
+
+    // --- GC decode solve, cold vs cached --------------------------------
+    let s = 15;
+    let mut rng = Pcg32::seeded(42);
+    let subsets: Vec<Vec<usize>> =
+        (0..64).map(|_| rng.sample_indices(n, n - s)).collect();
+    {
+        let mut i = 0usize;
+        let mut code = GcCode::new(n, s, 7);
+        b.run("gc_decode_cold(n=256,s=15)", || {
+            // fresh code each batch of 64 to avoid the cache
+            if i % subsets.len() == 0 {
+                code = GcCode::new(n, s, 7 + (i / subsets.len()) as u64);
+            }
+            let _ = code.decode_coeffs(&subsets[i % subsets.len()]).unwrap();
+            i += 1;
+        });
+    }
+    {
+        let mut code = GcCode::new(n, s, 7);
+        for sub in &subsets {
+            code.decode_coeffs(sub).unwrap();
+        }
+        let mut i = 0usize;
+        b.run("gc_decode_cached(n=256,s=15)", || {
+            let _ = code.decode_coeffs(&subsets[i % subsets.len()]).unwrap();
+            i += 1;
+        });
+    }
+    // larger code (M-SGC's λ=27)
+    {
+        let s2 = 27;
+        let mut code = GcCode::new(n, s2, 9);
+        let sub = rng.sample_indices(n, n - s2);
+        b.run("gc_decode_cold(n=256,s=27)", || {
+            code = GcCode::new(n, s2, 9);
+            let _ = code.decode_coeffs(&sub).unwrap();
+        });
+    }
+
+    // --- GcCode construction --------------------------------------------
+    b.run("gc_code_construct(n=256,s=15)", || {
+        let _ = GcCode::new(n, s, 11);
+    });
+
+    // --- M-SGC assignment throughput -------------------------------------
+    {
+        let p = MSgcParams { n, b: 1, w: 2, lambda: 27 };
+        let mut scheme = MSgcScheme::new(p, 100_000);
+        let mut r = 0usize;
+        let responded = vec![true; n];
+        b.run("msgc_assign_commit_round(n=256)", || {
+            r += 1;
+            scheme.assign_round(r);
+            scheme.commit_round(r, &responded);
+        });
+    }
+
+    // --- conformance checker ---------------------------------------------
+    {
+        let spec = sgc::coding::ToleranceSpec::BurstyOrArbitrary { b: 1, w: 2, lambda: 27 };
+        let mut checker = ToleranceChecker::new(n, spec);
+        let mut ge = GilbertElliot::default_fit(n, 5);
+        use sgc::straggler::StragglerProcess;
+        let rows: Vec<Vec<bool>> = (0..256).map(|_| ge.next_round()).collect();
+        let mut i = 0usize;
+        b.run("conformance_check+commit(n=256)", || {
+            let row = &rows[i % rows.len()];
+            let _ = checker.acceptable(row);
+            // commit an all-clear so history stays conforming
+            checker.commit(&vec![false; n]);
+            i += 1;
+        });
+    }
+
+    // --- one simulated cluster round --------------------------------------
+    {
+        let mut cluster =
+            SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 5), 6);
+        let loads = vec![0.0078; n];
+        b.run("sim_cluster_round(n=256)", || {
+            let _ = cluster.sample_round(&loads);
+        });
+    }
+
+    // --- end-to-end Table-1 run -------------------------------------------
+    for (label, spec) in
+        [("e2e_msgc_480jobs", "m-sgc:1,2,27"), ("e2e_gc_480jobs", "gc:15")]
+    {
+        let scheme = SchemeConfig::parse(n, spec).unwrap();
+        b.run_n(label, 3, || {
+            let mut master =
+                Master::new(scheme.clone(), RunConfig { jobs: 480, ..Default::default() });
+            let mut cluster =
+                SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 3), 4);
+            let _ = master.run(&mut cluster);
+        });
+    }
+
+    b.save();
+}

@@ -1,0 +1,59 @@
+//! Table 1: total run time achieved by different coding schemes
+//! (n = 256, J = 480, 10 repetitions, naturally occurring GE stragglers).
+//!
+//! Expected shape (paper): M-SGC ≈ 16% faster than GC at ~8x lower load;
+//! SR-SGC slightly faster than GC; uncoded slowest.
+
+use sgc::experiments::{save_json, PaperSetup, TablePrinter};
+use sgc::util::json::Json;
+
+fn main() {
+    let setup = PaperSetup::table1();
+    println!(
+        "== Table 1: total runtime (n={}, J={}, {} reps) ==\n",
+        setup.n, setup.jobs, setup.reps
+    );
+    let t = TablePrinter::new(
+        &["Scheme", "Parameters", "Load", "Run Time (s)"],
+        &[10, 22, 10, 22],
+    );
+    let mut json = Json::obj();
+    let mut results = Vec::new();
+    for (name, scheme) in setup.table1_schemes() {
+        let stats = setup.runtime_stats(&scheme, false);
+        t.row(&[
+            name.to_string(),
+            scheme.label(),
+            format!("{:.3}", scheme.load()),
+            format!("{:.2} ± {:.2}", stats.mean, stats.std),
+        ]);
+        let mut o = Json::obj();
+        o.set("scheme", name)
+            .set("params", scheme.label())
+            .set("load", scheme.load())
+            .set("runtime_mean_s", stats.mean)
+            .set("runtime_std_s", stats.std);
+        json.set(name, o);
+        results.push((name, stats.mean));
+    }
+    save_json("table1", &json);
+
+    // Shape assertions (who wins, roughly by how much).
+    let get = |n: &str| results.iter().find(|(k, _)| *k == n).unwrap().1;
+    let (msgc, srsgc, gc, unc) = (get("M-SGC"), get("SR-SGC"), get("GC"), get("No Coding"));
+    println!("\nshape checks:");
+    println!(
+        "  M-SGC vs GC:     {:+.1}% (paper: -16%)",
+        100.0 * (msgc - gc) / gc
+    );
+    println!(
+        "  SR-SGC vs GC:    {:+.1}% (paper: -6.6%)",
+        100.0 * (srsgc - gc) / gc
+    );
+    println!(
+        "  GC vs No Coding: {:+.1}% (paper: -18.6%)",
+        100.0 * (gc - unc) / unc
+    );
+    assert!(msgc < gc, "M-SGC must beat GC");
+    assert!(gc < unc, "GC must beat No Coding");
+}

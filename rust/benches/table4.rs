@@ -1,0 +1,57 @@
+//! Table 4: decoding time per scheme — the real GC linear-algebra solve
+//! measured at each decoded job, plus the "longest decoding < fastest
+//! round" check that lets Appendix K hide decoding in master idle time.
+
+use sgc::experiments::{save_json, PaperSetup, TablePrinter};
+use sgc::util::json::Json;
+
+fn main() {
+    let mut setup = PaperSetup::table1();
+    setup.reps = setup.reps.min(3); // decode stats converge quickly
+    println!(
+        "== Table 4: decoding time (n={}, J={}, measured solves) ==\n",
+        setup.n, setup.jobs
+    );
+    let t = TablePrinter::new(
+        &["Scheme", "Params", "Decode (ms)", "Longest (ms)", "Fastest round (ms)"],
+        &[10, 22, 18, 14, 20],
+    );
+    let mut json = Json::obj();
+    for (name, scheme) in setup.table1_schemes() {
+        if name == "No Coding" {
+            continue; // paper's Table 4 covers the coded schemes
+        }
+        let mut means = Vec::new();
+        let mut longest: f64 = 0.0;
+        let mut fastest_round = f64::INFINITY;
+        for rep in 0..setup.reps {
+            let report = setup.run_once(&scheme, 3000 + rep as u64, true);
+            let (mean, _std, max) = report.decode_stats();
+            means.push(mean);
+            longest = longest.max(max);
+            fastest_round = fastest_round.min(report.fastest_round_s());
+        }
+        let mean_ms = 1e3 * sgc::util::stats::mean(&means);
+        let std_ms = 1e3 * sgc::util::stats::std_dev(&means);
+        t.row(&[
+            name.to_string(),
+            scheme.label(),
+            format!("{mean_ms:.1} ± {std_ms:.1}"),
+            format!("{:.1}", longest * 1e3),
+            format!("{:.1}", fastest_round * 1e3),
+        ]);
+        assert!(
+            longest < fastest_round,
+            "{name}: decoding ({longest}s) must fit in master idle time \
+             (fastest round {fastest_round}s) — Appendix K"
+        );
+        let mut o = Json::obj();
+        o.set("decode_mean_ms", mean_ms)
+            .set("decode_std_ms", std_ms)
+            .set("longest_ms", longest * 1e3)
+            .set("fastest_round_ms", fastest_round * 1e3);
+        json.set(name, o);
+    }
+    save_json("table4", &json);
+    println!("\n(paper shape: decode ≤ hundreds of ms, always below the fastest round)");
+}

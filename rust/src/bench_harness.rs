@@ -1,0 +1,195 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that drive this
+//! module. It provides warmup, adaptive iteration counts, robust summary
+//! statistics, and a stable text + JSON report format so EXPERIMENTS.md can
+//! quote the numbers directly.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::timer::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_s", self.mean.as_secs_f64())
+            .set("std_s", self.std.as_secs_f64())
+            .set("median_s", self.median.as_secs_f64())
+            .set("p95_s", self.p95.as_secs_f64())
+            .set("min_s", self.min.as_secs_f64())
+            .set("max_s", self.max.as_secs_f64());
+        o
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10}/iter (median {:>10}, p95 {:>10}, n={})",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.median),
+            fmt_duration(self.p95),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark session: collects results, prints a table, saves JSON.
+pub struct Bench {
+    /// Label of the whole bench binary (e.g. "table1").
+    pub label: String,
+    /// Target measurement time per case.
+    pub measure_time: Duration,
+    /// Warmup time per case.
+    pub warmup_time: Duration,
+    /// Hard cap on iterations (expensive end-to-end cases set this to 1-10).
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(label: &str) -> Self {
+        // Honour SGC_BENCH_FAST=1 for CI-ish quick runs.
+        let fast = std::env::var("SGC_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            label: label.to_string(),
+            measure_time: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            warmup_time: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            max_iters: 100_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// One-shot style for expensive cases: run `f` exactly `n` times.
+    pub fn run_n<F: FnMut()>(&mut self, name: &str, n: u64, mut f: F) -> &BenchResult {
+        assert!(n > 0);
+        let mut samples = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.push_samples(name, &samples)
+    }
+
+    /// Adaptive timing: warm up, then iterate until `measure_time` elapsed.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup_time && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Measure in batches to amortise clock reads for fast bodies.
+        let per_iter = (w0.elapsed().as_secs_f64() / warm_iters.max(1) as f64).max(1e-9);
+        let batch = ((1e-4 / per_iter) as u64).clamp(1, 10_000);
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        let mut total_iters = 0u64;
+        while m0.elapsed() < self.measure_time && total_iters < self.max_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+        }
+        self.push_samples_with_iters(name, &samples, total_iters)
+    }
+
+    fn push_samples(&mut self, name: &str, samples: &[f64]) -> &BenchResult {
+        let n = samples.len() as u64;
+        self.push_samples_with_iters(name, samples, n)
+    }
+
+    fn push_samples_with_iters(
+        &mut self,
+        name: &str,
+        samples: &[f64],
+        iters: u64,
+    ) -> &BenchResult {
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(stats::mean(samples)),
+            std: Duration::from_secs_f64(stats::std_dev(samples)),
+            median: Duration::from_secs_f64(stats::percentile_sorted(&sorted, 50.0)),
+            p95: Duration::from_secs_f64(stats::percentile_sorted(&sorted, 95.0)),
+            min: Duration::from_secs_f64(sorted[0]),
+            max: Duration::from_secs_f64(*sorted.last().unwrap()),
+        };
+        println!("  {r}");
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print header for the bench binary.
+    pub fn header(&self) {
+        println!("== bench: {} ==", self.label);
+    }
+
+    /// Persist all results to `target/experiments/<label>.bench.json`.
+    pub fn save(&self) {
+        let mut o = Json::obj();
+        o.set("label", self.label.as_str());
+        o.set("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect()));
+        let path = format!("target/experiments/{}.bench.json", self.label);
+        if let Err(e) = o.save(&path) {
+            eprintln!("warning: could not save {path}: {e}");
+        } else {
+            println!("  (saved {path})");
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_n_collects_stats() {
+        std::env::set_var("SGC_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        let r = b.run_n("sleep-1ms", 5, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(r.mean >= Duration::from_micros(900));
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn adaptive_run_terminates() {
+        std::env::set_var("SGC_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest2");
+        let mut x = 0u64;
+        let r = b.run("increment", || {
+            x = x.wrapping_add(1);
+        });
+        assert!(r.iters > 100);
+    }
+}

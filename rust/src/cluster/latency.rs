@@ -1,0 +1,137 @@
+//! Worker completion-time model for the serverless-cluster simulator.
+//!
+//! Substitutes for the paper's AWS Lambda fleet (Appendix H). A worker's
+//! response time in a round decomposes as
+//!
+//! ```text
+//! t = overhead + α · load · (1 + jitter) + straggle_extra + storage
+//! ```
+//!
+//! * `overhead` — HTTP invocation + runtime init, lognormal (long tail,
+//!   Fig. 1(c)).
+//! * `α · load` — gradient compute, linear in normalized load (the Fig. 16
+//!   observation that parameter selection exploits).
+//! * `straggle_extra` — a multiplicative slowdown drawn from a Pareto
+//!   tail while the worker's Gilbert-Elliot state is "straggler".
+//! * `storage` — optional shared-storage (EFS) write delay, Appendix L.
+//!
+//! Defaults are calibrated so that the Table-1 workload (n = 256,
+//! J = 480) lands in the paper's runtime regime (~1-3 s rounds).
+
+use crate::util::rng::Pcg32;
+
+/// Parameters of the per-worker latency model.
+#[derive(Clone, Debug)]
+pub struct LatencyParams {
+    /// Median invocation/runtime overhead in seconds.
+    pub overhead_median_s: f64,
+    /// Lognormal sigma of the overhead.
+    pub overhead_sigma: f64,
+    /// Compute seconds per unit normalized load (slope of Fig. 16).
+    pub alpha_s_per_load: f64,
+    /// Relative jitter std-dev on the compute term.
+    pub compute_jitter: f64,
+    /// Pareto shape of the straggler slowdown multiplier (smaller =
+    /// heavier tail).
+    pub straggle_shape: f64,
+    /// Minimum straggler slowdown multiplier (> 1 + μ so the μ-rule
+    /// detects model-state stragglers reliably).
+    pub straggle_scale: f64,
+    /// Within-burst severity decay: a worker in its `age`-th consecutive
+    /// slow round has its slowdown shrunk as `1 + (u-1)·decay^age`.
+    /// Lambda contention transients fade — this is what makes the paper's
+    /// observed bursts "short and isolated" (Fig. 1(b)) and wait-outs for
+    /// burst continuers cheap (Table 1's No-Coding column is only ~23%
+    /// above GC, so even full straggler waits are mild).
+    pub straggle_decay: f64,
+}
+
+impl Default for LatencyParams {
+    fn default() -> Self {
+        LatencyParams {
+            overhead_median_s: 0.85,
+            overhead_sigma: 0.11,
+            alpha_s_per_load: 9.5,
+            compute_jitter: 0.06,
+            // Calibrated against Table 1's own arithmetic: "No Coding"
+            // (which waits for *every* straggler each round) is only ~23%
+            // slower than GC, so straggler completions sit at ~2.5-3.5×
+            // the fastest worker — a mild Pareto tail, not a heavy one.
+            straggle_shape: 6.5,
+            straggle_scale: 2.1,
+            straggle_decay: 0.68,
+        }
+    }
+}
+
+impl LatencyParams {
+    /// Expected *non-straggler* completion time at a given load (used by
+    /// the Appendix-J load-adjustment rule).
+    pub fn mean_time(&self, load: f64) -> f64 {
+        let overhead =
+            self.overhead_median_s * (0.5 * self.overhead_sigma * self.overhead_sigma).exp();
+        overhead + self.alpha_s_per_load * load
+    }
+
+    /// Sample a completion time. `burst_age` is the number of consecutive
+    /// straggling rounds *before* this one (0 = fresh straggler).
+    pub fn sample(&self, load: f64, straggling: bool, burst_age: usize, rng: &mut Pcg32) -> f64 {
+        let overhead = rng.lognormal(self.overhead_median_s.ln(), self.overhead_sigma);
+        let compute = self.alpha_s_per_load * load * (1.0 + self.compute_jitter * rng.normal());
+        let base = overhead + compute.max(0.0);
+        if straggling {
+            let raw = rng.pareto(self.straggle_scale, self.straggle_shape);
+            let uplift = 1.0 + (raw - 1.0) * self.straggle_decay.powi(burst_age as i32);
+            base * uplift
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_scales_linearly_with_load() {
+        let p = LatencyParams::default();
+        let mut rng = Pcg32::seeded(1);
+        let avg = |load: f64, rng: &mut Pcg32| {
+            (0..4000).map(|_| p.sample(load, false, 0, rng)).sum::<f64>() / 4000.0
+        };
+        let t0 = avg(0.0, &mut rng);
+        let t1 = avg(0.5, &mut rng);
+        let t2 = avg(1.0, &mut rng);
+        // linear: t1 ≈ (t0 + t2) / 2
+        let mid = (t0 + t2) / 2.0;
+        assert!((t1 - mid).abs() / mid < 0.05, "t1={t1} mid={mid}");
+        // slope ≈ alpha
+        assert!(((t2 - t0) - p.alpha_s_per_load).abs() < 0.5);
+    }
+
+    #[test]
+    fn stragglers_are_separably_slower() {
+        let p = LatencyParams::default();
+        let mut rng = Pcg32::seeded(2);
+        let load = 0.06;
+        let normal: Vec<f64> = (0..2000).map(|_| p.sample(load, false, 0, &mut rng)).collect();
+        let strag: Vec<f64> = (0..2000).map(|_| p.sample(load, true, 0, &mut rng)).collect();
+        // μ = 1 rule: stragglers must mostly exceed 2× the fastest worker
+        let fastest = normal.iter().cloned().fold(f64::INFINITY, f64::min);
+        let detected =
+            strag.iter().filter(|&&t| t > 2.0 * fastest).count() as f64 / strag.len() as f64;
+        assert!(detected > 0.95, "detected {detected}");
+        // medians are far apart
+        let med = |xs: &[f64]| crate::util::stats::percentile(xs, 50.0);
+        assert!(med(&strag) > 2.0 * med(&normal));
+    }
+
+    #[test]
+    fn mean_time_tracks_samples() {
+        let p = LatencyParams::default();
+        let mut rng = Pcg32::seeded(3);
+        let emp = (0..20000).map(|_| p.sample(0.25, false, 0, &mut rng)).sum::<f64>() / 20000.0;
+        assert!((emp - p.mean_time(0.25)).abs() / emp < 0.03, "emp {emp} vs {}", p.mean_time(0.25));
+    }
+}

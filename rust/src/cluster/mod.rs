@@ -1,0 +1,32 @@
+//! Serverless-cluster substrate: latency model, shared-storage model and
+//! the discrete-time simulator standing in for the paper's AWS Lambda
+//! fleet (Appendices H and L).
+
+pub mod latency;
+pub mod sim;
+pub mod storage;
+
+pub use latency::LatencyParams;
+pub use sim::{RoundSample, SimCluster};
+pub use storage::StorageParams;
+
+/// Anything the master can run rounds against: the stochastic simulator,
+/// the probe's load-adjusted profile replayer, or (in examples) a
+/// real-compute thread pool.
+pub trait Cluster {
+    fn n(&self) -> usize;
+
+    /// Execute one round at the given per-worker normalized loads and
+    /// report per-worker completion times.
+    fn sample_round(&mut self, loads: &[f64]) -> RoundSample;
+}
+
+impl Cluster for SimCluster {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+        SimCluster::sample_round(self, loads)
+    }
+}

@@ -1,0 +1,177 @@
+//! Discrete-time serverless-cluster simulator.
+//!
+//! Substitutes for the paper's 256-worker AWS Lambda fleet: each round,
+//! every worker gets a completion time from the latency model, with the
+//! straggler process deciding which workers are in a slow state. The
+//! master (coordinator) then applies the μ-rule on these times exactly as
+//! the paper's master does on real response times.
+
+use super::latency::LatencyParams;
+use super::storage::StorageParams;
+use crate::straggler::models::{GilbertElliot, StragglerProcess, TraceProcess};
+use crate::straggler::Pattern;
+use crate::util::rng::Pcg32;
+
+/// Ground-truth outcome of one simulated round.
+#[derive(Clone, Debug)]
+pub struct RoundSample {
+    /// Completion time (seconds from round start) per worker.
+    pub finish: Vec<f64>,
+    /// True straggler state per worker (the master never sees this; it is
+    /// recorded for Fig.-1-style analysis).
+    pub state: Vec<bool>,
+}
+
+/// The simulated cluster.
+pub struct SimCluster {
+    pub n: usize,
+    pub latency: LatencyParams,
+    pub storage: Option<StorageParams>,
+    process: Box<dyn StragglerProcess>,
+    rng: Pcg32,
+    /// Consecutive straggling rounds per worker *before* the current one
+    /// (drives within-burst severity decay).
+    burst_age: Vec<usize>,
+}
+
+impl SimCluster {
+    pub fn new(
+        n: usize,
+        latency: LatencyParams,
+        process: Box<dyn StragglerProcess>,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(process.n(), n);
+        SimCluster {
+            n,
+            latency,
+            storage: None,
+            process,
+            rng: Pcg32::new(seed, 0xc105),
+            burst_age: vec![0; n],
+        }
+    }
+
+    /// Cluster driven by a Gilbert-Elliot straggler process with the
+    /// Fig.-1 fit.
+    pub fn from_gilbert_elliot(n: usize, ge: GilbertElliot, seed: u64) -> Self {
+        Self::new(n, LatencyParams::default(), Box::new(ge), seed)
+    }
+
+    /// Cluster replaying a recorded straggler pattern.
+    pub fn from_trace(n: usize, pattern: Pattern, seed: u64) -> Self {
+        Self::new(n, LatencyParams::default(), Box::new(TraceProcess::new(pattern)), seed)
+    }
+
+    /// Attach a shared-storage model (Appendix L / Fig. 20 setup).
+    pub fn with_storage(mut self, storage: StorageParams) -> Self {
+        self.storage = Some(storage);
+        self
+    }
+
+    /// Simulate one round at the given per-worker loads.
+    pub fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+        assert_eq!(loads.len(), self.n);
+        let state = self.process.next_round();
+        let mut finish: Vec<f64> = (0..self.n)
+            .map(|i| self.latency.sample(loads[i], state[i], self.burst_age[i], &mut self.rng))
+            .collect();
+        for i in 0..self.n {
+            self.burst_age[i] = if state[i] { self.burst_age[i] + 1 } else { 0 };
+        }
+        if let Some(st) = &self.storage {
+            // all workers write their result concurrently near round end
+            for f in finish.iter_mut() {
+                *f += st.sample(self.n, &mut self.rng);
+            }
+        }
+        RoundSample { finish, state }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::straggler::models::NoStragglers;
+
+    #[test]
+    fn uniform_loads_give_similar_times() {
+        let mut c = SimCluster::new(
+            16,
+            LatencyParams::default(),
+            Box::new(NoStragglers { n: 16 }),
+            1,
+        );
+        let s = c.sample_round(&vec![0.05; 16]);
+        let min = s.finish.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = s.finish.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min < 2.0, "no stragglers → tight spread, got {min}..{max}");
+        assert!(s.state.iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn straggler_states_slow_down_workers() {
+        // Alternate straggle/clear so worker 3 is a *fresh* straggler
+        // each time (within-burst severity decay otherwise fades it).
+        let strag_row = {
+            let mut row = vec![false; 16];
+            row[3] = true;
+            row
+        };
+        let pat = Pattern::from_rows(vec![strag_row, vec![false; 16]]);
+        let mut c = SimCluster::from_trace(16, pat, 2);
+        let mut slow = 0.0;
+        let mut fast = 0.0;
+        for round in 0..50 {
+            let s = c.sample_round(&vec![0.05; 16]);
+            if round % 2 == 0 {
+                slow += s.finish[3];
+            } else {
+                slow += 0.0;
+            }
+            fast += s.finish[4] / 2.0;
+        }
+        assert!(slow > 1.8 * fast, "straggler mean {slow} vs {fast}");
+    }
+
+    #[test]
+    fn burst_severity_decays_with_age() {
+        // A permanent straggler's completion times shrink towards normal.
+        let pat = Pattern::from_rows(vec![{
+            let mut row = vec![false; 8];
+            row[0] = true;
+            row
+        }]);
+        let mut c = SimCluster::from_trace(8, pat, 7);
+        let mut early = 0.0;
+        let mut late = 0.0;
+        for round in 0..40 {
+            let s = c.sample_round(&vec![0.05; 8]);
+            if round == 0 {
+                early = s.finish[0];
+            }
+            if round == 39 {
+                late = s.finish[0];
+            }
+        }
+        assert!(late < early, "decay must fade severity: {early} → {late}");
+    }
+
+    #[test]
+    fn storage_adds_contention_delay() {
+        let mk = |storage| {
+            let mut c = SimCluster::new(
+                64,
+                LatencyParams::default(),
+                Box::new(NoStragglers { n: 64 }),
+                3,
+            );
+            if storage {
+                c = c.with_storage(StorageParams::resnet18_efs());
+            }
+            let s = c.sample_round(&vec![0.01; 64]);
+            crate::util::stats::mean(&s.finish)
+        };
+        assert!(mk(true) > mk(false) + 1.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Shared-storage (EFS) delay model — Appendix L.
+//!
+//! When task results exceed the Lambda 6 MB payload limit (ResNet-18
+//! gradients are ~22.5 MB), workers write them to a shared file system
+//! whose aggregate write throughput is limited; concurrent writers divide
+//! the bandwidth. This fattens the completion-time tail (Fig. 19(b)) and
+//! forces a larger μ.
+
+use crate::util::rng::Pcg32;
+
+/// Shared storage bandwidth model.
+#[derive(Clone, Debug)]
+pub struct StorageParams {
+    /// Payload each worker writes per round, MB.
+    pub payload_mb: f64,
+    /// Aggregate write bandwidth of the file system, MB/s.
+    pub aggregate_bw_mb_s: f64,
+    /// Per-client cap, MB/s.
+    pub per_client_bw_mb_s: f64,
+    /// Fixed metadata/open latency per write, seconds.
+    pub op_latency_s: f64,
+    /// Lognormal sigma on the effective write time (burst credits,
+    /// contention noise).
+    pub jitter_sigma: f64,
+}
+
+impl StorageParams {
+    /// Appendix-L configuration: ResNet-18 fp16 gradients over EFS.
+    pub fn resnet18_efs() -> Self {
+        StorageParams {
+            payload_mb: 22.5,
+            aggregate_bw_mb_s: 1024.0,
+            per_client_bw_mb_s: 35.0,
+            op_latency_s: 0.08,
+            jitter_sigma: 0.45,
+        }
+    }
+
+    /// Expected write delay with `concurrent` simultaneous writers.
+    pub fn mean_delay(&self, concurrent: usize) -> f64 {
+        let fair = self.aggregate_bw_mb_s / concurrent.max(1) as f64;
+        let bw = fair.min(self.per_client_bw_mb_s);
+        self.op_latency_s + self.payload_mb / bw
+    }
+
+    /// Sample a write delay.
+    pub fn sample(&self, concurrent: usize, rng: &mut Pcg32) -> f64 {
+        let mean = self.mean_delay(concurrent);
+        self.op_latency_s + (mean - self.op_latency_s) * rng.lognormal(0.0, self.jitter_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contention_raises_delay() {
+        let s = StorageParams::resnet18_efs();
+        assert!(s.mean_delay(256) > s.mean_delay(8));
+        // 256 writers share 1 GB/s → 4 MB/s each → 22.5/4 + op ≈ 5.7 s
+        let d = s.mean_delay(256);
+        assert!((5.0..7.0).contains(&d), "delay {d}");
+    }
+
+    #[test]
+    fn per_client_cap_binds_at_low_concurrency() {
+        let s = StorageParams::resnet18_efs();
+        let d1 = s.mean_delay(1);
+        let d4 = s.mean_delay(4);
+        assert!((d1 - d4).abs() < 1e-9, "cap should bind for both");
+    }
+
+    #[test]
+    fn samples_have_heavy_spread() {
+        let s = StorageParams::resnet18_efs();
+        let mut rng = Pcg32::seeded(4);
+        let xs: Vec<f64> = (0..5000).map(|_| s.sample(256, &mut rng)).collect();
+        let mean = crate::util::stats::mean(&xs);
+        let p95 = crate::util::stats::percentile(&xs, 95.0);
+        assert!(p95 / mean > 1.5, "tail too thin: p95/mean = {}", p95 / mean);
+    }
+}

@@ -1,0 +1,147 @@
+//! Information-theoretic lower bounds on normalized load (Appendix F) and
+//! the closed-form loads of all schemes — used by Fig. 11 and the
+//! optimality tests of Remark F.1.
+
+use super::m_sgc::MSgcParams;
+use super::sr_sgc::SrSgcParams;
+
+/// Theorem F.1: lower bound `L_B*` for any sequential gradient coding
+/// scheme tolerating the `(B, W, λ)`-bursty straggler model.
+pub fn bursty_lower_bound(n: usize, b: usize, w: usize, lambda: usize) -> f64 {
+    assert!(b >= 1 && b <= w && lambda <= n);
+    let (nf, bf, wf, lf) = (n as f64, b as f64, w as f64, lambda as f64);
+    if b < w {
+        (wf - 1.0 + bf) / (nf * (wf - 1.0) + bf * (nf - lf))
+    } else {
+        1.0 / (nf - lf)
+    }
+}
+
+/// Theorem F.2: lower bound `L_A*` for the `(N, W', λ')`-arbitrary model.
+pub fn arbitrary_lower_bound(n: usize, nn: usize, w_prime: usize, lambda_p: usize) -> f64 {
+    assert!(nn <= w_prime && lambda_p <= n);
+    let (nf, nnf, wf, lf) = (n as f64, nn as f64, w_prime as f64, lambda_p as f64);
+    if nn < w_prime {
+        wf / (nf * (wf - nnf) + nnf * (nf - lf))
+    } else {
+        1.0 / (nf - lf)
+    }
+}
+
+/// `(n, s)`-GC load `(s+1)/n`.
+pub fn gc_load(n: usize, s: usize) -> f64 {
+    (s + 1) as f64 / n as f64
+}
+
+/// GC's required `s` against a `(B,W,λ)`-bursty adversary without
+/// temporal coding (Remark 3.1): `s = λ` whenever `λ < n`.
+pub fn gc_required_s_bursty(lambda: usize) -> usize {
+    lambda
+}
+
+/// SR-SGC load for `{n, B, W, λ}`.
+pub fn sr_sgc_load(n: usize, b: usize, w: usize, lambda: usize) -> f64 {
+    SrSgcParams { n, b, w, lambda }.load()
+}
+
+/// M-SGC load for `{n, B, W, λ}` (equation 1).
+pub fn m_sgc_load(n: usize, b: usize, w: usize, lambda: usize) -> f64 {
+    MSgcParams { n, b, w, lambda }.load()
+}
+
+/// Multiplicative gap of M-SGC to the bursty lower bound.
+pub fn m_sgc_gap(n: usize, b: usize, w: usize, lambda: usize) -> f64 {
+    m_sgc_load(n, b, w, lambda) / bursty_lower_bound(n, b, w, lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msgc_optimal_at_lambda_n() {
+        // Remark F.1: λ = n → optimal.
+        for (n, b, w) in [(4, 1, 2), (8, 2, 4), (20, 3, 7)] {
+            let gap = m_sgc_gap(n, b, w, n);
+            assert!((gap - 1.0).abs() < 1e-9, "gap {gap} at n={n},B={b},W={w}");
+        }
+    }
+
+    #[test]
+    fn msgc_optimal_at_lambda_n_minus_1() {
+        for (n, b, w) in [(4, 1, 2), (8, 2, 4), (20, 3, 7)] {
+            let gap = m_sgc_gap(n, b, w, n - 1);
+            assert!((gap - 1.0).abs() < 1e-9, "gap {gap} at n={n},B={b},W={w}");
+        }
+    }
+
+    #[test]
+    fn msgc_gap_shrinks_as_one_over_w() {
+        // Remark F.1: for fixed n, B, λ, the gap decreases as O(1/W).
+        let (n, b, lambda) = (20, 3, 4);
+        let mut prev_excess = f64::INFINITY;
+        for w in [4usize, 8, 16, 32, 64] {
+            let excess = m_sgc_gap(n, b, w, lambda) - 1.0;
+            assert!(excess >= -1e-12);
+            assert!(excess < prev_excess, "excess not shrinking at W={w}");
+            prev_excess = excess;
+        }
+        // and the W=64 gap is small
+        assert!(prev_excess < 0.05, "gap {prev_excess}");
+    }
+
+    #[test]
+    fn loads_never_beat_the_bound() {
+        for n in [4usize, 8, 20] {
+            for b in 1..3usize {
+                for w in (b + 1)..6 {
+                    for lambda in 0..=n {
+                        let lb = bursty_lower_bound(n, b, w, lambda);
+                        assert!(
+                            m_sgc_load(n, b, w, lambda) >= lb - 1e-12,
+                            "M-SGC beats bound at n={n},B={b},W={w},λ={lambda}"
+                        );
+                        if lambda >= 1 && (w - 1) % b == 0 {
+                            assert!(
+                                sr_sgc_load(n, b, w, lambda) >= lb - 1e-12,
+                                "SR-SGC beats bound at n={n},B={b},W={w},λ={lambda}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn msgc_load_below_sr_sgc_load() {
+        // Fig. 11 shape: for n=20, B=3, λ=4 and W = xB+1, M-SGC is
+        // strictly cheaper than SR-SGC.
+        for x in 1..=6usize {
+            let w = 3 * x + 1;
+            let m = m_sgc_load(20, 3, w, 4);
+            let s = sr_sgc_load(20, 3, w, 4);
+            assert!(m < s, "W={w}: m={m} s={s}");
+        }
+    }
+
+    #[test]
+    fn example_f1_matches_bound() {
+        // Example F.1: n=4, B=1, W=2, λ=4 → M-SGC load 1/2 == L_B*.
+        let lb = bursty_lower_bound(4, 1, 2, 4);
+        assert!((lb - 0.5).abs() < 1e-12);
+        assert!((m_sgc_load(4, 1, 2, 4) - lb).abs() < 1e-12);
+        // SR-SGC needs 3/4 there.
+        assert!((sr_sgc_load(4, 1, 2, 4) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arbitrary_bound_edges() {
+        // N = W' degenerates to 1/(n-λ').
+        assert!((arbitrary_lower_bound(10, 4, 4, 3) - 1.0 / 7.0).abs() < 1e-12);
+        // Larger window → smaller bound.
+        let a = arbitrary_lower_bound(10, 2, 4, 3);
+        let b = arbitrary_lower_bound(10, 2, 8, 3);
+        assert!(b < a);
+    }
+}

@@ -1,0 +1,589 @@
+//! Classical `(n, s)` Gradient Coding (Tandon et al. 2017) — Sec. 3.1.
+//!
+//! Two pieces live here:
+//!
+//! * [`GcCode`] — the numeric code: the cyclic-support coefficient matrix
+//!   `B` (worker `i` returns `ℓ_i = Σ_{j ∈ [i:i+s]*} α_{i,j} g_j`) and the
+//!   decoder that finds `β` with `Σ_w β_w B[w,:] = 1ᵀ` for any responding
+//!   set of ≥ `n-s` workers. Decoding solves the consistent system via
+//!   normal equations (see [`crate::util::linalg`]); coefficients are
+//!   memoized per straggler pattern, which is the L3 hot-path optimization
+//!   the §Perf pass measures.
+//! * [`GcScheme`] — GC applied to the sequential setting (delay `T = 0`,
+//!   every worker computes `ℓ_i(t)` in round `t`).
+//!
+//! The `(s+1) | n` replication simplification of Appendix G ("GC-Rep") is
+//! [`GcRepScheme`]: workers are partitioned into `n/(s+1)` groups; each
+//! group replicates the plain sum of its `s+1` chunks, so decode is the
+//! trivial sum of one response per group.
+
+use super::scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use crate::util::linalg::{self, Matrix};
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+/// The cyclic support `[i : i+s]* = {i mod n, …, (i+s) mod n}`.
+pub fn cyclic_support(i: usize, s: usize, n: usize) -> Vec<usize> {
+    (0..=s).map(|k| (i + k) % n).collect()
+}
+
+/// Numeric `(n, s)`-GC code.
+#[derive(Clone, Debug)]
+pub struct GcCode {
+    pub n: usize,
+    pub s: usize,
+    /// Dense `n × n` coefficient matrix with cyclic support.
+    pub b: Matrix,
+    /// Decode coefficient cache keyed by the responder bitmask (as bytes).
+    cache: HashMap<Vec<u64>, Vec<f64>>,
+}
+
+impl GcCode {
+    /// Tandon et al. Algorithm-2 construction: draw a random
+    /// `H ∈ R^{s×n}` whose columns sum to zero (so `H·1 = 0`), then choose
+    /// every row `b_i` inside `null(H)` with cyclic support `[i:i+s]*` and
+    /// `b_i[i] = 1`. All rows live in the `(n-s)`-dimensional `null(H)`
+    /// which contains `1`; any `n-s` rows are generically independent and
+    /// therefore span it — every `(n-s)`-subset decodes with probability
+    /// 1. [`Self::verify_random_subsets`] spot-checks the genericity.
+    pub fn new(n: usize, s: usize, seed: u64) -> Self {
+        assert!(s < n, "need s < n");
+        let mut rng = Pcg32::new(seed, 0x6c0de);
+        let mut b = Matrix::zeros(n, n);
+        if s == 0 {
+            // degenerate: every worker returns its own partial gradient
+            for i in 0..n {
+                b[(i, i)] = 1.0;
+            }
+            return GcCode { n, s, b, cache: HashMap::new() };
+        }
+        // H with columns summing to zero: H·1 = 0.
+        let mut h = Matrix::zeros(s, n);
+        for r in 0..s {
+            let mut sum = 0.0;
+            for c in 0..n - 1 {
+                let v = rng.normal();
+                h[(r, c)] = v;
+                sum += v;
+            }
+            h[(r, n - 1)] = -sum;
+        }
+        // Row i: b_i[i] = 1; remaining support entries y solve
+        // H[:, rest] · y = -H[:, i].
+        for i in 0..n {
+            let support = cyclic_support(i, s, n);
+            let rest = &support[1..];
+            let mut sub = Matrix::zeros(s, s);
+            for (c, &col) in rest.iter().enumerate() {
+                for r in 0..s {
+                    sub[(r, c)] = h[(r, col)];
+                }
+            }
+            let rhs: Vec<f64> = (0..s).map(|r| -h[(r, i)]).collect();
+            let y = linalg::solve_square(&sub, &rhs)
+                .expect("generic H gives nonsingular subsystems");
+            b[(i, i)] = 1.0;
+            for (&col, &v) in rest.iter().zip(&y) {
+                b[(i, col)] = v;
+            }
+        }
+        // Row-normalize: unit-norm rows keep the decode Gram matrix well
+        // conditioned (near-singular H subsystems otherwise blow row
+        // magnitudes up to ~1e2-1e3).
+        for i in 0..n {
+            let norm = linalg::dot(b.row(i), b.row(i)).sqrt();
+            for v in b.row_mut(i) {
+                *v /= norm;
+            }
+        }
+        GcCode { n, s, b, cache: HashMap::new() }
+    }
+
+    /// Encode: combine the `s+1` partial-gradient vectors computed by
+    /// worker `row` into the single task result `ℓ_row`.
+    ///
+    /// `partials[k]` is the gradient w.r.t. chunk `support[k]`.
+    pub fn encode(&self, row: usize, partials: &[&[f32]]) -> Vec<f32> {
+        let support = cyclic_support(row, self.s, self.n);
+        assert_eq!(partials.len(), support.len());
+        let dim = partials[0].len();
+        let mut out = vec![0.0f32; dim];
+        for (k, &chunk) in support.iter().enumerate() {
+            let alpha = self.b[(row, chunk)] as f32;
+            debug_assert_eq!(partials[k].len(), dim);
+            for (o, &g) in out.iter_mut().zip(partials[k]) {
+                *o += alpha * g;
+            }
+        }
+        out
+    }
+
+    /// Decode coefficients for a responder set: `β` such that
+    /// `Σ_{w ∈ workers} β_w B[w,:] = 1ᵀ`. Returns `None` if the set is too
+    /// small or (numerically) undecodable.
+    ///
+    /// Results are memoized: round-over-round straggler patterns repeat
+    /// heavily (GE model dwell times), so the cache hit rate in long runs
+    /// is high — see EXPERIMENTS.md §Perf.
+    pub fn decode_coeffs(&mut self, workers: &[usize]) -> Option<Vec<f64>> {
+        let k = self.n - self.s;
+        if workers.len() < k {
+            return None;
+        }
+        // Rows all lie in the (n-s)-dimensional null(H): use exactly n-s
+        // of them (more would make the Gram matrix singular); the
+        // returned β is aligned with `workers`, zero beyond the first k.
+        let used = &workers[..k];
+        let key = bitmask(used, self.n);
+        if let Some(c) = self.cache.get(&key) {
+            let mut full = c.clone();
+            full.resize(workers.len(), 0.0);
+            return Some(full);
+        }
+        let rows: Vec<Vec<f64>> = used.iter().map(|&w| self.b.row(w).to_vec()).collect();
+        let a = Matrix::from_rows(&rows);
+        let ones = vec![1.0; self.n];
+        // Normal equations + two iterative-refinement sweeps: the Gram
+        // matrix squares the conditioning, refinement recovers the lost
+        // digits (worst-case residual ~1e-10 at n=256 in calibration).
+        let gram = a.gram_rows();
+        let l = linalg::cholesky(&gram)?;
+        let mut x = linalg::cholesky_solve(&l, &a.matvec(&ones));
+        // Iterative refinement until the residual converges (usually 2
+        // sweeps; ill-conditioned subsets occasionally need a few more).
+        for _ in 0..8 {
+            if linalg::residual_inf(&a, &x, &ones) <= 1e-8 {
+                break;
+            }
+            let atx = a.tr_matvec(&x);
+            let resid: Vec<f64> = ones.iter().zip(&atx).map(|(o, v)| o - v).collect();
+            let dx = linalg::cholesky_solve(&l, &a.matvec(&resid));
+            for (xi, di) in x.iter_mut().zip(&dx) {
+                *xi += di;
+            }
+        }
+        if linalg::residual_inf(&a, &x, &ones) > 1e-5 {
+            return None;
+        }
+        self.cache.insert(key, x.clone());
+        let mut full = x;
+        full.resize(workers.len(), 0.0);
+        Some(full)
+    }
+
+    /// Decode: combine received `ℓ` vectors into the full gradient
+    /// `g = Σ_j g_j`.
+    pub fn decode(&mut self, workers: &[usize], results: &[&[f32]]) -> Option<Vec<f32>> {
+        assert_eq!(workers.len(), results.len());
+        let beta = self.decode_coeffs(workers)?;
+        let dim = results[0].len();
+        let mut out = vec![0.0f32; dim];
+        for (k, r) in results.iter().enumerate() {
+            let b = beta[k] as f32;
+            for (o, &v) in out.iter_mut().zip(*r) {
+                *o += b * v;
+            }
+        }
+        Some(out)
+    }
+
+    /// Spot-check decodability over `trials` random `(n-s)`-subsets.
+    pub fn verify_random_subsets(&mut self, trials: usize, seed: u64) -> bool {
+        let mut rng = Pcg32::new(seed, 0xc3ec);
+        for _ in 0..trials {
+            let subset = rng.sample_indices(self.n, self.n - self.s);
+            if self.decode_coeffs(&subset).is_none() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Decode-cache statistics `(entries)` for perf reporting.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn bitmask(workers: &[usize], n: usize) -> Vec<u64> {
+    let mut mask = vec![0u64; n.div_ceil(64)];
+    for &w in workers {
+        mask[w / 64] |= 1 << (w % 64);
+    }
+    mask
+}
+
+/// `(n, s)`-GC in the sequential setting: `T = 0`, `η = n` equal chunks,
+/// worker `i` stores chunks `[i : i+s]*` and returns `ℓ_i(t)` in round `t`.
+pub struct GcScheme {
+    spec: SchemeSpec,
+    s: usize,
+    jobs: usize,
+    /// Ledger per job (index `t-1`).
+    ledgers: Vec<JobLedger>,
+    assigned: Vec<Vec<TaskDesc>>, // per committed/assigned round (index r-1)
+    committed: usize,
+}
+
+impl GcScheme {
+    pub fn new(n: usize, s: usize, jobs: usize) -> Self {
+        assert!(s < n);
+        let spec = SchemeSpec {
+            name: format!("gc(n={n},s={s})"),
+            n,
+            delay: 0,
+            load: (s + 1) as f64 / n as f64,
+            num_chunks: n,
+            chunk_sizes: vec![1.0 / n as f64; n],
+            placement: (0..n).map(|i| cyclic_support(i, s, n)).collect(),
+            tolerance: ToleranceSpec::PerRound { s },
+        };
+        let ledgers = (0..jobs)
+            .map(|_| JobLedger {
+                plain_missing: HashSet::new(),
+                coded_got: vec![HashSet::new()],
+                coded_need: vec![n - s],
+            })
+            .collect();
+        GcScheme { spec, s, jobs, ledgers, assigned: Vec::new(), committed: 0 }
+    }
+
+    fn task_for(&self, worker: usize, job: usize) -> TaskDesc {
+        if job < 1 || job > self.jobs {
+            return TaskDesc::noop();
+        }
+        TaskDesc {
+            units: vec![WorkUnit::Coded {
+                job,
+                group: 0,
+                row: worker,
+                chunks: cyclic_support(worker, self.s, self.spec.n),
+            }],
+        }
+    }
+}
+
+impl Scheme for GcScheme {
+    fn spec(&self) -> &SchemeSpec {
+        &self.spec
+    }
+
+    fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
+        assert_eq!(r, self.assigned.len() + 1, "rounds must be assigned in order");
+        assert_eq!(self.committed, self.assigned.len(), "previous round not committed");
+        let tasks: Vec<TaskDesc> = (0..self.spec.n).map(|i| self.task_for(i, r)).collect();
+        self.assigned.push(tasks.clone());
+        tasks
+    }
+
+    fn commit_round(&mut self, r: usize, responded: &[bool]) {
+        assert_eq!(r, self.committed + 1);
+        assert_eq!(responded.len(), self.spec.n);
+        let tasks = &self.assigned[r - 1];
+        for (w, task) in tasks.iter().enumerate() {
+            if !responded[w] {
+                continue;
+            }
+            for unit in &task.units {
+                if let Some(job) = unit.job() {
+                    self.ledgers[job - 1].deliver(w, unit);
+                }
+            }
+        }
+        // Committed rounds are never read again — drop their task
+        // storage so long runs stay O(window), not O(rounds).
+        self.assigned[r - 1] = Vec::new();
+        self.committed = r;
+    }
+
+    fn decodable(&self, job: usize) -> bool {
+        self.ledgers[job - 1].complete()
+    }
+
+    fn ledger(&self, job: usize) -> &JobLedger {
+        &self.ledgers[job - 1]
+    }
+
+    fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
+        debug_assert_eq!(r, self.committed + 1);
+        let mut ledger = self.ledgers[job - 1].clone();
+        for (w, task) in self.assigned[r - 1].iter().enumerate() {
+            if !responded[w] {
+                continue;
+            }
+            for unit in &task.units {
+                if unit.job() == Some(job) {
+                    ledger.deliver(w, unit);
+                }
+            }
+        }
+        ledger.complete()
+    }
+}
+
+/// Appendix G `GC-Rep`: requires `(s+1) | n`. Worker `i` belongs to group
+/// `⌊i/(s+1)⌋`; all workers in group `g` compute the same plain sum
+/// `ℓ^(g) = Σ_{j ∈ group g chunks} g_j`. Decode = one response per group.
+pub struct GcRepScheme {
+    spec: SchemeSpec,
+    s: usize,
+    jobs: usize,
+    ledgers: Vec<JobLedger>,
+    assigned: Vec<Vec<TaskDesc>>,
+    committed: usize,
+}
+
+impl GcRepScheme {
+    pub fn new(n: usize, s: usize, jobs: usize) -> Self {
+        assert!(s < n);
+        assert_eq!(n % (s + 1), 0, "GC-Rep needs (s+1) | n");
+        let groups = n / (s + 1);
+        let spec = SchemeSpec {
+            name: format!("gc-rep(n={n},s={s})"),
+            n,
+            delay: 0,
+            load: (s + 1) as f64 / n as f64,
+            num_chunks: n,
+            chunk_sizes: vec![1.0 / n as f64; n],
+            placement: (0..n).map(|i| Self::group_chunks(i / (s + 1), s)).collect(),
+            tolerance: ToleranceSpec::PerRound { s },
+        };
+        let ledgers = (0..jobs)
+            .map(|_| JobLedger {
+                plain_missing: HashSet::new(),
+                // one coded "replication group" per worker group, threshold 1
+                coded_got: vec![HashSet::new(); groups],
+                coded_need: vec![1; groups],
+            })
+            .collect();
+        GcRepScheme { spec, s, jobs, ledgers, assigned: Vec::new(), committed: 0 }
+    }
+
+    fn group_chunks(g: usize, s: usize) -> Vec<usize> {
+        (g * (s + 1)..(g + 1) * (s + 1)).collect()
+    }
+
+    /// Group of a worker.
+    pub fn group_of(&self, worker: usize) -> usize {
+        worker / (self.s + 1)
+    }
+
+    fn task_for(&self, worker: usize, job: usize) -> TaskDesc {
+        if job < 1 || job > self.jobs {
+            return TaskDesc::noop();
+        }
+        let g = worker / (self.s + 1);
+        TaskDesc {
+            units: vec![WorkUnit::Coded {
+                job,
+                group: g,
+                row: worker,
+                chunks: Self::group_chunks(g, self.s),
+            }],
+        }
+    }
+}
+
+impl Scheme for GcRepScheme {
+    fn spec(&self) -> &SchemeSpec {
+        &self.spec
+    }
+
+    fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
+        assert_eq!(r, self.assigned.len() + 1);
+        assert_eq!(self.committed, self.assigned.len());
+        let tasks: Vec<TaskDesc> = (0..self.spec.n).map(|i| self.task_for(i, r)).collect();
+        self.assigned.push(tasks.clone());
+        tasks
+    }
+
+    fn commit_round(&mut self, r: usize, responded: &[bool]) {
+        assert_eq!(r, self.committed + 1);
+        for (w, task) in self.assigned[r - 1].iter().enumerate() {
+            if !responded[w] {
+                continue;
+            }
+            for unit in &task.units {
+                if let Some(job) = unit.job() {
+                    self.ledgers[job - 1].deliver(w, unit);
+                }
+            }
+        }
+        // Committed rounds are never read again — drop their task
+        // storage so long runs stay O(window), not O(rounds).
+        self.assigned[r - 1] = Vec::new();
+        self.committed = r;
+    }
+
+    fn decodable(&self, job: usize) -> bool {
+        self.ledgers[job - 1].complete()
+    }
+
+    fn ledger(&self, job: usize) -> &JobLedger {
+        &self.ledgers[job - 1]
+    }
+
+    fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
+        debug_assert_eq!(r, self.committed + 1);
+        let mut ledger = self.ledgers[job - 1].clone();
+        for (w, task) in self.assigned[r - 1].iter().enumerate() {
+            if !responded[w] {
+                continue;
+            }
+            for unit in &task.units {
+                if unit.job() == Some(job) {
+                    ledger.deliver(w, unit);
+                }
+            }
+        }
+        ledger.complete()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn cyclic_support_wraps() {
+        assert_eq!(cyclic_support(4, 2, 6), vec![4, 5, 0]);
+        assert_eq!(cyclic_support(0, 0, 3), vec![0]);
+    }
+
+    #[test]
+    fn gc_code_decodes_all_small_subsets() {
+        // exhaustively check all (n-s)-subsets for a small code
+        let n = 7;
+        let s = 2;
+        let mut code = GcCode::new(n, s, 42);
+        let mut count = 0;
+        // enumerate subsets of size n-s via bitmask
+        for mask in 0u32..(1 << n) {
+            if mask.count_ones() as usize != n - s {
+                continue;
+            }
+            let subset: Vec<usize> = (0..n).filter(|&i| mask & (1 << i) != 0).collect();
+            assert!(code.decode_coeffs(&subset).is_some(), "subset {subset:?} undecodable");
+            count += 1;
+        }
+        assert_eq!(count, 21);
+    }
+
+    #[test]
+    fn gc_code_large_spot_check() {
+        let mut code = GcCode::new(64, 7, 7);
+        assert!(code.verify_random_subsets(50, 99));
+    }
+
+    #[test]
+    fn gc_code_rejects_too_few() {
+        let mut code = GcCode::new(8, 2, 1);
+        assert!(code.decode_coeffs(&[0, 1, 2]).is_none());
+    }
+
+    #[test]
+    fn gc_encode_decode_numeric_roundtrip() {
+        let n = 6;
+        let s = 2;
+        let dim = 5;
+        let mut rng = Pcg32::seeded(3);
+        let mut code = GcCode::new(n, s, 11);
+        // random partial gradients per chunk
+        let partials: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let truth: Vec<f32> = (0..dim)
+            .map(|d| partials.iter().map(|p| p[d]).sum())
+            .collect();
+        // every worker encodes
+        let encoded: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let sup = cyclic_support(i, s, n);
+                let refs: Vec<&[f32]> = sup.iter().map(|&c| partials[c].as_slice()).collect();
+                code.encode(i, &refs)
+            })
+            .collect();
+        // drop workers 1 and 4 (s = 2 stragglers)
+        let workers = vec![0, 2, 3, 5];
+        let results: Vec<&[f32]> = workers.iter().map(|&w| encoded[w].as_slice()).collect();
+        let decoded = code.decode(&workers, &results).unwrap();
+        for (a, b) in decoded.iter().zip(&truth) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_cache_hits() {
+        let mut code = GcCode::new(12, 3, 5);
+        let w: Vec<usize> = (0..9).collect();
+        code.decode_coeffs(&w).unwrap();
+        assert_eq!(code.cache_len(), 1);
+        code.decode_coeffs(&w).unwrap();
+        assert_eq!(code.cache_len(), 1);
+    }
+
+    #[test]
+    fn gc_scheme_decodes_with_s_stragglers() {
+        let n = 8;
+        let s = 3;
+        let mut sch = GcScheme::new(n, s, 4);
+        sch.spec().validate();
+        for r in 1..=4usize {
+            sch.assign_round(r);
+            // workers 0..s straggle every round
+            let responded: Vec<bool> = (0..n).map(|i| i >= s).collect();
+            assert!(sch.decodable_with(r, r, &responded));
+            sch.commit_round(r, &responded);
+            assert!(sch.decodable(r));
+        }
+    }
+
+    #[test]
+    fn gc_scheme_fails_with_s_plus_1_stragglers() {
+        let n = 8;
+        let s = 3;
+        let mut sch = GcScheme::new(n, s, 1);
+        sch.assign_round(1);
+        let responded: Vec<bool> = (0..n).map(|i| i > s).collect(); // s+1 stragglers
+        assert!(!sch.decodable_with(1, 1, &responded));
+        sch.commit_round(1, &responded);
+        assert!(!sch.decodable(1));
+    }
+
+    #[test]
+    fn gc_rep_needs_one_per_group() {
+        let n = 6;
+        let s = 2; // 2 groups: {0,1,2}, {3,4,5}
+        let mut sch = GcRepScheme::new(n, s, 1);
+        sch.spec().validate();
+        sch.assign_round(1);
+        // only workers 2 and 3 respond: one in each group → decodable
+        let resp = vec![false, false, true, true, false, false];
+        assert!(sch.decodable_with(1, 1, &resp));
+        // all of group 0 straggles → not decodable even though only 3 stragglers
+        let resp2 = vec![false, false, false, true, true, true];
+        assert!(!sch.decodable_with(1, 1, &resp2));
+        sch.commit_round(1, &resp);
+        assert!(sch.decodable(1));
+    }
+
+    #[test]
+    fn gc_rep_tolerates_patterns_gc_cannot() {
+        // Appendix G example: n=6, s=2, stragglers {1,2,3,5} (4 > s) but
+        // one worker per group survives.
+        let mut rep = GcRepScheme::new(6, 2, 1);
+        rep.assign_round(1);
+        let resp = vec![true, false, false, false, true, false];
+        assert!(rep.decodable_with(1, 1, &resp));
+    }
+}

@@ -1,0 +1,515 @@
+//! Multiplexed Sequential Gradient Coding (M-SGC) — Sec. 3.3, the paper's
+//! main contribution.
+//!
+//! The dataset is split into an *uncoded* part `D1` (large chunks, each
+//! owned by exactly one worker, protected by re-attempting failed
+//! computations across rounds) and a *coded* part `D2` (small chunks in
+//! `B` groups, each group protected by an `(n, λ)`-GC code). Worker tasks
+//! are `W-1+B` diagonally interleaved mini-tasks; the mini-tasks
+//! `T_i(t;0), T_i(t+1;1), …, T_i(t+W-2+B; W-2+B)` all serve job `t`
+//! (Fig. 5). Delay `T = W-2+B`; load per equation (1).
+//!
+//! Mini-task layout for worker `i` in round `r`, slot `j` (job `t = r-j`):
+//!
+//! * `j ∈ [0, W-1)` — first attempt of the D1 partial gradient
+//!   `g_{i(W-1)+j}(t)`.
+//! * `j ∈ [W-1, W-1+B)` — if worker `i` still has failed D1 partials for
+//!   job `t`, re-attempt the oldest one; otherwise compute the coded
+//!   result `ℓ_{i, j-W+1}(t)` over D2 group `j-W+1` (Algorithm 2).
+//!
+//! `λ = n` (Remark 3.2) degenerates to `D2 = ∅` with all-plain mini-tasks.
+//! `(λ+1) | n` enables the GC-Rep base for D2 (Appendix G, "M-SGC-Rep").
+
+use super::gc::cyclic_support;
+use super::scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use std::collections::HashSet;
+
+/// M-SGC design parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MSgcParams {
+    pub n: usize,
+    pub b: usize,
+    pub w: usize,
+    pub lambda: usize,
+}
+
+impl MSgcParams {
+    pub fn validate(&self) {
+        assert!(self.lambda <= self.n, "need 0 ≤ λ ≤ n");
+        assert!(self.b > 0 && self.b < self.w, "need 0 < B < W");
+    }
+
+    /// Delay `T = W - 2 + B`.
+    pub fn delay(&self) -> usize {
+        self.w - 2 + self.b
+    }
+
+    /// Normalized load, equation (1).
+    pub fn load(&self) -> f64 {
+        let (n, b, w, l) = (self.n as f64, self.b as f64, self.w as f64, self.lambda as f64);
+        if self.lambda < self.n {
+            (l + 1.0) * (w - 1.0 + b) / (n * (b + (w - 1.0) * (l + 1.0)))
+        } else {
+            (w - 1.0 + b) / (n * (w - 1.0))
+        }
+    }
+}
+
+/// M-SGC scheme state (also M-SGC-Rep when `rep`).
+pub struct MSgcScheme {
+    spec: SchemeSpec,
+    params: MSgcParams,
+    rep: bool,
+    jobs: usize,
+    /// Number of D1 chunks `(W-1)·n` (D1 chunk of worker `i`, slot `j`
+    /// is `i(W-1)+j`).
+    #[allow(dead_code)]
+    d1_chunks: usize,
+    ledgers: Vec<JobLedger>,
+    /// Pending failed D1 chunks per job (index `t-1`) per worker, oldest
+    /// first. Only populated for jobs whose window is active.
+    failed_d1: Vec<Vec<Vec<usize>>>,
+    /// Precomputed D2 chunk lists, indexed `m * n + worker` (§Perf:
+    /// rebuilding these per round dominated `assign_round`).
+    d2_table: Vec<Vec<usize>>,
+    assigned: Vec<Vec<TaskDesc>>,
+    committed: usize,
+}
+
+impl MSgcScheme {
+    pub fn new(params: MSgcParams, jobs: usize) -> Self {
+        Self::build(params, jobs, false)
+    }
+
+    /// M-SGC-Rep: D2 groups coded with the Appendix-G replication base.
+    /// Requires `λ < n` and `(λ+1) | n`.
+    pub fn new_rep(params: MSgcParams, jobs: usize) -> Self {
+        assert!(params.lambda < params.n, "rep variant needs λ < n");
+        assert_eq!(params.n % (params.lambda + 1), 0, "M-SGC-Rep needs (λ+1) | n");
+        Self::build(params, jobs, true)
+    }
+
+    fn build(params: MSgcParams, jobs: usize, rep: bool) -> Self {
+        params.validate();
+        let (n, b, w, lambda) = (params.n, params.b, params.w, params.lambda);
+        let d1_chunks = (w - 1) * n;
+        let coded = lambda < n;
+        let num_chunks = if coded { (w - 1 + b) * n } else { d1_chunks };
+        // Chunk sizes (Sec. 3.3.2 data placement).
+        let mut chunk_sizes = Vec::with_capacity(num_chunks);
+        if coded {
+            let denom = n as f64 * (b as f64 + (w - 1) as f64 * (lambda + 1) as f64);
+            chunk_sizes.extend(std::iter::repeat((lambda + 1) as f64 / denom).take(d1_chunks));
+            chunk_sizes.extend(std::iter::repeat(1.0 / denom).take(b * n));
+        } else {
+            chunk_sizes.extend(std::iter::repeat(1.0 / d1_chunks as f64).take(d1_chunks));
+        }
+        // Placement: worker i owns D1 chunks [i(W-1), (i+1)(W-1)) and, for
+        // each D2 group j, the (λ+1) chunks (W-1+j)n + [i : i+λ]*.
+        let placement: Vec<Vec<usize>> = (0..n)
+            .map(|i| {
+                let mut d: Vec<usize> = (i * (w - 1)..(i + 1) * (w - 1)).collect();
+                if coded {
+                    for j in 0..b {
+                        let base = (w - 1 + j) * n;
+                        if rep {
+                            let g = i / (lambda + 1);
+                            d.extend((g * (lambda + 1)..(g + 1) * (lambda + 1)).map(|k| base + k));
+                        } else {
+                            d.extend(cyclic_support(i, lambda, n).into_iter().map(|k| base + k));
+                        }
+                    }
+                }
+                d
+            })
+            .collect();
+        let spec = SchemeSpec {
+            name: format!("m-sgc{}(n={n},B={b},W={w},λ={lambda})", if rep { "-rep" } else { "" }),
+            n,
+            delay: params.delay(),
+            load: params.load(),
+            num_chunks,
+            chunk_sizes,
+            placement,
+            tolerance: ToleranceSpec::BurstyOrArbitrary { b, w, lambda },
+        };
+        let rep_groups = if rep { n / (lambda + 1) } else { 1 };
+        let ledgers = (0..jobs)
+            .map(|_| JobLedger {
+                plain_missing: (0..d1_chunks).collect(),
+                coded_got: if coded {
+                    vec![HashSet::new(); b * rep_groups]
+                } else {
+                    Vec::new()
+                },
+                coded_need: if coded {
+                    if rep {
+                        vec![1; b * rep_groups]
+                    } else {
+                        vec![n - lambda; b]
+                    }
+                } else {
+                    Vec::new()
+                },
+            })
+            .collect();
+        MSgcScheme {
+            spec,
+            params,
+            rep,
+            jobs,
+            d1_chunks,
+            ledgers,
+            failed_d1: vec![vec![Vec::new(); n]; jobs],
+            d2_table: Self::build_d2_table(&params, rep),
+            assigned: Vec::new(),
+            committed: 0,
+        }
+    }
+
+    fn build_d2_table(params: &MSgcParams, rep: bool) -> Vec<Vec<usize>> {
+        let (n, b, w, lambda) = (params.n, params.b, params.w, params.lambda);
+        if lambda >= n {
+            return Vec::new();
+        }
+        let mut table = Vec::with_capacity(b * n);
+        for m in 0..b {
+            let base = (w - 1 + m) * n;
+            for worker in 0..n {
+                let chunks: Vec<usize> = if rep {
+                    let g = worker / (lambda + 1);
+                    (g * (lambda + 1)..(g + 1) * (lambda + 1)).map(|k| base + k).collect()
+                } else {
+                    cyclic_support(worker, lambda, n).into_iter().map(|k| base + k).collect()
+                };
+                table.push(chunks);
+            }
+        }
+        table
+    }
+
+    pub fn params(&self) -> MSgcParams {
+        self.params
+    }
+
+    /// Ledger group index for D2 group `m` and worker `i`.
+    fn ledger_group(&self, m: usize, worker: usize) -> usize {
+        if self.rep {
+            let rep_groups = self.spec.n / (self.params.lambda + 1);
+            m * rep_groups + worker / (self.params.lambda + 1)
+        } else {
+            m
+        }
+    }
+
+    /// D2 chunks of group `m` held by worker `i` (precomputed).
+    fn d2_chunks(&self, m: usize, worker: usize) -> Vec<usize> {
+        self.d2_table[m * self.spec.n + worker].clone()
+    }
+
+    /// Build the mini-task for worker `i`, round `r`, slot `j`
+    /// (Algorithm 2).
+    fn unit_for(&self, worker: usize, r: usize, slot: usize) -> WorkUnit {
+        let t = r as isize - slot as isize;
+        if t < 1 || t as usize > self.jobs {
+            return WorkUnit::Noop;
+        }
+        let t = t as usize;
+        let w = self.params.w;
+        if slot < w - 1 {
+            // First attempt of D1 partial g_{i(W-1)+slot}(t).
+            WorkUnit::Plain { job: t, chunk: worker * (w - 1) + slot }
+        } else {
+            let m = slot - (w - 1);
+            let pending = &self.failed_d1[t - 1][worker];
+            if let Some(&chunk) = pending.first() {
+                // Re-attempt the oldest failed D1 partial for job t.
+                WorkUnit::Plain { job: t, chunk }
+            } else if self.params.lambda < self.spec.n {
+                WorkUnit::Coded {
+                    job: t,
+                    group: self.ledger_group(m, worker),
+                    row: worker,
+                    chunks: self.d2_chunks(m, worker),
+                }
+            } else {
+                WorkUnit::Noop // Remark 3.2: trivial partial gradients
+            }
+        }
+    }
+}
+
+impl Scheme for MSgcScheme {
+    fn spec(&self) -> &SchemeSpec {
+        &self.spec
+    }
+
+    fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
+        assert_eq!(r, self.assigned.len() + 1, "rounds must be assigned in order");
+        assert_eq!(self.committed, self.assigned.len(), "previous round not committed");
+        let slots = self.params.w - 1 + self.params.b;
+        let tasks: Vec<TaskDesc> = (0..self.spec.n)
+            .map(|i| TaskDesc {
+                units: (0..slots).map(|j| self.unit_for(i, r, j)).collect(),
+            })
+            .collect();
+        self.assigned.push(tasks.clone());
+        tasks
+    }
+
+    fn commit_round(&mut self, r: usize, responded: &[bool]) {
+        assert_eq!(r, self.committed + 1);
+        assert_eq!(responded.len(), self.spec.n);
+        let w = self.params.w;
+        // Take (not clone) the round's tasks: committed rounds are never
+        // read again, so this both avoids the copy and prunes history.
+        let tasks = std::mem::take(&mut self.assigned[r - 1]);
+        for (i, task) in tasks.iter().enumerate() {
+            for (slot, unit) in task.units.iter().enumerate() {
+                let Some(job) = unit.job() else { continue };
+                if responded[i] {
+                    self.ledgers[job - 1].deliver(i, unit);
+                    // A successful re-attempt clears the pending entry.
+                    if let WorkUnit::Plain { chunk, .. } = unit {
+                        self.failed_d1[job - 1][i].retain(|c| c != chunk);
+                    }
+                } else if slot < w - 1 {
+                    // Failed *first attempt* → queue for re-attempts.
+                    if let WorkUnit::Plain { chunk, .. } = unit {
+                        self.failed_d1[job - 1][i].push(*chunk);
+                    }
+                }
+                // Failed re-attempts / coded units: nothing to record —
+                // the pending entry is still queued.
+            }
+        }
+        self.committed = r;
+    }
+
+    fn decodable(&self, job: usize) -> bool {
+        self.ledgers[job - 1].complete()
+    }
+
+    fn ledger(&self, job: usize) -> &JobLedger {
+        &self.ledgers[job - 1]
+    }
+
+    fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
+        debug_assert_eq!(r, self.committed + 1);
+        let mut ledger = self.ledgers[job - 1].clone();
+        for (i, task) in self.assigned[r - 1].iter().enumerate() {
+            if !responded[i] {
+                continue;
+            }
+            for unit in &task.units {
+                if unit.job() == Some(job) {
+                    ledger.deliver(i, unit);
+                }
+            }
+        }
+        ledger.complete()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_true(n: usize) -> Vec<bool> {
+        vec![true; n]
+    }
+
+    /// Run the scheme over a straggler pattern matrix `strag[r-1][i]` and
+    /// return decode status per job at each job's deadline.
+    fn run_pattern(mut sch: MSgcScheme, strag: &[Vec<bool>]) -> Vec<bool> {
+        let total = sch.total_rounds();
+        assert!(strag.len() >= total);
+        let mut ok = vec![false; sch.jobs()];
+        for r in 1..=total {
+            sch.assign_round(r);
+            let responded: Vec<bool> = strag[r - 1].iter().map(|&s| !s).collect();
+            sch.commit_round(r, &responded);
+            if let Some(t) = sch.deadline_job(r) {
+                ok[t - 1] = sch.decodable(t);
+            }
+        }
+        ok
+    }
+
+    #[test]
+    fn load_matches_paper_values() {
+        // Table 1: M-SGC B=1, W=2, λ=27, n=256 → load ≈ 0.0078
+        let p = MSgcParams { n: 256, b: 1, w: 2, lambda: 27 };
+        p.validate();
+        assert_eq!(p.delay(), 1);
+        let expected = 28.0 * 2.0 / (256.0 * (1.0 + 28.0));
+        assert!((p.load() - expected).abs() < 1e-12);
+        assert!(p.load() < 0.008, "paper reports 0.008 (rounded)");
+
+        // Remark 3.3: load ≤ 2/n for any λ.
+        for lambda in 0..=16 {
+            let p = MSgcParams { n: 16, b: 2, w: 4, lambda };
+            assert!(p.load() <= 2.0 / 16.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn example_f1_load() {
+        // Example F.1: n=4, B=1, W=2, λ=4 → M-SGC load 1/2 (vs SR-SGC 3/4).
+        let p = MSgcParams { n: 4, b: 1, w: 2, lambda: 4 };
+        assert!((p.load() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_is_consistent() {
+        for (n, b, w, lambda) in [(4, 2, 3, 2), (8, 1, 2, 3), (6, 1, 3, 6), (9, 2, 4, 2)] {
+            let sch = MSgcScheme::new(MSgcParams { n, b, w, lambda }, 5);
+            sch.spec().validate();
+        }
+    }
+
+    #[test]
+    fn no_stragglers_decodes_every_job_at_deadline() {
+        let p = MSgcParams { n: 4, b: 2, w: 3, lambda: 2 };
+        let sch = MSgcScheme::new(p, 6);
+        let total = 6 + p.delay();
+        let strag = vec![vec![false; 4]; total];
+        let ok = run_pattern(sch, &strag);
+        assert!(ok.iter().all(|&x| x), "{ok:?}");
+    }
+
+    #[test]
+    fn paper_example_sec_3_3_1() {
+        // n=4, B=2, W=3, λ=2; Fig. 6 pattern: worker 0 straggles in round
+        // 2; worker 1 in rounds 2 and 3. Job 2 must decode by round 5
+        // (T = 3).
+        let p = MSgcParams { n: 4, b: 2, w: 3, lambda: 2 };
+        assert_eq!(p.delay(), 3);
+        let jobs = 6;
+        let total = jobs + p.delay();
+        let mut strag = vec![vec![false; 4]; total];
+        strag[1][0] = true; // round 2, worker 0
+        strag[1][1] = true; // round 2, worker 1
+        strag[2][1] = true; // round 3, worker 1
+        let ok = run_pattern(MSgcScheme::new(p, jobs), &strag);
+        assert!(ok.iter().all(|&x| x), "{ok:?}");
+    }
+
+    #[test]
+    fn reattempt_slots_pick_up_failed_d1() {
+        let p = MSgcParams { n: 4, b: 2, w: 3, lambda: 2 };
+        let mut sch = MSgcScheme::new(p, 4);
+        sch.assign_round(1);
+        // worker 0 straggles in round 1 → its slot-0 first attempt for
+        // job 1 (chunk 0*(W-1)+0 = 0) failed.
+        sch.commit_round(1, &[false, true, true, true]);
+        sch.assign_round(2);
+        sch.commit_round(2, &all_true(4));
+        // Round 3 = job-1's first re-attempt slot (slot W-1=2): worker 0
+        // should re-attempt chunk 0 instead of the coded unit.
+        let t3 = sch.assign_round(3);
+        match &t3[0].units[2] {
+            WorkUnit::Plain { job: 1, chunk: 0 } => {}
+            other => panic!("expected re-attempt of chunk 0, got {other:?}"),
+        }
+        // worker 1 had no failures → coded unit in slot 2.
+        assert!(matches!(&t3[1].units[2], WorkUnit::Coded { job: 1, .. }));
+        sch.commit_round(3, &all_true(4));
+        // job 1 D1 now complete; needs coded groups by deadline (round 4).
+        sch.assign_round(4);
+        sch.commit_round(4, &all_true(4));
+        assert!(sch.decodable(1));
+    }
+
+    #[test]
+    fn burst_of_b_failures_still_decodes() {
+        // Worker 0 straggles B=2 consecutive rounds within each job's
+        // window; bursty model with λ=1 ≥ 1 distinct straggler.
+        let p = MSgcParams { n: 5, b: 2, w: 4, lambda: 1 };
+        let jobs = 8;
+        let total = jobs + p.delay();
+        let mut strag = vec![vec![false; 5]; total];
+        // a burst at rounds 3-4 (B=2), next burst earliest at round
+        // 3 + W + B - 1… keep just one burst to conform to every window.
+        strag[2][0] = true;
+        strag[3][0] = true;
+        let ok = run_pattern(MSgcScheme::new(p, jobs), &strag);
+        assert!(ok.iter().all(|&x| x), "{ok:?}");
+    }
+
+    #[test]
+    fn lambda_equals_n_all_plain() {
+        // Remark 3.2 / Example F.1(b): n=4, B=1, W=2, λ=4; all workers
+        // straggle in odd rounds; jobs still decode by deadline T=1.
+        let p = MSgcParams { n: 4, b: 1, w: 2, lambda: 4 };
+        assert_eq!(p.delay(), 1);
+        let jobs = 6;
+        let total = jobs + 1;
+        let mut strag = vec![vec![false; 4]; total];
+        for r in (0..total).step_by(2) {
+            strag[r] = vec![true; 4]; // rounds 1,3,5,… all stragglers
+        }
+        let sch = MSgcScheme::new(p, jobs);
+        // no coded groups at λ=n
+        assert!(sch.ledgers[0].coded_need.is_empty());
+        let ok = run_pattern(sch, &strag);
+        assert!(ok.iter().all(|&x| x), "{ok:?}");
+    }
+
+    #[test]
+    fn too_many_stragglers_fails_at_deadline() {
+        // Worker 0 straggles B+1 rounds in a job's window — exceeds the
+        // re-attempt capacity; that job's D1 part cannot finish on time.
+        let p = MSgcParams { n: 4, b: 1, w: 3, lambda: 1 };
+        let jobs = 4;
+        let total = jobs + p.delay();
+        let mut strag = vec![vec![false; 4]; total];
+        // job 1's window is rounds 1..=3 (W-1+B = 3 slots): fail worker 0
+        // in rounds 1 and 3 → first attempt and the only re-attempt die.
+        strag[0][0] = true;
+        strag[2][0] = true;
+        let ok = run_pattern(MSgcScheme::new(p, jobs), &strag);
+        assert!(!ok[0], "job 1 must miss its deadline under a non-conforming pattern");
+    }
+
+    #[test]
+    fn rep_variant_thresholds() {
+        // n=4, λ=1, (λ+1)|n → 2 rep-groups per D2 group.
+        let p = MSgcParams { n: 4, b: 1, w: 2, lambda: 1 };
+        let sch = MSgcScheme::new_rep(p, 2);
+        sch.spec().validate();
+        assert_eq!(sch.ledgers[0].coded_need, vec![1, 1]);
+        // all workers respond → decodes
+        let mut sch = sch;
+        for r in 1..=sch.total_rounds() {
+            sch.assign_round(r);
+            sch.commit_round(r, &all_true(4));
+        }
+        assert!(sch.decodable(1) && sch.decodable(2));
+    }
+
+    #[test]
+    fn task_load_equals_spec_load_every_round() {
+        // The per-round assigned load never exceeds the closed-form L and
+        // equals it for interior rounds with no stragglers.
+        let p = MSgcParams { n: 4, b: 2, w: 3, lambda: 2 };
+        let mut sch = MSgcScheme::new(p, 10);
+        let spec = sch.spec().clone();
+        for r in 1..=sch.total_rounds() {
+            let tasks = sch.assign_round(r);
+            for t in &tasks {
+                let load = spec.task_load(t);
+                assert!(load <= spec.load + 1e-12, "round {r}: load {load} > {}", spec.load);
+                if r > p.delay() && r <= 10 {
+                    assert!((load - spec.load).abs() < 1e-12, "round {r}: {load}");
+                }
+            }
+            let n = spec.n;
+            sch.commit_round(r, &all_true(n));
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Coding schemes: classical GC (Sec. 3.1), SR-SGC (Sec. 3.2),
+//! M-SGC (Sec. 3.3), the uncoded baseline, and the Appendix-F bounds.
+
+pub mod bounds;
+pub mod gc;
+pub mod m_sgc;
+pub mod scheme;
+pub mod sr_sgc;
+pub mod uncoded;
+
+pub use gc::{GcCode, GcRepScheme, GcScheme};
+pub use m_sgc::{MSgcParams, MSgcScheme};
+pub use scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+pub use sr_sgc::{SrSgcParams, SrSgcScheme};
+pub use uncoded::UncodedScheme;
+
+/// Which scheme to instantiate (CLI / probe / bench surface).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    Gc { s: usize },
+    GcRep { s: usize },
+    SrSgc { b: usize, w: usize, lambda: usize },
+    SrSgcRep { b: usize, w: usize, lambda: usize },
+    MSgc { b: usize, w: usize, lambda: usize },
+    MSgcRep { b: usize, w: usize, lambda: usize },
+    Uncoded,
+}
+
+/// Scheme configuration: kind + cluster size.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SchemeConfig {
+    pub n: usize,
+    pub kind: SchemeKind,
+}
+
+impl SchemeConfig {
+    pub fn gc(n: usize, s: usize) -> Self {
+        SchemeConfig { n, kind: SchemeKind::Gc { s } }
+    }
+
+    pub fn gc_rep(n: usize, s: usize) -> Self {
+        SchemeConfig { n, kind: SchemeKind::GcRep { s } }
+    }
+
+    pub fn sr_sgc(n: usize, b: usize, w: usize, lambda: usize) -> Self {
+        SchemeConfig { n, kind: SchemeKind::SrSgc { b, w, lambda } }
+    }
+
+    pub fn msgc(n: usize, b: usize, w: usize, lambda: usize) -> Self {
+        SchemeConfig { n, kind: SchemeKind::MSgc { b, w, lambda } }
+    }
+
+    pub fn uncoded(n: usize) -> Self {
+        SchemeConfig { n, kind: SchemeKind::Uncoded }
+    }
+
+    /// Normalized per-worker load of the configured scheme.
+    pub fn load(&self) -> f64 {
+        match &self.kind {
+            SchemeKind::Gc { s } | SchemeKind::GcRep { s } => bounds::gc_load(self.n, *s),
+            SchemeKind::SrSgc { b, w, lambda } | SchemeKind::SrSgcRep { b, w, lambda } => {
+                bounds::sr_sgc_load(self.n, *b, *w, *lambda)
+            }
+            SchemeKind::MSgc { b, w, lambda } | SchemeKind::MSgcRep { b, w, lambda } => {
+                bounds::m_sgc_load(self.n, *b, *w, *lambda)
+            }
+            SchemeKind::Uncoded => 1.0 / self.n as f64,
+        }
+    }
+
+    /// Decode delay `T` of the configured scheme.
+    pub fn delay(&self) -> usize {
+        match &self.kind {
+            SchemeKind::Gc { .. } | SchemeKind::GcRep { .. } | SchemeKind::Uncoded => 0,
+            SchemeKind::SrSgc { b, .. } | SchemeKind::SrSgcRep { b, .. } => *b,
+            SchemeKind::MSgc { b, w, .. } | SchemeKind::MSgcRep { b, w, .. } => w - 2 + b,
+        }
+    }
+
+    /// Instantiate scheme state for a run of `jobs` jobs.
+    pub fn build(&self, jobs: usize) -> Box<dyn Scheme> {
+        match &self.kind {
+            SchemeKind::Gc { s } => Box::new(GcScheme::new(self.n, *s, jobs)),
+            SchemeKind::GcRep { s } => Box::new(GcRepScheme::new(self.n, *s, jobs)),
+            SchemeKind::SrSgc { b, w, lambda } => Box::new(SrSgcScheme::new(
+                SrSgcParams { n: self.n, b: *b, w: *w, lambda: *lambda },
+                jobs,
+            )),
+            SchemeKind::SrSgcRep { b, w, lambda } => Box::new(SrSgcScheme::new_rep(
+                SrSgcParams { n: self.n, b: *b, w: *w, lambda: *lambda },
+                jobs,
+            )),
+            SchemeKind::MSgc { b, w, lambda } => Box::new(MSgcScheme::new(
+                MSgcParams { n: self.n, b: *b, w: *w, lambda: *lambda },
+                jobs,
+            )),
+            SchemeKind::MSgcRep { b, w, lambda } => Box::new(MSgcScheme::new_rep(
+                MSgcParams { n: self.n, b: *b, w: *w, lambda: *lambda },
+                jobs,
+            )),
+            SchemeKind::Uncoded => Box::new(UncodedScheme::new(self.n, jobs)),
+        }
+    }
+
+    /// Short display label ("m-sgc(1,2,27)" style, used in reports).
+    pub fn label(&self) -> String {
+        match &self.kind {
+            SchemeKind::Gc { s } => format!("gc(s={s})"),
+            SchemeKind::GcRep { s } => format!("gc-rep(s={s})"),
+            SchemeKind::SrSgc { b, w, lambda } => format!("sr-sgc({b},{w},{lambda})"),
+            SchemeKind::SrSgcRep { b, w, lambda } => format!("sr-sgc-rep({b},{w},{lambda})"),
+            SchemeKind::MSgc { b, w, lambda } => format!("m-sgc({b},{w},{lambda})"),
+            SchemeKind::MSgcRep { b, w, lambda } => format!("m-sgc-rep({b},{w},{lambda})"),
+            SchemeKind::Uncoded => "uncoded".to_string(),
+        }
+    }
+
+    /// Parse a CLI spec like `gc:15`, `sr-sgc:2,3,23`, `m-sgc:1,2,27`,
+    /// `uncoded`.
+    pub fn parse(n: usize, spec: &str) -> anyhow::Result<Self> {
+        let (kind, rest) = match spec.split_once(':') {
+            Some((k, r)) => (k, r),
+            None => (spec, ""),
+        };
+        let nums: Vec<usize> = if rest.is_empty() {
+            Vec::new()
+        } else {
+            rest.split(',')
+                .map(|t| t.trim().parse::<usize>())
+                .collect::<Result<_, _>>()
+                .map_err(|e| anyhow::anyhow!("bad scheme spec {spec:?}: {e}"))?
+        };
+        let need = |k: usize| -> anyhow::Result<()> {
+            if nums.len() != k {
+                anyhow::bail!("scheme {kind:?} needs {k} parameters, got {}", nums.len());
+            }
+            Ok(())
+        };
+        let kind = match kind {
+            "gc" => {
+                need(1)?;
+                SchemeKind::Gc { s: nums[0] }
+            }
+            "gc-rep" => {
+                need(1)?;
+                SchemeKind::GcRep { s: nums[0] }
+            }
+            "sr-sgc" => {
+                need(3)?;
+                SchemeKind::SrSgc { b: nums[0], w: nums[1], lambda: nums[2] }
+            }
+            "sr-sgc-rep" => {
+                need(3)?;
+                SchemeKind::SrSgcRep { b: nums[0], w: nums[1], lambda: nums[2] }
+            }
+            "m-sgc" => {
+                need(3)?;
+                SchemeKind::MSgc { b: nums[0], w: nums[1], lambda: nums[2] }
+            }
+            "m-sgc-rep" => {
+                need(3)?;
+                SchemeKind::MSgcRep { b: nums[0], w: nums[1], lambda: nums[2] }
+            }
+            "uncoded" | "none" => {
+                need(0)?;
+                SchemeKind::Uncoded
+            }
+            other => anyhow::bail!("unknown scheme {other:?}"),
+        };
+        Ok(SchemeConfig { n, kind })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        let cases = [
+            ("gc:15", SchemeKind::Gc { s: 15 }),
+            ("sr-sgc:2,3,23", SchemeKind::SrSgc { b: 2, w: 3, lambda: 23 }),
+            ("m-sgc:1,2,27", SchemeKind::MSgc { b: 1, w: 2, lambda: 27 }),
+            ("uncoded", SchemeKind::Uncoded),
+        ];
+        for (spec, kind) in cases {
+            let c = SchemeConfig::parse(256, spec).unwrap();
+            assert_eq!(c.kind, kind, "{spec}");
+        }
+        assert!(SchemeConfig::parse(4, "nope:1").is_err());
+        assert!(SchemeConfig::parse(4, "gc:1,2").is_err());
+    }
+
+    #[test]
+    fn table1_loads() {
+        // Table 1 normalized loads at n = 256.
+        let msgc = SchemeConfig::msgc(256, 1, 2, 27);
+        let srsgc = SchemeConfig::sr_sgc(256, 2, 3, 23);
+        let gc = SchemeConfig::gc(256, 15);
+        let unc = SchemeConfig::uncoded(256);
+        assert!((msgc.load() - 0.00754).abs() < 1e-4); // paper: 0.008
+        assert!((srsgc.load() - 0.0508).abs() < 1e-3); // paper: 0.051
+        assert!((gc.load() - 0.0625).abs() < 1e-12); // paper: 0.062
+        assert!((unc.load() - 0.0039).abs() < 1e-4); // paper: 0.004
+        // delays
+        assert_eq!(msgc.delay(), 1);
+        assert_eq!(srsgc.delay(), 2);
+        assert_eq!(gc.delay(), 0);
+    }
+
+    #[test]
+    fn build_produces_matching_specs() {
+        for spec in ["gc:3", "gc-rep:3", "sr-sgc:1,2,4", "m-sgc:1,2,4", "uncoded"] {
+            let c = SchemeConfig::parse(8, spec).unwrap();
+            let s = c.build(10);
+            assert_eq!(s.spec().n, 8);
+            assert_eq!(s.spec().delay, c.delay(), "{spec}");
+            assert!((s.spec().load - c.load()).abs() < 1e-12, "{spec}");
+            s.spec().validate();
+        }
+    }
+}

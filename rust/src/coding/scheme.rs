@@ -1,0 +1,249 @@
+//! The sequential-gradient-coding scheme abstraction (Sec. 2 of the paper).
+//!
+//! A scheme answers three questions for the master:
+//!
+//! 1. **Placement** — how the dataset is chunked and which chunks each
+//!    worker stores (`SchemeSpec`).
+//! 2. **Assignment** — which work units each worker attempts in round `t`,
+//!    possibly depending on past straggler outcomes
+//!    ([`Scheme::assign_round`]).
+//! 3. **Decodability** — given the responses recorded so far, can job `t`
+//!    be decoded ([`Scheme::decodable`])?
+//!
+//! Work units are *metadata*: the simulator only needs to know what was
+//! attempted and what arrived; the real-compute trainer additionally maps
+//! units to PJRT executions and numeric encode/decode (see
+//! [`crate::coding::gc::GcCode`] and [`crate::train`]).
+
+use std::collections::HashSet;
+
+/// One unit of work inside a worker's task for a round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkUnit {
+    /// Trivial unit (job index out of `[1:J]`) — costs nothing.
+    Noop,
+    /// Compute the partial gradient `g_chunk(job)` and return it raw.
+    Plain { job: usize, chunk: usize },
+    /// Compute partial gradients for every chunk in `chunks` and return
+    /// their GC-encoded linear combination `ℓ_{worker,group}(job)`.
+    /// `row` selects the encoding row in the scheme's GC coefficient
+    /// matrix (== worker index for all schemes in the paper).
+    Coded { job: usize, group: usize, row: usize, chunks: Vec<usize> },
+}
+
+impl WorkUnit {
+    /// Job this unit contributes to, if any.
+    pub fn job(&self) -> Option<usize> {
+        match self {
+            WorkUnit::Noop => None,
+            WorkUnit::Plain { job, .. } | WorkUnit::Coded { job, .. } => Some(*job),
+        }
+    }
+}
+
+/// Task assigned to one worker for one round (a sequence of mini-tasks; a
+/// single-unit task for GC/SR-SGC, `W-1+B` units for M-SGC).
+#[derive(Clone, Debug, Default)]
+pub struct TaskDesc {
+    pub units: Vec<WorkUnit>,
+}
+
+impl TaskDesc {
+    pub fn noop() -> Self {
+        TaskDesc { units: vec![WorkUnit::Noop] }
+    }
+
+    pub fn is_trivial(&self) -> bool {
+        self.units.iter().all(|u| matches!(u, WorkUnit::Noop))
+    }
+}
+
+/// Which deterministic straggler models a scheme was designed against —
+/// drives the master's wait-out conformance repair (Remark 2.3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToleranceSpec {
+    /// Classical GC: at most `s` stragglers per round.
+    PerRound { s: usize },
+    /// SR-SGC (Prop 3.1): within every window of `W` rounds, either the
+    /// `(B,W,λ)`-bursty constraints hold or there are at most `s`
+    /// stragglers per round.
+    BurstyOrPerRound { b: usize, w: usize, lambda: usize, s: usize },
+    /// M-SGC (Prop 3.2): the pattern conforms to the `(B,W,λ)`-bursty
+    /// model or to the `(N=B, W'=W+B-1, λ'=λ)`-arbitrary model.
+    BurstyOrArbitrary { b: usize, w: usize, lambda: usize },
+    /// Uncoded: no stragglers tolerated (master waits for everyone).
+    None,
+}
+
+/// Static description of a scheme instance.
+#[derive(Clone, Debug)]
+pub struct SchemeSpec {
+    pub name: String,
+    /// Number of workers.
+    pub n: usize,
+    /// Decoding delay `T`: job `t` must decode by end of round `t + T`.
+    pub delay: usize,
+    /// Normalized per-worker per-round computational load `L`.
+    pub load: f64,
+    /// Number of data chunks `η`.
+    pub num_chunks: usize,
+    /// Fraction of the dataset in each chunk (sums to 1).
+    pub chunk_sizes: Vec<f64>,
+    /// `D_i` — chunk ids stored at worker `i`.
+    pub placement: Vec<Vec<usize>>,
+    /// Design straggler model for conformance repair.
+    pub tolerance: ToleranceSpec,
+}
+
+impl SchemeSpec {
+    /// Sanity-check internal consistency (used by tests).
+    pub fn validate(&self) {
+        assert_eq!(self.chunk_sizes.len(), self.num_chunks);
+        let total: f64 = self.chunk_sizes.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "chunk sizes sum to {total}");
+        assert_eq!(self.placement.len(), self.n);
+        for d in &self.placement {
+            for &c in d {
+                assert!(c < self.num_chunks);
+            }
+        }
+    }
+
+    /// Per-round normalized load implied by a task (sum of chunk fractions
+    /// the worker touches).
+    pub fn task_load(&self, task: &TaskDesc) -> f64 {
+        task.units
+            .iter()
+            .map(|u| match u {
+                WorkUnit::Noop => 0.0,
+                WorkUnit::Plain { chunk, .. } => self.chunk_sizes[*chunk],
+                WorkUnit::Coded { chunks, .. } => {
+                    chunks.iter().map(|&c| self.chunk_sizes[c]).sum()
+                }
+            })
+            .sum()
+    }
+}
+
+/// What a decoded job still needs. Kept per job by every scheme through
+/// the shared [`JobLedger`].
+#[derive(Clone, Debug)]
+pub struct JobLedger {
+    /// Plain chunks still missing.
+    pub plain_missing: HashSet<usize>,
+    /// Per coded group: distinct workers whose ℓ has arrived.
+    pub coded_got: Vec<HashSet<usize>>,
+    /// Per coded group: how many distinct results decode requires
+    /// (`n - s`), or for replication groups, `1`.
+    pub coded_need: Vec<usize>,
+}
+
+impl JobLedger {
+    pub fn complete(&self) -> bool {
+        self.plain_missing.is_empty()
+            && self.coded_got.iter().zip(&self.coded_need).all(|(g, &k)| g.len() >= k)
+    }
+
+    /// Apply one delivered unit from `worker`.
+    pub fn deliver(&mut self, worker: usize, unit: &WorkUnit) {
+        match unit {
+            WorkUnit::Noop => {}
+            WorkUnit::Plain { chunk, .. } => {
+                self.plain_missing.remove(chunk);
+            }
+            WorkUnit::Coded { group, .. } => {
+                self.coded_got[*group].insert(worker);
+            }
+        }
+    }
+}
+
+/// Core scheme interface used by the coordinator and the simulator.
+///
+/// Protocol: for each round `r = 1, 2, …` in order, the master calls
+/// [`assign_round`](Scheme::assign_round), executes the tasks, then calls
+/// [`commit_round`](Scheme::commit_round) with the final responder set
+/// (after any wait-outs). [`decodable_with`](Scheme::decodable_with)
+/// supports the wait-out policy's tentative evaluation before a commit.
+pub trait Scheme: Send {
+    fn spec(&self) -> &SchemeSpec;
+
+    /// Produce task assignments for round `r` (1-based). Must be called in
+    /// round order, after the previous round was committed.
+    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc>;
+
+    /// Record the final responder set for round `r`.
+    fn commit_round(&mut self, r: usize, responded: &[bool]);
+
+    /// Is job `t` decodable from everything committed so far?
+    fn decodable(&self, job: usize) -> bool;
+
+    /// Delivery ledger of a job (what arrived, what is still needed) —
+    /// the master uses it to derive the decode workload (Table 4).
+    fn ledger(&self, job: usize) -> &JobLedger;
+
+    /// Would job `t` be decodable if, additionally, round `r`'s responders
+    /// were `responded`? (`r` must be the currently assigned, uncommitted
+    /// round.)
+    fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool;
+
+    /// Number of jobs `J` this instance was constructed for.
+    fn jobs(&self) -> usize;
+
+    /// Total rounds `J + T`.
+    fn total_rounds(&self) -> usize {
+        self.jobs() + self.spec().delay
+    }
+
+    /// The job whose decode deadline is the end of round `r`, if in range.
+    fn deadline_job(&self, r: usize) -> Option<usize> {
+        let t = r as isize - self.spec().delay as isize;
+        (t >= 1 && t as usize <= self.jobs()).then_some(t as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_ledger_plain_and_coded() {
+        let mut l = JobLedger {
+            plain_missing: [0usize, 1].into_iter().collect(),
+            coded_got: vec![HashSet::new()],
+            coded_need: vec![2],
+        };
+        assert!(!l.complete());
+        l.deliver(0, &WorkUnit::Plain { job: 1, chunk: 0 });
+        l.deliver(1, &WorkUnit::Plain { job: 1, chunk: 1 });
+        assert!(!l.complete());
+        l.deliver(0, &WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: vec![] });
+        l.deliver(0, &WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: vec![] }); // dup worker
+        assert!(!l.complete());
+        l.deliver(3, &WorkUnit::Coded { job: 1, group: 0, row: 3, chunks: vec![] });
+        assert!(l.complete());
+    }
+
+    #[test]
+    fn task_load_sums_chunks() {
+        let spec = SchemeSpec {
+            name: "t".into(),
+            n: 2,
+            delay: 0,
+            load: 0.75,
+            num_chunks: 4,
+            chunk_sizes: vec![0.25; 4],
+            placement: vec![vec![0, 1, 2], vec![1, 2, 3]],
+            tolerance: ToleranceSpec::None,
+        };
+        spec.validate();
+        let task = TaskDesc {
+            units: vec![
+                WorkUnit::Plain { job: 1, chunk: 0 },
+                WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: vec![1, 2] },
+                WorkUnit::Noop,
+            ],
+        };
+        assert!((spec.task_load(&task) - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,419 @@
+//! Selective-Reattempt Sequential Gradient Coding (SR-SGC) — Sec. 3.2.
+//!
+//! Base scheme is `(n, s)`-GC with `s = ⌈Bλ / (W-1+B)⌉`; whenever fewer
+//! than `n-s` task results for job `t-B` arrived in round `t-B`, the
+//! minimum necessary number of those tasks is re-attempted in round `t`
+//! by workers that did not previously return them (Algorithm 1). Delay
+//! `T = B`; load `(s+1)/n`.
+//!
+//! With `(s+1) | n`, the GC-Rep base of Appendix G applies and Algorithm 3
+//! is used instead (`rep = true`): a worker whose *group* result was
+//! already returned never re-attempts.
+
+use super::gc::cyclic_support;
+use super::scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use std::collections::HashSet;
+
+/// SR-SGC design parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SrSgcParams {
+    pub n: usize,
+    pub b: usize,
+    pub w: usize,
+    pub lambda: usize,
+}
+
+impl SrSgcParams {
+    /// `s = ⌈Bλ / (W-1+B)⌉` (Sec. 3.2 design rule).
+    pub fn s(&self) -> usize {
+        (self.b * self.lambda).div_ceil(self.w - 1 + self.b)
+    }
+
+    /// Normalized load `(s+1)/n`.
+    pub fn load(&self) -> f64 {
+        (self.s() + 1) as f64 / self.n as f64
+    }
+
+    pub fn validate(&self) {
+        assert!(self.lambda > 0 && self.lambda <= self.n, "need 0 < λ ≤ n");
+        assert!(self.b > 0, "need B > 0");
+        assert!(self.w > 1 && (self.w - 1) % self.b == 0, "need W = xB + 1, x ≥ 1");
+        assert!(self.s() < self.n, "s must be < n");
+    }
+}
+
+/// SR-SGC scheme state (also covers SR-SGC-Rep when `rep`).
+pub struct SrSgcScheme {
+    spec: SchemeSpec,
+    params: SrSgcParams,
+    s: usize,
+    rep: bool,
+    jobs: usize,
+    ledgers: Vec<JobLedger>,
+    /// Per assigned round: the job each worker's single unit targets
+    /// (`0` = noop). `job_of[r-1][i]`.
+    job_of: Vec<Vec<usize>>,
+    assigned: Vec<Vec<TaskDesc>>,
+    responded: Vec<Vec<bool>>,
+    committed: usize,
+}
+
+impl SrSgcScheme {
+    pub fn new(params: SrSgcParams, jobs: usize) -> Self {
+        Self::build(params, jobs, false)
+    }
+
+    /// SR-SGC-Rep (Algorithm 3); requires `(s+1) | n`.
+    pub fn new_rep(params: SrSgcParams, jobs: usize) -> Self {
+        assert_eq!(params.n % (params.s() + 1), 0, "SR-SGC-Rep needs (s+1) | n");
+        Self::build(params, jobs, true)
+    }
+
+    fn build(params: SrSgcParams, jobs: usize, rep: bool) -> Self {
+        params.validate();
+        let n = params.n;
+        let s = params.s();
+        let placement: Vec<Vec<usize>> = if rep {
+            (0..n).map(|i| Self::rep_group_chunks(i / (s + 1), s)).collect()
+        } else {
+            (0..n).map(|i| cyclic_support(i, s, n)).collect()
+        };
+        let spec = SchemeSpec {
+            name: format!(
+                "sr-sgc{}(n={n},B={},W={},λ={},s={s})",
+                if rep { "-rep" } else { "" },
+                params.b,
+                params.w,
+                params.lambda
+            ),
+            n,
+            delay: params.b,
+            load: params.load(),
+            num_chunks: n,
+            chunk_sizes: vec![1.0 / n as f64; n],
+            placement,
+            tolerance: ToleranceSpec::BurstyOrPerRound {
+                b: params.b,
+                w: params.w,
+                lambda: params.lambda,
+                s,
+            },
+        };
+        let ledgers = (0..jobs)
+            .map(|_| {
+                if rep {
+                    let groups = n / (s + 1);
+                    JobLedger {
+                        plain_missing: HashSet::new(),
+                        coded_got: vec![HashSet::new(); groups],
+                        coded_need: vec![1; groups],
+                    }
+                } else {
+                    JobLedger {
+                        plain_missing: HashSet::new(),
+                        coded_got: vec![HashSet::new()],
+                        coded_need: vec![n - s],
+                    }
+                }
+            })
+            .collect();
+        SrSgcScheme {
+            spec,
+            params,
+            s,
+            rep,
+            jobs,
+            ledgers,
+            job_of: Vec::new(),
+            assigned: Vec::new(),
+            responded: Vec::new(),
+            committed: 0,
+        }
+    }
+
+    pub fn params(&self) -> SrSgcParams {
+        self.params
+    }
+
+    /// Effective `s` of the base GC code.
+    pub fn s_value(&self) -> usize {
+        self.s
+    }
+
+    fn rep_group_chunks(g: usize, s: usize) -> Vec<usize> {
+        (g * (s + 1)..(g + 1) * (s + 1)).collect()
+    }
+
+    /// `N(t)`: number of task results for job `t` returned in round `t`.
+    /// By the paper's convention, `N(t') = n` for `t' ∉ [1:J]`.
+    fn n_of(&self, t: isize) -> usize {
+        if t < 1 || t as usize > self.jobs {
+            return self.spec.n;
+        }
+        let t = t as usize;
+        if t > self.responded.len() {
+            return 0; // round t not yet played
+        }
+        (0..self.spec.n)
+            .filter(|&i| self.job_of[t - 1][i] == t && self.responded[t - 1][i])
+            .count()
+    }
+
+    /// Did worker `i` return its task result for job `t-B` in round `t-B`?
+    fn returned_in_round(&self, worker: usize, job: usize) -> bool {
+        if job < 1 || job > self.responded.len() {
+            return false;
+        }
+        self.job_of[job - 1][worker] == job && self.responded[job - 1][worker]
+    }
+
+    /// Did any worker of `worker`'s group return the group result for
+    /// `job` in round `job`? (Rep variant, Algorithm 3.)
+    fn group_returned_in_round(&self, worker: usize, job: usize) -> bool {
+        if job < 1 || job > self.responded.len() {
+            return false;
+        }
+        let g = worker / (self.s + 1);
+        (g * (self.s + 1)..(g + 1) * (self.s + 1))
+            .any(|m| self.job_of[job - 1][m] == job && self.responded[job - 1][m])
+    }
+
+    fn unit_for(&self, worker: usize, job: usize) -> WorkUnit {
+        if job < 1 || job > self.jobs {
+            return WorkUnit::Noop;
+        }
+        if self.rep {
+            let g = worker / (self.s + 1);
+            WorkUnit::Coded { job, group: g, row: worker, chunks: Self::rep_group_chunks(g, self.s) }
+        } else {
+            WorkUnit::Coded {
+                job,
+                group: 0,
+                row: worker,
+                chunks: cyclic_support(worker, self.s, self.spec.n),
+            }
+        }
+    }
+}
+
+impl Scheme for SrSgcScheme {
+    fn spec(&self) -> &SchemeSpec {
+        &self.spec
+    }
+
+    fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Algorithm 1 (Algorithm 3 when `rep`).
+    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
+        assert_eq!(r, self.assigned.len() + 1, "rounds must be assigned in order");
+        assert_eq!(self.committed, self.assigned.len(), "previous round not committed");
+        let n = self.spec.n;
+        let old = r as isize - self.params.b as isize; // job t-B
+        let mut delta = self.n_of(old);
+        let mut jobs_r = vec![0usize; n];
+        for i in 0..n {
+            let reattempt_old = if old >= 1 && (old as usize) <= self.jobs {
+                let old = old as usize;
+                if self.rep && self.group_returned_in_round(i, old) {
+                    // Algorithm 3 first branch: group already returned —
+                    // never re-attempt.
+                    false
+                } else {
+                    delta < n - self.s && !self.returned_in_round(i, old)
+                }
+            } else {
+                false
+            };
+            if reattempt_old {
+                jobs_r[i] = old as usize;
+                delta += 1;
+            } else if r >= 1 && r <= self.jobs {
+                jobs_r[i] = r;
+            } else {
+                jobs_r[i] = 0; // noop (round beyond J)
+            }
+        }
+        let tasks: Vec<TaskDesc> = (0..n)
+            .map(|i| TaskDesc { units: vec![self.unit_for(i, jobs_r[i])] })
+            .collect();
+        self.job_of.push(jobs_r);
+        self.assigned.push(tasks.clone());
+        tasks
+    }
+
+    fn commit_round(&mut self, r: usize, responded: &[bool]) {
+        assert_eq!(r, self.committed + 1);
+        assert_eq!(responded.len(), self.spec.n);
+        for (w, task) in self.assigned[r - 1].iter().enumerate() {
+            if !responded[w] {
+                continue;
+            }
+            for unit in &task.units {
+                if let Some(job) = unit.job() {
+                    self.ledgers[job - 1].deliver(w, unit);
+                }
+            }
+        }
+        self.responded.push(responded.to_vec());
+        // Committed rounds are never read again — drop their task
+        // storage so long runs stay O(window), not O(rounds).
+        self.assigned[r - 1] = Vec::new();
+        self.committed = r;
+    }
+
+    fn decodable(&self, job: usize) -> bool {
+        self.ledgers[job - 1].complete()
+    }
+
+    fn ledger(&self, job: usize) -> &JobLedger {
+        &self.ledgers[job - 1]
+    }
+
+    fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
+        debug_assert_eq!(r, self.committed + 1);
+        let mut ledger = self.ledgers[job - 1].clone();
+        for (w, task) in self.assigned[r - 1].iter().enumerate() {
+            if !responded[w] {
+                continue;
+            }
+            for unit in &task.units {
+                if unit.job() == Some(job) {
+                    ledger.deliver(w, unit);
+                }
+            }
+        }
+        ledger.complete()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_true(n: usize) -> Vec<bool> {
+        vec![true; n]
+    }
+
+    #[test]
+    fn s_formula_matches_paper_table1() {
+        // Table 1: SR-SGC with B=2, W=3, λ=23 has s = 12 at n = 256.
+        let p = SrSgcParams { n: 256, b: 2, w: 3, lambda: 23 };
+        p.validate();
+        assert_eq!(p.s(), 12);
+        assert!((p.load() - 13.0 / 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_stragglers_behaves_like_gc() {
+        let p = SrSgcParams { n: 8, b: 1, w: 2, lambda: 3 };
+        assert_eq!(p.s(), 2);
+        let mut sch = SrSgcScheme::new(p, 5);
+        sch.spec().validate();
+        for r in 1..=5 {
+            let tasks = sch.assign_round(r);
+            // all units target job r
+            for t in &tasks {
+                assert_eq!(t.units[0].job(), Some(r));
+            }
+            sch.commit_round(r, &all_true(8));
+            assert!(sch.decodable(r), "job {r} should decode in its own round");
+        }
+    }
+
+    #[test]
+    fn reattempts_after_burst() {
+        // n=8, B=1, W=2, λ=3 → s=2. Round 1: 4 stragglers (> s) —
+        // round 2 must re-attempt exactly (4 - s) = 2 job-1 tasks by
+        // workers that failed in round 1.
+        let p = SrSgcParams { n: 8, b: 1, w: 2, lambda: 3 };
+        let mut sch = SrSgcScheme::new(p, 3);
+        sch.assign_round(1);
+        let resp1 = vec![false, false, false, false, true, true, true, true];
+        assert!(!sch.decodable_with(1, 1, &resp1));
+        sch.commit_round(1, &resp1);
+        assert!(!sch.decodable(1));
+
+        let tasks2 = sch.assign_round(2);
+        let job1_reattempts: Vec<usize> = (0..8)
+            .filter(|&i| tasks2[i].units[0].job() == Some(1))
+            .collect();
+        assert_eq!(job1_reattempts, vec![0, 1], "minimum re-attempts by failed workers");
+        // per the bursty model round-2 workers 0,1 are now non-stragglers
+        sch.commit_round(2, &all_true(8));
+        assert!(sch.decodable(1), "job 1 decodes with delay B=1");
+        // job 2 got only 6 results in round 2 (= n - s) → decodable too
+        assert!(sch.decodable(2));
+    }
+
+    #[test]
+    fn cascading_reattempts_resolve() {
+        // Proof-of-Prop-3.1 shape: λ0 > s stragglers at t', then λ1 more
+        // at t'+B; job t'+B finishes at t'+2B.
+        let p = SrSgcParams { n: 8, b: 1, w: 3, lambda: 4 }; // s = ceil(4/3) = 2
+        assert_eq!(p.s(), 2);
+        let mut sch = SrSgcScheme::new(p, 4);
+        sch.assign_round(1);
+        // λ0 = 3 stragglers in round 1: workers 0,1,2
+        let r1 = vec![false, false, false, true, true, true, true, true];
+        sch.commit_round(1, &r1);
+        assert!(!sch.decodable(1));
+        let t2 = sch.assign_round(2);
+        // 1 re-attempt (λ0 - s = 1) for job 1 by worker 0
+        assert_eq!(t2[0].units[0].job(), Some(1));
+        assert_eq!(t2[1].units[0].job(), Some(2));
+        // λ1 = 2 stragglers in round 2: workers 3,4 (distinct from before)
+        let r2 = vec![true, true, true, false, false, true, true, true];
+        sch.commit_round(2, &r2);
+        assert!(sch.decodable(1), "job 1 done at round 2 (delay B)");
+        // job 2: results from workers 1,2,5,6,7 = 5 < n-s=6 → pending
+        assert!(!sch.decodable(2));
+        let t3 = sch.assign_round(3);
+        // need 1 more job-2 result; by workers that did not return it
+        let job2_workers: Vec<usize> =
+            (0..8).filter(|&i| t3[i].units[0].job() == Some(2)).collect();
+        assert_eq!(job2_workers.len(), 1);
+        assert!([0usize, 3, 4].contains(&job2_workers[0]));
+        sch.commit_round(3, &all_true(8));
+        assert!(sch.decodable(2));
+        assert!(sch.decodable(3));
+    }
+
+    #[test]
+    fn rep_variant_group_shortcut() {
+        // n=6, s=2 (B=1, W=2, λ=3 → s=2), groups {0,1,2} {3,4,5}.
+        let p = SrSgcParams { n: 6, b: 1, w: 2, lambda: 3 };
+        assert_eq!(p.s(), 2);
+        let mut sch = SrSgcScheme::new_rep(p, 2);
+        sch.assign_round(1);
+        // group 0: worker 0 responds; group 1: all straggle.
+        let r1 = vec![true, false, false, false, false, false];
+        assert!(!sch.decodable_with(1, 1, &r1));
+        sch.commit_round(1, &r1);
+        let t2 = sch.assign_round(2);
+        // workers 1,2 (group 0) must NOT re-attempt job 1 (their group
+        // result was returned); some group-1 workers must.
+        assert_eq!(t2[1].units[0].job(), Some(2));
+        assert_eq!(t2[2].units[0].job(), Some(2));
+        let reattempts: Vec<usize> =
+            (0..6).filter(|&i| t2[i].units[0].job() == Some(1)).collect();
+        assert!(!reattempts.is_empty());
+        assert!(reattempts.iter().all(|&i| i >= 3));
+        sch.commit_round(2, &all_true(6));
+        assert!(sch.decodable(1));
+    }
+
+    #[test]
+    fn tail_rounds_are_noop_except_reattempts() {
+        let p = SrSgcParams { n: 4, b: 1, w: 2, lambda: 2 };
+        let mut sch = SrSgcScheme::new(p, 2);
+        sch.assign_round(1);
+        sch.commit_round(1, &all_true(4));
+        sch.assign_round(2);
+        sch.commit_round(2, &all_true(4));
+        // round 3 = J + T: no pending re-attempts → all noop
+        let t3 = sch.assign_round(3);
+        assert!(t3.iter().all(|t| t.is_trivial()));
+    }
+}

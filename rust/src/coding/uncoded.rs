@@ -1,0 +1,122 @@
+//! The "No Coding" baseline of Table 1: the dataset is split into `n`
+//! equal chunks, worker `i` computes only chunk `i`, and the master must
+//! wait for **every** worker in every round (no straggler tolerance).
+
+use super::scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use std::collections::HashSet;
+
+/// Uncoded distributed gradient descent.
+pub struct UncodedScheme {
+    spec: SchemeSpec,
+    jobs: usize,
+    ledgers: Vec<JobLedger>,
+    assigned: Vec<Vec<TaskDesc>>,
+    committed: usize,
+}
+
+impl UncodedScheme {
+    pub fn new(n: usize, jobs: usize) -> Self {
+        let spec = SchemeSpec {
+            name: format!("uncoded(n={n})"),
+            n,
+            delay: 0,
+            load: 1.0 / n as f64,
+            num_chunks: n,
+            chunk_sizes: vec![1.0 / n as f64; n],
+            placement: (0..n).map(|i| vec![i]).collect(),
+            tolerance: ToleranceSpec::None,
+        };
+        let ledgers = (0..jobs)
+            .map(|_| JobLedger {
+                plain_missing: (0..n).collect::<HashSet<_>>(),
+                coded_got: Vec::new(),
+                coded_need: Vec::new(),
+            })
+            .collect();
+        UncodedScheme { spec, jobs, ledgers, assigned: Vec::new(), committed: 0 }
+    }
+}
+
+impl Scheme for UncodedScheme {
+    fn spec(&self) -> &SchemeSpec {
+        &self.spec
+    }
+
+    fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
+        assert_eq!(r, self.assigned.len() + 1);
+        assert_eq!(self.committed, self.assigned.len());
+        let tasks: Vec<TaskDesc> = (0..self.spec.n)
+            .map(|i| {
+                if r >= 1 && r <= self.jobs {
+                    TaskDesc { units: vec![WorkUnit::Plain { job: r, chunk: i }] }
+                } else {
+                    TaskDesc::noop()
+                }
+            })
+            .collect();
+        self.assigned.push(tasks.clone());
+        tasks
+    }
+
+    fn commit_round(&mut self, r: usize, responded: &[bool]) {
+        assert_eq!(r, self.committed + 1);
+        for (w, task) in self.assigned[r - 1].iter().enumerate() {
+            if !responded[w] {
+                continue;
+            }
+            for unit in &task.units {
+                if let Some(job) = unit.job() {
+                    self.ledgers[job - 1].deliver(w, unit);
+                }
+            }
+        }
+        // Committed rounds are never read again — drop their task
+        // storage so long runs stay O(window), not O(rounds).
+        self.assigned[r - 1] = Vec::new();
+        self.committed = r;
+    }
+
+    fn decodable(&self, job: usize) -> bool {
+        self.ledgers[job - 1].complete()
+    }
+
+    fn ledger(&self, job: usize) -> &JobLedger {
+        &self.ledgers[job - 1]
+    }
+
+    fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
+        debug_assert_eq!(r, self.committed + 1);
+        let mut ledger = self.ledgers[job - 1].clone();
+        for (w, task) in self.assigned[r - 1].iter().enumerate() {
+            if !responded[w] {
+                continue;
+            }
+            for unit in &task.units {
+                if unit.job() == Some(job) {
+                    ledger.deliver(w, unit);
+                }
+            }
+        }
+        ledger.complete()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_every_worker() {
+        let mut sch = UncodedScheme::new(4, 2);
+        sch.spec().validate();
+        sch.assign_round(1);
+        assert!(!sch.decodable_with(1, 1, &[true, true, true, false]));
+        assert!(sch.decodable_with(1, 1, &[true; 4]));
+        sch.commit_round(1, &[true, true, true, false]);
+        assert!(!sch.decodable(1));
+    }
+}

@@ -1,0 +1,173 @@
+//! Run metrics: everything the paper's tables and figures are built from.
+
+use crate::straggler::Pattern;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Per-round record.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Wall-clock duration of the round (seconds).
+    pub duration_s: f64,
+    /// Fastest worker's completion time κ(t).
+    pub kappa_s: f64,
+    /// Workers beyond the μ-cutoff before any wait-out.
+    pub detected_stragglers: usize,
+    /// Workers admitted past the cutoff by the wait-out policy.
+    pub waited_out: usize,
+    /// Decode work performed at the end of this round (seconds).
+    pub decode_s: f64,
+    /// Jobs first decodable at the end of this round.
+    pub jobs_completed: Vec<usize>,
+}
+
+/// Full report of one run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub scheme: String,
+    pub load: f64,
+    pub delay: usize,
+    pub jobs: usize,
+    pub total_runtime_s: f64,
+    pub rounds: Vec<RoundRecord>,
+    /// Wall-clock time at which each job became decodable (`f64::NAN` if
+    /// never — only possible under `WaitPolicy::DeadlineDecode`).
+    pub job_completion_s: Vec<f64>,
+    /// Jobs that missed their `t + T` deadline.
+    pub deadline_violations: usize,
+    /// Ground-truth straggler states per round (simulator-provided).
+    pub true_pattern: Pattern,
+    /// Effective straggler pattern after wait-outs (what the scheme saw).
+    pub effective_pattern: Pattern,
+    /// Stragglers detected by the μ-rule before wait-outs.
+    pub detected_pattern: Pattern,
+}
+
+impl RunReport {
+    /// Number of rounds where the wait-out policy extended the round.
+    pub fn waitout_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.waited_out > 0).count()
+    }
+
+    /// Mean round duration.
+    pub fn mean_round_s(&self) -> f64 {
+        stats::mean(&self.rounds.iter().map(|r| r.duration_s).collect::<Vec<_>>())
+    }
+
+    /// Cumulative (time, jobs-completed) curve — Fig. 2(a).
+    pub fn completion_curve(&self) -> Vec<(f64, usize)> {
+        let mut curve = Vec::with_capacity(self.rounds.len());
+        let mut clock = 0.0;
+        let mut done = 0usize;
+        for r in &self.rounds {
+            clock += r.duration_s;
+            done += r.jobs_completed.len();
+            curve.push((clock, done));
+        }
+        curve
+    }
+
+    /// Decode-time summary (Table 4): `(mean, std, max)` in seconds over
+    /// rounds that performed decode work.
+    pub fn decode_stats(&self) -> (f64, f64, f64) {
+        let xs: Vec<f64> =
+            self.rounds.iter().filter(|r| r.decode_s > 0.0).map(|r| r.decode_s).collect();
+        if xs.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        (stats::mean(&xs), stats::std_dev(&xs), stats::max(&xs))
+    }
+
+    /// Fastest round duration (Table 4's "Fastest Round" column).
+    pub fn fastest_round_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.duration_s).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("scheme", self.scheme.as_str())
+            .set("load", self.load)
+            .set("delay", self.delay)
+            .set("jobs", self.jobs)
+            .set("total_runtime_s", self.total_runtime_s)
+            .set("deadline_violations", self.deadline_violations)
+            .set("waitout_rounds", self.waitout_rounds())
+            .set("mean_round_s", self.mean_round_s())
+            .set(
+                "round_durations_s",
+                self.rounds.iter().map(|r| r.duration_s).collect::<Vec<_>>(),
+            )
+            .set(
+                "job_completion_s",
+                self.job_completion_s.clone(),
+            );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_report() -> RunReport {
+        RunReport {
+            scheme: "test".into(),
+            load: 0.1,
+            delay: 1,
+            jobs: 3,
+            total_runtime_s: 6.0,
+            rounds: vec![
+                RoundRecord {
+                    round: 1,
+                    duration_s: 1.0,
+                    kappa_s: 0.5,
+                    detected_stragglers: 2,
+                    waited_out: 0,
+                    decode_s: 0.0,
+                    jobs_completed: vec![],
+                },
+                RoundRecord {
+                    round: 2,
+                    duration_s: 2.0,
+                    kappa_s: 0.5,
+                    detected_stragglers: 0,
+                    waited_out: 1,
+                    decode_s: 0.1,
+                    jobs_completed: vec![1, 2],
+                },
+                RoundRecord {
+                    round: 3,
+                    duration_s: 3.0,
+                    kappa_s: 0.5,
+                    detected_stragglers: 1,
+                    waited_out: 0,
+                    decode_s: 0.3,
+                    jobs_completed: vec![3],
+                },
+            ],
+            job_completion_s: vec![3.0, 3.0, 6.0],
+            deadline_violations: 0,
+            true_pattern: Pattern::new(4),
+            effective_pattern: Pattern::new(4),
+            detected_pattern: Pattern::new(4),
+        }
+    }
+
+    #[test]
+    fn completion_curve_accumulates() {
+        let r = mk_report();
+        assert_eq!(r.completion_curve(), vec![(1.0, 0), (3.0, 2), (6.0, 3)]);
+        assert_eq!(r.waitout_rounds(), 1);
+        assert!((r.mean_round_s() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_stats_skip_empty_rounds() {
+        let r = mk_report();
+        let (mean, _std, max) = r.decode_stats();
+        assert!((mean - 0.2).abs() < 1e-12);
+        assert!((max - 0.3).abs() < 1e-12);
+        assert!((r.fastest_round_s() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! The master: round loop, μ-rule straggler detection, wait-out policies
+//! and run metrics (Sec. 2 "Identification of stragglers", Remark 2.3,
+//! Sec. 4 measurement methodology).
+
+pub mod master;
+pub mod metrics;
+
+pub use master::{Master, RunConfig, WaitPolicy};
+pub use metrics::{RoundRecord, RunReport};

@@ -1,0 +1,116 @@
+//! Shared setup for the paper-reproduction benches (`rust/benches/*`).
+//!
+//! Every bench regenerates one table or figure of the paper at the
+//! paper's own configuration (n = 256 workers, J = 480 jobs, 10
+//! repetitions) unless `SGC_BENCH_FAST=1` scales it down for CI.
+
+use crate::cluster::SimCluster;
+use crate::coding::SchemeConfig;
+use crate::coordinator::{Master, RunConfig, RunReport};
+use crate::straggler::GilbertElliot;
+use crate::util::json::Json;
+use crate::util::stats::MeanStd;
+
+/// The paper's evaluation configuration (Sec. 4.2).
+#[derive(Clone, Debug)]
+pub struct PaperSetup {
+    pub n: usize,
+    pub jobs: usize,
+    pub reps: usize,
+    pub mu: f64,
+}
+
+impl PaperSetup {
+    /// n=256, J=480, 10 repetitions (Table 1); honours SGC_BENCH_FAST.
+    pub fn table1() -> Self {
+        if fast_mode() {
+            PaperSetup { n: 64, jobs: 60, reps: 3, mu: 1.0 }
+        } else {
+            PaperSetup { n: 256, jobs: 480, reps: 10, mu: 1.0 }
+        }
+    }
+
+    /// The Table-1 scheme selections, scaled to `n` when not 256.
+    pub fn table1_schemes(&self) -> Vec<(&'static str, SchemeConfig)> {
+        let n = self.n;
+        let scale = n as f64 / 256.0;
+        let lam_m = ((27.0 * scale).round() as usize).clamp(1, n - 1);
+        let lam_sr = ((23.0 * scale).round() as usize).clamp(1, n);
+        let s_gc = ((15.0 * scale).round() as usize).clamp(1, n - 1);
+        vec![
+            ("M-SGC", SchemeConfig::msgc(n, 1, 2, lam_m)),
+            ("SR-SGC", SchemeConfig::sr_sgc(n, 2, 3, lam_sr)),
+            ("GC", SchemeConfig::gc(n, s_gc)),
+            ("No Coding", SchemeConfig::uncoded(n)),
+        ]
+    }
+
+    /// One simulated run.
+    pub fn run_once(&self, scheme: &SchemeConfig, seed: u64, measure_decode: bool) -> RunReport {
+        let mut master = Master::new(
+            scheme.clone(),
+            RunConfig { jobs: self.jobs, mu: self.mu, measure_decode, ..Default::default() },
+        );
+        let mut cluster = self.cluster(seed);
+        master.run(&mut cluster)
+    }
+
+    /// The default GE-straggler cluster.
+    pub fn cluster(&self, seed: u64) -> SimCluster {
+        SimCluster::from_gilbert_elliot(
+            self.n,
+            GilbertElliot::default_fit(self.n, seed),
+            seed ^ 0xc1a5,
+        )
+    }
+
+    /// Repeat runs and summarise total runtime.
+    pub fn runtime_stats(&self, scheme: &SchemeConfig, measure_decode: bool) -> MeanStd {
+        let xs: Vec<f64> = (0..self.reps)
+            .map(|r| self.run_once(scheme, 1000 + r as u64, measure_decode).total_runtime_s)
+            .collect();
+        MeanStd::of(&xs)
+    }
+}
+
+/// `SGC_BENCH_FAST=1` shrinks every bench for smoke runs.
+pub fn fast_mode() -> bool {
+    std::env::var("SGC_BENCH_FAST").ok().as_deref() == Some("1")
+}
+
+/// Save a bench's JSON payload under `target/experiments/`.
+pub fn save_json(name: &str, json: &Json) {
+    let path = format!("target/experiments/{name}.json");
+    match json.save(&path) {
+        Ok(()) => println!("(saved {path})"),
+        Err(e) => eprintln!("warning: could not save {path}: {e}"),
+    }
+}
+
+/// Markdown-ish table printer.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Self {
+        assert_eq!(headers.len(), widths.len());
+        let row: Vec<String> = headers
+            .iter()
+            .zip(widths)
+            .map(|(h, &w)| format!("{h:>w$}"))
+            .collect();
+        println!("{}", row.join("  "));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        TablePrinter { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let row: Vec<String> = cells
+            .iter()
+            .zip(&self.widths)
+            .map(|(c, &w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", row.join("  "));
+    }
+}

@@ -1,0 +1,51 @@
+//! # sgc — Sequential Gradient Coding for Straggler Mitigation
+//!
+//! A production-quality reproduction of *"Sequential Gradient Coding For
+//! Straggler Mitigation"* (Krishnan, Ebrahimi & Khisti, ICLR 2023).
+//!
+//! The library is organised as the three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   master round loop, the GC / SR-SGC / M-SGC coding schemes, straggler
+//!   models, the serverless-cluster simulator and the parameter-selection
+//!   probe. Python is never on this path.
+//! * **Layer 2** — `python/compile/model.py`: the JAX forward/backward pass
+//!   computing weighted partial gradients per data chunk, AOT-lowered once
+//!   to HLO text by `python/compile/aot.py`.
+//! * **Layer 1** — `python/compile/kernels/dense.py`: the Pallas fused dense
+//!   kernel the model's hot spot lowers through (interpret=True on CPU).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) and executes them from worker threads.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use sgc::coding::SchemeConfig;
+//! use sgc::coordinator::{Master, RunConfig};
+//! use sgc::cluster::SimCluster;
+//! use sgc::straggler::GilbertElliot;
+//!
+//! let scheme = SchemeConfig::msgc(16, /*B=*/1, /*W=*/2, /*lambda=*/4);
+//! let mut cluster = SimCluster::from_gilbert_elliot(16, GilbertElliot::default_fit(16, 7), 7);
+//! let mut master = Master::new(scheme, RunConfig { jobs: 64, ..Default::default() });
+//! let report = master.run(&mut cluster);
+//! println!("total runtime: {:.2}s", report.total_runtime_s);
+//! ```
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod experiments;
+pub mod coding;
+pub mod coordinator;
+pub mod probe;
+pub mod runtime;
+pub mod straggler;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias (anyhow-based: rich context, no custom enum
+/// sprawl; module-level errors that callers match on use `thiserror`-style
+/// hand-rolled enums instead).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,155 @@
+//! `sgc` — leader entrypoint / CLI.
+//!
+//! ```text
+//! sgc run    --n 256 --scheme m-sgc:1,2,27 --jobs 480 [--mu 1.0] [--seed 7]
+//! sgc probe  --n 256 --t-probe 80 --jobs 80
+//! sgc train  --n 16 --scheme m-sgc:1,2,4 --models 4 --iters 25
+//! sgc info   --n 256 --scheme sr-sgc:2,3,23
+//! ```
+
+use sgc::cluster::SimCluster;
+use sgc::coding::SchemeConfig;
+use sgc::coordinator::{Master, RunConfig};
+use sgc::probe::{grid_search, DelayProfile, SearchSpace};
+use sgc::straggler::GilbertElliot;
+use sgc::train::{Dataset, DatasetConfig, MultiModelTrainer, TrainConfig};
+use sgc::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("probe") => cmd_probe(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: sgc <run|probe|train|info> [--n N] [--scheme SPEC] …\n\
+                 scheme spec: gc:S | gc-rep:S | sr-sgc:B,W,L | m-sgc:B,W,L | uncoded"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parse("n", 256usize);
+    let scheme = SchemeConfig::parse(n, &args.get("scheme", "m-sgc:1,2,27"))?;
+    let jobs = args.get_parse("jobs", 480usize);
+    let seed = args.get_parse("seed", 7u64);
+    let mu = args.get_parse("mu", 1.0f64);
+    let mut master = Master::new(
+        scheme.clone(),
+        RunConfig {
+            jobs,
+            mu,
+            measure_decode: args.has_flag("measure-decode"),
+            ..Default::default()
+        },
+    );
+    let mut cluster =
+        SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, seed), seed ^ 0xc1);
+    let report = master.run(&mut cluster);
+    println!(
+        "{:<18} load={:.4} T={} runtime={:.2}s rounds={} waitouts={} violations={}",
+        report.scheme,
+        report.load,
+        report.delay,
+        report.total_runtime_s,
+        report.rounds.len(),
+        report.waitout_rounds(),
+        report.deadline_violations
+    );
+    if args.has("out") {
+        let path = args.get("out", "target/experiments/run.json");
+        report.to_json().save(&path)?;
+        println!("saved {path}");
+    }
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parse("n", 256usize);
+    let t_probe = args.get_parse("t-probe", 80usize);
+    let jobs = args.get_parse("jobs", 80usize);
+    let seed = args.get_parse("seed", 7u64);
+    let mut cluster =
+        SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, seed), seed ^ 0xc1);
+    let profile = DelayProfile::capture(&mut cluster, t_probe, 1.0 / n as f64);
+    let alpha = cluster.latency.alpha_s_per_load;
+    let space = SearchSpace::paper_default(n);
+    for (name, cands) in [
+        ("GC", space.gc_candidates()),
+        ("SR-SGC", space.sr_sgc_candidates()),
+        ("M-SGC", space.m_sgc_candidates()),
+    ] {
+        let ranked = grid_search(&cands, &profile, alpha, jobs);
+        if let Some(best) = ranked.first() {
+            println!(
+                "{name:<8} best {} load={:.4} est_runtime={:.1}s ({} candidates)",
+                best.config.label(),
+                best.load,
+                best.estimated_runtime_s,
+                ranked.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parse("n", 16usize);
+    let scheme = SchemeConfig::parse(n, &args.get("scheme", "m-sgc:1,2,4"))?;
+    let cfg = TrainConfig {
+        models: args.get_parse("models", 4usize),
+        iterations: args.get_parse("iters", 25usize),
+        batch: args.get_parse("batch", 256usize),
+        lr: args.get_parse("lr", 2e-3f32),
+        seed: args.get_parse("seed", 7u64),
+        ..Default::default()
+    };
+    let lanes = args.get_parse("lanes", 4usize);
+    let pool = std::sync::Arc::new(sgc::runtime::ComputePool::new(
+        sgc::runtime::artifacts_dir(),
+        lanes,
+    )?);
+    let dataset = Dataset::generate(DatasetConfig::default());
+    let mut trainer = MultiModelTrainer::new(scheme, cfg.clone(), pool, dataset)?;
+    let mut cluster = SimCluster::from_gilbert_elliot(
+        n,
+        GilbertElliot::default_fit(n, cfg.seed),
+        cfg.seed ^ 0xc1,
+    );
+    let report = trainer.run(&mut cluster)?;
+    println!(
+        "{}: {} jobs in sim {:.1}s (wall {:.1}s), violations={}",
+        report.scheme,
+        report.jobs_completed,
+        report.sim_runtime_s,
+        report.wall_runtime_s,
+        report.deadline_violations
+    );
+    for (m, curve) in report.losses.iter().enumerate() {
+        if let (Some(first), Some(last)) = (curve.first(), curve.last()) {
+            println!(
+                "  model {m}: loss {:.4} → {:.4} over {} iterations",
+                first.loss, last.loss, last.iteration
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parse("n", 256usize);
+    let scheme = SchemeConfig::parse(n, &args.get("scheme", "m-sgc:1,2,27"))?;
+    let s = scheme.build(1);
+    let spec = s.spec();
+    println!("scheme:     {}", spec.name);
+    println!("n:          {}", spec.n);
+    println!("delay T:    {}", spec.delay);
+    println!("load L:     {:.6}", spec.load);
+    println!("chunks η:   {}", spec.num_chunks);
+    println!("tolerance:  {:?}", spec.tolerance);
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Parameter selection (Appendix J): delay-profile capture, load-adjusted
+//! runtime estimation, and grid search over scheme parameters.
+
+pub mod profile;
+pub mod search;
+
+pub use profile::{DelayProfile, ProfileCluster};
+pub use search::{estimate_runtime, grid_search, Candidate, SearchSpace};

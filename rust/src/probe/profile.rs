@@ -1,0 +1,124 @@
+//! Reference delay profiles (Appendix J).
+//!
+//! The master runs `T_probe` *uncoded* rounds and stores each worker's
+//! completion time (`normalized load = 1/n`). A candidate coding scheme
+//! with load `L` is then evaluated by replaying the profile with the
+//! Fig.-16 load adjustment: every time is shifted by `(L − 1/n) · α`,
+//! where `α` is the fitted seconds-per-unit-load slope.
+
+use crate::cluster::{Cluster, RoundSample};
+use crate::util::stats;
+
+/// A recorded per-round, per-worker completion-time profile.
+#[derive(Clone, Debug)]
+pub struct DelayProfile {
+    pub n: usize,
+    /// Load at which the profile was captured (1/n for uncoded probing).
+    pub base_load: f64,
+    /// `times[r][i]` — completion time of worker `i` in probe round `r`.
+    pub times: Vec<Vec<f64>>,
+}
+
+impl DelayProfile {
+    /// Capture a profile by running `rounds` rounds on a cluster at
+    /// `base_load` per worker.
+    pub fn capture(cluster: &mut dyn Cluster, rounds: usize, base_load: f64) -> Self {
+        let n = cluster.n();
+        let loads = vec![base_load; n];
+        let times = (0..rounds).map(|_| cluster.sample_round(&loads).finish).collect();
+        DelayProfile { n, base_load, times }
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.times.len()
+    }
+
+    /// Mean worker completion time across the profile.
+    pub fn mean_time(&self) -> f64 {
+        let all: Vec<f64> = self.times.iter().flatten().cloned().collect();
+        stats::mean(&all)
+    }
+
+    /// Fit the load slope α (Fig. 16) from a set of (load, mean time)
+    /// calibration points.
+    pub fn fit_alpha(points: &[(f64, f64)]) -> f64 {
+        let xs: Vec<f64> = points.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = points.iter().map(|p| p.1).collect();
+        stats::linear_fit(&xs, &ys).1
+    }
+}
+
+/// A [`Cluster`] that replays a delay profile with the Appendix-J load
+/// adjustment — this is exactly how the paper's master "simulates" a
+/// candidate scheme before committing to it.
+pub struct ProfileCluster {
+    profile: DelayProfile,
+    /// Fitted seconds-per-unit-load slope α.
+    pub alpha: f64,
+    cursor: usize,
+}
+
+impl ProfileCluster {
+    pub fn new(profile: DelayProfile, alpha: f64) -> Self {
+        ProfileCluster { profile, alpha, cursor: 0 }
+    }
+}
+
+impl Cluster for ProfileCluster {
+    fn n(&self) -> usize {
+        self.profile.n
+    }
+
+    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+        let row = &self.profile.times[self.cursor % self.profile.rounds()];
+        self.cursor += 1;
+        let finish: Vec<f64> = row
+            .iter()
+            .zip(loads)
+            .map(|(&t, &l)| (t + (l - self.profile.base_load) * self.alpha).max(1e-6))
+            .collect();
+        // The replayer has no ground-truth states; report no straggling
+        // (analysis uses the μ-rule detections instead).
+        RoundSample { state: vec![false; self.profile.n], finish }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{LatencyParams, SimCluster};
+    use crate::straggler::models::NoStragglers;
+
+    fn cluster(n: usize) -> SimCluster {
+        SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 5)
+    }
+
+    #[test]
+    fn capture_shapes() {
+        let mut c = cluster(8);
+        let p = DelayProfile::capture(&mut c, 10, 1.0 / 8.0);
+        assert_eq!(p.rounds(), 10);
+        assert_eq!(p.times[0].len(), 8);
+        assert!(p.mean_time() > 0.0);
+    }
+
+    #[test]
+    fn load_adjustment_shifts_times() {
+        let mut c = cluster(4);
+        let p = DelayProfile::capture(&mut c, 5, 0.25);
+        let alpha = 10.0;
+        let mut pc = ProfileCluster::new(p.clone(), alpha);
+        let base = pc.sample_round(&vec![0.25; 4]);
+        let mut pc2 = ProfileCluster::new(p, alpha);
+        let up = pc2.sample_round(&vec![0.35; 4]);
+        for (b, u) in base.finish.iter().zip(&up.finish) {
+            assert!((u - b - 1.0).abs() < 1e-9, "expected +1s shift, got {}", u - b);
+        }
+    }
+
+    #[test]
+    fn fit_alpha_recovers_slope() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64 * 0.1, 1.0 + 9.5 * i as f64 * 0.1)).collect();
+        assert!((DelayProfile::fit_alpha(&pts) - 9.5).abs() < 1e-9);
+    }
+}

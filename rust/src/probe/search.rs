@@ -1,0 +1,173 @@
+//! Grid search over coding-scheme parameters (Appendix J).
+//!
+//! For each candidate `(B, W, λ)` (or `s` for GC), estimate the total
+//! runtime by replaying the load-adjusted reference profile through the
+//! actual master logic, and pick the fastest.
+
+use super::profile::{DelayProfile, ProfileCluster};
+use crate::coordinator::{Master, RunConfig};
+use crate::coding::{SchemeConfig, SchemeKind};
+
+/// A candidate scheme with its estimated runtime.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub config: SchemeConfig,
+    pub load: f64,
+    pub estimated_runtime_s: f64,
+}
+
+/// Which parameter grid to search.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub n: usize,
+    /// B values to try.
+    pub b: Vec<usize>,
+    /// W values to try (filtered per scheme validity).
+    pub w: Vec<usize>,
+    /// λ values to try.
+    pub lambda: Vec<usize>,
+    /// s values for plain GC.
+    pub s: Vec<usize>,
+}
+
+impl SearchSpace {
+    /// The paper's search ranges, scaled to cluster size `n`.
+    pub fn paper_default(n: usize) -> Self {
+        let lam_max = (n / 8).max(8).min(n);
+        SearchSpace {
+            n,
+            b: vec![1, 2, 3],
+            w: (2..=7).collect(),
+            lambda: (1..=lam_max).collect(),
+            s: (1..=(n / 8).max(4)).collect(),
+        }
+    }
+
+    /// Enumerate valid SR-SGC configs.
+    pub fn sr_sgc_candidates(&self) -> Vec<SchemeConfig> {
+        let mut out = Vec::new();
+        for &b in &self.b {
+            for &w in &self.w {
+                if w <= 1 || (w - 1) % b != 0 {
+                    continue;
+                }
+                for &lambda in &self.lambda {
+                    let s = (b * lambda).div_ceil(w - 1 + b);
+                    if s == 0 || s >= self.n {
+                        continue;
+                    }
+                    out.push(SchemeConfig::sr_sgc(self.n, b, w, lambda));
+                }
+            }
+        }
+        out
+    }
+
+    /// Enumerate valid M-SGC configs.
+    pub fn m_sgc_candidates(&self) -> Vec<SchemeConfig> {
+        let mut out = Vec::new();
+        for &b in &self.b {
+            for &w in &self.w {
+                if b >= w {
+                    continue;
+                }
+                for &lambda in &self.lambda {
+                    if lambda >= self.n {
+                        continue;
+                    }
+                    out.push(SchemeConfig::msgc(self.n, b, w, lambda));
+                }
+            }
+        }
+        out
+    }
+
+    /// Enumerate GC configs.
+    pub fn gc_candidates(&self) -> Vec<SchemeConfig> {
+        self.s.iter().map(|&s| SchemeConfig::gc(self.n, s)).collect()
+    }
+}
+
+/// Estimate total runtime of a scheme over `jobs` jobs by replaying the
+/// load-adjusted profile through the real master.
+pub fn estimate_runtime(
+    config: &SchemeConfig,
+    profile: &DelayProfile,
+    alpha: f64,
+    jobs: usize,
+) -> f64 {
+    let mut cluster = ProfileCluster::new(profile.clone(), alpha);
+    let mut master = Master::new(config.clone(), RunConfig { jobs, ..Default::default() });
+    master.run(&mut cluster).total_runtime_s
+}
+
+/// Grid-search a candidate list; returns candidates sorted by estimated
+/// runtime (best first).
+pub fn grid_search(
+    candidates: &[SchemeConfig],
+    profile: &DelayProfile,
+    alpha: f64,
+    jobs: usize,
+) -> Vec<Candidate> {
+    let mut out: Vec<Candidate> = candidates
+        .iter()
+        .map(|c| Candidate {
+            config: c.clone(),
+            load: c.load(),
+            estimated_runtime_s: estimate_runtime(c, profile, alpha, jobs),
+        })
+        .collect();
+    out.sort_by(|a, b| a.estimated_runtime_s.partial_cmp(&b.estimated_runtime_s).unwrap());
+    out
+}
+
+/// Human-readable label for a candidate kind (for Table-3-style reports).
+pub fn kind_name(k: &SchemeKind) -> &'static str {
+    match k {
+        SchemeKind::Gc { .. } => "GC",
+        SchemeKind::GcRep { .. } => "GC-Rep",
+        SchemeKind::SrSgc { .. } => "SR-SGC",
+        SchemeKind::SrSgcRep { .. } => "SR-SGC-Rep",
+        SchemeKind::MSgc { .. } => "M-SGC",
+        SchemeKind::MSgcRep { .. } => "M-SGC-Rep",
+        SchemeKind::Uncoded => "No Coding",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SimCluster;
+    use crate::straggler::GilbertElliot;
+
+    #[test]
+    fn candidate_enumeration_validity() {
+        let sp = SearchSpace::paper_default(16);
+        for c in sp.sr_sgc_candidates() {
+            // constructible without panicking
+            let _ = c.build(2);
+        }
+        for c in sp.m_sgc_candidates() {
+            let _ = c.build(2);
+        }
+        assert!(!sp.gc_candidates().is_empty());
+    }
+
+    #[test]
+    fn grid_search_prefers_low_runtime() {
+        let n = 16;
+        let mut cluster =
+            SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.05, 0.6, 3), 4);
+        let profile = DelayProfile::capture(&mut cluster, 12, 1.0 / n as f64);
+        let cands = vec![
+            SchemeConfig::gc(n, 2),
+            SchemeConfig::gc(n, 6),
+            SchemeConfig::gc(n, 12),
+        ];
+        let ranked = grid_search(&cands, &profile, 9.5, 12);
+        assert_eq!(ranked.len(), 3);
+        assert!(ranked.windows(2).all(|w| {
+            w[0].estimated_runtime_s <= w[1].estimated_runtime_s
+        }));
+    }
+}

@@ -1,0 +1,180 @@
+//! AOT artifact loading and execution.
+//!
+//! `python/compile/aot.py` emits:
+//!
+//! * `artifacts/model.hlo.txt` — HLO text of the fused (loss, grads)
+//!   program over one padded data chunk, lowered from the L2 JAX model
+//!   (which calls the L1 Pallas dense kernels).
+//! * `artifacts/model_meta.txt` — `key=value` lines describing the
+//!   tensor shapes the program was lowered for.
+//!
+//! The program signature is
+//! `(W1, b1, W2, b2, W3, b3, x[chunk,input], y[chunk,classes], wgt[chunk])
+//!  → (loss_sum, gW1, gb1, gW2, gb2, gW3, gb3)`
+//! with per-sample weights so that padded rows (weight 0) contribute
+//! nothing and partial gradients over chunks sum to the full-batch
+//! gradient.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shapes of the compiled model program (must match `model_meta.txt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub input: usize,
+    pub classes: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    /// Padded chunk size the program was lowered for.
+    pub chunk: usize,
+}
+
+impl ModelDims {
+    /// Parameter tensor shapes in program order.
+    pub fn param_shapes(&self) -> Vec<(usize, usize)> {
+        vec![
+            (self.input, self.hidden1),
+            (1, self.hidden1),
+            (self.hidden1, self.hidden2),
+            (1, self.hidden2),
+            (self.hidden2, self.classes),
+            (1, self.classes),
+        ]
+    }
+
+    /// Flattened length of each parameter tensor.
+    pub fn param_lens(&self) -> Vec<usize> {
+        self.param_shapes().iter().map(|(a, b)| a * b).collect()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.param_lens().iter().sum()
+    }
+
+    /// Parse `model_meta.txt`.
+    pub fn from_meta_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let get = |key: &str| -> Result<usize> {
+            text.lines()
+                .find_map(|l| l.strip_prefix(&format!("{key}=")))
+                .with_context(|| format!("missing {key} in {}", path.display()))?
+                .trim()
+                .parse()
+                .with_context(|| format!("bad {key} in {}", path.display()))
+        };
+        Ok(ModelDims {
+            input: get("input")?,
+            classes: get("classes")?,
+            hidden1: get("hidden1")?,
+            hidden2: get("hidden2")?,
+            chunk: get("chunk")?,
+        })
+    }
+}
+
+/// Artifact directory: `$SGC_ARTIFACTS` or `artifacts/` relative to the
+/// crate root.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SGC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// A compiled (loss, grads) program on a PJRT CPU client.
+///
+/// `PjRtClient` is not `Send` (Rc internally): each executable lives on
+/// the thread that created it. Cross-thread execution goes through
+/// [`super::pool::ComputePool`].
+pub struct GradExecutable {
+    pub dims: ModelDims,
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl GradExecutable {
+    /// Load and compile `model.hlo.txt` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let dims = ModelDims::from_meta_file(&dir.join("model_meta.txt"))?;
+        let hlo = dir.join("model.hlo.txt");
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .with_context(|| format!("parsing {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling model HLO")?;
+        Ok(GradExecutable { dims, _client: client, exe })
+    }
+
+    /// Compute `(loss_sum, grads)` for one padded chunk.
+    ///
+    /// * `params` — 6 flattened tensors per [`ModelDims::param_shapes`].
+    /// * `x` — `chunk × input`, row-major.
+    /// * `y` — `chunk × classes` one-hot.
+    /// * `wgt` — `chunk` per-sample weights (0 for padding).
+    pub fn grad_chunk(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[f32],
+        wgt: &[f32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let d = &self.dims;
+        anyhow::ensure!(params.len() == 6, "expected 6 parameter tensors");
+        for (p, len) in params.iter().zip(d.param_lens()) {
+            anyhow::ensure!(p.len() == len, "param length {} != {len}", p.len());
+        }
+        anyhow::ensure!(x.len() == d.chunk * d.input, "x length");
+        anyhow::ensure!(y.len() == d.chunk * d.classes, "y length");
+        anyhow::ensure!(wgt.len() == d.chunk, "wgt length");
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(9);
+        for (p, (r, c)) in params.iter().zip(d.param_shapes()) {
+            let lit = xla::Literal::vec1(p);
+            args.push(if r == 1 {
+                lit.reshape(&[c as i64])?
+            } else {
+                lit.reshape(&[r as i64, c as i64])?
+            });
+        }
+        args.push(xla::Literal::vec1(x).reshape(&[d.chunk as i64, d.input as i64])?);
+        args.push(xla::Literal::vec1(y).reshape(&[d.chunk as i64, d.classes as i64])?);
+        args.push(xla::Literal::vec1(wgt));
+
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 7, "expected 7 outputs, got {}", outs.len());
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().to_vec::<f32>()?[0];
+        let grads: Vec<Vec<f32>> =
+            it.map(|l| l.to_vec::<f32>()).collect::<std::result::Result<_, _>>()?;
+        Ok((loss, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parsing() {
+        let dir = std::env::temp_dir().join("sgc-meta-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model_meta.txt");
+        std::fs::write(&p, "input=64\nclasses=10\nhidden1=128\nhidden2=64\nchunk=32\n").unwrap();
+        let d = ModelDims::from_meta_file(&p).unwrap();
+        assert_eq!(d, ModelDims { input: 64, classes: 10, hidden1: 128, hidden2: 64, chunk: 32 });
+        assert_eq!(d.param_count(), 64 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10);
+    }
+
+    #[test]
+    fn meta_missing_key_errors() {
+        let dir = std::env::temp_dir().join("sgc-meta-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model_meta.txt");
+        std::fs::write(&p, "input=64\n").unwrap();
+        assert!(ModelDims::from_meta_file(&p).is_err());
+    }
+
+    // Execution tests live in rust/tests/end_to_end.rs (need artifacts).
+}

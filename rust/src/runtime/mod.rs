@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from worker threads.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! `HloModuleProto::from_text_file` reassigns ids cleanly (see
+//! /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod pool;
+
+pub use artifact::{artifacts_dir, GradExecutable, ModelDims};
+pub use pool::{ComputePool, GradRequest};

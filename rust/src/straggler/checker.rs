@@ -1,0 +1,180 @@
+//! Prefix conformance checking for the master's wait-out repair
+//! (Remark 2.3).
+//!
+//! If the observed straggler pattern in a round deviates from the design
+//! model, the master waits for stragglers (in completion order) until the
+//! *effective* pattern conforms again. [`ToleranceChecker`] answers
+//! "would the pattern stay acceptable if round `r`'s stragglers were
+//! exactly this set?" incrementally, only re-validating windows that
+//! contain the new round.
+
+use super::pattern::{
+    arbitrary_window_ok, bursty_window_ok, per_round_window_ok, Overlay, Pattern, StragglerView,
+};
+use crate::coding::ToleranceSpec;
+
+/// Incremental conformance checker for a scheme's design model.
+#[derive(Clone, Debug)]
+pub struct ToleranceChecker {
+    spec: ToleranceSpec,
+    /// Effective (post-repair) pattern committed so far.
+    pattern: Pattern,
+    /// For `BurstyOrArbitrary`: which branches of the disjunction are
+    /// still satisfiable by the committed prefix. Once a branch dies it
+    /// stays dead (the disjunction is over whole patterns, Prop 3.2).
+    bursty_alive: bool,
+    arbitrary_alive: bool,
+}
+
+impl ToleranceChecker {
+    pub fn new(n: usize, spec: ToleranceSpec) -> Self {
+        ToleranceChecker {
+            spec,
+            pattern: Pattern::new(n),
+            bursty_alive: true,
+            arbitrary_alive: true,
+        }
+    }
+
+    /// The effective pattern committed so far.
+    pub fn pattern(&self) -> &Pattern {
+        &self.pattern
+    }
+
+    /// Would appending `stragglers` as round `r` keep the pattern
+    /// acceptable? (Does not mutate — evaluates a zero-copy overlay.)
+    pub fn acceptable(&self, stragglers: &[bool]) -> bool {
+        let probe = Overlay { base: &self.pattern, extra: stragglers };
+        self.eval(&probe).0
+    }
+
+    /// Commit round `r`'s effective straggler set.
+    pub fn commit(&mut self, stragglers: &[bool]) {
+        self.pattern.push_round(stragglers.to_vec());
+        let (ok, bursty, arb) = self.eval(&self.pattern);
+        debug_assert!(
+            ok || !matches!(self.spec, ToleranceSpec::None),
+            "committed a non-conforming round"
+        );
+        self.bursty_alive = bursty;
+        self.arbitrary_alive = arb;
+    }
+
+    /// Evaluate acceptability of `probe` (pattern with the candidate last
+    /// round). Returns `(acceptable, bursty_alive', arbitrary_alive')`.
+    fn eval<V: StragglerView>(&self, probe: &V) -> (bool, bool, bool) {
+        let r = probe.rounds();
+        match &self.spec {
+            ToleranceSpec::None => {
+                (probe.count_in_round(r) == 0, self.bursty_alive, self.arbitrary_alive)
+            }
+            ToleranceSpec::PerRound { s } => {
+                (probe.count_in_round(r) <= *s, self.bursty_alive, self.arbitrary_alive)
+            }
+            ToleranceSpec::BurstyOrPerRound { b, w, lambda, s } => {
+                // per-window disjunction (Prop 3.1): all windows touching r
+                let ok = windows_touching(r, *w).all(|(lo, hi)| {
+                    bursty_window_ok(probe, lo, hi, *b, *lambda)
+                        || per_round_window_ok(probe, lo, hi, *s)
+                });
+                (ok, self.bursty_alive, self.arbitrary_alive)
+            }
+            ToleranceSpec::BurstyOrArbitrary { b, w, lambda } => {
+                let w_arb = w + b - 1;
+                let bursty = self.bursty_alive
+                    && windows_touching(r, *w)
+                        .all(|(lo, hi)| bursty_window_ok(probe, lo, hi, *b, *lambda));
+                let arb = self.arbitrary_alive
+                    && windows_touching(r, w_arb)
+                        .all(|(lo, hi)| arbitrary_window_ok(probe, lo, hi, *b, *lambda));
+                (bursty || arb, bursty, arb)
+            }
+        }
+    }
+}
+
+/// All windows of width `w` that contain round `r`, clipped to `[1, r]`:
+/// `(lo, hi)` pairs.
+fn windows_touching(r: usize, w: usize) -> impl Iterator<Item = (usize, usize)> {
+    let lo_min = r.saturating_sub(w - 1).max(1);
+    (lo_min..=r).map(move |lo| (lo, (lo + w - 1).min(r)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_round_checker() {
+        let mut c = ToleranceChecker::new(4, ToleranceSpec::PerRound { s: 1 });
+        assert!(c.acceptable(&[true, false, false, false]));
+        assert!(!c.acceptable(&[true, true, false, false]));
+        c.commit(&[true, false, false, false]);
+        assert!(c.acceptable(&[false, true, false, false]));
+    }
+
+    #[test]
+    fn none_checker_rejects_any_straggler() {
+        let c = ToleranceChecker::new(2, ToleranceSpec::None);
+        assert!(c.acceptable(&[false, false]));
+        assert!(!c.acceptable(&[true, false]));
+    }
+
+    #[test]
+    fn bursty_or_per_round_window_logic() {
+        // SR-SGC with B=1, W=3, λ=2, s=1: one straggler per round is fine
+        // even if three distinct workers straggle in a window (per-round
+        // branch); two in one round is fine only via the bursty branch.
+        let spec = ToleranceSpec::BurstyOrPerRound { b: 1, w: 3, lambda: 2, s: 1 };
+        let mut c = ToleranceChecker::new(4, spec);
+        c.commit(&[true, false, false, false]);
+        c.commit(&[false, true, false, false]);
+        // third distinct straggler: per-round branch saves it
+        assert!(c.acceptable(&[false, false, true, false]));
+        // two stragglers now: bursty branch needs ≤λ=2 distinct in the
+        // window {r-2..r} = {1,2} ∪ {2,3} — workers 0,1 already straggled,
+        // so workers {2,3} would make 4 distinct in no window… window
+        // [2,4] would hold {1,2,3} = 3 > λ and round has 2 > s → reject.
+        assert!(!c.acceptable(&[false, false, true, true]));
+    }
+
+    #[test]
+    fn bursty_or_arbitrary_branch_death() {
+        // M-SGC B=1, W=2, λ=1 → arbitrary model (N=1, W'=2, λ'=1).
+        let spec = ToleranceSpec::BurstyOrArbitrary { b: 1, w: 2, lambda: 1 };
+        let mut c = ToleranceChecker::new(3, spec);
+        // worker 0 straggles twice non-consecutively: kills neither at
+        // first…
+        c.commit(&[true, false, false]);
+        c.commit(&[false, false, false]);
+        assert!(c.acceptable(&[true, false, false]));
+        c.commit(&[true, false, false]);
+        // now two straggles by worker 0 with a 1-gap: both models still
+        // alive (burst length 1, ≤1 per W'=2 window). A burst of length 2
+        // violates bursty(B=1) and arbitrary(N=1,W'=2) → unacceptable.
+        assert!(!c.acceptable(&[true, false, false]));
+        // a *different* worker straggling right after violates λ=1 in the
+        // window {r3, r4} (2 distinct stragglers) → also unacceptable
+        assert!(!c.acceptable(&[false, true, false]));
+        // an all-clear round is always fine
+        assert!(c.acceptable(&[false, false, false]));
+    }
+
+    #[test]
+    fn repair_terminates_at_all_false() {
+        // Whatever the committed history, an all-clear round is always
+        // acceptable for Bursty/PerRound style specs.
+        let specs = [
+            ToleranceSpec::PerRound { s: 0 },
+            ToleranceSpec::BurstyOrPerRound { b: 1, w: 2, lambda: 1, s: 0 },
+            ToleranceSpec::BurstyOrArbitrary { b: 1, w: 2, lambda: 1 },
+            ToleranceSpec::None,
+        ];
+        for spec in specs {
+            let mut c = ToleranceChecker::new(3, spec.clone());
+            c.commit(&[false, false, false]);
+            c.commit(&[true, false, false].map(|x| x && !matches!(spec, ToleranceSpec::None)));
+            assert!(c.acceptable(&[false, false, false]), "{spec:?}");
+        }
+    }
+}

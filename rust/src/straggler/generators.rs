@@ -1,0 +1,174 @@
+//! Conforming-pattern generators for property tests and the worst-case
+//! periodic patterns behind the Appendix-F lower bounds (Figs. 8-10).
+
+use super::pattern::{
+    arbitrary_window_ok, bursty_window_ok, per_round_window_ok, Pattern,
+};
+use crate::util::rng::Pcg32;
+
+/// Deterministic straggler model identifier for generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Model {
+    Bursty { b: usize, w: usize, lambda: usize },
+    Arbitrary { n_limit: usize, w: usize, lambda: usize },
+    PerRound { s: usize },
+}
+
+impl Model {
+    fn window(&self) -> usize {
+        match self {
+            Model::Bursty { w, .. } => *w,
+            Model::Arbitrary { w, .. } => *w,
+            Model::PerRound { .. } => 1,
+        }
+    }
+
+    /// Do all windows of the pattern containing its last round conform?
+    fn last_round_ok(&self, p: &Pattern) -> bool {
+        let r = p.rounds();
+        let w = self.window();
+        let lo_min = r.saturating_sub(w - 1).max(1);
+        (lo_min..=r).all(|lo| {
+            let hi = (lo + w - 1).min(r);
+            match self {
+                Model::Bursty { b, lambda, .. } => bursty_window_ok(p, lo, hi, *b, *lambda),
+                Model::Arbitrary { n_limit, lambda, .. } => {
+                    arbitrary_window_ok(p, lo, hi, *n_limit, *lambda)
+                }
+                Model::PerRound { s } => per_round_window_ok(p, lo, hi, *s),
+            }
+        })
+    }
+}
+
+/// Generate a random pattern that provably conforms to `model`: each
+/// (worker, round) straggle is proposed with probability `p` and accepted
+/// only if every window containing it stays valid (greedy rejection).
+pub fn gen_conforming(
+    n: usize,
+    rounds: usize,
+    model: Model,
+    p: f64,
+    rng: &mut Pcg32,
+) -> Pattern {
+    let mut pat = Pattern::new(n);
+    for _ in 0..rounds {
+        pat.push_round(vec![false; n]);
+        let r = pat.rounds();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for &i in &order {
+            if !rng.chance(p) {
+                continue;
+            }
+            pat.rows[r - 1][i] = true;
+            if !model.last_round_ok(&pat) {
+                pat.rows[r - 1][i] = false; // reject
+            }
+        }
+    }
+    pat
+}
+
+/// Fig. 8 worst-case periodic pattern (B < W): workers `0..λ` straggle in
+/// the first `B` rounds of every period of `W-1+B` rounds.
+pub fn periodic_bursty(n: usize, rounds: usize, b: usize, w: usize, lambda: usize) -> Pattern {
+    assert!(b < w);
+    let period = w - 1 + b;
+    let rows = (0..rounds)
+        .map(|r0| {
+            let phase = r0 % period;
+            (0..n).map(|i| i < lambda && phase < b).collect()
+        })
+        .collect();
+    Pattern::from_rows(rows)
+}
+
+/// Fig. 9 worst-case pattern (B = W): workers `0..λ` straggle in every
+/// round.
+pub fn periodic_bursty_bw(n: usize, rounds: usize, lambda: usize) -> Pattern {
+    Pattern::from_rows((0..rounds).map(|_| (0..n).map(|i| i < lambda).collect()).collect())
+}
+
+/// Fig. 10 worst-case pattern for the arbitrary model (N < W'): workers
+/// `0..λ'` straggle in `N` evenly spread rounds of every period of `W'`.
+pub fn periodic_arbitrary(
+    n: usize,
+    rounds: usize,
+    n_limit: usize,
+    w_prime: usize,
+    lambda: usize,
+) -> Pattern {
+    assert!(n_limit <= w_prime);
+    let rows = (0..rounds)
+        .map(|r0| {
+            let phase = r0 % w_prime;
+            // straggle on every ⌈W'/N⌉-th slot of the period, N times
+            let straggle_round = phase % w_prime.div_ceil(n_limit.max(1)) == 0
+                && phase / w_prime.div_ceil(n_limit.max(1)) < n_limit;
+            (0..n).map(|i| i < lambda && straggle_round).collect()
+        })
+        .collect();
+    Pattern::from_rows(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::straggler::pattern::{conforms_arbitrary, conforms_bursty, conforms_per_round};
+
+    #[test]
+    fn gen_bursty_conforms() {
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..10 {
+            let (b, w, lambda) = (2, 5, 3);
+            let p = gen_conforming(10, 40, Model::Bursty { b, w, lambda }, 0.3, &mut rng);
+            assert!(conforms_bursty(&p, b, w, lambda));
+            // generator should actually produce some straggles
+            assert!(p.straggle_fraction() > 0.0);
+        }
+    }
+
+    #[test]
+    fn gen_arbitrary_conforms() {
+        let mut rng = Pcg32::seeded(6);
+        for _ in 0..10 {
+            let (nl, w, lambda) = (2, 6, 4);
+            let p =
+                gen_conforming(10, 40, Model::Arbitrary { n_limit: nl, w, lambda }, 0.3, &mut rng);
+            assert!(conforms_arbitrary(&p, nl, w, lambda));
+        }
+    }
+
+    #[test]
+    fn gen_per_round_conforms() {
+        let mut rng = Pcg32::seeded(7);
+        let p = gen_conforming(10, 40, Model::PerRound { s: 3 }, 0.5, &mut rng);
+        assert!(conforms_per_round(&p, 3));
+        assert!(!conforms_per_round(&p, 0));
+    }
+
+    #[test]
+    fn periodic_bursty_conforms_and_is_tight() {
+        let (n, b, w, lambda) = (8, 2, 4, 3);
+        let p = periodic_bursty(n, 36, b, w, lambda);
+        assert!(conforms_bursty(&p, b, w, lambda));
+        // tight: exactly λ distinct stragglers appear in period windows
+        assert_eq!(p.distinct_in(1, w), lambda);
+    }
+
+    #[test]
+    fn periodic_bw_case() {
+        let p = periodic_bursty_bw(6, 12, 2);
+        assert!(conforms_bursty(&p, 3, 3, 2));
+        assert_eq!(p.count_in_round(5), 2);
+    }
+
+    #[test]
+    fn periodic_arbitrary_conforms() {
+        let (n, nl, w, lambda) = (8, 2, 6, 3);
+        let p = periodic_arbitrary(n, 36, nl, w, lambda);
+        assert!(conforms_arbitrary(&p, nl, w, lambda));
+        assert!(p.straggle_fraction() > 0.0);
+    }
+}

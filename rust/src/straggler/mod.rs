@@ -1,0 +1,17 @@
+//! Straggler modeling: patterns and validators (Sec. 2.1), stochastic
+//! processes (Appendix C), conforming-pattern generators, worst-case
+//! periodic patterns (Appendix F), and the prefix conformance checker
+//! behind wait-out repair (Remark 2.3).
+
+pub mod checker;
+pub mod generators;
+pub mod models;
+pub mod pattern;
+
+pub use checker::ToleranceChecker;
+pub use generators::{gen_conforming, periodic_arbitrary, periodic_bursty, periodic_bursty_bw, Model};
+pub use models::{GilbertElliot, NoStragglers, StragglerProcess, TraceProcess};
+pub use pattern::{
+    conforms_arbitrary, conforms_bursty, conforms_bursty_or_per_round, conforms_per_round,
+    Pattern,
+};

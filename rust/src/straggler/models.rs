@@ -1,0 +1,167 @@
+//! Stochastic and trace-driven straggler state processes.
+//!
+//! [`GilbertElliot`] is the 2-state Markov model of Appendix C, which
+//! Yang et al. (2019) found to track worker state transitions on EC2;
+//! the defaults are fitted to the Fig. 1 statistics (burst-length
+//! histogram dominated by short bursts, ~5% straggling cells).
+
+use super::pattern::Pattern;
+use crate::util::rng::Pcg32;
+
+/// A process producing per-round straggler states for `n` workers.
+pub trait StragglerProcess: Send {
+    /// Advance one round; returns the straggler indicator per worker.
+    fn next_round(&mut self) -> Vec<bool>;
+
+    /// Number of workers.
+    fn n(&self) -> usize;
+
+    /// Materialize the next `rounds` rounds as a [`Pattern`].
+    fn take_pattern(&mut self, rounds: usize) -> Pattern {
+        let mut p = Pattern::new(self.n());
+        for _ in 0..rounds {
+            p.push_round(self.next_round());
+        }
+        p
+    }
+}
+
+/// Gilbert–Elliot 2-state model (Appendix C, Fig. 3): a non-straggler
+/// becomes a straggler with probability `p_enter`; a straggler recovers
+/// with probability `p_exit`.
+#[derive(Clone, Debug)]
+pub struct GilbertElliot {
+    pub p_enter: f64,
+    pub p_exit: f64,
+    states: Vec<bool>,
+    rng: Pcg32,
+}
+
+impl GilbertElliot {
+    pub fn new(n: usize, p_enter: f64, p_exit: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p_enter) && (0.0..1.0).contains(&(1.0 - p_exit)));
+        let mut rng = Pcg32::new(seed, 0x9e11);
+        // start from the stationary distribution
+        let pi_s = p_enter / (p_enter + p_exit);
+        let states = (0..n).map(|_| rng.chance(pi_s)).collect();
+        GilbertElliot { p_enter, p_exit, states, rng }
+    }
+
+    /// Parameters fitted to the paper's Fig. 1 observations: short bursts
+    /// (geometric, mean ≈ 1.5 rounds) and ≈5% straggling cells, which at
+    /// n = 256 yields ≈13 stragglers per round on average.
+    pub fn default_fit(n: usize, seed: u64) -> Self {
+        Self::new(n, 0.037, 0.7, seed)
+    }
+
+    /// Stationary straggling probability `p_enter / (p_enter + p_exit)`.
+    pub fn stationary(&self) -> f64 {
+        self.p_enter / (self.p_enter + self.p_exit)
+    }
+
+    /// Mean burst length `1 / p_exit`.
+    pub fn mean_burst(&self) -> f64 {
+        1.0 / self.p_exit
+    }
+}
+
+impl StragglerProcess for GilbertElliot {
+    fn next_round(&mut self) -> Vec<bool> {
+        for s in self.states.iter_mut() {
+            *s = if *s { !self.rng.chance(self.p_exit) } else { self.rng.chance(self.p_enter) };
+        }
+        self.states.clone()
+    }
+
+    fn n(&self) -> usize {
+        self.states.len()
+    }
+}
+
+/// Replays a recorded pattern (wraps around if exhausted).
+#[derive(Clone, Debug)]
+pub struct TraceProcess {
+    pattern: Pattern,
+    cursor: usize,
+}
+
+impl TraceProcess {
+    pub fn new(pattern: Pattern) -> Self {
+        assert!(pattern.rounds() > 0);
+        TraceProcess { pattern, cursor: 0 }
+    }
+}
+
+impl StragglerProcess for TraceProcess {
+    fn next_round(&mut self) -> Vec<bool> {
+        let row = self.pattern.rows[self.cursor % self.pattern.rounds()].clone();
+        self.cursor += 1;
+        row
+    }
+
+    fn n(&self) -> usize {
+        self.pattern.n
+    }
+}
+
+/// No stragglers ever (ideal cluster; ablation baseline).
+#[derive(Clone, Debug)]
+pub struct NoStragglers {
+    pub n: usize,
+}
+
+impl StragglerProcess for NoStragglers {
+    fn next_round(&mut self) -> Vec<bool> {
+        vec![false; self.n]
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ge_stationary_fraction() {
+        let mut ge = GilbertElliot::new(64, 0.05, 0.5, 7);
+        let p = ge.take_pattern(2000);
+        let frac = p.straggle_fraction();
+        let expect = 0.05 / 0.55;
+        assert!((frac - expect).abs() < 0.02, "frac {frac} vs {expect}");
+    }
+
+    #[test]
+    fn ge_burst_lengths_geometric() {
+        let mut ge = GilbertElliot::new(64, 0.05, 0.5, 11);
+        let p = ge.take_pattern(3000);
+        let bursts = p.burst_lengths();
+        let mean = bursts.iter().sum::<usize>() as f64 / bursts.len() as f64;
+        assert!((mean - 2.0).abs() < 0.2, "mean burst {mean} vs 1/p_exit = 2");
+    }
+
+    #[test]
+    fn default_fit_matches_paper_scale() {
+        let mut ge = GilbertElliot::default_fit(256, 3);
+        let p = ge.take_pattern(100);
+        // average stragglers per round in the low tens
+        let avg: f64 =
+            (1..=100).map(|r| p.count_in_round(r) as f64).sum::<f64>() / 100.0;
+        assert!((8.0..20.0).contains(&avg), "avg stragglers/round {avg}");
+        // bursts are short
+        let bursts = p.burst_lengths();
+        let long = bursts.iter().filter(|&&b| b > 6).count() as f64 / bursts.len() as f64;
+        assert!(long < 0.05, "long-burst fraction {long}");
+    }
+
+    #[test]
+    fn trace_replays_and_wraps() {
+        let pat = Pattern::from_rows(vec![vec![true, false], vec![false, true]]);
+        let mut tr = TraceProcess::new(pat);
+        assert_eq!(tr.next_round(), vec![true, false]);
+        assert_eq!(tr.next_round(), vec![false, true]);
+        assert_eq!(tr.next_round(), vec![true, false]); // wrap
+    }
+}

@@ -1,0 +1,338 @@
+//! Straggler patterns and conformance validators (Sec. 2.1).
+//!
+//! A pattern is the indicator matrix `S_i(t)` (worker `i` straggles in
+//! round `t`). The three deterministic models of Sec. 2.1 are implemented
+//! as window validators; the prefix variants back the master's wait-out
+//! conformance repair (Remark 2.3).
+
+/// Straggler indicator matrix. Rounds are 1-based in the API
+/// (`round ∈ [1 : rounds]`), matching the paper.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Pattern {
+    pub n: usize,
+    /// `rows[r-1][i]` = worker `i` straggles in round `r`.
+    pub rows: Vec<Vec<bool>>,
+}
+
+impl Pattern {
+    pub fn new(n: usize) -> Self {
+        Pattern { n, rows: Vec::new() }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<bool>>) -> Self {
+        let n = rows.first().map_or(0, |r| r.len());
+        assert!(rows.iter().all(|r| r.len() == n));
+        Pattern { n, rows }
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn push_round(&mut self, row: Vec<bool>) {
+        assert_eq!(row.len(), self.n);
+        self.rows.push(row);
+    }
+
+    #[inline]
+    pub fn is_straggler(&self, worker: usize, round: usize) -> bool {
+        self.rows[round - 1][worker]
+    }
+
+    /// Number of stragglers in a round.
+    pub fn count_in_round(&self, round: usize) -> usize {
+        self.rows[round - 1].iter().filter(|&&s| s).count()
+    }
+
+    /// Distinct stragglers in rounds `[lo : hi]` (inclusive, clipped).
+    pub fn distinct_in(&self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(self.rounds());
+        if lo > hi {
+            return 0;
+        }
+        (0..self.n)
+            .filter(|&i| (lo..=hi).any(|r| self.is_straggler(i, r)))
+            .count()
+    }
+
+    /// Straggle burst lengths across all workers (Fig. 1(b)).
+    pub fn burst_lengths(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for i in 0..self.n {
+            let mut run = 0usize;
+            for r in 1..=self.rounds() {
+                if self.is_straggler(i, r) {
+                    run += 1;
+                } else if run > 0 {
+                    out.push(run);
+                    run = 0;
+                }
+            }
+            if run > 0 {
+                out.push(run);
+            }
+        }
+        out
+    }
+
+    /// Fraction of straggling (worker, round) cells.
+    pub fn straggle_fraction(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        let total = self.n * self.rounds();
+        let s: usize = (1..=self.rounds()).map(|r| self.count_in_round(r)).sum();
+        s as f64 / total as f64
+    }
+}
+
+/// Read-only view of a straggler pattern — lets the conformance checker
+/// evaluate "history + one candidate row" without cloning the history
+/// (the wait-out repair loop calls this many times per round; see
+/// EXPERIMENTS.md §Perf).
+pub trait StragglerView {
+    fn n(&self) -> usize;
+    fn rounds(&self) -> usize;
+    fn is_straggler(&self, worker: usize, round: usize) -> bool;
+
+    fn count_in_round(&self, round: usize) -> usize {
+        (0..self.n()).filter(|&i| self.is_straggler(i, round)).count()
+    }
+
+    fn distinct_in(&self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(self.rounds());
+        if lo > hi {
+            return 0;
+        }
+        (0..self.n())
+            .filter(|&i| (lo..=hi).any(|r| self.is_straggler(i, r)))
+            .count()
+    }
+}
+
+impl StragglerView for Pattern {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn rounds(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn is_straggler(&self, worker: usize, round: usize) -> bool {
+        Pattern::is_straggler(self, worker, round)
+    }
+
+    fn count_in_round(&self, round: usize) -> usize {
+        Pattern::count_in_round(self, round)
+    }
+}
+
+/// A pattern plus one tentative extra round (zero-copy).
+pub struct Overlay<'a> {
+    pub base: &'a Pattern,
+    pub extra: &'a [bool],
+}
+
+impl StragglerView for Overlay<'_> {
+    fn n(&self) -> usize {
+        self.base.n
+    }
+
+    fn rounds(&self) -> usize {
+        self.base.rounds() + 1
+    }
+
+    fn is_straggler(&self, worker: usize, round: usize) -> bool {
+        if round == self.base.rounds() + 1 {
+            self.extra[worker]
+        } else {
+            self.base.is_straggler(worker, round)
+        }
+    }
+}
+
+/// Does the window `[lo : hi]` (inclusive, already clipped to the pattern)
+/// satisfy the `(B, W, λ)`-bursty constraints? `hi - lo + 1 ≤ W` assumed.
+pub fn bursty_window_ok<V: StragglerView + ?Sized>(
+    p: &V,
+    lo: usize,
+    hi: usize,
+    b: usize,
+    lambda: usize,
+) -> bool {
+    let hi = hi.min(p.rounds());
+    // single pass: distinct count + per-worker span
+    let mut distinct = 0usize;
+    for i in 0..p.n() {
+        let mut first = None;
+        let mut last = None;
+        for r in lo..=hi {
+            if p.is_straggler(i, r) {
+                if first.is_none() {
+                    first = Some(r);
+                }
+                last = Some(r);
+            }
+        }
+        if let (Some(f), Some(l)) = (first, last) {
+            distinct += 1;
+            // (2) temporal: straggles span ≤ B rounds
+            if l - f + 1 > b {
+                return false;
+            }
+        }
+    }
+    // (1) spatial: ≤ λ distinct stragglers
+    distinct <= lambda
+}
+
+/// Does window `[lo : hi]` satisfy the `(N, W', λ')`-arbitrary constraints?
+pub fn arbitrary_window_ok<V: StragglerView + ?Sized>(
+    p: &V,
+    lo: usize,
+    hi: usize,
+    nn: usize,
+    lambda: usize,
+) -> bool {
+    let hi = hi.min(p.rounds());
+    let mut distinct = 0usize;
+    for i in 0..p.n() {
+        let cnt = (lo..=hi).filter(|&r| p.is_straggler(i, r)).count();
+        if cnt > nn {
+            return false;
+        }
+        if cnt > 0 {
+            distinct += 1;
+        }
+    }
+    distinct <= lambda
+}
+
+/// Does window `[lo : hi]` have at most `s` stragglers in every round?
+pub fn per_round_window_ok<V: StragglerView + ?Sized>(
+    p: &V,
+    lo: usize,
+    hi: usize,
+    s: usize,
+) -> bool {
+    (lo..=hi.min(p.rounds())).all(|r| p.count_in_round(r) <= s)
+}
+
+/// Full-pattern conformance to the `(B, W, λ)`-bursty model: every window
+/// of `W` consecutive rounds (including partial windows at the edges)
+/// satisfies the constraints.
+pub fn conforms_bursty(p: &Pattern, b: usize, w: usize, lambda: usize) -> bool {
+    let rounds = p.rounds();
+    if rounds == 0 {
+        return true;
+    }
+    (1..=rounds).all(|j| bursty_window_ok(p, j, (j + w - 1).min(rounds), b, lambda))
+}
+
+/// Full-pattern conformance to the `(N, W', λ')`-arbitrary model.
+pub fn conforms_arbitrary(p: &Pattern, nn: usize, w_prime: usize, lambda: usize) -> bool {
+    let rounds = p.rounds();
+    (1..=rounds).all(|j| arbitrary_window_ok(p, j, (j + w_prime - 1).min(rounds), nn, lambda))
+}
+
+/// Full-pattern conformance to the `s`-stragglers-per-round model.
+pub fn conforms_per_round(p: &Pattern, s: usize) -> bool {
+    (1..=p.rounds()).all(|r| p.count_in_round(r) <= s)
+}
+
+/// SR-SGC's tolerated set (Prop 3.1): every window of `W` rounds satisfies
+/// the bursty constraints *or* the `s`-per-round constraint.
+pub fn conforms_bursty_or_per_round(
+    p: &Pattern,
+    b: usize,
+    w: usize,
+    lambda: usize,
+    s: usize,
+) -> bool {
+    let rounds = p.rounds();
+    (1..=rounds).all(|j| {
+        let hi = (j + w - 1).min(rounds);
+        bursty_window_ok(p, j, hi, b, lambda) || per_round_window_ok(p, j, hi, s)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pat(rows: &[&[usize]], n: usize) -> Pattern {
+        // rows given as lists of straggler indices
+        Pattern::from_rows(
+            rows.iter()
+                .map(|set| (0..n).map(|i| set.contains(&i)).collect())
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn burst_lengths_counts_runs() {
+        let p = pat(&[&[0], &[0], &[], &[0, 1], &[1]], 3);
+        let mut b = p.burst_lengths();
+        b.sort_unstable();
+        assert_eq!(b, vec![1, 2, 2]); // worker0: 2,1; worker1: 2
+    }
+
+    #[test]
+    fn bursty_conformance_accepts_conforming() {
+        // B=2, W=3, λ=2: worker 0 bursts rounds 1-2; worker 1 at round 4.
+        let p = pat(&[&[0], &[0], &[], &[1], &[]], 4);
+        assert!(conforms_bursty(&p, 2, 3, 2));
+        assert!(!conforms_bursty(&p, 1, 3, 2), "burst of 2 violates B=1");
+        assert!(!conforms_bursty(&p, 2, 3, 0), "λ=0 forbids any straggler");
+    }
+
+    #[test]
+    fn bursty_temporal_violation_detected() {
+        // worker 0 straggles rounds 1 and 3: span 3 > B=2 within window W=3.
+        let p = pat(&[&[0], &[], &[0]], 2);
+        assert!(!conforms_bursty(&p, 2, 3, 2));
+        // with B=3 the span fits
+        assert!(conforms_bursty(&p, 3, 3, 2));
+    }
+
+    #[test]
+    fn bursty_spatial_violation_detected() {
+        // three distinct stragglers within a W=3 window, λ=2
+        let p = pat(&[&[0], &[1], &[2]], 4);
+        assert!(!conforms_bursty(&p, 1, 3, 2));
+        assert!(conforms_bursty(&p, 1, 3, 3));
+    }
+
+    #[test]
+    fn arbitrary_conformance() {
+        // N=2, W'=4, λ'=1: worker 0 straggles rounds 1 and 3 (non-consecutive).
+        let p = pat(&[&[0], &[], &[0], &[]], 3);
+        assert!(conforms_arbitrary(&p, 2, 4, 1));
+        assert!(!conforms_arbitrary(&p, 1, 4, 1), "2 straggles in window vs N=1");
+        // bursty with B=1 would reject this pattern
+        assert!(!conforms_bursty(&p, 1, 4, 1));
+    }
+
+    #[test]
+    fn per_round_conformance() {
+        let p = pat(&[&[0, 1], &[2]], 4);
+        assert!(conforms_per_round(&p, 2));
+        assert!(!conforms_per_round(&p, 1));
+    }
+
+    #[test]
+    fn mixed_window_disjunction() {
+        // A window with 3 distinct-but-one-per-round stragglers conforms
+        // to s=1-per-round though not to (B=1,W=3,λ=2)-bursty.
+        let p = pat(&[&[0], &[1], &[2]], 4);
+        assert!(conforms_bursty_or_per_round(&p, 1, 3, 2, 1));
+        assert!(!conforms_bursty_or_per_round(&p, 1, 3, 2, 0));
+    }
+
+    #[test]
+    fn straggle_fraction() {
+        let p = pat(&[&[0], &[0, 1]], 4);
+        assert!((p.straggle_fraction() - 3.0 / 8.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,157 @@
+//! Randomized property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over many seeded random cases; on failure it
+//! re-runs a bounded shrink loop that retries the generator with "smaller"
+//! size hints, then reports the smallest failing seed so the case can be
+//! replayed deterministically:
+//!
+//! ```no_run
+//! use sgc::testing::{check, Gen};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.usize_in(0, 100);
+//!     let b = g.usize_in(0, 100);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Random case generator handed to properties. Wraps an RNG plus a size
+/// hint the shrink loop drives down.
+pub struct Gen {
+    rng: Pcg32,
+    /// Size multiplier in (0, 1]; generators should scale ranges by it.
+    pub size: f64,
+    /// Case index (for diagnostics).
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize, size: f64) -> Self {
+        Gen { rng: Pcg32::new(seed, case as u64), size, case }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    /// usize in `[lo, hi]`, range shrunk towards `lo` by the size hint.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        self.rng.range_usize(lo, lo + span)
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, lo + (hi - lo) * self.size)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Pick one of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// Random subset of `[0, n)` with each element included w.p. `p`.
+    pub fn subset(&mut self, n: usize, p: f64) -> Vec<usize> {
+        (0..n).filter(|_| self.rng.chance(p)).collect()
+    }
+}
+
+/// Run `prop` over `cases` random cases. Panics (with replay info) if any
+/// case fails; the failing case is re-run at smaller sizes first to report
+/// the smallest reproduction found.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let seed = std::env::var("SGC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eeded_u64);
+    for case in 0..cases {
+        if run_case(&prop, seed, case, 1.0).is_ok() {
+            continue;
+        }
+        // Shrink: retry the same case seed with smaller size hints.
+        let mut smallest_failure = 1.0;
+        for &size in &[0.05, 0.1, 0.25, 0.5, 0.75] {
+            if run_case(&prop, seed, case, size).is_err() {
+                smallest_failure = size;
+                break;
+            }
+        }
+        // Re-run the smallest failure outside catch_unwind for the real
+        // panic message/backtrace.
+        eprintln!(
+            "property '{name}' failed: seed={seed} case={case} size={smallest_failure} \
+             (replay with SGC_PROP_SEED={seed})"
+        );
+        let mut g = Gen::new(seed, case, smallest_failure);
+        prop(&mut g);
+        unreachable!("property failed under catch_unwind but passed on replay");
+    }
+}
+
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    prop: &F,
+    seed: u64,
+    case: usize,
+    size: f64,
+) -> Result<(), ()> {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed, case, size);
+        prop(&mut g);
+    });
+    result.map_err(|_| ())
+}
+
+/// Quiet wrapper that suppresses the default panic hook while probing
+/// cases (the shrink loop intentionally panics many times).
+pub fn check_quiet<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    prop: F,
+) {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        check(name, cases, prop);
+    }));
+    std::panic::set_hook(prev);
+    if let Err(e) = outcome {
+        std::panic::resume_unwind(e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("add-commutes", 50, |g| {
+            let a = g.usize_in(0, 1000);
+            let b = g.usize_in(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check_quiet("always-false", 10, |_g| {
+            panic!("nope");
+        });
+    }
+
+    #[test]
+    fn subset_in_range() {
+        check("subset-bounds", 50, |g| {
+            let s = g.subset(30, 0.3);
+            assert!(s.iter().all(|&i| i < 30));
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        });
+    }
+}

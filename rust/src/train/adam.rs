@@ -1,0 +1,83 @@
+//! Adam optimizer (Kingma & Ba) — the paper's experiments use ADAM for
+//! all models (Sec. 4.2).
+
+/// Adam state over a list of flattened parameter tensors.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    step: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32, param_lens: &[usize]) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            step: 0,
+            m: param_lens.iter().map(|&l| vec![0.0; l]).collect(),
+            v: param_lens.iter().map(|&l| vec![0.0; l]).collect(),
+        }
+    }
+
+    /// Apply one update in place.
+    pub fn update(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+        assert_eq!(params.len(), grads.len());
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for ((p, g), (m, v)) in
+            params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.len(), g.len());
+            for i in 0..p.len() {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(x) = ||x - c||²
+        let c = [3.0f32, -2.0, 0.5];
+        let mut params = vec![vec![0.0f32; 3]];
+        let mut adam = Adam::new(0.05, &[3]);
+        for _ in 0..2000 {
+            let g: Vec<f32> = params[0].iter().zip(&c).map(|(x, t)| 2.0 * (x - t)).collect();
+            adam.update(&mut params, &[g]);
+        }
+        for (x, t) in params[0].iter().zip(&c) {
+            assert!((x - t).abs() < 1e-2, "{x} vs {t}");
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        let mut params = vec![vec![0.0f32]];
+        let mut adam = Adam::new(0.1, &[1]);
+        adam.update(&mut params, &[vec![123.0]]);
+        // Adam's first step is ≈ -lr · sign(g)
+        assert!((params[0][0] + 0.1).abs() < 1e-3, "{}", params[0][0]);
+        assert_eq!(adam.steps(), 1);
+    }
+}

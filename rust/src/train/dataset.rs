@@ -1,0 +1,184 @@
+//! Synthetic classification corpus.
+//!
+//! Substitute for MNIST/CIFAR (DESIGN.md §2): a Gaussian-mixture image
+//! model with one prototype per class plus per-sample noise, so the MLP
+//! has real class structure to learn and the loss curve has the familiar
+//! decaying shape (Fig. 2(b)).
+
+use crate::util::rng::Pcg32;
+
+/// Dataset configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetConfig {
+    pub input: usize,
+    pub classes: usize,
+    pub train_size: usize,
+    /// Noise std around class prototypes (larger = harder problem).
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig { input: 64, classes: 10, train_size: 8192, noise: 0.8, seed: 1234 }
+    }
+}
+
+/// In-memory synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub cfg: DatasetConfig,
+    /// Row-major `train_size × input`.
+    pub x: Vec<f32>,
+    /// Labels in `[0, classes)`.
+    pub y: Vec<u32>,
+    prototypes: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn generate(cfg: DatasetConfig) -> Self {
+        let mut rng = Pcg32::new(cfg.seed, 0xda7a);
+        let prototypes: Vec<f32> = (0..cfg.classes * cfg.input)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let mut x = Vec::with_capacity(cfg.train_size * cfg.input);
+        let mut y = Vec::with_capacity(cfg.train_size);
+        for _ in 0..cfg.train_size {
+            let c = rng.below(cfg.classes);
+            y.push(c as u32);
+            for d in 0..cfg.input {
+                let proto = prototypes[c * cfg.input + d];
+                x.push(proto + (cfg.noise * rng.normal()) as f32);
+            }
+        }
+        Dataset { cfg, x, y, prototypes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cfg.train_size
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sample a batch of `size` indices.
+    pub fn sample_batch(&self, size: usize, rng: &mut Pcg32) -> Vec<usize> {
+        (0..size).map(|_| rng.below(self.len())).collect()
+    }
+
+    /// Materialize samples into a padded chunk: `(x, y_onehot, wgt)` of
+    /// the fixed `chunk` size, with each real sample carrying weight
+    /// `sample_weight` and padding rows weight 0.
+    pub fn chunk_tensors(
+        &self,
+        indices: &[usize],
+        chunk: usize,
+        sample_weight: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        assert!(indices.len() <= chunk, "chunk overflow: {} > {chunk}", indices.len());
+        let (input, classes) = (self.cfg.input, self.cfg.classes);
+        let mut x = vec![0.0f32; chunk * input];
+        let mut y = vec![0.0f32; chunk * classes];
+        let mut w = vec![0.0f32; chunk];
+        for (row, &idx) in indices.iter().enumerate() {
+            x[row * input..(row + 1) * input]
+                .copy_from_slice(&self.x[idx * input..(idx + 1) * input]);
+            y[row * classes + self.y[idx] as usize] = 1.0;
+            w[row] = sample_weight;
+        }
+        (x, y, w)
+    }
+
+    /// Split a batch across `fractions` (chunk sizes of a scheme):
+    /// chunk `j` receives `round(frac_j · batch)` samples (with remainder
+    /// balancing so every sample lands in exactly one chunk).
+    pub fn split_batch(batch: &[usize], fractions: &[f64]) -> Vec<Vec<usize>> {
+        let n = batch.len();
+        let mut out: Vec<Vec<usize>> = Vec::with_capacity(fractions.len());
+        // largest-remainder apportionment
+        let raw: Vec<f64> = fractions.iter().map(|f| f * n as f64).collect();
+        let mut counts: Vec<usize> = raw.iter().map(|r| r.floor() as usize).collect();
+        let mut rem: Vec<(f64, usize)> =
+            raw.iter().enumerate().map(|(i, r)| (r - r.floor(), i)).collect();
+        rem.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let assigned: usize = counts.iter().sum();
+        for k in 0..n.saturating_sub(assigned) {
+            counts[rem[k % rem.len()].1] += 1;
+        }
+        let mut cursor = 0;
+        for &c in &counts {
+            out.push(batch[cursor..cursor + c].to_vec());
+            cursor += c;
+        }
+        debug_assert_eq!(cursor, n);
+        out
+    }
+
+    /// Class prototypes (for tests).
+    pub fn prototype(&self, class: usize) -> &[f32] {
+        &self.prototypes[class * self.cfg.input..(class + 1) * self.cfg.input]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Dataset::generate(DatasetConfig::default());
+        let b = Dataset::generate(DatasetConfig::default());
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn samples_cluster_around_prototypes() {
+        let cfg = DatasetConfig { noise: 0.1, ..Default::default() };
+        let ds = Dataset::generate(cfg);
+        // distance to own prototype < distance to another class's
+        let mut better = 0;
+        for i in 0..200 {
+            let c = ds.y[i] as usize;
+            let other = (c + 1) % cfg.classes;
+            let dist = |proto: &[f32]| -> f32 {
+                (0..cfg.input)
+                    .map(|d| (ds.x[i * cfg.input + d] - proto[d]).powi(2))
+                    .sum()
+            };
+            if dist(ds.prototype(c)) < dist(ds.prototype(other)) {
+                better += 1;
+            }
+        }
+        assert!(better > 190, "{better}/200");
+    }
+
+    #[test]
+    fn chunk_tensors_pads_with_zero_weight() {
+        let ds = Dataset::generate(DatasetConfig::default());
+        let (x, y, w) = ds.chunk_tensors(&[0, 1, 2], 8, 0.5);
+        assert_eq!(x.len(), 8 * 64);
+        assert_eq!(y.len(), 8 * 10);
+        assert_eq!(w, vec![0.5, 0.5, 0.5, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        // one-hot rows sum to 1 for real samples, 0 for padding
+        for row in 0..8 {
+            let s: f32 = y[row * 10..(row + 1) * 10].iter().sum();
+            assert_eq!(s, if row < 3 { 1.0 } else { 0.0 });
+        }
+    }
+
+    #[test]
+    fn split_batch_partitions_exactly() {
+        let batch: Vec<usize> = (0..100).collect();
+        let fractions = vec![0.5, 0.25, 0.25];
+        let parts = Dataset::split_batch(&batch, &fractions);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 100);
+        assert_eq!(parts[0].len(), 50);
+        // unequal fractions (M-SGC style)
+        let fr2 = vec![3.0 / 32.0; 8].into_iter().chain(vec![1.0 / 32.0; 8]).collect::<Vec<_>>();
+        let parts2 = Dataset::split_batch(&batch, &fr2);
+        assert_eq!(parts2.iter().map(|p| p.len()).sum::<usize>(), 100);
+    }
+}

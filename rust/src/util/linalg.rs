@@ -1,0 +1,339 @@
+//! Dense linear algebra for GC coefficient design and decoding.
+//!
+//! The (n,s)-GC decode step finds coefficients `β` over the responding
+//! workers `W` such that `Σ_w β_w B[w,:] = 1ᵀ` (Tandon et al. 2017). We
+//! solve the consistent overdetermined system through its normal equations
+//! (Cholesky on the (n-s)×(n-s) Gram matrix), which is both faster and more
+//! cache-friendly than Gaussian elimination on the full n×(n-s) system at
+//! the paper's n = 256.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `self * v` (v has len = cols).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows).map(|i| dot(self.row(i), v)).collect()
+    }
+
+    /// `selfᵀ * v` (v has len = rows).
+    pub fn tr_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += vi * a;
+            }
+        }
+        out
+    }
+
+    /// Dense matmul (small sizes only — verification paths).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `self * selfᵀ` (rows × rows), exploiting symmetry.
+    pub fn gram_rows(&self) -> Matrix {
+        let n = self.rows;
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = dot(self.row(i), self.row(j));
+                g[(i, j)] = v;
+                g[(j, i)] = v;
+            }
+        }
+        g
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Solve a square system `A x = b` with partial-pivoting Gaussian
+/// elimination. Returns `None` when `A` is (numerically) singular.
+pub fn solve_square(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    // augmented [A | b]
+    let mut m = vec![0.0; n * (n + 1)];
+    for i in 0..n {
+        m[i * (n + 1)..i * (n + 1) + n].copy_from_slice(a.row(i));
+        m[i * (n + 1) + n] = b[i];
+    }
+    let w = n + 1;
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = m[col * w + col].abs();
+        for r in col + 1..n {
+            let v = m[r * w + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..w {
+                m.swap(col * w + j, piv * w + j);
+            }
+        }
+        let d = m[col * w + col];
+        for r in col + 1..n {
+            let f = m[r * w + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..w {
+                m[r * w + j] -= f * m[col * w + j];
+            }
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = m[i * w + n];
+        for j in i + 1..n {
+            acc -= m[i * w + j] * x[j];
+        }
+        x[i] = acc / m[i * w + i];
+    }
+    Some(x)
+}
+
+/// Cholesky factorisation of an SPD matrix (in place lower triangle).
+/// Returns `None` if not positive definite.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 1e-12 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L Lᵀ x = b` given the Cholesky factor `L`.
+pub fn cholesky_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut acc = b[i];
+        for k in 0..i {
+            acc -= l[(i, k)] * y[k];
+        }
+        y[i] = acc / l[(i, i)];
+    }
+    // backward: Lᵀ x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = y[i];
+        for k in i + 1..n {
+            acc -= l[(k, i)] * x[k];
+        }
+        x[i] = acc / l[(i, i)];
+    }
+    x
+}
+
+/// Minimum-norm/least-squares solve of `Aᵀ x = b` where `A` is (k×n) with
+/// k ≤ n and full row rank: solves `(A Aᵀ) x = A b` via Cholesky.
+///
+/// This is exactly the GC decode shape: rows of `A` are the returned
+/// workers' coefficient vectors, `b` is the all-ones target.
+pub fn solve_consistent_rows(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(b.len(), a.cols);
+    let gram = a.gram_rows();
+    let rhs = a.matvec(b);
+    let l = cholesky(&gram)?;
+    Some(cholesky_solve(&l, &rhs))
+}
+
+/// Residual `‖Aᵀ x − b‖∞` — used to verify decodability.
+pub fn residual_inf(a: &Matrix, x: &[f64], b: &[f64]) -> f64 {
+    let atx = a.tr_matvec(x);
+    atx.iter().zip(b).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn solve_square_identity() {
+        let a = Matrix::identity(4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(solve_square(&a, &b).unwrap(), b);
+    }
+
+    #[test]
+    fn solve_square_random() {
+        let mut rng = Pcg32::seeded(17);
+        for n in [1, 2, 5, 20] {
+            let mut a = Matrix::zeros(n, n);
+            for v in a.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let x = solve_square(&a, &b).expect("nonsingular whp");
+            for (p, q) in x.iter().zip(&x_true) {
+                assert!((p - q).abs() < 1e-8, "{p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_square_singular_detected() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(solve_square(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Pcg32::seeded(23);
+        let n = 12;
+        let mut m = Matrix::zeros(n, n + 3);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let spd = m.gram_rows(); // full rank whp → SPD
+        let l = cholesky(&spd).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let x = cholesky_solve(&l, &b);
+        let back = spd.matvec(&x);
+        for (p, q) in back.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn consistent_rows_recovers_ones() {
+        // A simple decodable GC-like system: 3 rows over 4 columns whose
+        // row space contains the ones vector.
+        let a = Matrix::from_rows(&[
+            vec![0.5, 1.0, 0.0, 0.0],
+            vec![0.0, 1.0, -1.0, 0.0],
+            vec![0.5, 0.0, 1.0, 1.0],
+        ]);
+        // x = (2, -1, ?) -- solved numerically
+        let ones = vec![1.0; 4];
+        let x = solve_consistent_rows(&a, &ones).unwrap();
+        assert!(residual_inf(&a, &x, &ones) < 1e-9);
+    }
+
+    #[test]
+    fn matvec_tr_matvec_agree() {
+        let mut rng = Pcg32::seeded(31);
+        let a = {
+            let mut m = Matrix::zeros(6, 9);
+            for v in m.data.iter_mut() {
+                *v = rng.normal();
+            }
+            m
+        };
+        let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        // xᵀ (A y) == (Aᵀ x)ᵀ y
+        let lhs = dot(&x, &a.matvec(&y));
+        let rhs = dot(&a.tr_matvec(&x), &y);
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+}

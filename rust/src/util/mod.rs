@@ -1,0 +1,23 @@
+//! Substrate utilities.
+//!
+//! This environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `clap`, `serde_json`, `rayon`, …) are unavailable. Everything a
+//! downstream user would expect from them is implemented here, scoped to
+//! what the library needs:
+//!
+//! * [`rng`] — a PCG-family PRNG with normal/exponential samplers.
+//! * [`stats`] — summary statistics, percentiles, histograms, linear fits.
+//! * [`linalg`] — the dense solver behind GC decoding.
+//! * [`cli`] — a small argv parser for the `sgc` binary and examples.
+//! * [`threadpool`] — fixed-size worker pool used by the real-compute
+//!   cluster.
+//! * [`json`] — a writer for machine-readable metric dumps.
+//! * [`timer`] — wall-clock helpers.
+
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

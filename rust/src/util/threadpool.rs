@@ -1,0 +1,166 @@
+//! Fixed-size thread pool (tokio/rayon are unavailable offline).
+//!
+//! The real-compute cluster runs each simulated Lambda worker's partial
+//! gradient computation as a pool job; the master blocks on a round barrier
+//! built from the returned [`JobHandle`]s.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` worker threads.
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("sgc-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight }
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("worker threads alive");
+    }
+
+    /// Submit a job returning a value; the result arrives on a
+    /// [`JobHandle`].
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.execute(move || {
+            // Receiver may have been dropped (cancelled round) — ignore.
+            let _ = tx.send(f());
+        });
+        JobHandle { rx }
+    }
+
+    /// Block until the queue is drained and all jobs finished.
+    pub fn wait_idle(&self) {
+        while self.in_flight() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Handle for a submitted job's result.
+pub struct JobHandle<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block for the result.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("job panicked or pool dropped")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Wait up to `timeout`; `None` on expiry.
+    pub fn join_timeout(&self, timeout: std::time::Duration) -> Option<T> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn submit_returns_values() {
+        let pool = ThreadPool::new(3);
+        let handles: Vec<_> = (0..20).map(|i| pool.submit(move || i * i)).collect();
+        let results: Vec<usize> = handles.into_iter().map(|h| h.join()).collect();
+        assert_eq!(results, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_timeout_expires() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(|| {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            42
+        });
+        assert!(h.join_timeout(std::time::Duration::from_millis(10)).is_none());
+        assert_eq!(h.join_timeout(std::time::Duration::from_secs(5)), Some(42));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(20)));
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,67 @@
+//! Wall-clock helpers for benches and the real-compute cluster.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Human-readable duration, e.g. `1.24s`, `380ms`, `25.1us`.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(380)), "380.0ms");
+        assert_eq!(fmt_duration(Duration::from_micros(25)), "25.0us");
+        assert_eq!(fmt_duration(Duration::from_nanos(100)), "100ns");
+    }
+}

@@ -1,0 +1,311 @@
+//! End-to-end tests over the real AOT artifacts: PJRT load + execute,
+//! numeric gradient properties, and full coded training runs.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! note) when `artifacts/model.hlo.txt` is absent so `cargo test` stays
+//! green on a fresh checkout.
+
+use sgc::cluster::SimCluster;
+use sgc::coding::SchemeConfig;
+use sgc::runtime::{artifacts_dir, ComputePool, GradExecutable};
+use sgc::straggler::GilbertElliot;
+use sgc::train::{Dataset, DatasetConfig, MultiModelTrainer, TrainConfig};
+use sgc::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("model.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn init_params(dims: &sgc::runtime::ModelDims, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    dims.param_shapes()
+        .iter()
+        .map(|&(r, c)| {
+            let scale = if r == 1 { 0.0 } else { (2.0 / r as f64).sqrt() };
+            (0..r * c).map(|_| (rng.normal() * scale) as f32).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn artifact_loads_and_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let exe = GradExecutable::load(&artifacts_dir()).expect("load artifact");
+    let d = exe.dims;
+    let params = init_params(&d, 42);
+    let mut rng = Pcg32::seeded(7);
+    let x: Vec<f32> = (0..d.chunk * d.input).map(|_| rng.normal() as f32).collect();
+    let mut y = vec![0.0f32; d.chunk * d.classes];
+    for row in 0..d.chunk {
+        y[row * d.classes + rng.below(d.classes)] = 1.0;
+    }
+    let w = vec![1.0 / d.chunk as f32; d.chunk];
+    let (loss, grads) = exe.grad_chunk(&params, &x, &y, &w).expect("grad_chunk");
+    // loss ≈ ln(10) for random init on 10 classes
+    assert!(loss > 0.5 && loss < 10.0, "loss {loss}");
+    assert_eq!(grads.len(), 6);
+    for (g, len) in grads.iter().zip(d.param_lens()) {
+        assert_eq!(g.len(), len);
+    }
+    let norm: f32 = grads.iter().flatten().map(|v| v * v).sum::<f32>().sqrt();
+    assert!(norm > 1e-4, "gradient should be non-trivial, norm {norm}");
+}
+
+#[test]
+fn padding_rows_do_not_change_gradients() {
+    if !have_artifacts() {
+        return;
+    }
+    let exe = GradExecutable::load(&artifacts_dir()).expect("load artifact");
+    let d = exe.dims;
+    let params = init_params(&d, 1);
+    let mut rng = Pcg32::seeded(3);
+    let real = d.chunk / 2;
+    let mut x = vec![0.0f32; d.chunk * d.input];
+    let mut y = vec![0.0f32; d.chunk * d.classes];
+    let mut w = vec![0.0f32; d.chunk];
+    for row in 0..real {
+        for k in 0..d.input {
+            x[row * d.input + k] = rng.normal() as f32;
+        }
+        y[row * d.classes + rng.below(d.classes)] = 1.0;
+        w[row] = 1.0 / real as f32;
+    }
+    let (l1, g1) = exe.grad_chunk(&params, &x, &y, &w).unwrap();
+    // fill padding with garbage — zero weight must nullify it
+    for row in real..d.chunk {
+        for k in 0..d.input {
+            x[row * d.input + k] = 1e3;
+        }
+        y[row * d.classes] = 1.0;
+    }
+    let (l2, g2) = exe.grad_chunk(&params, &x, &y, &w).unwrap();
+    assert!((l1 - l2).abs() < 1e-4, "{l1} vs {l2}");
+    for (a, b) in g1.iter().flatten().zip(g2.iter().flatten()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn chunk_gradients_are_additive() {
+    if !have_artifacts() {
+        return;
+    }
+    let exe = GradExecutable::load(&artifacts_dir()).expect("load artifact");
+    let d = exe.dims;
+    let params = init_params(&d, 5);
+    let ds = Dataset::generate(DatasetConfig::default());
+    let mut rng = Pcg32::seeded(11);
+    let batch = ds.sample_batch(d.chunk, &mut rng);
+    let wfull = 1.0 / batch.len() as f32;
+    // full batch in one chunk
+    let (xa, ya, wa) = ds.chunk_tensors(&batch, d.chunk, wfull);
+    let (loss_full, g_full) = exe.grad_chunk(&params, &xa, &ya, &wa).unwrap();
+    // two half chunks, summed
+    let (h1, h2) = batch.split_at(batch.len() / 2);
+    let mut loss_sum = 0.0f32;
+    let mut g_sum: Vec<Vec<f32>> = d.param_lens().iter().map(|&l| vec![0.0; l]).collect();
+    for half in [h1, h2] {
+        let (x, y, w) = ds.chunk_tensors(half, d.chunk, wfull);
+        let (l, g) = exe.grad_chunk(&params, &x, &y, &w).unwrap();
+        loss_sum += l;
+        for (acc, gi) in g_sum.iter_mut().zip(&g) {
+            for (a, v) in acc.iter_mut().zip(gi) {
+                *a += v;
+            }
+        }
+    }
+    assert!((loss_full - loss_sum).abs() < 1e-3, "{loss_full} vs {loss_sum}");
+    for (a, b) in g_full.iter().flatten().zip(g_sum.iter().flatten()) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+/// Train a few iterations under each scheme; the loss must decrease and
+/// all coded/plain decode paths must agree with training progress.
+#[test]
+fn coded_training_reduces_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    let n = 8;
+    let pool = Arc::new(ComputePool::new(artifacts_dir(), 2).expect("pool"));
+    let dataset = Dataset::generate(DatasetConfig { train_size: 2048, ..Default::default() });
+    for scheme in [
+        SchemeConfig::gc(n, 2),
+        SchemeConfig::msgc(n, 1, 2, 2),
+        SchemeConfig::sr_sgc(n, 1, 2, 3),
+        SchemeConfig::uncoded(n),
+    ] {
+        let cfg = TrainConfig {
+            models: 2,
+            iterations: 8,
+            batch: 128,
+            lr: 4e-3,
+            seed: 9,
+            ..Default::default()
+        };
+        let mut trainer =
+            MultiModelTrainer::new(scheme.clone(), cfg, Arc::clone(&pool), dataset.clone())
+                .expect("trainer");
+        let mut cluster =
+            SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.05, 0.6, 3), 13);
+        let report = trainer.run(&mut cluster).expect("train");
+        assert_eq!(report.deadline_violations, 0, "{}", scheme.label());
+        assert_eq!(report.jobs_completed, 16, "{}", scheme.label());
+        for (m, curve) in report.losses.iter().enumerate() {
+            let first = curve.first().expect("loss logged").loss;
+            let last = curve.last().unwrap().loss;
+            assert!(
+                last < first,
+                "{} model {m}: loss {first} → {last} did not decrease",
+                scheme.label()
+            );
+        }
+    }
+}
+
+/// Replication-base variants (Appendix G) train correctly too.
+#[test]
+fn rep_variants_train() {
+    if !have_artifacts() {
+        return;
+    }
+    let n = 6;
+    let pool = Arc::new(ComputePool::new(artifacts_dir(), 2).expect("pool"));
+    let dataset = Dataset::generate(DatasetConfig { train_size: 1024, ..Default::default() });
+    for spec in ["gc-rep:2", "sr-sgc-rep:1,2,3", "m-sgc-rep:1,2,1"] {
+        let scheme = SchemeConfig::parse(n, spec).unwrap();
+        let cfg = TrainConfig {
+            models: 2,
+            iterations: 5,
+            batch: 96,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut trainer =
+            MultiModelTrainer::new(scheme, cfg, Arc::clone(&pool), dataset.clone()).unwrap();
+        let mut cluster =
+            SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.05, 0.7, 4), 11);
+        let report = trainer.run(&mut cluster).expect("train");
+        assert_eq!(report.deadline_violations, 0, "{spec}");
+        for curve in &report.losses {
+            assert!(curve.last().unwrap().loss < curve.first().unwrap().loss, "{spec}");
+        }
+    }
+}
+
+/// Appendix-I multi-model learning: each model trains on its *own*
+/// dataset; all still converge under coded scheduling.
+#[test]
+fn multi_dataset_training() {
+    if !have_artifacts() {
+        return;
+    }
+    let n = 8;
+    let pool = Arc::new(ComputePool::new(artifacts_dir(), 2).expect("pool"));
+    let datasets: Vec<Dataset> = (0..2u64)
+        .map(|k| {
+            Dataset::generate(DatasetConfig {
+                train_size: 1024,
+                seed: 100 + k,
+                noise: 0.5 + 0.3 * k as f64,
+                ..Default::default()
+            })
+        })
+        .collect();
+    let cfg = TrainConfig { models: 2, iterations: 6, batch: 128, seed: 5, ..Default::default() };
+    let mut trainer = MultiModelTrainer::with_datasets(
+        SchemeConfig::msgc(n, 1, 2, 2),
+        cfg,
+        pool,
+        datasets,
+    )
+    .unwrap();
+    let mut cluster =
+        SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.05, 0.7, 2), 6);
+    let report = trainer.run(&mut cluster).expect("train");
+    assert_eq!(report.deadline_violations, 0);
+    for (m, curve) in report.losses.iter().enumerate() {
+        assert!(
+            curve.last().unwrap().loss < curve.first().unwrap().loss,
+            "model {m} on its own dataset must improve"
+        );
+    }
+    // wrong dataset count must be rejected
+    let pool2 = Arc::new(ComputePool::new(artifacts_dir(), 1).expect("pool"));
+    let bad = MultiModelTrainer::with_datasets(
+        SchemeConfig::msgc(n, 1, 2, 2),
+        TrainConfig { models: 3, ..Default::default() },
+        pool2,
+        vec![
+            Dataset::generate(DatasetConfig { train_size: 64, ..Default::default() }),
+            Dataset::generate(DatasetConfig { train_size: 64, ..Default::default() }),
+        ],
+    );
+    assert!(bad.is_err());
+}
+
+/// Failure injection: a bad artifact directory must error cleanly, not
+/// hang or panic.
+#[test]
+fn compute_pool_bad_artifacts_errors() {
+    let bad = std::env::temp_dir().join("sgc-definitely-missing");
+    let err = match ComputePool::new(bad, 1) {
+        Ok(_) => panic!("expected error for missing artifacts"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("model_meta.txt") || msg.contains("reading"), "{msg}");
+}
+
+/// The decoded coded gradient must match the plain sum: run the same seed
+/// under uncoded and GC; with no stragglers and identical batches the
+/// loss trajectories must coincide up to decode round-off.
+#[test]
+fn gc_decode_matches_uncoded_gradients() {
+    if !have_artifacts() {
+        return;
+    }
+    let n = 6;
+    let pool = Arc::new(ComputePool::new(artifacts_dir(), 2).expect("pool"));
+    let dataset = Dataset::generate(DatasetConfig { train_size: 1024, ..Default::default() });
+    let run = |scheme: SchemeConfig| {
+        let cfg = TrainConfig {
+            models: 1,
+            iterations: 4,
+            batch: 60,
+            lr: 4e-3,
+            seed: 21,
+            ..Default::default()
+        };
+        let mut trainer =
+            MultiModelTrainer::new(scheme, cfg, Arc::clone(&pool), dataset.clone()).unwrap();
+        // no stragglers → identical effective responses
+        let mut cluster = SimCluster::new(
+            n,
+            sgc::cluster::LatencyParams::default(),
+            Box::new(sgc::straggler::NoStragglers { n }),
+            5,
+        );
+        trainer.run(&mut cluster).unwrap()
+    };
+    let unc = run(SchemeConfig::uncoded(n));
+    let gc = run(SchemeConfig::gc(n, 2));
+    let lu: Vec<f64> = unc.losses[0].iter().map(|p| p.loss).collect();
+    let lg: Vec<f64> = gc.losses[0].iter().map(|p| p.loss).collect();
+    assert_eq!(lu.len(), lg.len());
+    for (a, b) in lu.iter().zip(&lg) {
+        assert!(
+            (a - b).abs() < 2e-2 * (1.0 + a.abs()),
+            "loss curves diverged: {lu:?} vs {lg:?}"
+        );
+    }
+}

@@ -1,0 +1,210 @@
+//! Integration tests: master + schemes + simulated cluster + probe, at
+//! Table-1-like (but scaled-down) configurations.
+
+use sgc::cluster::{LatencyParams, SimCluster};
+use sgc::coding::SchemeConfig;
+use sgc::coordinator::{Master, RunConfig, WaitPolicy};
+use sgc::probe::{grid_search, DelayProfile, SearchSpace};
+use sgc::straggler::{GilbertElliot, NoStragglers, Pattern, TraceProcess};
+
+fn ge_cluster(n: usize, seed: u64) -> SimCluster {
+    SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, seed), seed ^ 0x77)
+}
+
+fn run(scheme: SchemeConfig, jobs: usize, seed: u64) -> sgc::coordinator::RunReport {
+    let n = scheme.n;
+    let mut master = Master::new(scheme, RunConfig { jobs, ..Default::default() });
+    master.run(&mut ge_cluster(n, seed))
+}
+
+#[test]
+fn scheme_ordering_matches_table1() {
+    // Table 1's qualitative ordering at a scaled-down config:
+    // M-SGC < SR-SGC ≤ GC < uncoded in total runtime (averaged seeds).
+    let n = 128;
+    let jobs = 60;
+    let avg = |cfg: SchemeConfig| -> f64 {
+        (0..4).map(|s| run(cfg.clone(), jobs, 100 + s).total_runtime_s).sum::<f64>() / 4.0
+    };
+    // parameters scaled from the paper's n=256 selections (λ ≈ n/10)
+    let msgc = avg(SchemeConfig::msgc(n, 1, 2, 14));
+    let srsgc = avg(SchemeConfig::sr_sgc(n, 2, 3, 12));
+    let gc = avg(SchemeConfig::gc(n, 8));
+    let unc = avg(SchemeConfig::uncoded(n));
+    assert!(msgc < gc, "m-sgc {msgc} vs gc {gc}");
+    assert!(srsgc < unc, "sr-sgc {srsgc} vs uncoded {unc}");
+    assert!(gc < unc, "gc {gc} vs uncoded {unc}");
+    assert!(msgc <= srsgc * 1.05, "m-sgc {msgc} vs sr-sgc {srsgc}");
+}
+
+#[test]
+fn all_jobs_always_decode_with_conformance_repair() {
+    for spec in ["gc:6", "gc-rep:7", "sr-sgc:1,2,8", "m-sgc:1,2,8", "m-sgc:2,3,10", "uncoded"] {
+        let cfg = SchemeConfig::parse(32, spec).unwrap();
+        let rep = run(cfg, 40, 5);
+        assert_eq!(rep.deadline_violations, 0, "{spec}");
+        assert!(rep.job_completion_s.iter().all(|t| t.is_finite()), "{spec}");
+        // completion times are monotone in job index... up to batching of
+        // rounds: job t completes no later than job t+1
+        for w in rep.job_completion_s.windows(2) {
+            assert!(w[0] <= w[1] + 1e-9, "{spec}: non-monotone completions");
+        }
+    }
+}
+
+#[test]
+fn deadline_decode_can_violate_on_msgc_but_not_conformance() {
+    // A hostile trace: worker 0 straggles two rounds in every three —
+    // violates (B=1, W=2)-style models persistently.
+    let n = 8;
+    let mut rows = Vec::new();
+    for r in 0..60usize {
+        let mut row = vec![false; n];
+        if r % 3 != 2 {
+            row[0] = true;
+        }
+        rows.push(row);
+    }
+    let pattern = Pattern::from_rows(rows);
+    let mk = |policy| {
+        let mut master = Master::new(
+            SchemeConfig::msgc(n, 1, 2, 2),
+            RunConfig { jobs: 40, wait_policy: policy, ..Default::default() },
+        );
+        let mut cluster = SimCluster::new(
+            n,
+            // no severity decay: the burst continuer stays slow, forcing
+            // explicit wait-outs every burst
+            LatencyParams { straggle_decay: 1.0, ..Default::default() },
+            Box::new(TraceProcess::new(pattern.clone())),
+            9,
+        );
+        master.run(&mut cluster)
+    };
+    let repair = mk(WaitPolicy::ConformanceRepair);
+    assert_eq!(repair.deadline_violations, 0);
+    // repair must have waited out rounds to stay conforming
+    assert!(repair.waitout_rounds() > 5);
+    let lazy = mk(WaitPolicy::DeadlineDecode);
+    // lazy waits only at deadlines; with M-SGC's fixed diagonal it still
+    // decodes (single worker straggling), but must wait at deadline
+    // rounds instead
+    assert_eq!(lazy.rounds.len(), repair.rounds.len());
+}
+
+#[test]
+fn mu_controls_straggler_sensitivity() {
+    // Larger μ admits more workers before cutoff → fewer detected
+    // stragglers.
+    let n = 64;
+    let detect = |mu: f64| {
+        let mut master =
+            Master::new(SchemeConfig::gc(n, 6), RunConfig { jobs: 30, mu, ..Default::default() });
+        let rep = master.run(&mut ge_cluster(n, 42));
+        rep.rounds.iter().map(|r| r.detected_stragglers).sum::<usize>()
+    };
+    let tight = detect(0.3);
+    let loose = detect(5.0);
+    assert!(loose < tight, "mu=5 detected {loose} vs mu=0.3 {tight}");
+}
+
+#[test]
+fn no_stragglers_means_no_waitouts_and_tight_rounds() {
+    let n = 16;
+    let mut master =
+        Master::new(SchemeConfig::msgc(n, 1, 2, 4), RunConfig { jobs: 20, ..Default::default() });
+    let mut cluster =
+        SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 3);
+    let rep = master.run(&mut cluster);
+    assert_eq!(rep.deadline_violations, 0);
+    assert_eq!(rep.waitout_rounds(), 0);
+    assert!(rep.true_pattern.straggle_fraction() == 0.0);
+}
+
+#[test]
+fn detected_stragglers_track_true_states() {
+    let n = 128;
+    let mut master =
+        Master::new(SchemeConfig::gc(n, 12), RunConfig { jobs: 50, ..Default::default() });
+    let rep = master.run(&mut ge_cluster(n, 11));
+    // per-round agreement between μ-rule detections and GE ground truth
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for r in 1..=rep.detected_pattern.rounds() {
+        for i in 0..n {
+            total += 1;
+            if rep.detected_pattern.is_straggler(i, r) == rep.true_pattern.is_straggler(i, r) {
+                agree += 1;
+            }
+        }
+    }
+    let acc = agree as f64 / total as f64;
+    assert!(acc > 0.95, "detection accuracy {acc}");
+}
+
+#[test]
+fn probe_selects_reasonable_gc_parameter() {
+    // With the default GE fit at n=64 (~3-4 stragglers/round), the probe
+    // should not pick extreme s values.
+    let n = 64;
+    let mut cluster = ge_cluster(n, 21);
+    let profile = DelayProfile::capture(&mut cluster, 30, 1.0 / n as f64);
+    let alpha = cluster.latency.alpha_s_per_load;
+    let cands: Vec<SchemeConfig> = (1..=16).map(|s| SchemeConfig::gc(n, s)).collect();
+    let ranked = grid_search(&cands, &profile, alpha, 30);
+    let best_s = match ranked[0].config.kind {
+        sgc::coding::SchemeKind::Gc { s } => s,
+        _ => unreachable!(),
+    };
+    assert!((2..=12).contains(&best_s), "probe picked s={best_s}");
+}
+
+#[test]
+fn search_space_enumerations_are_buildable() {
+    let sp = SearchSpace::paper_default(32);
+    let total = sp.gc_candidates().len() + sp.sr_sgc_candidates().len()
+        + sp.m_sgc_candidates().len();
+    assert!(total > 50, "search space too small: {total}");
+}
+
+#[test]
+fn runs_are_deterministic_given_seed() {
+    let a = run(SchemeConfig::msgc(16, 1, 2, 4), 25, 77);
+    let b = run(SchemeConfig::msgc(16, 1, 2, 4), 25, 77);
+    assert_eq!(a.total_runtime_s, b.total_runtime_s);
+    assert_eq!(a.job_completion_s, b.job_completion_s);
+}
+
+#[test]
+fn decode_in_idle_hides_decode_cost() {
+    let n = 32;
+    let mk = |decode_in_idle| {
+        let mut master = Master::new(
+            SchemeConfig::gc(n, 4),
+            RunConfig { jobs: 20, measure_decode: true, decode_in_idle, ..Default::default() },
+        );
+        master.run(&mut ge_cluster(n, 9)).total_runtime_s
+    };
+    let hidden = mk(true);
+    let exposed = mk(false);
+    assert!(exposed >= hidden, "decode-on-path {exposed} < hidden {hidden}");
+}
+
+#[test]
+fn storage_bound_cluster_has_fatter_tails() {
+    // Appendix L: EFS-bound workload: completion CDF tail forces larger μ.
+    use sgc::cluster::StorageParams;
+    let n = 64;
+    let mk = |with_storage: bool| {
+        let mut c = ge_cluster(n, 31);
+        if with_storage {
+            c = c.with_storage(StorageParams::resnet18_efs());
+        }
+        let s = c.sample_round(&vec![0.02; n]);
+        let mut f = s.finish;
+        f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // p90 / p10 spread
+        f[(0.9 * n as f64) as usize] / f[(0.1 * n as f64) as usize]
+    };
+    assert!(mk(true) > mk(false), "storage must widen the spread");
+}

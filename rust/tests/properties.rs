@@ -1,0 +1,232 @@
+//! Property-based tests of the paper's theorems over randomized
+//! conforming straggler patterns (Prop 3.1, Prop 3.2, Appendix F/G).
+
+use sgc::coding::{
+    GcRepScheme, GcScheme, MSgcParams, MSgcScheme, Scheme, SrSgcParams, SrSgcScheme,
+};
+use sgc::straggler::generators::{gen_conforming, periodic_bursty, Model};
+use sgc::straggler::{conforms_bursty, Pattern};
+use sgc::testing::{check, Gen};
+
+/// Drive a scheme over a fixed pattern; returns whether every job was
+/// decodable at its deadline.
+fn decodes_all(mut scheme: Box<dyn Scheme>, pattern: &Pattern) -> bool {
+    let total = scheme.total_rounds();
+    assert!(pattern.rounds() >= total, "pattern too short");
+    let mut ok = true;
+    for r in 1..=total {
+        scheme.assign_round(r);
+        let responded: Vec<bool> =
+            (0..pattern.n).map(|i| !pattern.is_straggler(i, r)).collect();
+        scheme.commit_round(r, &responded);
+        if let Some(t) = scheme.deadline_job(r) {
+            ok &= scheme.decodable(t);
+        }
+    }
+    ok
+}
+
+#[test]
+fn prop_gc_tolerates_s_per_round() {
+    check("gc-s-per-round", 60, |g: &mut Gen| {
+        let n = g.usize_in(3, 20);
+        let s = g.usize_in(0, n - 1);
+        let jobs = g.usize_in(1, 20);
+        let pat = gen_conforming(n, jobs + 1, Model::PerRound { s }, 0.5, g.rng());
+        assert!(
+            decodes_all(Box::new(GcScheme::new(n, s, jobs)), &pat),
+            "GC(n={n},s={s}) failed on conforming pattern"
+        );
+    });
+}
+
+#[test]
+fn prop_3_1_sr_sgc_tolerates_bursty() {
+    check("sr-sgc-bursty", 50, |g: &mut Gen| {
+        let n = g.usize_in(4, 16);
+        let b = g.usize_in(1, 3);
+        let x = g.usize_in(1, 3);
+        let w = x * b + 1;
+        let lambda = g.usize_in(1, n);
+        let p = SrSgcParams { n, b, w, lambda };
+        if p.s() >= n {
+            return;
+        }
+        let jobs = g.usize_in(1, 25);
+        let pat = gen_conforming(
+            n,
+            jobs + b + 1,
+            Model::Bursty { b, w, lambda },
+            0.4,
+            g.rng(),
+        );
+        assert!(
+            decodes_all(Box::new(SrSgcScheme::new(p, jobs)), &pat),
+            "SR-SGC{p:?} failed on conforming bursty pattern"
+        );
+    });
+}
+
+#[test]
+fn prop_3_1_sr_sgc_tolerates_s_per_round_windows() {
+    check("sr-sgc-per-round", 50, |g: &mut Gen| {
+        let n = g.usize_in(4, 16);
+        let b = g.usize_in(1, 3);
+        let w = b + 1; // x = 1
+        let lambda = g.usize_in(1, n);
+        let p = SrSgcParams { n, b, w, lambda };
+        if p.s() >= n {
+            return;
+        }
+        let jobs = g.usize_in(1, 20);
+        let pat =
+            gen_conforming(n, jobs + b + 1, Model::PerRound { s: p.s() }, 0.5, g.rng());
+        assert!(
+            decodes_all(Box::new(SrSgcScheme::new(p, jobs)), &pat),
+            "SR-SGC{p:?} failed on s-per-round pattern"
+        );
+    });
+}
+
+#[test]
+fn prop_3_2_m_sgc_tolerates_bursty() {
+    check("m-sgc-bursty", 50, |g: &mut Gen| {
+        let n = g.usize_in(3, 12);
+        let w = g.usize_in(2, 5);
+        let b = g.usize_in(1, w - 1);
+        let lambda = g.usize_in(0, n);
+        let p = MSgcParams { n, b, w, lambda };
+        let jobs = g.usize_in(1, 20);
+        let pat = gen_conforming(
+            n,
+            jobs + p.delay() + 1,
+            Model::Bursty { b, w, lambda },
+            0.35,
+            g.rng(),
+        );
+        assert!(
+            decodes_all(Box::new(MSgcScheme::new(p, jobs)), &pat),
+            "M-SGC{p:?} failed on conforming bursty pattern"
+        );
+    });
+}
+
+#[test]
+fn prop_3_2_m_sgc_tolerates_arbitrary() {
+    check("m-sgc-arbitrary", 50, |g: &mut Gen| {
+        let n = g.usize_in(3, 12);
+        let w = g.usize_in(2, 5);
+        let b = g.usize_in(1, w - 1);
+        let lambda = g.usize_in(0, n);
+        let p = MSgcParams { n, b, w, lambda };
+        let jobs = g.usize_in(1, 20);
+        // (N = B, W' = W + B - 1, λ' = λ)-arbitrary
+        let pat = gen_conforming(
+            n,
+            jobs + p.delay() + 1,
+            Model::Arbitrary { n_limit: b, w: w + b - 1, lambda },
+            0.35,
+            g.rng(),
+        );
+        assert!(
+            decodes_all(Box::new(MSgcScheme::new(p, jobs)), &pat),
+            "M-SGC{p:?} failed on conforming arbitrary pattern"
+        );
+    });
+}
+
+#[test]
+fn prop_m_sgc_survives_worst_case_periodic() {
+    // The Appendix-F lower-bound pattern (Fig. 8) is tight for M-SGC:
+    // the scheme must still decode every job at its deadline.
+    check("m-sgc-worst-case", 30, |g: &mut Gen| {
+        let n = g.usize_in(3, 10);
+        let w = g.usize_in(2, 4);
+        let b = g.usize_in(1, w - 1);
+        let lambda = g.usize_in(0, n);
+        let p = MSgcParams { n, b, w, lambda };
+        let jobs = g.usize_in(5, 25);
+        let pat = periodic_bursty(n, jobs + p.delay() + 1, b, w, lambda);
+        assert!(conforms_bursty(&pat, b, w, lambda));
+        assert!(
+            decodes_all(Box::new(MSgcScheme::new(p, jobs)), &pat),
+            "M-SGC{p:?} failed on the worst-case periodic pattern"
+        );
+    });
+}
+
+#[test]
+fn prop_gc_rep_tolerates_one_survivor_per_group() {
+    check("gc-rep-survivor", 40, |g: &mut Gen| {
+        let groups = g.usize_in(1, 5);
+        let s = g.usize_in(0, 4);
+        let n = groups * (s + 1);
+        let jobs = g.usize_in(1, 10);
+        let mut scheme = GcRepScheme::new(n, s, jobs);
+        for r in 1..=jobs {
+            scheme.assign_round(r);
+            // in each group, pick exactly one survivor at random
+            let mut responded = vec![false; n];
+            for grp in 0..groups {
+                let survivor = grp * (s + 1) + g.usize_in(0, s);
+                responded[survivor] = true;
+            }
+            scheme.commit_round(r, &responded);
+            assert!(scheme.decodable(r), "n={n},s={s},r={r}");
+        }
+    });
+}
+
+#[test]
+fn prop_gc_code_numeric_decode_over_random_subsets() {
+    use sgc::coding::GcCode;
+    check("gc-code-numeric", 25, |g: &mut Gen| {
+        let n = g.usize_in(3, 24);
+        let s = g.usize_in(0, (n - 1).min(8));
+        let dim = g.usize_in(1, 12);
+        let mut code = GcCode::new(n, s, 1234);
+        // random partial gradients
+        let partials: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| g.rng().normal() as f32).collect())
+            .collect();
+        let truth: Vec<f32> =
+            (0..dim).map(|d| partials.iter().map(|p| p[d]).sum()).collect();
+        let workers = g.rng().sample_indices(n, n - s);
+        let encoded: Vec<Vec<f32>> = workers
+            .iter()
+            .map(|&i| {
+                let sup = sgc::coding::gc::cyclic_support(i, s, n);
+                let refs: Vec<&[f32]> = sup.iter().map(|&c| partials[c].as_slice()).collect();
+                code.encode(i, &refs)
+            })
+            .collect();
+        let results: Vec<&[f32]> = encoded.iter().map(|e| e.as_slice()).collect();
+        let decoded = code.decode(&workers, &results).expect("decodable");
+        for (a, b) in decoded.iter().zip(&truth) {
+            assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "{a} vs {b} (n={n},s={s})");
+        }
+    });
+}
+
+#[test]
+fn prop_m_sgc_round_load_never_exceeds_formula() {
+    check("m-sgc-load-bound", 30, |g: &mut Gen| {
+        let n = g.usize_in(3, 10);
+        let w = g.usize_in(2, 5);
+        let b = g.usize_in(1, w - 1);
+        let lambda = g.usize_in(0, n);
+        let p = MSgcParams { n, b, w, lambda };
+        let jobs = g.usize_in(3, 15);
+        let mut scheme = MSgcScheme::new(p, jobs);
+        let spec = scheme.spec().clone();
+        for r in 1..=scheme.total_rounds() {
+            let tasks = scheme.assign_round(r);
+            for t in &tasks {
+                assert!(spec.task_load(t) <= spec.load + 1e-9);
+            }
+            // random responses (any pattern: load bound is unconditional)
+            let responded: Vec<bool> = (0..n).map(|_| g.rng().chance(0.8)).collect();
+            scheme.commit_round(r, &responded);
+        }
+    });
+}
