@@ -10,9 +10,12 @@ pub use latency::LatencyParams;
 pub use sim::{RoundSample, SimCluster};
 pub use storage::StorageParams;
 
-/// Anything the master can run rounds against: the stochastic simulator,
-/// the probe's load-adjusted profile replayer, or (in examples) a
-/// real-compute thread pool.
+/// The unified execution backend the session drivers pump rounds
+/// through: the stochastic simulator ([`SimCluster`]), trace/profile
+/// replay ([`crate::probe::ProfileCluster`], [`SimCluster::from_trace`]),
+/// or a real-compute thread pool. Backends only turn per-worker loads
+/// into per-worker completion times; every protocol decision stays in
+/// [`crate::session::SgcSession`].
 pub trait Cluster {
     fn n(&self) -> usize;
 

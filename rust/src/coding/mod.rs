@@ -46,8 +46,16 @@ impl SchemeConfig {
         SchemeConfig { n, kind: SchemeKind::SrSgc { b, w, lambda } }
     }
 
+    pub fn sr_sgc_rep(n: usize, b: usize, w: usize, lambda: usize) -> Self {
+        SchemeConfig { n, kind: SchemeKind::SrSgcRep { b, w, lambda } }
+    }
+
     pub fn msgc(n: usize, b: usize, w: usize, lambda: usize) -> Self {
         SchemeConfig { n, kind: SchemeKind::MSgc { b, w, lambda } }
+    }
+
+    pub fn msgc_rep(n: usize, b: usize, w: usize, lambda: usize) -> Self {
+        SchemeConfig { n, kind: SchemeKind::MSgcRep { b, w, lambda } }
     }
 
     pub fn uncoded(n: usize) -> Self {
@@ -116,11 +124,16 @@ impl SchemeConfig {
     }
 
     /// Parse a CLI spec like `gc:15`, `sr-sgc:2,3,23`, `m-sgc:1,2,27`,
-    /// `uncoded`.
+    /// `uncoded` — or the [`label`](Self::label) form (`gc(s=15)`,
+    /// `m-sgc-rep(1,2,27)`), so labels round-trip through `parse`.
     pub fn parse(n: usize, spec: &str) -> anyhow::Result<Self> {
         let (kind, rest) = match spec.split_once(':') {
             Some((k, r)) => (k, r),
-            None => (spec, ""),
+            None => match spec.strip_suffix(')').and_then(|s| s.split_once('(')) {
+                // label form: `kind(params…)`, with GC's `s=` prefix
+                Some((k, inner)) => (k, inner.strip_prefix("s=").unwrap_or(inner)),
+                None => (spec, ""),
+            },
         };
         let nums: Vec<usize> = if rest.is_empty() {
             Vec::new()
@@ -179,8 +192,11 @@ mod tests {
     fn parse_round_trips() {
         let cases = [
             ("gc:15", SchemeKind::Gc { s: 15 }),
+            ("gc-rep:15", SchemeKind::GcRep { s: 15 }),
             ("sr-sgc:2,3,23", SchemeKind::SrSgc { b: 2, w: 3, lambda: 23 }),
+            ("sr-sgc-rep:2,3,23", SchemeKind::SrSgcRep { b: 2, w: 3, lambda: 23 }),
             ("m-sgc:1,2,27", SchemeKind::MSgc { b: 1, w: 2, lambda: 27 }),
+            ("m-sgc-rep:1,2,27", SchemeKind::MSgcRep { b: 1, w: 2, lambda: 27 }),
             ("uncoded", SchemeKind::Uncoded),
         ];
         for (spec, kind) in cases {
@@ -189,6 +205,26 @@ mod tests {
         }
         assert!(SchemeConfig::parse(4, "nope:1").is_err());
         assert!(SchemeConfig::parse(4, "gc:1,2").is_err());
+        assert!(SchemeConfig::parse(4, "sr-sgc-rep:1").is_err());
+    }
+
+    #[test]
+    fn labels_round_trip_through_parse() {
+        // Every SchemeKind's display label parses back to itself.
+        let configs = [
+            SchemeConfig::gc(64, 5),
+            SchemeConfig::gc_rep(64, 7),
+            SchemeConfig::sr_sgc(64, 2, 3, 23),
+            SchemeConfig::sr_sgc_rep(64, 2, 3, 23),
+            SchemeConfig::msgc(64, 1, 2, 27),
+            SchemeConfig::msgc_rep(64, 1, 2, 27),
+            SchemeConfig::uncoded(64),
+        ];
+        for cfg in configs {
+            let label = cfg.label();
+            let parsed = SchemeConfig::parse(cfg.n, &label).unwrap();
+            assert_eq!(parsed, cfg, "label {label:?} did not round-trip");
+        }
     }
 
     #[test]

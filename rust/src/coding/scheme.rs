@@ -196,9 +196,13 @@ pub trait Scheme: Send {
     }
 
     /// The job whose decode deadline is the end of round `r`, if in range.
+    ///
+    /// Uses checked arithmetic: any `delay ≥ r` (including delays beyond
+    /// `isize::MAX`, which the previous `as isize` casts silently
+    /// wrapped on) simply means no job is due yet.
     fn deadline_job(&self, r: usize) -> Option<usize> {
-        let t = r as isize - self.spec().delay as isize;
-        (t >= 1 && t as usize <= self.jobs()).then_some(t as usize)
+        let t = r.checked_sub(self.spec().delay)?;
+        (1..=self.jobs()).contains(&t).then_some(t)
     }
 }
 
@@ -222,6 +226,82 @@ mod tests {
         assert!(!l.complete());
         l.deliver(3, &WorkUnit::Coded { job: 1, group: 0, row: 3, chunks: vec![] });
         assert!(l.complete());
+    }
+
+    /// Minimal scheme for exercising the trait's default methods.
+    struct DummyScheme {
+        spec: SchemeSpec,
+        jobs: usize,
+        ledger: JobLedger,
+    }
+
+    impl DummyScheme {
+        fn with_delay(delay: usize, jobs: usize) -> Self {
+            DummyScheme {
+                spec: SchemeSpec {
+                    name: "dummy".into(),
+                    n: 1,
+                    delay,
+                    load: 1.0,
+                    num_chunks: 1,
+                    chunk_sizes: vec![1.0],
+                    placement: vec![vec![0]],
+                    tolerance: ToleranceSpec::None,
+                },
+                jobs,
+                ledger: JobLedger {
+                    plain_missing: HashSet::new(),
+                    coded_got: Vec::new(),
+                    coded_need: Vec::new(),
+                },
+            }
+        }
+    }
+
+    impl Scheme for DummyScheme {
+        fn spec(&self) -> &SchemeSpec {
+            &self.spec
+        }
+        fn assign_round(&mut self, _r: usize) -> Vec<TaskDesc> {
+            vec![TaskDesc::noop()]
+        }
+        fn commit_round(&mut self, _r: usize, _responded: &[bool]) {}
+        fn decodable(&self, _job: usize) -> bool {
+            true
+        }
+        fn ledger(&self, _job: usize) -> &JobLedger {
+            &self.ledger
+        }
+        fn decodable_with(&self, _job: usize, _r: usize, _responded: &[bool]) -> bool {
+            true
+        }
+        fn jobs(&self) -> usize {
+            self.jobs
+        }
+    }
+
+    #[test]
+    fn deadline_job_uses_checked_arithmetic() {
+        // delay = 0: job t is due at round t, nothing after J.
+        let s = DummyScheme::with_delay(0, 3);
+        assert_eq!(s.deadline_job(1), Some(1));
+        assert_eq!(s.deadline_job(3), Some(3));
+        assert_eq!(s.deadline_job(4), None);
+
+        // delay = 2: rounds 1..2 have no due job (r - delay ≤ 0).
+        let s = DummyScheme::with_delay(2, 3);
+        assert_eq!(s.deadline_job(1), None);
+        assert_eq!(s.deadline_job(2), None);
+        assert_eq!(s.deadline_job(3), Some(1));
+        assert_eq!(s.deadline_job(5), Some(3));
+
+        // Pathological delays (beyond isize::MAX) must not wrap: the old
+        // `as isize` cast turned these into bogus positive job indices.
+        let s = DummyScheme::with_delay(usize::MAX, 3);
+        assert_eq!(s.deadline_job(1), None);
+        assert_eq!(s.deadline_job(usize::MAX), None); // t = 0 is out of range
+        let s = DummyScheme::with_delay(usize::MAX - 1, 3);
+        assert_eq!(s.deadline_job(usize::MAX), Some(1));
     }
 
     #[test]

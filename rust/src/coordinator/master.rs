@@ -1,296 +1,30 @@
-//! The master's round loop.
+//! The master node: a thin driver over the sans-IO protocol engine.
 //!
-//! Each round the master: assigns tasks (scheme), executes them on the
-//! cluster, applies the μ-rule to identify stragglers (Sec. 2), applies
-//! the configured wait-out policy (Remark 2.3), commits the round into
-//! the scheme state, and decodes every job whose results are complete
-//! (timing the actual GC linear-algebra decode for Table 4).
+//! All round logic — μ-rule straggler identification (Sec. 2), wait-out
+//! policies (Remark 2.3), commit and decode — lives in
+//! [`crate::session::SgcSession`]; the master merely pumps the session
+//! against a [`Cluster`] backend via [`crate::session::drive`]. Kept as a
+//! facade so CLI, benches and tests have a one-call entry point.
 
-use super::metrics::{RoundRecord, RunReport};
+use super::metrics::RunReport;
 use crate::cluster::Cluster;
-use crate::coding::{GcCode, Scheme, SchemeConfig, ToleranceSpec};
-use crate::straggler::{Pattern, ToleranceChecker};
-use crate::util::timer::Stopwatch;
-use std::collections::HashMap;
-
-/// Wait-out policy applied when the observed straggler pattern exceeds
-/// what the scheme was designed for.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum WaitPolicy {
-    /// Remark 2.3 (paper default): wait for stragglers, in completion
-    /// order, until the effective pattern conforms to the design model.
-    ConformanceRepair,
-    /// Lazy ablation: only wait when the job due this round cannot be
-    /// decoded; jobs may *miss deadlines permanently* under M-SGC because
-    /// earlier non-conforming rounds can leave partial gradients
-    /// unattempted (see DESIGN.md).
-    DeadlineDecode,
-    /// Wait for every worker in every round (the uncoded baseline's
-    /// behaviour).
-    WaitAll,
-}
-
-/// Run configuration.
-#[derive(Clone, Debug)]
-pub struct RunConfig {
-    /// Number of jobs `J`.
-    pub jobs: usize,
-    /// Straggler-detection tolerance μ (paper uses 1.0; Appendix L uses
-    /// 5.0 for the storage-bound workload).
-    pub mu: f64,
-    pub wait_policy: WaitPolicy,
-    /// Measure real GC decode solves and record their cost (Table 4).
-    pub measure_decode: bool,
-    /// Appendix K: when pipelining M > T+1 models, decode hides in the
-    /// master's idle time and does not extend rounds.
-    pub decode_in_idle: bool,
-}
-
-impl Default for RunConfig {
-    fn default() -> Self {
-        RunConfig {
-            jobs: 100,
-            mu: 1.0,
-            wait_policy: WaitPolicy::ConformanceRepair,
-            measure_decode: false,
-            decode_in_idle: true,
-        }
-    }
-}
-
-/// Outcome of the μ-rule + wait-out decision for one round.
-#[derive(Clone, Debug)]
-pub struct RoundDecision {
-    pub responded: Vec<bool>,
-    pub duration: f64,
-    pub kappa: f64,
-    pub detected: usize,
-    pub admitted: usize,
-}
-
-/// Apply the μ-rule and the wait-out policy to a round's completion
-/// times. Shared by [`Master`] (metadata simulation) and
-/// [`crate::train::MultiModelTrainer`] (real-compute runs).
-///
-/// `r` must be the currently assigned, uncommitted round of `scheme`.
-pub fn decide_round(
-    finish: &[f64],
-    mu: f64,
-    policy: WaitPolicy,
-    checker: &ToleranceChecker,
-    scheme: &dyn Scheme,
-    r: usize,
-    deadline_already_done: bool,
-) -> RoundDecision {
-    let n = finish.len();
-    let kappa = finish.iter().cloned().fold(f64::INFINITY, f64::min);
-    let cutoff = (1.0 + mu) * kappa;
-    let mut responded: Vec<bool> = finish.iter().map(|&f| f <= cutoff).collect();
-    let detected = n - responded.iter().filter(|&&x| x).count();
-    let mut duration = if detected == 0 {
-        finish.iter().cloned().fold(0.0, f64::max)
-    } else {
-        cutoff
-    };
-
-    let mut pending: Vec<usize> = (0..n).filter(|&i| !responded[i]).collect();
-    pending.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
-    let mut admitted = 0usize;
-    let mut next = pending.into_iter();
-    loop {
-        let satisfied = match policy {
-            WaitPolicy::WaitAll => responded.iter().all(|&x| x),
-            WaitPolicy::ConformanceRepair => {
-                let stragglers: Vec<bool> = responded.iter().map(|&x| !x).collect();
-                checker.acceptable(&stragglers)
-            }
-            WaitPolicy::DeadlineDecode => match scheme.deadline_job(r) {
-                Some(t) if !deadline_already_done => scheme.decodable_with(t, r, &responded),
-                _ => true,
-            },
-        };
-        if satisfied {
-            break;
-        }
-        match next.next() {
-            Some(w) => {
-                responded[w] = true;
-                duration = duration.max(finish[w]);
-                admitted += 1;
-            }
-            None => break,
-        }
-    }
-
-    // Backstop (ConformanceRepair): the deadline job must decode now.
-    if policy == WaitPolicy::ConformanceRepair {
-        if let Some(t) = scheme.deadline_job(r) {
-            if !deadline_already_done {
-                let mut rest: Vec<usize> = (0..n).filter(|&i| !responded[i]).collect();
-                rest.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
-                let mut rest = rest.into_iter();
-                while !scheme.decodable_with(t, r, &responded) {
-                    match rest.next() {
-                        Some(w) => {
-                            responded[w] = true;
-                            duration = duration.max(finish[w]);
-                            admitted += 1;
-                        }
-                        None => break,
-                    }
-                }
-            }
-        }
-    }
-
-    RoundDecision { responded, duration, kappa, detected, admitted }
-}
+use crate::coding::SchemeConfig;
+use crate::session::{drive, SessionConfig};
 
 /// The master node.
 pub struct Master {
     scheme_cfg: SchemeConfig,
-    cfg: RunConfig,
-    /// GC decode solvers per code parameter `s`, shared across rounds so
-    /// the coefficient cache persists (hot-path memoization).
-    codes: HashMap<usize, GcCode>,
+    cfg: SessionConfig,
 }
 
 impl Master {
-    pub fn new(scheme_cfg: SchemeConfig, cfg: RunConfig) -> Self {
-        Master { scheme_cfg, cfg, codes: HashMap::new() }
+    pub fn new(scheme_cfg: SchemeConfig, cfg: SessionConfig) -> Self {
+        Master { scheme_cfg, cfg }
     }
 
     /// Run `J` jobs over `J + T` rounds against the given cluster.
     pub fn run(&mut self, cluster: &mut dyn Cluster) -> RunReport {
-        let mut scheme = self.scheme_cfg.build(self.cfg.jobs);
-        let n = scheme.spec().n;
-        assert_eq!(cluster.n(), n, "cluster/scheme size mismatch");
-        let total_rounds = scheme.total_rounds();
-        let wait_policy = if matches!(scheme.spec().tolerance, ToleranceSpec::None) {
-            WaitPolicy::WaitAll
-        } else {
-            self.cfg.wait_policy
-        };
-        let mut checker = ToleranceChecker::new(n, scheme.spec().tolerance.clone());
-
-        let mut clock = 0.0f64;
-        let mut rounds = Vec::with_capacity(total_rounds);
-        let mut job_done = vec![false; self.cfg.jobs];
-        let mut job_completion = vec![f64::NAN; self.cfg.jobs];
-        // First job that might still be pending: jobs decode (almost)
-        // in order, so the per-round decode scan is O(T) instead of O(J).
-        let mut frontier = 1usize;
-        let mut violations = 0usize;
-        let mut true_pattern = Pattern::new(n);
-        let mut detected_pattern = Pattern::new(n);
-
-        for r in 1..=total_rounds {
-            let tasks = scheme.assign_round(r);
-            let loads: Vec<f64> = tasks.iter().map(|t| scheme.spec().task_load(t)).collect();
-            let sample = cluster.sample_round(&loads);
-            true_pattern.push_round(sample.state.clone());
-
-            let deadline_done =
-                scheme.deadline_job(r).map(|t| job_done[t - 1]).unwrap_or(true);
-            let decision = decide_round(
-                &sample.finish,
-                self.cfg.mu,
-                wait_policy,
-                &checker,
-                scheme.as_ref(),
-                r,
-                deadline_done,
-            );
-            let RoundDecision { responded, mut duration, kappa, detected: initially_detected, admitted } =
-                decision;
-            detected_pattern.push_round(
-                sample
-                    .finish
-                    .iter()
-                    .map(|&f| f > (1.0 + self.cfg.mu) * kappa)
-                    .collect(),
-            );
-
-            let effective_stragglers: Vec<bool> = responded.iter().map(|&x| !x).collect();
-            checker.commit(&effective_stragglers);
-            scheme.commit_round(r, &responded);
-
-            // Decode every newly complete job; optionally time the real
-            // linear-algebra decode.
-            let mut completed = Vec::new();
-            let mut decode_s = 0.0;
-            for t in frontier..=self.cfg.jobs.min(r) {
-                if job_done[t - 1] || !scheme.decodable(t) {
-                    continue;
-                }
-                if self.cfg.measure_decode {
-                    decode_s += self.time_decode(scheme.as_ref(), t);
-                }
-                job_done[t - 1] = true;
-                completed.push(t);
-            }
-            while frontier <= self.cfg.jobs && job_done[frontier - 1] {
-                frontier += 1;
-            }
-            if !self.cfg.decode_in_idle {
-                duration += decode_s;
-            }
-            clock += duration;
-            for &t in &completed {
-                job_completion[t - 1] = clock;
-            }
-            if let Some(t) = scheme.deadline_job(r) {
-                if !job_done[t - 1] {
-                    violations += 1;
-                }
-            }
-            rounds.push(RoundRecord {
-                round: r,
-                duration_s: duration,
-                kappa_s: kappa,
-                detected_stragglers: initially_detected,
-                waited_out: admitted,
-                decode_s,
-                jobs_completed: completed,
-            });
-        }
-
-        RunReport {
-            scheme: self.scheme_cfg.label(),
-            load: self.scheme_cfg.load(),
-            delay: self.scheme_cfg.delay(),
-            jobs: self.cfg.jobs,
-            total_runtime_s: clock,
-            rounds,
-            job_completion_s: job_completion,
-            deadline_violations: violations,
-            true_pattern,
-            effective_pattern: checker.pattern().clone(),
-            detected_pattern,
-        }
-    }
-
-    /// Time the actual decode work for a job: one coefficient solve per
-    /// non-trivially coded group (replication groups decode by a trivial
-    /// sum and cost ~0).
-    fn time_decode(&mut self, scheme: &dyn Scheme, job: usize) -> f64 {
-        let n = scheme.spec().n;
-        let ledger = scheme.ledger(job);
-        let sw = Stopwatch::start();
-        for (got, &need) in ledger.coded_got.iter().zip(&ledger.coded_need) {
-            if need <= 1 || need >= n {
-                continue; // replication / degenerate group: trivial decode
-            }
-            let s = n - need;
-            let code = self.codes.entry(s).or_insert_with(|| GcCode::new(n, s, 0xdec0de));
-            let mut workers: Vec<usize> = got.iter().cloned().collect();
-            workers.sort_unstable();
-            workers.truncate(need);
-            // The solve is the measured cost; failure here would mean a
-            // non-decodable set, which `decodable()` already excluded.
-            let _ = code.decode_coeffs(&workers);
-        }
-        sw.elapsed_s()
+        drive(&self.scheme_cfg, &self.cfg, cluster)
     }
 }
 
@@ -298,8 +32,9 @@ impl Master {
 mod tests {
     use super::*;
     use crate::cluster::{LatencyParams, SimCluster};
+    use crate::coordinator::{RunConfig, WaitPolicy};
     use crate::straggler::models::NoStragglers;
-    use crate::straggler::{GilbertElliot, TraceProcess};
+    use crate::straggler::{GilbertElliot, Pattern, TraceProcess};
 
     fn quiet_cluster(n: usize, seed: u64) -> SimCluster {
         SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), seed)

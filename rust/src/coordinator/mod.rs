@@ -1,9 +1,14 @@
-//! The master: round loop, μ-rule straggler detection, wait-out policies
-//! and run metrics (Sec. 2 "Identification of stragglers", Remark 2.3,
-//! Sec. 4 measurement methodology).
+//! The master facade and run metrics (Sec. 2 "Identification of
+//! stragglers", Remark 2.3, Sec. 4 measurement methodology).
+//!
+//! The round protocol itself lives in [`crate::session`]; this module
+//! keeps the one-call [`Master`] entry point plus the report types, and
+//! re-exports the session's configuration under its historical names
+//! (`RunConfig`, `WaitPolicy`) for callers of the classic API.
 
 pub mod master;
 pub mod metrics;
 
-pub use master::{Master, RunConfig, WaitPolicy};
+pub use crate::session::{SessionConfig as RunConfig, WaitPolicy};
+pub use master::Master;
 pub use metrics::{RoundRecord, RunReport};

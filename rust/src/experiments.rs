@@ -4,9 +4,10 @@
 //! paper's own configuration (n = 256 workers, J = 480 jobs, 10
 //! repetitions) unless `SGC_BENCH_FAST=1` scales it down for CI.
 
-use crate::cluster::SimCluster;
+use crate::cluster::{Cluster, SimCluster};
 use crate::coding::SchemeConfig;
-use crate::coordinator::{Master, RunConfig, RunReport};
+use crate::coordinator::RunReport;
+use crate::session::{self, BatchItem, SessionConfig};
 use crate::straggler::GilbertElliot;
 use crate::util::json::Json;
 use crate::util::stats::MeanStd;
@@ -45,14 +46,15 @@ impl PaperSetup {
         ]
     }
 
+    /// Session parameters for one simulated run.
+    fn session_config(&self, measure_decode: bool) -> SessionConfig {
+        SessionConfig { jobs: self.jobs, mu: self.mu, measure_decode, ..Default::default() }
+    }
+
     /// One simulated run.
     pub fn run_once(&self, scheme: &SchemeConfig, seed: u64, measure_decode: bool) -> RunReport {
-        let mut master = Master::new(
-            scheme.clone(),
-            RunConfig { jobs: self.jobs, mu: self.mu, measure_decode, ..Default::default() },
-        );
         let mut cluster = self.cluster(seed);
-        master.run(&mut cluster)
+        session::drive(scheme, &self.session_config(measure_decode), &mut cluster)
     }
 
     /// The default GE-straggler cluster.
@@ -64,11 +66,22 @@ impl PaperSetup {
         )
     }
 
-    /// Repeat runs and summarise total runtime.
+    /// Repeat runs and summarise total runtime. Repetitions are
+    /// independent sessions and run concurrently on the batch driver;
+    /// seeds are `1000 + rep`, so results are identical to the old
+    /// sequential loop.
     pub fn runtime_stats(&self, scheme: &SchemeConfig, measure_decode: bool) -> MeanStd {
-        let xs: Vec<f64> = (0..self.reps)
-            .map(|r| self.run_once(scheme, 1000 + r as u64, measure_decode).total_runtime_s)
+        let items: Vec<BatchItem> = (0..self.reps)
+            .map(|_| BatchItem {
+                scheme: scheme.clone(),
+                session: self.session_config(measure_decode),
+            })
             .collect();
+        let setup = self.clone();
+        let reports = session::run_parallel(items, session::default_threads(), move |i, _| {
+            Box::new(setup.cluster(1000 + i as u64)) as Box<dyn Cluster + Send>
+        });
+        let xs: Vec<f64> = reports.iter().map(|r| r.total_runtime_s).collect();
         MeanStd::of(&xs)
     }
 }

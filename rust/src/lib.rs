@@ -6,9 +6,10 @@
 //! The library is organised as the three-layer rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the paper's coordination contribution: the
-//!   master round loop, the GC / SR-SGC / M-SGC coding schemes, straggler
-//!   models, the serverless-cluster simulator and the parameter-selection
-//!   probe. Python is never on this path.
+//!   sans-IO round-protocol engine ([`session::SgcSession`]), the GC /
+//!   SR-SGC / M-SGC coding schemes, straggler models, the
+//!   serverless-cluster simulator and the parameter-selection probe.
+//!   Python is never on this path.
 //! * **Layer 2** — `python/compile/model.py`: the JAX forward/backward pass
 //!   computing weighted partial gradients per data chunk, AOT-lowered once
 //!   to HLO text by `python/compile/aot.py`.
@@ -16,30 +17,57 @@
 //!   kernel the model's hot spot lowers through (interpret=True on CPU).
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) and executes them from worker threads.
+//! (`xla` crate, behind the `pjrt` feature) and executes them from worker
+//! threads.
+//!
+//! ## Architecture: sans-IO protocol core
+//!
+//! The paper's round protocol — assign, observe stragglers via the
+//! μ-rule, wait out non-conforming patterns, commit, decode — lives in
+//! exactly one place, [`session::SgcSession`], which performs no IO.
+//! Execution backends (the [`cluster::SimCluster`] simulator, probe
+//! trace replays, the real-compute PJRT trainer, the parallel batch
+//! driver) merely pump it with completion times. See `rust/DESIGN.md`.
 //!
 //! ## Quick start
 //!
+//! Drive a session by hand against the simulated serverless cluster:
+//!
 //! ```no_run
-//! use sgc::coding::SchemeConfig;
-//! use sgc::coordinator::{Master, RunConfig};
 //! use sgc::cluster::SimCluster;
+//! use sgc::coding::SchemeConfig;
+//! use sgc::session::{SessionConfig, SessionEvent, SgcSession};
 //! use sgc::straggler::GilbertElliot;
 //!
 //! let scheme = SchemeConfig::msgc(16, /*B=*/1, /*W=*/2, /*lambda=*/4);
 //! let mut cluster = SimCluster::from_gilbert_elliot(16, GilbertElliot::default_fit(16, 7), 7);
-//! let mut master = Master::new(scheme, RunConfig { jobs: 64, ..Default::default() });
-//! let report = master.run(&mut cluster);
+//! let mut session = SgcSession::new(&scheme, SessionConfig { jobs: 64, ..Default::default() });
+//! while !session.is_complete() {
+//!     let plan = session.begin_round();                // pull: tasks + per-worker loads
+//!     let sample = cluster.sample_round(&plan.loads);  // execute on any backend
+//!     session.submit_all(&sample.finish);              // push: completion times
+//!     for event in session.close_round() {             // μ-rule, wait-out, commit, decode
+//!         if let SessionEvent::JobDecoded { job, at_s } = event {
+//!             println!("job {job} decoded at {at_s:.2}s");
+//!         }
+//!     }
+//! }
+//! let report = session.into_report();
 //! println!("total runtime: {:.2}s", report.total_runtime_s);
 //! ```
+//!
+//! Or use the one-call drivers: [`session::drive`] for a single run (the
+//! [`coordinator::Master`] facade wraps it), [`session::run_parallel`]
+//! for concurrent batches of independent runs (sweeps, repeated seeds).
 
 pub mod bench_harness;
 pub mod cluster;
-pub mod experiments;
 pub mod coding;
 pub mod coordinator;
+pub mod experiments;
 pub mod probe;
 pub mod runtime;
+pub mod session;
 pub mod straggler;
 pub mod testing;
 pub mod train;

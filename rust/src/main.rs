@@ -2,34 +2,42 @@
 //!
 //! ```text
 //! sgc run    --n 256 --scheme m-sgc:1,2,27 --jobs 480 [--mu 1.0] [--seed 7]
+//! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
 //! sgc probe  --n 256 --t-probe 80 --jobs 80
 //! sgc train  --n 16 --scheme m-sgc:1,2,4 --models 4 --iters 25
 //! sgc info   --n 256 --scheme sr-sgc:2,3,23
 //! ```
 
-use sgc::cluster::SimCluster;
+use sgc::cluster::{Cluster, SimCluster};
 use sgc::coding::SchemeConfig;
-use sgc::coordinator::{Master, RunConfig};
 use sgc::probe::{grid_search, DelayProfile, SearchSpace};
+use sgc::session::{self, BatchItem, SessionConfig};
 use sgc::straggler::GilbertElliot;
 use sgc::train::{Dataset, DatasetConfig, MultiModelTrainer, TrainConfig};
 use sgc::util::cli::Args;
+use sgc::util::stats::MeanStd;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("probe") => cmd_probe(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: sgc <run|probe|train|info> [--n N] [--scheme SPEC] …\n\
-                 scheme spec: gc:S | gc-rep:S | sr-sgc:B,W,L | m-sgc:B,W,L | uncoded"
+                "usage: sgc <run|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
+                 scheme spec: gc:S | gc-rep:S | sr-sgc:B,W,L | sr-sgc-rep:B,W,L | \
+                 m-sgc:B,W,L | m-sgc-rep:B,W,L | uncoded"
             );
             std::process::exit(2);
         }
     }
+}
+
+fn ge_cluster(n: usize, seed: u64) -> SimCluster {
+    SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, seed), seed ^ 0xc1)
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -38,18 +46,14 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let jobs = args.get_parse("jobs", 480usize);
     let seed = args.get_parse("seed", 7u64);
     let mu = args.get_parse("mu", 1.0f64);
-    let mut master = Master::new(
-        scheme.clone(),
-        RunConfig {
-            jobs,
-            mu,
-            measure_decode: args.has_flag("measure-decode"),
-            ..Default::default()
-        },
-    );
-    let mut cluster =
-        SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, seed), seed ^ 0xc1);
-    let report = master.run(&mut cluster);
+    let cfg = SessionConfig {
+        jobs,
+        mu,
+        measure_decode: args.has_flag("measure-decode"),
+        ..Default::default()
+    };
+    let mut cluster = ge_cluster(n, seed);
+    let report = session::drive(&scheme, &cfg, &mut cluster);
     println!(
         "{:<18} load={:.4} T={} runtime={:.2}s rounds={} waitouts={} violations={}",
         report.scheme,
@@ -64,6 +68,55 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let path = args.get("out", "target/experiments/run.json");
         report.to_json().save(&path)?;
         println!("saved {path}");
+    }
+    Ok(())
+}
+
+/// Run several schemes × several seeds concurrently on the batch driver
+/// and summarise per scheme (`--schemes` takes `+`-separated specs).
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parse("n", 256usize);
+    let jobs = args.get_parse("jobs", 480usize);
+    let reps = args.get_parse("reps", 4usize).max(1);
+    let seed = args.get_parse("seed", 7u64);
+    let mu = args.get_parse("mu", 1.0f64);
+    let specs = args.get("schemes", "m-sgc:1,2,27+sr-sgc:2,3,23+gc:15+uncoded");
+    let schemes: Vec<SchemeConfig> = specs
+        .split('+')
+        .map(|s| SchemeConfig::parse(n, s.trim()))
+        .collect::<anyhow::Result<_>>()?;
+
+    let items: Vec<BatchItem> = schemes
+        .iter()
+        .flat_map(|scheme| {
+            (0..reps).map(move |_| BatchItem {
+                scheme: scheme.clone(),
+                session: SessionConfig { jobs, mu, ..Default::default() },
+            })
+        })
+        .collect();
+    let reports = session::run_parallel(items, session::default_threads(), move |i, item| {
+        Box::new(ge_cluster(item.scheme.n, seed + (i % reps) as u64)) as Box<dyn Cluster + Send>
+    });
+
+    println!(
+        "{:<22} {:>8} {:>3} {:>12} {:>10} {:>9}",
+        "scheme", "load", "T", "runtime", "±std", "violations"
+    );
+    for (k, scheme) in schemes.iter().enumerate() {
+        let slice = &reports[k * reps..(k + 1) * reps];
+        let runtimes: Vec<f64> = slice.iter().map(|r| r.total_runtime_s).collect();
+        let stats = MeanStd::of(&runtimes);
+        let violations: usize = slice.iter().map(|r| r.deadline_violations).sum();
+        println!(
+            "{:<22} {:>8.4} {:>3} {:>11.2}s {:>9.2}s {:>9}",
+            scheme.label(),
+            scheme.load(),
+            scheme.delay(),
+            stats.mean,
+            stats.std,
+            violations
+        );
     }
     Ok(())
 }

@@ -2,11 +2,14 @@
 //!
 //! For each candidate `(B, W, λ)` (or `s` for GC), estimate the total
 //! runtime by replaying the load-adjusted reference profile through the
-//! actual master logic, and pick the fastest.
+//! actual round protocol ([`crate::session::SgcSession`]), and pick the
+//! fastest. Candidates are independent sessions, so the search fans out
+//! over the parallel batch driver ([`crate::session::run_parallel`]).
 
 use super::profile::{DelayProfile, ProfileCluster};
-use crate::coordinator::{Master, RunConfig};
+use crate::cluster::Cluster;
 use crate::coding::{SchemeConfig, SchemeKind};
+use crate::session::{self, BatchItem, SessionConfig};
 
 /// A candidate scheme with its estimated runtime.
 #[derive(Clone, Debug)]
@@ -89,7 +92,7 @@ impl SearchSpace {
 }
 
 /// Estimate total runtime of a scheme over `jobs` jobs by replaying the
-/// load-adjusted profile through the real master.
+/// load-adjusted profile through the real round protocol.
 pub fn estimate_runtime(
     config: &SchemeConfig,
     profile: &DelayProfile,
@@ -97,24 +100,38 @@ pub fn estimate_runtime(
     jobs: usize,
 ) -> f64 {
     let mut cluster = ProfileCluster::new(profile.clone(), alpha);
-    let mut master = Master::new(config.clone(), RunConfig { jobs, ..Default::default() });
-    master.run(&mut cluster).total_runtime_s
+    let cfg = SessionConfig { jobs, ..Default::default() };
+    session::drive(config, &cfg, &mut cluster).total_runtime_s
 }
 
 /// Grid-search a candidate list; returns candidates sorted by estimated
-/// runtime (best first).
+/// runtime (best first). Candidate replays run concurrently on the batch
+/// driver; results are deterministic (the profile replay has no shared
+/// state across candidates).
 pub fn grid_search(
     candidates: &[SchemeConfig],
     profile: &DelayProfile,
     alpha: f64,
     jobs: usize,
 ) -> Vec<Candidate> {
+    let items: Vec<BatchItem> = candidates
+        .iter()
+        .map(|c| BatchItem {
+            scheme: c.clone(),
+            session: SessionConfig { jobs, ..Default::default() },
+        })
+        .collect();
+    let profile = profile.clone();
+    let reports = session::run_parallel(items, session::default_threads(), move |_, _| {
+        Box::new(ProfileCluster::new(profile.clone(), alpha)) as Box<dyn Cluster + Send>
+    });
     let mut out: Vec<Candidate> = candidates
         .iter()
-        .map(|c| Candidate {
+        .zip(reports)
+        .map(|(c, report)| Candidate {
             config: c.clone(),
             load: c.load(),
-            estimated_runtime_s: estimate_runtime(c, profile, alpha, jobs),
+            estimated_runtime_s: report.total_runtime_s,
         })
         .collect();
     out.sort_by(|a, b| a.estimated_runtime_s.partial_cmp(&b.estimated_runtime_s).unwrap());

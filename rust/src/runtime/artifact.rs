@@ -87,12 +87,19 @@ pub fn artifacts_dir() -> PathBuf {
 /// `PjRtClient` is not `Send` (Rc internally): each executable lives on
 /// the thread that created it. Cross-thread execution goes through
 /// [`super::pool::ComputePool`].
+///
+/// Gated behind the `pjrt` feature: the `xla` crate needs a prebuilt
+/// `xla_extension` install, which offline/CI environments lack. Without
+/// the feature, [`super::pool::ComputePool::new`] returns a descriptive
+/// error instead.
+#[cfg(feature = "pjrt")]
 pub struct GradExecutable {
     pub dims: ModelDims,
     _client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl GradExecutable {
     /// Load and compile `model.hlo.txt` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Self> {

@@ -5,9 +5,17 @@
 //! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
 //! `HloModuleProto::from_text_file` reassigns ids cleanly (see
 //! /opt/xla-example/README.md).
+//!
+//! The PJRT execution path (the `xla` crate) is gated behind the `pjrt`
+//! cargo feature because it needs a prebuilt `xla_extension` install that
+//! offline/CI environments lack. Artifact metadata parsing and the
+//! [`ComputePool`] API surface compile either way; without the feature,
+//! [`ComputePool::new`] fails with instructions instead of executing.
 
 pub mod artifact;
 pub mod pool;
 
-pub use artifact::{artifacts_dir, GradExecutable, ModelDims};
+#[cfg(feature = "pjrt")]
+pub use artifact::GradExecutable;
+pub use artifact::{artifacts_dir, ModelDims};
 pub use pool::{ComputePool, GradRequest};

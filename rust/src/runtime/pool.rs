@@ -5,12 +5,18 @@
 //! round-robin over channels. Simulated cluster workers block on the
 //! returned handle, so many logical workers share a few physical compute
 //! lanes — exactly like Lambda workers sharing the region's hardware.
+//!
+//! The real pool needs the `pjrt` feature (and with it the `xla` crate's
+//! prebuilt `xla_extension`). Without it a stub [`ComputePool::new`]
+//! returns a descriptive error, so the trainer and CLI still compile and
+//! fail cleanly in environments without the PJRT toolchain.
 
-use super::artifact::{GradExecutable, ModelDims};
+use super::artifact::ModelDims;
 use anyhow::Result;
+#[cfg(not(feature = "pjrt"))]
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+#[cfg(not(feature = "pjrt"))]
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
 /// A gradient request over one padded chunk.
@@ -25,85 +31,142 @@ pub struct GradRequest {
 /// Result: `(loss_sum, grads, compute_seconds)`.
 pub type GradResult = Result<(f32, Vec<Vec<f32>>, f64)>;
 
-struct Job {
-    req: GradRequest,
-    reply: Sender<GradResult>,
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::{GradRequest, GradResult, ModelDims, Result};
+    use crate::runtime::artifact::GradExecutable;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc::{channel, Receiver, Sender};
+
+    struct Job {
+        req: GradRequest,
+        reply: Sender<GradResult>,
+    }
+
+    /// Pool of PJRT compute lanes.
+    pub struct ComputePool {
+        txs: Vec<Sender<Job>>,
+        next: AtomicUsize,
+        dims: ModelDims,
+        handles: Vec<std::thread::JoinHandle<()>>,
+    }
+
+    impl ComputePool {
+        /// Spawn `lanes` compute threads, each compiling the artifact in
+        /// `dir`.
+        pub fn new(dir: PathBuf, lanes: usize) -> Result<Self> {
+            assert!(lanes > 0);
+            // Probe once on the caller thread for early, readable errors
+            // and to learn the dims.
+            let dims = GradExecutable::load(&dir)?.dims;
+            let mut txs = Vec::with_capacity(lanes);
+            let mut handles = Vec::with_capacity(lanes);
+            for lane in 0..lanes {
+                let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+                let dir = dir.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("sgc-compute-{lane}"))
+                    .spawn(move || {
+                        let exe = match GradExecutable::load(&dir) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                // Fail every request with a clone of the
+                                // error.
+                                for job in rx {
+                                    let _ = job.reply.send(Err(anyhow::anyhow!(
+                                        "lane failed to load: {e:#}"
+                                    )));
+                                }
+                                return;
+                            }
+                        };
+                        for job in rx {
+                            let t0 = std::time::Instant::now();
+                            let out = exe
+                                .grad_chunk(
+                                    &job.req.params,
+                                    &job.req.x,
+                                    &job.req.y,
+                                    &job.req.wgt,
+                                )
+                                .map(|(loss, grads)| {
+                                    (loss, grads, t0.elapsed().as_secs_f64())
+                                });
+                            let _ = job.reply.send(out);
+                        }
+                    })
+                    .expect("spawn compute lane");
+                txs.push(tx);
+                handles.push(handle);
+            }
+            Ok(ComputePool { txs, next: AtomicUsize::new(0), dims, handles })
+        }
+
+        pub fn dims(&self) -> ModelDims {
+            self.dims
+        }
+
+        /// Submit a request; returns a receiver for the result.
+        pub fn submit(&self, req: GradRequest) -> Receiver<GradResult> {
+            let (reply, rx) = channel();
+            let lane = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+            self.txs[lane].send(Job { req, reply }).expect("compute lane alive");
+            rx
+        }
+
+        /// Convenience: submit and block.
+        pub fn grad_chunk_blocking(&self, req: GradRequest) -> GradResult {
+            self.submit(req).recv().expect("compute lane replied")
+        }
+    }
+
+    impl Drop for ComputePool {
+        fn drop(&mut self) {
+            self.txs.clear(); // close channels; lanes exit
+            for h in self.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
 }
 
-/// Pool of PJRT compute lanes.
+#[cfg(feature = "pjrt")]
+pub use real::ComputePool;
+
+/// Stub pool for builds without the PJRT toolchain: construction always
+/// fails with a descriptive error (after validating the artifact
+/// metadata, so missing-artifact errors stay identical to the real
+/// pool's).
+#[cfg(not(feature = "pjrt"))]
 pub struct ComputePool {
-    txs: Vec<Sender<Job>>,
-    next: AtomicUsize,
-    dims: ModelDims,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Keeps the stub unconstructible outside this module: only `new`
+    /// can build one, and `new` always errors.
+    _priv: (),
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl ComputePool {
-    /// Spawn `lanes` compute threads, each compiling the artifact in
-    /// `dir`.
     pub fn new(dir: PathBuf, lanes: usize) -> Result<Self> {
         assert!(lanes > 0);
-        // Probe once on the caller thread for early, readable errors and
-        // to learn the dims.
-        let dims = GradExecutable::load(&dir)?.dims;
-        let mut txs = Vec::with_capacity(lanes);
-        let mut handles = Vec::with_capacity(lanes);
-        for lane in 0..lanes {
-            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
-            let dir = dir.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("sgc-compute-{lane}"))
-                .spawn(move || {
-                    let exe = match GradExecutable::load(&dir) {
-                        Ok(e) => e,
-                        Err(e) => {
-                            // Fail every request with a clone of the error.
-                            for job in rx {
-                                let _ = job
-                                    .reply
-                                    .send(Err(anyhow::anyhow!("lane failed to load: {e:#}")));
-                            }
-                            return;
-                        }
-                    };
-                    for job in rx {
-                        let t0 = std::time::Instant::now();
-                        let out = exe
-                            .grad_chunk(&job.req.params, &job.req.x, &job.req.y, &job.req.wgt)
-                            .map(|(loss, grads)| (loss, grads, t0.elapsed().as_secs_f64()));
-                        let _ = job.reply.send(out);
-                    }
-                })
-                .expect("spawn compute lane");
-            txs.push(tx);
-            handles.push(handle);
-        }
-        Ok(ComputePool { txs, next: AtomicUsize::new(0), dims, handles })
+        let _dims = ModelDims::from_meta_file(&dir.join("model_meta.txt"))?;
+        anyhow::bail!(
+            "sgc was built without the `pjrt` feature; real-compute training needs \
+             the xla crate: add `xla = \"0.1\"` under [dependencies] in rust/Cargo.toml \
+             (requires a prebuilt xla_extension install — see the comment there), \
+             then rebuild with `cargo build --features pjrt`"
+        )
     }
 
     pub fn dims(&self) -> ModelDims {
-        self.dims
+        unreachable!("ComputePool cannot be constructed without the pjrt feature")
     }
 
-    /// Submit a request; returns a receiver for the result.
-    pub fn submit(&self, req: GradRequest) -> Receiver<GradResult> {
-        let (reply, rx) = channel();
-        let lane = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
-        self.txs[lane].send(Job { req, reply }).expect("compute lane alive");
-        rx
+    pub fn submit(&self, _req: GradRequest) -> Receiver<GradResult> {
+        unreachable!("ComputePool cannot be constructed without the pjrt feature")
     }
 
-    /// Convenience: submit and block.
-    pub fn grad_chunk_blocking(&self, req: GradRequest) -> GradResult {
-        self.submit(req).recv().expect("compute lane replied")
-    }
-}
-
-impl Drop for ComputePool {
-    fn drop(&mut self) {
-        self.txs.clear(); // close channels; lanes exit
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+    pub fn grad_chunk_blocking(&self, _req: GradRequest) -> GradResult {
+        unreachable!("ComputePool cannot be constructed without the pjrt feature")
     }
 }

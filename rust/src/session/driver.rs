@@ -1,0 +1,184 @@
+//! Drivers that pump a [`SgcSession`] against a [`Cluster`] backend.
+//!
+//! [`drive`] runs one session to completion against any cluster;
+//! [`run_parallel`] fans a batch of independent sessions out over a
+//! thread pool — the workhorse behind parameter sweeps
+//! ([`crate::probe`]) and repeated-seed evaluation
+//! ([`crate::experiments`]). Both contain zero protocol logic: every
+//! round decision lives in [`SgcSession`].
+
+use super::{SessionConfig, SessionEvent, SgcSession};
+use crate::cluster::Cluster;
+use crate::coding::SchemeConfig;
+use crate::coordinator::metrics::RunReport;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Run one session to completion against `cluster` and return its report.
+pub fn drive(
+    scheme_cfg: &SchemeConfig,
+    cfg: &SessionConfig,
+    cluster: &mut dyn Cluster,
+) -> RunReport {
+    let mut session = SgcSession::new(scheme_cfg, cfg.clone());
+    assert_eq!(cluster.n(), session.n(), "cluster/scheme size mismatch");
+    while !session.is_complete() {
+        let plan = session.begin_round();
+        let sample = cluster.sample_round(&plan.loads);
+        session.record_true_state(&sample.state);
+        session.submit_all(&sample.finish);
+        let events = session.close_round();
+        debug_assert!(
+            !matches!(events.first(), Some(SessionEvent::WaitingFor { .. })),
+            "all completion times were submitted"
+        );
+    }
+    session.into_report()
+}
+
+/// One entry of a parallel batch: a scheme plus its session parameters.
+#[derive(Clone, Debug)]
+pub struct BatchItem {
+    pub scheme: SchemeConfig,
+    pub session: SessionConfig,
+}
+
+/// Sensible worker-thread count for batch drivers.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
+/// Run many independent sessions concurrently on a thread pool.
+///
+/// `make_cluster(i, item)` builds the cluster for batch index `i` (seed
+/// it from `i` for reproducibility). Reports come back in input order
+/// regardless of completion order, so results are deterministic whenever
+/// the cluster factory is.
+pub fn run_parallel<F>(items: Vec<BatchItem>, threads: usize, make_cluster: F) -> Vec<RunReport>
+where
+    F: Fn(usize, &BatchItem) -> Box<dyn Cluster + Send> + Send + Sync + 'static,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, item)| {
+                let mut cluster = make_cluster(i, item);
+                drive(&item.scheme, &item.session, cluster.as_mut())
+            })
+            .collect();
+    }
+    let pool = ThreadPool::new(threads.min(items.len()));
+    let make = Arc::new(make_cluster);
+    let handles: Vec<_> = items
+        .into_iter()
+        .enumerate()
+        .map(|(i, item)| {
+            let make = Arc::clone(&make);
+            pool.submit(move || {
+                // Capture panics so the original message (e.g. a
+                // cluster/scheme size mismatch) reaches the caller
+                // instead of a generic "job panicked".
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut cluster = make(i, &item);
+                    drive(&item.scheme, &item.session, cluster.as_mut())
+                }))
+                .map_err(|e| (i, panic_message(e)))
+            })
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| match h.join() {
+            Ok(report) => report,
+            Err((i, msg)) => panic!("parallel session {i} panicked: {msg}"),
+        })
+        .collect()
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SimCluster;
+    use crate::straggler::GilbertElliot;
+
+    fn items() -> Vec<BatchItem> {
+        ["gc:2", "m-sgc:1,2,4", "uncoded"]
+            .into_iter()
+            .map(|spec| BatchItem {
+                scheme: SchemeConfig::parse(16, spec).unwrap(),
+                session: SessionConfig { jobs: 12, ..Default::default() },
+            })
+            .collect()
+    }
+
+    fn cluster_for(i: usize, item: &BatchItem) -> Box<dyn Cluster + Send> {
+        let n = item.scheme.n;
+        Box::new(SimCluster::from_gilbert_elliot(
+            n,
+            GilbertElliot::new(n, 0.05, 0.6, 31 + i as u64),
+            91 + i as u64,
+        ))
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential() {
+        let sequential: Vec<RunReport> = items()
+            .iter()
+            .enumerate()
+            .map(|(i, item)| {
+                let mut cluster = cluster_for(i, item);
+                drive(&item.scheme, &item.session, cluster.as_mut())
+            })
+            .collect();
+        let parallel = run_parallel(items(), 4, cluster_for);
+        assert_eq!(parallel.len(), sequential.len());
+        for (p, s) in parallel.iter().zip(&sequential) {
+            assert_eq!(p.scheme, s.scheme);
+            assert_eq!(p.total_runtime_s, s.total_runtime_s);
+            assert_eq!(p.job_completion_s, s.job_completion_s);
+            assert_eq!(p.deadline_violations, s.deadline_violations);
+        }
+    }
+
+    #[test]
+    fn drive_matches_manual_pump() {
+        let cfg = SchemeConfig::msgc(8, 1, 2, 2);
+        let session_cfg = SessionConfig { jobs: 10, ..Default::default() };
+        let mk = || {
+            Box::new(SimCluster::from_gilbert_elliot(
+                8,
+                GilbertElliot::new(8, 0.05, 0.6, 5),
+                17,
+            ))
+        };
+        let driven = drive(&cfg, &session_cfg, mk().as_mut());
+
+        let mut cluster = mk();
+        let mut session = SgcSession::new(&cfg, session_cfg);
+        while !session.is_complete() {
+            let plan = session.begin_round();
+            let sample = cluster.sample_round(&plan.loads);
+            session.record_true_state(&sample.state);
+            for (w, &f) in sample.finish.iter().enumerate() {
+                session.submit(w, f);
+            }
+            session.close_round();
+        }
+        let manual = session.into_report();
+        assert_eq!(driven.total_runtime_s, manual.total_runtime_s);
+        assert_eq!(driven.job_completion_s, manual.job_completion_s);
+        assert_eq!(driven.true_pattern, manual.true_pattern);
+    }
+}

@@ -1,0 +1,620 @@
+//! Sans-IO round-protocol engine (Sec. 2, Remark 2.3).
+//!
+//! [`SgcSession`] owns everything the paper's master *decides* — scheme
+//! state, μ-rule straggler detection, wait-out policy, tolerance
+//! conformance, job ledgers and run metrics — but performs no IO and
+//! knows nothing about how tasks execute. Drivers pump it through a
+//! pull/push protocol:
+//!
+//! 1. [`begin_round`](SgcSession::begin_round) → a [`RoundPlan`] with the
+//!    per-worker tasks and normalized loads,
+//! 2. [`submit`](SgcSession::submit) / [`submit_all`](SgcSession::submit_all)
+//!    push per-worker completion times back (from a simulator, a recorded
+//!    trace, or real workers),
+//! 3. [`close_round`](SgcSession::close_round) applies the μ-rule and the
+//!    wait-out policy, commits the round into the scheme, decodes newly
+//!    complete jobs and reports what happened as [`SessionEvent`]s.
+//!
+//! The same engine therefore backs metadata simulation
+//! ([`crate::coordinator::Master`]), real-compute PJRT training
+//! ([`crate::train::MultiModelTrainer`]), the probe's profile replays and
+//! the concurrent batch driver ([`run_parallel`]) without duplicating any
+//! round-decision logic. See `rust/DESIGN.md` for the architecture notes.
+
+mod driver;
+
+pub use driver::{default_threads, drive, run_parallel, BatchItem};
+
+use crate::coding::{GcCode, Scheme, SchemeConfig, TaskDesc, ToleranceSpec};
+use crate::coordinator::metrics::{RoundRecord, RunReport};
+use crate::straggler::{Pattern, ToleranceChecker};
+use crate::util::timer::Stopwatch;
+use std::collections::HashMap;
+
+/// Wait-out policy applied when the observed straggler pattern exceeds
+/// what the scheme was designed for (see `rust/DESIGN.md` §Wait-out
+/// policies for the full semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WaitPolicy {
+    /// Remark 2.3 (paper default): wait for stragglers, in completion
+    /// order, until the effective pattern conforms to the design model.
+    /// Every job then decodes by its deadline (Props 3.1/3.2), so no
+    /// deadline is ever violated.
+    ConformanceRepair,
+    /// Lazy ablation: only wait when the job due this round cannot be
+    /// decoded. Under M-SGC a job may *miss its deadline permanently*:
+    /// earlier non-conforming rounds can leave partial gradients
+    /// unattempted, and waiting at the deadline round cannot recover work
+    /// that was never assigned (`rust/DESIGN.md` §Wait-out policies).
+    DeadlineDecode,
+    /// Wait for every worker in every round (the uncoded baseline's
+    /// behaviour; also forced whenever the scheme tolerates no
+    /// stragglers).
+    WaitAll,
+}
+
+/// Protocol configuration for one session (previously `RunConfig`).
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Number of jobs `J`.
+    pub jobs: usize,
+    /// Straggler-detection tolerance μ (paper uses 1.0; Appendix L uses
+    /// 5.0 for the storage-bound workload).
+    pub mu: f64,
+    pub wait_policy: WaitPolicy,
+    /// Measure real GC decode solves and record their cost (Table 4).
+    pub measure_decode: bool,
+    /// Appendix K: when pipelining M > T+1 models, decode hides in the
+    /// master's idle time and does not extend rounds.
+    pub decode_in_idle: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            jobs: 100,
+            mu: 1.0,
+            wait_policy: WaitPolicy::ConformanceRepair,
+            measure_decode: false,
+            decode_in_idle: true,
+        }
+    }
+}
+
+/// What the driver must execute for one round: per-worker tasks and the
+/// normalized load each task implies.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    /// 1-based round index.
+    pub round: usize,
+    /// Task per worker (index = worker id).
+    pub tasks: Vec<TaskDesc>,
+    /// Normalized load per worker (what a latency model needs).
+    pub loads: Vec<f64>,
+}
+
+/// What happened when a round was closed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SessionEvent {
+    /// `close_round` was called before every worker's completion time was
+    /// submitted; the round stays open. Submit the listed workers and
+    /// close again.
+    WaitingFor { workers: Vec<usize> },
+    /// The round committed with the given wall-clock duration;
+    /// `waited_out` workers were admitted past the μ-cutoff by the
+    /// wait-out policy.
+    RoundClosed { round: usize, duration_s: f64, waited_out: usize },
+    /// A job became decodable at absolute session time `at_s`.
+    JobDecoded { job: usize, at_s: f64 },
+    /// The job due this round was not decodable at its deadline.
+    DeadlineViolated { job: usize, round: usize },
+    /// All `J + T` rounds have committed.
+    RunComplete { total_runtime_s: f64 },
+}
+
+/// Outcome of the μ-rule + wait-out decision for one round.
+struct RoundDecision {
+    responded: Vec<bool>,
+    duration: f64,
+    kappa: f64,
+    detected: usize,
+    admitted: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Between rounds: the next call must be `begin_round`.
+    Ready,
+    /// A round is open: accepting `submit` until `close_round`.
+    Collecting,
+}
+
+/// The sans-IO protocol engine. See the [module docs](self) for the
+/// driving protocol.
+pub struct SgcSession {
+    scheme: Box<dyn Scheme>,
+    cfg: SessionConfig,
+    /// Effective policy: `WaitAll` whenever the scheme tolerates no
+    /// stragglers, else `cfg.wait_policy`.
+    wait_policy: WaitPolicy,
+    checker: ToleranceChecker,
+    /// GC decode solvers per code parameter `s`, shared across rounds so
+    /// the coefficient cache persists (hot-path memoization).
+    codes: HashMap<usize, GcCode>,
+    phase: Phase,
+    /// Last begun round (0 before the first `begin_round`).
+    round: usize,
+    total_rounds: usize,
+    n: usize,
+    /// Completion times submitted for the open round.
+    finish: Vec<Option<f64>>,
+    /// Final responder set of the last closed round.
+    responded: Vec<bool>,
+    clock: f64,
+    rounds: Vec<RoundRecord>,
+    job_done: Vec<bool>,
+    job_completion: Vec<f64>,
+    /// First job that might still be pending: jobs decode (almost) in
+    /// order, so the per-round decode scan is O(T) instead of O(J).
+    frontier: usize,
+    violations: usize,
+    true_pattern: Pattern,
+    detected_pattern: Pattern,
+    // Report identity (from the builder config).
+    scheme_label: String,
+    scheme_load: f64,
+    scheme_delay: usize,
+}
+
+impl SgcSession {
+    /// Build a session for `cfg.jobs` jobs of the configured scheme.
+    pub fn new(scheme_cfg: &SchemeConfig, cfg: SessionConfig) -> Self {
+        let scheme = scheme_cfg.build(cfg.jobs);
+        let n = scheme.spec().n;
+        let total_rounds = scheme.total_rounds();
+        let wait_policy = if matches!(scheme.spec().tolerance, ToleranceSpec::None) {
+            WaitPolicy::WaitAll
+        } else {
+            cfg.wait_policy
+        };
+        let checker = ToleranceChecker::new(n, scheme.spec().tolerance.clone());
+        let jobs = cfg.jobs;
+        SgcSession {
+            scheme,
+            cfg,
+            wait_policy,
+            checker,
+            codes: HashMap::new(),
+            phase: Phase::Ready,
+            round: 0,
+            total_rounds,
+            n,
+            finish: vec![None; n],
+            responded: Vec::new(),
+            clock: 0.0,
+            rounds: Vec::with_capacity(total_rounds),
+            job_done: vec![false; jobs],
+            job_completion: vec![f64::NAN; jobs],
+            frontier: 1,
+            violations: 0,
+            true_pattern: Pattern::new(n),
+            detected_pattern: Pattern::new(n),
+            scheme_label: scheme_cfg.label(),
+            scheme_load: scheme_cfg.load(),
+            scheme_delay: scheme_cfg.delay(),
+        }
+    }
+
+    /// Number of workers `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of jobs `J`.
+    pub fn jobs(&self) -> usize {
+        self.cfg.jobs
+    }
+
+    /// Total rounds `J + T`.
+    pub fn total_rounds(&self) -> usize {
+        self.total_rounds
+    }
+
+    /// Last begun round (0 before the first).
+    pub fn current_round(&self) -> usize {
+        self.round
+    }
+
+    /// Absolute session clock (sum of committed round durations).
+    pub fn clock_s(&self) -> f64 {
+        self.clock
+    }
+
+    /// Deadline violations committed so far.
+    pub fn deadline_violations(&self) -> usize {
+        self.violations
+    }
+
+    /// The scheme state (read-only): ledgers, deadlines, decodability.
+    pub fn scheme(&self) -> &dyn Scheme {
+        self.scheme.as_ref()
+    }
+
+    /// Final responder set of the last closed round (empty before the
+    /// first close).
+    pub fn last_responded(&self) -> &[bool] {
+        &self.responded
+    }
+
+    /// Have all `J + T` rounds committed?
+    pub fn is_complete(&self) -> bool {
+        self.round >= self.total_rounds && self.phase == Phase::Ready
+    }
+
+    /// Open the next round: advances the scheme's assignment and returns
+    /// the tasks (plus per-worker loads) the driver must execute.
+    ///
+    /// Panics if the previous round is still open or the run is complete.
+    pub fn begin_round(&mut self) -> RoundPlan {
+        assert_eq!(self.phase, Phase::Ready, "begin_round while a round is open");
+        assert!(!self.is_complete(), "begin_round on a complete session");
+        self.round += 1;
+        let r = self.round;
+        let tasks = self.scheme.assign_round(r);
+        let loads: Vec<f64> = tasks.iter().map(|t| self.scheme.spec().task_load(t)).collect();
+        self.finish = vec![None; self.n];
+        self.phase = Phase::Collecting;
+        RoundPlan { round: r, tasks, loads }
+    }
+
+    /// Push one worker's completion time (seconds from round start) for
+    /// the open round. Re-submitting overwrites.
+    pub fn submit(&mut self, worker: usize, finish_s: f64) {
+        assert_eq!(self.phase, Phase::Collecting, "submit outside an open round");
+        assert!(worker < self.n, "worker {worker} out of range (n={})", self.n);
+        assert!(
+            finish_s.is_finite(),
+            "worker {worker} completion time must be finite, got {finish_s}"
+        );
+        self.finish[worker] = Some(finish_s);
+    }
+
+    /// Push every worker's completion time at once.
+    pub fn submit_all(&mut self, finish_s: &[f64]) {
+        assert_eq!(finish_s.len(), self.n, "finish length mismatch");
+        for (i, &f) in finish_s.iter().enumerate() {
+            self.submit(i, f);
+        }
+    }
+
+    /// Record the ground-truth straggler states for the open round
+    /// (optional; simulators know them, real clusters do not). Feeds the
+    /// report's `true_pattern` for Fig.-1-style analysis.
+    pub fn record_true_state(&mut self, state: &[bool]) {
+        assert_eq!(self.phase, Phase::Collecting, "record_true_state outside an open round");
+        assert_eq!(state.len(), self.n, "state length mismatch");
+        assert_eq!(
+            self.true_pattern.rounds(),
+            self.round - 1,
+            "true state already recorded for round {}",
+            self.round
+        );
+        self.true_pattern.push_round(state.to_vec());
+    }
+
+    /// Close the open round: apply the μ-rule and wait-out policy to the
+    /// submitted times, commit the responder set into the scheme and the
+    /// conformance checker, decode every newly complete job, and return
+    /// the resulting events.
+    ///
+    /// If some workers have not submitted yet, returns a single
+    /// [`SessionEvent::WaitingFor`] and leaves the round open.
+    pub fn close_round(&mut self) -> Vec<SessionEvent> {
+        assert_eq!(self.phase, Phase::Collecting, "close_round without an open round");
+        let missing: Vec<usize> =
+            (0..self.n).filter(|&i| self.finish[i].is_none()).collect();
+        if !missing.is_empty() {
+            return vec![SessionEvent::WaitingFor { workers: missing }];
+        }
+        let finish: Vec<f64> = self.finish.iter().map(|f| f.unwrap()).collect();
+        let r = self.round;
+
+        let deadline_done =
+            self.scheme.deadline_job(r).map(|t| self.job_done[t - 1]).unwrap_or(true);
+        let decision = decide(
+            &finish,
+            self.cfg.mu,
+            self.wait_policy,
+            &self.checker,
+            self.scheme.as_ref(),
+            r,
+            deadline_done,
+        );
+        let RoundDecision { responded, mut duration, kappa, detected, admitted } = decision;
+        self.detected_pattern.push_round(
+            finish.iter().map(|&f| f > (1.0 + self.cfg.mu) * kappa).collect(),
+        );
+
+        let effective_stragglers: Vec<bool> = responded.iter().map(|&x| !x).collect();
+        self.checker.commit(&effective_stragglers);
+        self.scheme.commit_round(r, &responded);
+
+        // Decode every newly complete job; optionally time the real
+        // linear-algebra decode.
+        let mut completed = Vec::new();
+        let mut decode_s = 0.0;
+        for t in self.frontier..=self.cfg.jobs.min(r) {
+            if self.job_done[t - 1] || !self.scheme.decodable(t) {
+                continue;
+            }
+            if self.cfg.measure_decode {
+                decode_s += time_decode(&mut self.codes, self.scheme.as_ref(), t);
+            }
+            self.job_done[t - 1] = true;
+            completed.push(t);
+        }
+        while self.frontier <= self.cfg.jobs && self.job_done[self.frontier - 1] {
+            self.frontier += 1;
+        }
+        if !self.cfg.decode_in_idle {
+            duration += decode_s;
+        }
+        self.clock += duration;
+        for &t in &completed {
+            self.job_completion[t - 1] = self.clock;
+        }
+
+        let mut events = Vec::with_capacity(2 + completed.len());
+        events.push(SessionEvent::RoundClosed {
+            round: r,
+            duration_s: duration,
+            waited_out: admitted,
+        });
+        for &t in &completed {
+            events.push(SessionEvent::JobDecoded { job: t, at_s: self.clock });
+        }
+        if let Some(t) = self.scheme.deadline_job(r) {
+            if !self.job_done[t - 1] {
+                self.violations += 1;
+                events.push(SessionEvent::DeadlineViolated { job: t, round: r });
+            }
+        }
+        self.rounds.push(RoundRecord {
+            round: r,
+            duration_s: duration,
+            kappa_s: kappa,
+            detected_stragglers: detected,
+            waited_out: admitted,
+            decode_s,
+            jobs_completed: completed,
+        });
+        self.responded = responded;
+        self.phase = Phase::Ready;
+        if self.round == self.total_rounds {
+            events.push(SessionEvent::RunComplete { total_runtime_s: self.clock });
+        }
+        events
+    }
+
+    /// Consume the session into the full run report.
+    pub fn into_report(self) -> RunReport {
+        RunReport {
+            scheme: self.scheme_label,
+            load: self.scheme_load,
+            delay: self.scheme_delay,
+            jobs: self.cfg.jobs,
+            total_runtime_s: self.clock,
+            rounds: self.rounds,
+            job_completion_s: self.job_completion,
+            deadline_violations: self.violations,
+            true_pattern: self.true_pattern,
+            effective_pattern: self.checker.pattern().clone(),
+            detected_pattern: self.detected_pattern,
+        }
+    }
+}
+
+/// Apply the μ-rule and the wait-out policy to a round's completion
+/// times. `r` must be the currently assigned, uncommitted round of
+/// `scheme`. This is the *only* copy of the round-decision logic; every
+/// execution backend reaches it through [`SgcSession::close_round`].
+fn decide(
+    finish: &[f64],
+    mu: f64,
+    policy: WaitPolicy,
+    checker: &ToleranceChecker,
+    scheme: &dyn Scheme,
+    r: usize,
+    deadline_already_done: bool,
+) -> RoundDecision {
+    let n = finish.len();
+    let kappa = finish.iter().cloned().fold(f64::INFINITY, f64::min);
+    let cutoff = (1.0 + mu) * kappa;
+    let mut responded: Vec<bool> = finish.iter().map(|&f| f <= cutoff).collect();
+    let detected = n - responded.iter().filter(|&&x| x).count();
+    let mut duration = if detected == 0 {
+        finish.iter().cloned().fold(0.0, f64::max)
+    } else {
+        cutoff
+    };
+
+    let mut pending: Vec<usize> = (0..n).filter(|&i| !responded[i]).collect();
+    pending.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
+    let mut admitted = 0usize;
+    let mut next = pending.into_iter();
+    loop {
+        let satisfied = match policy {
+            WaitPolicy::WaitAll => responded.iter().all(|&x| x),
+            WaitPolicy::ConformanceRepair => {
+                let stragglers: Vec<bool> = responded.iter().map(|&x| !x).collect();
+                checker.acceptable(&stragglers)
+            }
+            WaitPolicy::DeadlineDecode => match scheme.deadline_job(r) {
+                Some(t) if !deadline_already_done => scheme.decodable_with(t, r, &responded),
+                _ => true,
+            },
+        };
+        if satisfied {
+            break;
+        }
+        match next.next() {
+            Some(w) => {
+                responded[w] = true;
+                duration = duration.max(finish[w]);
+                admitted += 1;
+            }
+            None => break,
+        }
+    }
+
+    // Backstop (ConformanceRepair): the deadline job must decode now.
+    if policy == WaitPolicy::ConformanceRepair {
+        if let Some(t) = scheme.deadline_job(r) {
+            if !deadline_already_done {
+                let mut rest: Vec<usize> = (0..n).filter(|&i| !responded[i]).collect();
+                rest.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
+                let mut rest = rest.into_iter();
+                while !scheme.decodable_with(t, r, &responded) {
+                    match rest.next() {
+                        Some(w) => {
+                            responded[w] = true;
+                            duration = duration.max(finish[w]);
+                            admitted += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+    }
+
+    RoundDecision { responded, duration, kappa, detected, admitted }
+}
+
+/// Time the actual decode work for a job: one coefficient solve per
+/// non-trivially coded group (replication groups decode by a trivial sum
+/// and cost ~0).
+fn time_decode(codes: &mut HashMap<usize, GcCode>, scheme: &dyn Scheme, job: usize) -> f64 {
+    let n = scheme.spec().n;
+    let ledger = scheme.ledger(job);
+    let sw = Stopwatch::start();
+    for (got, &need) in ledger.coded_got.iter().zip(&ledger.coded_need) {
+        if need <= 1 || need >= n {
+            continue; // replication / degenerate group: trivial decode
+        }
+        let s = n - need;
+        let code = codes.entry(s).or_insert_with(|| GcCode::new(n, s, 0xdec0de));
+        let mut workers: Vec<usize> = got.iter().cloned().collect();
+        workers.sort_unstable();
+        workers.truncate(need);
+        // The solve is the measured cost; failure here would mean a
+        // non-decodable set, which `decodable()` already excluded.
+        let _ = code.decode_coeffs(&workers);
+    }
+    sw.elapsed_s()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gc_session(n: usize, s: usize, jobs: usize) -> SgcSession {
+        SgcSession::new(
+            &SchemeConfig::gc(n, s),
+            SessionConfig { jobs, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn protocol_completes_a_quiet_run() {
+        let jobs = 5;
+        let mut session = gc_session(4, 1, jobs);
+        let mut decoded = Vec::new();
+        let mut complete = false;
+        while !session.is_complete() {
+            let plan = session.begin_round();
+            assert_eq!(plan.tasks.len(), 4);
+            assert_eq!(plan.loads.len(), 4);
+            // all workers finish at the same time: nobody straggles
+            session.submit_all(&[1.0, 1.0, 1.0, 1.0]);
+            for ev in session.close_round() {
+                match ev {
+                    SessionEvent::JobDecoded { job, .. } => decoded.push(job),
+                    SessionEvent::RunComplete { total_runtime_s } => {
+                        complete = true;
+                        assert!(total_runtime_s > 0.0);
+                    }
+                    SessionEvent::DeadlineViolated { .. } => panic!("quiet run violated"),
+                    _ => {}
+                }
+            }
+        }
+        assert!(complete);
+        assert_eq!(decoded, (1..=jobs).collect::<Vec<_>>());
+        let report = session.into_report();
+        assert_eq!(report.rounds.len(), jobs);
+        assert_eq!(report.deadline_violations, 0);
+    }
+
+    #[test]
+    fn close_round_reports_missing_workers() {
+        let mut session = gc_session(3, 1, 2);
+        session.begin_round();
+        session.submit(0, 1.0);
+        session.submit(2, 1.0);
+        let events = session.close_round();
+        assert_eq!(events, vec![SessionEvent::WaitingFor { workers: vec![1] }]);
+        // the round is still open; supplying the straggler lets it close
+        session.submit(1, 1.2);
+        let events = session.close_round();
+        assert!(matches!(events[0], SessionEvent::RoundClosed { round: 1, .. }));
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_round while a round is open")]
+    fn begin_round_twice_panics() {
+        let mut session = gc_session(3, 1, 2);
+        session.begin_round();
+        session.begin_round();
+    }
+
+    #[test]
+    fn uncoded_forces_wait_all() {
+        let mut session = SgcSession::new(
+            &SchemeConfig::uncoded(4),
+            SessionConfig { jobs: 1, ..Default::default() },
+        );
+        session.begin_round();
+        // worker 3 is far beyond the μ-cutoff but must still be waited for
+        session.submit_all(&[1.0, 1.0, 1.0, 9.0]);
+        let events = session.close_round();
+        match &events[0] {
+            SessionEvent::RoundClosed { duration_s, waited_out, .. } => {
+                assert!((*duration_s - 9.0).abs() < 1e-12, "wait-all must cover the tail");
+                assert_eq!(*waited_out, 1);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        assert!(session.last_responded().iter().all(|&x| x));
+    }
+
+    #[test]
+    fn straggler_beyond_cutoff_is_excluded_under_gc() {
+        // GC(s=1) tolerates one straggler per round: the slow worker is
+        // cut off and the round ends at the μ-cutoff.
+        let mut session = gc_session(4, 1, 1);
+        session.begin_round();
+        session.submit_all(&[1.0, 1.0, 1.0, 9.0]);
+        let events = session.close_round();
+        match &events[0] {
+            SessionEvent::RoundClosed { duration_s, waited_out, .. } => {
+                assert!((*duration_s - 2.0).abs() < 1e-12, "round ends at (1+μ)κ");
+                assert_eq!(*waited_out, 0);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        assert_eq!(session.last_responded(), &[true, true, true, false]);
+        // the job still decodes this round
+        assert!(events.iter().any(|e| matches!(e, SessionEvent::JobDecoded { job: 1, .. })));
+    }
+}

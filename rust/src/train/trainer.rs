@@ -9,11 +9,9 @@
 //! master at each job's completion.
 
 use crate::cluster::Cluster;
-use crate::coding::{GcCode, Scheme, SchemeConfig, SchemeKind, ToleranceSpec, WorkUnit};
-use crate::coordinator::master::{decide_round, RoundDecision};
-use crate::coordinator::WaitPolicy;
+use crate::coding::{GcCode, Scheme, SchemeConfig, SchemeKind, WorkUnit};
 use crate::runtime::{ComputePool, GradRequest};
-use crate::straggler::ToleranceChecker;
+use crate::session::{SessionConfig, SessionEvent, SgcSession};
 use crate::train::adam::Adam;
 use crate::train::dataset::Dataset;
 use crate::util::rng::Pcg32;
@@ -175,19 +173,21 @@ impl MultiModelTrainer {
     }
 
     /// Run the training loop against a (simulated-time) cluster.
+    ///
+    /// Round decisions (μ-rule, wait-outs, commit, decodability) are made
+    /// by the sans-IO [`SgcSession`]; this loop only executes the plan's
+    /// tasks for real (PJRT gradients, GC encode) and numerically decodes
+    /// the jobs the session reports as complete.
     pub fn run(&mut self, cluster: &mut dyn Cluster) -> Result<TrainReport> {
         let wall = Stopwatch::start();
         let jobs = self.cfg.models * self.cfg.iterations;
-        let mut scheme = self.scheme_cfg.build(jobs);
-        let n = scheme.spec().n;
+        let mut session = SgcSession::new(
+            &self.scheme_cfg,
+            SessionConfig { jobs, mu: self.cfg.mu, ..Default::default() },
+        );
+        let n = session.n();
         anyhow::ensure!(cluster.n() == n, "cluster size mismatch");
         let chunk_cap = self.pool.dims().chunk;
-        let wait_policy = if matches!(scheme.spec().tolerance, ToleranceSpec::None) {
-            WaitPolicy::WaitAll
-        } else {
-            WaitPolicy::ConformanceRepair
-        };
-        let mut checker = ToleranceChecker::new(n, scheme.spec().tolerance.clone());
         let mut batch_rng = Pcg32::new(self.cfg.seed, 0xba7c);
         let mut codes: HashMap<usize, GcCode> = HashMap::new();
 
@@ -210,15 +210,13 @@ impl MultiModelTrainer {
 
         let mut jobs_state: Vec<Option<JobState>> = (0..jobs).map(|_| None).collect();
         let mut losses: Vec<Vec<LossPoint>> = vec![Vec::new(); self.cfg.models];
-        let mut clock = 0.0f64;
         let mut completed = 0usize;
-        let mut violations = 0usize;
-        let mut frontier = 1usize;
         let mut curve = Vec::new();
-        let chunk_fracs = scheme.spec().chunk_sizes.clone();
+        let chunk_fracs = session.scheme().spec().chunk_sizes.clone();
 
-        let total_rounds = scheme.total_rounds();
-        for r in 1..=total_rounds {
+        while !session.is_complete() {
+            let plan = session.begin_round();
+            let r = plan.round;
             // Start job r: snapshot the owning model's params, sample and
             // split the batch.
             if r <= jobs {
@@ -246,36 +244,26 @@ impl MultiModelTrainer {
                 });
             }
 
-            let tasks = scheme.assign_round(r);
-            let loads: Vec<f64> = tasks.iter().map(|t| scheme.spec().task_load(t)).collect();
-            let sample = cluster.sample_round(&loads);
-            let deadline_done = scheme
-                .deadline_job(r)
-                .map(|t| jobs_state[t - 1].as_ref().map(|j| j.done).unwrap_or(false))
-                .unwrap_or(true);
-            let RoundDecision { responded, duration, .. } = decide_round(
-                &sample.finish,
-                self.cfg.mu,
-                wait_policy,
-                &checker,
-                scheme.as_ref(),
-                r,
-                deadline_done,
-            );
-            checker.commit(&responded.iter().map(|&x| !x).collect::<Vec<_>>());
-            scheme.commit_round(r, &responded);
-            clock += duration;
+            let sample = cluster.sample_round(&plan.loads);
+            session.submit_all(&sample.finish);
+            let events = session.close_round();
 
             // Real compute for responders' units on still-active jobs.
-            self.compute_round(scheme.as_ref(), &tasks, &responded, &mut jobs_state, &mut codes)?;
+            self.compute_round(
+                session.scheme(),
+                &plan.tasks,
+                session.last_responded(),
+                &mut jobs_state,
+                &mut codes,
+            )?;
 
-            // Decode newly complete jobs, update models, log losses.
-            for t in frontier..=jobs.min(r) {
-                let state_done = jobs_state[t - 1].as_ref().map(|j| j.done).unwrap_or(true);
-                if state_done || !scheme.decodable(t) {
-                    continue;
-                }
-                let grad = self.finalize_job(scheme.as_ref(), t, &mut jobs_state, &mut codes)?;
+            // Numerically decode the jobs the session decoded at the
+            // metadata level, update models, log losses.
+            let clock = session.clock_s();
+            for ev in &events {
+                let SessionEvent::JobDecoded { job, .. } = ev else { continue };
+                let t = *job;
+                let grad = self.finalize_job(session.scheme(), t, &mut jobs_state, &mut codes)?;
                 let js = jobs_state[t - 1].as_mut().unwrap();
                 js.done = true;
                 completed += 1;
@@ -302,20 +290,9 @@ impl MultiModelTrainer {
                     });
                 }
             }
-            while frontier <= jobs
-                && jobs_state[frontier - 1].as_ref().map(|j| j.done).unwrap_or(false)
-            {
-                frontier += 1;
-            }
             curve.push((clock, completed));
-            if let Some(t) = scheme.deadline_job(r) {
-                let done = jobs_state[t - 1].as_ref().map(|j| j.done).unwrap_or(false);
-                if !done {
-                    violations += 1;
-                }
-            }
             // Drop job state once past its deadline to bound memory.
-            if let Some(t) = scheme.deadline_job(r) {
+            if let Some(t) = session.scheme().deadline_job(r) {
                 if let Some(js) = jobs_state[t - 1].as_mut() {
                     js.chunk_indices.clear();
                     js.coded.clear();
@@ -325,11 +302,11 @@ impl MultiModelTrainer {
 
         Ok(TrainReport {
             scheme: self.scheme_cfg.label(),
-            sim_runtime_s: clock,
+            sim_runtime_s: session.clock_s(),
             wall_runtime_s: wall.elapsed_s(),
             losses,
             jobs_completed: completed,
-            deadline_violations: violations,
+            deadline_violations: session.deadline_violations(),
             completion_curve: curve,
         })
     }

@@ -1,0 +1,262 @@
+//! Golden equivalence: the sans-IO `SgcSession` must reproduce the seed
+//! master loop *bit for bit*.
+//!
+//! `reference_run` below is a frozen copy of the pre-session
+//! `Master::run` + `decide_round` logic (the duplicated round loop the
+//! session refactor deleted from the library). For every scheme kind, a
+//! run driven through the new session on an identically-seeded cluster
+//! must produce a byte-identical `RunReport` — same f64 bit patterns,
+//! same round records, same patterns — which we check by comparing the
+//! full `Debug` rendering.
+
+use sgc::cluster::{Cluster, SimCluster};
+use sgc::coding::{Scheme, SchemeConfig, ToleranceSpec};
+use sgc::coordinator::{Master, RoundRecord, RunConfig, RunReport, WaitPolicy};
+use sgc::straggler::{GilbertElliot, Pattern, ToleranceChecker};
+
+struct RefDecision {
+    responded: Vec<bool>,
+    duration: f64,
+    kappa: f64,
+    detected: usize,
+    admitted: usize,
+}
+
+/// Frozen copy of the seed `decide_round`.
+#[allow(clippy::too_many_arguments)]
+fn ref_decide(
+    finish: &[f64],
+    mu: f64,
+    policy: WaitPolicy,
+    checker: &ToleranceChecker,
+    scheme: &dyn Scheme,
+    r: usize,
+    deadline_already_done: bool,
+) -> RefDecision {
+    let n = finish.len();
+    let kappa = finish.iter().cloned().fold(f64::INFINITY, f64::min);
+    let cutoff = (1.0 + mu) * kappa;
+    let mut responded: Vec<bool> = finish.iter().map(|&f| f <= cutoff).collect();
+    let detected = n - responded.iter().filter(|&&x| x).count();
+    let mut duration = if detected == 0 {
+        finish.iter().cloned().fold(0.0, f64::max)
+    } else {
+        cutoff
+    };
+
+    let mut pending: Vec<usize> = (0..n).filter(|&i| !responded[i]).collect();
+    pending.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
+    let mut admitted = 0usize;
+    let mut next = pending.into_iter();
+    loop {
+        let satisfied = match policy {
+            WaitPolicy::WaitAll => responded.iter().all(|&x| x),
+            WaitPolicy::ConformanceRepair => {
+                let stragglers: Vec<bool> = responded.iter().map(|&x| !x).collect();
+                checker.acceptable(&stragglers)
+            }
+            WaitPolicy::DeadlineDecode => match scheme.deadline_job(r) {
+                Some(t) if !deadline_already_done => scheme.decodable_with(t, r, &responded),
+                _ => true,
+            },
+        };
+        if satisfied {
+            break;
+        }
+        match next.next() {
+            Some(w) => {
+                responded[w] = true;
+                duration = duration.max(finish[w]);
+                admitted += 1;
+            }
+            None => break,
+        }
+    }
+
+    if policy == WaitPolicy::ConformanceRepair {
+        if let Some(t) = scheme.deadline_job(r) {
+            if !deadline_already_done {
+                let mut rest: Vec<usize> = (0..n).filter(|&i| !responded[i]).collect();
+                rest.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
+                let mut rest = rest.into_iter();
+                while !scheme.decodable_with(t, r, &responded) {
+                    match rest.next() {
+                        Some(w) => {
+                            responded[w] = true;
+                            duration = duration.max(finish[w]);
+                            admitted += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+    }
+
+    RefDecision { responded, duration, kappa, detected, admitted }
+}
+
+/// Frozen copy of the seed `Master::run` (with `measure_decode = false`,
+/// `decode_in_idle = true`, so no wall-clock decode timing enters the
+/// report and the comparison is fully deterministic).
+fn reference_run(
+    scheme_cfg: &SchemeConfig,
+    jobs: usize,
+    mu: f64,
+    wait_policy: WaitPolicy,
+    cluster: &mut dyn Cluster,
+) -> RunReport {
+    let mut scheme = scheme_cfg.build(jobs);
+    let n = scheme.spec().n;
+    assert_eq!(cluster.n(), n, "cluster/scheme size mismatch");
+    let total_rounds = scheme.total_rounds();
+    let wait_policy = if matches!(scheme.spec().tolerance, ToleranceSpec::None) {
+        WaitPolicy::WaitAll
+    } else {
+        wait_policy
+    };
+    let mut checker = ToleranceChecker::new(n, scheme.spec().tolerance.clone());
+
+    let mut clock = 0.0f64;
+    let mut rounds = Vec::with_capacity(total_rounds);
+    let mut job_done = vec![false; jobs];
+    let mut job_completion = vec![f64::NAN; jobs];
+    let mut frontier = 1usize;
+    let mut violations = 0usize;
+    let mut true_pattern = Pattern::new(n);
+    let mut detected_pattern = Pattern::new(n);
+
+    for r in 1..=total_rounds {
+        let tasks = scheme.assign_round(r);
+        let loads: Vec<f64> = tasks.iter().map(|t| scheme.spec().task_load(t)).collect();
+        let sample = cluster.sample_round(&loads);
+        true_pattern.push_round(sample.state.clone());
+
+        let deadline_done = scheme.deadline_job(r).map(|t| job_done[t - 1]).unwrap_or(true);
+        let decision = ref_decide(
+            &sample.finish,
+            mu,
+            wait_policy,
+            &checker,
+            scheme.as_ref(),
+            r,
+            deadline_done,
+        );
+        let RefDecision { responded, duration, kappa, detected, admitted } = decision;
+        detected_pattern
+            .push_round(sample.finish.iter().map(|&f| f > (1.0 + mu) * kappa).collect());
+
+        let effective_stragglers: Vec<bool> = responded.iter().map(|&x| !x).collect();
+        checker.commit(&effective_stragglers);
+        scheme.commit_round(r, &responded);
+
+        let mut completed = Vec::new();
+        for t in frontier..=jobs.min(r) {
+            if job_done[t - 1] || !scheme.decodable(t) {
+                continue;
+            }
+            job_done[t - 1] = true;
+            completed.push(t);
+        }
+        while frontier <= jobs && job_done[frontier - 1] {
+            frontier += 1;
+        }
+        clock += duration;
+        for &t in &completed {
+            job_completion[t - 1] = clock;
+        }
+        if let Some(t) = scheme.deadline_job(r) {
+            if !job_done[t - 1] {
+                violations += 1;
+            }
+        }
+        rounds.push(RoundRecord {
+            round: r,
+            duration_s: duration,
+            kappa_s: kappa,
+            detected_stragglers: detected,
+            waited_out: admitted,
+            decode_s: 0.0,
+            jobs_completed: completed,
+        });
+    }
+
+    RunReport {
+        scheme: scheme_cfg.label(),
+        load: scheme_cfg.load(),
+        delay: scheme_cfg.delay(),
+        jobs,
+        total_runtime_s: clock,
+        rounds,
+        job_completion_s: job_completion,
+        deadline_violations: violations,
+        true_pattern,
+        effective_pattern: checker.pattern().clone(),
+        detected_pattern,
+    }
+}
+
+fn cluster(n: usize, seed: u64) -> SimCluster {
+    SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.06, 0.6, seed), seed ^ 0x5a)
+}
+
+#[test]
+fn session_matches_reference_loop_byte_for_byte() {
+    // Replication variants need their group size to divide n = 24:
+    // gc-rep/sr-sgc-rep have (s+1) = 4 | 24, m-sgc-rep has (λ+1) = 6 | 24.
+    let n = 24;
+    let jobs = 30;
+    let specs = [
+        "gc:4",
+        "gc-rep:3",
+        "sr-sgc:1,2,6",
+        "sr-sgc-rep:1,2,6",
+        "m-sgc:1,2,6",
+        "m-sgc-rep:1,2,5",
+        "uncoded",
+    ];
+    for spec in specs {
+        let cfg = SchemeConfig::parse(n, spec).unwrap();
+        let reference = reference_run(
+            &cfg,
+            jobs,
+            1.0,
+            WaitPolicy::ConformanceRepair,
+            &mut cluster(n, 11),
+        );
+        let mut master =
+            Master::new(cfg, RunConfig { jobs, ..Default::default() });
+        let session = master.run(&mut cluster(n, 11));
+        assert_eq!(
+            format!("{reference:?}"),
+            format!("{session:?}"),
+            "{spec}: session-driven report diverged from the reference loop"
+        );
+    }
+}
+
+#[test]
+fn session_matches_reference_under_deadline_decode() {
+    let n = 16;
+    let jobs = 25;
+    for spec in ["gc:3", "m-sgc:1,2,4"] {
+        let cfg = SchemeConfig::parse(n, spec).unwrap();
+        let reference = reference_run(
+            &cfg,
+            jobs,
+            1.0,
+            WaitPolicy::DeadlineDecode,
+            &mut cluster(n, 29),
+        );
+        let mut master = Master::new(
+            cfg,
+            RunConfig { jobs, wait_policy: WaitPolicy::DeadlineDecode, ..Default::default() },
+        );
+        let session = master.run(&mut cluster(n, 29));
+        assert_eq!(
+            format!("{reference:?}"),
+            format!("{session:?}"),
+            "{spec}: deadline-decode report diverged from the reference loop"
+        );
+    }
+}

@@ -1,10 +1,11 @@
-//! Integration tests: master + schemes + simulated cluster + probe, at
-//! Table-1-like (but scaled-down) configurations.
+//! Integration tests: session protocol + schemes + simulated cluster +
+//! probe, at Table-1-like (but scaled-down) configurations.
 
 use sgc::cluster::{LatencyParams, SimCluster};
 use sgc::coding::SchemeConfig;
 use sgc::coordinator::{Master, RunConfig, WaitPolicy};
 use sgc::probe::{grid_search, DelayProfile, SearchSpace};
+use sgc::session::{self, SessionConfig, SessionEvent, SgcSession};
 use sgc::straggler::{GilbertElliot, NoStragglers, Pattern, TraceProcess};
 
 fn ge_cluster(n: usize, seed: u64) -> SimCluster {
@@ -13,8 +14,11 @@ fn ge_cluster(n: usize, seed: u64) -> SimCluster {
 
 fn run(scheme: SchemeConfig, jobs: usize, seed: u64) -> sgc::coordinator::RunReport {
     let n = scheme.n;
-    let mut master = Master::new(scheme, RunConfig { jobs, ..Default::default() });
-    master.run(&mut ge_cluster(n, seed))
+    session::drive(
+        &scheme,
+        &SessionConfig { jobs, ..Default::default() },
+        &mut ge_cluster(n, seed),
+    )
 }
 
 #[test]
@@ -173,6 +177,62 @@ fn runs_are_deterministic_given_seed() {
     let b = run(SchemeConfig::msgc(16, 1, 2, 4), 25, 77);
     assert_eq!(a.total_runtime_s, b.total_runtime_s);
     assert_eq!(a.job_completion_s, b.job_completion_s);
+}
+
+#[test]
+fn master_facade_equals_session_drive() {
+    // The classic Master API is a thin driver over the same session: the
+    // two entry points must agree exactly.
+    let scheme = SchemeConfig::sr_sgc(32, 1, 2, 8);
+    let jobs = 20;
+    let via_session = run(scheme.clone(), jobs, 5);
+    let mut master = Master::new(scheme, RunConfig { jobs, ..Default::default() });
+    let via_master = master.run(&mut ge_cluster(32, 5));
+    assert_eq!(via_master.total_runtime_s, via_session.total_runtime_s);
+    assert_eq!(via_master.job_completion_s, via_session.job_completion_s);
+    assert_eq!(via_master.deadline_violations, via_session.deadline_violations);
+}
+
+#[test]
+fn session_event_stream_is_consistent_with_report() {
+    // Pump a session by hand; the event stream must agree with the final
+    // report: every job decodes exactly once, violations match, and the
+    // clock in RunComplete equals the report total.
+    let n = 16;
+    let jobs = 20;
+    let scheme = SchemeConfig::msgc(n, 1, 2, 4);
+    let mut cluster = ge_cluster(n, 13);
+    let mut session =
+        SgcSession::new(&scheme, SessionConfig { jobs, ..Default::default() });
+    let mut decoded = Vec::new();
+    let mut violated = 0usize;
+    let mut final_clock = None;
+    while !session.is_complete() {
+        let plan = session.begin_round();
+        assert_eq!(plan.round, session.current_round());
+        let sample = cluster.sample_round(&plan.loads);
+        session.record_true_state(&sample.state);
+        session.submit_all(&sample.finish);
+        for ev in session.close_round() {
+            match ev {
+                SessionEvent::JobDecoded { job, .. } => decoded.push(job),
+                SessionEvent::DeadlineViolated { .. } => violated += 1,
+                SessionEvent::RunComplete { total_runtime_s } => {
+                    final_clock = Some(total_runtime_s)
+                }
+                SessionEvent::WaitingFor { .. } => panic!("all times were submitted"),
+                SessionEvent::RoundClosed { .. } => {}
+            }
+        }
+    }
+    let report = session.into_report();
+    let mut sorted = decoded.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), decoded.len(), "a job decoded twice");
+    assert_eq!(decoded.len(), jobs, "every job decodes under conformance repair");
+    assert_eq!(violated, report.deadline_violations);
+    assert_eq!(final_clock, Some(report.total_runtime_s));
 }
 
 #[test]
