@@ -24,7 +24,7 @@ fn main() {
         let mut master = Master::new(scheme.clone(), RunConfig { jobs, ..Default::default() });
         let mut cluster =
             SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 7), 99);
-        let report = master.run(&mut cluster);
+        let report = master.run(&mut cluster).expect("matching cluster size");
         println!(
             "{:<16} {:>8.4} {:>4} {:>12.1} {:>10} {:>10}",
             report.scheme,

@@ -1,11 +1,13 @@
 //! Hot-path microbenchmarks (§Perf): GC decode solve (cold + cached),
-//! M-SGC assignment, conformance checking, one full simulated round, and
-//! the end-to-end Table-1-scale run.
+//! M-SGC assignment, conformance checking, fleet wire-codec
+//! encode/decode, one full simulated round, and the end-to-end
+//! Table-1-scale run.
 
 use sgc::bench_harness::Bench;
 use sgc::cluster::SimCluster;
 use sgc::coding::{GcCode, MSgcParams, MSgcScheme, Scheme, SchemeConfig};
 use sgc::coordinator::{Master, RunConfig};
+use sgc::fleet::Frame;
 use sgc::straggler::{GilbertElliot, ToleranceChecker};
 use sgc::util::rng::Pcg32;
 
@@ -88,6 +90,42 @@ fn main() {
         });
     }
 
+    // --- fleet wire codec --------------------------------------------------
+    // Serialization must stay O(100ns)/frame — far beneath the ~0.1 ms
+    // localhost RTT, so the codec never shows up on the fleet hot path.
+    {
+        // a worst-case realistic Assign: full-replication task at n=256
+        let assign = Frame::Assign {
+            round: 480,
+            work_units: 0.0625,
+            chunks: (0..256).collect(),
+        };
+        let result = Frame::Result {
+            worker_id: 255,
+            round: 480,
+            compute_s: 1.2345,
+            checksum: 0xfeed_f00d_dead_beef,
+        };
+        b.run("wire_encode_assign(256 chunks)", || {
+            let _ = assign.encode();
+        });
+        let assign_bytes = assign.encode();
+        b.run("wire_decode_assign(256 chunks)", || {
+            let _ = Frame::decode(&assign_bytes).unwrap();
+        });
+        b.run("wire_encode_result", || {
+            let _ = result.encode();
+        });
+        let result_bytes = result.encode();
+        b.run("wire_decode_result", || {
+            let _ = Frame::decode(&result_bytes).unwrap();
+        });
+        let hb = Frame::Heartbeat { worker_id: 1, round: 2 }.encode();
+        b.run("wire_roundtrip_heartbeat", || {
+            let _ = Frame::decode(&hb).unwrap();
+        });
+    }
+
     // --- one simulated cluster round --------------------------------------
     {
         let mut cluster =
@@ -108,7 +146,7 @@ fn main() {
                 Master::new(scheme.clone(), RunConfig { jobs: 480, ..Default::default() });
             let mut cluster =
                 SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 3), 4);
-            let _ = master.run(&mut cluster);
+            let _ = master.run(&mut cluster).expect("sizes match");
         });
     }
 

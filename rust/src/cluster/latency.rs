@@ -64,6 +64,14 @@ impl Default for LatencyParams {
     }
 }
 
+/// Within-burst decayed slowdown multiplier: a worker in its `age`-th
+/// consecutive slow round stretches by `1 + (raw - 1)·decay^age`. Shared
+/// by the simulator's latency model and the fleet's chaos injection
+/// ([`crate::fleet::ChaosConfig`]) so the two stay one process.
+pub fn decayed_uplift(raw: f64, decay: f64, burst_age: usize) -> f64 {
+    1.0 + (raw - 1.0) * decay.powi(burst_age as i32)
+}
+
 impl LatencyParams {
     /// Expected *non-straggler* completion time at a given load (used by
     /// the Appendix-J load-adjustment rule).
@@ -81,8 +89,7 @@ impl LatencyParams {
         let base = overhead + compute.max(0.0);
         if straggling {
             let raw = rng.pareto(self.straggle_scale, self.straggle_shape);
-            let uplift = 1.0 + (raw - 1.0) * self.straggle_decay.powi(burst_age as i32);
-            base * uplift
+            base * decayed_uplift(raw, self.straggle_decay, burst_age)
         } else {
             base
         }

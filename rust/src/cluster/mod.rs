@@ -5,17 +5,20 @@
 pub mod latency;
 pub mod sim;
 pub mod storage;
+pub mod trace;
 
 pub use latency::LatencyParams;
 pub use sim::{RoundSample, SimCluster};
 pub use storage::StorageParams;
+pub use trace::{RecordingCluster, RunTrace, TraceReplayCluster};
 
 /// The unified execution backend the session drivers pump rounds
 /// through: the stochastic simulator ([`SimCluster`]), trace/profile
-/// replay ([`crate::probe::ProfileCluster`], [`SimCluster::from_trace`]),
-/// or a real-compute thread pool. Backends only turn per-worker loads
-/// into per-worker completion times; every protocol decision stays in
-/// [`crate::session::SgcSession`].
+/// replay ([`crate::probe::ProfileCluster`], [`SimCluster::from_trace`],
+/// [`TraceReplayCluster`]), a real-compute thread pool, or the live TCP
+/// fleet ([`crate::fleet::FleetCluster`]). Backends only turn per-worker
+/// loads into per-worker completion times; every protocol decision stays
+/// in [`crate::session::SgcSession`].
 pub trait Cluster {
     fn n(&self) -> usize;
 

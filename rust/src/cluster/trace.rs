@@ -1,0 +1,318 @@
+//! Trace record / replay: capture the per-round `(n × rounds)` delay
+//! matrix of *any* [`Cluster`] and replay it bit-exactly.
+//!
+//! Recording wraps a backend ([`RecordingCluster`]) or is built into the
+//! fleet driver ([`crate::fleet::drive_fleet`]); the result is a
+//! [`RunTrace`] that serializes through [`crate::util::json`] and loads
+//! back three ways:
+//!
+//! * [`RunTrace::replay`] — a [`TraceReplayCluster`] returning the
+//!   recorded completion times verbatim, so a rerun of the same scheme
+//!   reproduces the identical `RunReport` (responder sets, durations,
+//!   job completions);
+//! * [`crate::probe::DelayProfile::from_trace`] — feed a recorded run
+//!   into the Appendix-J load-adjusted parameter search;
+//! * [`RunTrace::pattern`] + [`SimCluster::from_trace`](super::SimCluster::from_trace)
+//!   — reuse just the straggler *states* (when the source knew them)
+//!   under freshly sampled latencies.
+
+use super::{Cluster, RoundSample};
+use crate::straggler::Pattern;
+use crate::util::json::Json;
+
+/// Trace format version written to JSON.
+pub const TRACE_VERSION: usize = 1;
+
+/// One recorded round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRound {
+    /// Normalized load each worker was assigned.
+    pub loads: Vec<f64>,
+    /// Completion time per worker (seconds from round start).
+    pub finish: Vec<f64>,
+    /// Ground-truth straggler states, when the source cluster knew them
+    /// (simulators do; a real fleet does not).
+    pub state: Option<Vec<bool>>,
+}
+
+/// A recorded `(n × rounds)` delay matrix plus per-round loads/states.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunTrace {
+    pub n: usize,
+    pub rounds: Vec<TraceRound>,
+}
+
+impl RunTrace {
+    pub fn new(n: usize) -> Self {
+        RunTrace { n, rounds: Vec::new() }
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+
+    /// Record one round.
+    pub fn push(&mut self, loads: Vec<f64>, finish: Vec<f64>, state: Option<Vec<bool>>) {
+        assert_eq!(loads.len(), self.n, "loads length mismatch");
+        assert_eq!(finish.len(), self.n, "finish length mismatch");
+        if let Some(s) = &state {
+            assert_eq!(s.len(), self.n, "state length mismatch");
+        }
+        self.rounds.push(TraceRound { loads, finish, state });
+    }
+
+    /// The straggler-state pattern, if every round recorded one — the
+    /// input to [`SimCluster::from_trace`](super::SimCluster::from_trace).
+    pub fn pattern(&self) -> Option<Pattern> {
+        let rows: Option<Vec<Vec<bool>>> =
+            self.rounds.iter().map(|r| r.state.clone()).collect();
+        let mut p = Pattern::new(self.n);
+        for row in rows? {
+            p.push_round(row);
+        }
+        Some(p)
+    }
+
+    /// Exact-replay cluster over this trace.
+    pub fn replay(&self) -> TraceReplayCluster {
+        TraceReplayCluster { trace: self.clone(), cursor: 0 }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("version", TRACE_VERSION).set("n", self.n).set("rounds", self.rounds());
+        o.set(
+            "loads",
+            Json::Arr(self.rounds.iter().map(|r| Json::from(r.loads.clone())).collect()),
+        );
+        o.set(
+            "times",
+            Json::Arr(self.rounds.iter().map(|r| Json::from(r.finish.clone())).collect()),
+        );
+        let states: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|r| match &r.state {
+                Some(s) => Json::from(s.clone()),
+                None => Json::Null,
+            })
+            .collect();
+        o.set("states", Json::Arr(states));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<RunTrace> {
+        let fail = |what: &str| anyhow::anyhow!("trace json: bad or missing {what}");
+        let version =
+            j.get("version").and_then(Json::as_usize).ok_or_else(|| fail("version"))?;
+        anyhow::ensure!(version == TRACE_VERSION, "unsupported trace version {version}");
+        let n = j.get("n").and_then(Json::as_usize).ok_or_else(|| fail("n"))?;
+        let rounds = j.get("rounds").and_then(Json::as_usize).ok_or_else(|| fail("rounds"))?;
+        let row_f64 = |v: &Json, what: &str| -> crate::Result<Vec<f64>> {
+            let xs = v.as_arr().ok_or_else(|| fail(what))?;
+            anyhow::ensure!(xs.len() == n, "{what} row has {} entries, expected {n}", xs.len());
+            xs.iter().map(|x| x.as_f64().ok_or_else(|| fail(what))).collect()
+        };
+        let loads = j.get("loads").and_then(Json::as_arr).ok_or_else(|| fail("loads"))?;
+        let times = j.get("times").and_then(Json::as_arr).ok_or_else(|| fail("times"))?;
+        let states = j.get("states").and_then(Json::as_arr).ok_or_else(|| fail("states"))?;
+        anyhow::ensure!(
+            loads.len() == rounds && times.len() == rounds && states.len() == rounds,
+            "trace json: matrix shapes disagree with rounds={rounds}"
+        );
+        let mut trace = RunTrace::new(n);
+        for ((l, t), s) in loads.iter().zip(times).zip(states) {
+            let state = match s {
+                Json::Null => None,
+                v => {
+                    let xs = v.as_arr().ok_or_else(|| fail("states"))?;
+                    anyhow::ensure!(xs.len() == n, "states row length");
+                    Some(
+                        xs.iter()
+                            .map(|x| x.as_bool().ok_or_else(|| fail("states")))
+                            .collect::<crate::Result<Vec<bool>>>()?,
+                    )
+                }
+            };
+            trace.push(row_f64(l, "loads")?, row_f64(t, "times")?, state);
+        }
+        Ok(trace)
+    }
+
+    /// Save as pretty JSON (creates parent dirs).
+    pub fn save(&self, path: &str) -> crate::Result<()> {
+        self.to_json().save(path).map_err(|e| anyhow::anyhow!("save {path}: {e}"))
+    }
+
+    /// Load a trace file.
+    pub fn load(path: &str) -> crate::Result<RunTrace> {
+        Self::from_json(&Json::load(path)?)
+    }
+}
+
+/// Replays a recorded trace verbatim: round `r` returns exactly the
+/// recorded completion times (and states), wrapping around when the
+/// session outlives the trace. Only meaningful when driven by the same
+/// scheme that produced the recording — the loads are not re-adjusted
+/// (use [`crate::probe::DelayProfile`] for load-adjusted replay).
+pub struct TraceReplayCluster {
+    trace: RunTrace,
+    cursor: usize,
+}
+
+impl Cluster for TraceReplayCluster {
+    fn n(&self) -> usize {
+        self.trace.n
+    }
+
+    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+        assert_eq!(loads.len(), self.trace.n);
+        assert!(!self.trace.is_empty(), "replay of an empty trace");
+        let row = &self.trace.rounds[self.cursor % self.trace.rounds()];
+        self.cursor += 1;
+        RoundSample {
+            finish: row.finish.clone(),
+            state: row.state.clone().unwrap_or_else(|| vec![false; self.trace.n]),
+        }
+    }
+}
+
+/// Wraps any [`Cluster`] and records every round it serves. With
+/// [`autosave`](Self::autosave), the trace is written to disk when the
+/// recorder is dropped — which is what lets `--record-trace` capture
+/// runs that execute deep inside the batch driver's cluster factory.
+pub struct RecordingCluster<C: Cluster> {
+    inner: C,
+    trace: RunTrace,
+    autosave: Option<String>,
+}
+
+impl<C: Cluster> RecordingCluster<C> {
+    pub fn new(inner: C) -> Self {
+        let n = inner.n();
+        RecordingCluster { inner, trace: RunTrace::new(n), autosave: None }
+    }
+
+    /// Record and write the trace to `path` on drop (errors go to
+    /// stderr — drop sites cannot propagate).
+    pub fn autosave(inner: C, path: impl Into<String>) -> Self {
+        let mut rec = Self::new(inner);
+        rec.autosave = Some(path.into());
+        rec
+    }
+
+    pub fn trace(&self) -> &RunTrace {
+        &self.trace
+    }
+
+    /// Take the trace out (disables autosave).
+    pub fn into_trace(mut self) -> RunTrace {
+        self.autosave = None;
+        std::mem::take(&mut self.trace)
+    }
+}
+
+impl<C: Cluster> Cluster for RecordingCluster<C> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+        let sample = self.inner.sample_round(loads);
+        self.trace.push(loads.to_vec(), sample.finish.clone(), Some(sample.state.clone()));
+        sample
+    }
+}
+
+impl<C: Cluster> Drop for RecordingCluster<C> {
+    fn drop(&mut self) {
+        if let Some(path) = self.autosave.take() {
+            if self.trace.is_empty() {
+                return;
+            }
+            if let Err(e) = self.trace.save(&path) {
+                eprintln!("warning: could not save trace: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SimCluster;
+    use crate::straggler::GilbertElliot;
+
+    fn recorded_run(n: usize, rounds: usize) -> RunTrace {
+        let sim = SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.06, 0.6, 5), 9);
+        let mut rec = RecordingCluster::new(sim);
+        for r in 0..rounds {
+            let load = 0.05 + 0.01 * (r % 3) as f64;
+            rec.sample_round(&vec![load; n]);
+        }
+        rec.into_trace()
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let trace = recorded_run(6, 12);
+        let back = RunTrace::from_json(&trace.to_json()).unwrap();
+        // bit-exact: the writer prints shortest-round-trip f64s, and the
+        // fleet replay tests depend on that exactness
+        assert_eq!(back, trace);
+        assert_eq!(back.pattern().unwrap().rounds(), 12);
+    }
+
+    #[test]
+    fn replay_returns_recorded_times_verbatim() {
+        let trace = recorded_run(4, 5);
+        let mut replay = trace.replay();
+        for r in 0..5 {
+            let s = replay.sample_round(&[0.1; 4]);
+            assert_eq!(s.finish, trace.rounds[r].finish);
+            assert_eq!(&s.state, trace.rounds[r].state.as_ref().unwrap());
+        }
+        // wraps around
+        let s = replay.sample_round(&[0.1; 4]);
+        assert_eq!(s.finish, trace.rounds[0].finish);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let trace = recorded_run(3, 2);
+        let mut j = trace.to_json();
+        j.set("n", 99usize); // rows no longer match n
+        assert!(RunTrace::from_json(&j).is_err());
+        let mut j2 = trace.to_json();
+        j2.set("version", TRACE_VERSION + 1);
+        assert!(RunTrace::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn fleet_style_trace_without_states_has_no_pattern() {
+        let mut t = RunTrace::new(2);
+        t.push(vec![0.1, 0.1], vec![1.0, 2.0], None);
+        assert!(t.pattern().is_none());
+        let back = RunTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.rounds[0].state, None);
+    }
+
+    #[test]
+    fn autosave_writes_on_drop() {
+        let dir = std::env::temp_dir().join(format!("sgc-trace-{}", std::process::id()));
+        let path = dir.join("autosave.json").to_string_lossy().into_owned();
+        {
+            let sim =
+                SimCluster::from_gilbert_elliot(3, GilbertElliot::new(3, 0.05, 0.6, 2), 3);
+            let mut rec = RecordingCluster::autosave(sim, path.clone());
+            rec.sample_round(&[0.1; 3]);
+        }
+        let loaded = RunTrace::load(&path).unwrap();
+        assert_eq!(loaded.rounds(), 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -23,7 +23,8 @@ impl Master {
     }
 
     /// Run `J` jobs over `J + T` rounds against the given cluster.
-    pub fn run(&mut self, cluster: &mut dyn Cluster) -> RunReport {
+    /// Errors if the cluster and scheme sizes disagree.
+    pub fn run(&mut self, cluster: &mut dyn Cluster) -> crate::Result<RunReport> {
         drive(&self.scheme_cfg, &self.cfg, cluster)
     }
 }
@@ -47,7 +48,7 @@ mod tests {
             RunConfig { jobs: 20, ..Default::default() },
         );
         let mut cluster = quiet_cluster(8, 1);
-        let rep = m.run(&mut cluster);
+        let rep = m.run(&mut cluster).unwrap();
         assert_eq!(rep.deadline_violations, 0);
         assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
         assert_eq!(rep.rounds.len(), 20);
@@ -63,7 +64,7 @@ mod tests {
         );
         let mut cluster =
             SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.04, 0.7, 5), 9);
-        let rep = m.run(&mut cluster);
+        let rep = m.run(&mut cluster).unwrap();
         assert_eq!(rep.deadline_violations, 0, "conformance repair must save every deadline");
         assert_eq!(rep.rounds.len(), 40 + 1);
     }
@@ -86,7 +87,7 @@ mod tests {
             Box::new(TraceProcess::new(pat)),
             3,
         );
-        let rep = m.run(&mut cluster);
+        let rep = m.run(&mut cluster).unwrap();
         assert_eq!(rep.deadline_violations, 0);
         // every round waited out the straggler
         assert!(rep.rounds.iter().all(|r| r.waited_out >= 1));
@@ -107,7 +108,7 @@ mod tests {
         );
         let mut cluster =
             SimCluster::from_gilbert_elliot(8, GilbertElliot::new(8, 0.1, 0.5, 2), 7);
-        let rep = m.run(&mut cluster);
+        let rep = m.run(&mut cluster).unwrap();
         assert_eq!(rep.deadline_violations, 0);
     }
 
@@ -118,7 +119,7 @@ mod tests {
             RunConfig { jobs: 5, measure_decode: true, ..Default::default() },
         );
         let mut cluster = quiet_cluster(32, 4);
-        let rep = m.run(&mut cluster);
+        let rep = m.run(&mut cluster).unwrap();
         let (mean, _std, max) = rep.decode_stats();
         assert!(mean > 0.0 && max >= mean);
     }
@@ -130,7 +131,7 @@ mod tests {
             let n = 16;
             let mut cluster =
                 SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.03, 0.7, seed), seed);
-            m.run(&mut cluster).total_runtime_s
+            m.run(&mut cluster).unwrap().total_runtime_s
         };
         let gc = mk(SchemeConfig::gc(16, 6), 11);
         let msgc = mk(SchemeConfig::msgc(16, 1, 2, 6), 11);

@@ -55,6 +55,7 @@ impl PaperSetup {
     pub fn run_once(&self, scheme: &SchemeConfig, seed: u64, measure_decode: bool) -> RunReport {
         let mut cluster = self.cluster(seed);
         session::drive(scheme, &self.session_config(measure_decode), &mut cluster)
+            .expect("setup builds matching cluster/scheme sizes")
     }
 
     /// The default GE-straggler cluster.
@@ -80,7 +81,8 @@ impl PaperSetup {
         let setup = self.clone();
         let reports = session::run_parallel(items, session::default_threads(), move |i, _| {
             Box::new(setup.cluster(1000 + i as u64)) as Box<dyn Cluster + Send>
-        });
+        })
+        .expect("setup builds matching cluster/scheme sizes");
         let xs: Vec<f64> = reports.iter().map(|r| r.total_runtime_s).collect();
         MeanStd::of(&xs)
     }

@@ -1,0 +1,111 @@
+//! In-process loopback fleet: a master plus `n` worker threads over
+//! localhost TCP — the full wire protocol, streaming arrivals and
+//! wall-clock μ-rule with zero external processes. Backs the fleet
+//! integration tests, the CI smoke job and `sgc run --fleet N`.
+
+use super::master::FleetCluster;
+use super::worker::{run_worker, ChaosConfig, WorkerConfig, WorkerStats};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A running loopback fleet. Dropping it shuts the workers down; call
+/// [`shutdown`](Self::shutdown) to also collect their stats.
+pub struct LoopbackFleet {
+    /// The master handle (drive it via [`super::drive_fleet`] or the
+    /// [`Cluster`](crate::cluster::Cluster) impl).
+    pub cluster: FleetCluster,
+    workers: Vec<JoinHandle<crate::Result<WorkerStats>>>,
+}
+
+impl LoopbackFleet {
+    /// Spin up `n` workers on localhost with the given chaos injection
+    /// (`None` = always healthy) and accept them all.
+    pub fn spawn(n: usize, chaos: Option<ChaosConfig>) -> crate::Result<Self> {
+        Self::spawn_with(n, move |id, addr| {
+            WorkerConfig::loopback(id, addr.to_string(), chaos)
+        })
+    }
+
+    /// Full-control variant: `make_config(id, master_addr)` builds each
+    /// worker's configuration.
+    pub fn spawn_with(
+        n: usize,
+        make_config: impl Fn(u32, &str) -> WorkerConfig,
+    ) -> crate::Result<Self> {
+        let mut workers = Vec::with_capacity(n);
+        let cluster = FleetCluster::listen_ephemeral(n, Duration::from_secs(10), |addr| {
+            for id in 0..n as u32 {
+                let cfg = make_config(id, addr);
+                let handle = std::thread::Builder::new()
+                    .name(format!("sgc-fleet-worker-{id}"))
+                    .spawn(move || run_worker(cfg))
+                    .expect("spawn loopback worker");
+                workers.push(handle);
+            }
+        })?;
+        Ok(LoopbackFleet { cluster, workers })
+    }
+
+    /// Send `Shutdown` to all workers and join them.
+    pub fn shutdown(mut self) -> crate::Result<Vec<WorkerStats>> {
+        self.cluster.shutdown();
+        self.workers
+            .drain(..)
+            .map(|h| h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::coding::SchemeConfig;
+    use crate::fleet::drive_fleet;
+    use crate::session::SessionConfig;
+
+    #[test]
+    fn quiet_loopback_round_trip() {
+        let mut fleet = LoopbackFleet::spawn(3, None).unwrap();
+        let sample = fleet.cluster.sample_round(&[0.05, 0.05, 0.05]);
+        assert_eq!(sample.finish.len(), 3);
+        // quiet workers: all times near base + α·load ≈ 24 ms, none wild
+        for &f in &sample.finish {
+            assert!((0.01..1.0).contains(&f), "finish {f}");
+        }
+        let stats = fleet.shutdown().unwrap();
+        assert!(stats.iter().all(|s| s.rounds_served == 1), "{stats:?}");
+    }
+
+    #[test]
+    fn fleet_run_completes_and_traces() {
+        let n = 4;
+        let chaos = Some(ChaosConfig::default_fit(17));
+        let mut fleet = LoopbackFleet::spawn(n, chaos).unwrap();
+        let scheme = SchemeConfig::gc(n, 1);
+        let cfg = SessionConfig { jobs: 6, ..Default::default() };
+        let run = drive_fleet(&scheme, &cfg, &mut fleet.cluster).unwrap();
+        assert_eq!(run.report.rounds.len(), 6);
+        assert_eq!(run.report.deadline_violations, 0);
+        assert!(run.report.total_runtime_s > 0.0);
+        assert_eq!(run.trace.n, n);
+        assert_eq!(run.trace.rounds(), 6);
+        // the trace matrix is complete and strictly positive
+        assert!(run
+            .trace
+            .rounds
+            .iter()
+            .all(|r| r.finish.iter().all(|&f| f > 0.0 && f.is_finite())));
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn mismatched_fleet_size_is_an_error_not_a_panic() {
+        let mut fleet = LoopbackFleet::spawn(2, None).unwrap();
+        let scheme = SchemeConfig::gc(4, 1); // expects 4 workers
+        let cfg = SessionConfig { jobs: 2, ..Default::default() };
+        let err = drive_fleet(&scheme, &cfg, &mut fleet.cluster).unwrap_err();
+        assert!(err.to_string().contains("expects 4"), "{err}");
+        fleet.shutdown().unwrap();
+    }
+}

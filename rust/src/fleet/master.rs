@@ -1,0 +1,601 @@
+//! Master side of the fleet: accept worker connections, stream arrivals,
+//! and drive the session with the μ-rule applied to **wall-clock** time.
+//!
+//! Unlike the simulator backends — which hand the session all `n`
+//! completion times at once — [`FleetCluster::run_round`] submits each
+//! worker's result the moment its `Result` frame arrives, polls
+//! [`SgcSession::try_close_round`] with the elapsed wall clock, and
+//! sleeps only until the session's
+//! [`deadline_hint`](SgcSession::deadline_hint) (the `(1+μ)·κ` cutoff).
+//! The round therefore closes the instant the μ-rule and the wait-out
+//! policy allow — a straggler that would take 10× the round time costs
+//! the master nothing beyond the cutoff, exactly like the paper's Lambda
+//! master.
+//!
+//! **Failure semantics.** Workers heartbeat between results. A worker
+//! whose socket drops or whose heartbeats go stale is marked dead; the
+//! μ-rule cuts it like any straggler, and the run only errors when the
+//! wait-out policy *needs* a dead worker (the pattern cannot conform
+//! without it) — at that point no amount of waiting can help.
+
+use super::wire::{read_frame, write_frame, Frame};
+use super::worker::chunk_checksum;
+use crate::cluster::{Cluster, RoundSample, RunTrace};
+use crate::coding::{SchemeConfig, TaskDesc, WorkUnit};
+use crate::coordinator::metrics::RunReport;
+use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
+use std::io::BufReader;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What a connection reader observed.
+enum Event {
+    Frame { worker: usize, frame: Frame, at: Instant },
+    Gone { worker: usize },
+}
+
+/// One worker's connection (write half; reads happen on a side thread).
+struct Conn {
+    stream: TcpStream,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// The fleet master's cluster handle: `n` connected workers plus the
+/// arrival stream. Implements [`Cluster`] (collect everything — used by
+/// trace recording and as a drop-in backend) and the streaming
+/// [`run_round`](Self::run_round) that the μ-rule path uses.
+pub struct FleetCluster {
+    n: usize,
+    conns: Vec<Conn>,
+    events: Receiver<Event>,
+    last_seen: Vec<Instant>,
+    /// Worker is currently considered unusable. Set by a dropped socket
+    /// (`gone`), a bad checksum (`byzantine`), or stale heartbeats — the
+    /// last is *recoverable*: a fresh frame from a non-gone,
+    /// non-byzantine worker clears it (a transient stall on a loaded box
+    /// must not permanently evict a healthy worker).
+    dead: Vec<bool>,
+    /// Socket-level death (connection dropped / write failed): permanent.
+    gone: Vec<bool>,
+    /// Worker returned a result that fails checksum verification:
+    /// permanent — nothing it sends is trusted again.
+    byzantine: Vec<bool>,
+    /// Stale-heartbeat threshold.
+    heartbeat_timeout: Duration,
+    /// Hard cap on one round's wall-clock time — a worker that
+    /// heartbeats but never returns its result would otherwise livelock
+    /// a wait-out that needs it.
+    round_timeout: Duration,
+    /// Wall-clock start per assigned round (index = round - 1).
+    round_starts: Vec<Instant>,
+    /// Trace under construction: every arrival lands here, including
+    /// results for rounds the μ-rule already closed.
+    finish_log: Vec<Vec<Option<f64>>>,
+    loads_log: Vec<Vec<f64>>,
+    /// Which workers actually received each round's `Assign` (a worker
+    /// dead at assign time is skipped and can never fill that round's
+    /// slot, even if its `dead` flag later clears).
+    assigned_log: Vec<Vec<bool>>,
+    /// Expected `Result` checksum per round per worker (recomputed from
+    /// the assigned chunks); a mismatching result is byzantine.
+    sum_log: Vec<Vec<u64>>,
+    shut_down: bool,
+}
+
+impl FleetCluster {
+    /// Bind `addr` and wait for `n` workers to connect and claim
+    /// distinct slots via `Hello`.
+    pub fn listen(addr: &str, n: usize, accept_timeout: Duration) -> crate::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("fleet master: bind {addr}: {e}"))?;
+        Self::accept_on(listener, n, accept_timeout)
+    }
+
+    /// Bind an ephemeral localhost port, hand the bound address to
+    /// `spawn_workers` (which starts the workers pointing at it), then
+    /// accept all `n`. See [`LoopbackFleet`](super::LoopbackFleet) for
+    /// the packaged version.
+    pub fn listen_ephemeral(
+        n: usize,
+        accept_timeout: Duration,
+        spawn_workers: impl FnOnce(&str),
+    ) -> crate::Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        spawn_workers(&addr);
+        Self::accept_on(listener, n, accept_timeout)
+    }
+
+    fn accept_on(
+        listener: TcpListener,
+        n: usize,
+        accept_timeout: Duration,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(n > 0, "fleet needs at least one worker");
+        let deadline = Instant::now() + accept_timeout;
+        // Keep the handshake BufReader: a worker may already have queued
+        // heartbeats behind its Hello, and any byte buffered here must
+        // reach the reader thread or the wire stream desyncs.
+        let mut slots: Vec<Option<(TcpStream, BufReader<TcpStream>)>> =
+            (0..n).map(|_| None).collect();
+        let mut connected = 0usize;
+        listener.set_nonblocking(true)?;
+        // Handshakes run on side threads: a stray connection that sends
+        // nothing (port scanner, health check) must neither tear the
+        // master down nor head-of-line-block honest workers.
+        let (htx, hrx) = channel::<(String, crate::Result<HelloOutcome>)>();
+        while connected < n {
+            deadline.checked_duration_since(Instant::now()).ok_or_else(|| {
+                anyhow::anyhow!("fleet master: only {connected}/{n} workers connected")
+            })?;
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    let htx = htx.clone();
+                    std::thread::Builder::new()
+                        .name("sgc-fleet-hello".into())
+                        .spawn(move || {
+                            let _ = htx.send((peer.to_string(), hello_handshake(stream)));
+                        })
+                        .expect("spawn handshake thread");
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => anyhow::bail!("fleet master: accept: {e}"),
+            }
+            while let Ok((peer, outcome)) = hrx.try_recv() {
+                match outcome {
+                    Ok((id, stream, reader)) if id < n && slots[id].is_none() => {
+                        slots[id] = Some((stream, reader));
+                        connected += 1;
+                    }
+                    Ok((id, _, _)) => {
+                        eprintln!(
+                            "fleet master: rejecting {peer}: bad or duplicate \
+                             worker id {id} (fleet of {n})"
+                        );
+                    }
+                    Err(e) => eprintln!("fleet master: rejecting {peer}: {e}"),
+                }
+            }
+        }
+        let (tx, rx) = channel();
+        let conns = slots
+            .into_iter()
+            .enumerate()
+            .map(|(worker, slot)| {
+                let (stream, reader) = slot.expect("all slots filled");
+                let handle = spawn_reader(worker, reader, tx.clone());
+                Conn { stream, reader: Some(handle) }
+            })
+            .collect::<Vec<_>>();
+        let now = Instant::now();
+        Ok(FleetCluster {
+            n,
+            conns,
+            events: rx,
+            last_seen: vec![now; n],
+            dead: vec![false; n],
+            gone: vec![false; n],
+            byzantine: vec![false; n],
+            heartbeat_timeout: Duration::from_millis(1500),
+            round_timeout: Duration::from_secs(60),
+            round_starts: Vec::new(),
+            finish_log: Vec::new(),
+            loads_log: Vec::new(),
+            assigned_log: Vec::new(),
+            sum_log: Vec::new(),
+            shut_down: false,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Workers currently considered dead.
+    pub fn dead_workers(&self) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.dead[i]).collect()
+    }
+
+    /// Raise (or lower) the hard per-round wall-clock cap. Needed when
+    /// worker task durations are configured long (`sgc worker --base-s`).
+    pub fn set_round_timeout(&mut self, timeout: Duration) {
+        self.round_timeout = timeout;
+    }
+
+    /// Execute one round with streaming arrivals: assign, submit results
+    /// as they land, and close through the session's incremental μ-rule.
+    /// Returns the close events (never `WaitingFor`).
+    pub fn run_round(
+        &mut self,
+        session: &mut SgcSession,
+        plan: &RoundPlan,
+    ) -> crate::Result<Vec<SessionEvent>> {
+        anyhow::ensure!(plan.tasks.len() == self.n, "plan/fleet size mismatch");
+        let round = plan.round as u32;
+        let start = Instant::now();
+        self.round_starts.push(start);
+        self.loads_log.push(plan.loads.clone());
+        self.finish_log.push(vec![None; self.n]);
+        self.assigned_log.push(vec![false; self.n]);
+        self.sum_log.push(vec![0; self.n]);
+        debug_assert_eq!(self.round_starts.len(), plan.round);
+
+        for worker in 0..self.n {
+            let chunks = chunk_ids(&plan.tasks[worker]);
+            self.sum_log.last_mut().unwrap()[worker] = chunk_checksum(&chunks);
+            if self.dead[worker] {
+                continue; // μ-rule will cut it; wait-out may still error below
+            }
+            let frame =
+                Frame::Assign { round, work_units: plan.loads[worker], chunks };
+            if write_frame(&mut self.conns[worker].stream, &frame).is_err() {
+                self.mark_gone(worker);
+            } else {
+                self.assigned_log.last_mut().unwrap()[worker] = true;
+            }
+        }
+
+        loop {
+            // Judge the round at `now_s`, but only after absorbing every
+            // arrival already queued — an unprocessed result from before
+            // the cutoff must not be cut as a straggler.
+            let now_s = start.elapsed().as_secs_f64();
+            while let Ok(ev) = self.events.try_recv() {
+                self.absorb(ev, Some((&mut *session, round)));
+            }
+            let events = session.try_close_round(now_s);
+            let waiting = match events.first() {
+                Some(SessionEvent::WaitingFor { workers }) => workers.clone(),
+                _ => return Ok(events),
+            };
+            // Hopeless only if every awaited worker can never submit —
+            // dead, or never assigned this round — AND the wait is not
+            // merely "the μ-cutoff has not passed yet": before the cutoff
+            // the next try_close will cut them like ordinary stragglers.
+            // With no submissions at all (hint unknown) they can never
+            // produce κ either.
+            let assigned = &self.assigned_log[plan.round - 1];
+            let past_cutoff = match session.deadline_hint() {
+                None => true,
+                Some(hint) => now_s >= hint,
+            };
+            if past_cutoff && waiting.iter().all(|&w| self.dead[w] || !assigned[w]) {
+                anyhow::bail!(
+                    "round {}: workers {waiting:?} are dead or unassigned and the \
+                     wait-out policy needs one of them; the straggler pattern cannot \
+                     conform",
+                    plan.round
+                );
+            }
+            if start.elapsed() > self.round_timeout {
+                anyhow::bail!(
+                    "round {}: still waiting for workers {waiting:?} after {:?}",
+                    plan.round,
+                    self.round_timeout
+                );
+            }
+            // Sleep until the μ-cutoff if it is still ahead; otherwise we
+            // are waiting for a specific arrival — poll at heartbeat pace.
+            // Either way, never sleep past the hard round cap.
+            let cap = self
+                .round_timeout
+                .saturating_sub(start.elapsed())
+                .max(Duration::from_millis(1));
+            let timeout = match session.deadline_hint() {
+                Some(hint) if hint > now_s => Duration::from_secs_f64(hint - now_s),
+                _ => Duration::from_millis(25),
+            }
+            .min(cap);
+            match self.events.recv_timeout(timeout) {
+                Ok(ev) => self.absorb(ev, Some((&mut *session, round))),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("round {}: every worker connection dropped", plan.round)
+                }
+            }
+            self.reap_stale_heartbeats();
+        }
+    }
+
+    /// Process one reader event. When `current` is set, results for the
+    /// open round are submitted into the session; results for earlier
+    /// rounds only land in the trace log.
+    fn absorb(&mut self, ev: Event, current: Option<(&mut SgcSession, u32)>) {
+        match ev {
+            Event::Frame { worker, frame, at } => {
+                self.last_seen[worker] = at;
+                // a live frame resurrects a stale-heartbeat false positive
+                if self.dead[worker] && !self.gone[worker] && !self.byzantine[worker] {
+                    self.dead[worker] = false;
+                }
+                if let Frame::Result { round: r, checksum, .. } = frame {
+                    if self.byzantine[worker] {
+                        return; // nothing from a byzantine worker is trusted
+                    }
+                    let idx = r as usize;
+                    if idx >= 1 && idx <= self.round_starts.len() {
+                        if checksum != self.sum_log[idx - 1][worker] {
+                            // byzantine: the worker did not do the work it
+                            // was assigned — never trust it again
+                            eprintln!(
+                                "fleet master: worker {worker} returned a bad \
+                                 checksum for round {r}; marking it byzantine"
+                            );
+                            self.byzantine[worker] = true;
+                            self.mark_dead(worker);
+                            return;
+                        }
+                        let rel = at
+                            .checked_duration_since(self.round_starts[idx - 1])
+                            .map_or(0.0, |d| d.as_secs_f64())
+                            .max(1e-9);
+                        let slot = &mut self.finish_log[idx - 1][worker];
+                        if slot.is_none() {
+                            *slot = Some(rel);
+                            if let Some((session, round)) = current {
+                                if r == round {
+                                    session.submit(worker, rel);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Event::Gone { worker } => self.mark_gone(worker),
+        }
+    }
+
+    fn mark_dead(&mut self, worker: usize) {
+        self.dead[worker] = true;
+    }
+
+    /// Socket-level (permanent) death.
+    fn mark_gone(&mut self, worker: usize) {
+        self.gone[worker] = true;
+        self.dead[worker] = true;
+    }
+
+    fn reap_stale_heartbeats(&mut self) {
+        let now = Instant::now();
+        for i in 0..self.n {
+            if !self.dead[i]
+                && now.duration_since(self.last_seen[i]) > self.heartbeat_timeout
+            {
+                self.dead[i] = true;
+            }
+        }
+    }
+
+    /// Drain late results until the trace matrix is complete (or
+    /// `flush_timeout` passes), then return the recorded trace. Cut
+    /// stragglers keep computing and report late, so a healthy fleet
+    /// always completes its matrix. Entries of workers that died are
+    /// synthesized past the round's `(1+μ)` cutoff (`mu` is the session's
+    /// μ), so replaying the trace cuts them exactly like the live run
+    /// did.
+    pub fn finish_trace(&mut self, flush_timeout: Duration, mu: f64) -> RunTrace {
+        let deadline = Instant::now() + flush_timeout;
+        // only wait for slots a live worker could still fill — entries of
+        // gone/byzantine workers and rounds never assigned to a worker
+        // are synthesized below, and waiting on them would stall every
+        // post-failure run for the whole timeout
+        let incomplete = |fleet: &Self| {
+            fleet.finish_log.iter().zip(&fleet.assigned_log).any(|(row, assigned)| {
+                row.iter().enumerate().any(|(w, f)| {
+                    f.is_none() && assigned[w] && !fleet.gone[w] && !fleet.byzantine[w]
+                })
+            })
+        };
+        while incomplete(self) && Instant::now() < deadline {
+            match self.events.recv_timeout(Duration::from_millis(25)) {
+                Ok(ev) => self.absorb(ev, None),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let mut trace = RunTrace::new(self.n);
+        for (loads, finish) in self.loads_log.iter().zip(&self.finish_log) {
+            let worst =
+                finish.iter().flatten().cloned().fold(0.0f64, f64::max).max(1e-3);
+            // strictly beyond any μ-cutoff: κ ≤ worst ⇒ (1+μ)·2·worst > (1+μ)·κ
+            let missing_fill = (1.0 + mu.max(0.0)) * worst * 2.0;
+            let row: Vec<f64> = finish.iter().map(|f| f.unwrap_or(missing_fill)).collect();
+            trace.push(loads.clone(), row, None);
+        }
+        trace
+    }
+
+    /// Send `Shutdown` to every worker and close all sockets
+    /// (idempotent). Closing unconditionally matters: a worker that was
+    /// *falsely* marked dead (stalled heartbeats) is still blocked in
+    /// its read loop and must see EOF to exit, or joining it hangs.
+    pub fn shutdown(&mut self) {
+        if self.shut_down {
+            return;
+        }
+        self.shut_down = true;
+        for conn in &mut self.conns {
+            let _ = write_frame(&mut conn.stream, &Frame::Shutdown);
+            let _ = conn.stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for FleetCluster {
+    fn drop(&mut self) {
+        self.shutdown(); // closes every socket → reader threads unblock
+        for conn in &mut self.conns {
+            if let Some(h) = conn.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Blocking backend compatibility: wait for *every* worker's result.
+/// This is the uncoded-friendly path; the μ-rule fleet path is
+/// [`FleetCluster::run_round`]. Panics on a dead fleet — the `Cluster`
+/// trait has no error channel; use [`drive_fleet`] for fallible driving.
+///
+/// The returned `state` is an all-false placeholder (a real fleet has no
+/// ground truth), like [`crate::probe::ProfileCluster`]'s — so traces
+/// recorded by wrapping this in a
+/// [`RecordingCluster`](crate::cluster::RecordingCluster) carry no
+/// straggler pattern. Prefer [`drive_fleet`], whose trace stores the
+/// μ-rule detections instead.
+impl Cluster for FleetCluster {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+        assert_eq!(loads.len(), self.n);
+        let round = (self.round_starts.len() + 1) as u32;
+        let start = Instant::now();
+        self.round_starts.push(start);
+        self.loads_log.push(loads.to_vec());
+        self.finish_log.push(vec![None; self.n]);
+        self.assigned_log.push(vec![true; self.n]);
+        self.sum_log.push(vec![chunk_checksum(&[]); self.n]);
+        for worker in 0..self.n {
+            assert!(!self.dead[worker], "worker {worker} is dead");
+            let frame =
+                Frame::Assign { round, work_units: loads[worker], chunks: Vec::new() };
+            write_frame(&mut self.conns[worker].stream, &frame)
+                .unwrap_or_else(|e| panic!("assign to worker {worker}: {e}"));
+        }
+        let idx = round as usize - 1;
+        while self.finish_log[idx].iter().any(|f| f.is_none()) {
+            match self.events.recv_timeout(Duration::from_millis(100)) {
+                Ok(ev) => self.absorb(ev, None),
+                Err(RecvTimeoutError::Timeout) => {
+                    self.reap_stale_heartbeats();
+                    let gone = self.dead_workers();
+                    assert!(gone.is_empty(), "workers {gone:?} died mid-round");
+                }
+                Err(RecvTimeoutError::Disconnected) => panic!("all workers disconnected"),
+            }
+        }
+        RoundSample {
+            finish: self.finish_log[idx].iter().map(|f| f.unwrap()).collect(),
+            state: vec![false; self.n],
+        }
+    }
+}
+
+/// The result of a fleet run: the protocol report plus the recorded
+/// wall-clock delay trace (replayable via
+/// [`RunTrace::replay`](crate::cluster::RunTrace::replay)).
+pub struct FleetRun {
+    pub report: RunReport,
+    pub trace: RunTrace,
+}
+
+/// Drive one session over a fleet with streaming arrivals and the
+/// wall-clock μ-rule, collecting the delay trace along the way.
+pub fn drive_fleet(
+    scheme_cfg: &SchemeConfig,
+    cfg: &SessionConfig,
+    fleet: &mut FleetCluster,
+) -> crate::Result<FleetRun> {
+    let mut session = SgcSession::new(scheme_cfg, cfg.clone());
+    anyhow::ensure!(
+        fleet.n() == session.n(),
+        "fleet has {} workers but scheme {} expects {}",
+        fleet.n(),
+        scheme_cfg.label(),
+        session.n()
+    );
+    // The round log (and hence the trace) is per-fleet, not per-session:
+    // a reused fleet would interleave two sessions' rounds and stall on
+    // already-filled trace slots. Fail fast instead.
+    anyhow::ensure!(
+        fleet.round_starts.is_empty(),
+        "FleetCluster is single-use: this fleet already executed {} rounds; \
+         spawn a fresh fleet per run",
+        fleet.round_starts.len()
+    );
+    while !session.is_complete() {
+        let plan = session.begin_round();
+        fleet.run_round(&mut session, &plan)?;
+    }
+    let mut trace = fleet.finish_trace(Duration::from_secs(10), cfg.mu);
+    let report = session.into_report();
+    // A real fleet has no ground-truth straggler states; record the
+    // μ-rule detections instead so the trace's pattern feeds
+    // `SimCluster::from_trace` like a simulator trace does.
+    for (tr, row) in trace.rounds.iter_mut().zip(&report.detected_pattern.rows) {
+        tr.state = Some(row.clone());
+    }
+    Ok(FleetRun { report, trace })
+}
+
+/// Chunk ids a task touches (what `Assign` ships to the worker).
+fn chunk_ids(task: &TaskDesc) -> Vec<u32> {
+    let mut out = Vec::new();
+    for unit in &task.units {
+        match unit {
+            WorkUnit::Noop => {}
+            WorkUnit::Plain { chunk, .. } => out.push(*chunk as u32),
+            WorkUnit::Coded { chunks, .. } => {
+                out.extend(chunks.iter().map(|&c| c as u32))
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// A completed handshake: claimed id, write half, and the (possibly
+/// pre-filled) read half.
+type HelloOutcome = (usize, TcpStream, BufReader<TcpStream>);
+
+/// Complete one connection's `Hello` handshake (bounded at 5 s).
+fn hello_handshake(stream: TcpStream) -> crate::Result<HelloOutcome> {
+    // BSD-family accept() inherits the listener's O_NONBLOCK; this
+    // connection must block (with a read timeout) for the handshake.
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    match read_frame(&mut reader) {
+        Ok(Frame::Hello { worker_id }) => {
+            stream.set_read_timeout(None)?;
+            Ok((worker_id as usize, stream, reader))
+        }
+        Ok(other) => anyhow::bail!("expected Hello, got {other:?}"),
+        Err(e) => anyhow::bail!("reading Hello: {e}"),
+    }
+}
+
+fn spawn_reader(
+    worker: usize,
+    mut reader: BufReader<TcpStream>,
+    tx: Sender<Event>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("sgc-fleet-read-{worker}"))
+        .spawn(move || {
+            loop {
+                match read_frame(&mut reader) {
+                    Ok(frame) => {
+                        let at = Instant::now();
+                        if tx.send(Event::Frame { worker, frame, at }).is_err() {
+                            break; // master dropped
+                        }
+                    }
+                    // Closed and any other error both end the connection
+                    Err(_) => {
+                        let _ = tx.send(Event::Gone { worker });
+                        break;
+                    }
+                }
+            }
+        })
+        .expect("spawn fleet reader")
+}

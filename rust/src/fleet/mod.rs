@@ -1,0 +1,34 @@
+//! Real distributed worker fleet: TCP master/worker execution backend.
+//!
+//! This is the "real workers" backend the sans-IO session was designed
+//! for — the stand-in for the paper's 256-worker AWS Lambda fleet, with
+//! the μ-rule applied to **wall-clock** arrival times instead of
+//! simulated ones:
+//!
+//! * [`wire`] — length-prefixed, versioned binary frames
+//!   (Hello/Assign/Result/Heartbeat/Shutdown), no external deps;
+//! * [`worker`] — the `sgc worker` runtime: connects to a master, serves
+//!   task assignments, executes synthetic minitask workloads, and injects
+//!   deterministic, seeded chaos (Gilbert–Elliot straggle states with
+//!   Pareto slowdowns) so live runs are reproducible;
+//! * [`master`] — [`FleetCluster`]: accepts worker connections, streams
+//!   per-worker completions as they arrive, and drives an
+//!   [`SgcSession`](crate::session::SgcSession) through its incremental
+//!   [`try_close_round`](crate::session::SgcSession::try_close_round)
+//!   API so stragglers are cut the moment the wall clock passes the
+//!   μ-cutoff — without waiting for all `n` results;
+//! * [`loopback`] — an in-process harness spinning a master plus `n`
+//!   worker threads over localhost (tests, CI smoke, `sgc run --fleet N`).
+//!
+//! See `rust/DESIGN.md` §Fleet for wire-frame layout, heartbeat/failure
+//! semantics and the wall-clock vs simulated μ-rule discussion.
+
+pub mod loopback;
+pub mod master;
+pub mod wire;
+pub mod worker;
+
+pub use loopback::LoopbackFleet;
+pub use master::{drive_fleet, FleetCluster, FleetRun};
+pub use wire::{Frame, WireError, WIRE_VERSION};
+pub use worker::{run_worker, ChaosConfig, WorkerConfig, WorkerStats};

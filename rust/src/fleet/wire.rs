@@ -1,0 +1,390 @@
+//! Length-prefixed binary wire protocol between the fleet master and its
+//! workers (no external serialization deps — hand-rolled little-endian
+//! codec, versioned and bounds-checked).
+//!
+//! Frame layout on the wire:
+//!
+//! ```text
+//! ┌────────────┬─────────┬─────┬────────────────┐
+//! │ len: u32le │ ver: u8 │ tag │ payload        │
+//! └────────────┴─────────┴─────┴────────────────┘
+//!       len = 2 + payload length (covers ver + tag + payload)
+//! ```
+//!
+//! Integers are little-endian; `f64` travels as its IEEE-754 bit pattern.
+//! A reader rejects frames whose version byte is not [`WIRE_VERSION`],
+//! whose length exceeds [`MAX_FRAME_LEN`], or whose payload is truncated
+//! or over-long for the tag — a malformed peer can never make the master
+//! allocate unboundedly or mis-parse.
+
+use std::io::{self, Read, Write};
+
+/// Protocol version; bump on any incompatible frame change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on one frame's `len` field (1 MiB): an `Assign` for a
+/// full-replication task at n = 4096 chunks is still < 20 KiB.
+pub const MAX_FRAME_LEN: u32 = 1 << 20;
+
+/// Everything that can go wrong decoding a frame.
+#[derive(Debug)]
+pub enum WireError {
+    /// Underlying stream error.
+    Io(io::Error),
+    /// Peer closed the connection cleanly at a frame boundary.
+    Closed,
+    /// Version byte mismatch.
+    BadVersion(u8),
+    /// Unknown frame tag.
+    BadTag(u8),
+    /// Payload shorter than its tag requires.
+    Truncated,
+    /// Payload longer than its tag requires.
+    TrailingBytes,
+    /// Declared length outside `[2, MAX_FRAME_LEN]`.
+    BadLength(u32),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io error: {e}"),
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::BadVersion(v) => {
+                write!(f, "wire version {v} (expected {WIRE_VERSION})")
+            }
+            WireError::BadTag(t) => write!(f, "unknown frame tag {t}"),
+            WireError::Truncated => write!(f, "truncated frame payload"),
+            WireError::TrailingBytes => write!(f, "trailing bytes after frame payload"),
+            WireError::BadLength(l) => write!(f, "bad frame length {l}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// A protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker → master on connect: claim a worker slot.
+    Hello { worker_id: u32 },
+    /// Master → worker: execute one round's task. `work_units` is the
+    /// normalized load (what the latency of the task scales with);
+    /// `chunks` are the data-chunk ids the task covers (the synthetic
+    /// minitask folds them into its checksum; a real workload would load
+    /// them).
+    Assign { round: u32, work_units: f64, chunks: Vec<u32> },
+    /// Worker → master: one round's result. `compute_s` is the worker's
+    /// own execution-time measurement (diagnostic only — the master
+    /// trusts its wall-clock arrival observation, never the worker's
+    /// clock); `checksum` proves the minitask ran.
+    Result { worker_id: u32, round: u32, compute_s: f64, checksum: u64 },
+    /// Worker → master: liveness signal between results.
+    Heartbeat { worker_id: u32, round: u32 },
+    /// Master → worker: exit the serve loop.
+    Shutdown,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_RESULT: u8 = 3;
+const TAG_HEARTBEAT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => TAG_HELLO,
+            Frame::Assign { .. } => TAG_ASSIGN,
+            Frame::Result { .. } => TAG_RESULT,
+            Frame::Heartbeat { .. } => TAG_HEARTBEAT,
+            Frame::Shutdown => TAG_SHUTDOWN,
+        }
+    }
+
+    /// Encode to the on-wire byte sequence (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        match self {
+            Frame::Hello { worker_id } => put_u32(&mut payload, *worker_id),
+            Frame::Assign { round, work_units, chunks } => {
+                put_u32(&mut payload, *round);
+                put_f64(&mut payload, *work_units);
+                put_u32(&mut payload, chunks.len() as u32);
+                for &c in chunks {
+                    put_u32(&mut payload, c);
+                }
+            }
+            Frame::Result { worker_id, round, compute_s, checksum } => {
+                put_u32(&mut payload, *worker_id);
+                put_u32(&mut payload, *round);
+                put_f64(&mut payload, *compute_s);
+                put_u64(&mut payload, *checksum);
+            }
+            Frame::Heartbeat { worker_id, round } => {
+                put_u32(&mut payload, *worker_id);
+                put_u32(&mut payload, *round);
+            }
+            Frame::Shutdown => {}
+        }
+        let len = (payload.len() + 2) as u32;
+        let mut out = Vec::with_capacity(4 + len as usize);
+        put_u32(&mut out, len);
+        out.push(WIRE_VERSION);
+        out.push(self.tag());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Decode one frame from its full on-wire bytes (length prefix
+    /// included). The inverse of [`encode`](Self::encode).
+    pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
+        let mut cur = Cursor { buf: bytes, pos: 0 };
+        let len = cur.u32()?;
+        if len < 2 || len > MAX_FRAME_LEN {
+            return Err(WireError::BadLength(len));
+        }
+        if bytes.len() != 4 + len as usize {
+            return Err(if bytes.len() < 4 + len as usize {
+                WireError::Truncated
+            } else {
+                WireError::TrailingBytes
+            });
+        }
+        Self::decode_body(&bytes[4..])
+    }
+
+    /// Decode the body (version + tag + payload, no length prefix).
+    fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
+        let mut cur = Cursor { buf: body, pos: 0 };
+        let version = cur.u8()?;
+        if version != WIRE_VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let tag = cur.u8()?;
+        let frame = match tag {
+            TAG_HELLO => Frame::Hello { worker_id: cur.u32()? },
+            TAG_ASSIGN => {
+                let round = cur.u32()?;
+                let work_units = cur.f64()?;
+                let count = cur.u32()? as usize;
+                // a chunk id is 4 bytes; reject counts the payload cannot hold
+                if count > cur.remaining() / 4 {
+                    return Err(WireError::Truncated);
+                }
+                let chunks = (0..count).map(|_| cur.u32()).collect::<Result<_, _>>()?;
+                Frame::Assign { round, work_units, chunks }
+            }
+            TAG_RESULT => Frame::Result {
+                worker_id: cur.u32()?,
+                round: cur.u32()?,
+                compute_s: cur.f64()?,
+                checksum: cur.u64()?,
+            },
+            TAG_HEARTBEAT => Frame::Heartbeat { worker_id: cur.u32()?, round: cur.u32()? },
+            TAG_SHUTDOWN => Frame::Shutdown,
+            t => return Err(WireError::BadTag(t)),
+        };
+        if cur.remaining() != 0 {
+            return Err(WireError::TrailingBytes);
+        }
+        Ok(frame)
+    }
+}
+
+/// Write one frame to a stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> io::Result<()> {
+    w.write_all(&frame.encode())?;
+    w.flush()
+}
+
+/// Read one frame from a stream. Returns [`WireError::Closed`] if the
+/// peer closed the connection at a frame boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut len_buf = [0u8; 4];
+    // distinguish clean EOF (0 bytes) from mid-frame truncation
+    let mut filled = 0;
+    while filled < 4 {
+        match r.read(&mut len_buf[filled..]) {
+            Ok(0) => {
+                return Err(if filled == 0 { WireError::Closed } else { WireError::Truncated })
+            }
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len < 2 || len > MAX_FRAME_LEN {
+        return Err(WireError::BadLength(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            WireError::Truncated
+        } else {
+            WireError::Io(e)
+        }
+    })?;
+    Frame::decode_body(&body)
+}
+
+// --- little-endian primitives -----------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, k: usize) -> Result<&[u8], WireError> {
+        if self.remaining() < k {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + k];
+        self.pos += k;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { worker_id: 7 },
+            Frame::Assign { round: 3, work_units: 0.125, chunks: vec![0, 5, 255] },
+            Frame::Assign { round: 1, work_units: 0.0, chunks: vec![] },
+            Frame::Result { worker_id: 2, round: 3, compute_s: 0.0421, checksum: 0xdead_beef },
+            Frame::Heartbeat { worker_id: 9, round: 12 },
+            Frame::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn round_trips_every_frame() {
+        for f in all_frames() {
+            let bytes = f.encode();
+            assert_eq!(Frame::decode(&bytes).unwrap(), f, "frame {f:?}");
+        }
+    }
+
+    #[test]
+    fn stream_round_trips_back_to_back() {
+        let frames = all_frames();
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            assert_eq!(&read_frame(&mut r).unwrap(), f);
+        }
+        assert!(matches!(read_frame(&mut r), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut bytes = Frame::Shutdown.encode();
+        bytes[4] = WIRE_VERSION + 1;
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadVersion(_))));
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        let mut bytes = Frame::Shutdown.encode();
+        bytes[5] = 0xff;
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadTag(0xff))));
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let bytes = Frame::Hello { worker_id: 1 }.encode();
+        assert!(matches!(Frame::decode(&bytes[..bytes.len() - 1]), Err(WireError::Truncated)));
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(Frame::decode(&long), Err(WireError::TrailingBytes)));
+        // trailing bytes inside the declared payload are also rejected
+        let mut padded = Frame::Shutdown.encode();
+        padded[0] += 1; // declared length grows by one…
+        padded.push(0); // …and the byte exists, but Shutdown has no payload
+        assert!(matches!(Frame::decode(&padded), Err(WireError::TrailingBytes)));
+    }
+
+    #[test]
+    fn rejects_oversize_length() {
+        let mut bytes = Frame::Shutdown.encode();
+        bytes[..4].copy_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadLength(_))));
+        let mut r = &bytes[..];
+        assert!(matches!(read_frame(&mut r), Err(WireError::BadLength(_))));
+    }
+
+    #[test]
+    fn rejects_chunk_count_larger_than_payload() {
+        // Assign claiming u32::MAX chunks in a tiny payload must not allocate.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1); // round
+        put_f64(&mut payload, 0.5);
+        put_u32(&mut payload, u32::MAX); // absurd count
+        let len = (payload.len() + 2) as u32;
+        let mut bytes = Vec::new();
+        put_u32(&mut bytes, len);
+        bytes.push(WIRE_VERSION);
+        bytes.push(TAG_ASSIGN);
+        bytes.extend_from_slice(&payload);
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn f64_bit_exact() {
+        for x in [0.0, -0.0, 1.5e-300, f64::MAX, 0.1 + 0.2] {
+            let f = Frame::Assign { round: 0, work_units: x, chunks: vec![] };
+            match Frame::decode(&f.encode()).unwrap() {
+                Frame::Assign { work_units, .. } => {
+                    assert_eq!(work_units.to_bits(), x.to_bits())
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Worker runtime: serve task assignments from a fleet master over TCP.
+//!
+//! A worker connects, claims its slot with a `Hello`, then loops: on
+//! `Assign` it executes a synthetic minitask whose duration scales with
+//! the assigned normalized load (exactly the latency law the simulator
+//! uses, so fleet and sim runs live on the same time axis up to a scale
+//! factor), sends a `Result`, and keeps heartbeating from a side thread
+//! so the master can tell "slow" from "dead". `Shutdown` ends the loop.
+//!
+//! **Chaos injection.** Real Lambda fleets straggle on their own; a
+//! loopback fleet on one machine does not. [`ChaosConfig`] recreates the
+//! paper's observed behaviour deterministically: each worker owns a
+//! Gilbert–Elliot state machine seeded from `(seed, worker_id)` and, in
+//! slow rounds, stretches its minitask by a Pareto-tailed multiplier with
+//! within-burst decay — the same process as
+//! [`cluster::LatencyParams`](crate::cluster::LatencyParams), so a seeded
+//! live run is reproducible straggler-for-straggler.
+
+use super::wire::{read_frame, write_frame, Frame, WireError};
+use crate::cluster::latency::decayed_uplift;
+use crate::straggler::models::ge_step;
+use crate::util::rng::Pcg32;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Deterministic straggler injection for one worker.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Fleet-wide seed; each worker derives its stream from
+    /// `(seed, worker_id)`.
+    pub seed: u64,
+    /// Gilbert–Elliot entry probability (normal → straggler).
+    pub p_enter: f64,
+    /// Gilbert–Elliot exit probability (straggler → normal).
+    pub p_exit: f64,
+    /// Minimum slowdown multiplier while straggling (> 1 + μ so the
+    /// μ-rule can see it).
+    pub slow_scale: f64,
+    /// Pareto shape of the slowdown tail.
+    pub slow_shape: f64,
+    /// Within-burst severity decay per consecutive slow round.
+    pub decay: f64,
+    /// Probability of an extra one-round straggle even while the
+    /// Gilbert–Elliot state is healthy (an independently drawn transient
+    /// contention spike per worker — not correlated across the fleet).
+    pub p_burst: f64,
+}
+
+impl ChaosConfig {
+    /// Fig.-1-flavoured defaults: ~5% straggling cells, short bursts,
+    /// 2–4× slowdowns.
+    pub fn default_fit(seed: u64) -> Self {
+        ChaosConfig {
+            seed,
+            p_enter: 0.037,
+            p_exit: 0.7,
+            slow_scale: 2.4,
+            slow_shape: 6.5,
+            decay: 0.68,
+            p_burst: 0.01,
+        }
+    }
+}
+
+/// Per-worker chaos state machine (deterministic given config + id).
+struct ChaosState {
+    cfg: ChaosConfig,
+    rng: Pcg32,
+    straggling: bool,
+    burst_age: usize,
+}
+
+impl ChaosState {
+    fn new(cfg: ChaosConfig, worker_id: u32) -> Self {
+        // worker-id-keyed stream: chaos is independent per worker and
+        // independent of how rounds interleave across workers.
+        let rng = Pcg32::new(cfg.seed ^ 0x0f1ee7, 0x40_000 + worker_id as u64);
+        ChaosState { cfg, rng, straggling: false, burst_age: 0 }
+    }
+
+    /// Advance one round; returns the execution-time multiplier (1.0 when
+    /// healthy).
+    fn next_multiplier(&mut self) -> f64 {
+        self.straggling =
+            ge_step(self.straggling, self.cfg.p_enter, self.cfg.p_exit, &mut self.rng);
+        let burst = self.rng.chance(self.cfg.p_burst);
+        if self.straggling || burst {
+            let raw = self.rng.pareto(self.cfg.slow_scale, self.cfg.slow_shape);
+            let mult = decayed_uplift(raw, self.cfg.decay, self.burst_age);
+            self.burst_age += 1;
+            mult
+        } else {
+            self.burst_age = 0;
+            1.0
+        }
+    }
+}
+
+/// Worker runtime configuration.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Slot id (must be unique per fleet, `< n`).
+    pub id: u32,
+    /// Master address, e.g. `127.0.0.1:7070`.
+    pub master: String,
+    /// Seeded straggler injection; `None` = always healthy.
+    pub chaos: Option<ChaosConfig>,
+    /// Fixed per-round overhead of the minitask (seconds).
+    pub base_s: f64,
+    /// Seconds of minitask work per unit of normalized load (the fleet's
+    /// α, mirroring `LatencyParams::alpha_s_per_load`).
+    pub alpha_s: f64,
+    /// Heartbeat period.
+    pub heartbeat: Duration,
+}
+
+impl WorkerConfig {
+    /// Loopback-friendly defaults: ~25 ms quiet rounds at typical loads,
+    /// so tests and CI smoke runs finish in seconds.
+    pub fn loopback(id: u32, master: String, chaos: Option<ChaosConfig>) -> Self {
+        WorkerConfig {
+            id,
+            master,
+            chaos,
+            base_s: 0.02,
+            alpha_s: 0.08,
+            heartbeat: Duration::from_millis(50),
+        }
+    }
+}
+
+/// What a worker did before shutdown.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub rounds_served: usize,
+    pub chaos_rounds: usize,
+}
+
+/// Run the worker loop until the master sends `Shutdown` or disconnects.
+pub fn run_worker(cfg: WorkerConfig) -> crate::Result<WorkerStats> {
+    let stream = TcpStream::connect(&cfg.master)
+        .map_err(|e| anyhow::anyhow!("worker {}: connect {}: {e}", cfg.id, cfg.master))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let writer = Arc::new(Mutex::new(stream));
+    write_frame(&mut *writer.lock().unwrap(), &Frame::Hello { worker_id: cfg.id })?;
+
+    // Heartbeat side thread: liveness, not progress — it keeps beating
+    // while a long minitask runs, which is exactly what lets the master
+    // distinguish a straggler (cut it) from a corpse (error out).
+    let stop = Arc::new(AtomicBool::new(false));
+    let current_round = Arc::new(AtomicU32::new(0));
+    let hb = {
+        let writer = Arc::clone(&writer);
+        let stop = Arc::clone(&stop);
+        let round = Arc::clone(&current_round);
+        let period = cfg.heartbeat;
+        let id = cfg.id;
+        std::thread::Builder::new()
+            .name(format!("sgc-fleet-hb-{id}"))
+            .spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    std::thread::sleep(period);
+                    let frame =
+                        Frame::Heartbeat { worker_id: id, round: round.load(Ordering::Acquire) };
+                    if write_frame(&mut *writer.lock().unwrap(), &frame).is_err() {
+                        break; // master gone; main loop will notice too
+                    }
+                }
+            })
+            .expect("spawn heartbeat thread")
+    };
+
+    let mut chaos = cfg.chaos.map(|c| ChaosState::new(c, cfg.id));
+    let mut stats = WorkerStats::default();
+    let result = loop {
+        match read_frame(&mut reader) {
+            Ok(Frame::Assign { round, work_units, chunks }) => {
+                current_round.store(round, Ordering::Release);
+                let mult = chaos.as_mut().map_or(1.0, |c| c.next_multiplier());
+                if mult > 1.0 {
+                    stats.chaos_rounds += 1;
+                }
+                let started = Instant::now();
+                let checksum = execute_minitask(
+                    &chunks,
+                    (cfg.base_s + cfg.alpha_s * work_units) * mult,
+                );
+                stats.rounds_served += 1;
+                let frame = Frame::Result {
+                    worker_id: cfg.id,
+                    round,
+                    compute_s: started.elapsed().as_secs_f64(),
+                    checksum,
+                };
+                if let Err(e) = write_frame(&mut *writer.lock().unwrap(), &frame) {
+                    break Err(anyhow::anyhow!("worker {}: send result: {e}", cfg.id));
+                }
+            }
+            Ok(Frame::Shutdown) => break Ok(stats),
+            Ok(other) => {
+                break Err(anyhow::anyhow!("worker {}: unexpected frame {other:?}", cfg.id))
+            }
+            // EOF before the first assignment means the master rejected
+            // this worker (duplicate/out-of-range id, or the fleet was
+            // already full) — that must not look like a clean run.
+            Err(WireError::Closed) if stats.rounds_served == 0 => {
+                break Err(anyhow::anyhow!(
+                    "worker {}: master closed the connection before assigning any \
+                     work (rejected handshake?)",
+                    cfg.id
+                ))
+            }
+            Err(WireError::Closed) => break Ok(stats), // master hung up mid-run
+            Err(e) => break Err(anyhow::anyhow!("worker {}: read: {e}", cfg.id)),
+        }
+    };
+    stop.store(true, Ordering::Release);
+    let _ = hb.join();
+    result
+}
+
+/// FNV-1a fold of the assigned chunk ids: the minitask's "result". The
+/// master recomputes this from the chunks it assigned and rejects
+/// results that disagree (a worker that skipped the work, or a corrupted
+/// assignment).
+pub(crate) fn chunk_checksum(chunks: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &c in chunks {
+        h ^= c as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The synthetic workload: compute the chunk checksum (stands in for
+/// "compute the partial gradient over these chunks"), then hold the
+/// worker busy for the modelled duration.
+fn execute_minitask(chunks: &[u32], duration_s: f64) -> u64 {
+    let h = chunk_checksum(chunks);
+    std::thread::sleep(Duration::from_secs_f64(duration_s.max(0.0)));
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_is_deterministic_per_worker() {
+        let cfg = ChaosConfig::default_fit(42);
+        let seq = |id: u32| {
+            let mut c = ChaosState::new(cfg, id);
+            (0..200).map(|_| c.next_multiplier()).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(3), seq(3), "same worker, same stream");
+        assert_ne!(seq(3), seq(4), "distinct workers diverge");
+    }
+
+    #[test]
+    fn chaos_matches_fig1_scale() {
+        let cfg = ChaosConfig::default_fit(7);
+        let mut slow_cells = 0usize;
+        let rounds = 400;
+        let workers = 32;
+        for id in 0..workers {
+            let mut c = ChaosState::new(cfg, id);
+            for _ in 0..rounds {
+                if c.next_multiplier() > 1.0 {
+                    slow_cells += 1;
+                }
+            }
+        }
+        let frac = slow_cells as f64 / (rounds * workers as usize) as f64;
+        assert!((0.02..0.12).contains(&frac), "straggle fraction {frac}");
+    }
+
+    #[test]
+    fn chaos_slowdowns_clear_the_mu_cutoff() {
+        // μ = 1 ⇒ a fresh straggler's multiplier must exceed 2.
+        let cfg = ChaosConfig::default_fit(11);
+        let mut c = ChaosState::new(cfg, 0);
+        let mut fresh = Vec::new();
+        let mut was_slow = false;
+        for _ in 0..2000 {
+            let m = c.next_multiplier();
+            if m > 1.0 && !was_slow {
+                fresh.push(m);
+            }
+            was_slow = m > 1.0;
+        }
+        assert!(!fresh.is_empty());
+        let ok = fresh.iter().filter(|&&m| m > 2.0).count() as f64 / fresh.len() as f64;
+        assert!(ok > 0.95, "fresh straggler multipliers must clear 2×: {ok}");
+    }
+
+    #[test]
+    fn minitask_checksum_depends_on_chunks() {
+        let a = execute_minitask(&[1, 2, 3], 0.0);
+        let b = execute_minitask(&[1, 2, 4], 0.0);
+        let c = execute_minitask(&[1, 2, 3], 0.0);
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn minitask_holds_for_duration() {
+        let t = Instant::now();
+        execute_minitask(&[], 0.03);
+        assert!(t.elapsed() >= Duration::from_millis(28));
+    }
+}

@@ -26,8 +26,14 @@
 //! μ-rule, wait out non-conforming patterns, commit, decode — lives in
 //! exactly one place, [`session::SgcSession`], which performs no IO.
 //! Execution backends (the [`cluster::SimCluster`] simulator, probe
-//! trace replays, the real-compute PJRT trainer, the parallel batch
-//! driver) merely pump it with completion times. See `rust/DESIGN.md`.
+//! trace replays, recorded-trace replay ([`cluster::RunTrace`]), the
+//! real-compute PJRT trainer, the parallel batch driver, and the live
+//! TCP worker fleet ([`fleet::FleetCluster`])) merely pump it with
+//! completion times. Streaming backends use the session's incremental
+//! [`deadline_hint`](session::SgcSession::deadline_hint) /
+//! [`try_close_round`](session::SgcSession::try_close_round) API to cut
+//! stragglers on the wall clock without waiting for all `n` results.
+//! See `rust/DESIGN.md`.
 //!
 //! ## Quick start
 //!
@@ -58,13 +64,38 @@
 //!
 //! Or use the one-call drivers: [`session::drive`] for a single run (the
 //! [`coordinator::Master`] facade wraps it), [`session::run_parallel`]
-//! for concurrent batches of independent runs (sweeps, repeated seeds).
+//! for concurrent batches of independent runs (sweeps, repeated seeds) —
+//! both return `Result` so a mis-sized cluster fails usably.
+//!
+//! Run the same protocol over a *real* fleet of TCP workers on
+//! localhost, with seeded chaos injection and the μ-rule applied to
+//! wall-clock arrival times, then replay the recorded trace bit-exactly:
+//!
+//! ```no_run
+//! use sgc::coding::SchemeConfig;
+//! use sgc::fleet::{drive_fleet, ChaosConfig, LoopbackFleet};
+//! use sgc::session::{self, SessionConfig};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let scheme = SchemeConfig::gc(8, 2);
+//! let cfg = SessionConfig { jobs: 20, ..Default::default() };
+//! let mut fleet = LoopbackFleet::spawn(8, Some(ChaosConfig::default_fit(7)))?;
+//! let run = drive_fleet(&scheme, &cfg, &mut fleet.cluster)?;  // streaming μ-rule
+//! println!("fleet runtime: {:.2}s", run.report.total_runtime_s);
+//! let replayed = session::drive(&scheme, &cfg, &mut run.trace.replay())?;
+//! assert_eq!(replayed.total_runtime_s, run.report.total_runtime_s);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! (`sgc run --fleet 8 --jobs 20` is the CLI spelling of the same run.)
 
 pub mod bench_harness;
 pub mod cluster;
 pub mod coding;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod probe;
 pub mod runtime;
 pub mod session;

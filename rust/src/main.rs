@@ -2,34 +2,49 @@
 //!
 //! ```text
 //! sgc run    --n 256 --scheme m-sgc:1,2,27 --jobs 480 [--mu 1.0] [--seed 7]
+//!            [--fleet N | --listen ADDR] [--record-trace P] [--replay-trace P]
+//! sgc worker --master HOST:PORT --id K [--chaos-seed S]
 //! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
+//!            [--record-trace PREFIX]
 //! sgc probe  --n 256 --t-probe 80 --jobs 80
 //! sgc train  --n 16 --scheme m-sgc:1,2,4 --models 4 --iters 25
 //! sgc info   --n 256 --scheme sr-sgc:2,3,23
 //! ```
+//!
+//! `sgc run --fleet N` spins an in-process loopback fleet of `N` TCP
+//! workers with seeded chaos injection and applies the μ-rule to real
+//! wall-clock arrivals; `sgc run --listen 0.0.0.0:7070` instead waits
+//! for `--n` external `sgc worker` processes to connect.
 
-use sgc::cluster::{Cluster, SimCluster};
+use sgc::cluster::{Cluster, RecordingCluster, RunTrace, SimCluster};
 use sgc::coding::SchemeConfig;
+use sgc::coordinator::RunReport;
+use sgc::fleet::{self, ChaosConfig, FleetCluster, LoopbackFleet, WorkerConfig};
 use sgc::probe::{grid_search, DelayProfile, SearchSpace};
 use sgc::session::{self, BatchItem, SessionConfig};
 use sgc::straggler::GilbertElliot;
 use sgc::train::{Dataset, DatasetConfig, MultiModelTrainer, TrainConfig};
 use sgc::util::cli::Args;
 use sgc::util::stats::MeanStd;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("worker") => cmd_worker(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("probe") => cmd_probe(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: sgc <run|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
+                "usage: sgc <run|worker|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
                  scheme spec: gc:S | gc-rep:S | sr-sgc:B,W,L | sr-sgc-rep:B,W,L | \
-                 m-sgc:B,W,L | m-sgc-rep:B,W,L | uncoded"
+                 m-sgc:B,W,L | m-sgc-rep:B,W,L | uncoded\n\
+                 fleet:       sgc run --fleet N (loopback workers) or --listen ADDR\n\
+                              (+ sgc worker --master ADDR --id K per external worker)\n\
+                 traces:      --record-trace FILE on run/sweep; --replay-trace FILE on run"
             );
             std::process::exit(2);
         }
@@ -41,7 +56,15 @@ fn ge_cluster(n: usize, seed: u64) -> SimCluster {
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let n = args.get_parse("n", 256usize);
+    anyhow::ensure!(
+        !args.has_flag("fleet"),
+        "--fleet needs a worker count (e.g. --fleet 8)"
+    );
+    let fleet_n = args.options.get("fleet").map(|v| v.parse::<usize>()).transpose()?;
+    let n = match fleet_n {
+        Some(k) => k,
+        None => args.get_parse("n", 256usize),
+    };
     let scheme = SchemeConfig::parse(n, &args.get("scheme", "m-sgc:1,2,27"))?;
     let jobs = args.get_parse("jobs", 480usize);
     let seed = args.get_parse("seed", 7u64);
@@ -52,8 +75,70 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         measure_decode: args.has_flag("measure-decode"),
         ..Default::default()
     };
-    let mut cluster = ge_cluster(n, seed);
-    let report = session::drive(&scheme, &cfg, &mut cluster);
+    let record = args.options.get("record-trace").cloned();
+
+    let report: RunReport = if fleet_n.is_some() || args.has("listen") {
+        // --- live fleet: wall-clock μ-rule over streaming TCP arrivals ---
+        let chaos = if args.has_flag("no-chaos") {
+            None
+        } else {
+            Some(ChaosConfig::default_fit(args.get_parse("chaos-seed", seed)))
+        };
+        let round_timeout = Duration::from_secs_f64(args.get_parse("round-timeout", 60.0f64));
+        let run = match fleet_n {
+            Some(k) => {
+                let mut fleet = LoopbackFleet::spawn(k, chaos)?;
+                fleet.cluster.set_round_timeout(round_timeout);
+                let run = fleet::drive_fleet(&scheme, &cfg, &mut fleet.cluster)?;
+                // join the workers so a worker-side error fails the run
+                // instead of disappearing with its thread
+                fleet.shutdown()?;
+                run
+            }
+            None => {
+                let addr = args.get("listen", "127.0.0.1:7070");
+                println!("waiting for {n} workers on {addr} …");
+                let mut cluster = FleetCluster::listen(&addr, n, Duration::from_secs(120))?;
+                cluster.set_round_timeout(round_timeout);
+                let run = fleet::drive_fleet(&scheme, &cfg, &mut cluster)?;
+                cluster.shutdown();
+                run
+            }
+        };
+        if let Some(path) = &record {
+            run.trace.save(path)?;
+            println!("recorded trace → {path}");
+        }
+        run.report
+    } else if args.has("replay-trace") {
+        // --- exact replay of a recorded delay matrix ---
+        let path = args.get("replay-trace", "");
+        let trace = RunTrace::load(&path)?;
+        anyhow::ensure!(trace.n == n, "trace has n={}, run requested n={n}", trace.n);
+        let needed = jobs + scheme.delay();
+        anyhow::ensure!(
+            trace.rounds() >= needed,
+            "trace has {} rounds but --jobs {jobs} needs {needed}; a shorter trace \
+             would silently wrap around (pass the jobs count the trace was recorded at)",
+            trace.rounds()
+        );
+        session::drive(&scheme, &cfg, &mut trace.replay())?
+    } else {
+        // --- stochastic simulator ---
+        let mut sim = ge_cluster(n, seed);
+        match &record {
+            Some(path) => {
+                // explicit save so a write failure fails the command
+                // (autosave-on-drop can only warn)
+                let mut rec = RecordingCluster::new(sim);
+                let report = session::drive(&scheme, &cfg, &mut rec)?;
+                rec.into_trace().save(path)?;
+                println!("recorded trace → {path}");
+                report
+            }
+            None => session::drive(&scheme, &cfg, &mut sim)?,
+        }
+    };
     println!(
         "{:<18} load={:.4} T={} runtime={:.2}s rounds={} waitouts={} violations={}",
         report.scheme,
@@ -69,6 +154,27 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         report.to_json().save(&path)?;
         println!("saved {path}");
     }
+    Ok(())
+}
+
+/// Run one fleet worker process until the master shuts it down.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let master = args.get("master", "127.0.0.1:7070");
+    let id = args.get_parse("id", 0u32);
+    let chaos = if args.has_flag("no-chaos") {
+        None
+    } else {
+        Some(ChaosConfig::default_fit(args.get_parse("chaos-seed", 7u64)))
+    };
+    let mut cfg = WorkerConfig::loopback(id, master.clone(), chaos);
+    cfg.base_s = args.get_parse("base-s", cfg.base_s);
+    cfg.alpha_s = args.get_parse("alpha-s", cfg.alpha_s);
+    println!("worker {id} connecting to {master} …");
+    let stats = fleet::run_worker(cfg)?;
+    println!(
+        "worker {id} done: {} rounds served, {} chaos rounds",
+        stats.rounds_served, stats.chaos_rounds
+    );
     Ok(())
 }
 
@@ -95,9 +201,26 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             })
         })
         .collect();
+    // --record-trace PREFIX dumps every repetition's delay matrix as
+    // PREFIX-<scheme>-rep<k>.json (autosaved when the batch driver drops
+    // each recording cluster).
+    let record = args.options.get("record-trace").cloned();
     let reports = session::run_parallel(items, session::default_threads(), move |i, item| {
-        Box::new(ge_cluster(item.scheme.n, seed + (i % reps) as u64)) as Box<dyn Cluster + Send>
-    });
+        let sim = ge_cluster(item.scheme.n, seed + (i % reps) as u64);
+        match &record {
+            Some(prefix) => {
+                let label: String = item
+                    .scheme
+                    .label()
+                    .chars()
+                    .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                    .collect();
+                let path = format!("{prefix}-{label}-rep{}.json", i % reps);
+                Box::new(RecordingCluster::autosave(sim, path)) as Box<dyn Cluster + Send>
+            }
+            None => Box::new(sim) as Box<dyn Cluster + Send>,
+        }
+    })?;
 
     println!(
         "{:<22} {:>8} {:>3} {:>12} {:>10} {:>9}",

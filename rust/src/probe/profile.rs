@@ -29,6 +29,20 @@ impl DelayProfile {
         DelayProfile { n, base_load, times }
     }
 
+    /// Build a profile from a recorded run trace
+    /// ([`crate::cluster::RunTrace`]): the delay matrix feeds the
+    /// Appendix-J candidate search, with the trace's mean recorded load
+    /// as the base load for the Fig.-16 adjustment.
+    pub fn from_trace(trace: &crate::cluster::RunTrace) -> Self {
+        let loads: Vec<f64> = trace.rounds.iter().flat_map(|r| r.loads.clone()).collect();
+        let base_load = if loads.is_empty() { 0.0 } else { stats::mean(&loads) };
+        DelayProfile {
+            n: trace.n,
+            base_load,
+            times: trace.rounds.iter().map(|r| r.finish.clone()).collect(),
+        }
+    }
+
     pub fn rounds(&self) -> usize {
         self.times.len()
     }

@@ -101,7 +101,9 @@ pub fn estimate_runtime(
 ) -> f64 {
     let mut cluster = ProfileCluster::new(profile.clone(), alpha);
     let cfg = SessionConfig { jobs, ..Default::default() };
-    session::drive(config, &cfg, &mut cluster).total_runtime_s
+    session::drive(config, &cfg, &mut cluster)
+        .expect("profile and candidate share n by construction")
+        .total_runtime_s
 }
 
 /// Grid-search a candidate list; returns candidates sorted by estimated
@@ -124,7 +126,8 @@ pub fn grid_search(
     let profile = profile.clone();
     let reports = session::run_parallel(items, session::default_threads(), move |_, _| {
         Box::new(ProfileCluster::new(profile.clone(), alpha)) as Box<dyn Cluster + Send>
-    });
+    })
+    .expect("profile and candidates share n by construction");
     let mut out: Vec<Candidate> = candidates
         .iter()
         .zip(reports)

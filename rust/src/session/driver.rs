@@ -6,6 +6,10 @@
 //! ([`crate::probe`]) and repeated-seed evaluation
 //! ([`crate::experiments`]). Both contain zero protocol logic: every
 //! round decision lives in [`SgcSession`].
+//!
+//! Both are fallible: a mis-sized cluster (e.g. a fleet that connected
+//! fewer workers than the scheme expects) reports a usable
+//! [`anyhow::Error`] instead of aborting the process mid-batch.
 
 use super::{SessionConfig, SessionEvent, SgcSession};
 use crate::cluster::Cluster;
@@ -14,14 +18,22 @@ use crate::coordinator::metrics::RunReport;
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
-/// Run one session to completion against `cluster` and return its report.
+/// Run one session to completion against `cluster` and return its
+/// report. Errors if the cluster's worker count does not match the
+/// scheme's `n`.
 pub fn drive(
     scheme_cfg: &SchemeConfig,
     cfg: &SessionConfig,
     cluster: &mut dyn Cluster,
-) -> RunReport {
+) -> crate::Result<RunReport> {
     let mut session = SgcSession::new(scheme_cfg, cfg.clone());
-    assert_eq!(cluster.n(), session.n(), "cluster/scheme size mismatch");
+    anyhow::ensure!(
+        cluster.n() == session.n(),
+        "cluster has {} workers but scheme {} expects n = {}",
+        cluster.n(),
+        scheme_cfg.label(),
+        session.n()
+    );
     while !session.is_complete() {
         let plan = session.begin_round();
         let sample = cluster.sample_round(&plan.loads);
@@ -33,7 +45,7 @@ pub fn drive(
             "all completion times were submitted"
         );
     }
-    session.into_report()
+    Ok(session.into_report())
 }
 
 /// One entry of a parallel batch: a scheme plus its session parameters.
@@ -53,8 +65,13 @@ pub fn default_threads() -> usize {
 /// `make_cluster(i, item)` builds the cluster for batch index `i` (seed
 /// it from `i` for reproducibility). Reports come back in input order
 /// regardless of completion order, so results are deterministic whenever
-/// the cluster factory is.
-pub fn run_parallel<F>(items: Vec<BatchItem>, threads: usize, make_cluster: F) -> Vec<RunReport>
+/// the cluster factory is. The first failing session fails the batch
+/// (with its index attached); sessions that panic still panic.
+pub fn run_parallel<F>(
+    items: Vec<BatchItem>,
+    threads: usize,
+    make_cluster: F,
+) -> crate::Result<Vec<RunReport>>
 where
     F: Fn(usize, &BatchItem) -> Box<dyn Cluster + Send> + Send + Sync + 'static,
 {
@@ -65,6 +82,7 @@ where
             .map(|(i, item)| {
                 let mut cluster = make_cluster(i, item);
                 drive(&item.scheme, &item.session, cluster.as_mut())
+                    .map_err(|e| e.context(format!("batch item {i}")))
             })
             .collect();
     }
@@ -76,9 +94,8 @@ where
         .map(|(i, item)| {
             let make = Arc::clone(&make);
             pool.submit(move || {
-                // Capture panics so the original message (e.g. a
-                // cluster/scheme size mismatch) reaches the caller
-                // instead of a generic "job panicked".
+                // Capture panics so the original message reaches the
+                // caller instead of a generic "job panicked".
                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let mut cluster = make(i, &item);
                     drive(&item.scheme, &item.session, cluster.as_mut())
@@ -89,8 +106,10 @@ where
         .collect();
     handles
         .into_iter()
-        .map(|h| match h.join() {
-            Ok(report) => report,
+        .enumerate()
+        .map(|(i, h)| match h.join() {
+            Ok(Ok(report)) => Ok(report),
+            Ok(Err(e)) => Err(e.context(format!("batch item {i}"))),
             Err((i, msg)) => panic!("parallel session {i} panicked: {msg}"),
         })
         .collect()
@@ -139,10 +158,10 @@ mod tests {
             .enumerate()
             .map(|(i, item)| {
                 let mut cluster = cluster_for(i, item);
-                drive(&item.scheme, &item.session, cluster.as_mut())
+                drive(&item.scheme, &item.session, cluster.as_mut()).unwrap()
             })
             .collect();
-        let parallel = run_parallel(items(), 4, cluster_for);
+        let parallel = run_parallel(items(), 4, cluster_for).unwrap();
         assert_eq!(parallel.len(), sequential.len());
         for (p, s) in parallel.iter().zip(&sequential) {
             assert_eq!(p.scheme, s.scheme);
@@ -163,7 +182,7 @@ mod tests {
                 17,
             ))
         };
-        let driven = drive(&cfg, &session_cfg, mk().as_mut());
+        let driven = drive(&cfg, &session_cfg, mk().as_mut()).unwrap();
 
         let mut cluster = mk();
         let mut session = SgcSession::new(&cfg, session_cfg);
@@ -180,5 +199,34 @@ mod tests {
         assert_eq!(driven.total_runtime_s, manual.total_runtime_s);
         assert_eq!(driven.job_completion_s, manual.job_completion_s);
         assert_eq!(driven.true_pattern, manual.true_pattern);
+    }
+
+    #[test]
+    fn size_mismatch_is_a_usable_error() {
+        let item = BatchItem {
+            scheme: SchemeConfig::parse(16, "gc:2").unwrap(),
+            session: SessionConfig { jobs: 4, ..Default::default() },
+        };
+        // cluster has 8 workers, scheme expects 16
+        let mut wrong = SimCluster::from_gilbert_elliot(
+            8,
+            GilbertElliot::new(8, 0.05, 0.6, 1),
+            2,
+        );
+        let err = drive(&item.scheme, &item.session, &mut wrong).unwrap_err();
+        assert!(err.to_string().contains("expects n = 16"), "{err}");
+
+        // …and through the batch driver, with the item index attached
+        let err = run_parallel(vec![item.clone(), item], 4, |_, _| {
+            Box::new(SimCluster::from_gilbert_elliot(
+                8,
+                GilbertElliot::new(8, 0.05, 0.6, 1),
+                2,
+            )) as Box<dyn Cluster + Send>
+        })
+        .unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("batch item"), "{chain}");
+        assert!(chain.contains("expects n = 16"), "{chain}");
     }
 }

@@ -302,6 +302,80 @@ impl SgcSession {
         self.true_pattern.push_round(state.to_vec());
     }
 
+    /// Workers whose completion time has not been submitted for the open
+    /// round (empty outside a round).
+    pub fn pending_workers(&self) -> Vec<usize> {
+        if self.phase != Phase::Collecting {
+            return Vec::new();
+        }
+        (0..self.n).filter(|&i| self.finish[i].is_none()).collect()
+    }
+
+    /// μ-rule cutoff hint for the open round: `(1 + μ) · κ` where `κ` is
+    /// the fastest completion time submitted so far. This is the earliest
+    /// wall-clock instant (seconds from round start) at which
+    /// [`try_close_round`](Self::try_close_round) can cut the workers
+    /// that have not responded yet. `None` before the first submission
+    /// (κ is unknown) or outside a round.
+    ///
+    /// A streaming driver polls [`try_close_round`](Self::try_close_round)
+    /// on every arrival and sleeps until this hint in between — the
+    /// missing piece that lets a real fleet cut stragglers without
+    /// waiting for all `n` submissions.
+    pub fn deadline_hint(&self) -> Option<f64> {
+        if self.phase != Phase::Collecting {
+            return None;
+        }
+        let kappa = self.finish.iter().flatten().cloned().fold(f64::INFINITY, f64::min);
+        if kappa.is_finite() {
+            Some((1.0 + self.cfg.mu) * kappa)
+        } else {
+            None
+        }
+    }
+
+    /// Incremental close for streaming drivers: attempt to close the open
+    /// round at wall-clock time `now_s` (seconds from round start) with
+    /// only the completion times submitted so far.
+    ///
+    /// Contract: the driver submits each worker's time as it arrives, so
+    /// every still-missing worker is guaranteed to finish *after*
+    /// `now_s`. Once `now_s` passes the [`deadline_hint`](Self::deadline_hint)
+    /// cutoff, missing workers are therefore provably beyond the μ-rule
+    /// cutoff and can be cut without knowing their eventual times —
+    /// unless the wait-out policy needs one of them, in which case the
+    /// round stays open ([`SessionEvent::WaitingFor`]) and the driver
+    /// keeps waiting for arrivals.
+    ///
+    /// Closing through this path with the workers that did arrive
+    /// produces the same responder set, duration and events as a
+    /// [`close_round`](Self::close_round) fed everyone's true times,
+    /// because cut workers' true times all exceed the cutoff.
+    pub fn try_close_round(&mut self, now_s: f64) -> Vec<SessionEvent> {
+        assert_eq!(self.phase, Phase::Collecting, "try_close_round without an open round");
+        assert!(now_s.is_finite() && now_s >= 0.0, "now_s must be finite and non-negative");
+        let missing = self.pending_workers();
+        if missing.is_empty() {
+            return self.close_round();
+        }
+        match self.deadline_hint() {
+            Some(hint) if now_s >= hint => {}
+            // κ unknown or the cutoff has not passed: cannot cut anyone.
+            _ => return vec![SessionEvent::WaitingFor { workers: missing }],
+        }
+        // Missing workers finish strictly after now_s ≥ (1+μ)κ: model
+        // them as unboundedly late and let the one decision procedure
+        // classify them.
+        let finish: Vec<f64> =
+            self.finish.iter().map(|f| f.unwrap_or(f64::INFINITY)).collect();
+        let decision = self.decide_round(&finish);
+        if decision.responded.iter().zip(&finish).any(|(&ok, &f)| ok && f.is_infinite()) {
+            // The wait-out policy needs a worker that has not arrived.
+            return vec![SessionEvent::WaitingFor { workers: missing }];
+        }
+        self.commit_decision(&finish, decision)
+    }
+
     /// Close the open round: apply the μ-rule and wait-out policy to the
     /// submitted times, commit the responder set into the scheme and the
     /// conformance checker, decode every newly complete job, and return
@@ -311,25 +385,36 @@ impl SgcSession {
     /// [`SessionEvent::WaitingFor`] and leaves the round open.
     pub fn close_round(&mut self) -> Vec<SessionEvent> {
         assert_eq!(self.phase, Phase::Collecting, "close_round without an open round");
-        let missing: Vec<usize> =
-            (0..self.n).filter(|&i| self.finish[i].is_none()).collect();
+        let missing = self.pending_workers();
         if !missing.is_empty() {
             return vec![SessionEvent::WaitingFor { workers: missing }];
         }
         let finish: Vec<f64> = self.finish.iter().map(|f| f.unwrap()).collect();
-        let r = self.round;
+        let decision = self.decide_round(&finish);
+        self.commit_decision(&finish, decision)
+    }
 
+    /// Run the μ-rule + wait-out decision for the open round on the given
+    /// completion times (no state change).
+    fn decide_round(&self, finish: &[f64]) -> RoundDecision {
+        let r = self.round;
         let deadline_done =
             self.scheme.deadline_job(r).map(|t| self.job_done[t - 1]).unwrap_or(true);
-        let decision = decide(
-            &finish,
+        decide(
+            finish,
             self.cfg.mu,
             self.wait_policy,
             &self.checker,
             self.scheme.as_ref(),
             r,
             deadline_done,
-        );
+        )
+    }
+
+    /// Commit a round decision: record patterns, advance the scheme and
+    /// checker, decode newly complete jobs, emit events.
+    fn commit_decision(&mut self, finish: &[f64], decision: RoundDecision) -> Vec<SessionEvent> {
+        let r = self.round;
         let RoundDecision { responded, mut duration, kappa, detected, admitted } = decision;
         self.detected_pattern.push_round(
             finish.iter().map(|&f| f > (1.0 + self.cfg.mu) * kappa).collect(),
@@ -596,6 +681,101 @@ mod tests {
             other => panic!("unexpected event {other:?}"),
         }
         assert!(session.last_responded().iter().all(|&x| x));
+    }
+
+    #[test]
+    fn try_close_waits_until_the_cutoff() {
+        let mut session = gc_session(4, 1, 1);
+        session.begin_round();
+        assert_eq!(session.deadline_hint(), None, "κ unknown before any submission");
+        session.submit(0, 1.0);
+        assert_eq!(session.deadline_hint(), Some(2.0), "(1+μ)κ with μ=1, κ=1");
+        session.submit(1, 1.1);
+        session.submit(2, 1.2);
+        assert_eq!(session.pending_workers(), vec![3]);
+        // before the cutoff the missing worker may still make it
+        let events = session.try_close_round(1.5);
+        assert_eq!(events, vec![SessionEvent::WaitingFor { workers: vec![3] }]);
+        // past the cutoff, worker 3 is provably a straggler: cut it
+        let events = session.try_close_round(2.0);
+        match &events[0] {
+            SessionEvent::RoundClosed { duration_s, waited_out, .. } => {
+                assert!((*duration_s - 2.0).abs() < 1e-12, "round ends at the cutoff");
+                assert_eq!(*waited_out, 0);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        assert_eq!(session.last_responded(), &[true, true, true, false]);
+        assert!(events.iter().any(|e| matches!(e, SessionEvent::JobDecoded { job: 1, .. })));
+    }
+
+    #[test]
+    fn try_close_matches_batch_close_on_the_true_times() {
+        // Incremental close (missing straggler) and batch close (all
+        // times known) must produce identical rounds.
+        let finish = [1.0, 1.05, 1.1, 9.0];
+        let mut batch = gc_session(4, 1, 2);
+        batch.begin_round();
+        batch.submit_all(&finish);
+        let batch_events = batch.close_round();
+
+        let mut streaming = gc_session(4, 1, 2);
+        streaming.begin_round();
+        for w in 0..3 {
+            streaming.submit(w, finish[w]);
+        }
+        // wall clock reaches the cutoff before worker 3 (at 9.0) arrives
+        let events = streaming.try_close_round(2.1);
+        assert_eq!(events, batch_events);
+        assert_eq!(streaming.last_responded(), batch.last_responded());
+        assert_eq!(streaming.clock_s(), batch.clock_s());
+    }
+
+    #[test]
+    fn try_close_never_cuts_under_wait_all() {
+        let mut session = SgcSession::new(
+            &SchemeConfig::uncoded(4),
+            SessionConfig { jobs: 1, ..Default::default() },
+        );
+        session.begin_round();
+        for w in 0..3 {
+            session.submit(w, 1.0);
+        }
+        // far past the μ-cutoff, but the uncoded scheme must wait
+        let events = session.try_close_round(50.0);
+        assert_eq!(events, vec![SessionEvent::WaitingFor { workers: vec![3] }]);
+        session.submit(3, 9.0);
+        let events = session.try_close_round(50.0);
+        match &events[0] {
+            SessionEvent::RoundClosed { duration_s, .. } => {
+                assert!((*duration_s - 9.0).abs() < 1e-12, "wait-all covers the tail");
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+
+    #[test]
+    fn try_close_waits_for_workers_the_policy_needs() {
+        // GC(s=1) tolerates one straggler; with two workers missing the
+        // pattern cannot conform, so the round must stay open until one
+        // of them arrives.
+        let mut session = gc_session(4, 1, 1);
+        session.begin_round();
+        session.submit(0, 1.0);
+        session.submit(1, 1.0);
+        let events = session.try_close_round(3.0);
+        assert_eq!(events, vec![SessionEvent::WaitingFor { workers: vec![2, 3] }]);
+        // worker 2 arrives late; conformance repair admits it and cuts 3
+        session.submit(2, 2.5);
+        let events = session.try_close_round(3.0);
+        match &events[0] {
+            SessionEvent::RoundClosed { duration_s, waited_out, .. } => {
+                assert!((*duration_s - 2.5).abs() < 1e-12, "waited out to 2.5s");
+                assert_eq!(*waited_out, 1);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        assert_eq!(session.last_responded(), &[true, true, true, false]);
     }
 
     #[test]

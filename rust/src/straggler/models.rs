@@ -26,6 +26,18 @@ pub trait StragglerProcess: Send {
     }
 }
 
+/// One Gilbert–Elliot state transition for a single worker — shared by
+/// the n-worker process below and the fleet's per-worker chaos
+/// injection ([`crate::fleet::ChaosConfig`]), so the two can never
+/// drift apart.
+pub fn ge_step(straggling: bool, p_enter: f64, p_exit: f64, rng: &mut Pcg32) -> bool {
+    if straggling {
+        !rng.chance(p_exit)
+    } else {
+        rng.chance(p_enter)
+    }
+}
+
 /// Gilbert–Elliot 2-state model (Appendix C, Fig. 3): a non-straggler
 /// becomes a straggler with probability `p_enter`; a straggler recovers
 /// with probability `p_exit`.
@@ -68,7 +80,7 @@ impl GilbertElliot {
 impl StragglerProcess for GilbertElliot {
     fn next_round(&mut self) -> Vec<bool> {
         for s in self.states.iter_mut() {
-            *s = if *s { !self.rng.chance(self.p_exit) } else { self.rng.chance(self.p_enter) };
+            *s = ge_step(*s, self.p_enter, self.p_exit, &mut self.rng);
         }
         self.states.clone()
     }

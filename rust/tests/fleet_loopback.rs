@@ -1,0 +1,118 @@
+//! End-to-end loopback-fleet tests: real TCP workers on localhost, the
+//! wall-clock μ-rule, chaos injection, and trace record/replay — the
+//! acceptance scenario of the fleet subsystem.
+
+use sgc::cluster::{RecordingCluster, RunTrace, SimCluster};
+use sgc::coding::SchemeConfig;
+use sgc::fleet::{drive_fleet, ChaosConfig, LoopbackFleet};
+use sgc::session::{self, SessionConfig};
+use sgc::straggler::GilbertElliot;
+
+/// `sgc run --fleet 8 --jobs 20` with seeded chaos: completes all jobs,
+/// applies the μ-rule from wall-clock arrivals, and its recorded trace
+/// replays to the identical protocol outcome.
+#[test]
+fn fleet_8_workers_with_chaos_completes_and_replays() {
+    let n = 8;
+    let jobs = 20;
+    let scheme = SchemeConfig::gc(n, 2);
+    let cfg = SessionConfig { jobs, ..Default::default() };
+    let mut fleet =
+        LoopbackFleet::spawn(n, Some(ChaosConfig::default_fit(42))).expect("spawn fleet");
+    let run = drive_fleet(&scheme, &cfg, &mut fleet.cluster).expect("fleet run");
+    let stats = fleet.shutdown().expect("clean shutdown");
+
+    // every job completed, zero deadline violations (ConformanceRepair)
+    assert_eq!(run.report.rounds.len(), jobs, "GC has delay 0: J rounds");
+    assert_eq!(run.report.deadline_violations, 0);
+    assert!(run.report.job_completion_s.iter().all(|t| t.is_finite()));
+    assert!(run.report.total_runtime_s > 0.0);
+    // every worker served every round (cut stragglers still finish late)
+    assert!(stats.iter().all(|s| s.rounds_served == jobs), "{stats:?}");
+
+    // trace is complete: n × rounds finite wall-clock delays + states
+    assert_eq!(run.trace.n, n);
+    assert_eq!(run.trace.rounds(), jobs);
+    assert!(run
+        .trace
+        .rounds
+        .iter()
+        .all(|r| r.finish.iter().all(|&f| f.is_finite() && f > 0.0)));
+    let pattern = run.trace.pattern().expect("fleet trace records μ-detections");
+    assert_eq!(pattern.rounds(), jobs);
+
+    // JSON round-trip, then exact replay: identical responder sets,
+    // durations and job completions per round.
+    let trace = RunTrace::from_json(&run.trace.to_json()).expect("trace json");
+    let replayed =
+        session::drive(&scheme, &cfg, &mut trace.replay()).expect("replay drive");
+    assert_eq!(replayed.effective_pattern, run.report.effective_pattern);
+    assert_eq!(replayed.detected_pattern, run.report.detected_pattern);
+    assert_eq!(replayed.deadline_violations, run.report.deadline_violations);
+    for (a, b) in replayed.rounds.iter().zip(&run.report.rounds) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.waited_out, b.waited_out);
+        assert_eq!(a.detected_stragglers, b.detected_stragglers);
+        // κ and the duration are pure functions of the recorded times
+        assert_eq!(a.kappa_s, b.kappa_s, "round {}", a.round);
+        assert_eq!(a.duration_s, b.duration_s, "round {}", a.round);
+    }
+    assert_eq!(replayed.total_runtime_s, run.report.total_runtime_s);
+    assert_eq!(replayed.job_completion_s, run.report.job_completion_s);
+
+    // the detected pattern is also loadable as a SimCluster trace
+    let mut sim = SimCluster::from_trace(n, pattern.clone(), 7);
+    let sim_report = session::drive(&scheme, &cfg, &mut sim).expect("sim replay");
+    assert_eq!(
+        sim_report.true_pattern.rows[..pattern.rounds().min(sim_report.true_pattern.rounds())],
+        pattern.rows[..pattern.rounds().min(sim_report.true_pattern.rounds())],
+        "SimCluster::from_trace replays the recorded straggler pattern"
+    );
+}
+
+/// Two fleets with the same chaos seed produce the same straggle/serve
+/// counts — the reproducibility contract of seeded chaos injection.
+#[test]
+fn chaos_injection_is_reproducible_across_fleets() {
+    let n = 4;
+    let jobs = 8;
+    let scheme = SchemeConfig::gc(n, 1);
+    let cfg = SessionConfig { jobs, ..Default::default() };
+    let run_once = || {
+        let mut fleet =
+            LoopbackFleet::spawn(n, Some(ChaosConfig::default_fit(123))).expect("spawn");
+        let _ = drive_fleet(&scheme, &cfg, &mut fleet.cluster).expect("run");
+        let stats = fleet.shutdown().expect("shutdown");
+        stats.iter().map(|s| s.chaos_rounds).collect::<Vec<_>>()
+    };
+    assert_eq!(run_once(), run_once(), "same seed ⇒ same chaos schedule");
+}
+
+/// A recorded *simulator* run replays to an identical report through the
+/// exact-replay cluster (the `--record-trace` / `--replay-trace` path).
+#[test]
+fn recorded_sim_run_replays_identically() {
+    let n = 16;
+    let scheme = SchemeConfig::parse(n, "m-sgc:1,2,3").unwrap();
+    let cfg = SessionConfig { jobs: 15, ..Default::default() };
+    let sim = SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.07, 0.6, 3), 11);
+    let mut rec = RecordingCluster::new(sim);
+    let original = session::drive(&scheme, &cfg, &mut rec).unwrap();
+    let trace = rec.into_trace();
+
+    // through JSON and back, then replayed
+    let trace = RunTrace::from_json(&trace.to_json()).unwrap();
+    let replayed = session::drive(&scheme, &cfg, &mut trace.replay()).unwrap();
+    assert_eq!(replayed.total_runtime_s, original.total_runtime_s);
+    assert_eq!(replayed.job_completion_s, original.job_completion_s);
+    assert_eq!(replayed.deadline_violations, original.deadline_violations);
+    assert_eq!(replayed.true_pattern, original.true_pattern);
+    assert_eq!(replayed.effective_pattern, original.effective_pattern);
+    assert_eq!(replayed.detected_pattern, original.detected_pattern);
+    for (a, b) in replayed.rounds.iter().zip(&original.rounds) {
+        assert_eq!(a.duration_s, b.duration_s);
+        assert_eq!(a.kappa_s, b.kappa_s);
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+    }
+}

@@ -226,7 +226,7 @@ fn session_matches_reference_loop_byte_for_byte() {
         );
         let mut master =
             Master::new(cfg, RunConfig { jobs, ..Default::default() });
-        let session = master.run(&mut cluster(n, 11));
+        let session = master.run(&mut cluster(n, 11)).unwrap();
         assert_eq!(
             format!("{reference:?}"),
             format!("{session:?}"),
@@ -252,7 +252,7 @@ fn session_matches_reference_under_deadline_decode() {
             cfg,
             RunConfig { jobs, wait_policy: WaitPolicy::DeadlineDecode, ..Default::default() },
         );
-        let session = master.run(&mut cluster(n, 29));
+        let session = master.run(&mut cluster(n, 29)).unwrap();
         assert_eq!(
             format!("{reference:?}"),
             format!("{session:?}"),

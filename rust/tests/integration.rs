@@ -19,6 +19,7 @@ fn run(scheme: SchemeConfig, jobs: usize, seed: u64) -> sgc::coordinator::RunRep
         &SessionConfig { jobs, ..Default::default() },
         &mut ge_cluster(n, seed),
     )
+    .unwrap()
 }
 
 #[test]
@@ -83,7 +84,7 @@ fn deadline_decode_can_violate_on_msgc_but_not_conformance() {
             Box::new(TraceProcess::new(pattern.clone())),
             9,
         );
-        master.run(&mut cluster)
+        master.run(&mut cluster).unwrap()
     };
     let repair = mk(WaitPolicy::ConformanceRepair);
     assert_eq!(repair.deadline_violations, 0);
@@ -104,7 +105,7 @@ fn mu_controls_straggler_sensitivity() {
     let detect = |mu: f64| {
         let mut master =
             Master::new(SchemeConfig::gc(n, 6), RunConfig { jobs: 30, mu, ..Default::default() });
-        let rep = master.run(&mut ge_cluster(n, 42));
+        let rep = master.run(&mut ge_cluster(n, 42)).unwrap();
         rep.rounds.iter().map(|r| r.detected_stragglers).sum::<usize>()
     };
     let tight = detect(0.3);
@@ -119,7 +120,7 @@ fn no_stragglers_means_no_waitouts_and_tight_rounds() {
         Master::new(SchemeConfig::msgc(n, 1, 2, 4), RunConfig { jobs: 20, ..Default::default() });
     let mut cluster =
         SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 3);
-    let rep = master.run(&mut cluster);
+    let rep = master.run(&mut cluster).unwrap();
     assert_eq!(rep.deadline_violations, 0);
     assert_eq!(rep.waitout_rounds(), 0);
     assert!(rep.true_pattern.straggle_fraction() == 0.0);
@@ -130,7 +131,7 @@ fn detected_stragglers_track_true_states() {
     let n = 128;
     let mut master =
         Master::new(SchemeConfig::gc(n, 12), RunConfig { jobs: 50, ..Default::default() });
-    let rep = master.run(&mut ge_cluster(n, 11));
+    let rep = master.run(&mut ge_cluster(n, 11)).unwrap();
     // per-round agreement between μ-rule detections and GE ground truth
     let mut agree = 0usize;
     let mut total = 0usize;
@@ -187,7 +188,7 @@ fn master_facade_equals_session_drive() {
     let jobs = 20;
     let via_session = run(scheme.clone(), jobs, 5);
     let mut master = Master::new(scheme, RunConfig { jobs, ..Default::default() });
-    let via_master = master.run(&mut ge_cluster(32, 5));
+    let via_master = master.run(&mut ge_cluster(32, 5)).unwrap();
     assert_eq!(via_master.total_runtime_s, via_session.total_runtime_s);
     assert_eq!(via_master.job_completion_s, via_session.job_completion_s);
     assert_eq!(via_master.deadline_violations, via_session.deadline_violations);
@@ -243,7 +244,7 @@ fn decode_in_idle_hides_decode_cost() {
             SchemeConfig::gc(n, 4),
             RunConfig { jobs: 20, measure_decode: true, decode_in_idle, ..Default::default() },
         );
-        master.run(&mut ge_cluster(n, 9)).total_runtime_s
+        master.run(&mut ge_cluster(n, 9)).unwrap().total_runtime_s
     };
     let hidden = mk(true);
     let exposed = mk(false);

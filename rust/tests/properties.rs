@@ -230,3 +230,63 @@ fn prop_m_sgc_round_load_never_exceeds_formula() {
         }
     });
 }
+
+/// Satellite invariant behind the fleet's streaming driver: pushing the
+/// same completion times through `submit` in *any* permutation (with
+/// arbitrary idempotent re-submits sprinkled in) yields byte-identical
+/// `close_round` events and an identical `RunReport` to `submit_all`.
+#[test]
+fn prop_submit_order_invariance() {
+    use sgc::cluster::{Cluster, SimCluster};
+    use sgc::coding::SchemeConfig;
+    use sgc::session::{SessionConfig, SgcSession};
+    use sgc::straggler::GilbertElliot;
+
+    check("submit-order-invariance", 25, |g: &mut Gen| {
+        let n = g.usize_in(6, 12);
+        let spec = *g.rng().choose(&["gc:1", "m-sgc:1,2,2", "sr-sgc:1,2,2", "uncoded"]);
+        let scheme = match SchemeConfig::parse(n, spec) {
+            Ok(s) => s,
+            Err(_) => return, // parameters invalid at this n; skip case
+        };
+        let jobs = g.usize_in(2, 10);
+        let cfg = SessionConfig { jobs, ..Default::default() };
+        let seed = g.rng().next_u64();
+        let mut cluster = SimCluster::from_gilbert_elliot(
+            n,
+            GilbertElliot::new(n, 0.08, 0.6, seed),
+            seed ^ 0x51,
+        );
+
+        let mut reference = SgcSession::new(&scheme, cfg.clone());
+        let mut shuffled = SgcSession::new(&scheme, cfg);
+        while !reference.is_complete() {
+            let plan = reference.begin_round();
+            let plan2 = shuffled.begin_round();
+            assert_eq!(plan.round, plan2.round);
+            let sample = cluster.sample_round(&plan.loads);
+
+            reference.submit_all(&sample.finish);
+            let expected = reference.close_round();
+
+            let mut order: Vec<usize> = (0..n).collect();
+            g.rng().shuffle(&mut order);
+            for &w in &order {
+                shuffled.submit(w, sample.finish[w]);
+                if g.rng().chance(0.3) {
+                    shuffled.submit(w, sample.finish[w]); // idempotent re-submit
+                }
+            }
+            let got = shuffled.close_round();
+            assert_eq!(got, expected, "events diverged in round {}", plan.round);
+        }
+        assert!(shuffled.is_complete());
+        let a = reference.into_report();
+        let b = shuffled.into_report();
+        assert_eq!(a.total_runtime_s, b.total_runtime_s);
+        assert_eq!(a.job_completion_s, b.job_completion_s);
+        assert_eq!(a.deadline_violations, b.deadline_violations);
+        assert_eq!(a.effective_pattern, b.effective_pattern);
+        assert_eq!(a.detected_pattern, b.detected_pattern);
+    });
+}
