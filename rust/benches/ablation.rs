@@ -58,8 +58,15 @@ fn main() {
     let n = 256;
     let s = 15;
     let mut rng = Pcg32::seeded(5);
-    // GE-like repeating straggler sets: high cache-hit regime
-    let subsets: Vec<Vec<usize>> = (0..8).map(|_| rng.sample_indices(n, n - s)).collect();
+    // GE-like repeating straggler sets: high cache-hit regime (sorted:
+    // decode_coeffs' canonical set-keyed order)
+    let subsets: Vec<Vec<usize>> = (0..8)
+        .map(|_| {
+            let mut sub = rng.sample_indices(n, n - s);
+            sub.sort_unstable();
+            sub
+        })
+        .collect();
     {
         let mut code = GcCode::new(n, s, 7);
         let mut i = 0;

@@ -32,11 +32,11 @@ fn main() {
     let profile = DelayProfile {
         n: setup.n,
         base_load: 1.0 / setup.n as f64,
-        times: {
+        times: std::sync::Arc::new({
             // re-simulate the same rounds for per-worker times
             let mut c2 = setup.cluster(777);
             (0..t_probe).map(|_| c2.sample_round(&vec![1.0 / setup.n as f64; setup.n]).finish).collect()
-        },
+        }),
     };
     let alpha = cluster.latency.alpha_s_per_load;
     println!("probe phase: {t_probe} uncoded rounds in {probe_time:.1}s\n");

@@ -1,17 +1,30 @@
-//! Hot-path microbenchmarks (§Perf): GC decode solve (cold + cached),
-//! M-SGC assignment, conformance checking, fleet wire-codec
-//! encode/decode, one full simulated round, and the end-to-end
-//! Table-1-scale run.
+//! Hot-path microbenchmarks (§Perf): GC decode solve (cold + cached +
+//! shared plan cache), session round-engine throughput, Appendix-J
+//! grid-search throughput, M-SGC assignment, conformance checking, fleet
+//! wire-codec encode/decode, one full simulated round, and the
+//! end-to-end Table-1-scale run.
+//!
+//! Besides the usual per-label report this bench emits the repo-level
+//! `BENCH_3.json` snapshot (rounds/sec, grid-search speedup, decode-plan
+//! speedup) so the perf trajectory accumulates across PRs.
 
 use sgc::bench_harness::Bench;
 use sgc::cluster::SimCluster;
-use sgc::coding::{GcCode, MSgcParams, MSgcScheme, Scheme, SchemeConfig};
+use sgc::coding::{CodePlanCache, GcCode, MSgcParams, MSgcScheme, Scheme, SchemeConfig};
 use sgc::coordinator::{Master, RunConfig};
 use sgc::fleet::Frame;
+use sgc::probe::{estimate_runtime, grid_search, DelayProfile};
+use sgc::session::{RoundPlan, SessionConfig, SgcSession};
 use sgc::straggler::{GilbertElliot, ToleranceChecker};
 use sgc::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn mean_s(b: &Bench, name: &str) -> f64 {
+    b.result(name).map(|r| r.mean.as_secs_f64()).unwrap_or(f64::NAN)
+}
 
 fn main() {
+    let fast = std::env::var("SGC_BENCH_FAST").ok().as_deref() == Some("1");
     let mut b = Bench::new("microbench");
     b.header();
     let n = 256;
@@ -19,8 +32,14 @@ fn main() {
     // --- GC decode solve, cold vs cached --------------------------------
     let s = 15;
     let mut rng = Pcg32::seeded(42);
-    let subsets: Vec<Vec<usize>> =
-        (0..64).map(|_| rng.sample_indices(n, n - s)).collect();
+    // sorted: decode_coeffs keys the responder *set* (see plan_cache)
+    let subsets: Vec<Vec<usize>> = (0..64)
+        .map(|_| {
+            let mut sub = rng.sample_indices(n, n - s);
+            sub.sort_unstable();
+            sub
+        })
+        .collect();
     {
         let mut i = 0usize;
         let mut code = GcCode::new(n, s, 7);
@@ -44,11 +63,24 @@ fn main() {
             i += 1;
         });
     }
+    // shared process-wide plan cache: the per-session-free hit path
+    {
+        let plan = CodePlanCache::global().get(n, s);
+        for sub in &subsets {
+            plan.decode_coeffs(sub).unwrap();
+        }
+        let mut i = 0usize;
+        b.run("plan_cache_hit(n=256,s=15)", || {
+            let _ = plan.decode_coeffs(&subsets[i % subsets.len()]).unwrap();
+            i += 1;
+        });
+    }
     // larger code (M-SGC's λ=27)
     {
         let s2 = 27;
         let mut code = GcCode::new(n, s2, 9);
-        let sub = rng.sample_indices(n, n - s2);
+        let mut sub = rng.sample_indices(n, n - s2);
+        sub.sort_unstable();
         b.run("gc_decode_cold(n=256,s=27)", || {
             code = GcCode::new(n, s2, 9);
             let _ = code.decode_coeffs(&sub).unwrap();
@@ -60,15 +92,85 @@ fn main() {
         let _ = GcCode::new(n, s, 11);
     });
 
+    // --- session round-engine throughput ----------------------------------
+    // Pre-sampled completion times, so the measured body is exactly one
+    // begin_round_into + submit_all + close_round cycle of the
+    // allocation-free engine.
+    for (bench_n, bench_s) in [(64usize, 7usize), (256, 15)] {
+        let scheme = SchemeConfig::gc(bench_n, bench_s);
+        let cfg = SessionConfig { jobs: 4000, ..Default::default() };
+        let loads = vec![(bench_s + 1) as f64 / bench_n as f64; bench_n];
+        let mut cluster = SimCluster::from_gilbert_elliot(
+            bench_n,
+            GilbertElliot::default_fit(bench_n, 21),
+            22,
+        );
+        let rows: Vec<Vec<f64>> =
+            (0..64).map(|_| cluster.sample_round(&loads).finish).collect();
+        let mut session = SgcSession::new(&scheme, cfg.clone());
+        let mut plan = RoundPlan::default();
+        let mut i = 0usize;
+        b.run(&format!("session_round(n={bench_n},gc)"), || {
+            if session.is_complete() {
+                session = SgcSession::new(&scheme, cfg.clone());
+            }
+            session.begin_round_into(&mut plan);
+            session.submit_all(&rows[i % rows.len()]);
+            session.close_round();
+            i += 1;
+        });
+    }
+
+    // --- Appendix-J grid search: shared vs per-candidate rebuild ----------
+    // The shared path is `probe::grid_search`: one Arc-shared delay
+    // matrix, candidates fanned over the batch driver, GC code plans
+    // from the process-wide cache. The legacy arm emulates the
+    // pre-optimization shape: sequential candidates, a deep O(n×rounds)
+    // profile copy and a from-scratch GcCode construction per candidate.
+    {
+        let (gn, rounds, jobs, reps) = if fast { (64, 12, 10, 1) } else { (256, 40, 30, 3) };
+        let mut cluster =
+            SimCluster::from_gilbert_elliot(gn, GilbertElliot::default_fit(gn, 31), 32);
+        let profile = DelayProfile::capture(&mut cluster, rounds, 1.0 / gn as f64);
+        let alpha = 9.5;
+        let cands: Vec<SchemeConfig> =
+            (1..=8).map(|k| SchemeConfig::gc(gn, 2 * k)).collect();
+        let shared_name = format!("grid_search_shared(n={gn},{} cands)", cands.len());
+        let legacy_name = format!("grid_search_percand_rebuild(n={gn},{} cands)", cands.len());
+        b.run_n(&shared_name, reps, || {
+            let _ = grid_search(&cands, &profile, alpha, jobs);
+        });
+        b.run_n(&legacy_name, reps, || {
+            for c in &cands {
+                let deep = DelayProfile {
+                    n: profile.n,
+                    base_load: profile.base_load,
+                    times: Arc::new((*profile.times).clone()),
+                };
+                let s_of = match c.kind {
+                    sgc::coding::SchemeKind::Gc { s } => s,
+                    _ => unreachable!(),
+                };
+                // per-candidate code rebuild (what the shared plan cache
+                // eliminates)
+                let _ = GcCode::new(gn, s_of, 0xdec0de);
+                let _ = estimate_runtime(c, &deep, alpha, jobs);
+            }
+        });
+        let grid_speedup = mean_s(&b, &legacy_name) / mean_s(&b, &shared_name);
+        println!("  grid-search speedup (shared vs per-candidate rebuild): {grid_speedup:.1}x");
+    }
+
     // --- M-SGC assignment throughput -------------------------------------
     {
         let p = MSgcParams { n, b: 1, w: 2, lambda: 27 };
         let mut scheme = MSgcScheme::new(p, 100_000);
         let mut r = 0usize;
         let responded = vec![true; n];
+        let mut tasks = Vec::new();
         b.run("msgc_assign_commit_round(n=256)", || {
             r += 1;
-            scheme.assign_round(r);
+            scheme.assign_round_into(r, &mut tasks);
             scheme.commit_round(r, &responded);
         });
     }
@@ -151,4 +253,23 @@ fn main() {
     }
 
     b.save();
+
+    // --- BENCH_3.json perf snapshot ---------------------------------------
+    let grid_n = if fast { 64 } else { 256 };
+    let shared = mean_s(&b, &format!("grid_search_shared(n={grid_n},8 cands)"));
+    let legacy = mean_s(&b, &format!("grid_search_percand_rebuild(n={grid_n},8 cands)"));
+    let round64 = mean_s(&b, "session_round(n=64,gc)");
+    let round256 = mean_s(&b, "session_round(n=256,gc)");
+    let metrics = [
+        ("session_rounds_per_sec_n64", 1.0 / round64),
+        ("session_rounds_per_sec_n256", 1.0 / round256),
+        ("grid_search_shared_s", shared),
+        ("grid_search_percand_rebuild_s", legacy),
+        ("grid_search_speedup", legacy / shared),
+        (
+            "decode_plan_speedup_cold_vs_hit",
+            mean_s(&b, "gc_decode_cold(n=256,s=15)") / mean_s(&b, "plan_cache_hit(n=256,s=15)"),
+        ),
+    ];
+    b.save_snapshot("BENCH_3.json", &metrics);
 }

@@ -162,6 +162,32 @@ impl Bench {
         }
     }
 
+    /// Look a recorded result up by case name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Persist a machine-readable perf snapshot to a fixed `path` (e.g.
+    /// repo-level `BENCH_3.json`): every recorded case plus
+    /// caller-computed headline metrics. Unlike [`Self::save`] the path
+    /// is stable across bench labels, so successive PRs overwrite the
+    /// same file and the perf trajectory accumulates in version control.
+    pub fn save_snapshot(&self, path: &str, metrics: &[(&str, f64)]) {
+        let mut o = Json::obj();
+        o.set("label", self.label.as_str());
+        let mut m = Json::obj();
+        for (k, v) in metrics {
+            m.set(k, *v);
+        }
+        o.set("metrics", m);
+        o.set("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect()));
+        if let Err(e) = o.save(path) {
+            eprintln!("warning: could not save {path}: {e}");
+        } else {
+            println!("  (saved {path})");
+        }
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

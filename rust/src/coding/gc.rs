@@ -7,8 +7,10 @@
 //!   decoder that finds `β` with `Σ_w β_w B[w,:] = 1ᵀ` for any responding
 //!   set of ≥ `n-s` workers. Decoding solves the consistent system via
 //!   normal equations (see [`crate::util::linalg`]); coefficients are
-//!   memoized per straggler pattern, which is the L3 hot-path optimization
-//!   the §Perf pass measures.
+//!   memoized per straggler pattern behind a fixed-width responder
+//!   bitmask, which is the L3 hot-path optimization the §Perf pass
+//!   measures. For a cache *shared across sessions* see
+//!   [`crate::coding::CodePlanCache`].
 //! * [`GcScheme`] — GC applied to the sequential setting (delay `T = 0`,
 //!   every worker computes `ℓ_i(t)` in round `t`).
 //!
@@ -17,15 +19,83 @@
 //! group replicates the plain sum of its `s+1` chunks, so decode is the
 //! trivial sum of one response per group.
 
-use super::scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use super::scheme::{fill_tasks, JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
 use crate::util::linalg::{self, Matrix};
 use crate::util::rng::Pcg32;
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// The cyclic support `[i : i+s]* = {i mod n, …, (i+s) mod n}`.
 pub fn cyclic_support(i: usize, s: usize, n: usize) -> Vec<usize> {
     (0..=s).map(|k| (i + k) % n).collect()
+}
+
+/// Fixed-width responder bitmask: bit `w` set ⇔ worker `w` responded.
+/// Covers the paper's maximum cluster size (`n ≤ 256`) without heap
+/// allocation, so cache lookups on the decode hot path never allocate.
+pub type ResponderMask = [u64; 4];
+
+/// Largest cluster size the fixed-width [`ResponderMask`] covers —
+/// decode-coefficient *memoization* is limited to codes this size;
+/// larger codes still decode, paying a fresh solve per call.
+pub const MAX_MEMOIZED_WORKERS: usize = 256;
+
+/// Build the fixed-width bitmask key for a responder set (all ids < 256).
+#[inline]
+pub fn responder_mask(workers: &[usize]) -> ResponderMask {
+    let mut mask = [0u64; 4];
+    for &w in workers {
+        debug_assert!(w < MAX_MEMOIZED_WORKERS);
+        mask[w >> 6] |= 1 << (w & 63);
+    }
+    mask
+}
+
+/// Solve for decode coefficients over the given rows of `b`: `β` with
+/// `Σ_k β_k b[used[k],:] = 1ᵀ`, aligned with `used`. Normal equations +
+/// iterative refinement (see [`GcCode::decode_coeffs`]); `None` when the
+/// subset is numerically undecodable. Shared by the per-instance
+/// [`GcCode`] cache and the process-wide
+/// [`CodePlan`](crate::coding::CodePlan).
+pub(crate) fn solve_decode_coeffs(b: &Matrix, used: &[usize]) -> Option<Vec<f64>> {
+    let k = used.len();
+    let n = b.cols;
+    let mut a = Matrix::zeros(k, n);
+    for (r, &w) in used.iter().enumerate() {
+        a.row_mut(r).copy_from_slice(b.row(w));
+    }
+    let ones = vec![1.0; n];
+    // Normal equations + iterative-refinement sweeps: the Gram matrix
+    // squares the conditioning, refinement recovers the lost digits
+    // (worst-case residual ~1e-10 at n=256 in calibration). The factor
+    // and solve scratch live in caller-owned buffers reused across the
+    // refinement sweeps.
+    let gram = a.gram_rows();
+    let mut l = Matrix::zeros(k, k);
+    if !linalg::cholesky_into(&gram, &mut l) {
+        return None;
+    }
+    let mut y = Vec::with_capacity(k);
+    let mut x = Vec::with_capacity(k);
+    linalg::cholesky_solve_into(&l, &a.matvec(&ones), &mut y, &mut x);
+    let mut dx = Vec::with_capacity(k);
+    for _ in 0..8 {
+        if linalg::residual_inf(&a, &x, &ones) <= 1e-8 {
+            break;
+        }
+        let atx = a.tr_matvec(&x);
+        let resid: Vec<f64> = ones.iter().zip(&atx).map(|(o, v)| o - v).collect();
+        linalg::cholesky_solve_into(&l, &a.matvec(&resid), &mut y, &mut dx);
+        for (xi, di) in x.iter_mut().zip(&dx) {
+            *xi += di;
+        }
+    }
+    if linalg::residual_inf(&a, &x, &ones) > 1e-5 {
+        return None;
+    }
+    Some(x)
 }
 
 /// Numeric `(n, s)`-GC code.
@@ -35,8 +105,15 @@ pub struct GcCode {
     pub s: usize,
     /// Dense `n × n` coefficient matrix with cyclic support.
     pub b: Matrix,
-    /// Decode coefficient cache keyed by the responder bitmask (as bytes).
-    cache: HashMap<Vec<u64>, Vec<f64>>,
+    /// Decode coefficient cache keyed by the fixed-width responder
+    /// bitmask (`n ≤ 256` only). Values have length `n - s`, aligned
+    /// with the first `n - s` responders handed to
+    /// [`Self::decode_coeffs`].
+    cache: HashMap<ResponderMask, Vec<f64>>,
+    /// Result slot for unmemoized solves (`n > 256`, beyond the
+    /// fixed-width mask): reused per call so the borrowed-return API is
+    /// uniform.
+    spill: Vec<f64>,
 }
 
 impl GcCode {
@@ -56,7 +133,7 @@ impl GcCode {
             for i in 0..n {
                 b[(i, i)] = 1.0;
             }
-            return GcCode { n, s, b, cache: HashMap::new() };
+            return GcCode { n, s, b, cache: HashMap::new(), spill: Vec::new() };
         }
         // H with columns summing to zero: H·1 = 0.
         let mut h = Matrix::zeros(s, n);
@@ -97,102 +174,110 @@ impl GcCode {
                 *v /= norm;
             }
         }
-        GcCode { n, s, b, cache: HashMap::new() }
+        GcCode { n, s, b, cache: HashMap::new(), spill: Vec::new() }
     }
 
     /// Encode: combine the `s+1` partial-gradient vectors computed by
     /// worker `row` into the single task result `ℓ_row`.
     ///
-    /// `partials[k]` is the gradient w.r.t. chunk `support[k]`.
+    /// `partials[k]` is the gradient w.r.t. chunk `(row + k) mod n` (the
+    /// cyclic support, in order).
     pub fn encode(&self, row: usize, partials: &[&[f32]]) -> Vec<f32> {
-        let support = cyclic_support(row, self.s, self.n);
-        assert_eq!(partials.len(), support.len());
-        let dim = partials[0].len();
-        let mut out = vec![0.0f32; dim];
-        for (k, &chunk) in support.iter().enumerate() {
-            let alpha = self.b[(row, chunk)] as f32;
-            debug_assert_eq!(partials[k].len(), dim);
-            for (o, &g) in out.iter_mut().zip(partials[k]) {
-                *o += alpha * g;
-            }
-        }
+        let mut out = Vec::new();
+        self.encode_into(row, partials, &mut out);
         out
     }
 
+    /// [`Self::encode`] into a caller-owned buffer (cleared, zero-filled,
+    /// accumulated via the chunked [`linalg::axpy_f32`] kernel).
+    pub fn encode_into(&self, row: usize, partials: &[&[f32]], out: &mut Vec<f32>) {
+        assert_eq!(partials.len(), self.s + 1);
+        let dim = partials[0].len();
+        out.clear();
+        out.resize(dim, 0.0);
+        for (k, part) in partials.iter().enumerate() {
+            let chunk = (row + k) % self.n;
+            let alpha = self.b[(row, chunk)] as f32;
+            debug_assert_eq!(part.len(), dim);
+            linalg::axpy_f32(out, alpha, part);
+        }
+    }
+
     /// Decode coefficients for a responder set: `β` such that
-    /// `Σ_{w ∈ workers} β_w B[w,:] = 1ᵀ`. Returns `None` if the set is too
-    /// small or (numerically) undecodable.
+    /// `Σ_k β_k B[workers[k],:] = 1ᵀ` over the first `n - s` responders
+    /// (the code's decode threshold; further responders carry implicit
+    /// coefficient 0). Returns `None` if the set is too small or
+    /// (numerically) undecodable.
     ///
-    /// Results are memoized: round-over-round straggler patterns repeat
-    /// heavily (GE model dwell times), so the cache hit rate in long runs
-    /// is high — see EXPERIMENTS.md §Perf.
-    pub fn decode_coeffs(&mut self, workers: &[usize]) -> Option<Vec<f64>> {
+    /// Results are memoized per responder set: round-over-round straggler
+    /// patterns repeat heavily (GE model dwell times), so the cache hit
+    /// rate in long runs is high — see EXPERIMENTS.md §Perf. The returned
+    /// slice borrows the cache entry directly; a hit performs no heap
+    /// allocation (the key is a stack-resident [`ResponderMask`]).
+    /// Memoization only applies up to [`MAX_MEMOIZED_WORKERS`]; larger
+    /// codes pay a fresh solve per call but never fail on size.
+    pub fn decode_coeffs(&mut self, workers: &[usize]) -> Option<&[f64]> {
         let k = self.n - self.s;
         if workers.len() < k {
             return None;
         }
         // Rows all lie in the (n-s)-dimensional null(H): use exactly n-s
         // of them (more would make the Gram matrix singular); the
-        // returned β is aligned with `workers`, zero beyond the first k.
+        // returned β is aligned with `workers[..n-s]`.
         let used = &workers[..k];
-        let key = bitmask(used, self.n);
-        if let Some(c) = self.cache.get(&key) {
-            let mut full = c.clone();
-            full.resize(workers.len(), 0.0);
-            return Some(full);
+        if self.n > MAX_MEMOIZED_WORKERS {
+            // Beyond the fixed-width mask: solve without memoizing.
+            self.spill = solve_decode_coeffs(&self.b, used)?;
+            return Some(&self.spill);
         }
-        let rows: Vec<Vec<f64>> = used.iter().map(|&w| self.b.row(w).to_vec()).collect();
-        let a = Matrix::from_rows(&rows);
-        let ones = vec![1.0; self.n];
-        // Normal equations + two iterative-refinement sweeps: the Gram
-        // matrix squares the conditioning, refinement recovers the lost
-        // digits (worst-case residual ~1e-10 at n=256 in calibration).
-        let gram = a.gram_rows();
-        let l = linalg::cholesky(&gram)?;
-        let mut x = linalg::cholesky_solve(&l, &a.matvec(&ones));
-        // Iterative refinement until the residual converges (usually 2
-        // sweeps; ill-conditioned subsets occasionally need a few more).
-        for _ in 0..8 {
-            if linalg::residual_inf(&a, &x, &ones) <= 1e-8 {
-                break;
-            }
-            let atx = a.tr_matvec(&x);
-            let resid: Vec<f64> = ones.iter().zip(&atx).map(|(o, v)| o - v).collect();
-            let dx = linalg::cholesky_solve(&l, &a.matvec(&resid));
-            for (xi, di) in x.iter_mut().zip(&dx) {
-                *xi += di;
+        debug_assert!(
+            used.windows(2).all(|w| w[0] < w[1]),
+            "decode_coeffs requires sorted responder ids (β is set-keyed)"
+        );
+        match self.cache.entry(responder_mask(used)) {
+            std::collections::hash_map::Entry::Occupied(e) => Some(e.into_mut().as_slice()),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let x = solve_decode_coeffs(&self.b, used)?;
+                Some(e.insert(x).as_slice())
             }
         }
-        if linalg::residual_inf(&a, &x, &ones) > 1e-5 {
-            return None;
-        }
-        self.cache.insert(key, x.clone());
-        let mut full = x;
-        full.resize(workers.len(), 0.0);
-        Some(full)
     }
 
     /// Decode: combine received `ℓ` vectors into the full gradient
     /// `g = Σ_j g_j`.
     pub fn decode(&mut self, workers: &[usize], results: &[&[f32]]) -> Option<Vec<f32>> {
         assert_eq!(workers.len(), results.len());
-        let beta = self.decode_coeffs(workers)?;
-        let dim = results[0].len();
-        let mut out = vec![0.0f32; dim];
-        for (k, r) in results.iter().enumerate() {
-            let b = beta[k] as f32;
-            for (o, &v) in out.iter_mut().zip(*r) {
-                *o += b * v;
-            }
+        if workers.len() < self.n - self.s {
+            return None; // too few responders (also covers empty input)
         }
+        let mut out = vec![0.0f32; results[0].len()];
+        self.decode_into(workers, results, &mut out)?;
         Some(out)
+    }
+
+    /// [`Self::decode`] accumulating into a caller-owned (zeroed) buffer
+    /// via the chunked [`linalg::axpy_f32`] kernel.
+    pub fn decode_into(
+        &mut self,
+        workers: &[usize],
+        results: &[&[f32]],
+        out: &mut [f32],
+    ) -> Option<()> {
+        assert_eq!(workers.len(), results.len());
+        let beta = self.decode_coeffs(workers)?;
+        // β covers the first n-s responders; the rest have coefficient 0.
+        for (b, r) in beta.iter().zip(results) {
+            linalg::axpy_f32(out, *b as f32, r);
+        }
+        Some(())
     }
 
     /// Spot-check decodability over `trials` random `(n-s)`-subsets.
     pub fn verify_random_subsets(&mut self, trials: usize, seed: u64) -> bool {
         let mut rng = Pcg32::new(seed, 0xc3ec);
         for _ in 0..trials {
-            let subset = rng.sample_indices(self.n, self.n - self.s);
+            let mut subset = rng.sample_indices(self.n, self.n - self.s);
+            subset.sort_unstable();
             if self.decode_coeffs(&subset).is_none() {
                 return false;
             }
@@ -206,29 +291,33 @@ impl GcCode {
     }
 }
 
-fn bitmask(workers: &[usize], n: usize) -> Vec<u64> {
-    let mut mask = vec![0u64; n.div_ceil(64)];
-    for &w in workers {
-        mask[w / 64] |= 1 << (w % 64);
-    }
-    mask
-}
-
 /// `(n, s)`-GC in the sequential setting: `T = 0`, `η = n` equal chunks,
 /// worker `i` stores chunks `[i : i+s]*` and returns `ℓ_i(t)` in round `t`.
+///
+/// Round `r`'s tasks all serve job `r`, so the scheme keeps no per-round
+/// task storage: `commit_round` and `decodable_with` reconstruct the
+/// deliveries directly from the responder set (§Perf).
 pub struct GcScheme {
     spec: SchemeSpec,
-    s: usize,
     jobs: usize,
     /// Ledger per job (index `t-1`).
     ledgers: Vec<JobLedger>,
-    assigned: Vec<Vec<TaskDesc>>, // per committed/assigned round (index r-1)
+    /// Cyclic support per worker, shared (refcounted) into every round's
+    /// coded units.
+    supports: Vec<Arc<[usize]>>,
+    assigned: usize,
     committed: usize,
+    /// Reusable `decodable_with` ledger (replaces `JobLedger::clone`).
+    scratch: RefCell<JobLedger>,
 }
 
 impl GcScheme {
     pub fn new(n: usize, s: usize, jobs: usize) -> Self {
         assert!(s < n);
+        // One computation of the cyclic supports backs both the spec's
+        // placement and the shared per-round chunk lists.
+        let supports: Vec<Arc<[usize]>> =
+            (0..n).map(|i| cyclic_support(i, s, n).into()).collect();
         let spec = SchemeSpec {
             name: format!("gc(n={n},s={s})"),
             n,
@@ -236,30 +325,26 @@ impl GcScheme {
             load: (s + 1) as f64 / n as f64,
             num_chunks: n,
             chunk_sizes: vec![1.0 / n as f64; n],
-            placement: (0..n).map(|i| cyclic_support(i, s, n)).collect(),
+            placement: supports.iter().map(|c| c.to_vec()).collect(),
             tolerance: ToleranceSpec::PerRound { s },
         };
         let ledgers = (0..jobs)
             .map(|_| JobLedger {
                 plain_missing: HashSet::new(),
-                coded_got: vec![HashSet::new()],
+                // preallocated for all n possible responders so the
+                // steady-state commit path never grows the table
+                coded_got: vec![HashSet::with_capacity(n)],
                 coded_need: vec![n - s],
             })
             .collect();
-        GcScheme { spec, s, jobs, ledgers, assigned: Vec::new(), committed: 0 }
-    }
-
-    fn task_for(&self, worker: usize, job: usize) -> TaskDesc {
-        if job < 1 || job > self.jobs {
-            return TaskDesc::noop();
-        }
-        TaskDesc {
-            units: vec![WorkUnit::Coded {
-                job,
-                group: 0,
-                row: worker,
-                chunks: cyclic_support(worker, self.s, self.spec.n),
-            }],
+        GcScheme {
+            spec,
+            jobs,
+            ledgers,
+            supports,
+            assigned: 0,
+            committed: 0,
+            scratch: RefCell::new(JobLedger::empty()),
         }
     }
 }
@@ -273,31 +358,33 @@ impl Scheme for GcScheme {
         self.jobs
     }
 
-    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
-        assert_eq!(r, self.assigned.len() + 1, "rounds must be assigned in order");
-        assert_eq!(self.committed, self.assigned.len(), "previous round not committed");
-        let tasks: Vec<TaskDesc> = (0..self.spec.n).map(|i| self.task_for(i, r)).collect();
-        self.assigned.push(tasks.clone());
-        tasks
+    fn assign_round_into(&mut self, r: usize, out: &mut Vec<TaskDesc>) {
+        assert_eq!(r, self.assigned + 1, "rounds must be assigned in order");
+        assert_eq!(self.committed, self.assigned, "previous round not committed");
+        let in_range = r >= 1 && r <= self.jobs;
+        let supports = &self.supports;
+        fill_tasks(out, self.spec.n, |i, task| {
+            task.units.push(if in_range {
+                WorkUnit::Coded { job: r, group: 0, row: i, chunks: Arc::clone(&supports[i]) }
+            } else {
+                WorkUnit::Noop
+            });
+        });
+        self.assigned = r;
     }
 
     fn commit_round(&mut self, r: usize, responded: &[bool]) {
         assert_eq!(r, self.committed + 1);
+        assert_eq!(r, self.assigned, "round not assigned");
         assert_eq!(responded.len(), self.spec.n);
-        let tasks = &self.assigned[r - 1];
-        for (w, task) in tasks.iter().enumerate() {
-            if !responded[w] {
-                continue;
-            }
-            for unit in &task.units {
-                if let Some(job) = unit.job() {
-                    self.ledgers[job - 1].deliver(w, unit);
+        if r >= 1 && r <= self.jobs {
+            let got = &mut self.ledgers[r - 1].coded_got[0];
+            for (w, &ok) in responded.iter().enumerate() {
+                if ok {
+                    got.insert(w);
                 }
             }
         }
-        // Committed rounds are never read again — drop their task
-        // storage so long runs stay O(window), not O(rounds).
-        self.assigned[r - 1] = Vec::new();
         self.committed = r;
     }
 
@@ -311,18 +398,18 @@ impl Scheme for GcScheme {
 
     fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
         debug_assert_eq!(r, self.committed + 1);
-        let mut ledger = self.ledgers[job - 1].clone();
-        for (w, task) in self.assigned[r - 1].iter().enumerate() {
-            if !responded[w] {
-                continue;
-            }
-            for unit in &task.units {
-                if unit.job() == Some(job) {
-                    ledger.deliver(w, unit);
+        debug_assert_eq!(r, self.assigned);
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.copy_into_from(&self.ledgers[job - 1]);
+        // Round r's units all serve job r.
+        if job == r && r <= self.jobs {
+            for (w, &ok) in responded.iter().enumerate() {
+                if ok {
+                    scratch.coded_got[0].insert(w);
                 }
             }
         }
-        ledger.complete()
+        scratch.complete()
     }
 }
 
@@ -334,8 +421,11 @@ pub struct GcRepScheme {
     s: usize,
     jobs: usize,
     ledgers: Vec<JobLedger>,
-    assigned: Vec<Vec<TaskDesc>>,
+    /// Chunk list per replication group, shared into the coded units.
+    group_chunks: Vec<Arc<[usize]>>,
+    assigned: usize,
     committed: usize,
+    scratch: RefCell<JobLedger>,
 }
 
 impl GcRepScheme {
@@ -343,6 +433,8 @@ impl GcRepScheme {
         assert!(s < n);
         assert_eq!(n % (s + 1), 0, "GC-Rep needs (s+1) | n");
         let groups = n / (s + 1);
+        let group_chunks: Vec<Arc<[usize]>> =
+            (0..groups).map(|g| Self::group_chunk_ids(g, s).into()).collect();
         let spec = SchemeSpec {
             name: format!("gc-rep(n={n},s={s})"),
             n,
@@ -350,42 +442,37 @@ impl GcRepScheme {
             load: (s + 1) as f64 / n as f64,
             num_chunks: n,
             chunk_sizes: vec![1.0 / n as f64; n],
-            placement: (0..n).map(|i| Self::group_chunks(i / (s + 1), s)).collect(),
+            placement: (0..n).map(|i| group_chunks[i / (s + 1)].to_vec()).collect(),
             tolerance: ToleranceSpec::PerRound { s },
         };
         let ledgers = (0..jobs)
             .map(|_| JobLedger {
                 plain_missing: HashSet::new(),
-                // one coded "replication group" per worker group, threshold 1
-                coded_got: vec![HashSet::new(); groups],
+                // one coded "replication group" per worker group, threshold
+                // 1; all s+1 members may respond, so preallocate for them
+                coded_got: vec![HashSet::with_capacity(s + 1); groups],
                 coded_need: vec![1; groups],
             })
             .collect();
-        GcRepScheme { spec, s, jobs, ledgers, assigned: Vec::new(), committed: 0 }
+        GcRepScheme {
+            spec,
+            s,
+            jobs,
+            ledgers,
+            group_chunks,
+            assigned: 0,
+            committed: 0,
+            scratch: RefCell::new(JobLedger::empty()),
+        }
     }
 
-    fn group_chunks(g: usize, s: usize) -> Vec<usize> {
+    fn group_chunk_ids(g: usize, s: usize) -> Vec<usize> {
         (g * (s + 1)..(g + 1) * (s + 1)).collect()
     }
 
     /// Group of a worker.
     pub fn group_of(&self, worker: usize) -> usize {
         worker / (self.s + 1)
-    }
-
-    fn task_for(&self, worker: usize, job: usize) -> TaskDesc {
-        if job < 1 || job > self.jobs {
-            return TaskDesc::noop();
-        }
-        let g = worker / (self.s + 1);
-        TaskDesc {
-            units: vec![WorkUnit::Coded {
-                job,
-                group: g,
-                row: worker,
-                chunks: Self::group_chunks(g, self.s),
-            }],
-        }
     }
 }
 
@@ -398,29 +485,40 @@ impl Scheme for GcRepScheme {
         self.jobs
     }
 
-    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
-        assert_eq!(r, self.assigned.len() + 1);
-        assert_eq!(self.committed, self.assigned.len());
-        let tasks: Vec<TaskDesc> = (0..self.spec.n).map(|i| self.task_for(i, r)).collect();
-        self.assigned.push(tasks.clone());
-        tasks
+    fn assign_round_into(&mut self, r: usize, out: &mut Vec<TaskDesc>) {
+        assert_eq!(r, self.assigned + 1, "rounds must be assigned in order");
+        assert_eq!(self.committed, self.assigned, "previous round not committed");
+        let in_range = r >= 1 && r <= self.jobs;
+        let s = self.s;
+        let group_chunks = &self.group_chunks;
+        fill_tasks(out, self.spec.n, |i, task| {
+            task.units.push(if in_range {
+                let g = i / (s + 1);
+                WorkUnit::Coded {
+                    job: r,
+                    group: g,
+                    row: i,
+                    chunks: Arc::clone(&group_chunks[g]),
+                }
+            } else {
+                WorkUnit::Noop
+            });
+        });
+        self.assigned = r;
     }
 
     fn commit_round(&mut self, r: usize, responded: &[bool]) {
         assert_eq!(r, self.committed + 1);
-        for (w, task) in self.assigned[r - 1].iter().enumerate() {
-            if !responded[w] {
-                continue;
-            }
-            for unit in &task.units {
-                if let Some(job) = unit.job() {
-                    self.ledgers[job - 1].deliver(w, unit);
+        assert_eq!(r, self.assigned, "round not assigned");
+        assert_eq!(responded.len(), self.spec.n);
+        if r >= 1 && r <= self.jobs {
+            let ledger = &mut self.ledgers[r - 1];
+            for (w, &ok) in responded.iter().enumerate() {
+                if ok {
+                    ledger.coded_got[w / (self.s + 1)].insert(w);
                 }
             }
         }
-        // Committed rounds are never read again — drop their task
-        // storage so long runs stay O(window), not O(rounds).
-        self.assigned[r - 1] = Vec::new();
         self.committed = r;
     }
 
@@ -434,18 +532,17 @@ impl Scheme for GcRepScheme {
 
     fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
         debug_assert_eq!(r, self.committed + 1);
-        let mut ledger = self.ledgers[job - 1].clone();
-        for (w, task) in self.assigned[r - 1].iter().enumerate() {
-            if !responded[w] {
-                continue;
-            }
-            for unit in &task.units {
-                if unit.job() == Some(job) {
-                    ledger.deliver(w, unit);
+        debug_assert_eq!(r, self.assigned);
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.copy_into_from(&self.ledgers[job - 1]);
+        if job == r && r <= self.jobs {
+            for (w, &ok) in responded.iter().enumerate() {
+                if ok {
+                    scratch.coded_got[w / (self.s + 1)].insert(w);
                 }
             }
         }
-        ledger.complete()
+        scratch.complete()
     }
 }
 
@@ -458,6 +555,16 @@ mod tests {
     fn cyclic_support_wraps() {
         assert_eq!(cyclic_support(4, 2, 6), vec![4, 5, 0]);
         assert_eq!(cyclic_support(0, 0, 3), vec![0]);
+    }
+
+    #[test]
+    fn responder_mask_is_order_independent() {
+        assert_eq!(responder_mask(&[0, 63, 64, 255]), responder_mask(&[255, 64, 0, 63]));
+        assert_ne!(responder_mask(&[0, 1]), responder_mask(&[0, 2]));
+        let m = responder_mask(&[5, 70, 200]);
+        assert_eq!(m[0], 1 << 5);
+        assert_eq!(m[1], 1 << 6);
+        assert_eq!(m[3], 1 << (200 - 192));
     }
 
     #[test]
@@ -523,6 +630,22 @@ mod tests {
     }
 
     #[test]
+    fn decode_beyond_mask_width_still_solves() {
+        // n > 256 is outside the fixed-width memoization mask: decodes
+        // must still succeed (fresh solve per call, nothing cached).
+        let n = 260;
+        let s = 2;
+        let mut code = GcCode::new(n, s, 13);
+        let workers: Vec<usize> = (s..n).collect(); // workers 2..260 respond
+        let beta = code.decode_coeffs(&workers).expect("decodable").to_vec();
+        assert_eq!(beta.len(), n - s);
+        assert_eq!(code.cache_len(), 0, "oversized codes must not populate the mask cache");
+        // repeat solve is identical
+        let again = code.decode_coeffs(&workers).unwrap();
+        assert_eq!(beta, again);
+    }
+
+    #[test]
     fn decode_cache_hits() {
         let mut code = GcCode::new(12, 3, 5);
         let w: Vec<usize> = (0..9).collect();
@@ -558,6 +681,34 @@ mod tests {
         assert!(!sch.decodable_with(1, 1, &responded));
         sch.commit_round(1, &responded);
         assert!(!sch.decodable(1));
+    }
+
+    #[test]
+    fn gc_scheme_assign_reuses_buffers() {
+        let n = 4;
+        let mut sch = GcScheme::new(n, 1, 3);
+        let mut buf = Vec::new();
+        sch.assign_round_into(1, &mut buf);
+        assert_eq!(buf.len(), n);
+        let chunk_ptrs: Vec<*const usize> = buf
+            .iter()
+            .map(|t| match &t.units[0] {
+                WorkUnit::Coded { chunks, .. } => chunks.as_ptr(),
+                other => panic!("expected coded unit, got {other:?}"),
+            })
+            .collect();
+        sch.commit_round(1, &[true; 4]);
+        sch.assign_round_into(2, &mut buf);
+        // the chunk slices are the same shared allocations round over round
+        for (t, &p) in buf.iter().zip(&chunk_ptrs) {
+            match &t.units[0] {
+                WorkUnit::Coded { job, chunks, .. } => {
+                    assert_eq!(*job, 2);
+                    assert_eq!(chunks.as_ptr(), p);
+                }
+                other => panic!("expected coded unit, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -19,10 +19,18 @@
 //!
 //! `λ = n` (Remark 3.2) degenerates to `D2 = ∅` with all-plain mini-tasks.
 //! `(λ+1) | n` enables the GC-Rep base for D2 (Appendix G, "M-SGC-Rep").
+//!
+//! A round's mini-tasks are a pure function of the round index and the
+//! pending-failure state at assignment time — and each `(worker, slot)`
+//! cell touches only its own job's state — so the scheme stores no
+//! `TaskDesc`s: `commit_round` and `decodable_with` re-derive each unit
+//! through [`MSgcScheme::unit_kind`] (§Perf).
 
 use super::gc::cyclic_support;
-use super::scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use super::scheme::{fill_tasks, JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use std::cell::RefCell;
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// M-SGC design parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,6 +63,15 @@ impl MSgcParams {
     }
 }
 
+/// What one mini-task does, without the chunk list — the compact form
+/// `commit_round`/`decodable_with` re-derive deliveries from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum UnitKind {
+    Noop,
+    Plain { job: usize, chunk: usize },
+    Coded { job: usize, group: usize },
+}
+
 /// M-SGC scheme state (also M-SGC-Rep when `rep`).
 pub struct MSgcScheme {
     spec: SchemeSpec,
@@ -69,11 +86,14 @@ pub struct MSgcScheme {
     /// Pending failed D1 chunks per job (index `t-1`) per worker, oldest
     /// first. Only populated for jobs whose window is active.
     failed_d1: Vec<Vec<Vec<usize>>>,
-    /// Precomputed D2 chunk lists, indexed `m * n + worker` (§Perf:
-    /// rebuilding these per round dominated `assign_round`).
-    d2_table: Vec<Vec<usize>>,
-    assigned: Vec<Vec<TaskDesc>>,
+    /// Precomputed D2 chunk lists, indexed `m * n + worker`, shared
+    /// (refcounted) into every round's coded units (§Perf: rebuilding
+    /// these per round dominated `assign_round`).
+    d2_table: Vec<Arc<[usize]>>,
+    assigned: usize,
     committed: usize,
+    /// Reusable `decodable_with` ledger (replaces `JobLedger::clone`).
+    scratch: RefCell<JobLedger>,
 }
 
 impl MSgcScheme {
@@ -137,6 +157,9 @@ impl MSgcScheme {
         let ledgers = (0..jobs)
             .map(|_| JobLedger {
                 plain_missing: (0..d1_chunks).collect(),
+                // not preallocated: M-SGC instances are built for very
+                // large J (the assignment microbench uses 100k jobs) and
+                // only window-active jobs ever receive coded deliveries
                 coded_got: if coded {
                     vec![HashSet::new(); b * rep_groups]
                 } else {
@@ -162,12 +185,13 @@ impl MSgcScheme {
             ledgers,
             failed_d1: vec![vec![Vec::new(); n]; jobs],
             d2_table: Self::build_d2_table(&params, rep),
-            assigned: Vec::new(),
+            assigned: 0,
             committed: 0,
+            scratch: RefCell::new(JobLedger::empty()),
         }
     }
 
-    fn build_d2_table(params: &MSgcParams, rep: bool) -> Vec<Vec<usize>> {
+    fn build_d2_table(params: &MSgcParams, rep: bool) -> Vec<Arc<[usize]>> {
         let (n, b, w, lambda) = (params.n, params.b, params.w, params.lambda);
         if lambda >= n {
             return Vec::new();
@@ -182,7 +206,7 @@ impl MSgcScheme {
                 } else {
                     cyclic_support(worker, lambda, n).into_iter().map(|k| base + k).collect()
                 };
-                table.push(chunks);
+                table.push(chunks.into());
             }
         }
         table
@@ -202,38 +226,48 @@ impl MSgcScheme {
         }
     }
 
-    /// D2 chunks of group `m` held by worker `i` (precomputed).
-    fn d2_chunks(&self, m: usize, worker: usize) -> Vec<usize> {
-        self.d2_table[m * self.spec.n + worker].clone()
-    }
-
-    /// Build the mini-task for worker `i`, round `r`, slot `j`
-    /// (Algorithm 2).
-    fn unit_for(&self, worker: usize, r: usize, slot: usize) -> WorkUnit {
+    /// The compact mini-task for worker `i`, round `r`, slot `j`
+    /// (Algorithm 2). Depends only on the round index and the worker's
+    /// pending-failure list for job `r - j` — each `(worker, slot)` cell
+    /// reads exactly the state its own commit step mutates, which is what
+    /// makes re-derivation at commit time sound.
+    fn unit_kind(&self, worker: usize, r: usize, slot: usize) -> UnitKind {
         let t = r as isize - slot as isize;
         if t < 1 || t as usize > self.jobs {
-            return WorkUnit::Noop;
+            return UnitKind::Noop;
         }
         let t = t as usize;
         let w = self.params.w;
         if slot < w - 1 {
             // First attempt of D1 partial g_{i(W-1)+slot}(t).
-            WorkUnit::Plain { job: t, chunk: worker * (w - 1) + slot }
+            UnitKind::Plain { job: t, chunk: worker * (w - 1) + slot }
         } else {
             let m = slot - (w - 1);
-            let pending = &self.failed_d1[t - 1][worker];
-            if let Some(&chunk) = pending.first() {
+            if let Some(&chunk) = self.failed_d1[t - 1][worker].first() {
                 // Re-attempt the oldest failed D1 partial for job t.
-                WorkUnit::Plain { job: t, chunk }
+                UnitKind::Plain { job: t, chunk }
             } else if self.params.lambda < self.spec.n {
-                WorkUnit::Coded {
-                    job: t,
-                    group: self.ledger_group(m, worker),
-                    row: worker,
-                    chunks: self.d2_chunks(m, worker),
-                }
+                UnitKind::Coded { job: t, group: self.ledger_group(m, worker) }
             } else {
-                WorkUnit::Noop // Remark 3.2: trivial partial gradients
+                UnitKind::Noop // Remark 3.2: trivial partial gradients
+            }
+        }
+    }
+
+    /// Build the full mini-task (with its shared chunk list) for worker
+    /// `i`, round `r`, slot `j`.
+    fn unit_for(&self, worker: usize, r: usize, slot: usize) -> WorkUnit {
+        match self.unit_kind(worker, r, slot) {
+            UnitKind::Noop => WorkUnit::Noop,
+            UnitKind::Plain { job, chunk } => WorkUnit::Plain { job, chunk },
+            UnitKind::Coded { job, group } => {
+                let m = slot - (self.params.w - 1);
+                WorkUnit::Coded {
+                    job,
+                    group,
+                    row: worker,
+                    chunks: Arc::clone(&self.d2_table[m * self.spec.n + worker]),
+                }
             }
         }
     }
@@ -248,43 +282,54 @@ impl Scheme for MSgcScheme {
         self.jobs
     }
 
-    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
-        assert_eq!(r, self.assigned.len() + 1, "rounds must be assigned in order");
-        assert_eq!(self.committed, self.assigned.len(), "previous round not committed");
+    fn assign_round_into(&mut self, r: usize, out: &mut Vec<TaskDesc>) {
+        assert_eq!(r, self.assigned + 1, "rounds must be assigned in order");
+        assert_eq!(self.committed, self.assigned, "previous round not committed");
         let slots = self.params.w - 1 + self.params.b;
-        let tasks: Vec<TaskDesc> = (0..self.spec.n)
-            .map(|i| TaskDesc {
-                units: (0..slots).map(|j| self.unit_for(i, r, j)).collect(),
-            })
-            .collect();
-        self.assigned.push(tasks.clone());
-        tasks
+        // `fill_tasks` needs `&mut out` alongside reads of `self`; the
+        // shared-borrow closure only consults immutable scheme state.
+        let this = &*self;
+        fill_tasks(out, self.spec.n, |i, task| {
+            for j in 0..slots {
+                task.units.push(this.unit_for(i, r, j));
+            }
+        });
+        self.assigned = r;
     }
 
     fn commit_round(&mut self, r: usize, responded: &[bool]) {
         assert_eq!(r, self.committed + 1);
+        assert_eq!(r, self.assigned, "round not assigned");
         assert_eq!(responded.len(), self.spec.n);
         let w = self.params.w;
-        // Take (not clone) the round's tasks: committed rounds are never
-        // read again, so this both avoids the copy and prunes history.
-        let tasks = std::mem::take(&mut self.assigned[r - 1]);
-        for (i, task) in tasks.iter().enumerate() {
-            for (slot, unit) in task.units.iter().enumerate() {
-                let Some(job) = unit.job() else { continue };
-                if responded[i] {
-                    self.ledgers[job - 1].deliver(i, unit);
-                    // A successful re-attempt clears the pending entry.
-                    if let WorkUnit::Plain { chunk, .. } = unit {
-                        self.failed_d1[job - 1][i].retain(|c| c != chunk);
+        let slots = w - 1 + self.params.b;
+        // Re-derive each mini-task from the assign-time state. The
+        // mutations below only touch the (job, worker) cell the current
+        // slot serves, and every slot of a (worker, round) pair serves a
+        // distinct job, so later derivations still see assign-time state.
+        for i in 0..self.spec.n {
+            for slot in 0..slots {
+                match self.unit_kind(i, r, slot) {
+                    UnitKind::Noop => {}
+                    UnitKind::Plain { job, chunk } => {
+                        if responded[i] {
+                            self.ledgers[job - 1].plain_missing.remove(&chunk);
+                            // A successful re-attempt clears the pending
+                            // entry (first attempts have none).
+                            self.failed_d1[job - 1][i].retain(|c| *c != chunk);
+                        } else if slot < w - 1 {
+                            // Failed *first attempt* → queue for re-attempts.
+                            self.failed_d1[job - 1][i].push(chunk);
+                        }
+                        // Failed re-attempts: nothing to record — the
+                        // pending entry is still queued.
                     }
-                } else if slot < w - 1 {
-                    // Failed *first attempt* → queue for re-attempts.
-                    if let WorkUnit::Plain { chunk, .. } = unit {
-                        self.failed_d1[job - 1][i].push(*chunk);
+                    UnitKind::Coded { job, group } => {
+                        if responded[i] {
+                            self.ledgers[job - 1].coded_got[group].insert(i);
+                        }
                     }
                 }
-                // Failed re-attempts / coded units: nothing to record —
-                // the pending entry is still queued.
             }
         }
         self.committed = r;
@@ -300,18 +345,31 @@ impl Scheme for MSgcScheme {
 
     fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
         debug_assert_eq!(r, self.committed + 1);
-        let mut ledger = self.ledgers[job - 1].clone();
-        for (i, task) in self.assigned[r - 1].iter().enumerate() {
-            if !responded[i] {
-                continue;
-            }
-            for unit in &task.units {
-                if unit.job() == Some(job) {
-                    ledger.deliver(i, unit);
+        debug_assert_eq!(r, self.assigned);
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.copy_into_from(&self.ledgers[job - 1]);
+        // Slot j of round r serves job r - j: at most one slot serves
+        // `job`, namely j = r - job (when within the task window).
+        let slots = self.params.w - 1 + self.params.b;
+        if let Some(slot) = r.checked_sub(job) {
+            if slot < slots {
+                for (i, &ok) in responded.iter().enumerate() {
+                    if !ok {
+                        continue;
+                    }
+                    match self.unit_kind(i, r, slot) {
+                        UnitKind::Plain { job: j, chunk } if j == job => {
+                            scratch.plain_missing.remove(&chunk);
+                        }
+                        UnitKind::Coded { job: j, group } if j == job => {
+                            scratch.coded_got[group].insert(i);
+                        }
+                        _ => {}
+                    }
                 }
             }
         }
-        ledger.complete()
+        scratch.complete()
     }
 }
 
@@ -510,6 +568,37 @@ mod tests {
             }
             let n = spec.n;
             sch.commit_round(r, &all_true(n));
+        }
+    }
+
+    #[test]
+    fn commit_rederivation_matches_assigned_units() {
+        // The compact unit_kind re-derivation must agree with the full
+        // units actually handed out, round over round, under stragglers.
+        let p = MSgcParams { n: 5, b: 2, w: 3, lambda: 2 };
+        let mut sch = MSgcScheme::new(p, 6);
+        let slots = p.w - 1 + p.b;
+        for r in 1..=sch.total_rounds() {
+            let tasks = sch.assign_round(r);
+            for (i, task) in tasks.iter().enumerate() {
+                for (j, unit) in task.units.iter().enumerate() {
+                    let kind = sch.unit_kind(i, r, j);
+                    let expected = match unit {
+                        WorkUnit::Noop => UnitKind::Noop,
+                        WorkUnit::Plain { job, chunk } => {
+                            UnitKind::Plain { job: *job, chunk: *chunk }
+                        }
+                        WorkUnit::Coded { job, group, .. } => {
+                            UnitKind::Coded { job: *job, group: *group }
+                        }
+                    };
+                    assert_eq!(kind, expected, "worker {i} slot {j} round {r}");
+                }
+                assert_eq!(task.units.len(), slots);
+            }
+            // worker r % n straggles this round
+            let responded: Vec<bool> = (0..p.n).map(|i| i != r % p.n).collect();
+            sch.commit_round(r, &responded);
         }
     }
 }

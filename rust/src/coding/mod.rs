@@ -4,13 +4,17 @@
 pub mod bounds;
 pub mod gc;
 pub mod m_sgc;
+pub mod plan_cache;
 pub mod scheme;
 pub mod sr_sgc;
 pub mod uncoded;
 
-pub use gc::{GcCode, GcRepScheme, GcScheme};
+pub use gc::{
+    responder_mask, GcCode, GcRepScheme, GcScheme, ResponderMask, MAX_MEMOIZED_WORKERS,
+};
 pub use m_sgc::{MSgcParams, MSgcScheme};
-pub use scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+pub use plan_cache::{CodePlan, CodePlanCache, PLAN_SEED};
+pub use scheme::{fill_tasks, JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
 pub use sr_sgc::{SrSgcParams, SrSgcScheme};
 pub use uncoded::UncodedScheme;
 

@@ -1,0 +1,184 @@
+//! Process-wide cache of GC code plans (§Perf).
+//!
+//! Every consumer of a numeric `(n, s)`-GC code — the session's decode
+//! timer, the multi-model trainer, the probe's grid search, the bench
+//! harness and the fleet master (all of which drive sessions) — used to
+//! build its own [`GcCode`]: 256 Cholesky-backed `s×s` solves per
+//! construction at the paper's scale, repeated per session even though
+//! the code for a given `(n, s, seed)` is a pure function. The
+//! [`CodePlanCache`] constructs each code **once per process** and shares
+//! it immutably; decode coefficients are memoized per responder set
+//! behind a fixed-width [`ResponderMask`] so the hit path performs no
+//! heap allocation (the key lives on the stack, the value is a shared
+//! `Arc<[f64]>` — a refcount bump).
+//!
+//! Sharing is sound because everything cached is deterministic:
+//! construction uses the fixed [`PLAN_SEED`], and a decode solve is a
+//! pure function of `(B, responder set)` — two sessions racing on the
+//! same subset compute bit-identical coefficients, and `or_insert` keeps
+//! whichever arrived first (`tests/properties.rs` pins cached plans to
+//! fresh solves bit for bit). Callers must pass responder sets in a
+//! canonical (sorted) order: the mask key identifies the *set*, and the
+//! returned β is aligned with the first `n-s` entries of the first
+//! caller's ordering.
+
+use super::gc::{
+    responder_mask, solve_decode_coeffs, GcCode, ResponderMask, MAX_MEMOIZED_WORKERS,
+};
+use crate::util::linalg::Matrix;
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Construction seed shared by every cache consumer (the historical
+/// `0xdec0de` the session and trainer both used).
+pub const PLAN_SEED: u64 = 0xdec0de;
+
+/// One immutable `(n, s)` code plus its shared decode-coefficient cache.
+pub struct CodePlan {
+    n: usize,
+    s: usize,
+    b: Matrix,
+    /// β per responder set. Values have length `n - s`, aligned with the
+    /// first `n - s` responders of the computing caller's order.
+    coeffs: RwLock<HashMap<ResponderMask, Arc<[f64]>>>,
+}
+
+impl CodePlan {
+    fn new(n: usize, s: usize) -> Self {
+        let code = GcCode::new(n, s, PLAN_SEED);
+        CodePlan { n, s, b: code.b, coeffs: RwLock::new(HashMap::new()) }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// The (immutable) `n × n` coefficient matrix `B`.
+    pub fn b(&self) -> &Matrix {
+        &self.b
+    }
+
+    /// Decode coefficients `β` with `Σ_k β_k B[workers[k],:] = 1ᵀ` over
+    /// the first `n - s` responders (further responders carry implicit
+    /// coefficient 0), shared across every session in the process.
+    /// `None` if the set is too small or numerically undecodable.
+    ///
+    /// Hit path: a read lock, a stack-key lookup and an `Arc` clone — no
+    /// heap allocation. `workers` must be sorted: the mask key identifies
+    /// the responder *set*, so an unsorted caller would receive a β
+    /// aligned to a different ordering (debug-asserted below). Codes
+    /// beyond [`MAX_MEMOIZED_WORKERS`] solve per call without memoizing.
+    pub fn decode_coeffs(&self, workers: &[usize]) -> Option<Arc<[f64]>> {
+        let k = self.n - self.s;
+        if workers.len() < k {
+            return None;
+        }
+        let used = &workers[..k];
+        debug_assert!(
+            used.windows(2).all(|w| w[0] < w[1]),
+            "decode_coeffs requires sorted responder ids (β is set-keyed)"
+        );
+        if self.n > MAX_MEMOIZED_WORKERS {
+            return solve_decode_coeffs(&self.b, used).map(Into::into);
+        }
+        let key = responder_mask(used);
+        if let Some(c) = self.coeffs.read().unwrap().get(&key) {
+            return Some(Arc::clone(c));
+        }
+        // Miss: solve outside the write lock (solves are the expensive
+        // part; racing duplicates are bit-identical and `or_insert`
+        // keeps the first).
+        let x = solve_decode_coeffs(&self.b, used)?;
+        let arc: Arc<[f64]> = x.into();
+        let mut map = self.coeffs.write().unwrap();
+        Some(Arc::clone(map.entry(key).or_insert(arc)))
+    }
+
+    /// Number of memoized decode plans.
+    pub fn cached_plans(&self) -> usize {
+        self.coeffs.read().unwrap().len()
+    }
+}
+
+/// Process-wide registry of [`CodePlan`]s keyed by `(n, s)`.
+pub struct CodePlanCache {
+    plans: RwLock<HashMap<(usize, usize), Arc<CodePlan>>>,
+}
+
+impl CodePlanCache {
+    /// The global cache (created on first use).
+    pub fn global() -> &'static CodePlanCache {
+        static GLOBAL: OnceLock<CodePlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| CodePlanCache { plans: RwLock::new(HashMap::new()) })
+    }
+
+    /// Fetch (or construct, once per process) the `(n, s)` code plan.
+    pub fn get(&self, n: usize, s: usize) -> Arc<CodePlan> {
+        if let Some(p) = self.plans.read().unwrap().get(&(n, s)) {
+            return Arc::clone(p);
+        }
+        // Construct outside the write lock: GcCode::new is the expensive
+        // part, and a racing duplicate is deterministic (fixed seed) —
+        // `or_insert` keeps exactly one.
+        let plan = Arc::new(CodePlan::new(n, s));
+        let mut map = self.plans.write().unwrap();
+        Arc::clone(map.entry((n, s)).or_insert(plan))
+    }
+
+    /// Number of distinct `(n, s)` codes constructed so far.
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_cache_shares_plans() {
+        let a = CodePlanCache::global().get(12, 3);
+        let b = CodePlanCache::global().get(12, 3);
+        assert!(Arc::ptr_eq(&a, &b), "same (n, s) must share one plan");
+        assert_eq!(a.n(), 12);
+        assert_eq!(a.s(), 3);
+    }
+
+    #[test]
+    fn plan_decode_matches_gc_code() {
+        let plan = CodePlanCache::global().get(10, 2);
+        let mut code = GcCode::new(10, 2, PLAN_SEED);
+        let workers: Vec<usize> = (0..8).collect();
+        let cached = plan.decode_coeffs(&workers).expect("decodable");
+        let fresh = code.decode_coeffs(&workers).expect("decodable");
+        assert_eq!(cached.len(), fresh.len());
+        for (a, b) in cached.iter().zip(fresh) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn plan_hit_returns_shared_allocation() {
+        let plan = CodePlanCache::global().get(9, 2);
+        let workers: Vec<usize> = (1..8).collect();
+        let first = plan.decode_coeffs(&workers).unwrap();
+        let hits_before = plan.cached_plans();
+        let second = plan.decode_coeffs(&workers).unwrap();
+        assert!(Arc::ptr_eq(&first, &second), "hit must reuse the cached allocation");
+        assert_eq!(plan.cached_plans(), hits_before);
+    }
+
+    #[test]
+    fn plan_rejects_undecodable_sets() {
+        let plan = CodePlanCache::global().get(8, 2);
+        assert!(plan.decode_coeffs(&[0, 1, 2]).is_none(), "too few responders");
+    }
+}

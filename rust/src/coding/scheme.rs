@@ -6,7 +6,7 @@
 //!    worker stores (`SchemeSpec`).
 //! 2. **Assignment** — which work units each worker attempts in round `t`,
 //!    possibly depending on past straggler outcomes
-//!    ([`Scheme::assign_round`]).
+//!    ([`Scheme::assign_round_into`]).
 //! 3. **Decodability** — given the responses recorded so far, can job `t`
 //!    be decoded ([`Scheme::decodable`])?
 //!
@@ -14,8 +14,15 @@
 //! attempted and what arrived; the real-compute trainer additionally maps
 //! units to PJRT executions and numeric encode/decode (see
 //! [`crate::coding::gc::GcCode`] and [`crate::train`]).
+//!
+//! Assignment is allocation-conscious (§Perf): chunk lists inside
+//! [`WorkUnit::Coded`] are shared `Arc<[usize]>` slices precomputed at
+//! scheme construction, and [`Scheme::assign_round_into`] refills a
+//! caller-owned task buffer, so a steady-state round assigns `n` tasks
+//! without touching the heap.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// One unit of work inside a worker's task for a round.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -27,8 +34,10 @@ pub enum WorkUnit {
     /// Compute partial gradients for every chunk in `chunks` and return
     /// their GC-encoded linear combination `ℓ_{worker,group}(job)`.
     /// `row` selects the encoding row in the scheme's GC coefficient
-    /// matrix (== worker index for all schemes in the paper).
-    Coded { job: usize, group: usize, row: usize, chunks: Vec<usize> },
+    /// matrix (== worker index for all schemes in the paper). The chunk
+    /// list is a shared slice: cloning a unit bumps a refcount instead of
+    /// copying the ids.
+    Coded { job: usize, group: usize, row: usize, chunks: Arc<[usize]> },
 }
 
 impl WorkUnit {
@@ -55,6 +64,21 @@ impl TaskDesc {
 
     pub fn is_trivial(&self) -> bool {
         self.units.iter().all(|u| matches!(u, WorkUnit::Noop))
+    }
+}
+
+/// Reset `out` to `n` tasks — reusing both the outer buffer and each
+/// task's `units` allocation — and fill task `i` through `fill(i, task)`.
+/// The workhorse behind every scheme's [`Scheme::assign_round_into`].
+pub fn fill_tasks(
+    out: &mut Vec<TaskDesc>,
+    n: usize,
+    mut fill: impl FnMut(usize, &mut TaskDesc),
+) {
+    out.resize_with(n, TaskDesc::default);
+    for (i, task) in out.iter_mut().enumerate() {
+        task.units.clear();
+        fill(i, task);
     }
 }
 
@@ -139,6 +163,35 @@ pub struct JobLedger {
 }
 
 impl JobLedger {
+    /// An empty ledger (nothing needed, nothing delivered) — the initial
+    /// state of every scheme's reusable `decodable_with` scratch.
+    pub fn empty() -> Self {
+        JobLedger {
+            plain_missing: HashSet::new(),
+            coded_got: Vec::new(),
+            coded_need: Vec::new(),
+        }
+    }
+
+    /// Copy `src`'s state into `self`, reusing `self`'s allocations
+    /// (hash tables, vectors). The allocation-free replacement for
+    /// `JobLedger::clone` on the per-round `decodable_with` path: after
+    /// warmup the scratch ledger's capacity covers every job's state.
+    pub fn copy_into_from(&mut self, src: &JobLedger) {
+        self.plain_missing.clear();
+        self.plain_missing.extend(src.plain_missing.iter().copied());
+        self.coded_got.truncate(src.coded_got.len());
+        while self.coded_got.len() < src.coded_got.len() {
+            self.coded_got.push(HashSet::new());
+        }
+        for (dst, s) in self.coded_got.iter_mut().zip(&src.coded_got) {
+            dst.clear();
+            dst.extend(s.iter().copied());
+        }
+        self.coded_need.clear();
+        self.coded_need.extend_from_slice(&src.coded_need);
+    }
+
     pub fn complete(&self) -> bool {
         self.plain_missing.is_empty()
             && self.coded_got.iter().zip(&self.coded_need).all(|(g, &k)| g.len() >= k)
@@ -161,16 +214,30 @@ impl JobLedger {
 /// Core scheme interface used by the coordinator and the simulator.
 ///
 /// Protocol: for each round `r = 1, 2, …` in order, the master calls
-/// [`assign_round`](Scheme::assign_round), executes the tasks, then calls
-/// [`commit_round`](Scheme::commit_round) with the final responder set
-/// (after any wait-outs). [`decodable_with`](Scheme::decodable_with)
-/// supports the wait-out policy's tentative evaluation before a commit.
+/// [`assign_round_into`](Scheme::assign_round_into) (or the allocating
+/// [`assign_round`](Scheme::assign_round) wrapper), executes the tasks,
+/// then calls [`commit_round`](Scheme::commit_round) with the final
+/// responder set (after any wait-outs).
+/// [`decodable_with`](Scheme::decodable_with) supports the wait-out
+/// policy's tentative evaluation before a commit.
 pub trait Scheme: Send {
     fn spec(&self) -> &SchemeSpec;
 
-    /// Produce task assignments for round `r` (1-based). Must be called in
-    /// round order, after the previous round was committed.
-    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc>;
+    /// Produce task assignments for round `r` (1-based) into `out`,
+    /// reusing its buffers (see [`fill_tasks`]). Must be called in round
+    /// order, after the previous round was committed. Schemes do not
+    /// retain the task list: `commit_round` and `decodable_with`
+    /// reconstruct deliveries from the scheme's own compact state, so the
+    /// caller owns the only copy.
+    fn assign_round_into(&mut self, r: usize, out: &mut Vec<TaskDesc>);
+
+    /// Allocating convenience wrapper over
+    /// [`assign_round_into`](Scheme::assign_round_into).
+    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
+        let mut out = Vec::new();
+        self.assign_round_into(r, &mut out);
+        out
+    }
 
     /// Record the final responder set for round `r`.
     fn commit_round(&mut self, r: usize, responded: &[bool]);
@@ -221,11 +288,57 @@ mod tests {
         l.deliver(0, &WorkUnit::Plain { job: 1, chunk: 0 });
         l.deliver(1, &WorkUnit::Plain { job: 1, chunk: 1 });
         assert!(!l.complete());
-        l.deliver(0, &WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: vec![] });
-        l.deliver(0, &WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: vec![] }); // dup worker
+        l.deliver(0, &WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: Vec::new().into() });
+        // dup worker
+        l.deliver(0, &WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: Vec::new().into() });
         assert!(!l.complete());
-        l.deliver(3, &WorkUnit::Coded { job: 1, group: 0, row: 3, chunks: vec![] });
+        l.deliver(3, &WorkUnit::Coded { job: 1, group: 0, row: 3, chunks: Vec::new().into() });
         assert!(l.complete());
+    }
+
+    #[test]
+    fn ledger_copy_into_from_matches_clone() {
+        let src = JobLedger {
+            plain_missing: [3usize, 7].into_iter().collect(),
+            coded_got: vec![[1usize, 2].into_iter().collect(), HashSet::new()],
+            coded_need: vec![2, 1],
+        };
+        let mut scratch = JobLedger::empty();
+        scratch.copy_into_from(&src);
+        assert_eq!(scratch.plain_missing, src.plain_missing);
+        assert_eq!(scratch.coded_got, src.coded_got);
+        assert_eq!(scratch.coded_need, src.coded_need);
+        // reuse with a smaller source: stale state must not leak
+        let small = JobLedger {
+            plain_missing: HashSet::new(),
+            coded_got: vec![HashSet::new()],
+            coded_need: vec![4],
+        };
+        scratch.copy_into_from(&small);
+        assert!(scratch.plain_missing.is_empty());
+        assert_eq!(scratch.coded_got.len(), 1);
+        assert!(scratch.coded_got[0].is_empty());
+        assert_eq!(scratch.coded_need, vec![4]);
+    }
+
+    #[test]
+    fn fill_tasks_reuses_and_resizes() {
+        let mut buf: Vec<TaskDesc> = Vec::new();
+        fill_tasks(&mut buf, 3, |i, t| {
+            t.units.push(WorkUnit::Plain { job: 1, chunk: i });
+        });
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf[2].units, vec![WorkUnit::Plain { job: 1, chunk: 2 }]);
+        // shrink: stale tasks are dropped, survivors refilled
+        fill_tasks(&mut buf, 2, |_, t| t.units.push(WorkUnit::Noop));
+        assert_eq!(buf.len(), 2);
+        assert!(buf.iter().all(|t| t.is_trivial()));
+        // grow again
+        fill_tasks(&mut buf, 4, |i, t| {
+            t.units.push(WorkUnit::Plain { job: 2, chunk: i });
+        });
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf[3].units[0], WorkUnit::Plain { job: 2, chunk: 3 });
     }
 
     /// Minimal scheme for exercising the trait's default methods.
@@ -249,11 +362,7 @@ mod tests {
                     tolerance: ToleranceSpec::None,
                 },
                 jobs,
-                ledger: JobLedger {
-                    plain_missing: HashSet::new(),
-                    coded_got: Vec::new(),
-                    coded_need: Vec::new(),
-                },
+                ledger: JobLedger::empty(),
             }
         }
     }
@@ -262,8 +371,8 @@ mod tests {
         fn spec(&self) -> &SchemeSpec {
             &self.spec
         }
-        fn assign_round(&mut self, _r: usize) -> Vec<TaskDesc> {
-            vec![TaskDesc::noop()]
+        fn assign_round_into(&mut self, _r: usize, out: &mut Vec<TaskDesc>) {
+            fill_tasks(out, 1, |_, t| t.units.push(WorkUnit::Noop));
         }
         fn commit_round(&mut self, _r: usize, _responded: &[bool]) {}
         fn decodable(&self, _job: usize) -> bool {
@@ -278,6 +387,14 @@ mod tests {
         fn jobs(&self) -> usize {
             self.jobs
         }
+    }
+
+    #[test]
+    fn assign_round_wrapper_delegates() {
+        let mut s = DummyScheme::with_delay(0, 1);
+        let tasks = s.assign_round(1);
+        assert_eq!(tasks.len(), 1);
+        assert!(tasks[0].is_trivial());
     }
 
     #[test]
@@ -320,7 +437,7 @@ mod tests {
         let task = TaskDesc {
             units: vec![
                 WorkUnit::Plain { job: 1, chunk: 0 },
-                WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: vec![1, 2] },
+                WorkUnit::Coded { job: 1, group: 0, row: 0, chunks: vec![1, 2].into() },
                 WorkUnit::Noop,
             ],
         };

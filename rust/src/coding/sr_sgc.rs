@@ -9,10 +9,17 @@
 //! With `(s+1) | n`, the GC-Rep base of Appendix G applies and Algorithm 3
 //! is used instead (`rep = true`): a worker whose *group* result was
 //! already returned never re-attempts.
+//!
+//! Per-round state is compact (§Perf): the scheme records which job each
+//! worker's unit targeted (`job_of`) and the responder history — no
+//! `TaskDesc` storage — and `commit_round` / `decodable_with` reconstruct
+//! deliveries from those, the latter through a reusable scratch ledger.
 
 use super::gc::cyclic_support;
-use super::scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use super::scheme::{fill_tasks, JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use std::cell::RefCell;
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// SR-SGC design parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,9 +60,13 @@ pub struct SrSgcScheme {
     /// Per assigned round: the job each worker's single unit targets
     /// (`0` = noop). `job_of[r-1][i]`.
     job_of: Vec<Vec<usize>>,
-    assigned: Vec<Vec<TaskDesc>>,
     responded: Vec<Vec<bool>>,
     committed: usize,
+    /// Chunk list of each worker's coded unit (cyclic support, or the
+    /// replication group's chunks), shared into every assignment.
+    chunk_sets: Vec<Arc<[usize]>>,
+    /// Reusable `decodable_with` ledger (replaces `JobLedger::clone`).
+    scratch: RefCell<JobLedger>,
 }
 
 impl SrSgcScheme {
@@ -78,6 +89,8 @@ impl SrSgcScheme {
         } else {
             (0..n).map(|i| cyclic_support(i, s, n)).collect()
         };
+        let chunk_sets: Vec<Arc<[usize]>> =
+            placement.iter().map(|c| Arc::from(c.clone())).collect();
         let spec = SchemeSpec {
             name: format!(
                 "sr-sgc{}(n={n},B={},W={},λ={},s={s})",
@@ -105,13 +118,13 @@ impl SrSgcScheme {
                     let groups = n / (s + 1);
                     JobLedger {
                         plain_missing: HashSet::new(),
-                        coded_got: vec![HashSet::new(); groups],
+                        coded_got: vec![HashSet::with_capacity(s + 1); groups],
                         coded_need: vec![1; groups],
                     }
                 } else {
                     JobLedger {
                         plain_missing: HashSet::new(),
-                        coded_got: vec![HashSet::new()],
+                        coded_got: vec![HashSet::with_capacity(n)],
                         coded_need: vec![n - s],
                     }
                 }
@@ -125,9 +138,10 @@ impl SrSgcScheme {
             jobs,
             ledgers,
             job_of: Vec::new(),
-            assigned: Vec::new(),
             responded: Vec::new(),
             committed: 0,
+            chunk_sets,
+            scratch: RefCell::new(JobLedger::empty()),
         }
     }
 
@@ -142,6 +156,15 @@ impl SrSgcScheme {
 
     fn rep_group_chunks(g: usize, s: usize) -> Vec<usize> {
         (g * (s + 1)..(g + 1) * (s + 1)).collect()
+    }
+
+    /// Ledger group of a worker's coded unit.
+    fn group_of(&self, worker: usize) -> usize {
+        if self.rep {
+            worker / (self.s + 1)
+        } else {
+            0
+        }
     }
 
     /// `N(t)`: number of task results for job `t` returned in round `t`.
@@ -177,23 +200,6 @@ impl SrSgcScheme {
         (g * (self.s + 1)..(g + 1) * (self.s + 1))
             .any(|m| self.job_of[job - 1][m] == job && self.responded[job - 1][m])
     }
-
-    fn unit_for(&self, worker: usize, job: usize) -> WorkUnit {
-        if job < 1 || job > self.jobs {
-            return WorkUnit::Noop;
-        }
-        if self.rep {
-            let g = worker / (self.s + 1);
-            WorkUnit::Coded { job, group: g, row: worker, chunks: Self::rep_group_chunks(g, self.s) }
-        } else {
-            WorkUnit::Coded {
-                job,
-                group: 0,
-                row: worker,
-                chunks: cyclic_support(worker, self.s, self.spec.n),
-            }
-        }
-    }
 }
 
 impl Scheme for SrSgcScheme {
@@ -206,14 +212,14 @@ impl Scheme for SrSgcScheme {
     }
 
     /// Algorithm 1 (Algorithm 3 when `rep`).
-    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
-        assert_eq!(r, self.assigned.len() + 1, "rounds must be assigned in order");
-        assert_eq!(self.committed, self.assigned.len(), "previous round not committed");
+    fn assign_round_into(&mut self, r: usize, out: &mut Vec<TaskDesc>) {
+        assert_eq!(r, self.job_of.len() + 1, "rounds must be assigned in order");
+        assert_eq!(self.committed, self.job_of.len(), "previous round not committed");
         let n = self.spec.n;
         let old = r as isize - self.params.b as isize; // job t-B
         let mut delta = self.n_of(old);
         let mut jobs_r = vec![0usize; n];
-        for i in 0..n {
+        for (i, slot) in jobs_r.iter_mut().enumerate() {
             let reattempt_old = if old >= 1 && (old as usize) <= self.jobs {
                 let old = old as usize;
                 if self.rep && self.group_returned_in_round(i, old) {
@@ -227,39 +233,48 @@ impl Scheme for SrSgcScheme {
                 false
             };
             if reattempt_old {
-                jobs_r[i] = old as usize;
+                *slot = old as usize;
                 delta += 1;
             } else if r >= 1 && r <= self.jobs {
-                jobs_r[i] = r;
+                *slot = r;
             } else {
-                jobs_r[i] = 0; // noop (round beyond J)
+                *slot = 0; // noop (round beyond J)
             }
         }
-        let tasks: Vec<TaskDesc> = (0..n)
-            .map(|i| TaskDesc { units: vec![self.unit_for(i, jobs_r[i])] })
-            .collect();
+        let chunk_sets = &self.chunk_sets;
+        let rep = self.rep;
+        let s = self.s;
+        fill_tasks(out, n, |i, task| {
+            task.units.push(if jobs_r[i] == 0 {
+                WorkUnit::Noop
+            } else {
+                WorkUnit::Coded {
+                    job: jobs_r[i],
+                    group: if rep { i / (s + 1) } else { 0 },
+                    row: i,
+                    chunks: Arc::clone(&chunk_sets[i]),
+                }
+            });
+        });
         self.job_of.push(jobs_r);
-        self.assigned.push(tasks.clone());
-        tasks
     }
 
     fn commit_round(&mut self, r: usize, responded: &[bool]) {
         assert_eq!(r, self.committed + 1);
+        assert_eq!(r, self.job_of.len(), "round not assigned");
         assert_eq!(responded.len(), self.spec.n);
-        for (w, task) in self.assigned[r - 1].iter().enumerate() {
-            if !responded[w] {
+        for (i, &ok) in responded.iter().enumerate() {
+            if !ok {
                 continue;
             }
-            for unit in &task.units {
-                if let Some(job) = unit.job() {
-                    self.ledgers[job - 1].deliver(w, unit);
-                }
+            let job = self.job_of[r - 1][i];
+            if job == 0 {
+                continue;
             }
+            let g = if self.rep { i / (self.s + 1) } else { 0 };
+            self.ledgers[job - 1].coded_got[g].insert(i);
         }
         self.responded.push(responded.to_vec());
-        // Committed rounds are never read again — drop their task
-        // storage so long runs stay O(window), not O(rounds).
-        self.assigned[r - 1] = Vec::new();
         self.committed = r;
     }
 
@@ -273,18 +288,16 @@ impl Scheme for SrSgcScheme {
 
     fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
         debug_assert_eq!(r, self.committed + 1);
-        let mut ledger = self.ledgers[job - 1].clone();
-        for (w, task) in self.assigned[r - 1].iter().enumerate() {
-            if !responded[w] {
-                continue;
-            }
-            for unit in &task.units {
-                if unit.job() == Some(job) {
-                    ledger.deliver(w, unit);
-                }
+        debug_assert_eq!(r, self.job_of.len());
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.copy_into_from(&self.ledgers[job - 1]);
+        let row = &self.job_of[r - 1];
+        for (i, &ok) in responded.iter().enumerate() {
+            if ok && row[i] == job {
+                scratch.coded_got[self.group_of(i)].insert(i);
             }
         }
-        ledger.complete()
+        scratch.complete()
     }
 }
 

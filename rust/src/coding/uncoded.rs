@@ -2,16 +2,22 @@
 //! equal chunks, worker `i` computes only chunk `i`, and the master must
 //! wait for **every** worker in every round (no straggler tolerance).
 
-use super::scheme::{JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use super::scheme::{fill_tasks, JobLedger, Scheme, SchemeSpec, TaskDesc, ToleranceSpec, WorkUnit};
+use std::cell::RefCell;
 use std::collections::HashSet;
 
 /// Uncoded distributed gradient descent.
+///
+/// Round `r`'s task for worker `i` is always `Plain { job: r, chunk: i }`
+/// (or a noop past `J`), so no per-round task storage is kept (§Perf).
 pub struct UncodedScheme {
     spec: SchemeSpec,
     jobs: usize,
     ledgers: Vec<JobLedger>,
-    assigned: Vec<Vec<TaskDesc>>,
+    assigned: usize,
     committed: usize,
+    /// Reusable `decodable_with` ledger (replaces `JobLedger::clone`).
+    scratch: RefCell<JobLedger>,
 }
 
 impl UncodedScheme {
@@ -33,7 +39,14 @@ impl UncodedScheme {
                 coded_need: Vec::new(),
             })
             .collect();
-        UncodedScheme { spec, jobs, ledgers, assigned: Vec::new(), committed: 0 }
+        UncodedScheme {
+            spec,
+            jobs,
+            ledgers,
+            assigned: 0,
+            committed: 0,
+            scratch: RefCell::new(JobLedger::empty()),
+        }
     }
 }
 
@@ -46,37 +59,32 @@ impl Scheme for UncodedScheme {
         self.jobs
     }
 
-    fn assign_round(&mut self, r: usize) -> Vec<TaskDesc> {
-        assert_eq!(r, self.assigned.len() + 1);
-        assert_eq!(self.committed, self.assigned.len());
-        let tasks: Vec<TaskDesc> = (0..self.spec.n)
-            .map(|i| {
-                if r >= 1 && r <= self.jobs {
-                    TaskDesc { units: vec![WorkUnit::Plain { job: r, chunk: i }] }
-                } else {
-                    TaskDesc::noop()
-                }
-            })
-            .collect();
-        self.assigned.push(tasks.clone());
-        tasks
+    fn assign_round_into(&mut self, r: usize, out: &mut Vec<TaskDesc>) {
+        assert_eq!(r, self.assigned + 1, "rounds must be assigned in order");
+        assert_eq!(self.committed, self.assigned, "previous round not committed");
+        let in_range = r >= 1 && r <= self.jobs;
+        fill_tasks(out, self.spec.n, |i, task| {
+            task.units.push(if in_range {
+                WorkUnit::Plain { job: r, chunk: i }
+            } else {
+                WorkUnit::Noop
+            });
+        });
+        self.assigned = r;
     }
 
     fn commit_round(&mut self, r: usize, responded: &[bool]) {
         assert_eq!(r, self.committed + 1);
-        for (w, task) in self.assigned[r - 1].iter().enumerate() {
-            if !responded[w] {
-                continue;
-            }
-            for unit in &task.units {
-                if let Some(job) = unit.job() {
-                    self.ledgers[job - 1].deliver(w, unit);
+        assert_eq!(r, self.assigned, "round not assigned");
+        assert_eq!(responded.len(), self.spec.n);
+        if r >= 1 && r <= self.jobs {
+            let ledger = &mut self.ledgers[r - 1];
+            for (w, &ok) in responded.iter().enumerate() {
+                if ok {
+                    ledger.plain_missing.remove(&w);
                 }
             }
         }
-        // Committed rounds are never read again — drop their task
-        // storage so long runs stay O(window), not O(rounds).
-        self.assigned[r - 1] = Vec::new();
         self.committed = r;
     }
 
@@ -90,18 +98,17 @@ impl Scheme for UncodedScheme {
 
     fn decodable_with(&self, job: usize, r: usize, responded: &[bool]) -> bool {
         debug_assert_eq!(r, self.committed + 1);
-        let mut ledger = self.ledgers[job - 1].clone();
-        for (w, task) in self.assigned[r - 1].iter().enumerate() {
-            if !responded[w] {
-                continue;
-            }
-            for unit in &task.units {
-                if unit.job() == Some(job) {
-                    ledger.deliver(w, unit);
+        debug_assert_eq!(r, self.assigned);
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.copy_into_from(&self.ledgers[job - 1]);
+        if job == r && r <= self.jobs {
+            for (w, &ok) in responded.iter().enumerate() {
+                if ok {
+                    scratch.plain_missing.remove(&w);
                 }
             }
         }
-        ledger.complete()
+        scratch.complete()
     }
 }
 

@@ -519,8 +519,10 @@ pub fn drive_fleet(
          spawn a fresh fleet per run",
         fleet.round_starts.len()
     );
+    // One plan buffer reused across all rounds (§Perf).
+    let mut plan = RoundPlan::default();
     while !session.is_complete() {
-        let plan = session.begin_round();
+        session.begin_round_into(&mut plan);
         fleet.run_round(&mut session, &plan)?;
     }
     let mut trace = fleet.finish_trace(Duration::from_secs(10), cfg.mu);

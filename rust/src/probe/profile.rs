@@ -8,15 +8,21 @@
 
 use crate::cluster::{Cluster, RoundSample};
 use crate::util::stats;
+use std::sync::Arc;
 
 /// A recorded per-round, per-worker completion-time profile.
+///
+/// The delay matrix is behind an `Arc`, so cloning a profile is O(1): a
+/// grid search fanning hundreds of candidate replays out of one profile
+/// shares a single `O(n × rounds)` matrix instead of deep-copying it per
+/// candidate (§Perf).
 #[derive(Clone, Debug)]
 pub struct DelayProfile {
     pub n: usize,
     /// Load at which the profile was captured (1/n for uncoded probing).
     pub base_load: f64,
     /// `times[r][i]` — completion time of worker `i` in probe round `r`.
-    pub times: Vec<Vec<f64>>,
+    pub times: Arc<Vec<Vec<f64>>>,
 }
 
 impl DelayProfile {
@@ -25,7 +31,8 @@ impl DelayProfile {
     pub fn capture(cluster: &mut dyn Cluster, rounds: usize, base_load: f64) -> Self {
         let n = cluster.n();
         let loads = vec![base_load; n];
-        let times = (0..rounds).map(|_| cluster.sample_round(&loads).finish).collect();
+        let times =
+            Arc::new((0..rounds).map(|_| cluster.sample_round(&loads).finish).collect());
         DelayProfile { n, base_load, times }
     }
 
@@ -39,7 +46,7 @@ impl DelayProfile {
         DelayProfile {
             n: trace.n,
             base_load,
-            times: trace.rounds.iter().map(|r| r.finish.clone()).collect(),
+            times: Arc::new(trace.rounds.iter().map(|r| r.finish.clone()).collect()),
         }
     }
 
@@ -64,7 +71,9 @@ impl DelayProfile {
 
 /// A [`Cluster`] that replays a delay profile with the Appendix-J load
 /// adjustment — this is exactly how the paper's master "simulates" a
-/// candidate scheme before committing to it.
+/// candidate scheme before committing to it. Holding a profile clone is
+/// cheap (shared `Arc` matrix), so every grid-search candidate gets its
+/// own cursor over one shared recording.
 pub struct ProfileCluster {
     profile: DelayProfile,
     /// Fitted seconds-per-unit-load slope α.
@@ -114,6 +123,14 @@ mod tests {
         assert_eq!(p.rounds(), 10);
         assert_eq!(p.times[0].len(), 8);
         assert!(p.mean_time() > 0.0);
+    }
+
+    #[test]
+    fn clone_shares_the_delay_matrix() {
+        let mut c = cluster(4);
+        let p = DelayProfile::capture(&mut c, 6, 0.25);
+        let q = p.clone();
+        assert!(Arc::ptr_eq(&p.times, &q.times), "clone must not deep-copy the matrix");
     }
 
     #[test]

@@ -92,7 +92,9 @@ impl SearchSpace {
 }
 
 /// Estimate total runtime of a scheme over `jobs` jobs by replaying the
-/// load-adjusted profile through the real round protocol.
+/// load-adjusted profile through the real round protocol. Cloning the
+/// profile is O(1) (shared `Arc` delay matrix), so per-candidate
+/// estimation costs only the session replay itself.
 pub fn estimate_runtime(
     config: &SchemeConfig,
     profile: &DelayProfile,
@@ -108,8 +110,9 @@ pub fn estimate_runtime(
 
 /// Grid-search a candidate list; returns candidates sorted by estimated
 /// runtime (best first). Candidate replays run concurrently on the batch
-/// driver; results are deterministic (the profile replay has no shared
-/// state across candidates).
+/// driver; results are deterministic (the profile replay has no mutable
+/// shared state across candidates — every candidate's cluster holds an
+/// O(1) clone of one shared delay matrix).
 pub fn grid_search(
     candidates: &[SchemeConfig],
     profile: &DelayProfile,

@@ -11,7 +11,7 @@
 //! fewer workers than the scheme expects) reports a usable
 //! [`anyhow::Error`] instead of aborting the process mid-batch.
 
-use super::{SessionConfig, SessionEvent, SgcSession};
+use super::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
 use crate::cluster::Cluster;
 use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::RunReport;
@@ -20,7 +20,8 @@ use std::sync::Arc;
 
 /// Run one session to completion against `cluster` and return its
 /// report. Errors if the cluster's worker count does not match the
-/// scheme's `n`.
+/// scheme's `n`. One [`RoundPlan`] is reused across all `J + T` rounds
+/// (§Perf), so the driver side of the loop allocates nothing per round.
 pub fn drive(
     scheme_cfg: &SchemeConfig,
     cfg: &SessionConfig,
@@ -34,8 +35,9 @@ pub fn drive(
         scheme_cfg.label(),
         session.n()
     );
+    let mut plan = RoundPlan::default();
     while !session.is_complete() {
-        let plan = session.begin_round();
+        session.begin_round_into(&mut plan);
         let sample = cluster.sample_round(&plan.loads);
         session.record_true_state(&sample.state);
         session.submit_all(&sample.finish);

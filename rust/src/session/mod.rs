@@ -6,8 +6,9 @@
 //! knows nothing about how tasks execute. Drivers pump it through a
 //! pull/push protocol:
 //!
-//! 1. [`begin_round`](SgcSession::begin_round) → a [`RoundPlan`] with the
-//!    per-worker tasks and normalized loads,
+//! 1. [`begin_round`](SgcSession::begin_round) (or the buffer-reusing
+//!    [`begin_round_into`](SgcSession::begin_round_into)) → a
+//!    [`RoundPlan`] with the per-worker tasks and normalized loads,
 //! 2. [`submit`](SgcSession::submit) / [`submit_all`](SgcSession::submit_all)
 //!    push per-worker completion times back (from a simulator, a recorded
 //!    trace, or real workers),
@@ -19,17 +20,19 @@
 //! ([`crate::coordinator::Master`]), real-compute PJRT training
 //! ([`crate::train::MultiModelTrainer`]), the probe's profile replays and
 //! the concurrent batch driver ([`run_parallel`]) without duplicating any
-//! round-decision logic. See `rust/DESIGN.md` for the architecture notes.
+//! round-decision logic. The steady-state round loop reuses session-owned
+//! scratch buffers end to end and draws GC decode solvers from the
+//! process-wide [`CodePlanCache`] — see `rust/DESIGN.md` §Performance for
+//! the allocation and sharing invariants.
 
 mod driver;
 
 pub use driver::{default_threads, drive, run_parallel, BatchItem};
 
-use crate::coding::{GcCode, Scheme, SchemeConfig, TaskDesc, ToleranceSpec};
+use crate::coding::{CodePlanCache, Scheme, SchemeConfig, TaskDesc, ToleranceSpec};
 use crate::coordinator::metrics::{RoundRecord, RunReport};
 use crate::straggler::{Pattern, ToleranceChecker};
 use crate::util::timer::Stopwatch;
-use std::collections::HashMap;
 
 /// Wait-out policy applied when the observed straggler pattern exceeds
 /// what the scheme was designed for (see `rust/DESIGN.md` §Wait-out
@@ -82,8 +85,10 @@ impl Default for SessionConfig {
 }
 
 /// What the driver must execute for one round: per-worker tasks and the
-/// normalized load each task implies.
-#[derive(Clone, Debug)]
+/// normalized load each task implies. Reusable: hand the same plan back
+/// to [`SgcSession::begin_round_into`] every round and its buffers are
+/// refilled in place.
+#[derive(Clone, Debug, Default)]
 pub struct RoundPlan {
     /// 1-based round index.
     pub round: usize,
@@ -112,13 +117,30 @@ pub enum SessionEvent {
     RunComplete { total_runtime_s: f64 },
 }
 
-/// Outcome of the μ-rule + wait-out decision for one round.
-struct RoundDecision {
-    responded: Vec<bool>,
+/// Scalar outcome of the μ-rule + wait-out decision for one round (the
+/// responder set itself lands in the session's scratch buffers).
+#[derive(Clone, Copy, Debug)]
+struct DecisionStats {
     duration: f64,
     kappa: f64,
     detected: usize,
     admitted: usize,
+}
+
+/// Session-owned per-round scratch, reused across every round so the
+/// steady-state decision path performs no heap allocation (§Perf).
+#[derive(Default)]
+struct RoundScratch {
+    /// Dense completion times for the decision procedure.
+    finish: Vec<f64>,
+    /// Responder set under construction.
+    responded: Vec<bool>,
+    /// `!responded`, maintained incrementally for the conformance checker.
+    stragglers: Vec<bool>,
+    /// Non-responders in completion order (wait-out admission queue).
+    order: Vec<usize>,
+    /// Jobs decoded by the closing round.
+    completed: Vec<usize>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -138,9 +160,6 @@ pub struct SgcSession {
     /// stragglers, else `cfg.wait_policy`.
     wait_policy: WaitPolicy,
     checker: ToleranceChecker,
-    /// GC decode solvers per code parameter `s`, shared across rounds so
-    /// the coefficient cache persists (hot-path memoization).
-    codes: HashMap<usize, GcCode>,
     phase: Phase,
     /// Last begun round (0 before the first `begin_round`).
     round: usize,
@@ -150,6 +169,7 @@ pub struct SgcSession {
     finish: Vec<Option<f64>>,
     /// Final responder set of the last closed round.
     responded: Vec<bool>,
+    scratch: RoundScratch,
     clock: f64,
     rounds: Vec<RoundRecord>,
     job_done: Vec<bool>,
@@ -184,13 +204,13 @@ impl SgcSession {
             cfg,
             wait_policy,
             checker,
-            codes: HashMap::new(),
             phase: Phase::Ready,
             round: 0,
             total_rounds,
             n,
             finish: vec![None; n],
             responded: Vec::new(),
+            scratch: RoundScratch::default(),
             clock: 0.0,
             rounds: Vec::with_capacity(total_rounds),
             job_done: vec![false; jobs],
@@ -251,20 +271,35 @@ impl SgcSession {
         self.round >= self.total_rounds && self.phase == Phase::Ready
     }
 
-    /// Open the next round: advances the scheme's assignment and returns
-    /// the tasks (plus per-worker loads) the driver must execute.
+    /// Open the next round into a caller-owned (reusable) plan: advances
+    /// the scheme's assignment and refills `plan`'s task and load buffers
+    /// in place. On the steady-state path this allocates nothing — task
+    /// chunk lists are shared `Arc` slices and the buffers keep their
+    /// capacity round over round.
     ///
     /// Panics if the previous round is still open or the run is complete.
-    pub fn begin_round(&mut self) -> RoundPlan {
+    pub fn begin_round_into(&mut self, plan: &mut RoundPlan) {
         assert_eq!(self.phase, Phase::Ready, "begin_round while a round is open");
         assert!(!self.is_complete(), "begin_round on a complete session");
         self.round += 1;
         let r = self.round;
-        let tasks = self.scheme.assign_round(r);
-        let loads: Vec<f64> = tasks.iter().map(|t| self.scheme.spec().task_load(t)).collect();
-        self.finish = vec![None; self.n];
+        plan.round = r;
+        self.scheme.assign_round_into(r, &mut plan.tasks);
+        let spec = self.scheme.spec();
+        plan.loads.clear();
+        plan.loads.extend(plan.tasks.iter().map(|t| spec.task_load(t)));
+        for f in self.finish.iter_mut() {
+            *f = None;
+        }
         self.phase = Phase::Collecting;
-        RoundPlan { round: r, tasks, loads }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`begin_round_into`](Self::begin_round_into).
+    pub fn begin_round(&mut self) -> RoundPlan {
+        let mut plan = RoundPlan::default();
+        self.begin_round_into(&mut plan);
+        plan
     }
 
     /// Push one worker's completion time (seconds from round start) for
@@ -311,6 +346,11 @@ impl SgcSession {
         (0..self.n).filter(|&i| self.finish[i].is_none()).collect()
     }
 
+    /// Is any completion time still missing for the open round?
+    fn has_pending(&self) -> bool {
+        self.finish.iter().any(|f| f.is_none())
+    }
+
     /// μ-rule cutoff hint for the open round: `(1 + μ) · κ` where `κ` is
     /// the fastest completion time submitted so far. This is the earliest
     /// wall-clock instant (seconds from round start) at which
@@ -354,26 +394,35 @@ impl SgcSession {
     pub fn try_close_round(&mut self, now_s: f64) -> Vec<SessionEvent> {
         assert_eq!(self.phase, Phase::Collecting, "try_close_round without an open round");
         assert!(now_s.is_finite() && now_s >= 0.0, "now_s must be finite and non-negative");
-        let missing = self.pending_workers();
-        if missing.is_empty() {
+        if !self.has_pending() {
             return self.close_round();
         }
         match self.deadline_hint() {
             Some(hint) if now_s >= hint => {}
             // κ unknown or the cutoff has not passed: cannot cut anyone.
-            _ => return vec![SessionEvent::WaitingFor { workers: missing }],
+            _ => return vec![SessionEvent::WaitingFor { workers: self.pending_workers() }],
         }
         // Missing workers finish strictly after now_s ≥ (1+μ)κ: model
         // them as unboundedly late and let the one decision procedure
         // classify them.
-        let finish: Vec<f64> =
-            self.finish.iter().map(|f| f.unwrap_or(f64::INFINITY)).collect();
-        let decision = self.decide_round(&finish);
-        if decision.responded.iter().zip(&finish).any(|(&ok, &f)| ok && f.is_infinite()) {
+        let mut finish = std::mem::take(&mut self.scratch.finish);
+        finish.clear();
+        finish.extend(self.finish.iter().map(|f| f.unwrap_or(f64::INFINITY)));
+        let stats = self.decide_round(&finish);
+        let needs_missing = self
+            .scratch
+            .responded
+            .iter()
+            .zip(&finish)
+            .any(|(&ok, &f)| ok && f.is_infinite());
+        let events = if needs_missing {
             // The wait-out policy needs a worker that has not arrived.
-            return vec![SessionEvent::WaitingFor { workers: missing }];
-        }
-        self.commit_decision(&finish, decision)
+            vec![SessionEvent::WaitingFor { workers: self.pending_workers() }]
+        } else {
+            self.commit_decision(&finish, stats)
+        };
+        self.scratch.finish = finish;
+        events
     }
 
     /// Close the open round: apply the μ-rule and wait-out policy to the
@@ -385,22 +434,26 @@ impl SgcSession {
     /// [`SessionEvent::WaitingFor`] and leaves the round open.
     pub fn close_round(&mut self) -> Vec<SessionEvent> {
         assert_eq!(self.phase, Phase::Collecting, "close_round without an open round");
-        let missing = self.pending_workers();
-        if !missing.is_empty() {
-            return vec![SessionEvent::WaitingFor { workers: missing }];
+        if self.has_pending() {
+            return vec![SessionEvent::WaitingFor { workers: self.pending_workers() }];
         }
-        let finish: Vec<f64> = self.finish.iter().map(|f| f.unwrap()).collect();
-        let decision = self.decide_round(&finish);
-        self.commit_decision(&finish, decision)
+        let mut finish = std::mem::take(&mut self.scratch.finish);
+        finish.clear();
+        finish.extend(self.finish.iter().map(|f| f.unwrap()));
+        let stats = self.decide_round(&finish);
+        let events = self.commit_decision(&finish, stats);
+        self.scratch.finish = finish;
+        events
     }
 
     /// Run the μ-rule + wait-out decision for the open round on the given
-    /// completion times (no state change).
-    fn decide_round(&self, finish: &[f64]) -> RoundDecision {
+    /// completion times. Writes the responder set into the session's
+    /// scratch buffers; no committed state changes.
+    fn decide_round(&mut self, finish: &[f64]) -> DecisionStats {
         let r = self.round;
         let deadline_done =
             self.scheme.deadline_job(r).map(|t| self.job_done[t - 1]).unwrap_or(true);
-        decide(
+        decide_into(
             finish,
             self.cfg.mu,
             self.wait_policy,
@@ -408,32 +461,37 @@ impl SgcSession {
             self.scheme.as_ref(),
             r,
             deadline_done,
+            &mut self.scratch.responded,
+            &mut self.scratch.stragglers,
+            &mut self.scratch.order,
         )
     }
 
     /// Commit a round decision: record patterns, advance the scheme and
-    /// checker, decode newly complete jobs, emit events.
-    fn commit_decision(&mut self, finish: &[f64], decision: RoundDecision) -> Vec<SessionEvent> {
+    /// checker, decode newly complete jobs, emit events. Reads the
+    /// responder set produced by [`decide_into`] from the scratch buffers.
+    fn commit_decision(&mut self, finish: &[f64], stats: DecisionStats) -> Vec<SessionEvent> {
         let r = self.round;
-        let RoundDecision { responded, mut duration, kappa, detected, admitted } = decision;
+        let DecisionStats { mut duration, kappa, detected, admitted } = stats;
         self.detected_pattern.push_round(
             finish.iter().map(|&f| f > (1.0 + self.cfg.mu) * kappa).collect(),
         );
 
-        let effective_stragglers: Vec<bool> = responded.iter().map(|&x| !x).collect();
-        self.checker.commit(&effective_stragglers);
-        self.scheme.commit_round(r, &responded);
+        // decide_into maintains stragglers == !responded.
+        self.checker.commit(&self.scratch.stragglers);
+        self.scheme.commit_round(r, &self.scratch.responded);
 
         // Decode every newly complete job; optionally time the real
-        // linear-algebra decode.
-        let mut completed = Vec::new();
+        // linear-algebra decode (drawn from the shared plan cache).
+        let mut completed = std::mem::take(&mut self.scratch.completed);
+        completed.clear();
         let mut decode_s = 0.0;
         for t in self.frontier..=self.cfg.jobs.min(r) {
             if self.job_done[t - 1] || !self.scheme.decodable(t) {
                 continue;
             }
             if self.cfg.measure_decode {
-                decode_s += time_decode(&mut self.codes, self.scheme.as_ref(), t);
+                decode_s += time_decode(self.scheme.as_ref(), t);
             }
             self.job_done[t - 1] = true;
             completed.push(t);
@@ -471,9 +529,11 @@ impl SgcSession {
             detected_stragglers: detected,
             waited_out: admitted,
             decode_s,
-            jobs_completed: completed,
+            jobs_completed: completed.clone(),
         });
-        self.responded = responded;
+        self.scratch.completed = completed;
+        self.responded.clear();
+        self.responded.extend_from_slice(&self.scratch.responded);
         self.phase = Phase::Ready;
         if self.round == self.total_rounds {
             events.push(SessionEvent::RunComplete { total_runtime_s: self.clock });
@@ -500,10 +560,15 @@ impl SgcSession {
 }
 
 /// Apply the μ-rule and the wait-out policy to a round's completion
-/// times. `r` must be the currently assigned, uncommitted round of
-/// `scheme`. This is the *only* copy of the round-decision logic; every
-/// execution backend reaches it through [`SgcSession::close_round`].
-fn decide(
+/// times, writing the responder set into `responded` (and its negation
+/// into `stragglers`; `order` is the admission-queue scratch). `r` must
+/// be the currently assigned, uncommitted round of `scheme`. This is the
+/// *only* copy of the round-decision logic; every execution backend
+/// reaches it through [`SgcSession::close_round`]. All three buffers are
+/// cleared and refilled — reusing them across rounds is what keeps the
+/// steady-state decision allocation-free.
+#[allow(clippy::too_many_arguments)]
+fn decide_into(
     finish: &[f64],
     mu: f64,
     policy: WaitPolicy,
@@ -511,75 +576,85 @@ fn decide(
     scheme: &dyn Scheme,
     r: usize,
     deadline_already_done: bool,
-) -> RoundDecision {
+    responded: &mut Vec<bool>,
+    stragglers: &mut Vec<bool>,
+    order: &mut Vec<usize>,
+) -> DecisionStats {
     let n = finish.len();
     let kappa = finish.iter().cloned().fold(f64::INFINITY, f64::min);
     let cutoff = (1.0 + mu) * kappa;
-    let mut responded: Vec<bool> = finish.iter().map(|&f| f <= cutoff).collect();
-    let detected = n - responded.iter().filter(|&&x| x).count();
+    responded.clear();
+    responded.extend(finish.iter().map(|&f| f <= cutoff));
+    stragglers.clear();
+    stragglers.extend(responded.iter().map(|&x| !x));
+    let detected = stragglers.iter().filter(|&&x| x).count();
     let mut duration = if detected == 0 {
         finish.iter().cloned().fold(0.0, f64::max)
     } else {
         cutoff
     };
 
-    let mut pending: Vec<usize> = (0..n).filter(|&i| !responded[i]).collect();
-    pending.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
+    // Non-responders in completion order; `next` walks the queue as the
+    // wait-out policy admits them back.
+    order.clear();
+    order.extend((0..n).filter(|&i| !responded[i]));
+    order.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
     let mut admitted = 0usize;
-    let mut next = pending.into_iter();
+    let mut next = 0usize;
     loop {
         let satisfied = match policy {
             WaitPolicy::WaitAll => responded.iter().all(|&x| x),
-            WaitPolicy::ConformanceRepair => {
-                let stragglers: Vec<bool> = responded.iter().map(|&x| !x).collect();
-                checker.acceptable(&stragglers)
-            }
+            WaitPolicy::ConformanceRepair => checker.acceptable(stragglers),
             WaitPolicy::DeadlineDecode => match scheme.deadline_job(r) {
-                Some(t) if !deadline_already_done => scheme.decodable_with(t, r, &responded),
+                Some(t) if !deadline_already_done => scheme.decodable_with(t, r, responded),
                 _ => true,
             },
         };
         if satisfied {
             break;
         }
-        match next.next() {
-            Some(w) => {
-                responded[w] = true;
-                duration = duration.max(finish[w]);
-                admitted += 1;
-            }
-            None => break,
+        if next >= order.len() {
+            break;
         }
+        let w = order[next];
+        next += 1;
+        responded[w] = true;
+        stragglers[w] = false;
+        duration = duration.max(finish[w]);
+        admitted += 1;
     }
 
     // Backstop (ConformanceRepair): the deadline job must decode now.
+    // The not-yet-admitted suffix of `order` is exactly the remaining
+    // non-responders, already in completion order.
     if policy == WaitPolicy::ConformanceRepair {
         if let Some(t) = scheme.deadline_job(r) {
             if !deadline_already_done {
-                let mut rest: Vec<usize> = (0..n).filter(|&i| !responded[i]).collect();
-                rest.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
-                let mut rest = rest.into_iter();
-                while !scheme.decodable_with(t, r, &responded) {
-                    match rest.next() {
-                        Some(w) => {
-                            responded[w] = true;
-                            duration = duration.max(finish[w]);
-                            admitted += 1;
-                        }
-                        None => break,
+                while !scheme.decodable_with(t, r, responded) {
+                    if next >= order.len() {
+                        break;
                     }
+                    let w = order[next];
+                    next += 1;
+                    responded[w] = true;
+                    stragglers[w] = false;
+                    duration = duration.max(finish[w]);
+                    admitted += 1;
                 }
             }
         }
     }
 
-    RoundDecision { responded, duration, kappa, detected, admitted }
+    DecisionStats { duration, kappa, detected, admitted }
 }
 
 /// Time the actual decode work for a job: one coefficient solve per
 /// non-trivially coded group (replication groups decode by a trivial sum
-/// and cost ~0).
-fn time_decode(codes: &mut HashMap<usize, GcCode>, scheme: &dyn Scheme, job: usize) -> f64 {
+/// and cost ~0). Codes come from the process-wide [`CodePlanCache`], so
+/// the measured cost reflects what a production master would pay: the
+/// first occurrence of a responder set solves, repeats hit the shared
+/// cache.
+fn time_decode(scheme: &dyn Scheme, job: usize) -> f64 {
     let n = scheme.spec().n;
     let ledger = scheme.ledger(job);
     let sw = Stopwatch::start();
@@ -588,13 +663,13 @@ fn time_decode(codes: &mut HashMap<usize, GcCode>, scheme: &dyn Scheme, job: usi
             continue; // replication / degenerate group: trivial decode
         }
         let s = n - need;
-        let code = codes.entry(s).or_insert_with(|| GcCode::new(n, s, 0xdec0de));
+        let plan = CodePlanCache::global().get(n, s);
         let mut workers: Vec<usize> = got.iter().cloned().collect();
         workers.sort_unstable();
         workers.truncate(need);
         // The solve is the measured cost; failure here would mean a
         // non-decodable set, which `decodable()` already excluded.
-        let _ = code.decode_coeffs(&workers);
+        let _ = plan.decode_coeffs(&workers);
     }
     sw.elapsed_s()
 }
@@ -639,6 +714,34 @@ mod tests {
         let report = session.into_report();
         assert_eq!(report.rounds.len(), jobs);
         assert_eq!(report.deadline_violations, 0);
+    }
+
+    #[test]
+    fn reused_plan_matches_fresh_plans() {
+        // begin_round_into with one reused plan must hand out the same
+        // rounds as allocating begin_round on a twin session.
+        let jobs = 6;
+        let mut fresh = gc_session(5, 1, jobs);
+        let mut reusing = gc_session(5, 1, jobs);
+        let mut plan = RoundPlan::default();
+        let finish = [1.0, 1.1, 0.9, 1.05, 2.4];
+        while !fresh.is_complete() {
+            let p = fresh.begin_round();
+            reusing.begin_round_into(&mut plan);
+            assert_eq!(p.round, plan.round);
+            assert_eq!(p.loads, plan.loads);
+            assert_eq!(p.tasks.len(), plan.tasks.len());
+            for (a, b) in p.tasks.iter().zip(&plan.tasks) {
+                assert_eq!(a.units, b.units);
+            }
+            fresh.submit_all(&finish);
+            reusing.submit_all(&finish);
+            assert_eq!(fresh.close_round(), reusing.close_round());
+        }
+        assert!(reusing.is_complete());
+        let a = fresh.into_report();
+        let b = reusing.into_report();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
     #[test]

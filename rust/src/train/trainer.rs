@@ -9,9 +9,9 @@
 //! master at each job's completion.
 
 use crate::cluster::Cluster;
-use crate::coding::{GcCode, Scheme, SchemeConfig, SchemeKind, WorkUnit};
+use crate::coding::{CodePlan, CodePlanCache, Scheme, SchemeConfig, SchemeKind, WorkUnit};
 use crate::runtime::{ComputePool, GradRequest};
-use crate::session::{SessionConfig, SessionEvent, SgcSession};
+use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
 use crate::train::adam::Adam;
 use crate::train::dataset::Dataset;
 use crate::util::rng::Pcg32;
@@ -189,7 +189,9 @@ impl MultiModelTrainer {
         anyhow::ensure!(cluster.n() == n, "cluster size mismatch");
         let chunk_cap = self.pool.dims().chunk;
         let mut batch_rng = Pcg32::new(self.cfg.seed, 0xba7c);
-        let mut codes: HashMap<usize, GcCode> = HashMap::new();
+        // GC code plans drawn from the process-wide cache (constructed
+        // once per (n, s) across every trainer/session in the process).
+        let mut plans: HashMap<usize, Arc<CodePlan>> = HashMap::new();
 
         // Per-model optimizer + parameters.
         let dims = self.pool.dims();
@@ -214,8 +216,10 @@ impl MultiModelTrainer {
         let mut curve = Vec::new();
         let chunk_fracs = session.scheme().spec().chunk_sizes.clone();
 
+        // One plan buffer reused across all rounds (§Perf).
+        let mut plan = RoundPlan::default();
         while !session.is_complete() {
-            let plan = session.begin_round();
+            session.begin_round_into(&mut plan);
             let r = plan.round;
             // Start job r: snapshot the owning model's params, sample and
             // split the batch.
@@ -254,7 +258,7 @@ impl MultiModelTrainer {
                 &plan.tasks,
                 session.last_responded(),
                 &mut jobs_state,
-                &mut codes,
+                &mut plans,
             )?;
 
             // Numerically decode the jobs the session decoded at the
@@ -263,7 +267,7 @@ impl MultiModelTrainer {
             for ev in &events {
                 let SessionEvent::JobDecoded { job, .. } = ev else { continue };
                 let t = *job;
-                let grad = self.finalize_job(session.scheme(), t, &mut jobs_state, &mut codes)?;
+                let grad = self.finalize_job(session.scheme(), t, &mut jobs_state, &mut plans)?;
                 let js = jobs_state[t - 1].as_mut().unwrap();
                 js.done = true;
                 completed += 1;
@@ -319,7 +323,7 @@ impl MultiModelTrainer {
         tasks: &[crate::coding::TaskDesc],
         responded: &[bool],
         jobs_state: &mut [Option<JobState>],
-        codes: &mut HashMap<usize, GcCode>,
+        plans: &mut HashMap<usize, Arc<CodePlan>>,
     ) -> Result<()> {
         // Phase 1 — collect the distinct (job, chunk) gradients this round
         // needs and submit them all (they run in parallel across compute
@@ -342,7 +346,7 @@ impl MultiModelTrainer {
                         }
                     }
                     WorkUnit::Coded { chunks, .. } => {
-                        for &c in chunks {
+                        for &c in chunks.iter() {
                             needed.insert((job, c));
                         }
                     }
@@ -401,14 +405,15 @@ impl MultiModelTrainer {
                             .iter()
                             .map(|&l| vec![0.0f32; l])
                             .collect();
-                        for &c in chunks {
+                        for &c in chunks.iter() {
                             let coeff = if self.rep_coding || need <= 1 {
                                 1.0f32
                             } else {
                                 let s = n - need;
-                                let code =
-                                    codes.entry(s).or_insert_with(|| GcCode::new(n, s, 0xdec0de));
-                                code.b[(*row, c % n)] as f32
+                                let plan = plans
+                                    .entry(s)
+                                    .or_insert_with(|| CodePlanCache::global().get(n, s));
+                                plan.b()[(*row, c % n)] as f32
                             };
                             let (_, grads) = values.get(&(job, c)).expect("coded value");
                             for (e, g) in ell.iter_mut().zip(grads) {
@@ -436,7 +441,7 @@ impl MultiModelTrainer {
         scheme: &dyn Scheme,
         job: usize,
         jobs_state: &mut [Option<JobState>],
-        codes: &mut HashMap<usize, GcCode>,
+        plans: &mut HashMap<usize, Arc<CodePlan>>,
     ) -> Result<Vec<Vec<f32>>> {
         let n = scheme.spec().n;
         let dims = self.pool.dims();
@@ -456,14 +461,15 @@ impl MultiModelTrainer {
                 add_into_vec(&mut total, ell);
             } else {
                 let s = n - need;
-                let code = codes.entry(s).or_insert_with(|| GcCode::new(n, s, 0xdec0de));
+                let plan =
+                    plans.entry(s).or_insert_with(|| CodePlanCache::global().get(n, s));
                 let mut chosen: Vec<&(usize, Vec<Vec<f32>>)> = results.iter().collect();
                 chosen.sort_by_key(|(w, _)| *w);
                 chosen.dedup_by_key(|(w, _)| *w);
                 chosen.truncate(need);
                 anyhow::ensure!(chosen.len() >= need, "not enough coded results");
                 let workers: Vec<usize> = chosen.iter().map(|(w, _)| *w).collect();
-                let beta = code
+                let beta = plan
                     .decode_coeffs(&workers)
                     .context("undecodable coded group (numeric)")?;
                 for (k, (_, ell)) in chosen.iter().enumerate() {

@@ -6,6 +6,21 @@
 //! (Cholesky on the (n-s)×(n-s) Gram matrix), which is both faster and more
 //! cache-friendly than Gaussian elimination on the full n×(n-s) system at
 //! the paper's n = 256.
+//!
+//! The kernels here are shaped for the decode hot path (see
+//! `rust/DESIGN.md` §Performance):
+//!
+//! * [`dot`] / [`axpy_f64`] / [`axpy_f32`] run 4-wide chunked loops (four
+//!   independent accumulators / lanes the compiler can keep in registers
+//!   and auto-vectorize).
+//! * [`cholesky_into`] and [`cholesky_solve_into`] factor and solve into
+//!   caller-owned buffers, so repeated solves (iterative refinement, the
+//!   probe's candidate sweeps) reuse their scratch instead of
+//!   reallocating per call. The allocating [`cholesky`] /
+//!   [`cholesky_solve`] wrappers remain for one-shot callers.
+//! * [`axpy_f32`] is the f32 encode/decode kernel behind
+//!   [`crate::coding::GcCode::encode`]/`decode`: elementwise, so its
+//!   results are bit-identical to the scalar reference loop.
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -51,24 +66,37 @@ impl Matrix {
 
     /// `self * v` (v has len = cols).
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// `self * v` into a caller-owned buffer (cleared and refilled).
+    pub fn matvec_into(&self, v: &[f64], out: &mut Vec<f64>) {
         assert_eq!(v.len(), self.cols);
-        (0..self.rows).map(|i| dot(self.row(i), v)).collect()
+        out.clear();
+        out.extend((0..self.rows).map(|i| dot(self.row(i), v)));
     }
 
     /// `selfᵀ * v` (v has len = rows).
     pub fn tr_matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.tr_matvec_into(v, &mut out);
+        out
+    }
+
+    /// `selfᵀ * v` into a caller-owned buffer (cleared and refilled).
+    pub fn tr_matvec_into(&self, v: &[f64], out: &mut Vec<f64>) {
         assert_eq!(v.len(), self.rows);
-        let mut out = vec![0.0; self.cols];
+        out.clear();
+        out.resize(self.cols, 0.0);
         for i in 0..self.rows {
             let vi = v[i];
             if vi == 0.0 {
                 continue;
             }
-            for (o, &a) in out.iter_mut().zip(self.row(i)) {
-                *o += vi * a;
-            }
+            axpy_f64(out, vi, self.row(i));
         }
-        out
     }
 
     /// Dense matmul (small sizes only — verification paths).
@@ -83,9 +111,7 @@ impl Matrix {
                 }
                 let orow = other.row(k);
                 let out_row = out.row_mut(i);
-                for (o, &b) in out_row.iter_mut().zip(orow) {
-                    *o += a * b;
-                }
+                axpy_f64(out_row, a, orow);
             }
         }
         out
@@ -121,10 +147,67 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     }
 }
 
+/// 4-wide chunked dot product: four independent accumulators break the
+/// add-latency dependency chain (the B rows at n = 256 are long enough
+/// for this to dominate decode setup).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    let n4 = a.len() & !3;
+    let (a4, at) = a.split_at(n4);
+    let (b4, bt) = b.split_at(n4);
+    let mut acc = [0.0f64; 4];
+    for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in at.iter().zip(bt) {
+        tail += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// `out += a * x`, 4-wide chunked. Elementwise, so bit-identical to the
+/// scalar loop.
+#[inline]
+pub fn axpy_f64(out: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n4 = out.len() & !3;
+    let (o4, ot) = out.split_at_mut(n4);
+    let (x4, xt) = x.split_at(n4);
+    for (oc, xc) in o4.chunks_exact_mut(4).zip(x4.chunks_exact(4)) {
+        oc[0] += a * xc[0];
+        oc[1] += a * xc[1];
+        oc[2] += a * xc[2];
+        oc[3] += a * xc[3];
+    }
+    for (o, &v) in ot.iter_mut().zip(xt) {
+        *o += a * v;
+    }
+}
+
+/// `out += a * x` over f32 gradients — the encode/decode kernel of
+/// [`crate::coding::GcCode`]. Elementwise (each output lane sees the same
+/// operation order as a scalar loop), so results are bit-identical to the
+/// scalar reference.
+#[inline]
+pub fn axpy_f32(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n4 = out.len() & !3;
+    let (o4, ot) = out.split_at_mut(n4);
+    let (x4, xt) = x.split_at(n4);
+    for (oc, xc) in o4.chunks_exact_mut(4).zip(x4.chunks_exact(4)) {
+        oc[0] += a * xc[0];
+        oc[1] += a * xc[1];
+        oc[2] += a * xc[2];
+        oc[3] += a * xc[3];
+    }
+    for (o, &v) in ot.iter_mut().zip(xt) {
+        *o += a * v;
+    }
 }
 
 /// Solve a square system `A x = b` with partial-pivoting Gaussian
@@ -182,53 +265,74 @@ pub fn solve_square(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
     Some(x)
 }
 
-/// Cholesky factorisation of an SPD matrix (in place lower triangle).
-/// Returns `None` if not positive definite.
-pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+/// Cholesky factorisation of an SPD matrix into a caller-owned factor
+/// buffer (resized/zeroed as needed, so repeated factorizations reuse the
+/// allocation). Returns `false` if `a` is not positive definite; the
+/// contents of `l` are unspecified in that case.
+///
+/// The inner update is the 4-wide [`dot`] over the already-factored row
+/// prefixes — the classic `ℓ_{ij} = (a_{ij} − Σ_k ℓ_{ik} ℓ_{jk}) / ℓ_{jj}`
+/// with the sum as one dot product over contiguous row storage.
+pub fn cholesky_into(a: &Matrix, l: &mut Matrix) -> bool {
     assert_eq!(a.rows, a.cols);
     let n = a.rows;
-    let mut l = Matrix::zeros(n, n);
+    if l.rows != n || l.cols != n {
+        *l = Matrix::zeros(n, n);
+    } else {
+        l.data.fill(0.0);
+    }
     for i in 0..n {
         for j in 0..=i {
-            let mut sum = a[(i, j)];
-            for k in 0..j {
-                sum -= l[(i, k)] * l[(j, k)];
-            }
+            let sum =
+                a[(i, j)] - dot(&l.data[i * n..i * n + j], &l.data[j * n..j * n + j]);
             if i == j {
                 if sum <= 1e-12 {
-                    return None;
+                    return false;
                 }
-                l[(i, j)] = sum.sqrt();
+                l.data[i * n + j] = sum.sqrt();
             } else {
-                l[(i, j)] = sum / l[(j, j)];
+                l.data[i * n + j] = sum / l.data[j * n + j];
             }
         }
     }
-    Some(l)
+    true
 }
 
-/// Solve `L Lᵀ x = b` given the Cholesky factor `L`.
-pub fn cholesky_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+/// Allocating wrapper over [`cholesky_into`].
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    let mut l = Matrix::zeros(a.rows, a.cols);
+    cholesky_into(a, &mut l).then_some(l)
+}
+
+/// Solve `L Lᵀ x = b` given the Cholesky factor `L`, with caller-owned
+/// forward-solve scratch `y` and output `x` (both cleared and refilled).
+pub fn cholesky_solve_into(l: &Matrix, b: &[f64], y: &mut Vec<f64>, x: &mut Vec<f64>) {
     let n = l.rows;
     assert_eq!(b.len(), n);
-    // forward: L y = b
-    let mut y = vec![0.0; n];
+    // forward: L y = b (row-prefix dot over contiguous storage)
+    y.clear();
+    y.resize(n, 0.0);
     for i in 0..n {
-        let mut acc = b[i];
-        for k in 0..i {
-            acc -= l[(i, k)] * y[k];
-        }
-        y[i] = acc / l[(i, i)];
+        let acc = b[i] - dot(&l.data[i * n..i * n + i], &y[..i]);
+        y[i] = acc / l.data[i * n + i];
     }
-    // backward: Lᵀ x = y
-    let mut x = vec![0.0; n];
+    // backward: Lᵀ x = y (column access; strided, left as scalar loop)
+    x.clear();
+    x.resize(n, 0.0);
     for i in (0..n).rev() {
         let mut acc = y[i];
         for k in i + 1..n {
-            acc -= l[(k, i)] * x[k];
+            acc -= l.data[k * n + i] * x[k];
         }
-        x[i] = acc / l[(i, i)];
+        x[i] = acc / l.data[i * n + i];
     }
+}
+
+/// Allocating wrapper over [`cholesky_solve_into`].
+pub fn cholesky_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let mut y = Vec::new();
+    let mut x = Vec::new();
+    cholesky_solve_into(l, b, &mut y, &mut x);
     x
 }
 
@@ -305,6 +409,35 @@ mod tests {
     }
 
     #[test]
+    fn cholesky_into_reuses_buffers() {
+        let mut rng = Pcg32::seeded(29);
+        let mut l = Matrix::zeros(1, 1); // deliberately the wrong shape
+        let mut y = Vec::new();
+        let mut x = Vec::new();
+        for n in [3usize, 8, 8, 5] {
+            let mut m = Matrix::zeros(n, n + 2);
+            for v in m.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let spd = m.gram_rows();
+            assert!(cholesky_into(&spd, &mut l), "SPD must factor");
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            cholesky_solve_into(&l, &b, &mut y, &mut x);
+            let back = spd.matvec(&x);
+            for (p, q) in back.iter().zip(&b) {
+                assert!((p - q).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_into_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        let mut l = Matrix::zeros(2, 2);
+        assert!(!cholesky_into(&a, &mut l));
+    }
+
+    #[test]
     fn consistent_rows_recovers_ones() {
         // A simple decodable GC-like system: 3 rows over 4 columns whose
         // row space contains the ones vector.
@@ -335,5 +468,43 @@ mod tests {
         let lhs = dot(&x, &a.matvec(&y));
         let rhs = dot(&a.tr_matvec(&x), &y);
         assert!((lhs - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_dot_matches_scalar() {
+        let mut rng = Pcg32::seeded(37);
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 64, 200] {
+            let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let scalar: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(
+                (dot(&a, &b) - scalar).abs() <= 1e-10 * (1.0 + scalar.abs()),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_kernels_match_scalar() {
+        let mut rng = Pcg32::seeded(41);
+        for len in [0usize, 1, 2, 3, 4, 7, 32, 101] {
+            let x32: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let base32: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let a32 = rng.normal() as f32;
+            let mut got = base32.clone();
+            axpy_f32(&mut got, a32, &x32);
+            for ((g, b), &xv) in got.iter().zip(&base32).zip(&x32) {
+                assert_eq!(g.to_bits(), (b + a32 * xv).to_bits(), "len {len}");
+            }
+
+            let x64: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let base64: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let a64 = rng.normal();
+            let mut got = base64.clone();
+            axpy_f64(&mut got, a64, &x64);
+            for ((g, b), &xv) in got.iter().zip(&base64).zip(&x64) {
+                assert_eq!(g.to_bits(), (b + a64 * xv).to_bits(), "len {len}");
+            }
+        }
     }
 }

@@ -1,0 +1,92 @@
+//! Counting-allocator verification of the §Perf claim (rust/DESIGN.md
+//! §Performance): the steady-state round loop —
+//! `begin_round_into` → `submit_all` → `close_round` — performs only a
+//! small constant number of heap allocations per round, independent of
+//! `n`. The survivors are the report's own per-round storage (two
+//! pattern rows, the event list, the round record's completed-jobs
+//! list); the decision path itself (μ-rule, wait-out, scheme commit,
+//! decode scan) runs entirely in reused scratch buffers.
+//!
+//! Before the allocation-free rework each round cost O(n) allocations
+//! (task-list clones, per-unit chunk vectors, ledger clones, fresh
+//! responder/straggler/pending vectors), i.e. hundreds per round at
+//! n = 256 — this test fails loudly if any of that creeps back.
+
+use sgc::coding::SchemeConfig;
+use sgc::session::{RoundPlan, SessionConfig, SgcSession};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAllocator;
+
+// SAFETY: defers entirely to the system allocator; the counter is a
+// relaxed atomic with no allocation of its own.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+/// This file holds exactly one test so no sibling test thread can bleed
+/// allocations into the measured window.
+#[test]
+fn steady_state_round_allocations_are_constant_and_small() {
+    let n = 256;
+    let s = 15;
+    let warmup = 16usize;
+    let measured = 32usize;
+    let jobs = warmup + measured;
+
+    let mut session = SgcSession::new(
+        &SchemeConfig::gc(n, s),
+        SessionConfig { jobs, ..Default::default() },
+    );
+    let mut plan = RoundPlan::default();
+    // quiet cluster: everyone finishes together, no wait-outs
+    let finish = vec![1.0f64; n];
+
+    let run_round = |session: &mut SgcSession, plan: &mut RoundPlan| {
+        session.begin_round_into(plan);
+        session.submit_all(&finish);
+        let events = session.close_round();
+        assert!(!events.is_empty());
+    };
+
+    for _ in 0..warmup {
+        run_round(&mut session, &mut plan);
+    }
+
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for _ in 0..measured {
+        run_round(&mut session, &mut plan);
+    }
+    let total = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    let per_round = total as f64 / measured as f64;
+
+    // Expected steady state: ~4-5 allocations per round (detected +
+    // effective pattern rows, the event vec, the round record's
+    // completed-jobs vec) plus occasional amortized growth of the
+    // report's round storage. The old per-round protocol cost hundreds
+    // at n = 256; 8 is a tight-but-robust ceiling.
+    assert!(
+        per_round <= 8.0,
+        "steady-state round loop allocated {per_round:.1} times/round \
+         ({total} over {measured} rounds) — the allocation-free engine \
+         regressed (expected ≤ 8; the pre-rework protocol costs O(n))"
+    );
+}

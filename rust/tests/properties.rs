@@ -191,7 +191,8 @@ fn prop_gc_code_numeric_decode_over_random_subsets() {
             .collect();
         let truth: Vec<f32> =
             (0..dim).map(|d| partials.iter().map(|p| p[d]).sum()).collect();
-        let workers = g.rng().sample_indices(n, n - s);
+        let mut workers = g.rng().sample_indices(n, n - s);
+        workers.sort_unstable(); // decode_coeffs' canonical (set-keyed) order
         let encoded: Vec<Vec<f32>> = workers
             .iter()
             .map(|&i| {
@@ -228,6 +229,91 @@ fn prop_m_sgc_round_load_never_exceeds_formula() {
             let responded: Vec<bool> = (0..n).map(|_| g.rng().chance(0.8)).collect();
             scheme.commit_round(r, &responded);
         }
+    });
+}
+
+/// §Perf invariant: decode plans served by the process-wide
+/// `CodePlanCache` are bit-identical to fresh, uncached solves of the
+/// same `(n, s, responder set)` — sharing across sessions must be
+/// observationally invisible.
+#[test]
+fn prop_cached_decode_plans_bit_identical_to_fresh_solves() {
+    use sgc::coding::{CodePlanCache, GcCode, PLAN_SEED};
+    use std::sync::Arc;
+    check("plan-cache-bit-identical", 20, |g: &mut Gen| {
+        let n = g.usize_in(4, 32);
+        let s = g.usize_in(1, (n - 1).min(6));
+        let plan = CodePlanCache::global().get(n, s);
+        let mut fresh = GcCode::new(n, s, PLAN_SEED);
+        // sorted responder sets: the canonical order every production
+        // caller (session decode timer, trainer) uses
+        let mut workers = g.rng().sample_indices(n, n - s);
+        workers.sort_unstable();
+        let cached = plan.decode_coeffs(&workers).expect("decodable whp");
+        let direct = fresh.decode_coeffs(&workers).expect("decodable whp");
+        assert_eq!(cached.len(), direct.len());
+        for (a, b) in cached.iter().zip(direct) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "cached plan diverged from fresh solve (n={n}, s={s})"
+            );
+        }
+        // a second lookup is a pure cache hit on the same allocation
+        let again = plan.decode_coeffs(&workers).unwrap();
+        assert!(Arc::ptr_eq(&cached, &again));
+    });
+}
+
+/// §Perf invariant: the 4-wide chunked f32 encode/decode kernels match a
+/// scalar reference implementation within 1e-6 (elementwise axpy is in
+/// fact bit-identical; the end-to-end encode accumulates s+1 terms).
+#[test]
+fn prop_chunked_f32_kernels_match_scalar_reference() {
+    use sgc::coding::GcCode;
+    use sgc::util::linalg;
+    check("chunked-f32-kernels", 30, |g: &mut Gen| {
+        // axpy vs scalar loop
+        let len = g.usize_in(1, 200);
+        let x: Vec<f32> = (0..len).map(|_| g.rng().normal() as f32).collect();
+        let base: Vec<f32> = (0..len).map(|_| g.rng().normal() as f32).collect();
+        let a = g.rng().normal() as f32;
+        let mut chunked = base.clone();
+        linalg::axpy_f32(&mut chunked, a, &x);
+        for ((c, b), &xv) in chunked.iter().zip(&base).zip(&x) {
+            let scalar = b + a * xv;
+            assert!((c - scalar).abs() <= 1e-6 * (1.0 + scalar.abs()), "{c} vs {scalar}");
+        }
+
+        // GcCode::encode vs a scalar reference encode
+        let n = g.usize_in(3, 16);
+        let s = g.usize_in(0, (n - 1).min(4));
+        let dim = g.usize_in(1, 40);
+        let code = GcCode::new(n, s, 555);
+        let row = g.usize_in(0, n - 1);
+        let partials: Vec<Vec<f32>> = (0..=s)
+            .map(|_| (0..dim).map(|_| g.rng().normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
+        let encoded = code.encode(row, &refs);
+        for d in 0..dim {
+            let mut scalar = 0.0f32;
+            for (k, p) in partials.iter().enumerate() {
+                let chunk = (row + k) % n;
+                scalar += code.b[(row, chunk)] as f32 * p[d];
+            }
+            assert!(
+                (encoded[d] - scalar).abs() <= 1e-6 * (1.0 + scalar.abs()),
+                "encode[{d}] = {} vs scalar {scalar}",
+                encoded[d]
+            );
+        }
+
+        // chunked f64 dot vs a sequential sum
+        let u: Vec<f64> = (0..len).map(|_| g.rng().normal()).collect();
+        let v: Vec<f64> = (0..len).map(|_| g.rng().normal()).collect();
+        let scalar: f64 = u.iter().zip(&v).map(|(p, q)| p * q).sum();
+        assert!((linalg::dot(&u, &v) - scalar).abs() <= 1e-9 * (1.0 + scalar.abs()));
     });
 }
 
