@@ -37,7 +37,7 @@ fn main() {
             RunConfig { jobs, wait_policy: policy, ..Default::default() },
         );
         let mut cluster = setup.cluster(71);
-        let rep = master.run(&mut cluster).expect("sizes match");
+        let rep = master.run_events(&mut cluster).expect("sizes match");
         println!(
             "  {name:<20} runtime {:>8.1}s  waitouts {:>4}  violations {}",
             rep.total_runtime_s,
@@ -98,7 +98,7 @@ fn main() {
                 let mut master =
                     Master::new(cfg.clone(), RunConfig { jobs, ..Default::default() });
                 let mut cluster = setup.cluster(900 + r);
-                master.run(&mut cluster).expect("sizes match").total_runtime_s
+                master.run_events(&mut cluster).expect("sizes match").total_runtime_s
             })
             .collect();
         let m = sgc::util::stats::mean(&xs);
@@ -126,7 +126,7 @@ fn main() {
                 Box::new(GilbertElliot::default_fit(setup.n, 7)),
                 55,
             );
-            let rep = master.run(&mut cluster).expect("sizes match");
+            let rep = master.run_events(&mut cluster).expect("sizes match");
             runtimes.push((label, rep.total_runtime_s));
         }
         let msgc = runtimes[0].1;

@@ -14,8 +14,12 @@ fn main() {
     let t_probe = if fast_mode() { 20 } else { 80 };
     println!("== Fig 17: estimated runtime over the parameter grid (n={}) ==\n", setup.n);
     let mut cluster = setup.cluster(4242);
-    let profile = DelayProfile::capture(&mut cluster, t_probe, 1.0 / setup.n as f64);
     let alpha = cluster.latency.alpha_s_per_load;
+    let profile = DelayProfile::capture(
+        &mut sgc::cluster::SyncAdapter::new(&mut cluster),
+        t_probe,
+        1.0 / setup.n as f64,
+    );
 
     let lam_step = (setup.n / 32).max(1);
     let lambdas: Vec<usize> = (1..=setup.n / 4).step_by(lam_step).collect();

@@ -26,7 +26,7 @@ fn main() {
         RunConfig { jobs: t_probe, ..Default::default() },
     );
     let mut cluster = setup.cluster(777);
-    let probe_report = probe_master.run(&mut cluster).expect("sizes match");
+    let probe_report = probe_master.run_events(&mut cluster).expect("sizes match");
     let probe_time = probe_report.total_runtime_s;
     // reuse the measured per-round times as the reference profile
     let profile = DelayProfile {
@@ -63,7 +63,7 @@ fn main() {
         let mut master =
             Master::new(best.clone(), RunConfig { jobs: jobs_after, ..Default::default() });
         let mut c3 = setup.cluster(888);
-        let coded = master.run(&mut c3).expect("sizes match");
+        let coded = master.run_events(&mut c3).expect("sizes match");
         let total = probe_time + search_s + coded.total_runtime_s;
         println!(
             "{:<10} {:<18} {:>12.2} {:>14.1} {:>14.1}",

@@ -35,7 +35,7 @@ fn main() {
                 );
                 let mut cluster =
                     base.cluster(5000 + r as u64).with_storage(StorageParams::resnet18_efs());
-                master.run(&mut cluster).expect("sizes match").total_runtime_s
+                master.run_events(&mut cluster).expect("sizes match").total_runtime_s
             })
             .collect();
         let stats = MeanStd::of(&xs);

@@ -1,19 +1,22 @@
 //! Hot-path microbenchmarks (§Perf): GC decode solve (cold + cached +
-//! shared plan cache), session round-engine throughput, Appendix-J
-//! grid-search throughput, M-SGC assignment, conformance checking, fleet
-//! wire-codec encode/decode, one full simulated round, and the
-//! end-to-end Table-1-scale run.
+//! shared plan cache), session round-engine throughput, multi-job
+//! scheduler throughput (1/4/16 sessions multiplexed over one shared
+//! simulator), Appendix-J grid-search throughput, M-SGC assignment,
+//! conformance checking, fleet wire-codec encode/decode, one full
+//! simulated round, and the end-to-end Table-1-scale run.
 //!
 //! Besides the usual per-label report this bench emits the repo-level
-//! `BENCH_3.json` snapshot (rounds/sec, grid-search speedup, decode-plan
-//! speedup) so the perf trajectory accumulates across PRs.
+//! `BENCH_4.json` snapshot (rounds/sec, scheduler throughput,
+//! grid-search speedup, decode-plan speedup) so the perf trajectory
+//! accumulates across PRs.
 
 use sgc::bench_harness::Bench;
-use sgc::cluster::SimCluster;
+use sgc::cluster::{EventCluster, SimCluster};
 use sgc::coding::{CodePlanCache, GcCode, MSgcParams, MSgcScheme, Scheme, SchemeConfig};
 use sgc::coordinator::{Master, RunConfig};
 use sgc::fleet::Frame;
 use sgc::probe::{estimate_runtime, grid_search, DelayProfile};
+use sgc::sched::{JobScheduler, JobSpec};
 use sgc::session::{RoundPlan, SessionConfig, SgcSession};
 use sgc::straggler::{GilbertElliot, ToleranceChecker};
 use sgc::util::rng::Pcg32;
@@ -121,6 +124,44 @@ fn main() {
         });
     }
 
+    // --- multi-job scheduler throughput -----------------------------------
+    // 1/4/16 concurrent GC sessions multiplexed over ONE shared n=64
+    // simulator through the event-driven JobScheduler: measures the whole
+    // pump (submit → per-worker FIFO queues → poll → incremental μ-rule
+    // close) end to end. Rounds/sec here is aggregate across jobs.
+    let mut sched_mean = [0.0f64; 3];
+    let sched_session_jobs = if fast { 30 } else { 120 };
+    for (slot, jobs) in [1usize, 4, 16].into_iter().enumerate() {
+        let sn = 64;
+        let scheme = SchemeConfig::gc(sn, 7);
+        let reps = if fast { 2 } else { 5 };
+        let mut seed = 0u64;
+        let label = format!("sched_multiplex(n=64,jobs={jobs})");
+        b.run_n(&label, reps, || {
+            seed += 1;
+            let mut sim = SimCluster::from_gilbert_elliot(
+                sn,
+                GilbertElliot::default_fit(sn, 91 + seed),
+                191 + seed,
+            );
+            let mut sched = JobScheduler::new(&mut sim);
+            for _ in 0..jobs {
+                sched
+                    .admit(&JobSpec {
+                        scheme: scheme.clone(),
+                        session: SessionConfig {
+                            jobs: sched_session_jobs,
+                            ..Default::default()
+                        },
+                    })
+                    .expect("sizes match");
+            }
+            let out = sched.run().expect("quiet multiplexed run completes");
+            assert_eq!(out.reports.len(), jobs);
+        });
+        sched_mean[slot] = mean_s(&b, &label);
+    }
+
     // --- Appendix-J grid search: shared vs per-candidate rebuild ----------
     // The shared path is `probe::grid_search`: one Arc-shared delay
     // matrix, candidates fanned over the batch driver, GC code plans
@@ -130,7 +171,8 @@ fn main() {
     {
         let (gn, rounds, jobs, reps) = if fast { (64, 12, 10, 1) } else { (256, 40, 30, 3) };
         let mut cluster =
-            SimCluster::from_gilbert_elliot(gn, GilbertElliot::default_fit(gn, 31), 32);
+            SimCluster::from_gilbert_elliot(gn, GilbertElliot::default_fit(gn, 31), 32)
+                .sync();
         let profile = DelayProfile::capture(&mut cluster, rounds, 1.0 / gn as f64);
         let alpha = 9.5;
         let cands: Vec<SchemeConfig> =
@@ -248,21 +290,27 @@ fn main() {
                 Master::new(scheme.clone(), RunConfig { jobs: 480, ..Default::default() });
             let mut cluster =
                 SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 3), 4);
-            let _ = master.run(&mut cluster).expect("sizes match");
+            let _ = master.run_events(&mut cluster).expect("sizes match");
         });
     }
 
     b.save();
 
-    // --- BENCH_3.json perf snapshot ---------------------------------------
+    // --- BENCH_4.json perf snapshot ---------------------------------------
     let grid_n = if fast { 64 } else { 256 };
     let shared = mean_s(&b, &format!("grid_search_shared(n={grid_n},8 cands)"));
     let legacy = mean_s(&b, &format!("grid_search_percand_rebuild(n={grid_n},8 cands)"));
     let round64 = mean_s(&b, "session_round(n=64,gc)");
     let round256 = mean_s(&b, "session_round(n=256,gc)");
+    // aggregate scheduler throughput: (jobs × rounds-per-job) / wall time
+    let sched_rps =
+        |jobs: usize, mean: f64| (jobs * sched_session_jobs) as f64 / mean.max(1e-12);
     let metrics = [
         ("session_rounds_per_sec_n64", 1.0 / round64),
         ("session_rounds_per_sec_n256", 1.0 / round256),
+        ("sched_rounds_per_sec_jobs1_n64", sched_rps(1, sched_mean[0])),
+        ("sched_rounds_per_sec_jobs4_n64", sched_rps(4, sched_mean[1])),
+        ("sched_rounds_per_sec_jobs16_n64", sched_rps(16, sched_mean[2])),
         ("grid_search_shared_s", shared),
         ("grid_search_percand_rebuild_s", legacy),
         ("grid_search_speedup", legacy / shared),
@@ -271,5 +319,5 @@ fn main() {
             mean_s(&b, "gc_decode_cold(n=256,s=15)") / mean_s(&b, "plan_cache_hit(n=256,s=15)"),
         ),
     ];
-    b.save_snapshot("BENCH_3.json", &metrics);
+    b.save_snapshot("BENCH_4.json", &metrics);
 }

@@ -31,8 +31,12 @@ fn main() {
         for &tp in &probes {
             // capture a T_probe-round uncoded profile
             let mut cluster = setup.cluster(4242);
-            let profile = DelayProfile::capture(&mut cluster, tp, 1.0 / setup.n as f64);
             let alpha = cluster.latency.alpha_s_per_load;
+            let profile = DelayProfile::capture(
+                &mut sgc::cluster::SyncAdapter::new(&mut cluster),
+                tp,
+                1.0 / setup.n as f64,
+            );
             let ranked = grid_search(&cands, &profile, alpha, jobs_for_estimate);
             let best: &SchemeConfig = &ranked[0].config;
             // actually run the selected parameters (fewer reps: this is a

@@ -1,0 +1,365 @@
+//! Event-driven execution backend API: the multi-job successor of the
+//! blocking [`Cluster`] trait.
+//!
+//! A [`Cluster`] serves exactly one session and one round at a time —
+//! `sample_round` blocks until every worker's completion time is known.
+//! [`EventCluster`] inverts that: any number of `(job, round)` task sets
+//! can be in flight at once, and the backend *streams* per-worker
+//! completions back as [`ClusterEvent`]s. This is what lets one shared
+//! fleet execute many SGC sessions concurrently (the paper's multi-model
+//! headline experiment) with real cross-job contention: a worker busy on
+//! job A delays its job-B task instead of being sampled independently
+//! per session.
+//!
+//! The driving loop (see [`crate::sched::JobScheduler`]):
+//!
+//! ```text
+//! cluster.submit(job, round, loads)        // fan a round's tasks out
+//! loop {
+//!     for ev in cluster.poll(until_s) {    // stream arrivals back
+//!         match ev {
+//!             WorkerDone { .. } => session.submit(..),
+//!             WorkerDead { .. } | RoundTimeout { .. } => ..,
+//!         }
+//!     }
+//!     session.try_close_round(now) ..      // μ-rule on the event stream
+//! }
+//! ```
+//!
+//! The old blocking trait is kept as a thin bridge: [`SyncAdapter`]
+//! implements [`Cluster`] on top of *any* [`EventCluster`] by submitting
+//! one round and draining events until all `n` workers have reported —
+//! so every existing single-session caller (`session::drive`, trace
+//! recording, the probe) keeps working, while each backend implements
+//! exactly one execution protocol.
+
+use super::sim::RoundSample;
+use super::Cluster;
+
+/// Identifies one admitted session within a multi-job backend.
+pub type JobId = usize;
+
+/// The job id [`SyncAdapter`] submits under (reserved; schedulers number
+/// their jobs from 0).
+pub const SYNC_JOB: JobId = usize::MAX;
+
+/// One streamed backend event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClusterEvent {
+    /// A worker finished its `(job, round)` task. `finish_s` is seconds
+    /// from that submission's start — exactly what
+    /// [`SgcSession::submit`](crate::session::SgcSession::submit) wants —
+    /// and includes any queueing delay behind other jobs' tasks.
+    WorkerDone { job: JobId, round: u64, worker: usize, finish_s: f64 },
+    /// A worker can *permanently* no longer produce a result for
+    /// `(job, round)`: its connection dropped, it returned a byzantine
+    /// result, or it was already unusable when the round was assigned.
+    /// Recoverable conditions (a stale heartbeat on a loaded box) are
+    /// deliberately not reported — the backend's round-timeout backstop
+    /// covers a stall that never recovers. Simulated backends never emit
+    /// this.
+    WorkerDead { job: JobId, round: u64, worker: usize },
+    /// `(job, round)` exceeded the backend's hard per-round wall-clock
+    /// cap with results still missing. Emitted at most once per
+    /// submission; harmless for rounds the driver already closed.
+    RoundTimeout { job: JobId, round: u64 },
+}
+
+/// Event-driven execution backend: accepts task sets for many `(job,
+/// round)` pairs concurrently and streams per-worker completions.
+///
+/// Implementations in-tree: [`SimCluster`](super::SimCluster) (virtual
+/// clock, per-worker FIFO queues — real cross-job contention),
+/// [`TraceReplayCluster`](super::TraceReplayCluster) (recorded delay
+/// matrix, one row per submission) and
+/// [`FleetCluster`](crate::fleet::FleetCluster) (live TCP workers, wall
+/// clock).
+pub trait EventCluster {
+    /// Number of workers `n`.
+    fn n(&self) -> usize;
+
+    /// Current cluster clock in seconds since the cluster started:
+    /// virtual (advanced by [`poll`](Self::poll)) for simulators, wall
+    /// time for real fleets.
+    fn now_s(&self) -> f64;
+
+    /// Fan one round's tasks out: worker `i` receives normalized load
+    /// `loads[i]` for `(job, round)`, starting no earlier than the
+    /// current clock (and, under contention, no earlier than the worker
+    /// finishing its queued work). `(job, round)` must be unique among
+    /// in-flight submissions; `loads.len()` must equal
+    /// [`n`](Self::n).
+    ///
+    /// Submitting a later round of a job whose earlier tasks are still
+    /// queued *preempts* those tasks on simulated backends — the master
+    /// only re-assigns a worker after cutting it from the previous
+    /// round, so the fresh assignment supersedes the stale one. Tasks of
+    /// *other* jobs are never preempted; they queue FIFO.
+    fn submit(&mut self, job: JobId, round: u64, loads: &[f64]);
+
+    /// Deliver pending events with timestamps up to `until_s` (absolute,
+    /// same axis as [`now_s`](Self::now_s)).
+    ///
+    /// Contract:
+    /// * a *simulated* clock never advances past `until_s`, and never
+    ///   past an undelivered event — after a non-empty return, `now_s()`
+    ///   equals the delivered events' timestamp. Wall-clock backends
+    ///   treat the horizon as a sleep bound only (real time keeps
+    ///   flowing);
+    /// * a call may return a *partial* batch (or, for wall-clock
+    ///   backends, an empty one at an implementation-defined heartbeat
+    ///   pace before `until_s`); callers loop until they have what they
+    ///   need;
+    /// * with nothing in flight and a finite `until_s`, the clock
+    ///   advances to `until_s` and the slice is empty.
+    fn poll(&mut self, until_s: f64) -> &[ClusterEvent];
+
+    /// Ground-truth straggler states of a submission, when the backend
+    /// knows them (simulators and trace replays do; a real fleet returns
+    /// `None`). Valid at least until the next `submit` for the same job.
+    fn true_state(&self, job: JobId, round: u64) -> Option<&[bool]>;
+
+    /// Wrap this backend in the blocking [`SyncAdapter`] bridge (one
+    /// round in flight, wait for all `n` results). Borrow-friendly:
+    /// `SyncAdapter::new(&mut backend)` works too, via the `&mut E`
+    /// blanket impl.
+    fn sync(self) -> SyncAdapter<Self>
+    where
+        Self: Sized,
+    {
+        SyncAdapter::new(self)
+    }
+}
+
+impl<E: EventCluster + ?Sized> EventCluster for &mut E {
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+
+    fn now_s(&self) -> f64 {
+        (**self).now_s()
+    }
+
+    fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+        (**self).submit(job, round, loads)
+    }
+
+    fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+        (**self).poll(until_s)
+    }
+
+    fn true_state(&self, job: JobId, round: u64) -> Option<&[bool]> {
+        (**self).true_state(job, round)
+    }
+}
+
+/// Blocking bridge: drives an [`EventCluster`] through the classic
+/// [`Cluster`] protocol — submit one round, drain events until every
+/// worker reported, return the dense [`RoundSample`].
+///
+/// Because simulated backends start a submission's tasks on idle workers
+/// (the previous round fully drained first), the sample equals what the
+/// backend's pre-event blocking implementation produced — byte for byte,
+/// RNG draw for RNG draw — which is what keeps `tests/golden.rs` and
+/// trace replays pinned across the API redesign.
+///
+/// The blocking protocol has no error channel, so a dead worker or a
+/// round timeout panics here (exactly like the old blocking fleet
+/// implementation); fallible paths should drive the event API via
+/// [`crate::sched::JobScheduler`] instead.
+pub struct SyncAdapter<E: EventCluster> {
+    inner: E,
+    rounds: u64,
+}
+
+impl<E: EventCluster> SyncAdapter<E> {
+    pub fn new(inner: E) -> Self {
+        SyncAdapter { inner, rounds: 0 }
+    }
+
+    /// The wrapped backend.
+    pub fn get_ref(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn get_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+}
+
+impl<E: EventCluster> Cluster for SyncAdapter<E> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+        let n = self.inner.n();
+        assert_eq!(loads.len(), n, "loads length mismatch");
+        self.rounds += 1;
+        let round = self.rounds;
+        self.inner.submit(SYNC_JOB, round, loads);
+        // One allocation per blocking round is inherent: the buffer is
+        // handed to the caller inside the returned RoundSample.
+        let mut finish = vec![f64::NAN; n];
+        let mut missing = n;
+        let mut stalls = 0u32;
+        while missing > 0 {
+            let before = self.inner.now_s();
+            let events = self.inner.poll(f64::INFINITY);
+            if events.is_empty() {
+                // A wall-clock backend legitimately returns empty at its
+                // heartbeat pace (time advanced); a simulator with no
+                // pending events can never make progress — fail loudly
+                // instead of spinning forever.
+                stalls = if self.inner.now_s() > before { 0 } else { stalls + 1 };
+                assert!(
+                    stalls < 1000,
+                    "SyncAdapter: backend made no progress with {missing} results missing"
+                );
+                continue;
+            }
+            stalls = 0;
+            for ev in events {
+                match *ev {
+                    ClusterEvent::WorkerDone { job, round: r, worker, finish_s }
+                        if job == SYNC_JOB && r == round =>
+                    {
+                        if finish[worker].is_nan() {
+                            finish[worker] = finish_s;
+                            missing -= 1;
+                        }
+                    }
+                    ClusterEvent::WorkerDone { .. } => {} // stale round: ignore
+                    ClusterEvent::WorkerDead { worker, .. } => {
+                        panic!("worker {worker} died during a blocking round")
+                    }
+                    ClusterEvent::RoundTimeout { job, round: r }
+                        if job == SYNC_JOB && r == round =>
+                    {
+                        panic!("blocking round {round} timed out")
+                    }
+                    ClusterEvent::RoundTimeout { .. } => {}
+                }
+            }
+        }
+        let state = match self.inner.true_state(SYNC_JOB, round) {
+            Some(s) => s.to_vec(),
+            None => vec![false; n],
+        };
+        RoundSample { finish, state }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal scripted backend for adapter tests.
+    struct Scripted {
+        n: usize,
+        clock: f64,
+        pending: Vec<ClusterEvent>,
+        buf: Vec<ClusterEvent>,
+        state: Vec<bool>,
+    }
+
+    impl EventCluster for Scripted {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn now_s(&self) -> f64 {
+            self.clock
+        }
+
+        fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+            assert_eq!(loads.len(), self.n);
+            // finish in reverse worker order, one second apart
+            for w in 0..self.n {
+                self.pending.push(ClusterEvent::WorkerDone {
+                    job,
+                    round,
+                    worker: w,
+                    finish_s: (self.n - w) as f64,
+                });
+            }
+        }
+
+        fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+            self.buf.clear();
+            if let Some(ev) = self.pending.first().copied() {
+                let t = match ev {
+                    ClusterEvent::WorkerDone { finish_s, .. } => self.clock + finish_s,
+                    _ => self.clock,
+                };
+                if t <= until_s {
+                    self.pending.remove(0);
+                    self.buf.push(ev);
+                }
+            }
+            &self.buf
+        }
+
+        fn true_state(&self, _job: JobId, _round: u64) -> Option<&[bool]> {
+            Some(&self.state)
+        }
+    }
+
+    #[test]
+    fn sync_adapter_collects_all_workers() {
+        let scripted = Scripted {
+            n: 3,
+            clock: 0.0,
+            pending: Vec::new(),
+            buf: Vec::new(),
+            state: vec![false, true, false],
+        };
+        let mut sync = scripted.sync();
+        let sample = sync.sample_round(&[0.1, 0.1, 0.1]);
+        assert_eq!(sample.finish, vec![3.0, 2.0, 1.0]);
+        assert_eq!(sample.state, vec![false, true, false]);
+        assert_eq!(Cluster::n(&sync), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "no progress")]
+    fn sync_adapter_detects_a_stalled_backend() {
+        struct Stalled;
+        impl EventCluster for Stalled {
+            fn n(&self) -> usize {
+                1
+            }
+            fn now_s(&self) -> f64 {
+                0.0
+            }
+            fn submit(&mut self, _: JobId, _: u64, _: &[f64]) {}
+            fn poll(&mut self, _: f64) -> &[ClusterEvent] {
+                &[]
+            }
+            fn true_state(&self, _: JobId, _: u64) -> Option<&[bool]> {
+                None
+            }
+        }
+        Stalled.sync().sample_round(&[0.1]);
+    }
+
+    #[test]
+    fn mut_ref_delegation_works() {
+        let mut scripted = Scripted {
+            n: 2,
+            clock: 0.0,
+            pending: Vec::new(),
+            buf: Vec::new(),
+            state: vec![false; 2],
+        };
+        // borrow — the backend stays usable afterwards
+        let mut sync = SyncAdapter::new(&mut scripted);
+        let sample = sync.sample_round(&[0.5, 0.5]);
+        assert_eq!(sample.finish.len(), 2);
+        assert_eq!(scripted.pending.len(), 0);
+    }
+}

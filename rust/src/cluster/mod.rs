@@ -1,38 +1,38 @@
-//! Serverless-cluster substrate: latency model, shared-storage model and
+//! Serverless-cluster substrate: latency model, shared-storage model,
 //! the discrete-time simulator standing in for the paper's AWS Lambda
-//! fleet (Appendices H and L).
+//! fleet (Appendices H and L), and the event-driven multi-job backend
+//! API ([`EventCluster`]) every execution backend implements natively.
 
+pub mod event;
 pub mod latency;
 pub mod sim;
 pub mod storage;
 pub mod trace;
 
+pub use event::{ClusterEvent, EventCluster, JobId, SyncAdapter, SYNC_JOB};
 pub use latency::LatencyParams;
 pub use sim::{RoundSample, SimCluster};
 pub use storage::StorageParams;
 pub use trace::{RecordingCluster, RunTrace, TraceReplayCluster};
 
-/// The unified execution backend the session drivers pump rounds
-/// through: the stochastic simulator ([`SimCluster`]), trace/profile
-/// replay ([`crate::probe::ProfileCluster`], [`SimCluster::from_trace`],
-/// [`TraceReplayCluster`]), a real-compute thread pool, or the live TCP
-/// fleet ([`crate::fleet::FleetCluster`]). Backends only turn per-worker
-/// loads into per-worker completion times; every protocol decision stays
-/// in [`crate::session::SgcSession`].
+/// The classic blocking backend protocol: one session, one round at a
+/// time, all `n` completion times at once.
+///
+/// Execution backends ([`SimCluster`], [`TraceReplayCluster`],
+/// [`crate::fleet::FleetCluster`]) implement the event-driven
+/// [`EventCluster`] natively; this trait survives as the single-session
+/// bridge over it — wrap any event backend in [`SyncAdapter`] (or call
+/// [`EventCluster::sync`]) to drive it through the blocking drivers
+/// ([`crate::session::drive`], [`RecordingCluster`], the probe). Pure
+/// replayers with no multi-job semantics
+/// ([`crate::probe::ProfileCluster`], [`RecordingCluster`]) implement it
+/// directly. Backends only turn per-worker loads into per-worker
+/// completion times; every protocol decision stays in
+/// [`crate::session::SgcSession`].
 pub trait Cluster {
     fn n(&self) -> usize;
 
     /// Execute one round at the given per-worker normalized loads and
     /// report per-worker completion times.
     fn sample_round(&mut self, loads: &[f64]) -> RoundSample;
-}
-
-impl Cluster for SimCluster {
-    fn n(&self) -> usize {
-        self.n
-    }
-
-    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
-        SimCluster::sample_round(self, loads)
-    }
 }

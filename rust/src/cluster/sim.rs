@@ -1,16 +1,32 @@
 //! Discrete-time serverless-cluster simulator.
 //!
-//! Substitutes for the paper's 256-worker AWS Lambda fleet: each round,
-//! every worker gets a completion time from the latency model, with the
-//! straggler process deciding which workers are in a slow state. The
-//! master (coordinator) then applies the μ-rule on these times exactly as
-//! the paper's master does on real response times.
+//! Substitutes for the paper's 256-worker AWS Lambda fleet: each
+//! submitted round, every worker gets a service time from the latency
+//! model, with the straggler process deciding which workers are in a
+//! slow state. The master (coordinator) then applies the μ-rule on the
+//! resulting completion times exactly as the paper's master does on real
+//! response times.
+//!
+//! The simulator is an [`EventCluster`]: many jobs can have task sets in
+//! flight at once, and each worker executes its queue in FIFO order — a
+//! worker still busy on job A's task starts job B's task only when A's
+//! finishes, so concurrent sessions contend for workers like they do on
+//! a real shared fleet instead of being sampled independently. A fresh
+//! submission for a job *preempts* that job's still-queued tasks (the
+//! master only re-assigns a worker it already cut from the previous
+//! round); other jobs' tasks are never preempted. Blocking callers reach
+//! the same sampler through [`SyncAdapter`](super::SyncAdapter), which
+//! drains every round fully — on an idle fleet the completion times are
+//! the service times themselves, byte-identical to the pre-event-API
+//! blocking implementation.
 
+use super::event::{ClusterEvent, EventCluster, JobId};
 use super::latency::LatencyParams;
 use super::storage::StorageParams;
 use crate::straggler::models::{GilbertElliot, StragglerProcess, TraceProcess};
 use crate::straggler::Pattern;
 use crate::util::rng::Pcg32;
+use std::collections::{HashMap, VecDeque};
 
 /// Ground-truth outcome of one simulated round.
 #[derive(Clone, Debug)]
@@ -20,6 +36,15 @@ pub struct RoundSample {
     /// True straggler state per worker (the master never sees this; it is
     /// recorded for Fig.-1-style analysis).
     pub state: Vec<bool>,
+}
+
+/// One queued task on a simulated worker.
+#[derive(Clone, Copy, Debug)]
+struct SimTask {
+    job: JobId,
+    round: u64,
+    submit_s: f64,
+    service_s: f64,
 }
 
 /// The simulated cluster.
@@ -32,6 +57,25 @@ pub struct SimCluster {
     /// Consecutive straggling rounds per worker *before* the current one
     /// (drives within-burst severity decay).
     burst_age: Vec<usize>,
+    // --- event-mode state -------------------------------------------------
+    /// Virtual clock (seconds).
+    clock: f64,
+    /// Per-worker FIFO task queue.
+    queues: Vec<VecDeque<SimTask>>,
+    /// Instant each worker last became free (committed work only).
+    free_at: Vec<f64>,
+    /// Reused event-delivery buffer ([`EventCluster::poll`] returns a
+    /// slice of it).
+    events_buf: Vec<ClusterEvent>,
+    /// Ground-truth straggler states of each job's latest submission.
+    states: HashMap<JobId, (u64, Vec<bool>)>,
+    /// Scratch for the per-submission service-time draw.
+    service_scratch: Vec<f64>,
+    state_scratch: Vec<bool>,
+    /// Test knob: cap on events handed out per `poll` call (splits
+    /// same-timestamp batches so delivery-batching invariance can be
+    /// exercised). `usize::MAX` in production.
+    max_events_per_poll: usize,
 }
 
 impl SimCluster {
@@ -49,6 +93,14 @@ impl SimCluster {
             process,
             rng: Pcg32::new(seed, 0xc105),
             burst_age: vec![0; n],
+            clock: 0.0,
+            queues: vec![VecDeque::new(); n],
+            free_at: vec![0.0; n],
+            events_buf: Vec::new(),
+            states: HashMap::new(),
+            service_scratch: Vec::new(),
+            state_scratch: Vec::new(),
+            max_events_per_poll: usize::MAX,
         }
     }
 
@@ -69,23 +121,144 @@ impl SimCluster {
         self
     }
 
-    /// Simulate one round at the given per-worker loads.
-    pub fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+    /// Test knob: deliver at most `k` events per [`EventCluster::poll`]
+    /// call, splitting same-timestamp batches. Delivery batching must be
+    /// observationally invisible to schedulers (`tests/properties.rs::
+    /// prop_scheduler_two_jobs_deterministic_and_batching_invariant`).
+    pub fn set_max_events_per_poll(&mut self, k: usize) {
+        self.max_events_per_poll = k.max(1);
+    }
+
+    /// Draw one round's straggler states and per-worker service times
+    /// (seconds of work from task start, excluding any queueing). This is
+    /// the one sampling routine both the blocking and the event path use,
+    /// so the RNG stream is identical however the cluster is driven.
+    fn sample_service_into(
+        &mut self,
+        loads: &[f64],
+        service: &mut Vec<f64>,
+        state: &mut Vec<bool>,
+    ) {
         assert_eq!(loads.len(), self.n);
-        let state = self.process.next_round();
-        let mut finish: Vec<f64> = (0..self.n)
-            .map(|i| self.latency.sample(loads[i], state[i], self.burst_age[i], &mut self.rng))
-            .collect();
+        let drawn = self.process.next_round();
+        state.clear();
+        state.extend_from_slice(&drawn);
+        service.clear();
+        for i in 0..self.n {
+            service.push(self.latency.sample(
+                loads[i],
+                state[i],
+                self.burst_age[i],
+                &mut self.rng,
+            ));
+        }
         for i in 0..self.n {
             self.burst_age[i] = if state[i] { self.burst_age[i] + 1 } else { 0 };
         }
         if let Some(st) = &self.storage {
             // all workers write their result concurrently near round end
-            for f in finish.iter_mut() {
+            for f in service.iter_mut() {
                 *f += st.sample(self.n, &mut self.rng);
             }
         }
+    }
+
+    /// Sample one *independent* round at the given per-worker loads: the
+    /// raw one-shot sampler, bypassing the event queues (every worker
+    /// idle at round start). Blocking drivers get exactly this through
+    /// [`SyncAdapter`](super::SyncAdapter); it stays public for
+    /// calibration and benches that want the bare latency law.
+    pub fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+        let mut finish = Vec::with_capacity(self.n);
+        let mut state = Vec::with_capacity(self.n);
+        self.sample_service_into(loads, &mut finish, &mut state);
         RoundSample { finish, state }
+    }
+}
+
+impl EventCluster for SimCluster {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn now_s(&self) -> f64 {
+        self.clock
+    }
+
+    fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+        let mut service = std::mem::take(&mut self.service_scratch);
+        let mut state = std::mem::take(&mut self.state_scratch);
+        self.sample_service_into(loads, &mut service, &mut state);
+        // record ground truth for `true_state` (reusing the job's buffer)
+        let slot = self.states.entry(job).or_insert_with(|| (round, Vec::new()));
+        slot.0 = round;
+        slot.1.clear();
+        slot.1.extend_from_slice(&state);
+        let clock = self.clock;
+        for w in 0..self.n {
+            let q = &mut self.queues[w];
+            // Same-job preemption: the fresh assignment supersedes any
+            // stale task of this job. If the stale task was at the head
+            // it has (at least partially) run — the worker frees now.
+            if q.iter().any(|t| t.job == job) {
+                if matches!(q.front(), Some(t) if t.job == job) {
+                    self.free_at[w] = self.free_at[w].max(clock);
+                }
+                q.retain(|t| t.job != job);
+            }
+            q.push_back(SimTask { job, round, submit_s: clock, service_s: service[w] });
+        }
+        self.service_scratch = service;
+        self.state_scratch = state;
+    }
+
+    fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+        assert!(!until_s.is_nan(), "poll horizon must not be NaN");
+        self.events_buf.clear();
+        // Events at or before the current clock are always deliverable,
+        // even when the caller's horizon lies in the past.
+        let horizon = until_s.max(self.clock);
+        // Earliest head-of-queue completion across workers.
+        let mut earliest = f64::INFINITY;
+        for w in 0..self.n {
+            if let Some(t) = self.queues[w].front() {
+                let fin = self.free_at[w].max(t.submit_s) + t.service_s;
+                if fin < earliest {
+                    earliest = fin;
+                }
+            }
+        }
+        if earliest <= horizon {
+            self.clock = self.clock.max(earliest);
+            let cap = self.max_events_per_poll;
+            for w in 0..self.n {
+                if self.events_buf.len() >= cap {
+                    break; // rest of the tie delivered next call
+                }
+                if let Some(t) = self.queues[w].front() {
+                    let fin = self.free_at[w].max(t.submit_s) + t.service_s;
+                    if fin <= earliest {
+                        let t = self.queues[w].pop_front().expect("head exists");
+                        self.free_at[w] = fin;
+                        self.events_buf.push(ClusterEvent::WorkerDone {
+                            job: t.job,
+                            round: t.round,
+                            worker: w,
+                            finish_s: fin - t.submit_s,
+                        });
+                    }
+                }
+            }
+        } else if until_s.is_finite() && until_s > self.clock {
+            self.clock = until_s;
+        }
+        &self.events_buf
+    }
+
+    fn true_state(&self, job: JobId, round: u64) -> Option<&[bool]> {
+        self.states
+            .get(&job)
+            .and_then(|(r, s)| if *r == round { Some(s.as_slice()) } else { None })
     }
 }
 
@@ -173,5 +346,121 @@ mod tests {
             crate::util::stats::mean(&s.finish)
         };
         assert!(mk(true) > mk(false) + 1.0);
+    }
+
+    /// Helper: drain every pending event.
+    fn drain(c: &mut SimCluster) -> Vec<ClusterEvent> {
+        let mut out = Vec::new();
+        loop {
+            let evs = c.poll(f64::INFINITY);
+            if evs.is_empty() {
+                break;
+            }
+            out.extend_from_slice(evs);
+        }
+        out
+    }
+
+    #[test]
+    fn event_submission_matches_the_blocking_sampler() {
+        let n = 8;
+        let mk = || SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 9);
+        let loads = vec![0.05; n];
+        let reference = mk().sample_round(&loads);
+
+        let mut ev = mk();
+        ev.submit(0, 1, &loads);
+        assert_eq!(ev.true_state(0, 1), Some(&reference.state[..]));
+        assert_eq!(ev.true_state(0, 2), None);
+        let mut finish = vec![f64::NAN; n];
+        for e in drain(&mut ev) {
+            match e {
+                ClusterEvent::WorkerDone { job: 0, round: 1, worker, finish_s } => {
+                    finish[worker] = finish_s;
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert_eq!(finish, reference.finish, "idle-fleet events = raw service times");
+    }
+
+    #[test]
+    fn busy_worker_delays_the_second_jobs_task() {
+        let n = 4;
+        let mut c =
+            SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 5);
+        let loads = vec![0.1; n];
+        c.submit(0, 1, &loads);
+        c.submit(1, 1, &loads); // queued behind job 0 on every worker
+        let evs = drain(&mut c);
+        assert_eq!(evs.len(), 2 * n);
+        let mut fin = [vec![0.0; n], vec![0.0; n]];
+        for e in evs {
+            if let ClusterEvent::WorkerDone { job, worker, finish_s, .. } = e {
+                fin[job][worker] = finish_s;
+            }
+        }
+        for w in 0..n {
+            assert!(
+                fin[1][w] > fin[0][w],
+                "job 1 on worker {w} must wait out job 0: {} vs {}",
+                fin[1][w],
+                fin[0][w]
+            );
+        }
+    }
+
+    #[test]
+    fn fresh_submission_preempts_the_same_jobs_stale_tasks() {
+        let n = 3;
+        let mut c =
+            SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 6);
+        let loads = vec![0.1; n];
+        c.submit(7, 1, &loads);
+        c.submit(7, 2, &loads); // supersedes round 1 before anything ran
+        let evs = drain(&mut c);
+        assert_eq!(evs.len(), n, "round 1 tasks were preempted");
+        assert!(evs
+            .iter()
+            .all(|e| matches!(e, ClusterEvent::WorkerDone { job: 7, round: 2, .. })));
+    }
+
+    #[test]
+    fn poll_horizon_advances_the_clock_without_events() {
+        let n = 2;
+        let mut c =
+            SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 8);
+        assert_eq!(c.now_s(), 0.0);
+        assert!(c.poll(1.5).is_empty());
+        assert_eq!(c.now_s(), 1.5);
+        // an infinite horizon with nothing queued cannot advance
+        assert!(c.poll(f64::INFINITY).is_empty());
+        assert_eq!(c.now_s(), 1.5);
+        // a submission's finish times are relative to the submit instant
+        c.submit(0, 1, &[0.05, 0.05]);
+        let evs = drain(&mut c);
+        assert_eq!(evs.len(), 2);
+        assert!(c.now_s() > 1.5);
+    }
+
+    #[test]
+    fn event_batching_knob_splits_ties() {
+        let n = 4;
+        // Deterministic equal service times would need a degenerate
+        // latency model; instead just check the cap bounds batch size.
+        let mut c =
+            SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 4);
+        c.set_max_events_per_poll(1);
+        c.submit(0, 1, &vec![0.05; n]);
+        let mut total = 0;
+        loop {
+            let evs = c.poll(f64::INFINITY);
+            if evs.is_empty() {
+                break;
+            }
+            assert!(evs.len() <= 1);
+            total += evs.len();
+        }
+        assert_eq!(total, n);
     }
 }

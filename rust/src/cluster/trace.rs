@@ -16,9 +16,11 @@
 //!   — reuse just the straggler *states* (when the source knew them)
 //!   under freshly sampled latencies.
 
+use super::event::{ClusterEvent, EventCluster, JobId};
 use super::{Cluster, RoundSample};
 use crate::straggler::Pattern;
 use crate::util::json::Json;
+use std::collections::HashMap;
 
 /// Trace format version written to JSON.
 pub const TRACE_VERSION: usize = 1;
@@ -79,7 +81,14 @@ impl RunTrace {
 
     /// Exact-replay cluster over this trace.
     pub fn replay(&self) -> TraceReplayCluster {
-        TraceReplayCluster { trace: self.clone(), cursor: 0 }
+        TraceReplayCluster {
+            trace: self.clone(),
+            cursor: 0,
+            clock: 0.0,
+            pending: Vec::new(),
+            events_buf: Vec::new(),
+            submissions: HashMap::new(),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -154,30 +163,105 @@ impl RunTrace {
     }
 }
 
-/// Replays a recorded trace verbatim: round `r` returns exactly the
-/// recorded completion times (and states), wrapping around when the
-/// session outlives the trace. Only meaningful when driven by the same
-/// scheme that produced the recording — the loads are not re-adjusted
-/// (use [`crate::probe::DelayProfile`] for load-adjusted replay).
+/// One undelivered replayed completion.
+#[derive(Clone, Copy, Debug)]
+struct PendingDone {
+    job: JobId,
+    round: u64,
+    worker: usize,
+    submit_s: f64,
+    finish_rel: f64,
+}
+
+/// Replays a recorded trace verbatim: each *submission* consumes the
+/// next recorded row and returns exactly its completion times (and
+/// states), wrapping around when the session outlives the trace. Only
+/// meaningful when driven by the same scheme that produced the recording
+/// — the loads are not re-adjusted (use [`crate::probe::DelayProfile`]
+/// for load-adjusted replay).
+///
+/// As an [`EventCluster`] the replay has no contention model of its own:
+/// the recorded times already embody whatever queueing the source run
+/// saw, so a task's completion lands at `submit + recorded_finish`
+/// regardless of other in-flight jobs. Drive it blocking via
+/// [`EventCluster::sync`].
 pub struct TraceReplayCluster {
     trace: RunTrace,
     cursor: usize,
+    clock: f64,
+    pending: Vec<PendingDone>,
+    events_buf: Vec<ClusterEvent>,
+    /// Latest submission per job: `(round, trace row index)`.
+    submissions: HashMap<JobId, (u64, usize)>,
 }
 
-impl Cluster for TraceReplayCluster {
+impl EventCluster for TraceReplayCluster {
     fn n(&self) -> usize {
         self.trace.n
     }
 
-    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
+    fn now_s(&self) -> f64 {
+        self.clock
+    }
+
+    fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
         assert_eq!(loads.len(), self.trace.n);
         assert!(!self.trace.is_empty(), "replay of an empty trace");
-        let row = &self.trace.rounds[self.cursor % self.trace.rounds()];
+        let idx = self.cursor % self.trace.rounds();
         self.cursor += 1;
-        RoundSample {
-            finish: row.finish.clone(),
-            state: row.state.clone().unwrap_or_else(|| vec![false; self.trace.n]),
+        // a fresh assignment supersedes the job's stale tasks
+        self.pending.retain(|p| p.job != job);
+        let row = &self.trace.rounds[idx];
+        for (worker, &finish_rel) in row.finish.iter().enumerate() {
+            self.pending.push(PendingDone {
+                job,
+                round,
+                worker,
+                submit_s: self.clock,
+                finish_rel,
+            });
         }
+        self.submissions.insert(job, (round, idx));
+    }
+
+    fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+        assert!(!until_s.is_nan(), "poll horizon must not be NaN");
+        self.events_buf.clear();
+        let horizon = until_s.max(self.clock);
+        let earliest = self
+            .pending
+            .iter()
+            .map(|p| p.submit_s + p.finish_rel)
+            .fold(f64::INFINITY, f64::min);
+        if earliest <= horizon {
+            self.clock = self.clock.max(earliest);
+            let mut buf = std::mem::take(&mut self.events_buf);
+            self.pending.retain(|p| {
+                if p.submit_s + p.finish_rel <= earliest {
+                    buf.push(ClusterEvent::WorkerDone {
+                        job: p.job,
+                        round: p.round,
+                        worker: p.worker,
+                        finish_s: p.finish_rel,
+                    });
+                    false
+                } else {
+                    true
+                }
+            });
+            self.events_buf = buf;
+        } else if until_s.is_finite() && until_s > self.clock {
+            self.clock = until_s;
+        }
+        &self.events_buf
+    }
+
+    fn true_state(&self, job: JobId, round: u64) -> Option<&[bool]> {
+        let &(r, idx) = self.submissions.get(&job)?;
+        if r != round {
+            return None;
+        }
+        self.trace.rounds[idx].state.as_deref()
     }
 }
 
@@ -249,7 +333,7 @@ mod tests {
 
     fn recorded_run(n: usize, rounds: usize) -> RunTrace {
         let sim = SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.06, 0.6, 5), 9);
-        let mut rec = RecordingCluster::new(sim);
+        let mut rec = RecordingCluster::new(sim.sync());
         for r in 0..rounds {
             let load = 0.05 + 0.01 * (r % 3) as f64;
             rec.sample_round(&vec![load; n]);
@@ -270,7 +354,7 @@ mod tests {
     #[test]
     fn replay_returns_recorded_times_verbatim() {
         let trace = recorded_run(4, 5);
-        let mut replay = trace.replay();
+        let mut replay = trace.replay().sync();
         for r in 0..5 {
             let s = replay.sample_round(&[0.1; 4]);
             assert_eq!(s.finish, trace.rounds[r].finish);
@@ -279,6 +363,33 @@ mod tests {
         // wraps around
         let s = replay.sample_round(&[0.1; 4]);
         assert_eq!(s.finish, trace.rounds[0].finish);
+    }
+
+    #[test]
+    fn replay_events_are_anchored_at_the_submit_instant() {
+        let trace = recorded_run(3, 2);
+        let mut replay = trace.replay();
+        assert!(replay.poll(2.0).is_empty(), "nothing in flight");
+        assert_eq!(replay.now_s(), 2.0);
+        replay.submit(4, 9, &[0.1; 3]);
+        assert_eq!(replay.true_state(4, 9), trace.rounds[0].state.as_deref());
+        let mut got = 0;
+        loop {
+            let evs: Vec<ClusterEvent> = replay.poll(f64::INFINITY).to_vec();
+            if evs.is_empty() {
+                break;
+            }
+            for ev in evs {
+                let ClusterEvent::WorkerDone { job, round, worker, finish_s } = ev else {
+                    panic!("unexpected event {ev:?}");
+                };
+                assert_eq!((job, round), (4, 9));
+                assert_eq!(finish_s, trace.rounds[0].finish[worker]);
+                got += 1;
+            }
+        }
+        assert_eq!(got, 3);
+        assert!(replay.now_s() >= 2.0);
     }
 
     #[test]
@@ -308,7 +419,7 @@ mod tests {
         {
             let sim =
                 SimCluster::from_gilbert_elliot(3, GilbertElliot::new(3, 0.05, 0.6, 2), 3);
-            let mut rec = RecordingCluster::autosave(sim, path.clone());
+            let mut rec = RecordingCluster::autosave(sim.sync(), path.clone());
             rec.sample_round(&[0.1; 3]);
         }
         let loaded = RunTrace::load(&path).unwrap();

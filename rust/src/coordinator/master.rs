@@ -3,11 +3,14 @@
 //! All round logic — μ-rule straggler identification (Sec. 2), wait-out
 //! policies (Remark 2.3), commit and decode — lives in
 //! [`crate::session::SgcSession`]; the master merely pumps the session
-//! against a [`Cluster`] backend via [`crate::session::drive`]. Kept as a
+//! against a backend: [`run_events`](Master::run_events) schedules it as
+//! a single job on any event-driven backend
+//! ([`crate::sched::JobScheduler`]), [`run`](Master::run) drives the
+//! classic blocking protocol via [`crate::session::drive`]. Kept as a
 //! facade so CLI, benches and tests have a one-call entry point.
 
 use super::metrics::RunReport;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, EventCluster};
 use crate::coding::SchemeConfig;
 use crate::session::{drive, SessionConfig};
 
@@ -22,10 +25,18 @@ impl Master {
         Master { scheme_cfg, cfg }
     }
 
-    /// Run `J` jobs over `J + T` rounds against the given cluster.
-    /// Errors if the cluster and scheme sizes disagree.
+    /// Run `J` jobs over `J + T` rounds against the given blocking
+    /// cluster. Errors if the cluster and scheme sizes disagree.
     pub fn run(&mut self, cluster: &mut dyn Cluster) -> crate::Result<RunReport> {
         drive(&self.scheme_cfg, &self.cfg, cluster)
+    }
+
+    /// Run against an event-driven backend through the scheduler path (a
+    /// single-job [`crate::sched::JobScheduler`]): identical reports to
+    /// [`run`](Self::run) over the same backend behind a
+    /// [`SyncAdapter`](crate::cluster::SyncAdapter).
+    pub fn run_events(&mut self, cluster: &mut dyn EventCluster) -> crate::Result<RunReport> {
+        crate::sched::drive_events(&self.scheme_cfg, &self.cfg, cluster)
     }
 }
 
@@ -48,7 +59,7 @@ mod tests {
             RunConfig { jobs: 20, ..Default::default() },
         );
         let mut cluster = quiet_cluster(8, 1);
-        let rep = m.run(&mut cluster).unwrap();
+        let rep = m.run_events(&mut cluster).unwrap();
         assert_eq!(rep.deadline_violations, 0);
         assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
         assert_eq!(rep.rounds.len(), 20);
@@ -64,7 +75,7 @@ mod tests {
         );
         let mut cluster =
             SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.04, 0.7, 5), 9);
-        let rep = m.run(&mut cluster).unwrap();
+        let rep = m.run_events(&mut cluster).unwrap();
         assert_eq!(rep.deadline_violations, 0, "conformance repair must save every deadline");
         assert_eq!(rep.rounds.len(), 40 + 1);
     }
@@ -87,7 +98,7 @@ mod tests {
             Box::new(TraceProcess::new(pat)),
             3,
         );
-        let rep = m.run(&mut cluster).unwrap();
+        let rep = m.run_events(&mut cluster).unwrap();
         assert_eq!(rep.deadline_violations, 0);
         // every round waited out the straggler
         assert!(rep.rounds.iter().all(|r| r.waited_out >= 1));
@@ -108,7 +119,7 @@ mod tests {
         );
         let mut cluster =
             SimCluster::from_gilbert_elliot(8, GilbertElliot::new(8, 0.1, 0.5, 2), 7);
-        let rep = m.run(&mut cluster).unwrap();
+        let rep = m.run_events(&mut cluster).unwrap();
         assert_eq!(rep.deadline_violations, 0);
     }
 
@@ -119,7 +130,7 @@ mod tests {
             RunConfig { jobs: 5, measure_decode: true, ..Default::default() },
         );
         let mut cluster = quiet_cluster(32, 4);
-        let rep = m.run(&mut cluster).unwrap();
+        let rep = m.run_events(&mut cluster).unwrap();
         let (mean, _std, max) = rep.decode_stats();
         assert!(mean > 0.0 && max >= mean);
     }
@@ -131,7 +142,7 @@ mod tests {
             let n = 16;
             let mut cluster =
                 SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.03, 0.7, seed), seed);
-            m.run(&mut cluster).unwrap().total_runtime_s
+            m.run_events(&mut cluster).unwrap().total_runtime_s
         };
         let gc = mk(SchemeConfig::gc(16, 6), 11);
         let msgc = mk(SchemeConfig::msgc(16, 1, 2, 6), 11);

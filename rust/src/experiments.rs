@@ -4,7 +4,7 @@
 //! paper's own configuration (n = 256 workers, J = 480 jobs, 10
 //! repetitions) unless `SGC_BENCH_FAST=1` scales it down for CI.
 
-use crate::cluster::{Cluster, SimCluster};
+use crate::cluster::{Cluster, EventCluster, SimCluster};
 use crate::coding::SchemeConfig;
 use crate::coordinator::RunReport;
 use crate::session::{self, BatchItem, SessionConfig};
@@ -53,7 +53,7 @@ impl PaperSetup {
 
     /// One simulated run.
     pub fn run_once(&self, scheme: &SchemeConfig, seed: u64, measure_decode: bool) -> RunReport {
-        let mut cluster = self.cluster(seed);
+        let mut cluster = self.cluster(seed).sync();
         session::drive(scheme, &self.session_config(measure_decode), &mut cluster)
             .expect("setup builds matching cluster/scheme sizes")
     }
@@ -80,7 +80,7 @@ impl PaperSetup {
             .collect();
         let setup = self.clone();
         let reports = session::run_parallel(items, session::default_threads(), move |i, _| {
-            Box::new(setup.cluster(1000 + i as u64)) as Box<dyn Cluster + Send>
+            Box::new(setup.cluster(1000 + i as u64).sync()) as Box<dyn Cluster + Send>
         })
         .expect("setup builds matching cluster/scheme sizes");
         let xs: Vec<f64> = reports.iter().map(|r| r.total_runtime_s).collect();

@@ -11,8 +11,9 @@ use std::time::Duration;
 /// A running loopback fleet. Dropping it shuts the workers down; call
 /// [`shutdown`](Self::shutdown) to also collect their stats.
 pub struct LoopbackFleet {
-    /// The master handle (drive it via [`super::drive_fleet`] or the
-    /// [`Cluster`](crate::cluster::Cluster) impl).
+    /// The master handle (drive it via [`super::drive_fleet`], a
+    /// multi-job [`JobScheduler`](crate::sched::JobScheduler), or — for
+    /// blocking callers — a [`SyncAdapter`](crate::cluster::SyncAdapter)).
     pub cluster: FleetCluster,
     workers: Vec<JoinHandle<crate::Result<WorkerStats>>>,
 }
@@ -59,7 +60,7 @@ impl LoopbackFleet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::Cluster;
+    use crate::cluster::{Cluster, SyncAdapter};
     use crate::coding::SchemeConfig;
     use crate::fleet::drive_fleet;
     use crate::session::SessionConfig;
@@ -67,7 +68,8 @@ mod tests {
     #[test]
     fn quiet_loopback_round_trip() {
         let mut fleet = LoopbackFleet::spawn(3, None).unwrap();
-        let sample = fleet.cluster.sample_round(&[0.05, 0.05, 0.05]);
+        // blocking bridge over the event API: wait for all three results
+        let sample = SyncAdapter::new(&mut fleet.cluster).sample_round(&[0.05, 0.05, 0.05]);
         assert_eq!(sample.finish.len(), 3);
         // quiet workers: all times near base + α·load ≈ 24 ms, none wild
         for &f in &sample.finish {
@@ -105,7 +107,7 @@ mod tests {
         let scheme = SchemeConfig::gc(4, 1); // expects 4 workers
         let cfg = SessionConfig { jobs: 2, ..Default::default() };
         let err = drive_fleet(&scheme, &cfg, &mut fleet.cluster).unwrap_err();
-        assert!(err.to_string().contains("expects 4"), "{err}");
+        assert!(err.to_string().contains("expects n = 4"), "{err}");
         fleet.shutdown().unwrap();
     }
 }

@@ -1,29 +1,38 @@
-//! Master side of the fleet: accept worker connections, stream arrivals,
-//! and drive the session with the μ-rule applied to **wall-clock** time.
+//! Master side of the fleet: accept worker connections and expose the
+//! arrival stream as an [`EventCluster`] — the wall-clock backend behind
+//! the multi-job [`JobScheduler`](crate::sched::JobScheduler).
 //!
-//! Unlike the simulator backends — which hand the session all `n`
-//! completion times at once — [`FleetCluster::run_round`] submits each
-//! worker's result the moment its `Result` frame arrives, polls
-//! [`SgcSession::try_close_round`] with the elapsed wall clock, and
-//! sleeps only until the session's
-//! [`deadline_hint`](SgcSession::deadline_hint) (the `(1+μ)·κ` cutoff).
-//! The round therefore closes the instant the μ-rule and the wait-out
-//! policy allow — a straggler that would take 10× the round time costs
-//! the master nothing beyond the cutoff, exactly like the paper's Lambda
-//! master.
+//! Unlike the simulator — whose clock only moves when `poll` advances it
+//! — the fleet's clock is real: [`FleetCluster::poll`] drains the
+//! per-connection reader threads' arrival channel, stamps each `Result`
+//! frame with the master-side elapsed time of its submission, and sleeps
+//! at most until the caller's horizon (the scheduler's next μ-cutoff).
+//! The μ-rule itself stays in the sessions: the scheduler pumps
+//! [`try_close_round`](crate::session::SgcSession::try_close_round)
+//! with the wall clock, so a straggler that would take 10× the round
+//! time costs the master nothing beyond the `(1+μ)·κ` cutoff — exactly
+//! like the paper's Lambda master. Multiple jobs multiplex over one
+//! fleet by sequence number: each submission gets the next wire-level
+//! round id, and the master maps arrivals back to the owning
+//! `(job, round)`.
 //!
 //! **Failure semantics.** Workers heartbeat between results. A worker
-//! whose socket drops or whose heartbeats go stale is marked dead; the
-//! μ-rule cuts it like any straggler, and the run only errors when the
+//! whose socket drops (or that returns a byzantine result) is reported
+//! as [`ClusterEvent::WorkerDead`] for every submission it still owes;
+//! the μ-rule cuts it like any straggler, and a run only errors when the
 //! wait-out policy *needs* a dead worker (the pattern cannot conform
-//! without it) — at that point no amount of waiting can help.
+//! without it) — at that point no amount of waiting can help. Stale
+//! heartbeats are *recoverable* (a fresh frame clears them), so they
+//! pause new assignments but are never reported as deaths; a stall that
+//! never recovers is bounded by the hard per-round cap, which emits
+//! [`ClusterEvent::RoundTimeout`] once per submission.
 
 use super::wire::{read_frame, write_frame, Frame};
 use super::worker::chunk_checksum;
-use crate::cluster::{Cluster, RoundSample, RunTrace};
-use crate::coding::{SchemeConfig, TaskDesc, WorkUnit};
+use crate::cluster::{ClusterEvent, EventCluster, JobId, RunTrace};
+use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::RunReport;
-use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
+use crate::session::SessionConfig;
 use std::io::BufReader;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -43,9 +52,10 @@ struct Conn {
 }
 
 /// The fleet master's cluster handle: `n` connected workers plus the
-/// arrival stream. Implements [`Cluster`] (collect everything — used by
-/// trace recording and as a drop-in backend) and the streaming
-/// [`run_round`](Self::run_round) that the μ-rule path uses.
+/// arrival stream, implementing [`EventCluster`]. Blocking callers wrap
+/// it in [`SyncAdapter`](crate::cluster::SyncAdapter); fallible
+/// streaming runs go through [`drive_fleet`] or a
+/// [`JobScheduler`](crate::sched::JobScheduler).
 pub struct FleetCluster {
     n: usize,
     conns: Vec<Conn>,
@@ -64,23 +74,38 @@ pub struct FleetCluster {
     byzantine: Vec<bool>,
     /// Stale-heartbeat threshold.
     heartbeat_timeout: Duration,
-    /// Hard cap on one round's wall-clock time — a worker that
+    /// Hard cap on one submission's wall-clock time — a worker that
     /// heartbeats but never returns its result would otherwise livelock
     /// a wait-out that needs it.
     round_timeout: Duration,
-    /// Wall-clock start per assigned round (index = round - 1).
+    /// The fleet's time origin (`now_s` axis).
+    clock_start: Instant,
+    /// Wall-clock start per submission (index = wire round id - 1).
     round_starts: Vec<Instant>,
+    /// Owning `(job, round)` per submission — the wire protocol carries
+    /// only the sequence number; this is the multiplexing map back.
+    seq_jobs: Vec<(JobId, u64)>,
     /// Trace under construction: every arrival lands here, including
     /// results for rounds the μ-rule already closed.
     finish_log: Vec<Vec<Option<f64>>>,
     loads_log: Vec<Vec<f64>>,
-    /// Which workers actually received each round's `Assign` (a worker
-    /// dead at assign time is skipped and can never fill that round's
-    /// slot, even if its `dead` flag later clears).
+    /// Which workers actually received each submission's `Assign` (a
+    /// worker dead at assign time is skipped and can never fill that
+    /// round's slot, even if its `dead` flag later clears).
     assigned_log: Vec<Vec<bool>>,
-    /// Expected `Result` checksum per round per worker (recomputed from
-    /// the assigned chunks); a mismatching result is byzantine.
+    /// Expected `Result` checksum per submission per worker; a
+    /// mismatching result is byzantine.
     sum_log: Vec<Vec<u64>>,
+    /// `WorkerDead` already emitted for (submission, worker).
+    dead_notified: Vec<Vec<bool>>,
+    /// `RoundTimeout` already emitted per submission.
+    timeout_emitted: Vec<bool>,
+    /// First submission that might still owe a timeout check.
+    timeout_scan_from: usize,
+    /// Events translated but not yet handed out by `poll`.
+    staged: Vec<ClusterEvent>,
+    /// The batch the last `poll` returned (swap-recycled with `staged`).
+    delivered: Vec<ClusterEvent>,
     shut_down: bool,
 }
 
@@ -182,17 +207,29 @@ impl FleetCluster {
             byzantine: vec![false; n],
             heartbeat_timeout: Duration::from_millis(1500),
             round_timeout: Duration::from_secs(60),
+            clock_start: now,
             round_starts: Vec::new(),
+            seq_jobs: Vec::new(),
             finish_log: Vec::new(),
             loads_log: Vec::new(),
             assigned_log: Vec::new(),
             sum_log: Vec::new(),
+            dead_notified: Vec::new(),
+            timeout_emitted: Vec::new(),
+            timeout_scan_from: 0,
+            staged: Vec::new(),
+            delivered: Vec::new(),
             shut_down: false,
         })
     }
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// Submissions executed so far (wire-level rounds).
+    pub fn submissions(&self) -> usize {
+        self.round_starts.len()
     }
 
     /// Workers currently considered dead.
@@ -206,105 +243,9 @@ impl FleetCluster {
         self.round_timeout = timeout;
     }
 
-    /// Execute one round with streaming arrivals: assign, submit results
-    /// as they land, and close through the session's incremental μ-rule.
-    /// Returns the close events (never `WaitingFor`).
-    pub fn run_round(
-        &mut self,
-        session: &mut SgcSession,
-        plan: &RoundPlan,
-    ) -> crate::Result<Vec<SessionEvent>> {
-        anyhow::ensure!(plan.tasks.len() == self.n, "plan/fleet size mismatch");
-        let round = plan.round as u32;
-        let start = Instant::now();
-        self.round_starts.push(start);
-        self.loads_log.push(plan.loads.clone());
-        self.finish_log.push(vec![None; self.n]);
-        self.assigned_log.push(vec![false; self.n]);
-        self.sum_log.push(vec![0; self.n]);
-        debug_assert_eq!(self.round_starts.len(), plan.round);
-
-        for worker in 0..self.n {
-            let chunks = chunk_ids(&plan.tasks[worker]);
-            self.sum_log.last_mut().unwrap()[worker] = chunk_checksum(&chunks);
-            if self.dead[worker] {
-                continue; // μ-rule will cut it; wait-out may still error below
-            }
-            let frame =
-                Frame::Assign { round, work_units: plan.loads[worker], chunks };
-            if write_frame(&mut self.conns[worker].stream, &frame).is_err() {
-                self.mark_gone(worker);
-            } else {
-                self.assigned_log.last_mut().unwrap()[worker] = true;
-            }
-        }
-
-        loop {
-            // Judge the round at `now_s`, but only after absorbing every
-            // arrival already queued — an unprocessed result from before
-            // the cutoff must not be cut as a straggler.
-            let now_s = start.elapsed().as_secs_f64();
-            while let Ok(ev) = self.events.try_recv() {
-                self.absorb(ev, Some((&mut *session, round)));
-            }
-            let events = session.try_close_round(now_s);
-            let waiting = match events.first() {
-                Some(SessionEvent::WaitingFor { workers }) => workers.clone(),
-                _ => return Ok(events),
-            };
-            // Hopeless only if every awaited worker can never submit —
-            // dead, or never assigned this round — AND the wait is not
-            // merely "the μ-cutoff has not passed yet": before the cutoff
-            // the next try_close will cut them like ordinary stragglers.
-            // With no submissions at all (hint unknown) they can never
-            // produce κ either.
-            let assigned = &self.assigned_log[plan.round - 1];
-            let past_cutoff = match session.deadline_hint() {
-                None => true,
-                Some(hint) => now_s >= hint,
-            };
-            if past_cutoff && waiting.iter().all(|&w| self.dead[w] || !assigned[w]) {
-                anyhow::bail!(
-                    "round {}: workers {waiting:?} are dead or unassigned and the \
-                     wait-out policy needs one of them; the straggler pattern cannot \
-                     conform",
-                    plan.round
-                );
-            }
-            if start.elapsed() > self.round_timeout {
-                anyhow::bail!(
-                    "round {}: still waiting for workers {waiting:?} after {:?}",
-                    plan.round,
-                    self.round_timeout
-                );
-            }
-            // Sleep until the μ-cutoff if it is still ahead; otherwise we
-            // are waiting for a specific arrival — poll at heartbeat pace.
-            // Either way, never sleep past the hard round cap.
-            let cap = self
-                .round_timeout
-                .saturating_sub(start.elapsed())
-                .max(Duration::from_millis(1));
-            let timeout = match session.deadline_hint() {
-                Some(hint) if hint > now_s => Duration::from_secs_f64(hint - now_s),
-                _ => Duration::from_millis(25),
-            }
-            .min(cap);
-            match self.events.recv_timeout(timeout) {
-                Ok(ev) => self.absorb(ev, Some((&mut *session, round))),
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
-                    anyhow::bail!("round {}: every worker connection dropped", plan.round)
-                }
-            }
-            self.reap_stale_heartbeats();
-        }
-    }
-
-    /// Process one reader event. When `current` is set, results for the
-    /// open round are submitted into the session; results for earlier
-    /// rounds only land in the trace log.
-    fn absorb(&mut self, ev: Event, current: Option<(&mut SgcSession, u32)>) {
+    /// Process one reader event, translating results into staged
+    /// [`ClusterEvent`]s.
+    fn absorb(&mut self, ev: Event) {
         match ev {
             Event::Frame { worker, frame, at } => {
                 self.last_seen[worker] = at;
@@ -336,11 +277,13 @@ impl FleetCluster {
                         let slot = &mut self.finish_log[idx - 1][worker];
                         if slot.is_none() {
                             *slot = Some(rel);
-                            if let Some((session, round)) = current {
-                                if r == round {
-                                    session.submit(worker, rel);
-                                }
-                            }
+                            let (job, round) = self.seq_jobs[idx - 1];
+                            self.staged.push(ClusterEvent::WorkerDone {
+                                job,
+                                round,
+                                worker,
+                                finish_s: rel,
+                            });
                         }
                     }
                 }
@@ -349,14 +292,31 @@ impl FleetCluster {
         }
     }
 
+    /// Mark a worker *permanently* dead (gone socket / byzantine) and
+    /// stage `WorkerDead` for every submission it still owes a result
+    /// (once per submission). Stale-heartbeat deaths deliberately do NOT
+    /// come through here: they are recoverable (any fresh frame clears
+    /// them), so reporting them to the scheduler could fail a wait-out
+    /// that a recovered worker was about to satisfy — those fall back to
+    /// the round-timeout backstop instead.
     fn mark_dead(&mut self, worker: usize) {
         self.dead[worker] = true;
+        for seq in 0..self.round_starts.len() {
+            if self.assigned_log[seq][worker]
+                && self.finish_log[seq][worker].is_none()
+                && !self.dead_notified[seq][worker]
+            {
+                self.dead_notified[seq][worker] = true;
+                let (job, round) = self.seq_jobs[seq];
+                self.staged.push(ClusterEvent::WorkerDead { job, round, worker });
+            }
+        }
     }
 
     /// Socket-level (permanent) death.
     fn mark_gone(&mut self, worker: usize) {
         self.gone[worker] = true;
-        self.dead[worker] = true;
+        self.mark_dead(worker);
     }
 
     fn reap_stale_heartbeats(&mut self) {
@@ -365,7 +325,42 @@ impl FleetCluster {
             if !self.dead[i]
                 && now.duration_since(self.last_seen[i]) > self.heartbeat_timeout
             {
+                // recoverable: skip new Assigns while stale, but stage no
+                // WorkerDead (see `mark_dead`)
                 self.dead[i] = true;
+            }
+        }
+    }
+
+    /// Stage `RoundTimeout` for submissions past the hard cap that still
+    /// have *live* assigned workers missing. Slots whose only missing
+    /// workers were already reported dead (`dead_notified`) count as
+    /// settled: the scheduler got their `WorkerDead` and has either cut
+    /// them or failed the job, so re-timing the submission would only
+    /// pin the scan watermark and stage a spurious late timeout.
+    fn check_round_timeouts(&mut self) {
+        let now = Instant::now();
+        let unsettled = |fleet: &Self, seq: usize| {
+            !fleet.timeout_emitted[seq]
+                && fleet.finish_log[seq].iter().enumerate().any(|(w, f)| {
+                    f.is_none()
+                        && fleet.assigned_log[seq][w]
+                        && !fleet.dead_notified[seq][w]
+                })
+        };
+        // advance the watermark past settled submissions
+        while self.timeout_scan_from < self.round_starts.len()
+            && !unsettled(self, self.timeout_scan_from)
+        {
+            self.timeout_scan_from += 1;
+        }
+        for seq in self.timeout_scan_from..self.round_starts.len() {
+            if unsettled(self, seq)
+                && now.duration_since(self.round_starts[seq]) > self.round_timeout
+            {
+                self.timeout_emitted[seq] = true;
+                let (job, round) = self.seq_jobs[seq];
+                self.staged.push(ClusterEvent::RoundTimeout { job, round });
             }
         }
     }
@@ -392,10 +387,12 @@ impl FleetCluster {
         };
         while incomplete(self) && Instant::now() < deadline {
             match self.events.recv_timeout(Duration::from_millis(25)) {
-                Ok(ev) => self.absorb(ev, None),
+                Ok(ev) => self.absorb(ev),
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => break,
             }
+            // nobody polls after a run: translated events are not wanted
+            self.staged.clear();
         }
         let mut trace = RunTrace::new(self.n);
         for (loads, finish) in self.loads_log.iter().zip(&self.finish_log) {
@@ -436,54 +433,111 @@ impl Drop for FleetCluster {
     }
 }
 
-/// Blocking backend compatibility: wait for *every* worker's result.
-/// This is the uncoded-friendly path; the μ-rule fleet path is
-/// [`FleetCluster::run_round`]. Panics on a dead fleet — the `Cluster`
-/// trait has no error channel; use [`drive_fleet`] for fallible driving.
-///
-/// The returned `state` is an all-false placeholder (a real fleet has no
-/// ground truth), like [`crate::probe::ProfileCluster`]'s — so traces
-/// recorded by wrapping this in a
-/// [`RecordingCluster`](crate::cluster::RecordingCluster) carry no
-/// straggler pattern. Prefer [`drive_fleet`], whose trace stores the
-/// μ-rule detections instead.
-impl Cluster for FleetCluster {
+impl EventCluster for FleetCluster {
     fn n(&self) -> usize {
         self.n
     }
 
-    fn sample_round(&mut self, loads: &[f64]) -> RoundSample {
-        assert_eq!(loads.len(), self.n);
-        let round = (self.round_starts.len() + 1) as u32;
-        let start = Instant::now();
-        self.round_starts.push(start);
+    fn now_s(&self) -> f64 {
+        self.clock_start.elapsed().as_secs_f64()
+    }
+
+    /// Assign `(job, round)` to every live worker under the next wire
+    /// sequence number. Workers already dead (or whose socket write
+    /// fails) get an immediate staged [`ClusterEvent::WorkerDead`] — the
+    /// μ-rule will cut them; the wait-out policy may still fail the job
+    /// if it needs them.
+    fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+        assert_eq!(loads.len(), self.n, "loads/fleet size mismatch");
+        assert!(!self.shut_down, "submit on a shut-down fleet");
+        let seq = self.round_starts.len() + 1;
+        self.round_starts.push(Instant::now());
+        self.seq_jobs.push((job, round));
         self.loads_log.push(loads.to_vec());
         self.finish_log.push(vec![None; self.n]);
-        self.assigned_log.push(vec![true; self.n]);
-        self.sum_log.push(vec![chunk_checksum(&[]); self.n]);
+        self.assigned_log.push(vec![false; self.n]);
+        self.dead_notified.push(vec![false; self.n]);
+        self.timeout_emitted.push(false);
+        self.sum_log.push(vec![0; self.n]);
         for worker in 0..self.n {
-            assert!(!self.dead[worker], "worker {worker} is dead");
-            let frame =
-                Frame::Assign { round, work_units: loads[worker], chunks: Vec::new() };
-            write_frame(&mut self.conns[worker].stream, &frame)
-                .unwrap_or_else(|e| panic!("assign to worker {worker}: {e}"));
-        }
-        let idx = round as usize - 1;
-        while self.finish_log[idx].iter().any(|f| f.is_none()) {
-            match self.events.recv_timeout(Duration::from_millis(100)) {
-                Ok(ev) => self.absorb(ev, None),
-                Err(RecvTimeoutError::Timeout) => {
-                    self.reap_stale_heartbeats();
-                    let gone = self.dead_workers();
-                    assert!(gone.is_empty(), "workers {gone:?} died mid-round");
+            let mut lost = self.dead[worker];
+            if !lost {
+                // The metadata protocol ships no real chunk ids; a
+                // synthetic (seq, worker, quantized load) triplet keeps
+                // the byzantine check meaningful — every Result must
+                // echo the checksum of *its own* assignment, so a worker
+                // replaying another round's (or worker's) answer, or
+                // skipping the work, is still caught. Real chunk shipping
+                // returns with the real-compute fleet (ROADMAP).
+                let chunks =
+                    vec![seq as u32, worker as u32, (loads[worker] * 1e6) as u32];
+                self.sum_log.last_mut().unwrap()[worker] = chunk_checksum(&chunks);
+                let frame = Frame::Assign {
+                    round: seq as u32,
+                    work_units: loads[worker],
+                    chunks,
+                };
+                if write_frame(&mut self.conns[worker].stream, &frame).is_ok() {
+                    self.assigned_log.last_mut().unwrap()[worker] = true;
+                } else {
+                    self.mark_gone(worker);
+                    lost = true;
                 }
-                Err(RecvTimeoutError::Disconnected) => panic!("all workers disconnected"),
+            }
+            if lost {
+                let notified = self.dead_notified.last_mut().unwrap();
+                if !notified[worker] {
+                    notified[worker] = true;
+                    self.staged.push(ClusterEvent::WorkerDead { job, round, worker });
+                }
             }
         }
-        RoundSample {
-            finish: self.finish_log[idx].iter().map(|f| f.unwrap()).collect(),
-            state: vec![false; self.n],
+    }
+
+    /// Drain queued arrivals; if none are ready, block until the first
+    /// frame, the caller's horizon, or a short heartbeat pace — whichever
+    /// comes first — then run the stale-heartbeat and round-timeout
+    /// checks. Wall time keeps flowing regardless of `until_s`; the
+    /// horizon is purely a sleep bound.
+    fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+        assert!(!until_s.is_nan(), "poll horizon must not be NaN");
+        self.delivered.clear();
+        while let Ok(ev) = self.events.try_recv() {
+            self.absorb(ev);
         }
+        if self.staged.is_empty() {
+            // Nothing ready: sleep towards the horizon, but wake at
+            // heartbeat pace so liveness/timeout checks keep running
+            // even on a silent fleet.
+            let headroom = (until_s - self.now_s()).max(0.001);
+            let wait = Duration::from_secs_f64(headroom.min(0.1));
+            match self.events.recv_timeout(wait) {
+                Ok(ev) => {
+                    self.absorb(ev);
+                    // take whatever queued up behind it
+                    while let Ok(ev) = self.events.try_recv() {
+                        self.absorb(ev);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                // All reader threads exited; their Gone events were
+                // already absorbed, so every worker is marked dead and
+                // the caller's dead-worker/timeout checks will fail the
+                // run. Still honour the sleep bound — returning
+                // instantly here would busy-spin the scheduler until the
+                // μ-cutoff.
+                Err(RecvTimeoutError::Disconnected) => std::thread::sleep(wait),
+            }
+        }
+        self.reap_stale_heartbeats();
+        self.check_round_timeouts();
+        std::mem::swap(&mut self.delivered, &mut self.staged);
+        self.staged.clear();
+        &self.delivered
+    }
+
+    fn true_state(&self, _job: JobId, _round: u64) -> Option<&[bool]> {
+        None // a real fleet has no ground truth
     }
 }
 
@@ -496,37 +550,24 @@ pub struct FleetRun {
 }
 
 /// Drive one session over a fleet with streaming arrivals and the
-/// wall-clock μ-rule, collecting the delay trace along the way.
+/// wall-clock μ-rule, collecting the delay trace along the way. This is
+/// a single-job [`JobScheduler`](crate::sched::JobScheduler) run —
+/// `sgc serve` admits several jobs onto the same fleet instead.
 pub fn drive_fleet(
     scheme_cfg: &SchemeConfig,
     cfg: &SessionConfig,
     fleet: &mut FleetCluster,
 ) -> crate::Result<FleetRun> {
-    let mut session = SgcSession::new(scheme_cfg, cfg.clone());
-    anyhow::ensure!(
-        fleet.n() == session.n(),
-        "fleet has {} workers but scheme {} expects {}",
-        fleet.n(),
-        scheme_cfg.label(),
-        session.n()
-    );
-    // The round log (and hence the trace) is per-fleet, not per-session:
-    // a reused fleet would interleave two sessions' rounds and stall on
-    // already-filled trace slots. Fail fast instead.
+    // The submission log (and hence the trace) is per-fleet: a reused
+    // fleet would interleave two runs' rounds. Fail fast instead.
     anyhow::ensure!(
         fleet.round_starts.is_empty(),
-        "FleetCluster is single-use: this fleet already executed {} rounds; \
+        "FleetCluster is single-use: this fleet already executed {} submissions; \
          spawn a fresh fleet per run",
         fleet.round_starts.len()
     );
-    // One plan buffer reused across all rounds (§Perf).
-    let mut plan = RoundPlan::default();
-    while !session.is_complete() {
-        session.begin_round_into(&mut plan);
-        fleet.run_round(&mut session, &plan)?;
-    }
+    let report = crate::sched::drive_events(scheme_cfg, cfg, fleet)?;
     let mut trace = fleet.finish_trace(Duration::from_secs(10), cfg.mu);
-    let report = session.into_report();
     // A real fleet has no ground-truth straggler states; record the
     // μ-rule detections instead so the trace's pattern feeds
     // `SimCluster::from_trace` like a simulator trace does.
@@ -534,23 +575,6 @@ pub fn drive_fleet(
         tr.state = Some(row.clone());
     }
     Ok(FleetRun { report, trace })
-}
-
-/// Chunk ids a task touches (what `Assign` ships to the worker).
-fn chunk_ids(task: &TaskDesc) -> Vec<u32> {
-    let mut out = Vec::new();
-    for unit in &task.units {
-        match unit {
-            WorkUnit::Noop => {}
-            WorkUnit::Plain { chunk, .. } => out.push(*chunk as u32),
-            WorkUnit::Coded { chunks, .. } => {
-                out.extend(chunks.iter().map(|&c| c as u32))
-            }
-        }
-    }
-    out.sort_unstable();
-    out.dedup();
-    out
 }
 
 /// A completed handshake: claimed id, write half, and the (possibly

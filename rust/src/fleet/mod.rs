@@ -11,12 +11,15 @@
 //!   task assignments, executes synthetic minitask workloads, and injects
 //!   deterministic, seeded chaos (Gilbert–Elliot straggle states with
 //!   Pareto slowdowns) so live runs are reproducible;
-//! * [`master`] — [`FleetCluster`]: accepts worker connections, streams
-//!   per-worker completions as they arrive, and drives an
-//!   [`SgcSession`](crate::session::SgcSession) through its incremental
+//! * [`master`] — [`FleetCluster`]: accepts worker connections and
+//!   streams per-worker completions as they arrive through the
+//!   [`EventCluster`](crate::cluster::EventCluster) API; the
+//!   [`JobScheduler`](crate::sched::JobScheduler) pumps each session's
+//!   incremental
 //!   [`try_close_round`](crate::session::SgcSession::try_close_round)
-//!   API so stragglers are cut the moment the wall clock passes the
-//!   μ-cutoff — without waiting for all `n` results;
+//!   off that stream, so stragglers are cut the moment the wall clock
+//!   passes the μ-cutoff — without waiting for all `n` results — and
+//!   many sessions can multiplex over one fleet;
 //! * [`loopback`] — an in-process harness spinning a master plus `n`
 //!   worker threads over localhost (tests, CI smoke, `sgc run --fleet N`).
 //!

@@ -20,20 +20,23 @@
 //! (`xla` crate, behind the `pjrt` feature) and executes them from worker
 //! threads.
 //!
-//! ## Architecture: sans-IO protocol core
+//! ## Architecture: sans-IO protocol core, event-driven backends
 //!
 //! The paper's round protocol — assign, observe stragglers via the
 //! μ-rule, wait out non-conforming patterns, commit, decode — lives in
 //! exactly one place, [`session::SgcSession`], which performs no IO.
-//! Execution backends (the [`cluster::SimCluster`] simulator, probe
-//! trace replays, recorded-trace replay ([`cluster::RunTrace`]), the
-//! real-compute PJRT trainer, the parallel batch driver, and the live
-//! TCP worker fleet ([`fleet::FleetCluster`])) merely pump it with
-//! completion times. Streaming backends use the session's incremental
-//! [`deadline_hint`](session::SgcSession::deadline_hint) /
-//! [`try_close_round`](session::SgcSession::try_close_round) API to cut
-//! stragglers on the wall clock without waiting for all `n` results.
-//! See `rust/DESIGN.md`.
+//! Execution backends implement the event-driven
+//! [`cluster::EventCluster`] API ([`cluster::SimCluster`] with
+//! per-worker FIFO contention, recorded-trace replay
+//! ([`cluster::RunTrace`]), the live TCP worker fleet
+//! ([`fleet::FleetCluster`])) and merely stream per-worker completion
+//! events; the multi-tenant [`sched::JobScheduler`] admits any number
+//! of sessions onto one shared backend and pumps each session's
+//! incremental [`deadline_hint`](session::SgcSession::deadline_hint) /
+//! [`try_close_round`](session::SgcSession::try_close_round) μ-rule off
+//! the shared event stream. Blocking callers
+//! ([`session::drive`], trace recording, the probe) bridge through
+//! [`cluster::SyncAdapter`]. See `rust/DESIGN.md`.
 //!
 //! ## Quick start
 //!
@@ -62,16 +65,51 @@
 //! println!("total runtime: {:.2}s", report.total_runtime_s);
 //! ```
 //!
-//! Or use the one-call drivers: [`session::drive`] for a single run (the
-//! [`coordinator::Master`] facade wraps it), [`session::run_parallel`]
-//! for concurrent batches of independent runs (sweeps, repeated seeds) —
-//! both return `Result` so a mis-sized cluster fails usably.
+//! Or use the one-call drivers: [`sched::drive_events`] for a single
+//! run on any event backend, [`session::drive`] for the classic
+//! blocking path (the [`coordinator::Master`] facade wraps both), and
+//! [`session::run_parallel`] for concurrent batches of independent runs
+//! (sweeps, repeated seeds) — all return `Result` so a mis-sized
+//! cluster fails usably.
 //!
-//! Run the same protocol over a *real* fleet of TCP workers on
-//! localhost, with seeded chaos injection and the μ-rule applied to
-//! wall-clock arrival times, then replay the recorded trace bit-exactly:
+//! Multiplex several sessions over **one shared cluster** — the paper's
+//! multi-model setting — with real per-worker contention and
+//! straggler-aware placement:
 //!
 //! ```no_run
+//! use sgc::cluster::SimCluster;
+//! use sgc::coding::SchemeConfig;
+//! use sgc::sched::{DisjointPlacement, JobScheduler, JobSpec};
+//! use sgc::session::SessionConfig;
+//! use sgc::straggler::GilbertElliot;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut sim = SimCluster::from_gilbert_elliot(16, GilbertElliot::default_fit(16, 7), 7);
+//! let mut sched = JobScheduler::with_policy(&mut sim, Box::new(DisjointPlacement));
+//! for _ in 0..4 {
+//!     sched.admit(&JobSpec {
+//!         scheme: SchemeConfig::gc(16, 2),
+//!         session: SessionConfig { jobs: 24, ..Default::default() },
+//!     })?;
+//! }
+//! let out = sched.run()?;                       // 4 sessions, one fleet
+//! for report in &out.reports {
+//!     println!("{}: {:.2}s", report.scheme, report.total_runtime_s);
+//! }
+//! println!("{}", out.utilization);              // makespan, multiplexing gain
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! (`sgc serve --jobs 4` is the CLI spelling; add `--fleet 8` to run the
+//! same multiplexed schedule over live TCP workers.)
+//!
+//! Run the protocol over a *real* fleet of TCP workers on localhost,
+//! with seeded chaos injection and the μ-rule applied to wall-clock
+//! arrival times, then replay the recorded trace bit-exactly:
+//!
+//! ```no_run
+//! use sgc::cluster::EventCluster;
 //! use sgc::coding::SchemeConfig;
 //! use sgc::fleet::{drive_fleet, ChaosConfig, LoopbackFleet};
 //! use sgc::session::{self, SessionConfig};
@@ -82,7 +120,7 @@
 //! let mut fleet = LoopbackFleet::spawn(8, Some(ChaosConfig::default_fit(7)))?;
 //! let run = drive_fleet(&scheme, &cfg, &mut fleet.cluster)?;  // streaming μ-rule
 //! println!("fleet runtime: {:.2}s", run.report.total_runtime_s);
-//! let replayed = session::drive(&scheme, &cfg, &mut run.trace.replay())?;
+//! let replayed = session::drive(&scheme, &cfg, &mut run.trace.replay().sync())?;
 //! assert_eq!(replayed.total_runtime_s, run.report.total_runtime_s);
 //! # Ok(())
 //! # }
@@ -98,6 +136,7 @@ pub mod experiments;
 pub mod fleet;
 pub mod probe;
 pub mod runtime;
+pub mod sched;
 pub mod session;
 pub mod straggler;
 pub mod testing;

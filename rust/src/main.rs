@@ -3,6 +3,8 @@
 //! ```text
 //! sgc run    --n 256 --scheme m-sgc:1,2,27 --jobs 480 [--mu 1.0] [--seed 7]
 //!            [--fleet N | --listen ADDR] [--record-trace P] [--replay-trace P]
+//! sgc serve  --jobs 4 --scheme gc:2 [--n 16 | --fleet N] [--session-jobs 24]
+//!            [--policy disjoint|round-robin] [--mu 1.0] [--seed 7]
 //! sgc worker --master HOST:PORT --id K [--chaos-seed S]
 //! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
 //!            [--record-trace PREFIX]
@@ -15,12 +17,22 @@
 //! workers with seeded chaos injection and applies the μ-rule to real
 //! wall-clock arrivals; `sgc run --listen 0.0.0.0:7070` instead waits
 //! for `--n` external `sgc worker` processes to connect.
+//!
+//! `sgc serve --jobs N` is the multi-tenant mode: it admits `N`
+//! independent SGC sessions onto **one shared cluster** (the simulator
+//! by default, a loopback TCP fleet with `--fleet K`) and multiplexes
+//! their rounds through the event-driven `JobScheduler`, printing
+//! per-job reports plus the aggregate fleet-utilization summary.
 
-use sgc::cluster::{Cluster, RecordingCluster, RunTrace, SimCluster};
+use sgc::cluster::{Cluster, EventCluster, RecordingCluster, RunTrace, SimCluster};
 use sgc::coding::SchemeConfig;
 use sgc::coordinator::RunReport;
 use sgc::fleet::{self, ChaosConfig, FleetCluster, LoopbackFleet, WorkerConfig};
 use sgc::probe::{grid_search, DelayProfile, SearchSpace};
+use sgc::sched::{
+    self, DisjointPlacement, JobScheduler, JobSpec, PlacementPolicy, RoundRobinPlacement,
+    ScheduleReport,
+};
 use sgc::session::{self, BatchItem, SessionConfig};
 use sgc::straggler::GilbertElliot;
 use sgc::train::{Dataset, DatasetConfig, MultiModelTrainer, TrainConfig};
@@ -32,6 +44,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("worker") => cmd_worker(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("probe") => cmd_probe(&args),
@@ -39,11 +52,12 @@ fn main() -> anyhow::Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: sgc <run|worker|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
+                "usage: sgc <run|serve|worker|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
                  scheme spec: gc:S | gc-rep:S | sr-sgc:B,W,L | sr-sgc-rep:B,W,L | \
                  m-sgc:B,W,L | m-sgc-rep:B,W,L | uncoded\n\
                  fleet:       sgc run --fleet N (loopback workers) or --listen ADDR\n\
                               (+ sgc worker --master ADDR --id K per external worker)\n\
+                 multi-job:   sgc serve --jobs N [--fleet K] — N sessions share one cluster\n\
                  traces:      --record-trace FILE on run/sweep; --replay-trace FILE on run"
             );
             std::process::exit(2);
@@ -53,6 +67,24 @@ fn main() -> anyhow::Result<()> {
 
 fn ge_cluster(n: usize, seed: u64) -> SimCluster {
     SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, seed), seed ^ 0xc1)
+}
+
+/// The `--round-timeout` flag (shared by every fleet mode).
+fn round_timeout(args: &Args) -> Duration {
+    Duration::from_secs_f64(args.get_parse("round-timeout", 60.0f64))
+}
+
+/// Spin up a loopback TCP fleet per the shared CLI flags
+/// (`--no-chaos`, `--chaos-seed`, `--round-timeout`).
+fn spawn_loopback(args: &Args, workers: usize, seed: u64) -> anyhow::Result<LoopbackFleet> {
+    let chaos = if args.has_flag("no-chaos") {
+        None
+    } else {
+        Some(ChaosConfig::default_fit(args.get_parse("chaos-seed", seed)))
+    };
+    let mut fleet = LoopbackFleet::spawn(workers, chaos)?;
+    fleet.cluster.set_round_timeout(round_timeout(args));
+    Ok(fleet)
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -79,16 +111,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 
     let report: RunReport = if fleet_n.is_some() || args.has("listen") {
         // --- live fleet: wall-clock μ-rule over streaming TCP arrivals ---
-        let chaos = if args.has_flag("no-chaos") {
-            None
-        } else {
-            Some(ChaosConfig::default_fit(args.get_parse("chaos-seed", seed)))
-        };
-        let round_timeout = Duration::from_secs_f64(args.get_parse("round-timeout", 60.0f64));
         let run = match fleet_n {
             Some(k) => {
-                let mut fleet = LoopbackFleet::spawn(k, chaos)?;
-                fleet.cluster.set_round_timeout(round_timeout);
+                let mut fleet = spawn_loopback(args, k, seed)?;
                 let run = fleet::drive_fleet(&scheme, &cfg, &mut fleet.cluster)?;
                 // join the workers so a worker-side error fails the run
                 // instead of disappearing with its thread
@@ -99,7 +124,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                 let addr = args.get("listen", "127.0.0.1:7070");
                 println!("waiting for {n} workers on {addr} …");
                 let mut cluster = FleetCluster::listen(&addr, n, Duration::from_secs(120))?;
-                cluster.set_round_timeout(round_timeout);
+                cluster.set_round_timeout(round_timeout(args));
                 let run = fleet::drive_fleet(&scheme, &cfg, &mut cluster)?;
                 cluster.shutdown();
                 run
@@ -122,21 +147,25 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
              would silently wrap around (pass the jobs count the trace was recorded at)",
             trace.rounds()
         );
-        session::drive(&scheme, &cfg, &mut trace.replay())?
+        session::drive(&scheme, &cfg, &mut trace.replay().sync())?
     } else {
         // --- stochastic simulator ---
         let mut sim = ge_cluster(n, seed);
         match &record {
             Some(path) => {
                 // explicit save so a write failure fails the command
-                // (autosave-on-drop can only warn)
-                let mut rec = RecordingCluster::new(sim);
+                // (autosave-on-drop can only warn); recording is a
+                // blocking wrapper, so bridge the simulator through its
+                // SyncAdapter
+                let mut rec = RecordingCluster::new(sim.sync());
                 let report = session::drive(&scheme, &cfg, &mut rec)?;
                 rec.into_trace().save(path)?;
                 println!("recorded trace → {path}");
                 report
             }
-            None => session::drive(&scheme, &cfg, &mut sim)?,
+            // event-native scheduler path (identical report, see
+            // tests/properties.rs::prop_scheduler_single_job_matches_drive)
+            None => sched::drive_events(&scheme, &cfg, &mut sim)?,
         }
     };
     println!(
@@ -154,6 +183,86 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         report.to_json().save(&path)?;
         println!("saved {path}");
     }
+    Ok(())
+}
+
+/// Multi-tenant mode: admit `--jobs` independent sessions onto one
+/// shared cluster and multiplex them through the `JobScheduler`.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !args.has_flag("fleet"),
+        "--fleet needs a worker count (e.g. --fleet 8)"
+    );
+    let jobs = args.get_parse("jobs", 4usize).max(1);
+    let fleet_n = args.options.get("fleet").map(|v| v.parse::<usize>()).transpose()?;
+    let n = match fleet_n {
+        Some(k) => k,
+        None => args.get_parse("n", 16usize),
+    };
+    let scheme = SchemeConfig::parse(n, &args.get("scheme", "gc:2"))?;
+    let seed = args.get_parse("seed", 7u64);
+    let cfg = SessionConfig {
+        jobs: args.get_parse("session-jobs", 24usize),
+        mu: args.get_parse("mu", 1.0f64),
+        ..Default::default()
+    };
+    let policy = || -> anyhow::Result<Box<dyn PlacementPolicy>> {
+        match args.get("policy", "disjoint").as_str() {
+            "disjoint" => Ok(Box::new(DisjointPlacement)),
+            "round-robin" | "rr" => Ok(Box::new(RoundRobinPlacement)),
+            other => anyhow::bail!("unknown --policy {other:?} (disjoint | round-robin)"),
+        }
+    };
+    let spec = JobSpec { scheme: scheme.clone(), session: cfg.clone() };
+
+    let out: ScheduleReport = match fleet_n {
+        Some(k) => {
+            // --- one shared loopback TCP fleet for every session ---
+            let mut fleet = spawn_loopback(args, k, seed)?;
+            let out = {
+                let mut sched = JobScheduler::with_policy(&mut fleet.cluster, policy()?);
+                for _ in 0..jobs {
+                    sched.admit(&spec)?;
+                }
+                sched.run()?
+            };
+            // drain cut stragglers' late results so every worker is idle
+            // before Shutdown (a worker whose Result write fails errors
+            // its thread), then join the workers so a worker-side error
+            // fails the run instead of disappearing with its thread
+            let _ = fleet.cluster.finish_trace(Duration::from_secs(10), cfg.mu);
+            fleet.shutdown()?;
+            out
+        }
+        None => {
+            // --- one shared simulator for every session ---
+            let mut sim = ge_cluster(n, seed);
+            let mut sched = JobScheduler::with_policy(&mut sim, policy()?);
+            for _ in 0..jobs {
+                sched.admit(&spec)?;
+            }
+            sched.run()?
+        }
+    };
+
+    for (j, rep) in out.reports.iter().enumerate() {
+        println!(
+            "job {j}: {:<18} runtime={:.2}s rounds={} waitouts={} violations={}",
+            rep.scheme,
+            rep.total_runtime_s,
+            rep.rounds.len(),
+            rep.waitout_rounds(),
+            rep.deadline_violations
+        );
+    }
+    println!("{}", out.utilization);
+    let undecoded: usize = out
+        .reports
+        .iter()
+        .flat_map(|r| r.job_completion_s.iter())
+        .filter(|t| !t.is_finite())
+        .count();
+    anyhow::ensure!(undecoded == 0, "{undecoded} session jobs never became decodable");
     Ok(())
 }
 
@@ -216,9 +325,10 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
                     .map(|c| if c.is_alphanumeric() { c } else { '_' })
                     .collect();
                 let path = format!("{prefix}-{label}-rep{}.json", i % reps);
-                Box::new(RecordingCluster::autosave(sim, path)) as Box<dyn Cluster + Send>
+                Box::new(RecordingCluster::autosave(sim.sync(), path))
+                    as Box<dyn Cluster + Send>
             }
-            None => Box::new(sim) as Box<dyn Cluster + Send>,
+            None => Box::new(sim.sync()) as Box<dyn Cluster + Send>,
         }
     })?;
 
@@ -251,8 +361,12 @@ fn cmd_probe(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_parse("seed", 7u64);
     let mut cluster =
         SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, seed), seed ^ 0xc1);
-    let profile = DelayProfile::capture(&mut cluster, t_probe, 1.0 / n as f64);
     let alpha = cluster.latency.alpha_s_per_load;
+    let profile = DelayProfile::capture(
+        &mut sgc::cluster::SyncAdapter::new(&mut cluster),
+        t_probe,
+        1.0 / n as f64,
+    );
     let space = SearchSpace::paper_default(n);
     for (name, cands) in [
         ("GC", space.gc_candidates()),

@@ -109,11 +109,11 @@ impl Cluster for ProfileCluster {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{LatencyParams, SimCluster};
+    use crate::cluster::{EventCluster, LatencyParams, SimCluster, SyncAdapter};
     use crate::straggler::models::NoStragglers;
 
-    fn cluster(n: usize) -> SimCluster {
-        SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 5)
+    fn cluster(n: usize) -> SyncAdapter<SimCluster> {
+        SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 5).sync()
     }
 
     #[test]

@@ -160,7 +160,7 @@ pub fn kind_name(k: &SchemeKind) -> &'static str {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::SimCluster;
+    use crate::cluster::{EventCluster, SimCluster};
     use crate::straggler::GilbertElliot;
 
     #[test]
@@ -180,7 +180,7 @@ mod tests {
     fn grid_search_prefers_low_runtime() {
         let n = 16;
         let mut cluster =
-            SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.05, 0.6, 3), 4);
+            SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.05, 0.6, 3), 4).sync();
         let profile = DelayProfile::capture(&mut cluster, 12, 1.0 / n as f64);
         let cands = vec![
             SchemeConfig::gc(n, 2),

@@ -1,0 +1,793 @@
+//! Multi-tenant job scheduler: many SGC sessions over one shared
+//! [`EventCluster`].
+//!
+//! The paper's headline experiment trains several models concurrently on
+//! a single 256-worker Lambda fleet, multiplexing every job's coded and
+//! replicated tasks across the same workers. [`JobScheduler`] is that
+//! master: it admits `N` independent [`SgcSession`] jobs, fans each
+//! job's rounds out through [`EventCluster::submit`], and pumps every
+//! session's μ-rule off the shared event stream using the incremental
+//! [`deadline_hint`](SgcSession::deadline_hint) /
+//! [`try_close_round`](SgcSession::try_close_round) API — so each job's
+//! stragglers are cut at that job's own `(1+μ)·κ` cutoff while other
+//! jobs keep the fleet busy.
+//!
+//! A pluggable [`PlacementPolicy`] decides which physical worker hosts
+//! each job's logical slot `i`: [`RoundRobinPlacement`] rotates jobs one
+//! worker apart (fair interleaving), [`DisjointPlacement`] spreads jobs
+//! `n / N` workers apart so the cyclic codes' hot-sets land on disjoint
+//! worker arcs (echoing M-SGC's multiplexed assignment). Placement is a
+//! pure relabelling: events are mapped back to logical worker ids before
+//! they reach a session, so every protocol decision is
+//! placement-agnostic.
+//!
+//! Drivers that need to execute real work per round (the PJRT trainer)
+//! hook in through [`RoundObserver`].
+
+use crate::cluster::{ClusterEvent, EventCluster, JobId};
+use crate::coding::SchemeConfig;
+use crate::coordinator::metrics::RunReport;
+use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
+
+/// Which physical worker hosts a job's logical worker 0. Placement must
+/// be deterministic — two identically-configured runs must place jobs
+/// identically (`tests/properties.rs` pins this).
+pub trait PlacementPolicy: Send {
+    /// Rotation applied to `job`'s logical worker ids: logical `i` runs
+    /// on physical `(i + offset) % n`.
+    fn offset(&self, job: JobId, n: usize, jobs: usize) -> usize;
+
+    fn label(&self) -> &'static str;
+}
+
+/// Fair rotation: consecutive jobs anchor one worker apart, so no single
+/// worker is "worker 0" (the uncoded/plain hot slot) for every job.
+pub struct RoundRobinPlacement;
+
+impl PlacementPolicy for RoundRobinPlacement {
+    fn offset(&self, job: JobId, n: usize, _jobs: usize) -> usize {
+        job % n.max(1)
+    }
+
+    fn label(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Straggler-aware spreading: jobs anchor `n / N` workers apart, so the
+/// cyclic codes' coded hot-sets (the `s+1`-wide support windows around
+/// each job's current assignment) land on disjoint worker arcs — one
+/// straggling worker then sits in at most one job's hot-set at a time.
+pub struct DisjointPlacement;
+
+impl PlacementPolicy for DisjointPlacement {
+    fn offset(&self, job: JobId, n: usize, jobs: usize) -> usize {
+        let stride = (n / jobs.max(1)).max(1);
+        (job * stride) % n.max(1)
+    }
+
+    fn label(&self) -> &'static str {
+        "disjoint"
+    }
+}
+
+/// One admitted job: a scheme plus its session parameters.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub scheme: SchemeConfig,
+    pub session: SessionConfig,
+}
+
+/// Per-round hooks for drivers that execute real work alongside the
+/// metadata protocol (e.g. [`crate::train::MultiModelTrainer`]). Default
+/// implementations do nothing.
+pub trait RoundObserver {
+    /// A job's round was begun (tasks assigned, nothing submitted yet).
+    fn round_started(
+        &mut self,
+        job: JobId,
+        session: &SgcSession,
+        plan: &RoundPlan,
+    ) -> crate::Result<()> {
+        let _ = (job, session, plan);
+        Ok(())
+    }
+
+    /// A job's round committed; `events` are the session's close events
+    /// (`RoundClosed` first, then `JobDecoded`/`DeadlineViolated`/…).
+    /// `plan` still describes the closed round.
+    fn round_closed(
+        &mut self,
+        job: JobId,
+        session: &SgcSession,
+        plan: &RoundPlan,
+        events: &[SessionEvent],
+    ) -> crate::Result<()> {
+        let _ = (job, session, plan, events);
+        Ok(())
+    }
+}
+
+/// The do-nothing observer behind [`JobScheduler::run`].
+pub struct NoopObserver;
+
+impl RoundObserver for NoopObserver {}
+
+/// Aggregate outcome of a multi-job run.
+#[derive(Clone, Debug)]
+pub struct FleetUtilization {
+    pub workers: usize,
+    pub jobs: usize,
+    /// Cluster-clock span of the whole run (first submit → last close).
+    pub makespan_s: f64,
+    /// Σ of the jobs' own protocol runtimes (`RunReport::total_runtime_s`).
+    pub total_session_s: f64,
+    /// Rounds committed across all jobs.
+    pub rounds: usize,
+    /// `WorkerDone` events absorbed.
+    pub worker_done_events: u64,
+    /// `WorkerDead` events absorbed.
+    pub worker_dead_events: u64,
+    /// `total_session_s / makespan_s`: how much session time the
+    /// scheduler packed into each second of shared-fleet time (> 1 means
+    /// sessions genuinely overlapped).
+    pub multiplexing_gain: f64,
+    /// Placement policy that produced this run.
+    pub placement: &'static str,
+}
+
+impl std::fmt::Display for FleetUtilization {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} jobs × {} workers [{}]: makespan {:.2}s, session-time {:.2}s \
+             (gain {:.2}x), {} rounds, {} arrivals, {} deaths",
+            self.jobs,
+            self.workers,
+            self.placement,
+            self.makespan_s,
+            self.total_session_s,
+            self.multiplexing_gain,
+            self.rounds,
+            self.worker_done_events,
+            self.worker_dead_events
+        )
+    }
+}
+
+/// Everything a finished multi-job run produced.
+#[derive(Clone, Debug)]
+pub struct ScheduleReport {
+    /// Per-job protocol reports, in admission (job-id) order.
+    pub reports: Vec<RunReport>,
+    pub utilization: FleetUtilization,
+}
+
+/// One admitted job's scheduling state.
+struct Slot {
+    /// `None` once the run completed and was consumed into `report`.
+    session: Option<SgcSession>,
+    plan: RoundPlan,
+    /// Physical rotation assigned by the placement policy at run start.
+    offset: usize,
+    /// Round currently (or last) submitted, as the cluster knows it.
+    round: u64,
+    /// Cluster time the current round was submitted.
+    submit_s: f64,
+    /// A round is open and awaiting events.
+    open: bool,
+    /// Physical workers reported unable to serve the *current* round
+    /// (`WorkerDead` events for `slot.round`; reset every round —
+    /// backends re-report per submission).
+    dead: Vec<bool>,
+    report: Option<RunReport>,
+}
+
+/// Multiplexes `N` admitted [`SgcSession`] jobs over one shared
+/// [`EventCluster`]. See the [module docs](self) for the event pump.
+pub struct JobScheduler<'c> {
+    cluster: &'c mut dyn EventCluster,
+    policy: Box<dyn PlacementPolicy>,
+    slots: Vec<Slot>,
+    ran: bool,
+    // --- reused scratch (the pump allocates nothing per event batch) ---
+    events: Vec<ClusterEvent>,
+    loads: Vec<f64>,
+    state: Vec<bool>,
+    pending: Vec<usize>,
+    // --- utilization counters ---
+    done_events: u64,
+    dead_events: u64,
+    rounds_closed: usize,
+}
+
+impl<'c> JobScheduler<'c> {
+    /// Scheduler with the default [`RoundRobinPlacement`].
+    pub fn new(cluster: &'c mut dyn EventCluster) -> Self {
+        Self::with_policy(cluster, Box::new(RoundRobinPlacement))
+    }
+
+    pub fn with_policy(
+        cluster: &'c mut dyn EventCluster,
+        policy: Box<dyn PlacementPolicy>,
+    ) -> Self {
+        JobScheduler {
+            cluster,
+            policy,
+            slots: Vec::new(),
+            ran: false,
+            events: Vec::new(),
+            loads: Vec::new(),
+            state: Vec::new(),
+            pending: Vec::new(),
+            done_events: 0,
+            dead_events: 0,
+            rounds_closed: 0,
+        }
+    }
+
+    /// Admit one job; returns its [`JobId`] (also its index in
+    /// [`ScheduleReport::reports`]). All jobs must be admitted before
+    /// [`run`](Self::run).
+    pub fn admit(&mut self, spec: &JobSpec) -> crate::Result<JobId> {
+        anyhow::ensure!(!self.ran, "JobScheduler::admit after run");
+        let session = SgcSession::new(&spec.scheme, spec.session.clone());
+        let n = self.cluster.n();
+        anyhow::ensure!(
+            session.n() == n,
+            "cluster has {n} workers but scheme {} expects n = {}",
+            spec.scheme.label(),
+            session.n()
+        );
+        let job = self.slots.len();
+        self.slots.push(Slot {
+            session: Some(session),
+            plan: RoundPlan::default(),
+            offset: 0,
+            round: 0,
+            submit_s: 0.0,
+            open: false,
+            dead: vec![false; n],
+            report: None,
+        });
+        Ok(job)
+    }
+
+    /// Number of admitted jobs.
+    pub fn jobs(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Run every admitted job to completion.
+    pub fn run(&mut self) -> crate::Result<ScheduleReport> {
+        self.run_observed(&mut NoopObserver)
+    }
+
+    /// Run with per-round [`RoundObserver`] hooks.
+    pub fn run_observed(
+        &mut self,
+        obs: &mut dyn RoundObserver,
+    ) -> crate::Result<ScheduleReport> {
+        anyhow::ensure!(!self.ran, "JobScheduler::run called twice");
+        anyhow::ensure!(!self.slots.is_empty(), "no jobs admitted");
+        self.ran = true;
+        let n = self.cluster.n();
+        let jobs = self.slots.len();
+        for (j, slot) in self.slots.iter_mut().enumerate() {
+            slot.offset = self.policy.offset(j, n, jobs) % n;
+        }
+        let start_s = self.cluster.now_s();
+
+        // Open round 1 of every job, in job-id order (determinism: the
+        // backend's RNG draws follow submission order).
+        for j in 0..jobs {
+            self.start_round(j, obs)?;
+        }
+
+        let mut stalls = 0u32;
+        while self.slots.iter().any(|s| s.report.is_none()) {
+            // Sleep horizon: the earliest still-future μ-cutoff across
+            // open jobs. Jobs whose cutoff already passed are waiting for
+            // a specific arrival — only an event can help them, so they
+            // contribute no horizon.
+            let pre = self.cluster.now_s();
+            let mut wake = f64::INFINITY;
+            for slot in &self.slots {
+                if !slot.open {
+                    continue;
+                }
+                if let Some(h) = slot.session.as_ref().expect("open slot").deadline_hint()
+                {
+                    let t = slot.submit_s + h;
+                    if t > pre && t < wake {
+                        wake = t;
+                    }
+                }
+            }
+
+            let batch = self.cluster.poll(wake);
+            self.events.clear();
+            self.events.extend_from_slice(batch);
+            // Judgment instant: captured BEFORE the co-timed drain below,
+            // so on a wall-clock backend any arrival stamped at or before
+            // `now` is either already in this batch or gets absorbed by
+            // that drain — a result that beat the μ-cutoff is never cut
+            // just because it sat unprocessed in the channel (the
+            // try_close_round contract; the deleted fleet loop kept the
+            // same order).
+            let now = self.cluster.now_s();
+            // Drain events up to the judgment instant before judging any
+            // round — unconditionally, so (a) *how* a backend batches its
+            // deliveries (one event per call, ties split, everything at
+            // once) can never reorder the job-id-ordered close/resubmit
+            // sequence below, and (b) on a wall-clock backend an arrival
+            // stamped before `now` that raced past the first poll's drain
+            // is absorbed before its worker can be cut at the cutoff.
+            loop {
+                let more = self.cluster.poll(now);
+                if more.is_empty() {
+                    break;
+                }
+                self.events.extend_from_slice(more);
+            }
+            self.absorb_events()?;
+            let closed_before = self.rounds_closed;
+            for j in 0..jobs {
+                self.try_advance(j, now, obs)?;
+            }
+
+            // Progress guard: a simulated backend that can neither
+            // deliver events nor advance time while jobs are open means
+            // the run is deadlocked — fail loudly instead of spinning.
+            let progressed = !self.events.is_empty()
+                || self.rounds_closed > closed_before
+                || self.cluster.now_s() > pre;
+            stalls = if progressed { 0 } else { stalls + 1 };
+            anyhow::ensure!(
+                stalls < 1000,
+                "scheduler made no progress with {} jobs unfinished (deadlocked backend?)",
+                self.slots.iter().filter(|s| s.report.is_none()).count()
+            );
+        }
+
+        let makespan = (self.cluster.now_s() - start_s).max(0.0);
+        let reports: Vec<RunReport> = self
+            .slots
+            .iter_mut()
+            .map(|s| s.report.take().expect("all jobs finished"))
+            .collect();
+        let total_session_s: f64 = reports.iter().map(|r| r.total_runtime_s).sum();
+        let utilization = FleetUtilization {
+            workers: n,
+            jobs,
+            makespan_s: makespan,
+            total_session_s,
+            rounds: self.rounds_closed,
+            worker_done_events: self.done_events,
+            worker_dead_events: self.dead_events,
+            multiplexing_gain: if makespan > 0.0 { total_session_s / makespan } else { 0.0 },
+            placement: self.policy.label(),
+        };
+        Ok(ScheduleReport { reports, utilization })
+    }
+
+    /// Route one absorbed event batch into the owning sessions.
+    fn absorb_events(&mut self) -> crate::Result<()> {
+        let n = self.cluster.n();
+        let events = std::mem::take(&mut self.events);
+        let result = self.route_events(&events, n);
+        self.events = events;
+        result
+    }
+
+    fn route_events(&mut self, events: &[ClusterEvent], n: usize) -> crate::Result<()> {
+        for &ev in events {
+            match ev {
+                // Death flags are strictly per (job, round): backends
+                // re-stage WorkerDead for every submission a worker owes,
+                // and a stale event from an earlier round must neither
+                // kill nor resurrect a worker for the *current* one (a
+                // worker that was dead when this round was assigned can
+                // never fill it, however alive it is now).
+                ClusterEvent::WorkerDone { job, round, worker, finish_s } => {
+                    self.done_events += 1;
+                    let Some(slot) = self.slots.get_mut(job) else { continue };
+                    if slot.open && round == slot.round {
+                        slot.dead[worker] = false;
+                        let logical = (worker + n - slot.offset) % n;
+                        slot.session
+                            .as_mut()
+                            .expect("open slot")
+                            .submit(logical, finish_s);
+                    }
+                }
+                ClusterEvent::WorkerDead { job, round, worker } => {
+                    self.dead_events += 1;
+                    if let Some(slot) = self.slots.get_mut(job) {
+                        if slot.open && round == slot.round {
+                            slot.dead[worker] = true;
+                        }
+                    }
+                }
+                ClusterEvent::RoundTimeout { job, round } => {
+                    let Some(slot) = self.slots.get(job) else { continue };
+                    if slot.open && round == slot.round {
+                        anyhow::bail!(
+                            "job {job} round {round}: cluster round timeout with \
+                             workers still missing"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Try to close job `j`'s open round at judgment instant `now` and,
+    /// if it closed, start the next one (or finish the job).
+    fn try_advance(
+        &mut self,
+        j: usize,
+        now: f64,
+        obs: &mut dyn RoundObserver,
+    ) -> crate::Result<()> {
+        let n = self.cluster.n();
+        let slot = &mut self.slots[j];
+        if !slot.open {
+            return Ok(());
+        }
+        let offset = slot.offset;
+        let round = slot.round;
+        let session = slot.session.as_mut().expect("open slot");
+        let now_rel = (now - slot.submit_s).max(0.0);
+        // O(1) gating per event batch; the pending *list* is only
+        // materialized on the rare hopeless-wait paths below.
+        let pending = session.pending_count();
+        let hint = session.deadline_hint();
+        let closable = pending == 0 || hint.is_some_and(|h| now_rel >= h);
+        // A wait on workers that are all permanently dead can never end
+        // (mirrors the old fleet loop); checked wherever a wait could
+        // otherwise spin until the round timeout.
+        let all_pending_dead = |pending_buf: &[usize], dead: &[bool]| {
+            !pending_buf.is_empty() && pending_buf.iter().all(|&lw| dead[(lw + offset) % n])
+        };
+        if !closable {
+            // κ unknown means *nobody* has reported; if every awaited
+            // worker is dead, no arrival can ever establish a cutoff.
+            if hint.is_none() && pending > 0 {
+                session.pending_workers_into(&mut self.pending);
+                if all_pending_dead(&self.pending, &slot.dead) {
+                    anyhow::bail!(
+                        "job {j} round {round}: workers {:?} are dead before any \
+                         arrival; the round can never close",
+                        self.pending
+                    );
+                }
+            }
+            return Ok(());
+        }
+        let events = session.try_close_round(now_rel);
+        if matches!(events.first(), Some(SessionEvent::WaitingFor { .. })) {
+            // The wait-out policy needs an arrival that has not come.
+            session.pending_workers_into(&mut self.pending);
+            if all_pending_dead(&self.pending, &slot.dead) {
+                anyhow::bail!(
+                    "job {j} round {round}: workers {:?} are dead and the wait-out \
+                     policy needs one of them; the straggler pattern cannot conform",
+                    self.pending
+                );
+            }
+            return Ok(());
+        }
+        self.rounds_closed += 1;
+        obs.round_closed(j, session, &slot.plan, &events)?;
+        slot.open = false;
+        if session.is_complete() {
+            let finished = slot.session.take().expect("open slot");
+            slot.report = Some(finished.into_report());
+        } else {
+            self.start_round(j, obs)?;
+        }
+        Ok(())
+    }
+
+    /// Begin job `j`'s next round and fan its tasks out on the cluster.
+    fn start_round(&mut self, j: usize, obs: &mut dyn RoundObserver) -> crate::Result<()> {
+        let n = self.cluster.n();
+        {
+            let slot = &mut self.slots[j];
+            let session = slot.session.as_mut().expect("job still running");
+            session.begin_round_into(&mut slot.plan);
+            obs.round_started(j, session, &slot.plan)?;
+            slot.round = slot.plan.round as u64;
+            slot.open = true;
+            // fresh round, fresh death flags (see `route_events`): the
+            // backend's `submit` re-reports workers unusable *for this
+            // round* before any of its events can matter
+            slot.dead.iter_mut().for_each(|d| *d = false);
+            // placement: logical worker i → physical (i + offset) % n
+            self.loads.clear();
+            self.loads.resize(n, 0.0);
+            for (logical, &load) in slot.plan.loads.iter().enumerate() {
+                self.loads[(logical + slot.offset) % n] = load;
+            }
+        }
+        let (job_round, offset) = (self.slots[j].round, self.slots[j].offset);
+        self.cluster.submit(j, job_round, &self.loads);
+        // Stamp the round origin AFTER the fan-out: a wall-clock backend
+        // stamps its own origin at the start of `submit`, so reading the
+        // clock here can only *understate* the elapsed round time — the
+        // μ-cutoff never fires early by the Assign-write duration.
+        // Simulated clocks do not move inside `submit`, so this is exact.
+        self.slots[j].submit_s = self.cluster.now_s();
+        // Ground truth (simulators know it): un-permute into logical ids
+        // so the report's true pattern is placement-agnostic.
+        if let Some(state) = self.cluster.true_state(j, job_round) {
+            self.state.clear();
+            self.state.resize(n, false);
+            for (physical, &s) in state.iter().enumerate() {
+                self.state[(physical + n - offset) % n] = s;
+            }
+            self.slots[j]
+                .session
+                .as_mut()
+                .expect("job still running")
+                .record_true_state(&self.state);
+        }
+        Ok(())
+    }
+}
+
+/// Drive one session over an event backend: a single-job
+/// [`JobScheduler`] run. This is the event-native sibling of
+/// [`crate::session::drive`] — identical reports on identically-seeded
+/// backends (`tests/properties.rs` pins byte equality).
+pub fn drive_events(
+    scheme_cfg: &SchemeConfig,
+    cfg: &SessionConfig,
+    cluster: &mut dyn EventCluster,
+) -> crate::Result<RunReport> {
+    let mut sched = JobScheduler::new(cluster);
+    sched.admit(&JobSpec { scheme: scheme_cfg.clone(), session: cfg.clone() })?;
+    let mut out = sched.run()?;
+    Ok(out.reports.remove(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{LatencyParams, SimCluster};
+    use crate::straggler::models::NoStragglers;
+    use crate::straggler::GilbertElliot;
+
+    fn quiet(n: usize, seed: u64) -> SimCluster {
+        SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), seed)
+    }
+
+    fn spec(n: usize, s: usize, jobs: usize) -> JobSpec {
+        JobSpec {
+            scheme: SchemeConfig::gc(n, s),
+            session: SessionConfig { jobs, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn two_jobs_share_one_quiet_cluster() {
+        let n = 8;
+        let mut sim = quiet(n, 3);
+        let mut sched = JobScheduler::new(&mut sim);
+        sched.admit(&spec(n, 1, 6)).unwrap();
+        sched.admit(&spec(n, 2, 4)).unwrap();
+        let out = sched.run().unwrap();
+        assert_eq!(out.reports.len(), 2);
+        assert_eq!(out.reports[0].rounds.len(), 6);
+        assert_eq!(out.reports[1].rounds.len(), 4);
+        for rep in &out.reports {
+            assert_eq!(rep.deadline_violations, 0);
+            assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+        }
+        let u = &out.utilization;
+        assert_eq!((u.jobs, u.workers), (2, n));
+        assert_eq!(u.rounds, 10);
+        assert_eq!(u.worker_done_events, 10 * n as u64);
+        assert!(u.makespan_s > 0.0);
+        assert!(u.total_session_s > 0.0);
+        assert!(!format!("{u}").is_empty());
+    }
+
+    #[test]
+    fn straggling_cluster_still_completes_every_job() {
+        let n = 12;
+        let mut sim =
+            SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.06, 0.6, 7), 19);
+        let mut sched =
+            JobScheduler::with_policy(&mut sim, Box::new(DisjointPlacement));
+        for _ in 0..3 {
+            sched.admit(&spec(n, 2, 8)).unwrap();
+        }
+        let out = sched.run().unwrap();
+        assert_eq!(out.reports.len(), 3);
+        for rep in &out.reports {
+            assert_eq!(rep.deadline_violations, 0, "{}", rep.scheme);
+            assert_eq!(rep.rounds.len(), 8);
+            assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+        }
+        assert_eq!(out.utilization.placement, "disjoint");
+    }
+
+    #[test]
+    fn placement_policies_are_deterministic_and_spread_jobs() {
+        let n = 16;
+        let rr = RoundRobinPlacement;
+        let dj = DisjointPlacement;
+        for j in 0..4 {
+            assert_eq!(rr.offset(j, n, 4), j);
+            assert_eq!(dj.offset(j, n, 4), j * 4);
+        }
+        // single job always anchors at worker 0 (equivalence with the
+        // single-session drivers depends on this)
+        assert_eq!(rr.offset(0, n, 1), 0);
+        assert_eq!(dj.offset(0, n, 1), 0);
+        // more jobs than workers still places validly
+        assert!(dj.offset(5, 4, 8) < 4);
+    }
+
+    /// Scripted backend: worker `dead_worker` never serves — every
+    /// submission stages a `WorkerDead` for it (plus a bogus stale-round
+    /// `WorkerDone` that a correct scheduler must ignore); everyone else
+    /// finishes ~1s after submission.
+    struct DeadWorkerCluster {
+        n: usize,
+        dead_worker: usize,
+        clock: f64,
+        staged: Vec<ClusterEvent>,
+        buf: Vec<ClusterEvent>,
+    }
+
+    impl DeadWorkerCluster {
+        fn new(n: usize, dead_worker: usize) -> Self {
+            DeadWorkerCluster { n, dead_worker, clock: 0.0, staged: Vec::new(), buf: Vec::new() }
+        }
+    }
+
+    impl EventCluster for DeadWorkerCluster {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn now_s(&self) -> f64 {
+            self.clock
+        }
+
+        fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+            assert_eq!(loads.len(), self.n);
+            for worker in 0..self.n {
+                if worker == self.dead_worker {
+                    self.staged.push(ClusterEvent::WorkerDead { job, round, worker });
+                    // resurrection bait: a stale result for a round this
+                    // job is not running — must not clear the death flag
+                    self.staged.push(ClusterEvent::WorkerDone {
+                        job,
+                        round: round + 1000,
+                        worker,
+                        finish_s: 0.5,
+                    });
+                } else {
+                    self.staged.push(ClusterEvent::WorkerDone {
+                        job,
+                        round,
+                        worker,
+                        finish_s: 1.0 + worker as f64 * 0.01,
+                    });
+                }
+            }
+        }
+
+        fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+            self.buf.clear();
+            if self.staged.is_empty() {
+                if until_s.is_finite() && until_s > self.clock {
+                    self.clock = until_s;
+                }
+            } else {
+                self.clock += 0.5;
+                std::mem::swap(&mut self.buf, &mut self.staged);
+            }
+            &self.buf
+        }
+
+        fn true_state(&self, _job: JobId, _round: u64) -> Option<&[bool]> {
+            None
+        }
+    }
+
+    #[test]
+    fn dead_worker_is_cut_by_the_mu_rule_and_the_run_completes() {
+        // GC(s=1) tolerates the permanently-dead worker every round: the
+        // μ-rule cuts it at the (1+μ)·κ cutoff and every job decodes.
+        let mut cluster = DeadWorkerCluster::new(3, 2);
+        let rep = drive_events(
+            &SchemeConfig::gc(3, 1),
+            &SessionConfig { jobs: 5, ..Default::default() },
+            &mut cluster,
+        )
+        .unwrap();
+        assert_eq!(rep.rounds.len(), 5);
+        assert_eq!(rep.deadline_violations, 0);
+        assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+        assert!(rep.rounds.iter().all(|r| r.detected_stragglers == 1));
+    }
+
+    #[test]
+    fn waitall_needing_a_dead_worker_fails_the_run() {
+        // The uncoded scheme must wait for everyone; the dead worker can
+        // never report, so the run errors instead of waiting forever —
+        // and the stale-round resurrection bait must not mask the death.
+        let mut cluster = DeadWorkerCluster::new(3, 2);
+        let err = drive_events(
+            &SchemeConfig::uncoded(3),
+            &SessionConfig { jobs: 2, ..Default::default() },
+            &mut cluster,
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("wait-out policy needs one of them"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn admit_rejects_a_size_mismatch() {
+        let mut sim = quiet(4, 1);
+        let mut sched = JobScheduler::new(&mut sim);
+        let err = sched.admit(&spec(8, 1, 2)).unwrap_err();
+        assert!(err.to_string().contains("expects n = 8"), "{err}");
+    }
+
+    #[test]
+    fn observer_sees_every_round_boundary() {
+        struct Counter {
+            started: usize,
+            closed: usize,
+            decoded: usize,
+        }
+        impl RoundObserver for Counter {
+            fn round_started(
+                &mut self,
+                _job: JobId,
+                _session: &SgcSession,
+                plan: &RoundPlan,
+            ) -> crate::Result<()> {
+                assert!(plan.round > 0);
+                self.started += 1;
+                Ok(())
+            }
+            fn round_closed(
+                &mut self,
+                _job: JobId,
+                _session: &SgcSession,
+                _plan: &RoundPlan,
+                events: &[SessionEvent],
+            ) -> crate::Result<()> {
+                assert!(matches!(events.first(), Some(SessionEvent::RoundClosed { .. })));
+                self.closed += 1;
+                self.decoded += events
+                    .iter()
+                    .filter(|e| matches!(e, SessionEvent::JobDecoded { .. }))
+                    .count();
+                Ok(())
+            }
+        }
+        let n = 6;
+        let mut sim = quiet(n, 9);
+        let mut sched = JobScheduler::new(&mut sim);
+        sched.admit(&spec(n, 1, 5)).unwrap();
+        sched.admit(&spec(n, 1, 5)).unwrap();
+        let mut counter = Counter { started: 0, closed: 0, decoded: 0 };
+        let out = sched.run_observed(&mut counter).unwrap();
+        assert_eq!(counter.started, 10);
+        assert_eq!(counter.closed, 10);
+        assert_eq!(counter.decoded, 10, "every job of every session decodes");
+        assert_eq!(out.utilization.rounds, 10);
+    }
+}

@@ -131,7 +131,7 @@ fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::SimCluster;
+    use crate::cluster::{EventCluster, SimCluster};
     use crate::straggler::GilbertElliot;
 
     fn items() -> Vec<BatchItem> {
@@ -146,11 +146,14 @@ mod tests {
 
     fn cluster_for(i: usize, item: &BatchItem) -> Box<dyn Cluster + Send> {
         let n = item.scheme.n;
-        Box::new(SimCluster::from_gilbert_elliot(
-            n,
-            GilbertElliot::new(n, 0.05, 0.6, 31 + i as u64),
-            91 + i as u64,
-        ))
+        Box::new(
+            SimCluster::from_gilbert_elliot(
+                n,
+                GilbertElliot::new(n, 0.05, 0.6, 31 + i as u64),
+                91 + i as u64,
+            )
+            .sync(),
+        )
     }
 
     #[test]
@@ -178,11 +181,10 @@ mod tests {
         let cfg = SchemeConfig::msgc(8, 1, 2, 2);
         let session_cfg = SessionConfig { jobs: 10, ..Default::default() };
         let mk = || {
-            Box::new(SimCluster::from_gilbert_elliot(
-                8,
-                GilbertElliot::new(8, 0.05, 0.6, 5),
-                17,
-            ))
+            Box::new(
+                SimCluster::from_gilbert_elliot(8, GilbertElliot::new(8, 0.05, 0.6, 5), 17)
+                    .sync(),
+            )
         };
         let driven = drive(&cfg, &session_cfg, mk().as_mut()).unwrap();
 
@@ -210,21 +212,17 @@ mod tests {
             session: SessionConfig { jobs: 4, ..Default::default() },
         };
         // cluster has 8 workers, scheme expects 16
-        let mut wrong = SimCluster::from_gilbert_elliot(
-            8,
-            GilbertElliot::new(8, 0.05, 0.6, 1),
-            2,
-        );
+        let mut wrong =
+            SimCluster::from_gilbert_elliot(8, GilbertElliot::new(8, 0.05, 0.6, 1), 2).sync();
         let err = drive(&item.scheme, &item.session, &mut wrong).unwrap_err();
         assert!(err.to_string().contains("expects n = 16"), "{err}");
 
         // …and through the batch driver, with the item index attached
         let err = run_parallel(vec![item.clone(), item], 4, |_, _| {
-            Box::new(SimCluster::from_gilbert_elliot(
-                8,
-                GilbertElliot::new(8, 0.05, 0.6, 1),
-                2,
-            )) as Box<dyn Cluster + Send>
+            Box::new(
+                SimCluster::from_gilbert_elliot(8, GilbertElliot::new(8, 0.05, 0.6, 1), 2)
+                    .sync(),
+            ) as Box<dyn Cluster + Send>
         })
         .unwrap_err();
         let chain = format!("{err:#}");

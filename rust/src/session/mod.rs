@@ -28,6 +28,9 @@
 mod driver;
 
 pub use driver::{default_threads, drive, run_parallel, BatchItem};
+// The event-native single-run driver lives with the scheduler; re-export
+// it next to `drive` so callers pick per backend flavour, not per module.
+pub use crate::sched::drive_events;
 
 use crate::coding::{CodePlanCache, Scheme, SchemeConfig, TaskDesc, ToleranceSpec};
 use crate::coordinator::metrics::{RoundRecord, RunReport};
@@ -167,6 +170,14 @@ pub struct SgcSession {
     n: usize,
     /// Completion times submitted for the open round.
     finish: Vec<Option<f64>>,
+    /// Workers without a submitted time for the open round (incremental,
+    /// so streaming drivers poll emptiness in O(1)).
+    pending_count: usize,
+    /// Fastest completion time submitted for the open round (κ;
+    /// `INFINITY` before the first submission). Tracked incrementally so
+    /// [`deadline_hint`](Self::deadline_hint) is O(1) on the multi-job
+    /// scheduler's per-event path.
+    kappa: f64,
     /// Final responder set of the last closed round.
     responded: Vec<bool>,
     scratch: RoundScratch,
@@ -209,6 +220,8 @@ impl SgcSession {
             total_rounds,
             n,
             finish: vec![None; n],
+            pending_count: 0,
+            kappa: f64::INFINITY,
             responded: Vec::new(),
             scratch: RoundScratch::default(),
             clock: 0.0,
@@ -291,6 +304,8 @@ impl SgcSession {
         for f in self.finish.iter_mut() {
             *f = None;
         }
+        self.pending_count = self.n;
+        self.kappa = f64::INFINITY;
         self.phase = Phase::Collecting;
     }
 
@@ -303,7 +318,10 @@ impl SgcSession {
     }
 
     /// Push one worker's completion time (seconds from round start) for
-    /// the open round. Re-submitting overwrites.
+    /// the open round. Re-submitting overwrites the stored time (κ —
+    /// and hence [`deadline_hint`](Self::deadline_hint) — only ever
+    /// tightens, so overwriting with a *larger* time does not raise the
+    /// hint; production drivers only ever re-submit identical values).
     pub fn submit(&mut self, worker: usize, finish_s: f64) {
         assert_eq!(self.phase, Phase::Collecting, "submit outside an open round");
         assert!(worker < self.n, "worker {worker} out of range (n={})", self.n);
@@ -311,7 +329,13 @@ impl SgcSession {
             finish_s.is_finite(),
             "worker {worker} completion time must be finite, got {finish_s}"
         );
+        if self.finish[worker].is_none() {
+            self.pending_count -= 1;
+        }
         self.finish[worker] = Some(finish_s);
+        if finish_s < self.kappa {
+            self.kappa = finish_s;
+        }
     }
 
     /// Push every worker's completion time at once.
@@ -340,15 +364,36 @@ impl SgcSession {
     /// Workers whose completion time has not been submitted for the open
     /// round (empty outside a round).
     pub fn pending_workers(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.pending_workers_into(&mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`pending_workers`](Self::pending_workers):
+    /// clears and refills a caller-owned buffer. This is what the
+    /// scheduler and fleet hot loops poll every arrival batch, so the
+    /// steady-state pump stays inside the §Perf allocation budget.
+    pub fn pending_workers_into(&self, out: &mut Vec<usize>) {
+        out.clear();
         if self.phase != Phase::Collecting {
-            return Vec::new();
+            return;
         }
-        (0..self.n).filter(|&i| self.finish[i].is_none()).collect()
+        out.extend((0..self.n).filter(|&i| self.finish[i].is_none()));
+    }
+
+    /// Workers still missing a completion time for the open round (0
+    /// outside a round). O(1) — safe to poll per event in a multi-job
+    /// scheduler's hot loop.
+    pub fn pending_count(&self) -> usize {
+        if self.phase != Phase::Collecting {
+            return 0;
+        }
+        self.pending_count
     }
 
     /// Is any completion time still missing for the open round?
     fn has_pending(&self) -> bool {
-        self.finish.iter().any(|f| f.is_none())
+        self.pending_count > 0
     }
 
     /// μ-rule cutoff hint for the open round: `(1 + μ) · κ` where `κ` is
@@ -356,7 +401,8 @@ impl SgcSession {
     /// wall-clock instant (seconds from round start) at which
     /// [`try_close_round`](Self::try_close_round) can cut the workers
     /// that have not responded yet. `None` before the first submission
-    /// (κ is unknown) or outside a round.
+    /// (κ is unknown) or outside a round. O(1): κ is tracked
+    /// incrementally by [`submit`](Self::submit).
     ///
     /// A streaming driver polls [`try_close_round`](Self::try_close_round)
     /// on every arrival and sleeps until this hint in between — the
@@ -366,9 +412,8 @@ impl SgcSession {
         if self.phase != Phase::Collecting {
             return None;
         }
-        let kappa = self.finish.iter().flatten().cloned().fold(f64::INFINITY, f64::min);
-        if kappa.is_finite() {
-            Some((1.0 + self.cfg.mu) * kappa)
+        if self.kappa.is_finite() {
+            Some((1.0 + self.cfg.mu) * self.kappa)
         } else {
             None
         }

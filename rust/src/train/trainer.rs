@@ -8,9 +8,10 @@
 //! executables, GC-encoded per work unit, and numerically decoded by the
 //! master at each job's completion.
 
-use crate::cluster::Cluster;
+use crate::cluster::{EventCluster, JobId};
 use crate::coding::{CodePlan, CodePlanCache, Scheme, SchemeConfig, SchemeKind, WorkUnit};
 use crate::runtime::{ComputePool, GradRequest};
+use crate::sched::{JobScheduler, JobSpec, RoundObserver};
 use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
 use crate::train::adam::Adam;
 use crate::train::dataset::Dataset;
@@ -172,34 +173,20 @@ impl MultiModelTrainer {
             .collect()
     }
 
-    /// Run the training loop against a (simulated-time) cluster.
+    /// Run the training loop against a (simulated-time) event backend.
     ///
     /// Round decisions (μ-rule, wait-outs, commit, decodability) are made
-    /// by the sans-IO [`SgcSession`]; this loop only executes the plan's
-    /// tasks for real (PJRT gradients, GC encode) and numerically decodes
-    /// the jobs the session reports as complete.
-    pub fn run(&mut self, cluster: &mut dyn Cluster) -> Result<TrainReport> {
+    /// by the sans-IO [`SgcSession`], scheduled as one job on the shared
+    /// backend by a [`JobScheduler`]; the trainer hooks the scheduler's
+    /// [`RoundObserver`] to execute the plan's tasks for real (PJRT
+    /// gradients, GC encode) and numerically decode the jobs the session
+    /// reports as complete.
+    pub fn run(&mut self, cluster: &mut dyn EventCluster) -> Result<TrainReport> {
         let wall = Stopwatch::start();
         let jobs = self.cfg.models * self.cfg.iterations;
-        let mut session = SgcSession::new(
-            &self.scheme_cfg,
-            SessionConfig { jobs, mu: self.cfg.mu, ..Default::default() },
-        );
-        let n = session.n();
-        anyhow::ensure!(cluster.n() == n, "cluster size mismatch");
+        anyhow::ensure!(cluster.n() == self.scheme_cfg.n, "cluster size mismatch");
         let chunk_cap = self.pool.dims().chunk;
-        let mut batch_rng = Pcg32::new(self.cfg.seed, 0xba7c);
-        // GC code plans drawn from the process-wide cache (constructed
-        // once per (n, s) across every trainer/session in the process).
-        let mut plans: HashMap<usize, Arc<CodePlan>> = HashMap::new();
-
-        // Per-model optimizer + parameters.
         let dims = self.pool.dims();
-        let mut params: Vec<Arc<Vec<Vec<f32>>>> =
-            (0..self.cfg.models).map(|m| Arc::new(self.init_params(m))).collect();
-        let mut opts: Vec<Adam> =
-            (0..self.cfg.models).map(|_| Adam::new(self.cfg.lr, &dims.param_lens())).collect();
-        let mut iter_of_model = vec![0usize; self.cfg.models];
 
         // Held-out eval batch per model (fixed).
         let eval_batches: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..self.cfg.models)
@@ -210,108 +197,43 @@ impl MultiModelTrainer {
             })
             .collect();
 
-        let mut jobs_state: Vec<Option<JobState>> = (0..jobs).map(|_| None).collect();
-        let mut losses: Vec<Vec<LossPoint>> = vec![Vec::new(); self.cfg.models];
-        let mut completed = 0usize;
-        let mut curve = Vec::new();
-        let chunk_fracs = session.scheme().spec().chunk_sizes.clone();
+        let this: &MultiModelTrainer = self;
+        let mut pump = TrainPump {
+            t: this,
+            jobs,
+            chunk_cap,
+            batch_rng: Pcg32::new(this.cfg.seed, 0xba7c),
+            // GC code plans drawn from the process-wide cache (constructed
+            // once per (n, s) across every trainer/session in the process).
+            plans: HashMap::new(),
+            params: (0..this.cfg.models).map(|m| Arc::new(this.init_params(m))).collect(),
+            opts: (0..this.cfg.models)
+                .map(|_| Adam::new(this.cfg.lr, &dims.param_lens()))
+                .collect(),
+            iter_of_model: vec![0usize; this.cfg.models],
+            eval_batches,
+            jobs_state: (0..jobs).map(|_| None).collect(),
+            losses: vec![Vec::new(); this.cfg.models],
+            completed: 0,
+            curve: Vec::new(),
+        };
 
-        // One plan buffer reused across all rounds (§Perf).
-        let mut plan = RoundPlan::default();
-        while !session.is_complete() {
-            session.begin_round_into(&mut plan);
-            let r = plan.round;
-            // Start job r: snapshot the owning model's params, sample and
-            // split the batch.
-            if r <= jobs {
-                let model = (r - 1) % self.cfg.models;
-                let batch = self.dataset_of(model).sample_batch(self.cfg.batch, &mut batch_rng);
-                let chunk_indices = Dataset::split_batch(&batch, &chunk_fracs);
-                for (c, idx) in chunk_indices.iter().enumerate() {
-                    anyhow::ensure!(
-                        idx.len() <= chunk_cap,
-                        "chunk {c} has {} samples > compiled capacity {chunk_cap}; \
-                         lower --batch or recompile with a larger chunk",
-                        idx.len()
-                    );
-                }
-                jobs_state[r - 1] = Some(JobState {
-                    model,
-                    params: Arc::clone(&params[model]),
-                    chunk_indices,
-                    sample_weight: 1.0 / self.cfg.batch as f32,
-                    plain_sum: None,
-                    delivered_chunks: HashSet::new(),
-                    coded: HashMap::new(),
-                    loss_sum: 0.0,
-                    done: false,
-                });
-            }
-
-            let sample = cluster.sample_round(&plan.loads);
-            session.submit_all(&sample.finish);
-            let events = session.close_round();
-
-            // Real compute for responders' units on still-active jobs.
-            self.compute_round(
-                session.scheme(),
-                &plan.tasks,
-                session.last_responded(),
-                &mut jobs_state,
-                &mut plans,
-            )?;
-
-            // Numerically decode the jobs the session decoded at the
-            // metadata level, update models, log losses.
-            let clock = session.clock_s();
-            for ev in &events {
-                let SessionEvent::JobDecoded { job, .. } = ev else { continue };
-                let t = *job;
-                let grad = self.finalize_job(session.scheme(), t, &mut jobs_state, &mut plans)?;
-                let js = jobs_state[t - 1].as_mut().unwrap();
-                js.done = true;
-                completed += 1;
-                let model = js.model;
-                let mut p = (*params[model]).clone();
-                opts[model].update(&mut p, &grad);
-                params[model] = Arc::new(p);
-                iter_of_model[model] += 1;
-                if iter_of_model[model] % self.cfg.eval_every == 0 {
-                    let (ex, ey, ew) = &eval_batches[model];
-                    let (loss, _, _) = self
-                        .pool
-                        .grad_chunk_blocking(GradRequest {
-                            params: Arc::clone(&params[model]),
-                            x: ex.clone(),
-                            y: ey.clone(),
-                            wgt: ew.clone(),
-                        })
-                        .context("eval loss")?;
-                    losses[model].push(LossPoint {
-                        iteration: iter_of_model[model],
-                        sim_time_s: clock,
-                        loss: loss as f64,
-                    });
-                }
-            }
-            curve.push((clock, completed));
-            // Drop job state once past its deadline to bound memory.
-            if let Some(t) = session.scheme().deadline_job(r) {
-                if let Some(js) = jobs_state[t - 1].as_mut() {
-                    js.chunk_indices.clear();
-                    js.coded.clear();
-                }
-            }
-        }
+        let mut sched = JobScheduler::new(cluster);
+        sched.admit(&JobSpec {
+            scheme: this.scheme_cfg.clone(),
+            session: SessionConfig { jobs, mu: this.cfg.mu, ..Default::default() },
+        })?;
+        let out = sched.run_observed(&mut pump)?;
+        let report = &out.reports[0];
 
         Ok(TrainReport {
             scheme: self.scheme_cfg.label(),
-            sim_runtime_s: session.clock_s(),
+            sim_runtime_s: report.total_runtime_s,
             wall_runtime_s: wall.elapsed_s(),
-            losses,
-            jobs_completed: completed,
-            deadline_violations: session.deadline_violations(),
-            completion_curve: curve,
+            losses: pump.losses,
+            jobs_completed: pump.completed,
+            deadline_violations: report.deadline_violations,
+            completion_curve: pump.curve,
         })
     }
 
@@ -484,6 +406,131 @@ impl MultiModelTrainer {
             let _ = got;
         }
         Ok(total)
+    }
+}
+
+/// The trainer's [`RoundObserver`]: runs the *numeric* side of every
+/// round boundary the scheduler reports — job setup at round start, real
+/// gradient compute and model updates at round close. The metadata
+/// protocol (μ-rule, wait-outs, decodability) never leaves the session.
+struct TrainPump<'a> {
+    t: &'a MultiModelTrainer,
+    /// Total jobs `J = M · iterations`.
+    jobs: usize,
+    chunk_cap: usize,
+    batch_rng: Pcg32,
+    plans: HashMap<usize, Arc<CodePlan>>,
+    /// Per-model parameters (snapshotted per job).
+    params: Vec<Arc<Vec<Vec<f32>>>>,
+    opts: Vec<Adam>,
+    iter_of_model: Vec<usize>,
+    eval_batches: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+    jobs_state: Vec<Option<JobState>>,
+    losses: Vec<Vec<LossPoint>>,
+    completed: usize,
+    curve: Vec<(f64, usize)>,
+}
+
+impl RoundObserver for TrainPump<'_> {
+    fn round_started(
+        &mut self,
+        _job: JobId,
+        session: &SgcSession,
+        plan: &RoundPlan,
+    ) -> crate::Result<()> {
+        let r = plan.round;
+        if r > self.jobs {
+            return Ok(()); // trailing delay rounds start no new job
+        }
+        // Start job r: snapshot the owning model's params, sample and
+        // split the batch.
+        let model = (r - 1) % self.t.cfg.models;
+        let batch =
+            self.t.dataset_of(model).sample_batch(self.t.cfg.batch, &mut self.batch_rng);
+        let chunk_indices = Dataset::split_batch(&batch, &session.scheme().spec().chunk_sizes);
+        for (c, idx) in chunk_indices.iter().enumerate() {
+            anyhow::ensure!(
+                idx.len() <= self.chunk_cap,
+                "chunk {c} has {} samples > compiled capacity {}; \
+                 lower --batch or recompile with a larger chunk",
+                idx.len(),
+                self.chunk_cap
+            );
+        }
+        self.jobs_state[r - 1] = Some(JobState {
+            model,
+            params: Arc::clone(&self.params[model]),
+            chunk_indices,
+            sample_weight: 1.0 / self.t.cfg.batch as f32,
+            plain_sum: None,
+            delivered_chunks: HashSet::new(),
+            coded: HashMap::new(),
+            loss_sum: 0.0,
+            done: false,
+        });
+        Ok(())
+    }
+
+    fn round_closed(
+        &mut self,
+        _job: JobId,
+        session: &SgcSession,
+        plan: &RoundPlan,
+        events: &[SessionEvent],
+    ) -> crate::Result<()> {
+        // Real compute for responders' units on still-active jobs.
+        self.t.compute_round(
+            session.scheme(),
+            &plan.tasks,
+            session.last_responded(),
+            &mut self.jobs_state,
+            &mut self.plans,
+        )?;
+
+        // Numerically decode the jobs the session decoded at the
+        // metadata level, update models, log losses.
+        let clock = session.clock_s();
+        for ev in events {
+            let SessionEvent::JobDecoded { job: t, .. } = ev else { continue };
+            let t = *t;
+            let grad =
+                self.t.finalize_job(session.scheme(), t, &mut self.jobs_state, &mut self.plans)?;
+            let js = self.jobs_state[t - 1].as_mut().unwrap();
+            js.done = true;
+            self.completed += 1;
+            let model = js.model;
+            let mut p = (*self.params[model]).clone();
+            self.opts[model].update(&mut p, &grad);
+            self.params[model] = Arc::new(p);
+            self.iter_of_model[model] += 1;
+            if self.iter_of_model[model] % self.t.cfg.eval_every == 0 {
+                let (ex, ey, ew) = &self.eval_batches[model];
+                let (loss, _, _) = self
+                    .t
+                    .pool
+                    .grad_chunk_blocking(GradRequest {
+                        params: Arc::clone(&self.params[model]),
+                        x: ex.clone(),
+                        y: ey.clone(),
+                        wgt: ew.clone(),
+                    })
+                    .context("eval loss")?;
+                self.losses[model].push(LossPoint {
+                    iteration: self.iter_of_model[model],
+                    sim_time_s: clock,
+                    loss: loss as f64,
+                });
+            }
+        }
+        self.curve.push((clock, self.completed));
+        // Drop job state once past its deadline to bound memory.
+        if let Some(t) = session.scheme().deadline_job(plan.round) {
+            if let Some(js) = self.jobs_state[t - 1].as_mut() {
+                js.chunk_indices.clear();
+                js.coded.clear();
+            }
+        }
+        Ok(())
     }
 }
 

@@ -12,8 +12,11 @@
 //! responder/straggler/pending vectors), i.e. hundreds per round at
 //! n = 256 — this test fails loudly if any of that creeps back.
 
+use sgc::cluster::{LatencyParams, SimCluster};
 use sgc::coding::SchemeConfig;
+use sgc::sched::{JobScheduler, JobSpec};
 use sgc::session::{RoundPlan, SessionConfig, SgcSession};
+use sgc::straggler::NoStragglers;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -88,5 +91,35 @@ fn steady_state_round_allocations_are_constant_and_small() {
         "steady-state round loop allocated {per_round:.1} times/round \
          ({total} over {measured} rounds) — the allocation-free engine \
          regressed (expected ≤ 8; the pre-rework protocol costs O(n))"
+    );
+
+    // --- Phase 2: the scheduler pump over the event-driven simulator ---
+    // One job through `JobScheduler` on `SimCluster` adds, per round: the
+    // straggler-process row, the recorded true-state row, and the
+    // session's own report storage from phase 1 — while the pump itself
+    // (submit/poll queues, event batches, load placement, pending-worker
+    // scans via `pending_workers_into`) runs entirely in reused buffers.
+    // O(n) per-round allocation anywhere in the event path would put
+    // this in the hundreds at n = 256.
+    let sched_rounds = 400usize;
+    let mut sim =
+        SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 7);
+    let mut sched = JobScheduler::new(&mut sim);
+    sched
+        .admit(&JobSpec {
+            scheme: SchemeConfig::gc(n, s),
+            session: SessionConfig { jobs: sched_rounds, ..Default::default() },
+        })
+        .expect("sizes match");
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    let out = sched.run().expect("quiet run completes");
+    let total = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(out.reports[0].rounds.len(), sched_rounds);
+    let per_round = total as f64 / sched_rounds as f64;
+    assert!(
+        per_round <= 16.0,
+        "scheduler pump allocated {per_round:.1} times/round ({total} over \
+         {sched_rounds} rounds) — the event-path allocation budget regressed \
+         (expected ≤ 16; an O(n) event path costs hundreds at n = 256)"
     );
 }

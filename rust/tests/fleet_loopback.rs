@@ -2,7 +2,7 @@
 //! wall-clock μ-rule, chaos injection, and trace record/replay — the
 //! acceptance scenario of the fleet subsystem.
 
-use sgc::cluster::{RecordingCluster, RunTrace, SimCluster};
+use sgc::cluster::{EventCluster, RecordingCluster, RunTrace, SimCluster};
 use sgc::coding::SchemeConfig;
 use sgc::fleet::{drive_fleet, ChaosConfig, LoopbackFleet};
 use sgc::session::{self, SessionConfig};
@@ -45,7 +45,7 @@ fn fleet_8_workers_with_chaos_completes_and_replays() {
     // durations and job completions per round.
     let trace = RunTrace::from_json(&run.trace.to_json()).expect("trace json");
     let replayed =
-        session::drive(&scheme, &cfg, &mut trace.replay()).expect("replay drive");
+        session::drive(&scheme, &cfg, &mut trace.replay().sync()).expect("replay drive");
     assert_eq!(replayed.effective_pattern, run.report.effective_pattern);
     assert_eq!(replayed.detected_pattern, run.report.detected_pattern);
     assert_eq!(replayed.deadline_violations, run.report.deadline_violations);
@@ -63,12 +63,53 @@ fn fleet_8_workers_with_chaos_completes_and_replays() {
 
     // the detected pattern is also loadable as a SimCluster trace
     let mut sim = SimCluster::from_trace(n, pattern.clone(), 7);
-    let sim_report = session::drive(&scheme, &cfg, &mut sim).expect("sim replay");
+    let sim_report = session::drive(&scheme, &cfg, &mut sim.sync()).expect("sim replay");
     assert_eq!(
         sim_report.true_pattern.rows[..pattern.rounds().min(sim_report.true_pattern.rounds())],
         pattern.rows[..pattern.rounds().min(sim_report.true_pattern.rounds())],
         "SimCluster::from_trace replays the recorded straggler pattern"
     );
+}
+
+/// Two sessions multiplexed over ONE shared fleet through the
+/// event-driven scheduler: wire-level sequence numbers route each
+/// arrival back to the owning `(job, round)`, every worker serves both
+/// jobs' every round, and both protocol runs complete.
+#[test]
+fn two_jobs_multiplex_over_one_fleet() {
+    use sgc::sched::{JobScheduler, JobSpec};
+    use std::time::Duration;
+
+    let n = 4;
+    let jobs = 6;
+    let mut fleet =
+        LoopbackFleet::spawn(n, Some(ChaosConfig::default_fit(5))).expect("spawn fleet");
+    let spec = JobSpec {
+        scheme: SchemeConfig::gc(n, 1),
+        session: SessionConfig { jobs, ..Default::default() },
+    };
+    let out = {
+        let mut sched = JobScheduler::new(&mut fleet.cluster);
+        sched.admit(&spec).expect("admit job 0");
+        sched.admit(&spec).expect("admit job 1");
+        sched.run().expect("multiplexed fleet run")
+    };
+    // drain cut stragglers' late results so workers are idle at Shutdown
+    let _ = fleet.cluster.finish_trace(Duration::from_secs(10), 1.0);
+    let stats = fleet.shutdown().expect("clean shutdown");
+
+    assert_eq!(out.reports.len(), 2);
+    for rep in &out.reports {
+        assert_eq!(rep.rounds.len(), jobs, "GC has delay 0: J rounds per job");
+        assert_eq!(rep.deadline_violations, 0);
+        assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+        assert!(rep.total_runtime_s > 0.0);
+    }
+    // both jobs' every round reached every worker (2 × jobs wire rounds)
+    assert!(stats.iter().all(|s| s.rounds_served == 2 * jobs), "{stats:?}");
+    assert_eq!(out.utilization.jobs, 2);
+    assert_eq!(out.utilization.rounds, 2 * jobs);
+    assert!(out.utilization.worker_done_events > 0);
 }
 
 /// Two fleets with the same chaos seed produce the same straggle/serve
@@ -97,13 +138,13 @@ fn recorded_sim_run_replays_identically() {
     let scheme = SchemeConfig::parse(n, "m-sgc:1,2,3").unwrap();
     let cfg = SessionConfig { jobs: 15, ..Default::default() };
     let sim = SimCluster::from_gilbert_elliot(n, GilbertElliot::new(n, 0.07, 0.6, 3), 11);
-    let mut rec = RecordingCluster::new(sim);
+    let mut rec = RecordingCluster::new(sim.sync());
     let original = session::drive(&scheme, &cfg, &mut rec).unwrap();
     let trace = rec.into_trace();
 
     // through JSON and back, then replayed
     let trace = RunTrace::from_json(&trace.to_json()).unwrap();
-    let replayed = session::drive(&scheme, &cfg, &mut trace.replay()).unwrap();
+    let replayed = session::drive(&scheme, &cfg, &mut trace.replay().sync()).unwrap();
     assert_eq!(replayed.total_runtime_s, original.total_runtime_s);
     assert_eq!(replayed.job_completion_s, original.job_completion_s);
     assert_eq!(replayed.deadline_violations, original.deadline_violations);

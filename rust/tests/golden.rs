@@ -9,7 +9,7 @@
 //! same round records, same patterns — which we check by comparing the
 //! full `Debug` rendering.
 
-use sgc::cluster::{Cluster, SimCluster};
+use sgc::cluster::{Cluster, EventCluster, SimCluster};
 use sgc::coding::{Scheme, SchemeConfig, ToleranceSpec};
 use sgc::coordinator::{Master, RoundRecord, RunConfig, RunReport, WaitPolicy};
 use sgc::straggler::{GilbertElliot, Pattern, ToleranceChecker};
@@ -222,11 +222,11 @@ fn session_matches_reference_loop_byte_for_byte() {
             jobs,
             1.0,
             WaitPolicy::ConformanceRepair,
-            &mut cluster(n, 11),
+            &mut cluster(n, 11).sync(),
         );
         let mut master =
             Master::new(cfg, RunConfig { jobs, ..Default::default() });
-        let session = master.run(&mut cluster(n, 11)).unwrap();
+        let session = master.run(&mut cluster(n, 11).sync()).unwrap();
         assert_eq!(
             format!("{reference:?}"),
             format!("{session:?}"),
@@ -246,13 +246,13 @@ fn session_matches_reference_under_deadline_decode() {
             jobs,
             1.0,
             WaitPolicy::DeadlineDecode,
-            &mut cluster(n, 29),
+            &mut cluster(n, 29).sync(),
         );
         let mut master = Master::new(
             cfg,
             RunConfig { jobs, wait_policy: WaitPolicy::DeadlineDecode, ..Default::default() },
         );
-        let session = master.run(&mut cluster(n, 29)).unwrap();
+        let session = master.run(&mut cluster(n, 29).sync()).unwrap();
         assert_eq!(
             format!("{reference:?}"),
             format!("{session:?}"),

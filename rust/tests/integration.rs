@@ -1,7 +1,7 @@
 //! Integration tests: session protocol + schemes + simulated cluster +
 //! probe, at Table-1-like (but scaled-down) configurations.
 
-use sgc::cluster::{LatencyParams, SimCluster};
+use sgc::cluster::{EventCluster, LatencyParams, SimCluster, SyncAdapter};
 use sgc::coding::SchemeConfig;
 use sgc::coordinator::{Master, RunConfig, WaitPolicy};
 use sgc::probe::{grid_search, DelayProfile, SearchSpace};
@@ -17,7 +17,7 @@ fn run(scheme: SchemeConfig, jobs: usize, seed: u64) -> sgc::coordinator::RunRep
     session::drive(
         &scheme,
         &SessionConfig { jobs, ..Default::default() },
-        &mut ge_cluster(n, seed),
+        &mut ge_cluster(n, seed).sync(),
     )
     .unwrap()
 }
@@ -84,7 +84,7 @@ fn deadline_decode_can_violate_on_msgc_but_not_conformance() {
             Box::new(TraceProcess::new(pattern.clone())),
             9,
         );
-        master.run(&mut cluster).unwrap()
+        master.run(&mut cluster.sync()).unwrap()
     };
     let repair = mk(WaitPolicy::ConformanceRepair);
     assert_eq!(repair.deadline_violations, 0);
@@ -105,7 +105,7 @@ fn mu_controls_straggler_sensitivity() {
     let detect = |mu: f64| {
         let mut master =
             Master::new(SchemeConfig::gc(n, 6), RunConfig { jobs: 30, mu, ..Default::default() });
-        let rep = master.run(&mut ge_cluster(n, 42)).unwrap();
+        let rep = master.run(&mut ge_cluster(n, 42).sync()).unwrap();
         rep.rounds.iter().map(|r| r.detected_stragglers).sum::<usize>()
     };
     let tight = detect(0.3);
@@ -120,7 +120,7 @@ fn no_stragglers_means_no_waitouts_and_tight_rounds() {
         Master::new(SchemeConfig::msgc(n, 1, 2, 4), RunConfig { jobs: 20, ..Default::default() });
     let mut cluster =
         SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 3);
-    let rep = master.run(&mut cluster).unwrap();
+    let rep = master.run(&mut cluster.sync()).unwrap();
     assert_eq!(rep.deadline_violations, 0);
     assert_eq!(rep.waitout_rounds(), 0);
     assert!(rep.true_pattern.straggle_fraction() == 0.0);
@@ -131,7 +131,7 @@ fn detected_stragglers_track_true_states() {
     let n = 128;
     let mut master =
         Master::new(SchemeConfig::gc(n, 12), RunConfig { jobs: 50, ..Default::default() });
-    let rep = master.run(&mut ge_cluster(n, 11)).unwrap();
+    let rep = master.run(&mut ge_cluster(n, 11).sync()).unwrap();
     // per-round agreement between μ-rule detections and GE ground truth
     let mut agree = 0usize;
     let mut total = 0usize;
@@ -153,7 +153,8 @@ fn probe_selects_reasonable_gc_parameter() {
     // should not pick extreme s values.
     let n = 64;
     let mut cluster = ge_cluster(n, 21);
-    let profile = DelayProfile::capture(&mut cluster, 30, 1.0 / n as f64);
+    let profile =
+        DelayProfile::capture(&mut SyncAdapter::new(&mut cluster), 30, 1.0 / n as f64);
     let alpha = cluster.latency.alpha_s_per_load;
     let cands: Vec<SchemeConfig> = (1..=16).map(|s| SchemeConfig::gc(n, s)).collect();
     let ranked = grid_search(&cands, &profile, alpha, 30);
@@ -188,7 +189,11 @@ fn master_facade_equals_session_drive() {
     let jobs = 20;
     let via_session = run(scheme.clone(), jobs, 5);
     let mut master = Master::new(scheme, RunConfig { jobs, ..Default::default() });
-    let via_master = master.run(&mut ge_cluster(32, 5)).unwrap();
+    let via_master = master.run(&mut ge_cluster(32, 5).sync()).unwrap();
+    // the event-native scheduler path agrees too
+    let via_events = master.run_events(&mut ge_cluster(32, 5)).unwrap();
+    assert_eq!(via_events.total_runtime_s, via_session.total_runtime_s);
+    assert_eq!(via_events.job_completion_s, via_session.job_completion_s);
     assert_eq!(via_master.total_runtime_s, via_session.total_runtime_s);
     assert_eq!(via_master.job_completion_s, via_session.job_completion_s);
     assert_eq!(via_master.deadline_violations, via_session.deadline_violations);
@@ -244,7 +249,7 @@ fn decode_in_idle_hides_decode_cost() {
             SchemeConfig::gc(n, 4),
             RunConfig { jobs: 20, measure_decode: true, decode_in_idle, ..Default::default() },
         );
-        master.run(&mut ge_cluster(n, 9)).unwrap().total_runtime_s
+        master.run(&mut ge_cluster(n, 9).sync()).unwrap().total_runtime_s
     };
     let hidden = mk(true);
     let exposed = mk(false);
