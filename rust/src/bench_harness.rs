@@ -13,17 +13,26 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case label.
     pub name: String,
+    /// Timed iterations contributing to the statistics.
     pub iters: u64,
+    /// Mean per-iteration duration.
     pub mean: Duration,
+    /// Standard deviation of per-iteration durations.
     pub std: Duration,
+    /// Median per-iteration duration.
     pub median: Duration,
+    /// 95th-percentile per-iteration duration.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl BenchResult {
+    /// Serialize for the `BENCH_*.json` snapshot files.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("name", self.name.as_str())
@@ -66,6 +75,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Harness named `label` (honours `SGC_BENCH_FAST=1` for quick runs).
     pub fn new(label: &str) -> Self {
         // Honour SGC_BENCH_FAST=1 for CI-ish quick runs.
         let fast = std::env::var("SGC_BENCH_FAST").ok().as_deref() == Some("1");
@@ -188,6 +198,7 @@ impl Bench {
         }
     }
 
+    /// Every case measured so far, in execution order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -63,6 +63,25 @@ pub enum ClusterEvent {
     /// cap with results still missing. Emitted at most once per
     /// submission; harmless for rounds the driver already closed.
     RoundTimeout { job: JobId, round: u64 },
+    /// A worker was admitted into the live roster after startup
+    /// (elastic membership): a fresh id grows [`EventCluster::n`], a
+    /// reclaimed id revives a retired slot. Schedulers fold the worker
+    /// into their placement spare set. Backends with fixed membership
+    /// (simulators, trace replays) never emit this.
+    WorkerJoined {
+        /// Physical worker-slot id that joined.
+        worker: usize,
+    },
+    /// A worker left the roster permanently: its socket dropped, it
+    /// went byzantine, or its heartbeats stayed silent past the
+    /// backend's reap deadline. Per-submission `WorkerDead` events for
+    /// everything it still owed accompany this; schedulers additionally
+    /// re-place the worker's logical slots onto live spares at the next
+    /// round start. Backends with fixed membership never emit this.
+    WorkerRetired {
+        /// Physical worker-slot id that retired.
+        worker: usize,
+    },
 }
 
 /// Event-driven execution backend: accepts task sets for many `(job,
@@ -75,7 +94,11 @@ pub enum ClusterEvent {
 /// [`FleetCluster`](crate::fleet::FleetCluster) (live TCP workers, wall
 /// clock).
 pub trait EventCluster {
-    /// Number of workers `n`.
+    /// Number of worker slots `n` — the length [`submit`](Self::submit)
+    /// expects of its `loads`. Fixed-membership backends keep this
+    /// constant; an elastic backend grows it when a worker joins under a
+    /// fresh id (after staging [`ClusterEvent::WorkerJoined`]) and never
+    /// shrinks it (retired slots stay addressable).
     fn n(&self) -> usize;
 
     /// Current cluster clock in seconds since the cluster started:
@@ -173,6 +196,7 @@ pub struct SyncAdapter<E: EventCluster> {
 }
 
 impl<E: EventCluster> SyncAdapter<E> {
+    /// Wrap an event backend in the blocking bridge.
     pub fn new(inner: E) -> Self {
         SyncAdapter { inner, rounds: 0 }
     }
@@ -182,10 +206,12 @@ impl<E: EventCluster> SyncAdapter<E> {
         &self.inner
     }
 
+    /// Mutable access to the wrapped backend.
     pub fn get_mut(&mut self) -> &mut E {
         &mut self.inner
     }
 
+    /// Unwrap, returning the backend.
     pub fn into_inner(self) -> E {
         self.inner
     }
@@ -243,6 +269,11 @@ impl<E: EventCluster> Cluster for SyncAdapter<E> {
                         panic!("blocking round {round} timed out")
                     }
                     ClusterEvent::RoundTimeout { .. } => {}
+                    // membership churn is a scheduler concern; the
+                    // blocking bridge pins one fixed round and ignores it
+                    // (a death that matters surfaces as WorkerDead above)
+                    ClusterEvent::WorkerJoined { .. }
+                    | ClusterEvent::WorkerRetired { .. } => {}
                 }
             }
         }

@@ -30,6 +30,7 @@ pub use trace::{RecordingCluster, RunTrace, TraceReplayCluster};
 /// completion times; every protocol decision stays in
 /// [`crate::session::SgcSession`].
 pub trait Cluster {
+    /// Number of workers.
     fn n(&self) -> usize;
 
     /// Execute one round at the given per-worker normalized loads and

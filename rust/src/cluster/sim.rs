@@ -49,8 +49,11 @@ struct SimTask {
 
 /// The simulated cluster.
 pub struct SimCluster {
+    /// Worker count.
     pub n: usize,
+    /// Latency law `base + α·load` plus straggler uplift parameters.
     pub latency: LatencyParams,
+    /// Optional shared-storage contention model (Appendix L).
     pub storage: Option<StorageParams>,
     process: Box<dyn StragglerProcess>,
     rng: Pcg32,
@@ -79,6 +82,7 @@ pub struct SimCluster {
 }
 
 impl SimCluster {
+    /// Simulator over `n` workers with the given straggler process.
     pub fn new(
         n: usize,
         latency: LatencyParams,

@@ -40,19 +40,24 @@ pub struct TraceRound {
 /// A recorded `(n × rounds)` delay matrix plus per-round loads/states.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunTrace {
+    /// Worker count (row width).
     pub n: usize,
+    /// One entry per recorded submission, in submission order.
     pub rounds: Vec<TraceRound>,
 }
 
 impl RunTrace {
+    /// Empty trace over `n` workers.
     pub fn new(n: usize) -> Self {
         RunTrace { n, rounds: Vec::new() }
     }
 
+    /// Rounds recorded.
     pub fn rounds(&self) -> usize {
         self.rounds.len()
     }
 
+    /// Nothing recorded yet.
     pub fn is_empty(&self) -> bool {
         self.rounds.is_empty()
     }
@@ -91,6 +96,7 @@ impl RunTrace {
         }
     }
 
+    /// Serialize (versioned; the inverse of [`from_json`](Self::from_json)).
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("version", TRACE_VERSION).set("n", self.n).set("rounds", self.rounds());
@@ -114,6 +120,7 @@ impl RunTrace {
         o
     }
 
+    /// Parse a trace written by [`to_json`](Self::to_json).
     pub fn from_json(j: &Json) -> crate::Result<RunTrace> {
         let fail = |what: &str| anyhow::anyhow!("trace json: bad or missing {what}");
         let version =
@@ -276,6 +283,7 @@ pub struct RecordingCluster<C: Cluster> {
 }
 
 impl<C: Cluster> RecordingCluster<C> {
+    /// Record every round sampled through `inner`.
     pub fn new(inner: C) -> Self {
         let n = inner.n();
         RecordingCluster { inner, trace: RunTrace::new(n), autosave: None }
@@ -289,6 +297,7 @@ impl<C: Cluster> RecordingCluster<C> {
         rec
     }
 
+    /// The trace recorded so far.
     pub fn trace(&self) -> &RunTrace {
         &self.trace
     }

@@ -101,7 +101,9 @@ pub(crate) fn solve_decode_coeffs(b: &Matrix, used: &[usize]) -> Option<Vec<f64>
 /// Numeric `(n, s)`-GC code.
 #[derive(Clone, Debug)]
 pub struct GcCode {
+    /// Worker count.
     pub n: usize,
+    /// Straggler tolerance per round.
     pub s: usize,
     /// Dense `n × n` coefficient matrix with cyclic support.
     pub b: Matrix,
@@ -312,6 +314,7 @@ pub struct GcScheme {
 }
 
 impl GcScheme {
+    /// `(n, s)`-GC protocol state for a `jobs`-round run.
     pub fn new(n: usize, s: usize, jobs: usize) -> Self {
         assert!(s < n);
         // One computation of the cyclic supports backs both the spec's
@@ -429,6 +432,7 @@ pub struct GcRepScheme {
 }
 
 impl GcRepScheme {
+    /// Replication-based `(n, s)`-GC (needs `(s+1) | n`).
     pub fn new(n: usize, s: usize, jobs: usize) -> Self {
         assert!(s < n);
         assert_eq!(n % (s + 1), 0, "GC-Rep needs (s+1) | n");

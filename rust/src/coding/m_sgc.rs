@@ -35,13 +35,18 @@ use std::sync::Arc;
 /// M-SGC design parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MSgcParams {
+    /// Worker count.
     pub n: usize,
+    /// Maximum burst length `B`.
     pub b: usize,
+    /// Window length `W`.
     pub w: usize,
+    /// Maximum straggling workers per window `λ`.
     pub lambda: usize,
 }
 
 impl MSgcParams {
+    /// Panic unless the parameters satisfy the design constraints.
     pub fn validate(&self) {
         assert!(self.lambda <= self.n, "need 0 ≤ λ ≤ n");
         assert!(self.b > 0 && self.b < self.w, "need 0 < B < W");
@@ -97,6 +102,7 @@ pub struct MSgcScheme {
 }
 
 impl MSgcScheme {
+    /// M-SGC protocol state for a `jobs`-job run.
     pub fn new(params: MSgcParams, jobs: usize) -> Self {
         Self::build(params, jobs, false)
     }
@@ -212,6 +218,7 @@ impl MSgcScheme {
         table
     }
 
+    /// The design parameters this instance was built with.
     pub fn params(&self) -> MSgcParams {
         self.params
     }

@@ -21,47 +21,63 @@ pub use uncoded::UncodedScheme;
 /// Which scheme to instantiate (CLI / probe / bench surface).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SchemeKind {
+    /// Gradient coding, tolerance `s` stragglers per round (delay 0).
     Gc { s: usize },
+    /// GC via chunk replication instead of coded combinations.
     GcRep { s: usize },
+    /// Selective-repeat SGC under the `(B, W, lambda)` bursty model.
     SrSgc { b: usize, w: usize, lambda: usize },
+    /// SR-SGC with replication-based per-round codes.
     SrSgcRep { b: usize, w: usize, lambda: usize },
+    /// Multiplexed SGC (lowest load, window-length delay).
     MSgc { b: usize, w: usize, lambda: usize },
+    /// M-SGC with replication-based component codes.
     MSgcRep { b: usize, w: usize, lambda: usize },
+    /// No redundancy: every round waits for all `n` workers.
     Uncoded,
 }
 
 /// Scheme configuration: kind + cluster size.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SchemeConfig {
+    /// Worker count the scheme is built for.
     pub n: usize,
+    /// Which scheme (and its parameters).
     pub kind: SchemeKind,
 }
 
 impl SchemeConfig {
+    /// GC tolerating `s` stragglers per round.
     pub fn gc(n: usize, s: usize) -> Self {
         SchemeConfig { n, kind: SchemeKind::Gc { s } }
     }
 
+    /// Replication-based GC tolerating `s` stragglers per round.
     pub fn gc_rep(n: usize, s: usize) -> Self {
         SchemeConfig { n, kind: SchemeKind::GcRep { s } }
     }
 
+    /// SR-SGC for the `(B, W, lambda)` bursty model.
     pub fn sr_sgc(n: usize, b: usize, w: usize, lambda: usize) -> Self {
         SchemeConfig { n, kind: SchemeKind::SrSgc { b, w, lambda } }
     }
 
+    /// Replication-based SR-SGC for the `(B, W, lambda)` bursty model.
     pub fn sr_sgc_rep(n: usize, b: usize, w: usize, lambda: usize) -> Self {
         SchemeConfig { n, kind: SchemeKind::SrSgcRep { b, w, lambda } }
     }
 
+    /// M-SGC for the `(B, W, lambda)` bursty model.
     pub fn msgc(n: usize, b: usize, w: usize, lambda: usize) -> Self {
         SchemeConfig { n, kind: SchemeKind::MSgc { b, w, lambda } }
     }
 
+    /// Replication-based M-SGC for the `(B, W, lambda)` bursty model.
     pub fn msgc_rep(n: usize, b: usize, w: usize, lambda: usize) -> Self {
         SchemeConfig { n, kind: SchemeKind::MSgcRep { b, w, lambda } }
     }
 
+    /// The uncoded baseline (waits for everyone).
     pub fn uncoded(n: usize) -> Self {
         SchemeConfig { n, kind: SchemeKind::Uncoded }
     }

@@ -49,10 +49,12 @@ impl CodePlan {
         CodePlan { n, s, b: code.b, coeffs: RwLock::new(HashMap::new()) }
     }
 
+    /// Worker count of this code.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Straggler tolerance of this code.
     pub fn s(&self) -> usize {
         self.s
     }
@@ -134,6 +136,7 @@ impl CodePlanCache {
         self.plans.read().unwrap().len()
     }
 
+    /// No codes constructed yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -54,14 +54,17 @@ impl WorkUnit {
 /// single-unit task for GC/SR-SGC, `W-1+B` units for M-SGC).
 #[derive(Clone, Debug, Default)]
 pub struct TaskDesc {
+    /// Mini-tasks in assignment order.
     pub units: Vec<WorkUnit>,
 }
 
 impl TaskDesc {
+    /// A do-nothing assignment (idle worker this round).
     pub fn noop() -> Self {
         TaskDesc { units: vec![WorkUnit::Noop] }
     }
 
+    /// Every unit is a no-op.
     pub fn is_trivial(&self) -> bool {
         self.units.iter().all(|u| matches!(u, WorkUnit::Noop))
     }
@@ -102,6 +105,7 @@ pub enum ToleranceSpec {
 /// Static description of a scheme instance.
 #[derive(Clone, Debug)]
 pub struct SchemeSpec {
+    /// Human-readable label, e.g. `gc(n=256,s=15)`.
     pub name: String,
     /// Number of workers.
     pub n: usize,
@@ -192,6 +196,7 @@ impl JobLedger {
         self.coded_need.extend_from_slice(&src.coded_need);
     }
 
+    /// Every chunk's contribution is recoverable.
     pub fn complete(&self) -> bool {
         self.plain_missing.is_empty()
             && self.coded_got.iter().zip(&self.coded_need).all(|(g, &k)| g.len() >= k)
@@ -221,6 +226,7 @@ impl JobLedger {
 /// [`decodable_with`](Scheme::decodable_with) supports the wait-out
 /// policy's tentative evaluation before a commit.
 pub trait Scheme: Send {
+    /// Static parameters of this instance.
     fn spec(&self) -> &SchemeSpec;
 
     /// Produce task assignments for round `r` (1-based) into `out`,

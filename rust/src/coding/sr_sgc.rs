@@ -24,9 +24,13 @@ use std::sync::Arc;
 /// SR-SGC design parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SrSgcParams {
+    /// Worker count.
     pub n: usize,
+    /// Maximum burst length `B`.
     pub b: usize,
+    /// Window length `W = xB + 1`.
     pub w: usize,
+    /// Maximum straggling workers per window `λ`.
     pub lambda: usize,
 }
 
@@ -41,6 +45,7 @@ impl SrSgcParams {
         (self.s() + 1) as f64 / self.n as f64
     }
 
+    /// Panic unless the parameters satisfy the design constraints.
     pub fn validate(&self) {
         assert!(self.lambda > 0 && self.lambda <= self.n, "need 0 < λ ≤ n");
         assert!(self.b > 0, "need B > 0");
@@ -70,6 +75,7 @@ pub struct SrSgcScheme {
 }
 
 impl SrSgcScheme {
+    /// SR-SGC protocol state for a `jobs`-job run.
     pub fn new(params: SrSgcParams, jobs: usize) -> Self {
         Self::build(params, jobs, false)
     }
@@ -145,6 +151,7 @@ impl SrSgcScheme {
         }
     }
 
+    /// The design parameters this instance was built with.
     pub fn params(&self) -> SrSgcParams {
         self.params
     }

@@ -21,6 +21,7 @@ pub struct UncodedScheme {
 }
 
 impl UncodedScheme {
+    /// Uncoded baseline over `n` workers for a `jobs`-round run.
     pub fn new(n: usize, jobs: usize) -> Self {
         let spec = SchemeSpec {
             name: format!("uncoded(n={n})"),

@@ -21,6 +21,7 @@ pub struct Master {
 }
 
 impl Master {
+    /// Master for one scheme/session configuration.
     pub fn new(scheme_cfg: SchemeConfig, cfg: SessionConfig) -> Self {
         Master { scheme_cfg, cfg }
     }

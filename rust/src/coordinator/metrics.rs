@@ -7,6 +7,7 @@ use crate::util::stats;
 /// Per-round record.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// 1-based round number.
     pub round: usize,
     /// Wall-clock duration of the round (seconds).
     pub duration_s: f64,
@@ -25,11 +26,17 @@ pub struct RoundRecord {
 /// Full report of one run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
+    /// Scheme label, e.g. `gc(n=256,s=15)`.
     pub scheme: String,
+    /// Normalized per-worker load `L`.
     pub load: f64,
+    /// Decoding delay `T`.
     pub delay: usize,
+    /// Jobs `J` in the run.
     pub jobs: usize,
+    /// Sum of round durations (the protocol clock).
     pub total_runtime_s: f64,
+    /// Per-round records, in round order.
     pub rounds: Vec<RoundRecord>,
     /// Wall-clock time at which each job became decodable (`f64::NAN` if
     /// never — only possible under `WaitPolicy::DeadlineDecode`).
@@ -84,6 +91,7 @@ impl RunReport {
         self.rounds.iter().map(|r| r.duration_s).fold(f64::INFINITY, f64::min)
     }
 
+    /// Serialize for `--out` experiment artifacts.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("scheme", self.scheme.as_str())

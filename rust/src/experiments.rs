@@ -15,9 +15,13 @@ use crate::util::stats::MeanStd;
 /// The paper's evaluation configuration (Sec. 4.2).
 #[derive(Clone, Debug)]
 pub struct PaperSetup {
+    /// Workers `n` (the paper's headline tables use 256).
     pub n: usize,
+    /// Jobs `J` per run.
     pub jobs: usize,
+    /// Repetitions per scheme (seeds).
     pub reps: usize,
+    /// μ-rule tolerance.
     pub mu: f64,
 }
 
@@ -108,6 +112,7 @@ pub struct TablePrinter {
 }
 
 impl TablePrinter {
+    /// Print the header row and return the printer.
     pub fn new(headers: &[&str], widths: &[usize]) -> Self {
         assert_eq!(headers.len(), widths.len());
         let row: Vec<String> = headers
@@ -120,6 +125,7 @@ impl TablePrinter {
         TablePrinter { widths: widths.to_vec() }
     }
 
+    /// Print one aligned data row.
     pub fn row(&self, cells: &[String]) {
         let row: Vec<String> = cells
             .iter()

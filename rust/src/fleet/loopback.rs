@@ -47,6 +47,27 @@ impl LoopbackFleet {
         Ok(LoopbackFleet { cluster, workers })
     }
 
+    /// Start one more worker thread against this fleet's master — the
+    /// elastic-membership late-join path. The worker connects, claims
+    /// `cfg.id` via `Hello`, and is admitted into the live roster the
+    /// next time the master's reactor runs (staging
+    /// [`ClusterEvent::WorkerJoined`](crate::cluster::ClusterEvent));
+    /// a fresh id grows the fleet, a retired id re-joins it. The thread
+    /// is tracked like the initial workers and joined by
+    /// [`shutdown`](Self::shutdown).
+    ///
+    /// Call this *before* handing the cluster to a scheduler: admission
+    /// itself happens mid-run, inside the master's event loop.
+    pub fn join_worker(&mut self, mut cfg: WorkerConfig) {
+        cfg.master = self.cluster.addr().to_string();
+        let id = cfg.id;
+        let handle = std::thread::Builder::new()
+            .name(format!("sgc-fleet-worker-{id}"))
+            .spawn(move || run_worker(cfg))
+            .expect("spawn loopback joiner");
+        self.workers.push(handle);
+    }
+
     /// Send `Shutdown` to all workers and join them.
     pub fn shutdown(mut self) -> crate::Result<Vec<WorkerStats>> {
         self.cluster.shutdown();

@@ -11,9 +11,14 @@
 //!   task assignments, executes synthetic minitask workloads, and injects
 //!   deterministic, seeded chaos (Gilbert–Elliot straggle states with
 //!   Pareto slowdowns) so live runs are reproducible;
-//! * [`master`] — [`FleetCluster`]: accepts worker connections and
-//!   streams per-worker completions as they arrive through the
-//!   [`EventCluster`](crate::cluster::EventCluster) API; the
+//! * [`reactor`] — the single-threaded readiness layer: a hand-rolled
+//!   `poll(2)` binding plus non-blocking buffered [`Connection`]s (no
+//!   `mio`, no external deps);
+//! * [`master`] — [`FleetCluster`]: one reactor thread owns the
+//!   listener and every worker socket, streams per-worker completions
+//!   through the [`EventCluster`](crate::cluster::EventCluster) API,
+//!   and manages the elastic roster (late joins, reconnects, reaping;
+//!   [`MembershipConfig`]); the
 //!   [`JobScheduler`](crate::sched::JobScheduler) pumps each session's
 //!   incremental
 //!   [`try_close_round`](crate::session::SgcSession::try_close_round)
@@ -21,17 +26,23 @@
 //!   passes the μ-cutoff — without waiting for all `n` results — and
 //!   many sessions can multiplex over one fleet;
 //! * [`loopback`] — an in-process harness spinning a master plus `n`
-//!   worker threads over localhost (tests, CI smoke, `sgc run --fleet N`).
+//!   worker threads over localhost (tests, CI smoke, `sgc run --fleet N`),
+//!   including the late-join path
+//!   ([`join_worker`](LoopbackFleet::join_worker)).
 //!
-//! See `rust/DESIGN.md` §Fleet for wire-frame layout, heartbeat/failure
-//! semantics and the wall-clock vs simulated μ-rule discussion.
+//! See `rust/DESIGN.md` §Fleet, §Reactor and §Membership for wire-frame
+//! layout, the event-loop ownership model, exact-wakeup math,
+//! heartbeat/failure semantics and the membership state machine;
+//! `rust/docs/OPERATIONS.md` is the operator runbook.
 
 pub mod loopback;
 pub mod master;
+pub mod reactor;
 pub mod wire;
 pub mod worker;
 
 pub use loopback::LoopbackFleet;
-pub use master::{drive_fleet, FleetCluster, FleetRun};
-pub use wire::{Frame, WireError, WIRE_VERSION};
+pub use master::{drive_fleet, FleetCluster, FleetRun, MembershipConfig};
+pub use reactor::Connection;
+pub use wire::{Frame, FrameBuffer, WireError, WIRE_VERSION};
 pub use worker::{run_worker, ChaosConfig, WorkerConfig, WorkerStats};

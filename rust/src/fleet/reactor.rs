@@ -1,0 +1,308 @@
+//! Minimal readiness layer for the single-threaded fleet master: a
+//! hand-rolled `poll(2)` binding (keeping the crate's zero-heavy-deps
+//! posture — no `mio`, no `libc` crate) plus [`Connection`], a
+//! non-blocking TCP stream with partial-frame read buffering and a
+//! pending-write buffer.
+//!
+//! The master builds one fd set per reactor turn — the listener, every
+//! worker socket, every pre-`Hello` pending connection — and sleeps in
+//! a single `poll(2)` call whose timeout is the *exact* distance to the
+//! next deadline (the caller's μ-cutoff horizon, a heartbeat reap, a
+//! round timeout, a handshake expiry). One readable socket wakes it;
+//! nothing in the loop sleeps a fixed slice. See `rust/DESIGN.md`
+//! §Reactor for the wakeup math.
+
+use super::wire::{Frame, FrameBuffer};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::os::raw::c_ulong;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::time::Duration;
+
+/// `poll(2)` readable-interest / readiness flag (`POLLIN`).
+pub const POLLIN: i16 = 0x001;
+/// `poll(2)` writable-interest / readiness flag (`POLLOUT`).
+pub const POLLOUT: i16 = 0x004;
+/// `poll(2)` error readiness flag (`POLLERR`, output only).
+pub const POLLERR: i16 = 0x008;
+/// `poll(2)` hangup readiness flag (`POLLHUP`, output only).
+pub const POLLHUP: i16 = 0x010;
+/// `poll(2)` invalid-fd flag (`POLLNVAL`, output only).
+pub const POLLNVAL: i16 = 0x020;
+
+/// One entry of a `poll(2)` fd set — layout-compatible with the C
+/// `struct pollfd` (fd, then two shorts), which is identical on every
+/// Unix this crate targets.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    /// File descriptor to watch (negative entries are ignored by the
+    /// kernel, which is how a slot is masked out without re-indexing).
+    pub fd: RawFd,
+    /// Requested events (`POLLIN` / `POLLOUT`).
+    pub events: i16,
+    /// Kernel-reported readiness, valid after [`poll_fds`] returns.
+    pub revents: i16,
+}
+
+impl PollFd {
+    /// Watch `fd` for `events`.
+    pub fn new(fd: RawFd, events: i16) -> Self {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Any readiness at all, including error/hangup conditions (which
+    /// the kernel reports even when not requested).
+    pub fn ready(&self) -> bool {
+        self.revents != 0
+    }
+
+    /// Readable (or in an error/hangup state that a read will surface).
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+
+    /// Writable.
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+}
+
+extern "C" {
+    /// `int poll(struct pollfd *fds, nfds_t nfds, int timeout)` from the
+    /// platform C library (always linked by Rust's std on Unix).
+    fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: i32) -> i32;
+}
+
+/// Block until at least one fd in `fds` is ready or `timeout` elapses
+/// (`None` = wait indefinitely). Returns the number of ready entries
+/// (0 = timed out). With an empty `fds`, this is a precise sleep.
+///
+/// The timeout is rounded *up* to the next millisecond, so the call
+/// never wakes before the requested deadline (the property the μ-cutoff
+/// exactness test pins); `EINTR` retries with the same timeout.
+pub fn poll_fds(fds: &mut [PollFd], timeout: Option<Duration>) -> io::Result<usize> {
+    let timeout_ms: i32 = match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = (d.as_secs_f64() * 1000.0).ceil();
+            if ms >= i32::MAX as f64 {
+                i32::MAX
+            } else {
+                ms as i32
+            }
+        }
+    };
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// One non-blocking connection owned by the reactor: the TCP stream, a
+/// [`FrameBuffer`] assembling inbound frames across partial reads, and
+/// an outbound byte buffer flushed on writability.
+///
+/// All methods are edge-tolerant: they do as much work as the socket
+/// allows and never block. A fatal condition (EOF, I/O error, or an
+/// unframeable byte stream) latches [`is_dead`](Self::is_dead); the
+/// owner decides what that means for the worker.
+pub struct Connection {
+    stream: TcpStream,
+    rbuf: FrameBuffer,
+    wbuf: Vec<u8>,
+    /// Consumed prefix of `wbuf` (compacted on the next queue).
+    wpos: usize,
+    dead: bool,
+}
+
+impl Connection {
+    /// Take ownership of an accepted stream and switch it to
+    /// non-blocking mode.
+    pub fn new(stream: TcpStream) -> io::Result<Self> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true).ok();
+        Ok(Connection { stream, rbuf: FrameBuffer::new(), wbuf: Vec::new(), wpos: 0, dead: false })
+    }
+
+    /// Raw fd for the reactor's poll set.
+    pub fn fd(&self) -> RawFd {
+        self.stream.as_raw_fd()
+    }
+
+    /// Events this connection currently wants from `poll(2)`.
+    pub fn interest(&self) -> i16 {
+        if self.wants_write() {
+            POLLIN | POLLOUT
+        } else {
+            POLLIN
+        }
+    }
+
+    /// Outbound bytes are queued and unsent.
+    pub fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    /// The connection hit EOF, a fatal I/O error, or a framing error.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Drain everything the socket currently has into the frame buffer.
+    /// Returns `false` once the connection is dead.
+    pub fn fill(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        let mut tmp = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.dead = true;
+                    return false;
+                }
+                Ok(k) => self.rbuf.feed(&tmp[..k]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Next complete inbound frame, if one is buffered. A framing error
+    /// kills the connection (the byte stream can no longer be trusted).
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        match self.rbuf.next_frame() {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("fleet master: unframeable peer ({e}); dropping connection");
+                self.dead = true;
+                None
+            }
+        }
+    }
+
+    /// Queue `frame` and opportunistically flush. Returns `false` once
+    /// the connection is dead (the frame is then lost, like a write to a
+    /// gone socket always was).
+    pub fn send(&mut self, frame: &Frame) -> bool {
+        if self.dead {
+            return false;
+        }
+        if self.wpos > 0 {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        self.wbuf.extend_from_slice(&frame.encode());
+        self.flush()
+    }
+
+    /// Write as much queued output as the socket accepts right now.
+    /// Returns `false` once the connection is dead.
+    pub fn flush(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return false;
+                }
+                Ok(k) => self.wpos += k,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Half-close both directions (best-effort; idempotent).
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn poll_timeout_is_a_precise_sleep_with_no_fds() {
+        let t = std::time::Instant::now();
+        let n = poll_fds(&mut [], Some(Duration::from_millis(40))).unwrap();
+        assert_eq!(n, 0);
+        let elapsed = t.elapsed();
+        assert!(elapsed >= Duration::from_millis(40), "woke early: {elapsed:?}");
+        assert!(elapsed < Duration::from_millis(200), "woke far too late: {elapsed:?}");
+    }
+
+    #[test]
+    fn poll_wakes_on_readability() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        let mut fds = [PollFd::new(server.as_raw_fd(), POLLIN)];
+        // nothing to read yet: times out
+        assert_eq!(poll_fds(&mut fds, Some(Duration::from_millis(10))).unwrap(), 0);
+        // a write from the peer wakes the poll well before the timeout
+        (&client).write_all(b"x").unwrap();
+        let t = std::time::Instant::now();
+        let n = poll_fds(&mut fds, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+        assert!(t.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn connection_round_trips_frames_nonblocking() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = Connection::new(server).unwrap();
+
+        // peer sends two frames back to back
+        let f1 = Frame::Hello { worker_id: 3 };
+        let f2 = Frame::Heartbeat { worker_id: 3, round: 9 };
+        super::super::wire::write_frame(&mut (&client), &f1).unwrap();
+        super::super::wire::write_frame(&mut (&client), &f2).unwrap();
+        // wait for readability, then drain
+        let mut fds = [PollFd::new(conn.fd(), POLLIN)];
+        poll_fds(&mut fds, Some(Duration::from_secs(5))).unwrap();
+        assert!(conn.fill());
+        assert_eq!(conn.next_frame(), Some(f1));
+        assert_eq!(conn.next_frame(), Some(f2));
+        assert_eq!(conn.next_frame(), None);
+        assert!(!conn.is_dead());
+
+        // outbound path: send lands on the peer intact
+        assert!(conn.send(&Frame::Shutdown));
+        let got = super::super::wire::read_frame(&mut (&client)).unwrap();
+        assert_eq!(got, Frame::Shutdown);
+
+        // peer hangs up → fill reports death
+        drop(client);
+        let mut fds = [PollFd::new(conn.fd(), POLLIN)];
+        poll_fds(&mut fds, Some(Duration::from_secs(5))).unwrap();
+        assert!(!conn.fill());
+        assert!(conn.is_dead());
+    }
+}

@@ -235,6 +235,78 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
     Frame::decode_body(&body)
 }
 
+/// Incremental frame assembler for non-blocking readers.
+///
+/// A readiness-driven master reads whatever bytes the socket has —
+/// which may be half a frame, or three frames and the length prefix of
+/// a fourth. `FrameBuffer` accumulates those bytes ([`feed`](Self::feed))
+/// and hands back complete frames one at a time
+/// ([`next_frame`](Self::next_frame)), leaving any trailing partial
+/// frame buffered for the next readiness event. The same bounds checks
+/// as [`read_frame`] apply: a declared length outside
+/// `[2, MAX_FRAME_LEN]` is rejected before any payload is buffered
+/// past it, so a malformed peer cannot force unbounded buffering.
+#[derive(Debug, Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+    /// Consumed prefix: bytes before `start` belong to frames already
+    /// returned (compacted away on the next `feed`).
+    start: usize,
+}
+
+impl FrameBuffer {
+    /// Empty buffer.
+    pub fn new() -> Self {
+        FrameBuffer { buf: Vec::new(), start: 0 }
+    }
+
+    /// Append raw bytes read off the socket.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.start > 0 {
+            // compact the consumed prefix before growing
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Extract the next complete frame, if the buffer holds one.
+    ///
+    /// `Ok(None)` means "need more bytes"; an `Err` is fatal for the
+    /// connection (the stream can no longer be framed).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        let avail = &self.buf[self.start..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(avail[..4].try_into().unwrap());
+        if len < 2 || len > MAX_FRAME_LEN {
+            return Err(WireError::BadLength(len));
+        }
+        let total = 4 + len as usize;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let frame = Frame::decode_body(&avail[4..total])?;
+        self.start += total;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        }
+        Ok(Some(frame))
+    }
+
+    /// Bytes buffered but not yet returned as frames.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// No partial frame is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.pending_bytes() == 0
+    }
+}
+
 // --- little-endian primitives -----------------------------------------
 
 fn put_u32(out: &mut Vec<u8>, x: u32) {
@@ -373,6 +445,54 @@ mod tests {
         bytes.push(TAG_ASSIGN);
         bytes.extend_from_slice(&payload);
         assert!(matches!(Frame::decode(&bytes), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn frame_buffer_reassembles_byte_at_a_time() {
+        let frames = all_frames();
+        let mut wire_bytes = Vec::new();
+        for f in &frames {
+            wire_bytes.extend_from_slice(&f.encode());
+        }
+        let mut fb = FrameBuffer::new();
+        let mut out = Vec::new();
+        for &b in &wire_bytes {
+            fb.feed(&[b]);
+            while let Some(f) = fb.next_frame().unwrap() {
+                out.push(f);
+            }
+        }
+        assert_eq!(out, frames);
+        assert!(fb.is_empty());
+    }
+
+    #[test]
+    fn frame_buffer_handles_bulk_and_partial_mixes() {
+        let frames = all_frames();
+        let mut wire_bytes = Vec::new();
+        for f in &frames {
+            wire_bytes.extend_from_slice(&f.encode());
+        }
+        // feed everything except the last byte: all but the final frame
+        let mut fb = FrameBuffer::new();
+        fb.feed(&wire_bytes[..wire_bytes.len() - 1]);
+        let mut out = Vec::new();
+        while let Some(f) = fb.next_frame().unwrap() {
+            out.push(f);
+        }
+        assert_eq!(out.len(), frames.len() - 1);
+        assert!(!fb.is_empty());
+        fb.feed(&wire_bytes[wire_bytes.len() - 1..]);
+        assert_eq!(fb.next_frame().unwrap().unwrap(), *frames.last().unwrap());
+        assert!(fb.next_frame().unwrap().is_none());
+        assert!(fb.is_empty());
+    }
+
+    #[test]
+    fn frame_buffer_rejects_bad_length_before_buffering_payload() {
+        let mut fb = FrameBuffer::new();
+        fb.feed(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        assert!(matches!(fb.next_frame(), Err(WireError::BadLength(_))));
     }
 
     #[test]

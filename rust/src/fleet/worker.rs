@@ -102,7 +102,8 @@ impl ChaosState {
 /// Worker runtime configuration.
 #[derive(Clone, Debug)]
 pub struct WorkerConfig {
-    /// Slot id (must be unique per fleet, `< n`).
+    /// Slot id (unique per fleet; a late joiner picks the next free id,
+    /// a reconnecting worker reclaims its old one).
     pub id: u32,
     /// Master address, e.g. `127.0.0.1:7070`.
     pub master: String,
@@ -115,6 +116,14 @@ pub struct WorkerConfig {
     pub alpha_s: f64,
     /// Heartbeat period.
     pub heartbeat: Duration,
+    /// Keep retrying the initial TCP connect for this long (a late
+    /// joiner or a reconnecting worker may race the master's listener).
+    /// `Duration::ZERO` = a single attempt.
+    pub connect_retry: Duration,
+    /// Fault injection for membership tests: after serving this many
+    /// rounds, crash — drop the connection with no `Shutdown` handshake,
+    /// exactly like a worker process dying mid-fleet. `None` = never.
+    pub fail_after_rounds: Option<usize>,
 }
 
 impl WorkerConfig {
@@ -128,6 +137,8 @@ impl WorkerConfig {
             base_s: 0.02,
             alpha_s: 0.08,
             heartbeat: Duration::from_millis(50),
+            connect_retry: Duration::from_secs(5),
+            fail_after_rounds: None,
         }
     }
 }
@@ -135,14 +146,34 @@ impl WorkerConfig {
 /// What a worker did before shutdown.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct WorkerStats {
+    /// Assignments executed (results sent).
     pub rounds_served: usize,
+    /// Rounds in which chaos injection stretched the minitask.
     pub chaos_rounds: usize,
 }
 
 /// Run the worker loop until the master sends `Shutdown` or disconnects.
+///
+/// The initial connect retries until [`WorkerConfig::connect_retry`]
+/// elapses, so a worker started moments before its master (or re-joining
+/// an elastic fleet) does not fail spuriously.
 pub fn run_worker(cfg: WorkerConfig) -> crate::Result<WorkerStats> {
-    let stream = TcpStream::connect(&cfg.master)
-        .map_err(|e| anyhow::anyhow!("worker {}: connect {}: {e}", cfg.id, cfg.master))?;
+    let connect_deadline = Instant::now() + cfg.connect_retry;
+    let stream = loop {
+        match TcpStream::connect(&cfg.master) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= connect_deadline {
+                    return Err(anyhow::anyhow!(
+                        "worker {}: connect {}: {e}",
+                        cfg.id,
+                        cfg.master
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let writer = Arc::new(Mutex::new(stream));
@@ -198,6 +229,12 @@ pub fn run_worker(cfg: WorkerConfig) -> crate::Result<WorkerStats> {
                 };
                 if let Err(e) = write_frame(&mut *writer.lock().unwrap(), &frame) {
                     break Err(anyhow::anyhow!("worker {}: send result: {e}", cfg.id));
+                }
+                // fault injection: crash after this many served rounds —
+                // no Shutdown handshake, just a dropped socket, exactly
+                // like a worker process dying (membership tests)
+                if cfg.fail_after_rounds.is_some_and(|k| stats.rounds_served >= k) {
+                    break Ok(stats);
                 }
             }
             Ok(Frame::Shutdown) => break Ok(stats),

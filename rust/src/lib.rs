@@ -34,9 +34,13 @@
 //! of sessions onto one shared backend and pumps each session's
 //! incremental [`deadline_hint`](session::SgcSession::deadline_hint) /
 //! [`try_close_round`](session::SgcSession::try_close_round) μ-rule off
-//! the shared event stream. Blocking callers
+//! the shared event stream. The TCP fleet master is a single-threaded
+//! `poll(2)` reactor with an *elastic* worker roster: late joiners are
+//! admitted mid-run, dead workers are retired, and the scheduler
+//! re-places in-flight sessions onto live spares. Blocking callers
 //! ([`session::drive`], trace recording, the probe) bridge through
-//! [`cluster::SyncAdapter`]. See `rust/DESIGN.md`.
+//! [`cluster::SyncAdapter`]. See `rust/DESIGN.md` (and
+//! `rust/docs/OPERATIONS.md` for the operator runbook).
 //!
 //! ## Quick start
 //!
@@ -127,6 +131,8 @@
 //! ```
 //!
 //! (`sgc run --fleet 8 --jobs 20` is the CLI spelling of the same run.)
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod cluster;

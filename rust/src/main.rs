@@ -5,6 +5,7 @@
 //!            [--fleet N | --listen ADDR] [--record-trace P] [--replay-trace P]
 //! sgc serve  --jobs 4 --scheme gc:2 [--n 16 | --fleet N] [--session-jobs 24]
 //!            [--policy disjoint|round-robin] [--mu 1.0] [--seed 7]
+//!            [--late-join J] [--join-window S] [--reap-after S]
 //! sgc worker --master HOST:PORT --id K [--chaos-seed S]
 //! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
 //!            [--record-trace PREFIX]
@@ -23,11 +24,15 @@
 //! by default, a loopback TCP fleet with `--fleet K`) and multiplexes
 //! their rounds through the event-driven `JobScheduler`, printing
 //! per-job reports plus the aggregate fleet-utilization summary.
+//! Fleet mode is elastic: `--late-join J` starts `J` extra workers that
+//! `Hello` mid-run, `--join-window S` bounds how long late joins are
+//! admitted (absent = forever), and `--reap-after S` retires workers
+//! whose heartbeats stay silent. See `rust/docs/OPERATIONS.md`.
 
 use sgc::cluster::{Cluster, EventCluster, RecordingCluster, RunTrace, SimCluster};
 use sgc::coding::SchemeConfig;
 use sgc::coordinator::RunReport;
-use sgc::fleet::{self, ChaosConfig, FleetCluster, LoopbackFleet, WorkerConfig};
+use sgc::fleet::{self, ChaosConfig, FleetCluster, LoopbackFleet, MembershipConfig, WorkerConfig};
 use sgc::probe::{grid_search, DelayProfile, SearchSpace};
 use sgc::sched::{
     self, DisjointPlacement, JobScheduler, JobSpec, PlacementPolicy, RoundRobinPlacement,
@@ -58,6 +63,7 @@ fn main() -> anyhow::Result<()> {
                  fleet:       sgc run --fleet N (loopback workers) or --listen ADDR\n\
                               (+ sgc worker --master ADDR --id K per external worker)\n\
                  multi-job:   sgc serve --jobs N [--fleet K] — N sessions share one cluster\n\
+                 elastic:     serve --fleet K --late-join J [--join-window S] [--reap-after S]\n\
                  traces:      --record-trace FILE on run/sweep; --replay-trace FILE on run"
             );
             std::process::exit(2);
@@ -74,8 +80,22 @@ fn round_timeout(args: &Args) -> Duration {
     Duration::from_secs_f64(args.get_parse("round-timeout", 60.0f64))
 }
 
+/// The elastic-membership flags (shared by every fleet mode):
+/// `--join-window SECS` (absent = joins always admitted; `0` closes the
+/// fleet after startup) and `--reap-after SECS` (heartbeat-silent
+/// workers are retired past this).
+fn membership(args: &Args) -> MembershipConfig {
+    let mut m = MembershipConfig::default();
+    if args.has("join-window") {
+        m.join_window = Some(Duration::from_secs_f64(args.get_parse("join-window", 0.0f64)));
+    }
+    m.reap_after = Duration::from_secs_f64(args.get_parse("reap-after", 10.0f64));
+    m
+}
+
 /// Spin up a loopback TCP fleet per the shared CLI flags
-/// (`--no-chaos`, `--chaos-seed`, `--round-timeout`).
+/// (`--no-chaos`, `--chaos-seed`, `--round-timeout`, `--join-window`,
+/// `--reap-after`).
 fn spawn_loopback(args: &Args, workers: usize, seed: u64) -> anyhow::Result<LoopbackFleet> {
     let chaos = if args.has_flag("no-chaos") {
         None
@@ -84,6 +104,7 @@ fn spawn_loopback(args: &Args, workers: usize, seed: u64) -> anyhow::Result<Loop
     };
     let mut fleet = LoopbackFleet::spawn(workers, chaos)?;
     fleet.cluster.set_round_timeout(round_timeout(args));
+    fleet.cluster.set_membership(membership(args));
     Ok(fleet)
 }
 
@@ -125,6 +146,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                 println!("waiting for {n} workers on {addr} …");
                 let mut cluster = FleetCluster::listen(&addr, n, Duration::from_secs(120))?;
                 cluster.set_round_timeout(round_timeout(args));
+                cluster.set_membership(membership(args));
                 let run = fleet::drive_fleet(&scheme, &cfg, &mut cluster)?;
                 cluster.shutdown();
                 run
@@ -219,6 +241,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Some(k) => {
             // --- one shared loopback TCP fleet for every session ---
             let mut fleet = spawn_loopback(args, k, seed)?;
+            // --late-join J: start J extra workers (ids k..k+J) that
+            // Hello mid-run — the elastic-membership smoke. They are
+            // tracked like the initial workers and joined at shutdown.
+            let late = args.get_parse("late-join", 0usize);
+            for id in k..k + late {
+                let chaos = if args.has_flag("no-chaos") {
+                    None
+                } else {
+                    Some(ChaosConfig::default_fit(args.get_parse("chaos-seed", seed)))
+                };
+                fleet.join_worker(WorkerConfig::loopback(id as u32, String::new(), chaos));
+            }
+            if late > 0 {
+                println!("late-joining {late} extra workers (ids {k}..{})", k + late - 1);
+            }
             let out = {
                 let mut sched = JobScheduler::with_policy(&mut fleet.cluster, policy()?);
                 for _ in 0..jobs {

@@ -18,6 +18,7 @@ use std::sync::Arc;
 /// candidate (§Perf).
 #[derive(Clone, Debug)]
 pub struct DelayProfile {
+    /// Worker count.
     pub n: usize,
     /// Load at which the profile was captured (1/n for uncoded probing).
     pub base_load: f64,
@@ -50,6 +51,7 @@ impl DelayProfile {
         }
     }
 
+    /// Probe rounds captured.
     pub fn rounds(&self) -> usize {
         self.times.len()
     }
@@ -82,6 +84,7 @@ pub struct ProfileCluster {
 }
 
 impl ProfileCluster {
+    /// Replay `profile`, scaling times by `alpha` per unit of load.
     pub fn new(profile: DelayProfile, alpha: f64) -> Self {
         ProfileCluster { profile, alpha, cursor: 0 }
     }

@@ -14,14 +14,18 @@ use crate::session::{self, BatchItem, SessionConfig};
 /// A candidate scheme with its estimated runtime.
 #[derive(Clone, Debug)]
 pub struct Candidate {
+    /// The scheme parameters under evaluation.
     pub config: SchemeConfig,
+    /// Normalized per-worker load of the candidate.
     pub load: f64,
+    /// Runtime estimated by replaying the probe profile.
     pub estimated_runtime_s: f64,
 }
 
 /// Which parameter grid to search.
 #[derive(Clone, Debug)]
 pub struct SearchSpace {
+    /// Worker count every candidate is built for.
     pub n: usize,
     /// B values to try.
     pub b: Vec<usize>,

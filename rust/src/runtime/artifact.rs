@@ -21,9 +21,13 @@ use std::path::{Path, PathBuf};
 /// Shapes of the compiled model program (must match `model_meta.txt`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ModelDims {
+    /// Input feature width.
     pub input: usize,
+    /// Output class count.
     pub classes: usize,
+    /// First hidden-layer width.
     pub hidden1: usize,
+    /// Second hidden-layer width.
     pub hidden2: usize,
     /// Padded chunk size the program was lowered for.
     pub chunk: usize,
@@ -94,6 +98,7 @@ pub fn artifacts_dir() -> PathBuf {
 /// error instead.
 #[cfg(feature = "pjrt")]
 pub struct GradExecutable {
+    /// Shapes the program was lowered for.
     pub dims: ModelDims,
     _client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,

@@ -23,8 +23,11 @@ use std::sync::Arc;
 pub struct GradRequest {
     /// 6 flattened parameter tensors (shared across workers in a round).
     pub params: Arc<Vec<Vec<f32>>>,
+    /// Flattened input batch for the chunk.
     pub x: Vec<f32>,
+    /// One-hot labels for the chunk.
     pub y: Vec<f32>,
+    /// Per-example weights (zero pads masked out).
     pub wgt: Vec<f32>,
 }
 
@@ -103,6 +106,7 @@ mod real {
             Ok(ComputePool { txs, next: AtomicUsize::new(0), dims, handles })
         }
 
+        /// Shapes the pool's program was lowered for.
         pub fn dims(&self) -> ModelDims {
             self.dims
         }
@@ -147,6 +151,7 @@ pub struct ComputePool {
 
 #[cfg(not(feature = "pjrt"))]
 impl ComputePool {
+    /// Always errors: the build lacks the `pjrt` feature.
     pub fn new(dir: PathBuf, lanes: usize) -> Result<Self> {
         assert!(lanes > 0);
         let _dims = ModelDims::from_meta_file(&dir.join("model_meta.txt"))?;
@@ -158,14 +163,17 @@ impl ComputePool {
         )
     }
 
+    /// Unreachable (the stub cannot be constructed).
     pub fn dims(&self) -> ModelDims {
         unreachable!("ComputePool cannot be constructed without the pjrt feature")
     }
 
+    /// Unreachable (the stub cannot be constructed).
     pub fn submit(&self, _req: GradRequest) -> Receiver<GradResult> {
         unreachable!("ComputePool cannot be constructed without the pjrt feature")
     }
 
+    /// Unreachable (the stub cannot be constructed).
     pub fn grad_chunk_blocking(&self, _req: GradRequest) -> GradResult {
         unreachable!("ComputePool cannot be constructed without the pjrt feature")
     }

@@ -12,31 +12,76 @@
 //! stragglers are cut at that job's own `(1+μ)·κ` cutoff while other
 //! jobs keep the fleet busy.
 //!
-//! A pluggable [`PlacementPolicy`] decides which physical worker hosts
-//! each job's logical slot `i`: [`RoundRobinPlacement`] rotates jobs one
-//! worker apart (fair interleaving), [`DisjointPlacement`] spreads jobs
-//! `n / N` workers apart so the cyclic codes' hot-sets land on disjoint
-//! worker arcs (echoing M-SGC's multiplexed assignment). Placement is a
-//! pure relabelling: events are mapped back to logical worker ids before
-//! they reach a session, so every protocol decision is
-//! placement-agnostic.
+//! A pluggable [`PlacementPolicy`] decides which physical worker
+//! initially hosts each job's logical slot `i`: [`RoundRobinPlacement`]
+//! rotates jobs one worker apart (fair interleaving),
+//! [`DisjointPlacement`] spreads jobs `n / N` workers apart so the
+//! cyclic codes' hot-sets land on disjoint worker arcs (echoing M-SGC's
+//! multiplexed assignment). Placement is a pure relabelling: events are
+//! mapped back to logical worker ids before they reach a session, so
+//! every protocol decision is placement-agnostic.
+//!
+//! **Elastic membership.** On backends whose roster changes at runtime
+//! (the TCP fleet), the scheduler tracks
+//! [`WorkerJoined`](ClusterEvent::WorkerJoined) /
+//! [`WorkerRetired`](ClusterEvent::WorkerRetired) events in a live set
+//! and, at each round start, *re-places* any logical slot whose
+//! physical worker retired onto a live spare — so an in-flight session
+//! migrates off dead workers instead of paying a `WorkerDead` cut every
+//! round for a ghost. Re-placements are counted in
+//! [`FleetUtilization::replacements`]. Fixed-membership backends
+//! (simulators, trace replays) emit no membership events, and placement
+//! then never changes — which is what keeps a single-job scheduler run
+//! byte-identical to the blocking drivers.
 //!
 //! Drivers that need to execute real work per round (the PJRT trainer)
 //! hook in through [`RoundObserver`].
+//!
+//! # Example
+//!
+//! Multiplex four GC sessions over one simulated 16-worker cluster and
+//! read the aggregate utilization:
+//!
+//! ```
+//! use sgc::cluster::SimCluster;
+//! use sgc::coding::SchemeConfig;
+//! use sgc::sched::{DisjointPlacement, JobScheduler, JobSpec};
+//! use sgc::session::SessionConfig;
+//! use sgc::straggler::GilbertElliot;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut sim = SimCluster::from_gilbert_elliot(16, GilbertElliot::default_fit(16, 7), 7);
+//! let mut sched = JobScheduler::with_policy(&mut sim, Box::new(DisjointPlacement));
+//! for _ in 0..4 {
+//!     sched.admit(&JobSpec {
+//!         scheme: SchemeConfig::gc(16, 2),
+//!         session: SessionConfig { jobs: 6, ..Default::default() },
+//!     })?;
+//! }
+//! let out = sched.run()?;
+//! assert_eq!(out.reports.len(), 4);
+//! assert!(out.utilization.multiplexing_gain > 1.0); // sessions overlapped
+//! # Ok(())
+//! # }
+//! ```
 
 use crate::cluster::{ClusterEvent, EventCluster, JobId};
 use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::RunReport;
 use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
 
-/// Which physical worker hosts a job's logical worker 0. Placement must
-/// be deterministic — two identically-configured runs must place jobs
-/// identically (`tests/properties.rs` pins this).
+/// Which physical worker *initially* hosts a job's logical worker 0
+/// (elastic re-placement may later migrate individual slots off retired
+/// workers). Placement must be deterministic — two
+/// identically-configured runs must place jobs identically
+/// (`tests/properties.rs` pins this).
 pub trait PlacementPolicy: Send {
-    /// Rotation applied to `job`'s logical worker ids: logical `i` runs
-    /// on physical `(i + offset) % n`.
+    /// Rotation applied to `job`'s logical worker ids: logical `i`
+    /// starts on physical `(i + offset) % n`, where `n` is the
+    /// cluster's worker-slot capacity at run start.
     fn offset(&self, job: JobId, n: usize, jobs: usize) -> usize;
 
+    /// Short name recorded in [`FleetUtilization::placement`].
     fn label(&self) -> &'static str;
 }
 
@@ -74,7 +119,9 @@ impl PlacementPolicy for DisjointPlacement {
 /// One admitted job: a scheme plus its session parameters.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
+    /// Coding scheme (fixes the job's worker count `n`).
     pub scheme: SchemeConfig,
+    /// Protocol parameters (rounds, μ, wait-out policy, …).
     pub session: SessionConfig,
 }
 
@@ -116,7 +163,9 @@ impl RoundObserver for NoopObserver {}
 /// Aggregate outcome of a multi-job run.
 #[derive(Clone, Debug)]
 pub struct FleetUtilization {
+    /// Worker-slot capacity at run start.
     pub workers: usize,
+    /// Jobs admitted (and completed) in this run.
     pub jobs: usize,
     /// Cluster-clock span of the whole run (first submit → last close).
     pub makespan_s: f64,
@@ -128,6 +177,13 @@ pub struct FleetUtilization {
     pub worker_done_events: u64,
     /// `WorkerDead` events absorbed.
     pub worker_dead_events: u64,
+    /// `WorkerJoined` events absorbed (elastic backends only).
+    pub worker_joined_events: u64,
+    /// `WorkerRetired` events absorbed (elastic backends only).
+    pub worker_retired_events: u64,
+    /// Logical slots migrated off retired workers onto live spares at
+    /// round starts — "the report notes re-placement".
+    pub replacements: u64,
     /// `total_session_s / makespan_s`: how much session time the
     /// scheduler packed into each second of shared-fleet time (> 1 means
     /// sessions genuinely overlapped).
@@ -151,7 +207,15 @@ impl std::fmt::Display for FleetUtilization {
             self.rounds,
             self.worker_done_events,
             self.worker_dead_events
-        )
+        )?;
+        if self.worker_joined_events + self.worker_retired_events + self.replacements > 0 {
+            write!(
+                f,
+                ", {} joins, {} retires, {} re-placements",
+                self.worker_joined_events, self.worker_retired_events, self.replacements
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -160,6 +224,7 @@ impl std::fmt::Display for FleetUtilization {
 pub struct ScheduleReport {
     /// Per-job protocol reports, in admission (job-id) order.
     pub reports: Vec<RunReport>,
+    /// Aggregate fleet-level accounting for the run.
     pub utilization: FleetUtilization,
 }
 
@@ -168,8 +233,16 @@ struct Slot {
     /// `None` once the run completed and was consumed into `report`.
     session: Option<SgcSession>,
     plan: RoundPlan,
-    /// Physical rotation assigned by the placement policy at run start.
-    offset: usize,
+    /// Placement map: logical worker `i` runs on physical
+    /// `place[i]`. Seeded from the policy's rotation at run start;
+    /// individual entries migrate onto live spares when their physical
+    /// worker retires (elastic membership).
+    place: Vec<usize>,
+    /// Inverse map for event routing, sized to the cluster capacity:
+    /// `inv[p]` is the logical id hosted on physical `p`, or
+    /// `usize::MAX` when `p` is not in this job's placement. Rebuilt at
+    /// every round start.
+    inv: Vec<usize>,
     /// Round currently (or last) submitted, as the cluster knows it.
     round: u64,
     /// Cluster time the current round was submitted.
@@ -190,6 +263,10 @@ pub struct JobScheduler<'c> {
     policy: Box<dyn PlacementPolicy>,
     slots: Vec<Slot>,
     ran: bool,
+    /// Live roster, indexed by physical worker id. Seeded all-live at
+    /// run start; maintained by `WorkerJoined`/`WorkerRetired` events
+    /// (grows when an elastic backend admits a fresh id).
+    live: Vec<bool>,
     // --- reused scratch (the pump allocates nothing per event batch) ---
     events: Vec<ClusterEvent>,
     loads: Vec<f64>,
@@ -198,6 +275,9 @@ pub struct JobScheduler<'c> {
     // --- utilization counters ---
     done_events: u64,
     dead_events: u64,
+    joined_events: u64,
+    retired_events: u64,
+    replacements: u64,
     rounds_closed: usize,
 }
 
@@ -207,6 +287,7 @@ impl<'c> JobScheduler<'c> {
         Self::with_policy(cluster, Box::new(RoundRobinPlacement))
     }
 
+    /// Scheduler with an explicit placement policy.
     pub fn with_policy(
         cluster: &'c mut dyn EventCluster,
         policy: Box<dyn PlacementPolicy>,
@@ -216,25 +297,31 @@ impl<'c> JobScheduler<'c> {
             policy,
             slots: Vec::new(),
             ran: false,
+            live: Vec::new(),
             events: Vec::new(),
             loads: Vec::new(),
             state: Vec::new(),
             pending: Vec::new(),
             done_events: 0,
             dead_events: 0,
+            joined_events: 0,
+            retired_events: 0,
+            replacements: 0,
             rounds_closed: 0,
         }
     }
 
     /// Admit one job; returns its [`JobId`] (also its index in
     /// [`ScheduleReport::reports`]). All jobs must be admitted before
-    /// [`run`](Self::run).
+    /// [`run`](Self::run). The scheme's `n` may be *smaller* than the
+    /// cluster's capacity: the surplus workers are spares, available to
+    /// elastic re-placement.
     pub fn admit(&mut self, spec: &JobSpec) -> crate::Result<JobId> {
         anyhow::ensure!(!self.ran, "JobScheduler::admit after run");
         let session = SgcSession::new(&spec.scheme, spec.session.clone());
         let n = self.cluster.n();
         anyhow::ensure!(
-            session.n() == n,
+            session.n() <= n,
             "cluster has {n} workers but scheme {} expects n = {}",
             spec.scheme.label(),
             session.n()
@@ -243,7 +330,8 @@ impl<'c> JobScheduler<'c> {
         self.slots.push(Slot {
             session: Some(session),
             plan: RoundPlan::default(),
-            offset: 0,
+            place: Vec::new(),
+            inv: Vec::new(),
             round: 0,
             submit_s: 0.0,
             open: false,
@@ -273,8 +361,14 @@ impl<'c> JobScheduler<'c> {
         self.ran = true;
         let n = self.cluster.n();
         let jobs = self.slots.len();
+        // every slot known at run start is live; membership events
+        // maintain the roster from here on
+        self.live.clear();
+        self.live.resize(n, true);
         for (j, slot) in self.slots.iter_mut().enumerate() {
-            slot.offset = self.policy.offset(j, n, jobs) % n;
+            let offset = self.policy.offset(j, n, jobs) % n.max(1);
+            let sn = slot.session.as_ref().expect("unstarted job").n();
+            slot.place = (0..sn).map(|i| (i + offset) % n).collect();
         }
         let start_s = self.cluster.now_s();
 
@@ -365,6 +459,9 @@ impl<'c> JobScheduler<'c> {
             rounds: self.rounds_closed,
             worker_done_events: self.done_events,
             worker_dead_events: self.dead_events,
+            worker_joined_events: self.joined_events,
+            worker_retired_events: self.retired_events,
+            replacements: self.replacements,
             multiplexing_gain: if makespan > 0.0 { total_session_s / makespan } else { 0.0 },
             placement: self.policy.label(),
         };
@@ -373,14 +470,13 @@ impl<'c> JobScheduler<'c> {
 
     /// Route one absorbed event batch into the owning sessions.
     fn absorb_events(&mut self) -> crate::Result<()> {
-        let n = self.cluster.n();
         let events = std::mem::take(&mut self.events);
-        let result = self.route_events(&events, n);
+        let result = self.route_events(&events);
         self.events = events;
         result
     }
 
-    fn route_events(&mut self, events: &[ClusterEvent], n: usize) -> crate::Result<()> {
+    fn route_events(&mut self, events: &[ClusterEvent]) -> crate::Result<()> {
         for &ev in events {
             match ev {
                 // Death flags are strictly per (job, round): backends
@@ -393,19 +489,29 @@ impl<'c> JobScheduler<'c> {
                     self.done_events += 1;
                     let Some(slot) = self.slots.get_mut(job) else { continue };
                     if slot.open && round == slot.round {
-                        slot.dead[worker] = false;
-                        let logical = (worker + n - slot.offset) % n;
-                        slot.session
-                            .as_mut()
-                            .expect("open slot")
-                            .submit(logical, finish_s);
+                        // physical → logical through this round's
+                        // placement; a worker outside the job's placed
+                        // set (a spare serving a zero-load assignment)
+                        // carries no protocol meaning
+                        let logical = slot.inv.get(worker).copied().unwrap_or(usize::MAX);
+                        if logical != usize::MAX {
+                            if let Some(d) = slot.dead.get_mut(worker) {
+                                *d = false;
+                            }
+                            slot.session
+                                .as_mut()
+                                .expect("open slot")
+                                .submit(logical, finish_s);
+                        }
                     }
                 }
                 ClusterEvent::WorkerDead { job, round, worker } => {
                     self.dead_events += 1;
                     if let Some(slot) = self.slots.get_mut(job) {
                         if slot.open && round == slot.round {
-                            slot.dead[worker] = true;
+                            if let Some(d) = slot.dead.get_mut(worker) {
+                                *d = true;
+                            }
                         }
                     }
                 }
@@ -416,6 +522,21 @@ impl<'c> JobScheduler<'c> {
                             "job {job} round {round}: cluster round timeout with \
                              workers still missing"
                         );
+                    }
+                }
+                // membership events maintain the live roster; placement
+                // reacts at the next round start (replace_dead_slots)
+                ClusterEvent::WorkerJoined { worker } => {
+                    self.joined_events += 1;
+                    if worker >= self.live.len() {
+                        self.live.resize(worker + 1, false);
+                    }
+                    self.live[worker] = true;
+                }
+                ClusterEvent::WorkerRetired { worker } => {
+                    self.retired_events += 1;
+                    if let Some(l) = self.live.get_mut(worker) {
+                        *l = false;
                     }
                 }
             }
@@ -431,12 +552,10 @@ impl<'c> JobScheduler<'c> {
         now: f64,
         obs: &mut dyn RoundObserver,
     ) -> crate::Result<()> {
-        let n = self.cluster.n();
         let slot = &mut self.slots[j];
         if !slot.open {
             return Ok(());
         }
-        let offset = slot.offset;
         let round = slot.round;
         let session = slot.session.as_mut().expect("open slot");
         let now_rel = (now - slot.submit_s).max(0.0);
@@ -447,16 +566,20 @@ impl<'c> JobScheduler<'c> {
         let closable = pending == 0 || hint.is_some_and(|h| now_rel >= h);
         // A wait on workers that are all permanently dead can never end
         // (mirrors the old fleet loop); checked wherever a wait could
-        // otherwise spin until the round timeout.
-        let all_pending_dead = |pending_buf: &[usize], dead: &[bool]| {
-            !pending_buf.is_empty() && pending_buf.iter().all(|&lw| dead[(lw + offset) % n])
+        // otherwise spin until the round timeout. Logical ids map through
+        // this round's placement.
+        let all_pending_dead = |pending_buf: &[usize], place: &[usize], dead: &[bool]| {
+            !pending_buf.is_empty()
+                && pending_buf
+                    .iter()
+                    .all(|&lw| dead.get(place[lw]).copied().unwrap_or(true))
         };
         if !closable {
             // κ unknown means *nobody* has reported; if every awaited
             // worker is dead, no arrival can ever establish a cutoff.
             if hint.is_none() && pending > 0 {
                 session.pending_workers_into(&mut self.pending);
-                if all_pending_dead(&self.pending, &slot.dead) {
+                if all_pending_dead(&self.pending, &slot.place, &slot.dead) {
                     anyhow::bail!(
                         "job {j} round {round}: workers {:?} are dead before any \
                          arrival; the round can never close",
@@ -470,7 +593,7 @@ impl<'c> JobScheduler<'c> {
         if matches!(events.first(), Some(SessionEvent::WaitingFor { .. })) {
             // The wait-out policy needs an arrival that has not come.
             session.pending_workers_into(&mut self.pending);
-            if all_pending_dead(&self.pending, &slot.dead) {
+            if all_pending_dead(&self.pending, &slot.place, &slot.dead) {
                 anyhow::bail!(
                     "job {j} round {round}: workers {:?} are dead and the wait-out \
                      policy needs one of them; the straggler pattern cannot conform",
@@ -491,9 +614,36 @@ impl<'c> JobScheduler<'c> {
         Ok(())
     }
 
+    /// Re-place logical workers of job `j` whose physical host left the
+    /// live roster onto live spares not already used by the job (elastic
+    /// membership). With no spare available the mapping is kept: the
+    /// backend keeps reporting the ghost dead per submission and the
+    /// μ-rule cuts it — exactly the pre-elastic behaviour.
+    fn replace_dead_slots(&mut self, j: usize) {
+        let slot = &mut self.slots[j];
+        for logical in 0..slot.place.len() {
+            let p = slot.place[logical];
+            if self.live.get(p).copied().unwrap_or(false) {
+                continue;
+            }
+            let spare = (0..self.live.len())
+                .find(|&c| self.live[c] && !slot.place.contains(&c));
+            if let Some(s) = spare {
+                slot.place[logical] = s;
+                self.replacements += 1;
+            }
+        }
+    }
+
     /// Begin job `j`'s next round and fan its tasks out on the cluster.
     fn start_round(&mut self, j: usize, obs: &mut dyn RoundObserver) -> crate::Result<()> {
-        let n = self.cluster.n();
+        let cap = self.cluster.n();
+        // an elastic backend may have grown its slot space; workers the
+        // scheduler was never told joined stay non-live
+        if self.live.len() < cap {
+            self.live.resize(cap, false);
+        }
+        self.replace_dead_slots(j);
         {
             let slot = &mut self.slots[j];
             let session = slot.session.as_mut().expect("job still running");
@@ -504,15 +654,23 @@ impl<'c> JobScheduler<'c> {
             // fresh round, fresh death flags (see `route_events`): the
             // backend's `submit` re-reports workers unusable *for this
             // round* before any of its events can matter
-            slot.dead.iter_mut().for_each(|d| *d = false);
-            // placement: logical worker i → physical (i + offset) % n
+            slot.dead.clear();
+            slot.dead.resize(cap, false);
+            // placement: logical worker i → physical place[i]; spares
+            // (and retired slots) keep load 0
             self.loads.clear();
-            self.loads.resize(n, 0.0);
+            self.loads.resize(cap, 0.0);
             for (logical, &load) in slot.plan.loads.iter().enumerate() {
-                self.loads[(logical + slot.offset) % n] = load;
+                self.loads[slot.place[logical]] = load;
+            }
+            // inverse map for event routing (physical → logical)
+            slot.inv.clear();
+            slot.inv.resize(cap, usize::MAX);
+            for (logical, &p) in slot.place.iter().enumerate() {
+                slot.inv[p] = logical;
             }
         }
-        let (job_round, offset) = (self.slots[j].round, self.slots[j].offset);
+        let job_round = self.slots[j].round;
         self.cluster.submit(j, job_round, &self.loads);
         // Stamp the round origin AFTER the fan-out: a wall-clock backend
         // stamps its own origin at the start of `submit`, so reading the
@@ -524,9 +682,9 @@ impl<'c> JobScheduler<'c> {
         // so the report's true pattern is placement-agnostic.
         if let Some(state) = self.cluster.true_state(j, job_round) {
             self.state.clear();
-            self.state.resize(n, false);
-            for (physical, &s) in state.iter().enumerate() {
-                self.state[(physical + n - offset) % n] = s;
+            self.state.resize(self.slots[j].place.len(), false);
+            for (logical, &p) in self.slots[j].place.iter().enumerate() {
+                self.state[logical] = state.get(p).copied().unwrap_or(false);
             }
             self.slots[j]
                 .session
@@ -742,6 +900,111 @@ mod tests {
         let mut sched = JobScheduler::new(&mut sim);
         let err = sched.admit(&spec(8, 1, 2)).unwrap_err();
         assert!(err.to_string().contains("expects n = 8"), "{err}");
+    }
+
+    /// Scripted elastic backend: capacity 4, a 3-worker job. Worker 2
+    /// retires together with round 1's completions; worker 3 is a live
+    /// spare. Fully deterministic — no clocks, no RNG.
+    struct ElasticScripted {
+        clock: f64,
+        submissions: usize,
+        live: Vec<bool>,
+        staged: Vec<ClusterEvent>,
+        buf: Vec<ClusterEvent>,
+        loads_seen: Vec<Vec<f64>>,
+    }
+
+    impl ElasticScripted {
+        fn new() -> Self {
+            ElasticScripted {
+                clock: 0.0,
+                submissions: 0,
+                live: vec![true; 4],
+                staged: Vec::new(),
+                buf: Vec::new(),
+                loads_seen: Vec::new(),
+            }
+        }
+    }
+
+    impl EventCluster for ElasticScripted {
+        fn n(&self) -> usize {
+            4
+        }
+
+        fn now_s(&self) -> f64 {
+            self.clock
+        }
+
+        fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+            assert_eq!(loads.len(), 4);
+            self.submissions += 1;
+            self.loads_seen.push(loads.to_vec());
+            for (worker, &load) in loads.iter().enumerate() {
+                if load <= 0.0 {
+                    continue; // spare or retired slot: not part of the job
+                }
+                if self.live[worker] {
+                    self.staged.push(ClusterEvent::WorkerDone {
+                        job,
+                        round,
+                        worker,
+                        finish_s: 1.0 + worker as f64 * 0.01,
+                    });
+                } else {
+                    self.staged.push(ClusterEvent::WorkerDead { job, round, worker });
+                }
+            }
+            if self.submissions == 1 {
+                // worker 2 dies alongside round 1's completions
+                self.live[2] = false;
+                self.staged.push(ClusterEvent::WorkerRetired { worker: 2 });
+            }
+        }
+
+        fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+            self.buf.clear();
+            if self.staged.is_empty() {
+                if until_s.is_finite() && until_s > self.clock {
+                    self.clock = until_s;
+                }
+            } else {
+                self.clock += 0.5;
+                std::mem::swap(&mut self.buf, &mut self.staged);
+            }
+            &self.buf
+        }
+
+        fn true_state(&self, _job: JobId, _round: u64) -> Option<&[bool]> {
+            None
+        }
+    }
+
+    #[test]
+    fn retired_worker_is_replaced_by_a_live_spare() {
+        let mut cluster = ElasticScripted::new();
+        let out = {
+            let mut sched = JobScheduler::new(&mut cluster);
+            sched.admit(&spec(3, 1, 3)).unwrap();
+            sched.run().unwrap()
+        };
+        let rep = &out.reports[0];
+        assert_eq!(rep.rounds.len(), 3);
+        assert_eq!(rep.deadline_violations, 0);
+        assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+        // round 1 ran on workers 0..2 (worker 3 a zero-load spare)
+        assert!(cluster.loads_seen[0][2] > 0.0);
+        assert_eq!(cluster.loads_seen[0][3], 0.0);
+        // rounds 2+ migrated the retired worker 2's slot onto spare 3
+        for round_loads in &cluster.loads_seen[1..] {
+            assert_eq!(round_loads[2], 0.0, "retired worker still loaded");
+            assert!(round_loads[3] > 0.0, "spare not used");
+        }
+        assert_eq!(out.utilization.worker_retired_events, 1);
+        assert_eq!(out.utilization.replacements, 1);
+        // no straggler cut was ever needed: the dead worker never hosted
+        // a task after its retirement was observed
+        assert!(rep.rounds.iter().all(|r| r.detected_stragglers == 0));
     }
 
     #[test]

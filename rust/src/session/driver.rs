@@ -53,7 +53,9 @@ pub fn drive(
 /// One entry of a parallel batch: a scheme plus its session parameters.
 #[derive(Clone, Debug)]
 pub struct BatchItem {
+    /// Coding scheme for this run.
     pub scheme: SchemeConfig,
+    /// Protocol parameters for this run.
     pub session: SessionConfig,
 }
 

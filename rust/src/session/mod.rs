@@ -24,6 +24,39 @@
 //! scratch buffers end to end and draws GC decode solvers from the
 //! process-wide [`CodePlanCache`] — see `rust/DESIGN.md` §Performance for
 //! the allocation and sharing invariants.
+//!
+//! # Example
+//!
+//! Pump a session by hand over a simulated cluster (any source of
+//! per-worker completion times works — that is the point):
+//!
+//! ```
+//! use sgc::cluster::{Cluster, EventCluster, SimCluster};
+//! use sgc::coding::SchemeConfig;
+//! use sgc::session::{SessionConfig, SessionEvent, SgcSession};
+//! use sgc::straggler::GilbertElliot;
+//!
+//! let n = 8;
+//! let mut cluster =
+//!     SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 7), 7).sync();
+//! let mut session =
+//!     SgcSession::new(&SchemeConfig::gc(n, 1), SessionConfig { jobs: 4, ..Default::default() });
+//! let mut decoded = 0;
+//! while !session.is_complete() {
+//!     let plan = session.begin_round();                // pull: per-worker loads
+//!     let sample = cluster.sample_round(&plan.loads);  // execute anywhere
+//!     session.submit_all(&sample.finish);              // push: completion times
+//!     for event in session.close_round() {             // μ-rule / wait-out / decode
+//!         if let SessionEvent::JobDecoded { .. } = event {
+//!             decoded += 1;
+//!         }
+//!     }
+//! }
+//! assert_eq!(decoded, 4, "every job decodes");
+//! let report = session.into_report();
+//! assert_eq!(report.rounds.len(), 4);
+//! assert_eq!(report.deadline_violations, 0);
+//! ```
 
 mod driver;
 
@@ -67,6 +100,7 @@ pub struct SessionConfig {
     /// Straggler-detection tolerance μ (paper uses 1.0; Appendix L uses
     /// 5.0 for the storage-bound workload).
     pub mu: f64,
+    /// What to do when the observed pattern exceeds the design model.
     pub wait_policy: WaitPolicy,
     /// Measure real GC decode solves and record their cost (Table 4).
     pub measure_decode: bool,

@@ -27,6 +27,7 @@ pub struct ToleranceChecker {
 }
 
 impl ToleranceChecker {
+    /// Fresh checker for `n` workers under `spec`.
     pub fn new(n: usize, spec: ToleranceSpec) -> Self {
         ToleranceChecker {
             spec,

@@ -9,8 +9,13 @@ use crate::util::rng::Pcg32;
 /// Deterministic straggler model identifier for generation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Model {
+    /// `(B, W, lambda)`-bursty: bursts of length <= B per worker, <= lambda
+    /// straggling workers per W-round window.
     Bursty { b: usize, w: usize, lambda: usize },
+    /// Arbitrary-pattern model: <= `n_limit` distinct stragglers per
+    /// W-round window, <= lambda per round.
     Arbitrary { n_limit: usize, w: usize, lambda: usize },
+    /// Memoryless per-round model: <= `s` stragglers every round.
     PerRound { s: usize },
 }
 

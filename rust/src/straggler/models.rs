@@ -43,13 +43,17 @@ pub fn ge_step(straggling: bool, p_enter: f64, p_exit: f64, rng: &mut Pcg32) -> 
 /// with probability `p_exit`.
 #[derive(Clone, Debug)]
 pub struct GilbertElliot {
+    /// Per-round probability of a healthy worker turning straggler.
     pub p_enter: f64,
+    /// Per-round probability of a straggler recovering.
     pub p_exit: f64,
     states: Vec<bool>,
     rng: Pcg32,
 }
 
 impl GilbertElliot {
+    /// Seeded chain over `n` workers, started from the stationary
+    /// distribution.
     pub fn new(n: usize, p_enter: f64, p_exit: f64, seed: u64) -> Self {
         assert!((0.0..=1.0).contains(&p_enter) && (0.0..1.0).contains(&(1.0 - p_exit)));
         let mut rng = Pcg32::new(seed, 0x9e11);
@@ -98,6 +102,7 @@ pub struct TraceProcess {
 }
 
 impl TraceProcess {
+    /// Replay `pattern` (wrapping around at its end).
     pub fn new(pattern: Pattern) -> Self {
         assert!(pattern.rounds() > 0);
         TraceProcess { pattern, cursor: 0 }
@@ -119,6 +124,7 @@ impl StragglerProcess for TraceProcess {
 /// No stragglers ever (ideal cluster; ablation baseline).
 #[derive(Clone, Debug)]
 pub struct NoStragglers {
+    /// Worker count.
     pub n: usize,
 }
 

@@ -9,31 +9,37 @@
 /// (`round ∈ [1 : rounds]`), matching the paper.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Pattern {
+    /// Worker count (row width).
     pub n: usize,
     /// `rows[r-1][i]` = worker `i` straggles in round `r`.
     pub rows: Vec<Vec<bool>>,
 }
 
 impl Pattern {
+    /// Empty pattern over `n` workers.
     pub fn new(n: usize) -> Self {
         Pattern { n, rows: Vec::new() }
     }
 
+    /// Pattern from equal-length indicator rows.
     pub fn from_rows(rows: Vec<Vec<bool>>) -> Self {
         let n = rows.first().map_or(0, |r| r.len());
         assert!(rows.iter().all(|r| r.len() == n));
         Pattern { n, rows }
     }
 
+    /// Rounds recorded so far.
     pub fn rounds(&self) -> usize {
         self.rows.len()
     }
 
+    /// Append one round's indicator row.
     pub fn push_round(&mut self, row: Vec<bool>) {
         assert_eq!(row.len(), self.n);
         self.rows.push(row);
     }
 
+    /// Did `worker` straggle in (1-based) `round`?
     #[inline]
     pub fn is_straggler(&self, worker: usize, round: usize) -> bool {
         self.rows[round - 1][worker]
@@ -91,14 +97,19 @@ impl Pattern {
 /// (the wait-out repair loop calls this many times per round; see
 /// EXPERIMENTS.md §Perf).
 pub trait StragglerView {
+    /// Worker count.
     fn n(&self) -> usize;
+    /// Rounds the view covers.
     fn rounds(&self) -> usize;
+    /// Did `worker` straggle in (1-based) `round`?
     fn is_straggler(&self, worker: usize, round: usize) -> bool;
 
+    /// Stragglers in one round.
     fn count_in_round(&self, round: usize) -> usize {
         (0..self.n()).filter(|&i| self.is_straggler(i, round)).count()
     }
 
+    /// Distinct workers straggling anywhere in rounds `[lo, hi]`.
     fn distinct_in(&self, lo: usize, hi: usize) -> usize {
         let hi = hi.min(self.rounds());
         if lo > hi {
@@ -130,7 +141,9 @@ impl StragglerView for Pattern {
 
 /// A pattern plus one tentative extra round (zero-copy).
 pub struct Overlay<'a> {
+    /// The committed history.
     pub base: &'a Pattern,
+    /// The tentative next row.
     pub extra: &'a [bool],
 }
 

@@ -27,10 +27,12 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Generator for one case of a property run.
     pub fn new(seed: u64, case: usize, size: f64) -> Self {
         Gen { rng: Pcg32::new(seed, case as u64), size, case }
     }
 
+    /// Direct access to the underlying RNG stream.
     pub fn rng(&mut self) -> &mut Pcg32 {
         &mut self.rng
     }
@@ -47,6 +49,7 @@ impl Gen {
         self.rng.range_f64(lo, lo + (hi - lo) * self.size)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.chance(0.5)
     }

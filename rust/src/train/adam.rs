@@ -4,9 +4,13 @@
 /// Adam state over a list of flattened parameter tensors.
 #[derive(Clone, Debug)]
 pub struct Adam {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator fuzz.
     pub eps: f32,
     step: u64,
     m: Vec<Vec<f32>>,
@@ -14,6 +18,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Fresh state for tensors of the given flattened lengths.
     pub fn new(lr: f32, param_lens: &[usize]) -> Self {
         Adam {
             lr,
@@ -47,6 +52,7 @@ impl Adam {
         }
     }
 
+    /// Updates applied so far.
     pub fn steps(&self) -> u64 {
         self.step
     }

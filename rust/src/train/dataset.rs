@@ -10,11 +10,15 @@ use crate::util::rng::Pcg32;
 /// Dataset configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct DatasetConfig {
+    /// Feature width.
     pub input: usize,
+    /// Class count.
     pub classes: usize,
+    /// Training examples generated.
     pub train_size: usize,
     /// Noise std around class prototypes (larger = harder problem).
     pub noise: f64,
+    /// Generation seed.
     pub seed: u64,
 }
 
@@ -27,6 +31,7 @@ impl Default for DatasetConfig {
 /// In-memory synthetic dataset.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// The configuration it was generated from.
     pub cfg: DatasetConfig,
     /// Row-major `train_size × input`.
     pub x: Vec<f32>,
@@ -36,6 +41,7 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Deterministically generate the class-prototype dataset.
     pub fn generate(cfg: DatasetConfig) -> Self {
         let mut rng = Pcg32::new(cfg.seed, 0xda7a);
         let prototypes: Vec<f32> = (0..cfg.classes * cfg.input)
@@ -54,10 +60,12 @@ impl Dataset {
         Dataset { cfg, x, y, prototypes }
     }
 
+    /// Training examples available.
     pub fn len(&self) -> usize {
         self.cfg.train_size
     }
 
+    /// No examples (degenerate config).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

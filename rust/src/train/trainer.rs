@@ -30,8 +30,11 @@ pub struct TrainConfig {
     pub iterations: usize,
     /// Batch size per job.
     pub batch: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// μ-rule tolerance for the underlying session.
     pub mu: f64,
+    /// Seed for data sampling and initialization.
     pub seed: u64,
     /// Evaluate the model loss on the held-out batch every `eval_every`
     /// iterations (1 = every update).
@@ -55,14 +58,18 @@ impl Default for TrainConfig {
 /// One logged evaluation point.
 #[derive(Clone, Copy, Debug)]
 pub struct LossPoint {
+    /// Gradient iteration (per model).
     pub iteration: usize,
+    /// Simulated cluster time of the evaluation.
     pub sim_time_s: f64,
+    /// Held-out loss at that point.
     pub loss: f64,
 }
 
 /// Training run report.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// Scheme label the models trained under.
     pub scheme: String,
     /// Simulated cluster wall-clock (what the paper's Table 1 measures).
     pub sim_runtime_s: f64,
@@ -70,7 +77,9 @@ pub struct TrainReport {
     pub wall_runtime_s: f64,
     /// Per model: loss curve.
     pub losses: Vec<Vec<LossPoint>>,
+    /// Jobs (gradient updates) that decoded.
     pub jobs_completed: usize,
+    /// Deadline violations across all sessions.
     pub deadline_violations: usize,
     /// Cumulative completed-jobs curve: (sim time, jobs).
     pub completion_curve: Vec<(f64, usize)>,

@@ -11,15 +11,22 @@ use std::fmt::Write as _;
 /// experiment artifacts diffable.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (JSON has only doubles).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object with deterministically-ordered keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Fresh empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -154,6 +161,7 @@ impl Json {
         }
     }
 
+    /// Number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -169,6 +177,7 @@ impl Json {
         }
     }
 
+    /// Bool value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -176,6 +185,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -183,6 +193,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(xs) => Some(xs),
@@ -194,7 +205,9 @@ impl Json {
 /// Parse failure with byte offset.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub offset: usize,
+    /// What went wrong there.
     pub message: String,
 }
 

@@ -64,10 +64,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -77,10 +79,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Samples folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -94,14 +98,17 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -110,11 +117,14 @@ impl Welford {
 /// `avg ± std` pair, the unit every paper table reports.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MeanStd {
+    /// Sample mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
 }
 
 impl MeanStd {
+    /// Mean and standard deviation of `xs`.
     pub fn of(xs: &[f64]) -> Self {
         MeanStd { mean: mean(xs), std: std_dev(xs) }
     }
@@ -129,17 +139,22 @@ impl std::fmt::Display for MeanStd {
 /// Fixed-bin histogram over `[lo, hi)`; used for Fig. 1(b) burst lengths.
 #[derive(Clone, Debug)]
 pub struct Histogram {
+    /// Inclusive lower bound of the binned range.
     pub lo: f64,
+    /// Exclusive upper bound of the binned range.
     pub hi: f64,
+    /// Per-bin sample counts.
     pub counts: Vec<u64>,
 }
 
 impl Histogram {
+    /// `bins` equal-width bins over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins] }
     }
 
+    /// Count one sample (out-of-range samples clamp to the edge bins).
     pub fn push(&mut self, x: f64) {
         let bins = self.counts.len();
         let t = (x - self.lo) / (self.hi - self.lo);
@@ -147,6 +162,7 @@ impl Histogram {
         self.counts[idx] += 1;
     }
 
+    /// Total samples counted.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }

@@ -9,22 +9,27 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch { start: Instant::now() }
     }
 
+    /// Time since start (or the last restart).
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Elapsed time in seconds.
     pub fn elapsed_s(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Elapsed time in milliseconds.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed().as_secs_f64() * 1e3
     }
 
+    /// Return the elapsed time and reset the start point to now.
     pub fn restart(&mut self) -> Duration {
         let e = self.start.elapsed();
         self.start = Instant::now();

@@ -4,7 +4,7 @@
 
 use sgc::cluster::{EventCluster, RecordingCluster, RunTrace, SimCluster};
 use sgc::coding::SchemeConfig;
-use sgc::fleet::{drive_fleet, ChaosConfig, LoopbackFleet};
+use sgc::fleet::{drive_fleet, ChaosConfig, LoopbackFleet, WorkerConfig};
 use sgc::session::{self, SessionConfig};
 use sgc::straggler::GilbertElliot;
 
@@ -110,6 +110,85 @@ fn two_jobs_multiplex_over_one_fleet() {
     assert_eq!(out.utilization.jobs, 2);
     assert_eq!(out.utilization.rounds, 2 * jobs);
     assert!(out.utilization.worker_done_events > 0);
+}
+
+/// Elastic membership end to end: a 4-worker fleet gains two late
+/// joiners and loses one original worker mid-run; the scheduler
+/// re-places the dead worker's logical slot onto a live spare, finishes
+/// every job, and the report notes the membership churn.
+#[test]
+fn late_join_and_worker_death_are_absorbed() {
+    use sgc::sched::{JobScheduler, JobSpec};
+    use std::time::Duration;
+
+    let n = 4;
+    let jobs = 12;
+    // worker 1 crashes (socket drop, no Shutdown handshake) after
+    // serving 5 wire rounds; chaos off for determinism
+    let mut fleet = LoopbackFleet::spawn_with(n, |id, addr| {
+        let mut cfg = WorkerConfig::loopback(id, addr.to_string(), None);
+        if id == 1 {
+            cfg.fail_after_rounds = Some(5);
+        }
+        cfg
+    })
+    .expect("spawn fleet");
+    // two late joiners under fresh ids: admitted inside the master's
+    // event loop once the run is underway
+    let addr = fleet.cluster.addr().to_string();
+    fleet.join_worker(WorkerConfig::loopback(4, addr.clone(), None));
+    fleet.join_worker(WorkerConfig::loopback(5, addr, None));
+
+    let out = {
+        let mut sched = JobScheduler::new(&mut fleet.cluster);
+        sched
+            .admit(&JobSpec {
+                scheme: SchemeConfig::gc(n, 1),
+                session: SessionConfig { jobs, ..Default::default() },
+            })
+            .expect("admit");
+        sched.run().expect("elastic fleet run")
+    };
+    // drain stragglers' late results so workers are idle at Shutdown
+    let _ = fleet.cluster.finish_trace(Duration::from_secs(10), 1.0);
+    let stats = fleet.shutdown().expect("clean shutdown");
+
+    let rep = &out.reports[0];
+    assert_eq!(rep.rounds.len(), jobs);
+    assert_eq!(rep.deadline_violations, 0);
+    assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+    let u = &out.utilization;
+    assert_eq!(u.worker_joined_events, 2, "{u}");
+    assert!(u.worker_retired_events >= 1, "{u}");
+    assert!(u.replacements >= 1, "the report must note the re-placement: {u}");
+    // the crashed worker served exactly its configured 5 rounds
+    assert_eq!(stats[1].rounds_served, 5, "{stats:?}");
+    // the survivors served every submission they saw; at least one late
+    // joiner picked up real work after the re-placement
+    assert!(stats[0].rounds_served >= jobs, "{stats:?}");
+    assert!(stats[4].rounds_served + stats[5].rounds_served > 0, "{stats:?}");
+}
+
+/// Acceptance pin of the reactor rewrite: one master — a single I/O
+/// thread, no per-connection readers — holds a 64-worker loopback fleet
+/// and completes a run. (The single-thread property is structural:
+/// `FleetCluster` owns plain `Connection`s and spawns nothing; this
+/// test exercises that architecture at a width the thread-per-socket
+/// design made expensive.)
+#[test]
+fn fleet_64_workers_on_a_single_io_thread() {
+    let n = 64;
+    let jobs = 3;
+    let scheme = SchemeConfig::gc(n, 7);
+    let cfg = SessionConfig { jobs, ..Default::default() };
+    let mut fleet = LoopbackFleet::spawn(n, None).expect("spawn 64 workers");
+    let run = drive_fleet(&scheme, &cfg, &mut fleet.cluster).expect("fleet run");
+    let stats = fleet.shutdown().expect("clean shutdown");
+    assert_eq!(run.report.rounds.len(), jobs);
+    assert_eq!(run.report.deadline_violations, 0);
+    assert!(run.report.job_completion_s.iter().all(|t| t.is_finite()));
+    assert_eq!(run.trace.n, n);
+    assert!(stats.iter().all(|s| s.rounds_served == jobs), "{stats:?}");
 }
 
 /// Two fleets with the same chaos seed produce the same straggle/serve

@@ -415,6 +415,156 @@ fn prop_scheduler_two_jobs_deterministic_and_batching_invariant() {
     });
 }
 
+/// Elastic-membership determinism: over a scripted backend whose joins,
+/// retirements and completion times are pure functions of a generated
+/// script, two scheduler runs deliver membership events in the *same
+/// order* and produce byte-identical reports and re-placement counts —
+/// membership churn must not introduce nondeterminism.
+#[test]
+fn prop_membership_event_ordering_deterministic() {
+    use sgc::cluster::{ClusterEvent, EventCluster, JobId};
+    use sgc::coding::SchemeConfig;
+    use sgc::sched::{JobScheduler, JobSpec};
+    use sgc::session::SessionConfig;
+
+    /// Scripted elastic backend: at submission `t`, `joins`/`retires`
+    /// with trigger `t` fire (a join admits a fresh id = the current
+    /// capacity; a retire removes an initial worker that has just
+    /// finished its last round). Completion times are a pure function
+    /// of `(submission, worker)`.
+    struct ElasticScript {
+        cap: usize,
+        clock: f64,
+        submissions: u64,
+        live: Vec<bool>,
+        joins: Vec<u64>,
+        retires: Vec<(u64, usize)>,
+        staged: Vec<ClusterEvent>,
+        buf: Vec<ClusterEvent>,
+        membership_log: Vec<ClusterEvent>,
+    }
+
+    impl ElasticScript {
+        fn new(n: usize, joins: Vec<u64>, retires: Vec<(u64, usize)>) -> Self {
+            ElasticScript {
+                cap: n,
+                clock: 0.0,
+                submissions: 0,
+                live: vec![true; n],
+                joins,
+                retires,
+                staged: Vec::new(),
+                buf: Vec::new(),
+                membership_log: Vec::new(),
+            }
+        }
+    }
+
+    impl EventCluster for ElasticScript {
+        fn n(&self) -> usize {
+            self.cap
+        }
+
+        fn now_s(&self) -> f64 {
+            self.clock
+        }
+
+        fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+            assert_eq!(loads.len(), self.cap);
+            self.submissions += 1;
+            for (worker, &load) in loads.iter().enumerate() {
+                if load <= 0.0 {
+                    continue; // spare / retired slot
+                }
+                assert!(self.live[worker], "scheduler placed load on a dead worker");
+                // pure function of (submission, worker): reproducible
+                let jitter = (self.submissions * 17 + worker as u64 * 31) % 13;
+                let finish_s = 1.0 + jitter as f64 * 0.01;
+                self.staged.push(ClusterEvent::WorkerDone { job, round, worker, finish_s });
+            }
+            // script fires after the submission's own completions
+            for &at in &self.joins {
+                if at == self.submissions {
+                    self.live.push(true);
+                    let worker = self.cap;
+                    self.cap += 1;
+                    let ev = ClusterEvent::WorkerJoined { worker };
+                    self.staged.push(ev);
+                    self.membership_log.push(ev);
+                }
+            }
+            for &(at, worker) in &self.retires {
+                if at == self.submissions && self.live[worker] {
+                    self.live[worker] = false;
+                    let ev = ClusterEvent::WorkerRetired { worker };
+                    self.staged.push(ev);
+                    self.membership_log.push(ev);
+                }
+            }
+        }
+
+        fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+            self.buf.clear();
+            if self.staged.is_empty() {
+                if until_s.is_finite() && until_s > self.clock {
+                    self.clock = until_s;
+                }
+            } else {
+                self.clock += 0.25;
+                std::mem::swap(&mut self.buf, &mut self.staged);
+            }
+            &self.buf
+        }
+
+        fn true_state(&self, _job: JobId, _round: u64) -> Option<&[bool]> {
+            None
+        }
+    }
+
+    check("membership-ordering-determinism", 20, |g: &mut Gen| {
+        let n = g.usize_in(3, 8);
+        let rounds = g.usize_in(4, 10);
+        let churn = g.usize_in(1, (n - 2).min(2));
+        // each churn pair: a join at `j`, then the retirement of initial
+        // worker `k` at or after `j` — so a live spare always exists by
+        // the time the scheduler re-places the retiree's slot
+        let mut joins = Vec::new();
+        let mut retires = Vec::new();
+        for k in 0..churn {
+            let j = g.usize_in(1, rounds - 1) as u64;
+            let r = g.usize_in(j as usize, rounds - 1) as u64;
+            joins.push(j);
+            retires.push((r, k));
+        }
+        let run = || {
+            let mut cluster = ElasticScript::new(n, joins.clone(), retires.clone());
+            let out = {
+                let mut sched = JobScheduler::new(&mut cluster);
+                sched
+                    .admit(&JobSpec {
+                        scheme: SchemeConfig::gc(n, 1),
+                        session: SessionConfig { jobs: rounds, ..Default::default() },
+                    })
+                    .unwrap();
+                sched.run().unwrap()
+            };
+            assert_eq!(out.reports[0].rounds.len(), rounds);
+            assert_eq!(out.reports[0].deadline_violations, 0);
+            assert_eq!(out.utilization.worker_retired_events as usize, retires.len());
+            (
+                format!("{:?}", out.reports),
+                format!("{:?}", cluster.membership_log),
+                out.utilization.replacements,
+            )
+        };
+        let (rep_a, log_a, repl_a) = run();
+        let (rep_b, log_b, repl_b) = run();
+        assert_eq!(log_a, log_b, "membership-event order diverged (n={n})");
+        assert_eq!(rep_a, rep_b, "reports diverged under membership churn (n={n})");
+        assert_eq!(repl_a, repl_b, "re-placement counts diverged (n={n})");
+    });
+}
+
 /// Satellite invariant behind the fleet's streaming driver: pushing the
 /// same completion times through `submit` in *any* permutation (with
 /// arbitrary idempotent re-submits sprinkled in) yields byte-identical
