@@ -1,0 +1,116 @@
+//! `adapt_refit` — hot-path costs of the adaptive control plane
+//! (`sgc::adapt`): folding one observed round into the online profile,
+//! and one budgeted grid-search slice (`Refitter::tick`), at n=64 and
+//! n=256. Finishes with the regime-shift acceptance comparison:
+//! `sgc serve --adapt` semantics (adaptive M-SGC) against the
+//! statically-fit incumbent on the same scripted trace. Emits the
+//! `BENCH_6.json` perf snapshot.
+
+use sgc::adapt::{AdaptiveConfig, OnlineProfiler, ProfilerConfig, Refitter};
+use sgc::bench_harness::Bench;
+use sgc::cluster::{EventCluster, SimCluster};
+use sgc::coding::SchemeConfig;
+use sgc::sched::{JobScheduler, JobSpec};
+use sgc::session::SessionConfig;
+use sgc::straggler::Pattern;
+
+fn mean_s(b: &Bench, name: &str) -> f64 {
+    b.result(name).map(|r| r.mean.as_secs_f64()).unwrap_or(f64::NAN)
+}
+
+/// Quiet until `shift_at` cluster rounds, then a persistent heavy
+/// regime (mirrors `sgc serve --regime-shift` and tests/adapt.rs).
+fn regime_shift_sim(n: usize, shift_at: usize, seed: u64) -> SimCluster {
+    let mut rows = vec![vec![false; n]; shift_at];
+    for k in 0..4096usize {
+        rows.push((0..n).map(|w| k % 2 == 0 && w % 3 == 0).collect());
+    }
+    SimCluster::from_trace(n, Pattern::from_rows(rows), seed)
+}
+
+/// Feed `rounds` synthetic observed rounds into the profiler; returns
+/// the next start round.
+fn feed_rounds(p: &mut OnlineProfiler, n: usize, rounds: u64, start: u64) -> u64 {
+    let place: Vec<usize> = (0..n).collect();
+    let loads = vec![1.0 / n as f64; n];
+    for r in start + 1..=start + rounds {
+        p.register_round(0, r, &place, &loads);
+        for w in 0..n {
+            p.observe(0, r, w, 1.0 + 0.001 * ((w as u64 + r) % 7) as f64);
+        }
+        p.fold_round(0, r);
+    }
+    start + rounds
+}
+
+fn main() {
+    let fast = std::env::var("SGC_BENCH_FAST").ok().as_deref() == Some("1");
+    let mut b = Bench::new("adapt-refit");
+    b.header();
+
+    // --- online profile update: one full observed round folded in -----
+    for &n in &[64usize, 256] {
+        let mut p = OnlineProfiler::new(ProfilerConfig::default());
+        let mut r = feed_rounds(&mut p, n, 4, 0);
+        b.run(&format!("profile_fold(n={n})"), || {
+            r = feed_rounds(&mut p, n, 1, r);
+        });
+    }
+
+    // --- one budgeted grid-search slice (4 candidates × 8 jobs) -------
+    for &n in &[64usize, 256] {
+        let mut p = OnlineProfiler::new(ProfilerConfig::default());
+        feed_rounds(&mut p, n, 16, 0);
+        let snap = p.snapshot(0).expect("rows folded");
+        let alpha = p.alpha();
+        let inc = SchemeConfig::msgc(n, 1, 2, (n / 16).max(1));
+        let mut rf = Refitter::new(&inc, 4, 8);
+        b.run(&format!("refit_tick_budget4(n={n})"), || {
+            if !rf.pass_active() {
+                rf.begin_pass(snap.clone(), alpha);
+            }
+            let _ = rf.tick();
+        });
+    }
+
+    // --- regime-shift acceptance: adaptive vs statically-fit M-SGC ----
+    let n = 64;
+    let jobs = if fast { 40 } else { 100 };
+    let spec = JobSpec {
+        scheme: SchemeConfig::msgc(n, 1, 2, 2),
+        session: SessionConfig { jobs, ..Default::default() },
+    };
+    let serve = |adaptive: bool| -> (f64, usize) {
+        let mut sim = regime_shift_sim(n, 10, 42);
+        let out = {
+            let mut sched = JobScheduler::new(&mut sim);
+            if adaptive {
+                sched.set_adaptive(AdaptiveConfig::default());
+            }
+            sched.admit(&spec).expect("admit");
+            sched.run().expect("serve run")
+        };
+        (sim.now_s(), out.swaps.len())
+    };
+    let (static_t, _) = serve(false);
+    let (adapt_t, swaps) = serve(true);
+    println!(
+        "  regime-shift serve (n={n}, {jobs} jobs): static {static_t:.1}s vs \
+         adaptive {adapt_t:.1}s, {swaps} swap(s)"
+    );
+
+    b.save();
+    b.save_snapshot(
+        "BENCH_6.json",
+        &[
+            ("profile_fold_s_n64", mean_s(&b, "profile_fold(n=64)")),
+            ("profile_fold_s_n256", mean_s(&b, "profile_fold(n=256)")),
+            ("refit_tick_s_n64", mean_s(&b, "refit_tick_budget4(n=64)")),
+            ("refit_tick_s_n256", mean_s(&b, "refit_tick_budget4(n=256)")),
+            ("regime_shift_static_runtime_s", static_t),
+            ("regime_shift_adaptive_runtime_s", adapt_t),
+            ("regime_shift_speedup", static_t / adapt_t.max(1e-9)),
+            ("regime_shift_swaps", swaps as f64),
+        ],
+    );
+}

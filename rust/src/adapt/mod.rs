@@ -1,0 +1,340 @@
+//! Adaptive control plane: online straggler profiling, background
+//! re-fit, and hot-swap of scheme parameters.
+//!
+//! The paper's schemes are *parameterized by* past straggler behavior —
+//! `(B, W, λ)` are chosen to match the observed burst model (Appendix
+//! J). This module closes that loop online, the full
+//! observe → estimate → re-fit → swap cycle:
+//!
+//! * [`OnlineProfiler`] (*observe*) folds the live `WorkerDone` stream
+//!   into per-worker delay estimates and detects straggler-regime
+//!   shifts (exponentially-weighted fast-vs-slow divergence);
+//! * [`Refitter`] (*estimate/re-fit*) re-runs the Appendix-J candidate
+//!   search against the live profile, amortized a few candidates per
+//!   round so the scheduler hot path never blocks;
+//! * [`SwapPolicy`] (*decide*) accepts a re-fitted scheme only with a
+//!   predicted-gain margin, a cooldown, and (by default) a detected
+//!   regime shift — stationary profiles never swap;
+//! * [`AdaptiveController`] ties the three together per scheduled job
+//!   and is what [`crate::sched::JobScheduler`] drives when serving
+//!   with adaptation enabled (`sgc serve --adapt`).
+//!
+//! Swaps themselves are executed by the scheduler at **job
+//! boundaries**: the incumbent session is truncated after its currently
+//! assigned paper-jobs, runs only its decode tail, and a fresh
+//! [`crate::session::SgcSession`] with the re-fitted parameters takes
+//! over the remaining jobs — never mid-round, never dropping a job the
+//! ledger still owes (see DESIGN.md §Adaptive).
+
+pub mod profiler;
+pub mod refit;
+pub mod swap;
+
+pub use profiler::{OnlineProfiler, ProfilerConfig};
+pub use refit::{refit_candidates, FitOutcome, Refitter};
+pub use swap::SwapPolicy;
+
+use crate::coding::SchemeConfig;
+
+/// Configuration of the adaptive control plane.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    /// Candidates estimated per round close per job (`--refit-budget`).
+    pub refit_budget: usize,
+    /// Profile rounds required (post-shift) before a re-fit pass may
+    /// start.
+    pub min_profile_rounds: usize,
+    /// Jobs replayed per candidate estimate.
+    pub estimate_jobs: usize,
+    /// Swap acceptance policy (`--swap-margin` feeds its margin).
+    pub policy: SwapPolicy,
+    /// Online profiler knobs (window, decay, shift threshold).
+    pub profiler: ProfilerConfig,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            refit_budget: 4,
+            min_profile_rounds: 6,
+            estimate_jobs: 12,
+            policy: SwapPolicy::default(),
+            profiler: ProfilerConfig::default(),
+        }
+    }
+}
+
+/// One executed hot-swap, as recorded in
+/// [`crate::sched::ScheduleReport::swaps`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchemeSwapped {
+    /// Scheduler job id that migrated.
+    pub job: usize,
+    /// Cluster round count of the job at the moment the new scheme took
+    /// over (its first round runs as cluster round `at_round + 1`).
+    pub at_round: u64,
+    /// Label of the scheme migrated away from.
+    pub from: String,
+    /// Label of the re-fitted scheme migrated to.
+    pub to: String,
+    /// Fractional runtime improvement the re-fit predicted.
+    pub predicted_gain: f64,
+    /// Cluster wall-clock at the swap.
+    pub at_s: f64,
+}
+
+impl std::fmt::Display for SchemeSwapped {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job {}: {} -> {} at round {} (predicted -{:.1}%, t={:.1}s)",
+            self.job,
+            self.from,
+            self.to,
+            self.at_round,
+            self.predicted_gain * 100.0,
+            self.at_s
+        )
+    }
+}
+
+/// Per-job adaptation state.
+#[derive(Debug, Default)]
+struct JobAdapt {
+    refitter: Option<Refitter>,
+    pending: Option<(SchemeConfig, f64)>,
+    rounds_since_swap: u64,
+    shift_armed: bool,
+}
+
+/// Drives the adaptive loop for every job of a
+/// [`crate::sched::JobScheduler`] run (see module docs). All methods
+/// are deterministic functions of the observed event stream — the
+/// controller draws no randomness, so identical runs make identical
+/// swap decisions.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    profiler: OnlineProfiler,
+    jobs: Vec<JobAdapt>,
+    evaluated_total: u64,
+    last_pass_at: u64,
+}
+
+impl AdaptiveController {
+    /// Controller with the given knobs.
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        let profiler = OnlineProfiler::new(cfg.profiler.clone());
+        AdaptiveController { cfg, profiler, jobs: Vec::new(), evaluated_total: 0, last_pass_at: 0 }
+    }
+
+    /// Hook: a round fanned out (`place[i]` = physical worker serving
+    /// logical worker `i` at `loads[i]`).
+    pub fn register_round(&mut self, job: usize, round: u64, place: &[usize], loads: &[f64]) {
+        self.profiler.register_round(job, round, place, loads);
+    }
+
+    /// Hook: a `WorkerDone` arrived for logical worker `logical` of an
+    /// open round.
+    pub fn observe_done(&mut self, job: usize, round: u64, logical: usize, finish_s: f64) {
+        self.profiler.observe(job, round, logical, finish_s);
+    }
+
+    /// Hook: the scheduler closed `(job, round)` with `incumbent` as
+    /// the job's current scheme. Folds the round into the profile,
+    /// propagates regime shifts, runs one budgeted re-fit tick, and —
+    /// when a completed pass clears the swap policy — stages a pending
+    /// swap for the job (query with
+    /// [`pending_swap`](Self::pending_swap)).
+    pub fn round_closed(&mut self, job: usize, round: u64, incumbent: &SchemeConfig) {
+        self.ensure_job(job);
+        if self.profiler.fold_round(job, round) {
+            // Regime shift: stale-regime passes are worthless, and every
+            // job becomes eligible to swap once its window refills.
+            for st in self.jobs.iter_mut() {
+                st.shift_armed = true;
+                if let Some(rf) = st.refitter.as_mut() {
+                    rf.abort_pass();
+                }
+            }
+        }
+        let min_rounds = self.cfg.min_profile_rounds;
+        let budget = self.cfg.refit_budget;
+        let estimate_jobs = self.cfg.estimate_jobs;
+        let st = &mut self.jobs[job];
+        st.rounds_since_swap += 1;
+        if st.pending.is_some() {
+            return; // draining toward an accepted swap: stop fitting
+        }
+        let rf = st
+            .refitter
+            .get_or_insert_with(|| Refitter::new(incumbent, budget, estimate_jobs));
+        if rf.candidate_count() <= 1 {
+            return; // nothing to re-fit (uncoded)
+        }
+        let before = rf.evaluated();
+        rf.maybe_begin(&self.profiler, job, min_rounds);
+        let outcome = rf.tick();
+        self.evaluated_total += rf.evaluated() - before;
+        if let Some(outcome) = outcome {
+            self.last_pass_at = self.profiler.rounds_folded();
+            if let Some(accept) =
+                self.cfg.policy.decide(&outcome, incumbent, st.rounds_since_swap, st.shift_armed)
+            {
+                st.pending = Some(accept);
+            }
+        }
+    }
+
+    /// The swap staged for a job, if any: the scheduler truncates the
+    /// incumbent session and executes the swap once its decode tail
+    /// completes.
+    pub fn pending_swap(&self, job: usize) -> Option<&(SchemeConfig, f64)> {
+        self.jobs.get(job).and_then(|st| st.pending.as_ref())
+    }
+
+    /// Consume the staged swap and reset the job's hysteresis state
+    /// (cooldown restarts, the shift gate re-arms only on the next
+    /// detected shift, and the re-fitter is rebuilt around the new
+    /// incumbent).
+    pub fn take_swap(&mut self, job: usize) -> Option<(SchemeConfig, f64)> {
+        let st = self.jobs.get_mut(job)?;
+        let accepted = st.pending.take()?;
+        st.shift_armed = false;
+        st.rounds_since_swap = 0;
+        st.refitter = None;
+        Some(accepted)
+    }
+
+    /// Profile-driven spare selection: among live workers outside
+    /// `place`, the one with the lowest observed fast delay mean
+    /// (unobserved workers rank last; ties break to the lowest id,
+    /// matching the scheduler's non-adaptive first-fit).
+    pub fn prefer_spare(&self, live: &[bool], place: &[usize]) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for c in 0..live.len() {
+            if !live[c] || place.contains(&c) {
+                continue;
+            }
+            let m = self.profiler.fast_mean(c).unwrap_or(f64::INFINITY);
+            match best {
+                Some((bm, _)) if m >= bm => {}
+                _ => best = Some((m, c)),
+            }
+        }
+        best.map(|(_, c)| c)
+    }
+
+    /// Re-fit candidates evaluated so far (all jobs).
+    pub fn candidates_evaluated(&self) -> u64 {
+        self.evaluated_total
+    }
+
+    /// Rounds folded since the last completed re-fit pass — how stale
+    /// the fitted parameters are relative to the live profile.
+    pub fn profile_staleness(&self) -> u64 {
+        self.profiler.rounds_folded() - self.last_pass_at
+    }
+
+    /// Regime shifts detected so far.
+    pub fn shifts(&self) -> u64 {
+        self.profiler.shifts()
+    }
+
+    /// Shared read access to the profiler (inspection / tests).
+    pub fn profiler(&self) -> &OnlineProfiler {
+        &self.profiler
+    }
+
+    fn ensure_job(&mut self, job: usize) {
+        if job >= self.jobs.len() {
+            self.jobs.resize_with(job + 1, JobAdapt::default);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Feed `rounds` identical rounds for one job at the given
+    /// per-worker times.
+    fn feed(
+        ad: &mut AdaptiveController,
+        inc: &SchemeConfig,
+        start: u64,
+        rounds: u64,
+        times: &dyn Fn(u64, usize) -> f64,
+    ) -> u64 {
+        let n = inc.n;
+        let place: Vec<usize> = (0..n).collect();
+        let loads = vec![1.0 / n as f64; n];
+        for r in start + 1..=start + rounds {
+            ad.register_round(0, r, &place, &loads);
+            for w in 0..n {
+                ad.observe_done(0, r, w, times(r, w));
+            }
+            ad.round_closed(0, r, inc);
+        }
+        start + rounds
+    }
+
+    #[test]
+    fn stationary_profile_never_stages_a_swap() {
+        let mut ad = AdaptiveController::new(AdaptiveConfig::default());
+        let inc = SchemeConfig::gc(8, 1);
+        feed(&mut ad, &inc, 0, 40, &|_, w| 1.0 + 0.01 * w as f64);
+        assert!(ad.pending_swap(0).is_none(), "shift gate must hold on a stationary profile");
+        assert_eq!(ad.shifts(), 0);
+        // ...even though the background re-fit has been running
+        assert!(ad.candidates_evaluated() > 0, "re-fit runs in the background regardless");
+    }
+
+    #[test]
+    fn regime_shift_plus_margin_stages_a_swap() {
+        let mut ad = AdaptiveController::new(AdaptiveConfig::default());
+        // deliberately over-provisioned GC: s=3 of n=8 → load 0.5; on a
+        // quiet cluster the re-fit prefers a cheaper s once it may swap
+        let inc = SchemeConfig::gc(8, 3);
+        let r = feed(&mut ad, &inc, 0, 20, &|_, w| 1.0 + 0.01 * w as f64);
+        assert!(ad.pending_swap(0).is_none(), "no shift yet");
+        // shift: workers 0..4 become 8× slower, then profile refills
+        feed(&mut ad, &inc, r, 40, &|_, w| {
+            if w < 4 {
+                8.0
+            } else {
+                1.0 + 0.01 * w as f64
+            }
+        });
+        assert_eq!(ad.shifts(), 1);
+        let (to, gain) = ad.pending_swap(0).expect("swap staged after the shift").clone();
+        assert_ne!(to, inc);
+        assert!(gain > 0.0);
+        // consuming the swap resets hysteresis
+        assert!(ad.take_swap(0).is_some());
+        assert!(ad.pending_swap(0).is_none());
+        assert!(ad.take_swap(0).is_none());
+    }
+
+    #[test]
+    fn spare_preference_ranks_by_observed_speed() {
+        let mut ad = AdaptiveController::new(AdaptiveConfig::default());
+        let inc = SchemeConfig::gc(2, 1);
+        // job runs on physical {2, 5}; 5 is slow
+        let loads = [0.5, 0.5];
+        for r in 1..=4u64 {
+            ad.register_round(0, r, &[2, 5], &loads);
+            ad.observe_done(0, r, 0, 1.0);
+            ad.observe_done(0, r, 1, 5.0);
+            ad.round_closed(0, r, &inc);
+        }
+        let live = vec![true; 6];
+        // replacing within place [0, 3]: worker 2 (observed fast) wins
+        // over 1, 4, 5 even though 1 has the lower id
+        assert_eq!(ad.prefer_spare(&live, &[0, 3]), Some(2));
+        // with 2 occupied, unobserved spares tie at the lowest id
+        assert_eq!(ad.prefer_spare(&live, &[0, 2]), Some(1));
+        // nothing live and free
+        assert_eq!(ad.prefer_spare(&[false; 6], &[0, 2]), None);
+    }
+}

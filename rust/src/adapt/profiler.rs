@@ -1,0 +1,485 @@
+//! Online straggler profiling from the live cluster-event stream.
+//!
+//! [`OnlineProfiler`] is the *observe* leg of the adaptive control
+//! plane. It folds `WorkerDone` arrivals into two views of worker
+//! delay:
+//!
+//! 1. a sliding window of per-round completion-time rows — an
+//!    exponentially-aged extension of [`DelayProfile`] sharing its
+//!    `Arc`'d matrix representation, which the background re-fit
+//!    ([`crate::adapt::Refitter`]) replays through the real round
+//!    protocol; and
+//! 2. per-worker exponentially-weighted **fast** (recent) and **slow**
+//!    (historical) delay means, whose relative divergence detects
+//!    straggler-regime shifts.
+//!
+//! All observed times are normalized to the profile's base load with
+//! the Fig.-16 adjustment `t − (load − base)·α`, where `α` is re-fitted
+//! online from observed (load, time) points via
+//! [`DelayProfile::fit_alpha`] — the same slope the Appendix-J probe
+//! fits offline. Workers cut by the μ-rule whose results never arrived
+//! by round close are filled with a penalty multiple of the round's
+//! slowest observed finish, so the replayed profile still "remembers"
+//! that waiting on them was expensive.
+//!
+//! The profiler is purely observational: it draws no randomness and
+//! never reorders scheduler work, so enabling it cannot perturb a run's
+//! protocol outcome.
+
+use crate::probe::DelayProfile;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+/// Knobs of the online profiler (window + decay, regime-shift
+/// detection, cut-straggler penalty, α re-fit).
+#[derive(Clone, Debug)]
+pub struct ProfilerConfig {
+    /// Per-round rows kept per job for re-fit snapshots (the profile
+    /// window).
+    pub window: usize,
+    /// Exponential weight of the *fast* (recent) per-worker delay mean.
+    pub fast_decay: f64,
+    /// Exponential weight of the *slow* (historical) per-worker delay
+    /// mean. Must be smaller than [`fast_decay`](Self::fast_decay) for
+    /// the divergence detector to see shifts.
+    pub slow_decay: f64,
+    /// Mean relative fast-vs-slow divergence above which a regime shift
+    /// is declared.
+    pub shift_threshold: f64,
+    /// A worker cut by the μ-rule (no result by round close) is charged
+    /// this multiple of the round's slowest *observed* finish.
+    pub cut_penalty: f64,
+    /// Load-slope α used until enough load spread has been observed to
+    /// fit one online (default: the simulator's calibrated slope).
+    pub alpha_fallback: f64,
+    /// Ring capacity of (load, time) calibration points for the online
+    /// α fit.
+    pub alpha_points: usize,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        ProfilerConfig {
+            window: 32,
+            fast_decay: 0.35,
+            slow_decay: 0.05,
+            shift_threshold: 0.35,
+            cut_penalty: 2.0,
+            alpha_fallback: 9.5,
+            alpha_points: 256,
+        }
+    }
+}
+
+/// One in-flight round: placement, logical loads, and the finish times
+/// observed so far (NaN = not yet arrived).
+#[derive(Debug)]
+struct OpenRound {
+    place: Vec<usize>,
+    loads: Vec<f64>,
+    finish: Vec<f64>,
+}
+
+/// Per-job window of normalized completion-time rows, in the job's
+/// *logical* worker coordinates (so a snapshot replays directly against
+/// candidate schemes of the job's own width).
+#[derive(Debug)]
+struct JobHistory {
+    n: usize,
+    base_load: f64,
+    rows: VecDeque<Vec<f64>>,
+}
+
+/// Online per-worker delay estimator (see the module docs).
+#[derive(Debug)]
+pub struct OnlineProfiler {
+    cfg: ProfilerConfig,
+    /// Open (job, cluster-round) records awaiting their close.
+    open: BTreeMap<(usize, u64), OpenRound>,
+    /// Per-job row windows (logical coordinates).
+    histories: Vec<Option<JobHistory>>,
+    /// Per-*physical*-worker EW means (shared across jobs).
+    fast: Vec<f64>,
+    slow: Vec<f64>,
+    seen: Vec<bool>,
+    /// (load, observed time) ring for the online α fit.
+    points: Vec<(f64, f64)>,
+    point_cursor: usize,
+    alpha_hat: f64,
+    rounds_folded: u64,
+    shifts: u64,
+}
+
+impl OnlineProfiler {
+    /// New profiler; capacities grow lazily with the jobs and workers
+    /// it observes.
+    pub fn new(cfg: ProfilerConfig) -> Self {
+        let alpha_hat = cfg.alpha_fallback;
+        OnlineProfiler {
+            cfg,
+            open: BTreeMap::new(),
+            histories: Vec::new(),
+            fast: Vec::new(),
+            slow: Vec::new(),
+            seen: Vec::new(),
+            points: Vec::new(),
+            point_cursor: 0,
+            alpha_hat,
+            rounds_folded: 0,
+            shifts: 0,
+        }
+    }
+
+    /// Record a round fan-out: `place[i]` is the physical worker
+    /// serving logical worker `i`, `loads[i]` its normalized load.
+    pub fn register_round(&mut self, job: usize, round: u64, place: &[usize], loads: &[f64]) {
+        debug_assert_eq!(place.len(), loads.len());
+        self.open.insert(
+            (job, round),
+            OpenRound {
+                place: place.to_vec(),
+                loads: loads.to_vec(),
+                finish: vec![f64::NAN; loads.len()],
+            },
+        );
+    }
+
+    /// Record a `WorkerDone` arrival for logical worker `logical` of an
+    /// open round. Arrivals for already-folded rounds are ignored.
+    pub fn observe(&mut self, job: usize, round: u64, logical: usize, finish_s: f64) {
+        if let Some(rec) = self.open.get_mut(&(job, round)) {
+            if logical < rec.finish.len() && rec.finish[logical].is_nan() {
+                rec.finish[logical] = finish_s;
+            }
+        }
+    }
+
+    /// Fold a closed round into the profile: normalize observed times,
+    /// penalty-fill cut workers, update the EW means, and run shift
+    /// detection. Returns `true` when this fold crossed the
+    /// regime-shift threshold (at which point the row windows are
+    /// cleared so re-fits see only the new regime).
+    pub fn fold_round(&mut self, job: usize, round: u64) -> bool {
+        let Some(rec) = self.open.remove(&(job, round)) else { return false };
+        let n = rec.loads.len();
+        let max_obs = rec
+            .finish
+            .iter()
+            .cloned()
+            .filter(|f| f.is_finite())
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !max_obs.is_finite() {
+            return false; // nothing arrived: nothing to learn
+        }
+        let base_load = 1.0 / n as f64;
+        let alpha = self.alpha_hat;
+        let mut row = Vec::with_capacity(n);
+        for i in 0..n {
+            let observed = rec.finish[i].is_finite();
+            let t = if observed { rec.finish[i] } else { self.cfg.cut_penalty * max_obs };
+            if observed {
+                self.push_point(rec.loads[i], t);
+            }
+            row.push((t - (rec.loads[i] - base_load) * alpha).max(1e-6));
+        }
+
+        // EW means per physical worker (worker-index order: invariant
+        // to event-arrival order within the round).
+        for (i, &tn) in row.iter().enumerate() {
+            let w = rec.place[i];
+            if w >= self.fast.len() {
+                self.fast.resize(w + 1, 0.0);
+                self.slow.resize(w + 1, 0.0);
+                self.seen.resize(w + 1, false);
+            }
+            if !self.seen[w] {
+                self.seen[w] = true;
+                self.fast[w] = tn;
+                self.slow[w] = tn;
+            } else {
+                self.fast[w] += self.cfg.fast_decay * (tn - self.fast[w]);
+                self.slow[w] += self.cfg.slow_decay * (tn - self.slow[w]);
+            }
+        }
+
+        if job >= self.histories.len() {
+            self.histories.resize_with(job + 1, || None);
+        }
+        let h = self.histories[job]
+            .get_or_insert_with(|| JobHistory { n, base_load, rows: VecDeque::new() });
+        if h.n == n {
+            h.rows.push_back(row);
+            while h.rows.len() > self.cfg.window {
+                h.rows.pop_front();
+            }
+        }
+        self.rounds_folded += 1;
+        self.refit_alpha();
+
+        // Regime-shift detection: mean relative fast-vs-slow divergence.
+        let (mut div, mut cnt) = (0.0, 0usize);
+        for w in 0..self.seen.len() {
+            if self.seen[w] {
+                div += (self.fast[w] - self.slow[w]).abs() / self.slow[w].max(1e-9);
+                cnt += 1;
+            }
+        }
+        if cnt > 0 && div / cnt as f64 > self.cfg.shift_threshold {
+            // Re-anchor history at the new regime so the detector fires
+            // once per shift, and drop cross-regime rows: re-fits must
+            // not average the old world into the new one.
+            self.slow.copy_from_slice(&self.fast);
+            for h in self.histories.iter_mut().flatten() {
+                h.rows.clear();
+            }
+            self.shifts += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Snapshot the job's row window as a replayable [`DelayProfile`]
+    /// (O(window × n) copy into a fresh `Arc` matrix; candidate replays
+    /// then clone it O(1)). `None` until at least one row is folded.
+    pub fn snapshot(&self, job: usize) -> Option<DelayProfile> {
+        let h = self.histories.get(job)?.as_ref()?;
+        if h.rows.is_empty() {
+            return None;
+        }
+        Some(DelayProfile {
+            n: h.n,
+            base_load: h.base_load,
+            times: Arc::new(h.rows.iter().cloned().collect()),
+        })
+    }
+
+    /// Rows currently in the job's window (resets on regime shift).
+    pub fn job_rounds(&self, job: usize) -> usize {
+        self.histories.get(job).and_then(|h| h.as_ref()).map_or(0, |h| h.rows.len())
+    }
+
+    /// Current load-slope estimate α (the fallback until enough load
+    /// spread has been observed to fit one).
+    pub fn alpha(&self) -> f64 {
+        self.alpha_hat
+    }
+
+    /// Normalized EW *fast* delay mean of a physical worker, `None`
+    /// until it has been observed at least once.
+    pub fn fast_mean(&self, worker: usize) -> Option<f64> {
+        (worker < self.seen.len() && self.seen[worker]).then(|| self.fast[worker])
+    }
+
+    /// Rounds folded so far.
+    pub fn rounds_folded(&self) -> u64 {
+        self.rounds_folded
+    }
+
+    /// Regime shifts detected so far.
+    pub fn shifts(&self) -> u64 {
+        self.shifts
+    }
+
+    fn push_point(&mut self, load: f64, t: f64) {
+        if self.points.len() < self.cfg.alpha_points {
+            self.points.push((load, t));
+        } else {
+            self.points[self.point_cursor] = (load, t);
+            self.point_cursor = (self.point_cursor + 1) % self.cfg.alpha_points;
+        }
+    }
+
+    /// Re-fit α from the calibration ring; keeps the current estimate
+    /// unless the points span enough load range for a meaningful slope.
+    fn refit_alpha(&mut self) {
+        if self.points.len() < 8 {
+            return;
+        }
+        let lo = self.points.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+        let hi = self.points.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+        if hi - lo < 0.01 {
+            return;
+        }
+        let a = DelayProfile::fit_alpha(&self.points);
+        if a.is_finite() && a > 0.0 {
+            self.alpha_hat = a;
+        }
+    }
+}
+
+/// Standalone observer wiring: drive the profiler straight from a
+/// scheduler (or trainer) run's round boundaries, with no adaptive
+/// controller around it. Placement is the identity here — physical ids
+/// equal logical ids — which matches any single-job run anchored at
+/// worker 0; the [`crate::sched::JobScheduler`]'s built-in adaptation
+/// path uses the richer placement-aware hooks instead.
+impl crate::sched::RoundObserver for OnlineProfiler {
+    fn round_started(
+        &mut self,
+        job: crate::cluster::JobId,
+        _session: &crate::session::SgcSession,
+        plan: &crate::session::RoundPlan,
+    ) -> crate::Result<()> {
+        let place: Vec<usize> = (0..plan.loads.len()).collect();
+        self.register_round(job, plan.round as u64, &place, &plan.loads);
+        Ok(())
+    }
+
+    fn round_closed(
+        &mut self,
+        job: crate::cluster::JobId,
+        session: &crate::session::SgcSession,
+        plan: &crate::session::RoundPlan,
+        _events: &[crate::session::SessionEvent],
+    ) -> crate::Result<()> {
+        let round = plan.round as u64;
+        for (logical, finish) in session.last_finish().iter().enumerate() {
+            if let Some(f) = finish {
+                self.observe(job, round, logical, *f);
+            }
+        }
+        self.fold_round(job, round);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn identity_place(n: usize) -> Vec<usize> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn folds_rows_and_snapshots() {
+        let mut p = OnlineProfiler::new(ProfilerConfig::default());
+        let n = 4;
+        for r in 1..=5u64 {
+            p.register_round(0, r, &identity_place(n), &vec![0.25; n]);
+            for w in 0..n {
+                p.observe(0, r, w, 1.0 + w as f64 * 0.1);
+            }
+            assert!(!p.fold_round(0, r));
+        }
+        assert_eq!(p.job_rounds(0), 5);
+        let snap = p.snapshot(0).expect("rows folded");
+        assert_eq!(snap.n, n);
+        assert_eq!(snap.rounds(), 5);
+        // loads at base (1/n): normalization is the identity
+        assert!((snap.times[0][1] - 1.1).abs() < 1e-12);
+        assert_eq!(p.rounds_folded(), 5);
+    }
+
+    #[test]
+    fn cut_workers_are_penalty_filled() {
+        let mut p = OnlineProfiler::new(ProfilerConfig::default());
+        let n = 3;
+        p.register_round(0, 1, &identity_place(n), &vec![1.0 / 3.0; n]);
+        p.observe(0, 1, 0, 1.0);
+        p.observe(0, 1, 1, 2.0);
+        // worker 2 cut: never reported
+        p.fold_round(0, 1);
+        let snap = p.snapshot(0).unwrap();
+        assert!((snap.times[0][2] - 4.0).abs() < 1e-12, "2.0 × slowest observed (2.0)");
+    }
+
+    #[test]
+    fn late_observations_for_folded_rounds_are_dropped() {
+        let mut p = OnlineProfiler::new(ProfilerConfig::default());
+        p.register_round(0, 1, &[0, 1], &[0.5, 0.5]);
+        p.observe(0, 1, 0, 1.0);
+        p.fold_round(0, 1);
+        p.observe(0, 1, 1, 9.0); // round already folded: no-op
+        assert_eq!(p.job_rounds(0), 1);
+    }
+
+    #[test]
+    fn regime_shift_fires_once_and_clears_windows() {
+        let cfg = ProfilerConfig::default();
+        let mut p = OnlineProfiler::new(cfg);
+        let n = 4;
+        let quiet = vec![1.0; n];
+        let mut r = 0u64;
+        let mut feed = |p: &mut OnlineProfiler, times: &[f64]| -> bool {
+            r += 1;
+            p.register_round(0, r, &identity_place(n), &vec![0.25; n]);
+            for (w, &t) in times.iter().enumerate() {
+                p.observe(0, r, w, t);
+            }
+            p.fold_round(0, r)
+        };
+        for _ in 0..12 {
+            assert!(!feed(&mut p, &quiet), "stationary profile must not shift");
+        }
+        // half the fleet becomes 6× slower: fast mean diverges from slow
+        let slow_world = [6.0, 6.0, 1.0, 1.0];
+        let mut fired = 0;
+        for _ in 0..10 {
+            if feed(&mut p, &slow_world) {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 1, "one shift per regime change");
+        assert_eq!(p.shifts(), 1);
+        // window restarted at the shift
+        assert!(p.job_rounds(0) < 10);
+    }
+
+    #[test]
+    fn alpha_is_refit_from_load_spread() {
+        let mut p = OnlineProfiler::new(ProfilerConfig::default());
+        assert_eq!(p.alpha(), 9.5, "fallback before any fit");
+        let n = 2;
+        let mut r = 0u64;
+        // perfect linear law t = 1 + 3·load over a wide load spread
+        for &load in &[0.1, 0.2, 0.4, 0.8, 0.1, 0.3, 0.5, 0.7] {
+            r += 1;
+            p.register_round(0, r, &identity_place(n), &vec![load; n]);
+            for w in 0..n {
+                p.observe(0, r, w, 1.0 + 3.0 * load);
+            }
+            p.fold_round(0, r);
+        }
+        assert!((p.alpha() - 3.0).abs() < 1e-9, "alpha {}", p.alpha());
+    }
+
+    #[test]
+    fn fast_means_rank_workers() {
+        let mut p = OnlineProfiler::new(ProfilerConfig::default());
+        for r in 1..=6u64 {
+            p.register_round(0, r, &[2, 5], &[0.5, 0.5]);
+            p.observe(0, r, 0, 1.0); // physical 2 is fast
+            p.observe(0, r, 1, 3.0); // physical 5 is slow
+            p.fold_round(0, r);
+        }
+        assert!(p.fast_mean(2).unwrap() < p.fast_mean(5).unwrap());
+        assert_eq!(p.fast_mean(0), None, "never observed");
+    }
+
+    #[test]
+    fn round_observer_impl_profiles_a_scheduler_run() {
+        use crate::cluster::{LatencyParams, SimCluster};
+        use crate::coding::SchemeConfig;
+        use crate::sched::{JobScheduler, JobSpec};
+        use crate::session::SessionConfig;
+        use crate::straggler::models::NoStragglers;
+
+        let n = 6;
+        let mut sim =
+            SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 11);
+        let mut sched = JobScheduler::new(&mut sim);
+        sched
+            .admit(&JobSpec {
+                scheme: SchemeConfig::gc(n, 1),
+                session: SessionConfig { jobs: 5, ..Default::default() },
+            })
+            .unwrap();
+        let mut profiler = OnlineProfiler::new(ProfilerConfig::default());
+        sched.run_observed(&mut profiler).unwrap();
+        assert_eq!(profiler.rounds_folded(), 5);
+        assert_eq!(profiler.job_rounds(0), 5);
+        assert!(profiler.snapshot(0).is_some());
+        assert!((0..n).all(|w| profiler.fast_mean(w).is_some()));
+    }
+}

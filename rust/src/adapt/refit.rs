@@ -1,0 +1,295 @@
+//! Incremental background re-fit of scheme parameters.
+//!
+//! [`Refitter`] is the *estimate/re-fit* leg of the adaptive control
+//! plane: it re-runs the Appendix-J candidate search
+//! ([`grid_search`]) against the live profile, but **amortized** — at
+//! most `budget` candidates are evaluated per scheduler round close, so
+//! a full pass over the (coarsened) grid spreads across several rounds
+//! and never blocks the reactor hot path. Candidate replays go through
+//! the same [`crate::probe::ProfileCluster`] + session machinery as the
+//! offline search (and therefore share the process-wide
+//! [`crate::coding::CodePlanCache`]), so an online estimate and an
+//! offline probe of the same candidate agree exactly.
+
+use super::profiler::OnlineProfiler;
+use crate::coding::{SchemeConfig, SchemeKind};
+use crate::probe::{grid_search, DelayProfile, SearchSpace};
+
+/// Result of one completed re-fit pass over the candidate grid.
+#[derive(Clone, Debug)]
+pub struct FitOutcome {
+    /// Best candidate of the pass (may be the incumbent itself).
+    pub best: SchemeConfig,
+    /// Estimated runtime of the best candidate on the pass profile.
+    pub best_runtime_s: f64,
+    /// Estimated runtime of the incumbent on the same profile.
+    pub incumbent_runtime_s: f64,
+    /// Profile rounds the pass replayed.
+    pub profile_rounds: usize,
+}
+
+impl FitOutcome {
+    /// Predicted fractional runtime improvement of `best` over the
+    /// incumbent (0 when the incumbent is already best).
+    pub fn predicted_gain(&self) -> f64 {
+        if self.incumbent_runtime_s <= 0.0 {
+            return 0.0;
+        }
+        ((self.incumbent_runtime_s - self.best_runtime_s) / self.incumbent_runtime_s).max(0.0)
+    }
+}
+
+/// In-flight pass state: one frozen profile snapshot, runtimes filled
+/// candidate by candidate.
+#[derive(Debug)]
+struct PassState {
+    profile: DelayProfile,
+    alpha: f64,
+    runtimes: Vec<f64>,
+}
+
+/// Budgeted re-fit of one job's scheme parameters (see module docs).
+#[derive(Debug)]
+pub struct Refitter {
+    incumbent: SchemeConfig,
+    candidates: Vec<SchemeConfig>,
+    budget: usize,
+    estimate_jobs: usize,
+    pass: Option<PassState>,
+    evaluated: u64,
+}
+
+impl Refitter {
+    /// Re-fitter for `incumbent`'s scheme family, evaluating at most
+    /// `budget` candidates per [`tick`](Self::tick), each estimated by
+    /// replaying `estimate_jobs` jobs of the profile.
+    pub fn new(incumbent: &SchemeConfig, budget: usize, estimate_jobs: usize) -> Self {
+        Refitter {
+            incumbent: incumbent.clone(),
+            candidates: refit_candidates(incumbent),
+            budget: budget.max(1),
+            estimate_jobs: estimate_jobs.max(1),
+            pass: None,
+            evaluated: 0,
+        }
+    }
+
+    /// Whether a pass is currently in flight.
+    pub fn pass_active(&self) -> bool {
+        self.pass.is_some()
+    }
+
+    /// Candidates in the (coarsened) grid, incumbent included.
+    pub fn candidate_count(&self) -> usize {
+        self.candidates.len()
+    }
+
+    /// Total candidates evaluated over the re-fitter's lifetime.
+    pub fn evaluated(&self) -> u64 {
+        self.evaluated
+    }
+
+    /// Freeze a profile snapshot and start a pass over the grid.
+    /// Replaces any pass already in flight (used on regime shifts: a
+    /// stale-regime pass is worthless).
+    pub fn begin_pass(&mut self, profile: DelayProfile, alpha: f64) {
+        self.pass = Some(PassState { profile, alpha, runtimes: Vec::new() });
+    }
+
+    /// Drop the in-flight pass, if any.
+    pub fn abort_pass(&mut self) {
+        self.pass = None;
+    }
+
+    /// Evaluate the next `budget` candidates of the in-flight pass via
+    /// a [`grid_search`] slice. Returns the pass outcome once every
+    /// candidate has been estimated; `None` while the pass (or no pass)
+    /// is still in flight.
+    pub fn tick(&mut self) -> Option<FitOutcome> {
+        let pass = self.pass.as_mut()?;
+        let lo = pass.runtimes.len();
+        let hi = (lo + self.budget).min(self.candidates.len());
+        if lo < hi {
+            let slice = &self.candidates[lo..hi];
+            let ranked = grid_search(slice, &pass.profile, pass.alpha, self.estimate_jobs);
+            for c in slice {
+                let est = ranked
+                    .iter()
+                    .find(|r| r.config == *c)
+                    .expect("grid_search returns every candidate")
+                    .estimated_runtime_s;
+                pass.runtimes.push(est);
+            }
+            self.evaluated += (hi - lo) as u64;
+        }
+        if pass.runtimes.len() < self.candidates.len() {
+            return None;
+        }
+        // Pass complete: pick the minimum (stable tie-break on grid
+        // order, so at equal estimates the incumbent — index 0 — wins).
+        let mut best = 0usize;
+        for (i, &rt) in pass.runtimes.iter().enumerate() {
+            if rt < pass.runtimes[best] {
+                best = i;
+            }
+        }
+        let outcome = FitOutcome {
+            best: self.candidates[best].clone(),
+            best_runtime_s: pass.runtimes[best],
+            incumbent_runtime_s: pass.runtimes[0],
+            profile_rounds: pass.profile.rounds(),
+        };
+        self.pass = None;
+        Some(outcome)
+    }
+
+    /// Convenience: start a pass from the profiler's current window for
+    /// `job` if none is in flight and the window holds at least
+    /// `min_rounds` rows.
+    pub fn maybe_begin(&mut self, profiler: &OnlineProfiler, job: usize, min_rounds: usize) {
+        if self.pass.is_some() || profiler.job_rounds(job) < min_rounds {
+            return;
+        }
+        if let Some(profile) = profiler.snapshot(job) {
+            self.begin_pass(profile, profiler.alpha());
+        }
+    }
+}
+
+/// The coarsened candidate grid for an incumbent's scheme family: the
+/// incumbent first, then same-kind candidates with `B` pinned and
+/// `W`/`λ` (or `s` for GC) swept over the paper ranges with λ and `s`
+/// on a power-of-two grid. Coarsening keeps a full pass within a few
+/// budgeted ticks; the swap hysteresis makes chasing the exact offline
+/// optimum unnecessary.
+pub fn refit_candidates(incumbent: &SchemeConfig) -> Vec<SchemeConfig> {
+    let n = incumbent.n;
+    let mut space = SearchSpace::paper_default(n);
+    space.lambda = pow2_grid((n / 8).max(8).min(n.saturating_sub(1)));
+    space.s = pow2_grid((n / 8).max(4));
+    let family: Vec<SchemeConfig> = match &incumbent.kind {
+        SchemeKind::Gc { .. } => space.gc_candidates(),
+        SchemeKind::GcRep { .. } => space
+            .gc_candidates()
+            .into_iter()
+            .map(|c| match c.kind {
+                SchemeKind::Gc { s } => SchemeConfig::gc_rep(n, s),
+                _ => unreachable!("gc_candidates yields Gc"),
+            })
+            .collect(),
+        SchemeKind::SrSgc { b, .. } => {
+            space.b = vec![*b];
+            space.sr_sgc_candidates()
+        }
+        SchemeKind::SrSgcRep { b, .. } => {
+            space.b = vec![*b];
+            space
+                .sr_sgc_candidates()
+                .into_iter()
+                .map(|c| match c.kind {
+                    SchemeKind::SrSgc { b, w, lambda } => SchemeConfig::sr_sgc_rep(n, b, w, lambda),
+                    _ => unreachable!("sr_sgc_candidates yields SrSgc"),
+                })
+                .collect()
+        }
+        SchemeKind::MSgc { b, .. } => {
+            space.b = vec![*b];
+            space.m_sgc_candidates()
+        }
+        SchemeKind::MSgcRep { b, .. } => {
+            space.b = vec![*b];
+            space
+                .m_sgc_candidates()
+                .into_iter()
+                .map(|c| match c.kind {
+                    SchemeKind::MSgc { b, w, lambda } => SchemeConfig::msgc_rep(n, b, w, lambda),
+                    _ => unreachable!("m_sgc_candidates yields MSgc"),
+                })
+                .collect()
+        }
+        // The uncoded baseline has no parameters to re-fit.
+        SchemeKind::Uncoded => Vec::new(),
+    };
+    let mut out = vec![incumbent.clone()];
+    for c in family {
+        if !out.contains(&c) {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// `1, 2, 4, … ≤ max` (always non-empty for `max ≥ 1`).
+fn pow2_grid(max: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut x = 1usize;
+    while x <= max {
+        v.push(x);
+        x *= 2;
+    }
+    if v.is_empty() {
+        v.push(1);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn flat_profile(n: usize, rounds: usize, t: f64) -> DelayProfile {
+        DelayProfile {
+            n,
+            base_load: 1.0 / n as f64,
+            times: Arc::new(vec![vec![t; n]; rounds]),
+        }
+    }
+
+    #[test]
+    fn candidate_grids_stay_in_family_and_start_at_incumbent() {
+        let inc = SchemeConfig::msgc(16, 1, 3, 2);
+        let cands = refit_candidates(&inc);
+        assert_eq!(cands[0], inc);
+        assert!(cands.len() > 1);
+        assert!(cands.iter().all(|c| matches!(c.kind, SchemeKind::MSgc { b: 1, .. })));
+        // no duplicates
+        for (i, a) in cands.iter().enumerate() {
+            assert!(!cands[i + 1..].contains(a), "duplicate {a:?}");
+        }
+        // rep-ness is preserved
+        let rep = refit_candidates(&SchemeConfig::gc_rep(16, 2));
+        assert!(rep.iter().all(|c| matches!(c.kind, SchemeKind::GcRep { .. })));
+        // uncoded has nothing to re-fit
+        assert_eq!(refit_candidates(&SchemeConfig::uncoded(16)).len(), 1);
+    }
+
+    #[test]
+    fn pass_is_amortized_over_budgeted_ticks() {
+        let inc = SchemeConfig::gc(16, 2);
+        let mut rf = Refitter::new(&inc, 2, 4);
+        let total = rf.candidate_count();
+        assert!(total > 2, "need multiple ticks for this test");
+        rf.begin_pass(flat_profile(16, 6, 1.0), 9.5);
+        let mut ticks = 0;
+        let outcome = loop {
+            ticks += 1;
+            if let Some(o) = rf.tick() {
+                break o;
+            }
+            assert!(ticks < 100, "pass never completed");
+        };
+        assert_eq!(ticks, total.div_ceil(2));
+        assert_eq!(rf.evaluated(), total as u64);
+        assert!(outcome.best_runtime_s <= outcome.incumbent_runtime_s);
+        assert!(outcome.predicted_gain() >= 0.0);
+        assert!(!rf.pass_active());
+    }
+
+    #[test]
+    fn tick_without_pass_is_a_no_op() {
+        let mut rf = Refitter::new(&SchemeConfig::gc(8, 1), 4, 4);
+        assert!(rf.tick().is_none());
+        assert_eq!(rf.evaluated(), 0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Hot-swap decision policy.
+//!
+//! [`SwapPolicy`] is the *decide* leg of the adaptive control plane: it
+//! turns a completed re-fit pass ([`FitOutcome`]) into an accept/reject
+//! decision, with hysteresis so a marginally-better estimate on a noisy
+//! profile never churns the scheme:
+//!
+//! * **margin** — the predicted fractional improvement must reach
+//!   `swap_margin`;
+//! * **cooldown** — at least `cooldown_rounds` round closes must have
+//!   passed since the job's last swap;
+//! * **shift gating** — by default a swap also requires a detected
+//!   straggler-regime shift since the last swap. A stationary profile
+//!   therefore *never* swaps, no matter how the estimates wobble — the
+//!   invariant the stationary golden test pins.
+
+use super::refit::FitOutcome;
+use crate::coding::SchemeConfig;
+
+/// Hysteresis policy for accepting a re-fitted scheme (see module docs).
+#[derive(Clone, Debug)]
+pub struct SwapPolicy {
+    /// Minimum predicted fractional runtime improvement (0.10 = 10 %).
+    pub swap_margin: f64,
+    /// Minimum round closes between two swaps of the same job.
+    pub cooldown_rounds: u64,
+    /// Require a detected regime shift since the last swap.
+    pub require_shift: bool,
+}
+
+impl Default for SwapPolicy {
+    fn default() -> Self {
+        SwapPolicy { swap_margin: 0.10, cooldown_rounds: 8, require_shift: true }
+    }
+}
+
+impl SwapPolicy {
+    /// Accept or reject a completed pass for a job whose current scheme
+    /// is `incumbent`. `rounds_since_swap` counts the job's round
+    /// closes since its last swap (or admission); `shift_armed` is
+    /// whether a regime shift has been detected since then. Returns the
+    /// accepted target and its predicted gain.
+    pub fn decide(
+        &self,
+        outcome: &FitOutcome,
+        incumbent: &SchemeConfig,
+        rounds_since_swap: u64,
+        shift_armed: bool,
+    ) -> Option<(SchemeConfig, f64)> {
+        if self.require_shift && !shift_armed {
+            return None;
+        }
+        if rounds_since_swap < self.cooldown_rounds {
+            return None;
+        }
+        if outcome.best == *incumbent {
+            return None;
+        }
+        let gain = outcome.predicted_gain();
+        if gain < self.swap_margin {
+            return None;
+        }
+        Some((outcome.best.clone(), gain))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(best: SchemeConfig, best_s: f64, inc_s: f64) -> FitOutcome {
+        FitOutcome { best, best_runtime_s: best_s, incumbent_runtime_s: inc_s, profile_rounds: 16 }
+    }
+
+    #[test]
+    fn margin_cooldown_and_shift_all_gate() {
+        let pol = SwapPolicy::default();
+        let inc = SchemeConfig::gc(16, 1);
+        let better = SchemeConfig::gc(16, 4);
+        let good = outcome(better.clone(), 8.0, 10.0); // 20 % predicted gain
+
+        // all conditions met
+        let (to, gain) = pol.decide(&good, &inc, 20, true).expect("swap accepted");
+        assert_eq!(to, better);
+        assert!((gain - 0.2).abs() < 1e-12);
+
+        // no shift since last swap
+        assert!(pol.decide(&good, &inc, 20, false).is_none());
+        // cooldown not elapsed
+        assert!(pol.decide(&good, &inc, 3, true).is_none());
+        // gain below margin
+        let meh = outcome(better.clone(), 9.5, 10.0); // 5 % < 10 %
+        assert!(pol.decide(&meh, &inc, 20, true).is_none());
+        // best is the incumbent itself
+        let same = outcome(inc.clone(), 8.0, 10.0);
+        assert!(pol.decide(&same, &inc, 20, true).is_none());
+    }
+
+    #[test]
+    fn shift_gate_can_be_disabled() {
+        let pol = SwapPolicy { require_shift: false, ..Default::default() };
+        let inc = SchemeConfig::gc(16, 1);
+        let good = outcome(SchemeConfig::gc(16, 4), 8.0, 10.0);
+        assert!(pol.decide(&good, &inc, 20, false).is_some());
+    }
+}

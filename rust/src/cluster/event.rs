@@ -43,6 +43,17 @@ pub type JobId = usize;
 /// their jobs from 0).
 pub const SYNC_JOB: JobId = usize::MAX;
 
+/// Sentinel load marking a worker slot as *not part of a submission*:
+/// the worker is a spare (or a retired slot) outside the submitting
+/// job's placement. Backends skip these slots entirely — no task is
+/// queued, no frame is sent, no completion event is owed — which is
+/// what keeps wide spare pools (cluster capacity ≫ scheme `n`) free of
+/// per-round no-op traffic. Distinct from a genuine `0.0` load, which
+/// some schemes legitimately assign (an M-SGC no-op round slot still
+/// reports back). Any negative load is treated as unplaced; this
+/// constant is the canonical spelling.
+pub const UNPLACED: f64 = -1.0;
+
 /// One streamed backend event.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ClusterEvent {
@@ -112,6 +123,12 @@ pub trait EventCluster {
     /// finishing its queued work). `(job, round)` must be unique among
     /// in-flight submissions; `loads.len()` must equal
     /// [`n`](Self::n).
+    ///
+    /// A `loads[i]` of [`UNPLACED`] (any negative value) marks worker
+    /// `i` as outside this submission: the backend must skip the slot
+    /// entirely — no task queued, no frame sent, no `WorkerDone` or
+    /// `WorkerDead` owed for it. A `0.0` load, by contrast, is a real
+    /// (no-op) assignment that reports back like any other.
     ///
     /// Submitting a later round of a job whose earlier tasks are still
     /// queued *preempts* those tasks on simulated backends — the master

@@ -9,7 +9,7 @@ pub mod sim;
 pub mod storage;
 pub mod trace;
 
-pub use event::{ClusterEvent, EventCluster, JobId, SyncAdapter, SYNC_JOB};
+pub use event::{ClusterEvent, EventCluster, JobId, SyncAdapter, SYNC_JOB, UNPLACED};
 pub use latency::LatencyParams;
 pub use sim::{RoundSample, SimCluster};
 pub use storage::StorageParams;

@@ -149,8 +149,13 @@ impl SimCluster {
         state.extend_from_slice(&drawn);
         service.clear();
         for i in 0..self.n {
+            // UNPLACED slots still draw, at the load a zero-load spare
+            // assignment used to carry — the RNG stream (and thus every
+            // other worker's time) is byte-identical whether or not a
+            // submission places all n workers; `submit` simply never
+            // queues the unplaced task.
             service.push(self.latency.sample(
-                loads[i],
+                loads[i].max(0.0),
                 state[i],
                 self.burst_age[i],
                 &mut self.rng,
@@ -210,7 +215,13 @@ impl EventCluster for SimCluster {
                 }
                 q.retain(|t| t.job != job);
             }
-            q.push_back(SimTask { job, round, submit_s: clock, service_s: service[w] });
+            // An UNPLACED slot owes no task (and no completion event):
+            // the stale-task preemption above still applies — a worker
+            // that just migrated out of the job's placement drops the
+            // superseded assignment — but nothing new is queued.
+            if loads[w] >= 0.0 {
+                q.push_back(SimTask { job, round, submit_s: clock, service_s: service[w] });
+            }
         }
         self.service_scratch = service;
         self.state_scratch = state;
@@ -445,6 +456,36 @@ mod tests {
         let evs = drain(&mut c);
         assert_eq!(evs.len(), 2);
         assert!(c.now_s() > 1.5);
+    }
+
+    #[test]
+    fn unplaced_slots_owe_no_events_and_leave_the_rng_stream_intact() {
+        use super::super::event::UNPLACED;
+        let n = 4;
+        let mk = || SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 9);
+        let mut all = mk();
+        all.submit(0, 1, &vec![0.05; n]);
+        let mut reference = vec![f64::NAN; n];
+        for e in drain(&mut all) {
+            if let ClusterEvent::WorkerDone { worker, finish_s, .. } = e {
+                reference[worker] = finish_s;
+            }
+        }
+        let mut part = mk();
+        let mut loads = vec![0.05; n];
+        loads[2] = UNPLACED;
+        part.submit(0, 1, &loads);
+        let evs = drain(&mut part);
+        assert_eq!(evs.len(), n - 1, "unplaced slot owes no completion");
+        for e in evs {
+            if let ClusterEvent::WorkerDone { worker, finish_s, .. } = e {
+                assert_ne!(worker, 2, "unplaced slot must not report");
+                assert_eq!(
+                    finish_s, reference[worker],
+                    "skipping a slot must not shift the other workers' RNG draws"
+                );
+            }
+        }
     }
 
     #[test]

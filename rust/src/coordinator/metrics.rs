@@ -114,6 +114,78 @@ impl RunReport {
     }
 }
 
+/// Merge the per-segment reports of a hot-swapped run (see
+/// [`crate::adapt`]) into one continuous [`RunReport`].
+///
+/// `assigned[i]` is the number of paper-jobs segment `i` actually
+/// *owned*: the truncation cap for every swapped-away segment, the
+/// segment's full job count for the final one. Rounds are renumbered
+/// into one continuous sequence, job ids and completion clocks are
+/// offset by the preceding segments' totals, and the straggler patterns
+/// are concatenated. Decodes a truncated segment achieved for jobs
+/// beyond its cap are dropped — those jobs were handed to (and are
+/// reported by) the successor segment.
+pub fn merge_segments(segments: &[RunReport], assigned: &[usize]) -> RunReport {
+    assert_eq!(segments.len(), assigned.len(), "one assigned-job count per segment");
+    assert!(!segments.is_empty(), "at least one segment");
+    if segments.len() == 1 {
+        return segments[0].clone();
+    }
+    let n = segments[0].true_pattern.n;
+    let last = segments.last().expect("non-empty");
+    let mut rounds = Vec::new();
+    let mut job_completion_s = Vec::new();
+    let mut true_pattern = Pattern::new(n);
+    let mut effective_pattern = Pattern::new(n);
+    let mut detected_pattern = Pattern::new(n);
+    let mut violations = 0usize;
+    let mut clock_base = 0.0f64;
+    let mut round_base = 0usize;
+    let mut job_base = 0usize;
+    for (seg, &cap) in segments.iter().zip(assigned) {
+        for r in &seg.rounds {
+            rounds.push(RoundRecord {
+                round: round_base + r.round,
+                jobs_completed: r
+                    .jobs_completed
+                    .iter()
+                    .filter(|&&t| t <= cap)
+                    .map(|&t| job_base + t)
+                    .collect(),
+                ..r.clone()
+            });
+        }
+        job_completion_s
+            .extend(seg.job_completion_s.iter().take(cap).map(|&t| clock_base + t));
+        for p in [
+            (&seg.true_pattern, &mut true_pattern),
+            (&seg.effective_pattern, &mut effective_pattern),
+            (&seg.detected_pattern, &mut detected_pattern),
+        ] {
+            for row in &p.0.rows {
+                p.1.push_round(row.clone());
+            }
+        }
+        violations += seg.deadline_violations;
+        clock_base += seg.total_runtime_s;
+        round_base += seg.rounds.len();
+        job_base += cap;
+    }
+    RunReport {
+        scheme: segments.iter().map(|s| s.scheme.as_str()).collect::<Vec<_>>().join("->"),
+        load: last.load,
+        delay: last.delay,
+        jobs: job_base,
+        total_runtime_s: clock_base,
+        rounds,
+        job_completion_s,
+        deadline_violations: violations,
+        true_pattern,
+        effective_pattern,
+        detected_pattern,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +240,35 @@ mod tests {
         assert_eq!(r.completion_curve(), vec![(1.0, 0), (3.0, 2), (6.0, 3)]);
         assert_eq!(r.waitout_rounds(), 1);
         assert!((r.mean_round_s() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_segments_renumbers_and_offsets() {
+        // segment 1 owned 2 jobs (cap 2; its round-3 decode of job 3 was
+        // beyond the cap and belongs to the successor), segment 2 the rest
+        let a = mk_report();
+        let mut b = mk_report();
+        b.scheme = "next".into();
+        b.jobs = 2;
+        b.rounds.truncate(2);
+        b.job_completion_s = vec![1.0, 3.0];
+        b.total_runtime_s = 3.0;
+        let merged = merge_segments(&[a.clone(), b], &[2, 2]);
+        assert_eq!(merged.scheme, "test->next");
+        assert_eq!(merged.jobs, 4);
+        assert!((merged.total_runtime_s - 9.0).abs() < 1e-12);
+        assert_eq!(merged.rounds.len(), 5);
+        // continuous round numbering
+        assert_eq!(merged.rounds.iter().map(|r| r.round).collect::<Vec<_>>(), vec![1, 2, 3, 4, 5]);
+        // beyond-cap decode (job 3 of segment 1) dropped; successor jobs offset
+        assert_eq!(merged.rounds[1].jobs_completed, vec![1, 2]);
+        assert!(merged.rounds[2].jobs_completed.is_empty());
+        assert_eq!(merged.rounds[3].jobs_completed, vec![3, 4]);
+        // completions: first cap entries of each, successor offset by 6.0
+        assert_eq!(merged.job_completion_s, vec![3.0, 3.0, 7.0, 9.0]);
+        // single segment merges to itself
+        let solo = merge_segments(&[a.clone()], &[3]);
+        assert_eq!(format!("{solo:?}"), format!("{a:?}"));
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod metrics;
 
 pub use crate::session::{SessionConfig as RunConfig, WaitPolicy};
 pub use master::Master;
-pub use metrics::{RoundRecord, RunReport};
+pub use metrics::{merge_segments, RoundRecord, RunReport};

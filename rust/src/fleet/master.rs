@@ -533,6 +533,44 @@ impl FleetCluster {
                 self.slots.len()
             );
         }
+        // Mid-round rejoin: re-send every Assign the worker still owes a
+        // Result for. A rejoiner that answers before the open round's
+        // μ-cutoff costs the run nothing instead of one straggler cut —
+        // the per-round checksum log outlives retirement, so the
+        // replayed Result verifies exactly like the original would
+        // have. Timed-out rounds are past saving and skipped.
+        if rejoin && self.started {
+            let mut replayed = 0usize;
+            for seq in 0..self.round_starts.len() {
+                if id < self.assigned_log[seq].len()
+                    && self.assigned_log[seq][id]
+                    && self.finish_log[seq][id].is_none()
+                    && !self.timeout_emitted[seq]
+                {
+                    let load = self.loads_log[seq][id];
+                    let chunks = vec![(seq + 1) as u32, id as u32, (load * 1e6) as u32];
+                    let frame = Frame::Assign {
+                        round: (seq + 1) as u32,
+                        work_units: load,
+                        chunks,
+                    };
+                    let sent = match &mut self.slots[id].conn {
+                        Some(c) => c.send(&frame),
+                        None => false,
+                    };
+                    if !sent {
+                        self.retire(id, "assign replay write failed");
+                        return;
+                    }
+                    replayed += 1;
+                }
+            }
+            if replayed > 0 {
+                eprintln!(
+                    "fleet master: replayed {replayed} open assignment(s) to rejoined worker {id}"
+                );
+            }
+        }
         // a worker may queue heartbeats right behind its Hello; they are
         // already buffered, so no readiness event will re-announce them
         self.drain_slot_frames(id);
@@ -794,7 +832,9 @@ impl FleetCluster {
                 finish.iter().flatten().cloned().fold(0.0f64, f64::max).max(1e-3);
             // strictly beyond any μ-cutoff: κ ≤ worst ⇒ (1+μ)·2·worst > (1+μ)·κ
             let missing_fill = (1.0 + mu.max(0.0)) * worst * 2.0;
-            let mut lrow = loads.clone();
+            // traces replay through load-driven samplers: clamp UNPLACED
+            // markers to a plain zero load
+            let mut lrow: Vec<f64> = loads.iter().map(|&l| l.max(0.0)).collect();
             lrow.resize(cap, 0.0);
             let mut frow: Vec<f64> =
                 finish.iter().map(|f| f.unwrap_or(missing_fill)).collect();
@@ -885,9 +925,11 @@ impl EventCluster for FleetCluster {
     /// frame, a `base_s` minitask): a `0.0` load is *not* proof the
     /// worker is outside the job — M-SGC legitimately assigns noop
     /// rounds (load 0) to placed workers and still expects their
-    /// completion times, so the master cannot skip them without a
-    /// spare-aware submit API (ROADMAP). The cost is that elastic
-    /// spares stay warm serving trivial rounds.
+    /// completion times. Workers the job genuinely does not place are
+    /// marked with [`UNPLACED`](crate::cluster::UNPLACED) (any negative
+    /// load) by the scheduler and skipped entirely: no frame, no
+    /// `assigned_log` entry, no owed `WorkerDead` — wide spare pools
+    /// cost no per-round traffic.
     fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
         assert_eq!(loads.len(), self.slots.len(), "loads/fleet size mismatch");
         assert!(!self.shut_down, "submit on a shut-down fleet");
@@ -902,6 +944,10 @@ impl EventCluster for FleetCluster {
         self.timeout_emitted.push(false);
         self.sum_log.push(vec![0; cap]);
         for worker in 0..cap {
+            if loads[worker] < 0.0 {
+                // UNPLACED: outside this submission — owes nothing
+                continue;
+            }
             let mut lost = !self.slots[worker].usable();
             if !lost {
                 // The metadata protocol ships no real chunk ids; a

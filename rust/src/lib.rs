@@ -37,7 +37,11 @@
 //! the shared event stream. The TCP fleet master is a single-threaded
 //! `poll(2)` reactor with an *elastic* worker roster: late joiners are
 //! admitted mid-run, dead workers are retired, and the scheduler
-//! re-places in-flight sessions onto live spares. Blocking callers
+//! re-places in-flight sessions onto live spares. An adaptive control
+//! plane ([`adapt`]) profiles worker delays from the same event stream,
+//! re-fits scheme parameters in the background, and hot-swaps a job's
+//! scheme at a job boundary when the re-fit predicts a margin-clearing
+//! improvement (`sgc serve --adapt`). Blocking callers
 //! ([`session::drive`], trace recording, the probe) bridge through
 //! [`cluster::SyncAdapter`]. See `rust/DESIGN.md` (and
 //! `rust/docs/OPERATIONS.md` for the operator runbook).
@@ -134,6 +138,7 @@
 
 #![warn(missing_docs)]
 
+pub mod adapt;
 pub mod bench_harness;
 pub mod cluster;
 pub mod coding;

@@ -6,6 +6,8 @@
 //! sgc serve  --jobs 4 --scheme gc:2 [--n 16 | --fleet N] [--session-jobs 24]
 //!            [--policy disjoint|round-robin] [--mu 1.0] [--seed 7]
 //!            [--late-join J] [--join-window S] [--reap-after S]
+//!            [--adapt] [--refit-budget K] [--swap-margin FRAC]
+//!            [--profile-decay D] [--regime-shift R]
 //! sgc worker --master HOST:PORT --id K [--chaos-seed S]
 //! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
 //!            [--record-trace PREFIX]
@@ -28,7 +30,16 @@
 //! `Hello` mid-run, `--join-window S` bounds how long late joins are
 //! admitted (absent = forever), and `--reap-after S` retires workers
 //! whose heartbeats stay silent. See `rust/docs/OPERATIONS.md`.
+//!
+//! `--adapt` turns on the adaptive control plane (`sgc::adapt`): the
+//! scheduler profiles live arrivals, re-fits `(B, W, λ)` in the
+//! background (`--refit-budget` candidates per round close), and
+//! hot-swaps a job to the re-fitted scheme at a job boundary when the
+//! predicted gain clears `--swap-margin` after a detected regime shift.
+//! `--regime-shift R` (simulator only) scripts a straggler-regime flip
+//! at cluster round `R` — the adaptive-serve smoke input.
 
+use sgc::adapt::AdaptiveConfig;
 use sgc::cluster::{Cluster, EventCluster, RecordingCluster, RunTrace, SimCluster};
 use sgc::coding::SchemeConfig;
 use sgc::coordinator::RunReport;
@@ -39,7 +50,7 @@ use sgc::sched::{
     ScheduleReport,
 };
 use sgc::session::{self, BatchItem, SessionConfig};
-use sgc::straggler::GilbertElliot;
+use sgc::straggler::{GilbertElliot, Pattern};
 use sgc::train::{Dataset, DatasetConfig, MultiModelTrainer, TrainConfig};
 use sgc::util::cli::Args;
 use sgc::util::stats::MeanStd;
@@ -64,6 +75,8 @@ fn main() -> anyhow::Result<()> {
                               (+ sgc worker --master ADDR --id K per external worker)\n\
                  multi-job:   sgc serve --jobs N [--fleet K] — N sessions share one cluster\n\
                  elastic:     serve --fleet K --late-join J [--join-window S] [--reap-after S]\n\
+                 adaptive:    serve --adapt [--refit-budget K] [--swap-margin FRAC]\n\
+                              [--profile-decay D] [--regime-shift R (sim only)]\n\
                  traces:      --record-trace FILE on run/sweep; --replay-trace FILE on run"
             );
             std::process::exit(2);
@@ -237,6 +250,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let spec = JobSpec { scheme: scheme.clone(), session: cfg.clone() };
 
+    // --adapt: online profiling, background re-fit, hot-swap at job
+    // boundaries (module docs + OPERATIONS.md §adaptive)
+    let adaptive = if args.has("adapt") {
+        let d = AdaptiveConfig::default();
+        let mut acfg = AdaptiveConfig {
+            refit_budget: args.get_parse("refit-budget", d.refit_budget),
+            ..d
+        };
+        acfg.policy.swap_margin = args.get_parse("swap-margin", acfg.policy.swap_margin);
+        acfg.profiler.fast_decay = args.get_parse("profile-decay", acfg.profiler.fast_decay);
+        Some(acfg)
+    } else {
+        None
+    };
+
     let out: ScheduleReport = match fleet_n {
         Some(k) => {
             // --- one shared loopback TCP fleet for every session ---
@@ -258,6 +286,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
             let out = {
                 let mut sched = JobScheduler::with_policy(&mut fleet.cluster, policy()?);
+                if let Some(acfg) = adaptive.clone() {
+                    sched.set_adaptive(acfg);
+                }
                 for _ in 0..jobs {
                     sched.admit(&spec)?;
                 }
@@ -273,8 +304,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         None => {
             // --- one shared simulator for every session ---
-            let mut sim = ge_cluster(n, seed);
+            let mut sim = match args.options.get("regime-shift") {
+                Some(v) => {
+                    // Scripted straggler trace: quiet until the given
+                    // cluster round, then a persistent heavy regime
+                    // (alternating straggle/clear rows keep each burst
+                    // at full severity; the long tail keeps the trace
+                    // from wrapping back into the quiet prefix).
+                    let shift_at: usize = v.parse()?;
+                    let mut rows = vec![vec![false; n]; shift_at];
+                    for k in 0..4096usize {
+                        rows.push((0..n).map(|w| k % 2 == 0 && w % 3 == 0).collect());
+                    }
+                    SimCluster::from_trace(n, Pattern::from_rows(rows), seed)
+                }
+                None => ge_cluster(n, seed),
+            };
             let mut sched = JobScheduler::with_policy(&mut sim, policy()?);
+            if let Some(acfg) = adaptive.clone() {
+                sched.set_adaptive(acfg);
+            }
             for _ in 0..jobs {
                 sched.admit(&spec)?;
             }
@@ -291,6 +340,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             rep.waitout_rounds(),
             rep.deadline_violations
         );
+    }
+    for sw in &out.swaps {
+        println!("swap: {sw}");
     }
     println!("{}", out.utilization);
     let undecoded: usize = out

@@ -34,6 +34,17 @@
 //! then never changes — which is what keeps a single-job scheduler run
 //! byte-identical to the blocking drivers.
 //!
+//! **Adaptation.** With [`set_adaptive`](JobScheduler::set_adaptive)
+//! the scheduler drives the [`crate::adapt`] control plane: every
+//! round's completion times feed an online straggler profile, a
+//! background re-fit evaluates a few candidate parameterizations per
+//! round close, and when the swap policy accepts a re-fit the job's
+//! incumbent session is truncated after its assigned paper-jobs, drains
+//! its decode tail, and a fresh session with the re-fitted scheme takes
+//! over the remaining jobs — recorded as [`SchemeSwapped`] entries in
+//! [`ScheduleReport::swaps`]. Without `set_adaptive` nothing changes:
+//! runs are byte-identical to the pre-adaptive scheduler.
+//!
 //! Drivers that need to execute real work per round (the PJRT trainer)
 //! hook in through [`RoundObserver`].
 //!
@@ -65,9 +76,10 @@
 //! # }
 //! ```
 
-use crate::cluster::{ClusterEvent, EventCluster, JobId};
+use crate::adapt::{AdaptiveConfig, AdaptiveController, SchemeSwapped};
+use crate::cluster::{ClusterEvent, EventCluster, JobId, UNPLACED};
 use crate::coding::SchemeConfig;
-use crate::coordinator::metrics::RunReport;
+use crate::coordinator::metrics::{merge_segments, RunReport};
 use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
 
 /// Which physical worker *initially* hosts a job's logical worker 0
@@ -184,6 +196,15 @@ pub struct FleetUtilization {
     /// Logical slots migrated off retired workers onto live spares at
     /// round starts — "the report notes re-placement".
     pub replacements: u64,
+    /// Hot-swaps executed by the adaptive control plane (always 0
+    /// without [`JobScheduler::set_adaptive`]).
+    pub scheme_swaps: u64,
+    /// Re-fit candidates the background [`crate::adapt::Refitter`]
+    /// evaluated across all jobs.
+    pub refit_candidates: u64,
+    /// Rounds folded into the live profile since the last completed
+    /// re-fit pass — how stale the fitted parameters were at run end.
+    pub profile_staleness: u64,
     /// `total_session_s / makespan_s`: how much session time the
     /// scheduler packed into each second of shared-fleet time (> 1 means
     /// sessions genuinely overlapped).
@@ -215,6 +236,13 @@ impl std::fmt::Display for FleetUtilization {
                 self.worker_joined_events, self.worker_retired_events, self.replacements
             )?;
         }
+        if self.scheme_swaps + self.refit_candidates > 0 {
+            write!(
+                f,
+                ", {} swaps, {} refit evals, staleness {}",
+                self.scheme_swaps, self.refit_candidates, self.profile_staleness
+            )?;
+        }
         Ok(())
     }
 }
@@ -222,8 +250,13 @@ impl std::fmt::Display for FleetUtilization {
 /// Everything a finished multi-job run produced.
 #[derive(Clone, Debug)]
 pub struct ScheduleReport {
-    /// Per-job protocol reports, in admission (job-id) order.
+    /// Per-job protocol reports, in admission (job-id) order. A job
+    /// that hot-swapped reports the merged view of all its segments
+    /// (see [`merge_segments`]).
     pub reports: Vec<RunReport>,
+    /// Hot-swaps executed during the run, in execution order (always
+    /// empty without [`JobScheduler::set_adaptive`]).
+    pub swaps: Vec<SchemeSwapped>,
     /// Aggregate fleet-level accounting for the run.
     pub utilization: FleetUtilization,
 }
@@ -243,8 +276,26 @@ struct Slot {
     /// `usize::MAX` when `p` is not in this job's placement. Rebuilt at
     /// every round start.
     inv: Vec<usize>,
-    /// Round currently (or last) submitted, as the cluster knows it.
+    /// Round currently (or last) submitted, as the cluster knows it
+    /// (`round_base + plan.round`).
     round: u64,
+    /// Cluster-visible rounds consumed by earlier swap segments: keeps
+    /// `(job, round)` keys unique across hot-swaps.
+    round_base: u64,
+    /// The job's current scheme (replaced on hot-swap).
+    scheme: SchemeConfig,
+    /// Session parameters as admitted; post-swap sessions reuse them
+    /// with the job count rebased to the remaining work.
+    session_cfg: SessionConfig,
+    /// Paper-jobs the job was admitted with.
+    jobs_total: usize,
+    /// Paper-jobs owned by already-finished swap segments.
+    assigned_base: usize,
+    /// Reports of already-finished swap segments, in execution order
+    /// (empty until the first hot-swap).
+    segments: Vec<RunReport>,
+    /// Paper-jobs each finished segment owned ([`merge_segments`] caps).
+    segment_assigned: Vec<usize>,
     /// Cluster time the current round was submitted.
     submit_s: f64,
     /// A round is open and awaiting events.
@@ -272,6 +323,10 @@ pub struct JobScheduler<'c> {
     loads: Vec<f64>,
     state: Vec<bool>,
     pending: Vec<usize>,
+    /// Adaptive control plane, when enabled (see [`crate::adapt`]).
+    adapt: Option<AdaptiveController>,
+    /// Hot-swaps executed so far, in execution order.
+    swaps: Vec<SchemeSwapped>,
     // --- utilization counters ---
     done_events: u64,
     dead_events: u64,
@@ -302,6 +357,8 @@ impl<'c> JobScheduler<'c> {
             loads: Vec::new(),
             state: Vec::new(),
             pending: Vec::new(),
+            adapt: None,
+            swaps: Vec::new(),
             done_events: 0,
             dead_events: 0,
             joined_events: 0,
@@ -309,6 +366,20 @@ impl<'c> JobScheduler<'c> {
             replacements: 0,
             rounds_closed: 0,
         }
+    }
+
+    /// Enable the adaptive control plane: profile worker delays from the
+    /// event stream, re-fit scheme parameters in the background, and
+    /// hot-swap jobs at job boundaries when a re-fit clears the swap
+    /// policy (see [`crate::adapt`]). Call before [`run`](Self::run);
+    /// without it the scheduler behaves exactly as before.
+    pub fn set_adaptive(&mut self, cfg: AdaptiveConfig) {
+        self.adapt = Some(AdaptiveController::new(cfg));
+    }
+
+    /// The adaptive controller, when adaptation is enabled (inspection).
+    pub fn adaptive(&self) -> Option<&AdaptiveController> {
+        self.adapt.as_ref()
     }
 
     /// Admit one job; returns its [`JobId`] (also its index in
@@ -333,6 +404,13 @@ impl<'c> JobScheduler<'c> {
             place: Vec::new(),
             inv: Vec::new(),
             round: 0,
+            round_base: 0,
+            scheme: spec.scheme.clone(),
+            session_cfg: spec.session.clone(),
+            jobs_total: spec.session.jobs,
+            assigned_base: 0,
+            segments: Vec::new(),
+            segment_assigned: Vec::new(),
             submit_s: 0.0,
             open: false,
             dead: vec![false; n],
@@ -451,6 +529,12 @@ impl<'c> JobScheduler<'c> {
             .map(|s| s.report.take().expect("all jobs finished"))
             .collect();
         let total_session_s: f64 = reports.iter().map(|r| r.total_runtime_s).sum();
+        let swaps = std::mem::take(&mut self.swaps);
+        let (refit_candidates, profile_staleness) = self
+            .adapt
+            .as_ref()
+            .map(|ad| (ad.candidates_evaluated(), ad.profile_staleness()))
+            .unwrap_or((0, 0));
         let utilization = FleetUtilization {
             workers: n,
             jobs,
@@ -462,10 +546,13 @@ impl<'c> JobScheduler<'c> {
             worker_joined_events: self.joined_events,
             worker_retired_events: self.retired_events,
             replacements: self.replacements,
+            scheme_swaps: swaps.len() as u64,
+            refit_candidates,
+            profile_staleness,
             multiplexing_gain: if makespan > 0.0 { total_session_s / makespan } else { 0.0 },
             placement: self.policy.label(),
         };
-        Ok(ScheduleReport { reports, utilization })
+        Ok(ScheduleReport { reports, swaps, utilization })
     }
 
     /// Route one absorbed event batch into the owning sessions.
@@ -502,6 +589,9 @@ impl<'c> JobScheduler<'c> {
                                 .as_mut()
                                 .expect("open slot")
                                 .submit(logical, finish_s);
+                            if let Some(ad) = self.adapt.as_mut() {
+                                ad.observe_done(job, round, logical, finish_s);
+                            }
                         }
                     }
                 }
@@ -605,13 +695,103 @@ impl<'c> JobScheduler<'c> {
         self.rounds_closed += 1;
         obs.round_closed(j, session, &slot.plan, &events)?;
         slot.open = false;
-        if session.is_complete() {
-            let finished = slot.session.take().expect("open slot");
-            slot.report = Some(finished.into_report());
+        // Adaptive step (no-op without `set_adaptive`): fold the closed
+        // round into the profile, tick the background re-fit, and — once
+        // a swap is staged — truncate the incumbent session so it drains
+        // its decode tail toward the swap boundary.
+        if self.adapt.is_some() {
+            self.adaptive_close(j);
+        }
+        let slot = &mut self.slots[j];
+        if slot.session.as_ref().expect("closed slot").is_complete() {
+            let finished = slot.session.take().expect("closed slot");
+            let assigned = finished.assigned_jobs();
+            let segment = finished.into_report();
+            self.finish_segment(j, assigned, segment, now, obs)?;
         } else {
             self.start_round(j, obs)?;
         }
         Ok(())
+    }
+
+    /// Post-close adaptive hook for job `j` (see [`crate::adapt`]).
+    /// Folding, re-fit ticking and swap staging all happen here, between
+    /// rounds — the swap itself executes in `finish_segment` once the
+    /// truncated session completes its decode tail.
+    fn adaptive_close(&mut self, j: usize) {
+        let round = self.slots[j].round;
+        let ad = self.adapt.as_mut().expect("adaptive_close without a controller");
+        ad.round_closed(j, round, &self.slots[j].scheme);
+        if ad.pending_swap(j).is_some() {
+            // Idempotent: every close while draining re-asserts the cap.
+            self.slots[j]
+                .session
+                .as_mut()
+                .expect("closed slot")
+                .finish_after_assigned();
+        }
+    }
+
+    /// A session ran to completion (possibly truncated toward a swap):
+    /// either execute the staged hot-swap — fresh session, re-fitted
+    /// scheme, remaining paper-jobs — or produce the job's final report,
+    /// merging swap segments when any exist.
+    fn finish_segment(
+        &mut self,
+        j: usize,
+        assigned: usize,
+        segment: RunReport,
+        now: f64,
+        obs: &mut dyn RoundObserver,
+    ) -> crate::Result<()> {
+        let done = self.slots[j].assigned_base + assigned;
+        let remaining = self.slots[j].jobs_total.saturating_sub(done);
+        let swap = match self.adapt.as_mut() {
+            Some(ad) if remaining > 0 => ad.take_swap(j),
+            Some(ad) => {
+                // completed naturally while a swap was pending: there is
+                // nothing left to migrate — drop the stale decision
+                let _ = ad.take_swap(j);
+                None
+            }
+            None => None,
+        };
+        let slot = &mut self.slots[j];
+        match swap {
+            Some((to, gain)) => {
+                debug_assert_eq!(to.n, slot.scheme.n, "re-fit candidates preserve n");
+                self.swaps.push(SchemeSwapped {
+                    job: j,
+                    at_round: slot.round,
+                    from: slot.scheme.label(),
+                    to: to.label(),
+                    predicted_gain: gain,
+                    at_s: now,
+                });
+                slot.round_base = slot.round;
+                slot.assigned_base = done;
+                slot.segments.push(segment);
+                slot.segment_assigned.push(assigned);
+                slot.scheme = to;
+                let mut cfg = slot.session_cfg.clone();
+                cfg.jobs = remaining;
+                let fresh = SgcSession::new(&slot.scheme, cfg);
+                slot.session = Some(fresh);
+                self.start_round(j, obs)
+            }
+            None if slot.segments.is_empty() => {
+                // never swapped: the plain single-session path — the
+                // report is byte-identical to a non-adaptive run
+                slot.report = Some(segment);
+                Ok(())
+            }
+            None => {
+                slot.segments.push(segment);
+                slot.segment_assigned.push(assigned);
+                slot.report = Some(merge_segments(&slot.segments, &slot.segment_assigned));
+                Ok(())
+            }
+        }
     }
 
     /// Re-place logical workers of job `j` whose physical host left the
@@ -626,8 +806,14 @@ impl<'c> JobScheduler<'c> {
             if self.live.get(p).copied().unwrap_or(false) {
                 continue;
             }
-            let spare = (0..self.live.len())
-                .find(|&c| self.live[c] && !slot.place.contains(&c));
+            // With adaptation on, prefer the historically fastest spare
+            // (profile-driven re-placement); otherwise — and for spares
+            // the profile never observed — first-fit by id.
+            let spare = match self.adapt.as_ref() {
+                Some(ad) => ad.prefer_spare(&self.live, &slot.place),
+                None => (0..self.live.len())
+                    .find(|&c| self.live[c] && !slot.place.contains(&c)),
+            };
             if let Some(s) = spare {
                 slot.place[logical] = s;
                 self.replacements += 1;
@@ -649,17 +835,19 @@ impl<'c> JobScheduler<'c> {
             let session = slot.session.as_mut().expect("job still running");
             session.begin_round_into(&mut slot.plan);
             obs.round_started(j, session, &slot.plan)?;
-            slot.round = slot.plan.round as u64;
+            slot.round = slot.round_base + slot.plan.round as u64;
             slot.open = true;
             // fresh round, fresh death flags (see `route_events`): the
             // backend's `submit` re-reports workers unusable *for this
             // round* before any of its events can matter
             slot.dead.clear();
             slot.dead.resize(cap, false);
-            // placement: logical worker i → physical place[i]; spares
-            // (and retired slots) keep load 0
+            // placement: logical worker i → physical place[i]; workers
+            // outside the placement (spares, retired slots) are marked
+            // UNPLACED so backends skip them entirely — a scheme's
+            // genuine zero-load no-op assignments stay 0.0
             self.loads.clear();
-            self.loads.resize(cap, 0.0);
+            self.loads.resize(cap, UNPLACED);
             for (logical, &load) in slot.plan.loads.iter().enumerate() {
                 self.loads[slot.place[logical]] = load;
             }
@@ -668,6 +856,9 @@ impl<'c> JobScheduler<'c> {
             slot.inv.resize(cap, usize::MAX);
             for (logical, &p) in slot.place.iter().enumerate() {
                 slot.inv[p] = logical;
+            }
+            if let Some(ad) = self.adapt.as_mut() {
+                ad.register_round(j, slot.round, &slot.place, &slot.plan.loads);
             }
         }
         let job_round = self.slots[j].round;
@@ -992,12 +1183,12 @@ mod tests {
         assert_eq!(rep.rounds.len(), 3);
         assert_eq!(rep.deadline_violations, 0);
         assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
-        // round 1 ran on workers 0..2 (worker 3 a zero-load spare)
+        // round 1 ran on workers 0..2 (worker 3 an unplaced spare)
         assert!(cluster.loads_seen[0][2] > 0.0);
-        assert_eq!(cluster.loads_seen[0][3], 0.0);
+        assert_eq!(cluster.loads_seen[0][3], UNPLACED);
         // rounds 2+ migrated the retired worker 2's slot onto spare 3
         for round_loads in &cluster.loads_seen[1..] {
-            assert_eq!(round_loads[2], 0.0, "retired worker still loaded");
+            assert_eq!(round_loads[2], UNPLACED, "retired worker still loaded");
             assert!(round_loads[3] > 0.0, "spare not used");
         }
         assert_eq!(out.utilization.worker_retired_events, 1);

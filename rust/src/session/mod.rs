@@ -201,6 +201,10 @@ pub struct SgcSession {
     /// Last begun round (0 before the first `begin_round`).
     round: usize,
     total_rounds: usize,
+    /// Set by [`finish_after_assigned`](Self::finish_after_assigned):
+    /// the run was capped at this many paper-jobs (the adaptive
+    /// hot-swap's drain mechanism); `None` for a normal full run.
+    truncated_jobs: Option<usize>,
     n: usize,
     /// Completion times submitted for the open round.
     finish: Vec<Option<f64>>,
@@ -252,6 +256,7 @@ impl SgcSession {
             phase: Phase::Ready,
             round: 0,
             total_rounds,
+            truncated_jobs: None,
             n,
             finish: vec![None; n],
             pending_count: 0,
@@ -313,9 +318,54 @@ impl SgcSession {
         &self.responded
     }
 
+    /// Per-worker completion times submitted for the current (or most
+    /// recently closed) round — `None` for workers whose result never
+    /// arrived (cut stragglers). Reset by the next `begin_round*`; the
+    /// adaptive profiler's [`crate::sched::RoundObserver`] impl reads
+    /// the just-closed round's times from here.
+    pub fn last_finish(&self) -> &[Option<f64>] {
+        &self.finish
+    }
+
     /// Have all `J + T` rounds committed?
     pub fn is_complete(&self) -> bool {
         self.round >= self.total_rounds && self.phase == Phase::Ready
+    }
+
+    /// Paper-jobs assigned so far: round `r` assigns job `r` (up to the
+    /// job cap), so this is `current_round.min(jobs)` — with the cap
+    /// lowered by [`finish_after_assigned`](Self::finish_after_assigned)
+    /// on a truncated session.
+    pub fn assigned_jobs(&self) -> usize {
+        self.round.min(self.truncated_jobs.unwrap_or(self.cfg.jobs))
+    }
+
+    /// Is the job ledger clean — has every assigned job been decoded?
+    /// Meaningful between rounds (after a close); this is the swap
+    /// boundary's continuity invariant: a session whose ledger is clean
+    /// can be replaced by a fresh one for the remaining jobs without
+    /// dropping work.
+    pub fn ledger_clean(&self) -> bool {
+        self.frontier > self.assigned_jobs()
+    }
+
+    /// Cap the run at the paper-jobs assigned so far: the session runs
+    /// only its decode tail (`T` more rounds, during which tail
+    /// assignments for jobs beyond the cap still execute but are not
+    /// counted) and then completes. This is how the adaptive scheduler
+    /// drains a session toward a hot-swap boundary — under
+    /// [`WaitPolicy::ConformanceRepair`] every capped job decodes by
+    /// its deadline inside the tail, so the truncated session ends with
+    /// a clean ledger. Returns the cap. Idempotent; must be called
+    /// between rounds.
+    pub fn finish_after_assigned(&mut self) -> usize {
+        assert_eq!(self.phase, Phase::Ready, "finish_after_assigned inside an open round");
+        if self.truncated_jobs.is_none() {
+            let cap = self.round.min(self.cfg.jobs);
+            self.truncated_jobs = Some(cap);
+            self.total_rounds = self.total_rounds.min(cap + self.scheme_delay);
+        }
+        self.truncated_jobs.expect("just set")
     }
 
     /// Open the next round into a caller-owned (reusable) plan: advances

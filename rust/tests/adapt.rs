@@ -1,0 +1,145 @@
+//! Integration tests of the adaptive control plane (`sgc::adapt`)
+//! through the public `JobScheduler` surface: determinism of swap
+//! decisions, the stationary-profile no-swap golden, and the
+//! regime-shift acceptance scenario (adaptive M-SGC beats the
+//! statically-fit incumbent).
+
+use sgc::adapt::AdaptiveConfig;
+use sgc::cluster::{EventCluster, LatencyParams, SimCluster};
+use sgc::coding::SchemeConfig;
+use sgc::sched::{JobScheduler, JobSpec, ScheduleReport};
+use sgc::session::SessionConfig;
+use sgc::straggler::{NoStragglers, Pattern};
+
+/// Scripted backend: quiet until `shift_at` cluster rounds, then a
+/// persistent heavy regime (alternating straggle/clear rows keep each
+/// burst at full severity; the long tail never wraps back into the
+/// quiet prefix). Mirrors `sgc serve --regime-shift`.
+fn regime_shift_sim(n: usize, shift_at: usize, seed: u64) -> SimCluster {
+    let mut rows = vec![vec![false; n]; shift_at];
+    for k in 0..4096usize {
+        rows.push((0..n).map(|w| k % 2 == 0 && w % 3 == 0).collect());
+    }
+    SimCluster::from_trace(n, Pattern::from_rows(rows), seed)
+}
+
+fn serve_one(
+    sim: &mut SimCluster,
+    spec: &JobSpec,
+    adaptive: Option<AdaptiveConfig>,
+) -> ScheduleReport {
+    let mut sched = JobScheduler::new(sim);
+    if let Some(a) = adaptive {
+        sched.set_adaptive(a);
+    }
+    sched.admit(spec).expect("admit");
+    sched.run().expect("run")
+}
+
+/// Fixed seed + scripted regime shift ⇒ the whole `ScheduleReport` —
+/// per-job reports, executed swaps, utilization — is identical across
+/// repeated runs AND across event-batching settings (the controller
+/// folds arrivals in worker-index order at round close, so how the
+/// backend batches event delivery cannot change a swap decision).
+#[test]
+fn swap_decisions_are_deterministic_across_runs_and_event_batching() {
+    let n = 8;
+    let spec = JobSpec {
+        scheme: SchemeConfig::gc(n, 1),
+        session: SessionConfig { jobs: 60, ..Default::default() },
+    };
+    let run = |batch: Option<usize>| -> String {
+        let mut sim = regime_shift_sim(n, 10, 42);
+        if let Some(k) = batch {
+            sim.set_max_events_per_poll(k);
+        }
+        let out = serve_one(&mut sim, &spec, Some(AdaptiveConfig::default()));
+        assert!(
+            !out.swaps.is_empty(),
+            "the regime shift must trigger a hot-swap: {}",
+            out.utilization
+        );
+        format!("{out:?}")
+    };
+    let reference = run(None);
+    assert_eq!(reference, run(None), "identical runs must report identically");
+    assert_eq!(reference, run(Some(1)), "event batching must not change swap decisions");
+}
+
+/// Golden: with adaptation ON over a stationary profile, the shift gate
+/// holds — zero swaps, and the per-job reports are byte-identical to a
+/// non-adaptive run of the same seed (the profiler is purely
+/// observational; the background re-fit still runs).
+#[test]
+fn stationary_profile_never_swaps_and_matches_the_non_adaptive_run() {
+    let n = 8;
+    let seed = 3;
+    let spec = JobSpec {
+        scheme: SchemeConfig::gc(n, 1),
+        session: SessionConfig { jobs: 40, ..Default::default() },
+    };
+    let quiet =
+        || SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), seed);
+
+    let mut plain_sim = quiet();
+    let plain = serve_one(&mut plain_sim, &spec, None);
+    let mut adapt_sim = quiet();
+    let adapted = serve_one(&mut adapt_sim, &spec, Some(AdaptiveConfig::default()));
+
+    assert_eq!(adapted.swaps.len(), 0, "stationary profile must never swap");
+    assert_eq!(adapted.utilization.scheme_swaps, 0);
+    assert!(
+        adapted.utilization.refit_candidates > 0,
+        "the background re-fit runs regardless: {}",
+        adapted.utilization
+    );
+    assert_eq!(
+        format!("{:?}", adapted.reports),
+        format!("{:?}", plain.reports),
+        "adaptation must be invisible without a swap"
+    );
+    assert_eq!(adapt_sim.now_s(), plain_sim.now_s(), "same cluster clock at run end");
+}
+
+/// The acceptance scenario: a statically-fit M-SGC keeps paying
+/// straggler wait-outs after the regime shift, while the adaptive run
+/// hot-swaps to a re-fitted scheme and finishes sooner — with the swap
+/// visible in the `ScheduleReport`.
+#[test]
+fn adaptive_msgc_beats_statically_fit_msgc_after_a_regime_shift() {
+    let n = 8;
+    let spec = JobSpec {
+        scheme: SchemeConfig::msgc(n, 1, 2, 1),
+        session: SessionConfig { jobs: 100, ..Default::default() },
+    };
+
+    let mut static_sim = regime_shift_sim(n, 10, 42);
+    let static_out = serve_one(&mut static_sim, &spec, None);
+    let static_t = static_sim.now_s();
+
+    let mut adapt_sim = regime_shift_sim(n, 10, 42);
+    let adapt_out = serve_one(&mut adapt_sim, &spec, Some(AdaptiveConfig::default()));
+    let adapt_t = adapt_sim.now_s();
+
+    assert_eq!(static_out.swaps.len(), 0, "no control plane, no swaps");
+    assert!(
+        !adapt_out.swaps.is_empty(),
+        "the swap must be visible in the report: {}",
+        adapt_out.utilization
+    );
+    assert_eq!(adapt_out.utilization.scheme_swaps as usize, adapt_out.swaps.len());
+    for sw in &adapt_out.swaps {
+        assert_eq!(sw.job, 0);
+        assert!(sw.predicted_gain > 0.0);
+        assert_ne!(sw.from, sw.to);
+    }
+    assert!(
+        adapt_t < static_t,
+        "adaptive run must finish sooner: adaptive {adapt_t:.2}s vs static {static_t:.2}s"
+    );
+
+    // the merged report still accounts for every paper-job exactly once
+    let rep = &adapt_out.reports[0];
+    assert_eq!(rep.job_completion_s.len(), 100);
+    assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+}

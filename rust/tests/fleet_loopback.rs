@@ -169,6 +169,93 @@ fn late_join_and_worker_death_are_absorbed() {
     assert!(stats[4].rounds_served + stats[5].rounds_served > 0, "{stats:?}");
 }
 
+/// Rejoin replay: a worker that drops mid-round and reconnects under its
+/// old id is re-sent every Assign it still owes a Result for, and the
+/// replayed Result is absorbed against the original checksum log — the
+/// open round completes with a genuine `WorkerDone` instead of eating a
+/// μ-cut.
+#[test]
+fn rejoined_worker_receives_replayed_assigns() {
+    use sgc::cluster::ClusterEvent;
+    use std::time::{Duration, Instant};
+
+    let mut fleet = LoopbackFleet::spawn_with(2, |id, addr| {
+        let mut cfg = WorkerConfig::loopback(id, addr.to_string(), None);
+        if id == 1 {
+            // serve one round's Result, then drop the socket cold
+            cfg.fail_after_rounds = Some(1);
+        }
+        cfg
+    })
+    .expect("spawn fleet");
+
+    // Two back-to-back submissions: both Assigns reach worker 1's socket
+    // buffer before it crashes, so it dies owing wire round 2 a Result.
+    fleet.cluster.submit(0, 1, &[0.05, 0.05]);
+    fleet.cluster.submit(0, 2, &[0.05, 0.05]);
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut seen: Vec<ClusterEvent> = Vec::new();
+
+    // the crash surfaces as WorkerRetired(1) plus the owed WorkerDead
+    // for the still-open wire round 2
+    while !seen
+        .iter()
+        .any(|e| matches!(e, ClusterEvent::WorkerDead { job: 0, round: 2, worker: 1 }))
+    {
+        assert!(Instant::now() < deadline, "worker 1's crash never surfaced: {seen:?}");
+        let until = fleet.cluster.now_s() + 0.05;
+        seen.extend(fleet.cluster.poll(until).iter().copied());
+    }
+    assert!(
+        seen.iter().any(|e| matches!(e, ClusterEvent::WorkerRetired { worker: 1 })),
+        "{seen:?}"
+    );
+
+    // rejoin under the SAME id: the master replays wire round 2's Assign
+    // and the fresh worker's Result must absorb like the original would
+    let addr = fleet.cluster.addr().to_string();
+    fleet.join_worker(WorkerConfig::loopback(1, addr, None));
+    let all_done = |seen: &[ClusterEvent]| {
+        [(1u64, 0usize), (1, 1), (2, 0), (2, 1)].iter().all(|&(r, w)| {
+            seen.iter().any(|e| {
+                matches!(
+                    e,
+                    ClusterEvent::WorkerDone { round, worker, .. }
+                        if *round == r && *worker == w
+                )
+            })
+        })
+    };
+    while !all_done(&seen) {
+        assert!(
+            Instant::now() < deadline,
+            "replayed Assign never produced round 2's WorkerDone: {seen:?}"
+        );
+        let until = fleet.cluster.now_s() + 0.05;
+        seen.extend(fleet.cluster.poll(until).iter().copied());
+    }
+    assert!(
+        seen.iter().any(|e| matches!(e, ClusterEvent::WorkerJoined { worker: 1 })),
+        "{seen:?}"
+    );
+    let replayed = seen
+        .iter()
+        .find(|e| matches!(e, ClusterEvent::WorkerDone { round: 2, worker: 1, .. }))
+        .expect("replayed WorkerDone");
+    if let ClusterEvent::WorkerDone { job, finish_s, .. } = replayed {
+        assert_eq!(*job, 0);
+        assert!(finish_s.is_finite() && *finish_s > 0.0);
+    }
+
+    let stats = fleet.shutdown().expect("clean shutdown");
+    // spawn order: worker 0 (both rounds), the original worker 1 (round
+    // 1 only), the rejoined worker 1 (exactly the one replayed round)
+    assert_eq!(stats[0].rounds_served, 2, "{stats:?}");
+    assert_eq!(stats[1].rounds_served, 1, "{stats:?}");
+    assert_eq!(stats[2].rounds_served, 1, "{stats:?}");
+}
+
 /// Acceptance pin of the reactor rewrite: one master — a single I/O
 /// thread, no per-connection readers — holds a 64-worker loopback fleet
 /// and completes a run. (The single-thread property is structural:
