@@ -294,7 +294,44 @@ fn main() {
         });
     }
 
+    // --- observability record path ----------------------------------------
+    // The per-event hot path of sgc::obs: one histogram record (bucket
+    // scan + three atomics) and one journal append (mutex + slot write).
+    // Both must stay O(10-100ns) so instrumented runs cost nothing
+    // measurable per round (the zero-perturbation claim in
+    // DESIGN.md §Observability; tests/alloc.rs pins the 0-alloc half).
+    {
+        let obs = sgc::obs::Obs::with_capacity(4096);
+        let h = obs.metrics.histogram("bench_seconds", "", "bench histogram");
+        let mut i = 0u64;
+        b.run("obs_histogram_record", || {
+            h.record((i % 100) as f64 * 0.01);
+            i += 1;
+        });
+        let mut j = 0u64;
+        b.run("obs_journal_append(ring wrap)", || {
+            obs.journal.record(
+                j as f64,
+                sgc::obs::EventKind::WorkerArrive,
+                0,
+                j as i64,
+                (j % 64) as i64,
+                0.25,
+            );
+            j += 1;
+        });
+    }
+
     b.save();
+
+    // --- BENCH_7.json observability snapshot ------------------------------
+    b.save_snapshot(
+        "BENCH_7.json",
+        &[
+            ("histogram_record_ns", mean_s(&b, "obs_histogram_record") * 1e9),
+            ("journal_append_ns", mean_s(&b, "obs_journal_append(ring wrap)") * 1e9),
+        ],
+    );
 
     // --- BENCH_4.json perf snapshot ---------------------------------------
     let grid_n = if fast { 64 } else { 256 };

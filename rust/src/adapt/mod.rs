@@ -35,6 +35,9 @@ pub use refit::{refit_candidates, FitOutcome, Refitter};
 pub use swap::SwapPolicy;
 
 use crate::coding::SchemeConfig;
+use crate::obs::{Counter, EventKind, Obs};
+use crate::util::json::Json;
+use std::sync::Arc;
 
 /// Configuration of the adaptive control plane.
 #[derive(Clone, Debug)]
@@ -83,6 +86,21 @@ pub struct SchemeSwapped {
     pub at_s: f64,
 }
 
+impl SchemeSwapped {
+    /// Serialize every field (part of
+    /// [`crate::sched::ScheduleReport::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("job", self.job)
+            .set("at_round", self.at_round)
+            .set("from", self.from.as_str())
+            .set("to", self.to.as_str())
+            .set("predicted_gain", self.predicted_gain)
+            .set("at_s", self.at_s);
+        o
+    }
+}
+
 impl std::fmt::Display for SchemeSwapped {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -119,13 +137,53 @@ pub struct AdaptiveController {
     jobs: Vec<JobAdapt>,
     evaluated_total: u64,
     last_pass_at: u64,
+    obs: Option<AdaptObs>,
+}
+
+/// Observability handles for the control plane (see [`crate::obs`]).
+struct AdaptObs {
+    obs: Arc<Obs>,
+    shifts: Counter,
+    passes: Counter,
+    staged: Counter,
+}
+
+impl std::fmt::Debug for AdaptObs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("AdaptObs { .. }")
+    }
 }
 
 impl AdaptiveController {
     /// Controller with the given knobs.
     pub fn new(cfg: AdaptiveConfig) -> Self {
         let profiler = OnlineProfiler::new(cfg.profiler.clone());
-        AdaptiveController { cfg, profiler, jobs: Vec::new(), evaluated_total: 0, last_pass_at: 0 }
+        AdaptiveController {
+            cfg,
+            profiler,
+            jobs: Vec::new(),
+            evaluated_total: 0,
+            last_pass_at: 0,
+            obs: None,
+        }
+    }
+
+    /// Attach an observability bundle: regime shifts, completed re-fit
+    /// passes and staged swaps are counted and journaled. The scheduler
+    /// calls this at run start when both observability and adaptation
+    /// are configured; the hooks are read-only, so decisions are
+    /// unchanged by instrumentation.
+    pub fn set_obs(&mut self, obs: Arc<Obs>) {
+        let shifts =
+            obs.metrics.counter("sgc_regime_shifts_total", "", "Straggler-regime shifts detected");
+        let passes = obs.metrics.counter(
+            "sgc_refit_passes_total",
+            "",
+            "Completed background re-fit passes",
+        );
+        let staged =
+            obs.metrics.counter("sgc_swaps_staged_total", "", "Swaps staged by the swap policy");
+        self.obs = Some(AdaptObs { obs, shifts, passes, staged });
     }
 
     /// Hook: a round fanned out (`place[i]` = physical worker serving
@@ -141,14 +199,25 @@ impl AdaptiveController {
     }
 
     /// Hook: the scheduler closed `(job, round)` with `incumbent` as
-    /// the job's current scheme. Folds the round into the profile,
-    /// propagates regime shifts, runs one budgeted re-fit tick, and —
-    /// when a completed pass clears the swap policy — stages a pending
-    /// swap for the job (query with
-    /// [`pending_swap`](Self::pending_swap)).
-    pub fn round_closed(&mut self, job: usize, round: u64, incumbent: &SchemeConfig) {
+    /// the job's current scheme at cluster time `now_s` (used only for
+    /// journaling). Folds the round into the profile, propagates regime
+    /// shifts, runs one budgeted re-fit tick, and — when a completed
+    /// pass clears the swap policy — stages a pending swap for the job
+    /// (query with [`pending_swap`](Self::pending_swap)).
+    pub fn round_closed(&mut self, job: usize, round: u64, incumbent: &SchemeConfig, now_s: f64) {
         self.ensure_job(job);
         if self.profiler.fold_round(job, round) {
+            if let Some(ob) = &self.obs {
+                ob.shifts.inc();
+                ob.obs.journal.record(
+                    now_s,
+                    EventKind::RegimeShift,
+                    job as i64,
+                    round as i64,
+                    -1,
+                    0.0,
+                );
+            }
             // Regime shift: stale-regime passes are worthless, and every
             // job becomes eligible to swap once its window refills.
             for st in self.jobs.iter_mut() {
@@ -178,9 +247,31 @@ impl AdaptiveController {
         self.evaluated_total += rf.evaluated() - before;
         if let Some(outcome) = outcome {
             self.last_pass_at = self.profiler.rounds_folded();
+            if let Some(ob) = &self.obs {
+                ob.passes.inc();
+                ob.obs.journal.record(
+                    now_s,
+                    EventKind::RefitPass,
+                    job as i64,
+                    round as i64,
+                    -1,
+                    self.evaluated_total as f64,
+                );
+            }
             if let Some(accept) =
                 self.cfg.policy.decide(&outcome, incumbent, st.rounds_since_swap, st.shift_armed)
             {
+                if let Some(ob) = &self.obs {
+                    ob.staged.inc();
+                    ob.obs.journal.record(
+                        now_s,
+                        EventKind::SwapStaged,
+                        job as i64,
+                        round as i64,
+                        -1,
+                        accept.1,
+                    );
+                }
                 st.pending = Some(accept);
             }
         }
@@ -274,7 +365,7 @@ mod tests {
             for w in 0..n {
                 ad.observe_done(0, r, w, times(r, w));
             }
-            ad.round_closed(0, r, inc);
+            ad.round_closed(0, r, inc, r as f64);
         }
         start + rounds
     }
@@ -326,7 +417,7 @@ mod tests {
             ad.register_round(0, r, &[2, 5], &loads);
             ad.observe_done(0, r, 0, 1.0);
             ad.observe_done(0, r, 1, 5.0);
-            ad.round_closed(0, r, &inc);
+            ad.round_closed(0, r, &inc, r as f64);
         }
         let live = vec![true; 6];
         // replacing within place [0, 3]: worker 2 (observed fast) wins

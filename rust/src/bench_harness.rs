@@ -166,7 +166,7 @@ impl Bench {
         o.set("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect()));
         let path = format!("target/experiments/{}.bench.json", self.label);
         if let Err(e) = o.save(&path) {
-            eprintln!("warning: could not save {path}: {e}");
+            crate::log_warn!("could not save {path}: {e}");
         } else {
             println!("  (saved {path})");
         }
@@ -192,7 +192,7 @@ impl Bench {
         o.set("metrics", m);
         o.set("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect()));
         if let Err(e) = o.save(path) {
-            eprintln!("warning: could not save {path}: {e}");
+            crate::log_warn!("could not save {path}: {e}");
         } else {
             println!("  (saved {path})");
         }

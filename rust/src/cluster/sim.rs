@@ -79,6 +79,11 @@ pub struct SimCluster {
     /// same-timestamp batches so delivery-batching invariance can be
     /// exercised). `usize::MAX` in production.
     max_events_per_poll: usize,
+    /// Observability hub, when attached: ground-truth straggler draws
+    /// are journaled per submission (virtual clusters only — a real
+    /// fleet has no ground truth). Never consulted by the simulation
+    /// itself: the RNG stream is identical with or without it.
+    obs: Option<std::sync::Arc<crate::obs::Obs>>,
 }
 
 impl SimCluster {
@@ -105,7 +110,17 @@ impl SimCluster {
             service_scratch: Vec::new(),
             state_scratch: Vec::new(),
             max_events_per_poll: usize::MAX,
+            obs: None,
         }
+    }
+
+    /// Attach an observability hub (see [`crate::obs`]): each
+    /// submission journals its ground-truth straggler count as a
+    /// [`TrueStragglers`](crate::obs::EventKind::TrueStragglers) event,
+    /// stamped on the virtual clock. Read-only — results are
+    /// byte-identical with or without it.
+    pub fn set_obs(&mut self, obs: std::sync::Arc<crate::obs::Obs>) {
+        self.obs = Some(obs);
     }
 
     /// Cluster driven by a Gilbert-Elliot straggler process with the
@@ -203,6 +218,17 @@ impl EventCluster for SimCluster {
         slot.0 = round;
         slot.1.clear();
         slot.1.extend_from_slice(&state);
+        if let Some(obs) = &self.obs {
+            let stragglers = state.iter().filter(|&&s| s).count();
+            obs.journal.record(
+                self.clock,
+                crate::obs::EventKind::TrueStragglers,
+                job as i64,
+                round as i64,
+                -1,
+                stragglers as f64,
+            );
+        }
         let clock = self.clock;
         for w in 0..self.n {
             let q = &mut self.queues[w];

@@ -328,7 +328,7 @@ impl<C: Cluster> Drop for RecordingCluster<C> {
                 return;
             }
             if let Err(e) = self.trace.save(&path) {
-                eprintln!("warning: could not save trace: {e}");
+                crate::log_warn!("could not save trace: {e}");
             }
         }
     }

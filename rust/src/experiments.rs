@@ -102,7 +102,7 @@ pub fn save_json(name: &str, json: &Json) {
     let path = format!("target/experiments/{name}.json");
     match json.save(&path) {
         Ok(()) => println!("(saved {path})"),
-        Err(e) => eprintln!("warning: could not save {path}: {e}"),
+        Err(e) => crate::log_warn!("could not save {path}: {e}"),
     }
 }
 

@@ -46,9 +46,13 @@ use super::worker::chunk_checksum;
 use crate::cluster::{ClusterEvent, EventCluster, JobId, RunTrace};
 use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::RunReport;
+use crate::obs::{Counter, EventKind, Histogram, Obs};
 use crate::session::SessionConfig;
-use std::net::TcpListener;
+use crate::{log_info, log_warn};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Lifetime budget of *phantom* slots (gap ids a join may skip over):
@@ -58,6 +62,20 @@ use std::time::{Duration, Instant};
 /// than this beyond the genuinely-joined ids. Sequential joins
 /// (`id == capacity`) cost nothing.
 const MAX_JOIN_GAP: usize = 64;
+
+/// Concurrent `/metrics` scrape connections the reactor will hold; new
+/// connections past this are refused at accept (a Prometheus server
+/// scrapes one at a time — this bounds misbehaving pollers).
+const MAX_SCRAPES: usize = 32;
+
+/// Byte cap on a scrape request head; anything longer is not a scrape.
+const MAX_SCRAPE_REQ: usize = 8 * 1024;
+
+/// Wake-slop histogram bounds: a healthy reactor overshoots its poll
+/// deadline by well under a millisecond; the tail buckets make a loaded
+/// or descheduled box visible.
+const SLOP_BUCKETS: [f64; 10] =
+    [1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.25];
 
 /// Membership and liveness policy of an elastic fleet.
 #[derive(Clone, Copy, Debug)]
@@ -142,6 +160,40 @@ enum Owner {
     Listener,
     Slot(usize),
     Pending(usize),
+    /// The `/metrics` listener (when serving).
+    Metrics,
+    /// An in-flight scrape connection.
+    Scrape(usize),
+}
+
+/// Metric handles and the shared journal for the fleet layer (see
+/// [`crate::obs`]). Handles are registered once in
+/// [`FleetCluster::set_obs`]; the reactor's hot path only touches them.
+struct FleetObs {
+    obs: Arc<Obs>,
+    bytes_in: Counter,
+    bytes_out: Counter,
+    joins: Counter,
+    retires: Counter,
+    stale_marks: Counter,
+    scrapes: Counter,
+    wake_slop: Histogram,
+}
+
+/// One in-flight HTTP scrape connection, serviced by the same reactor
+/// that drives the workers (no extra thread): bytes are read on
+/// `POLLIN` until the request head completes, then the rendered
+/// exposition is written out on `POLLOUT` and the socket closed.
+struct Scrape {
+    conn: TcpStream,
+    req: Vec<u8>,
+    resp: Vec<u8>,
+    /// Written prefix of `resp`.
+    wpos: usize,
+    /// Request parsed; now draining `resp`.
+    responding: bool,
+    /// Finished or failed; reaped at the end of the turn.
+    closed: bool,
 }
 
 /// The fleet master's cluster handle: an elastic roster of worker
@@ -200,6 +252,12 @@ pub struct FleetCluster {
     pollfds: Vec<PollFd>,
     owners: Vec<Owner>,
     shut_down: bool,
+    /// Observability hub, when attached (see [`Self::set_obs`]).
+    obs: Option<FleetObs>,
+    /// Listener for `/metrics` scrapes, when serving.
+    metrics_listener: Option<TcpListener>,
+    /// In-flight scrape connections.
+    scrapes: Vec<Scrape>,
 }
 
 impl FleetCluster {
@@ -260,6 +318,9 @@ impl FleetCluster {
             pollfds: Vec::new(),
             owners: Vec::new(),
             shut_down: false,
+            obs: None,
+            metrics_listener: None,
+            scrapes: Vec::new(),
         };
         let deadline = Instant::now() + accept_timeout;
         while fleet.live_workers() < n {
@@ -324,6 +385,69 @@ impl FleetCluster {
         self.membership = membership;
     }
 
+    /// Attach an observability hub (see [`crate::obs`]): frame byte
+    /// counters, membership counters and the reactor wake-slop
+    /// histogram, plus journal entries for joins, retirements, stale
+    /// marks and I/O. Share the same [`Obs`] with the
+    /// [`JobScheduler`](crate::sched::JobScheduler) so one `/metrics`
+    /// page covers both layers.
+    pub fn set_obs(&mut self, obs: Arc<Obs>) {
+        let m = &obs.metrics;
+        let bytes_in =
+            m.counter("sgc_frame_bytes_in_total", "", "Bytes read from worker sockets");
+        let bytes_out =
+            m.counter("sgc_frame_bytes_out_total", "", "Bytes written to worker sockets");
+        let joins = m.counter("sgc_worker_joined_total", "", "Workers admitted mid-run");
+        let retires =
+            m.counter("sgc_worker_retired_total", "", "Workers permanently retired");
+        let stale_marks = m.counter(
+            "sgc_heartbeat_stale_total",
+            "",
+            "Recoverable stale-heartbeat transitions",
+        );
+        let scrapes =
+            m.counter("sgc_metrics_scrapes_total", "", "HTTP /metrics requests served");
+        let wake_slop = m.histogram_with_buckets(
+            "sgc_reactor_wake_slop_seconds",
+            "",
+            "Reactor wake overshoot past the computed poll(2) deadline",
+            &SLOP_BUCKETS,
+        );
+        self.obs = Some(FleetObs {
+            obs,
+            bytes_in,
+            bytes_out,
+            joins,
+            retires,
+            stale_marks,
+            scrapes,
+            wake_slop,
+        });
+    }
+
+    /// Serve Prometheus text-format metrics on `addr` from the reactor
+    /// itself: the scrape listener and every scrape connection join the
+    /// same `poll(2)` fd set as the worker sockets — no extra thread,
+    /// no lock shared with one. Returns the bound address (useful with
+    /// port `0`). Installs a private [`Obs`] if none was attached yet;
+    /// call [`set_obs`](Self::set_obs) first to share one.
+    pub fn serve_metrics(&mut self, addr: &str) -> crate::Result<String> {
+        if self.obs.is_none() {
+            self.set_obs(Arc::new(Obs::new()));
+        }
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("metrics endpoint: bind {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let bound = listener.local_addr()?.to_string();
+        self.metrics_listener = Some(listener);
+        Ok(bound)
+    }
+
+    /// The shared observability hub, when one is attached.
+    pub fn obs(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref().map(|fo| &fo.obs)
+    }
+
     /// Late `Hello`s are currently admissible.
     fn joins_open(&self) -> bool {
         if self.shut_down || self.listener.is_none() {
@@ -363,6 +487,15 @@ impl FleetCluster {
             self.pollfds.push(PollFd::new(p.conn.fd(), POLLIN));
             self.owners.push(Owner::Pending(i));
         }
+        if let Some(l) = &self.metrics_listener {
+            self.pollfds.push(PollFd::new(l.as_raw_fd(), POLLIN));
+            self.owners.push(Owner::Metrics);
+        }
+        for (i, s) in self.scrapes.iter().enumerate() {
+            let interest = if s.responding { POLLOUT } else { POLLIN };
+            self.pollfds.push(PollFd::new(s.conn.as_raw_fd(), interest));
+            self.owners.push(Owner::Scrape(i));
+        }
         if self.pollfds.is_empty() {
             if let Some(t) = timeout {
                 if !t.is_zero() {
@@ -398,10 +531,173 @@ impl FleetCluster {
                         }
                     }
                 }
+                Owner::Metrics => {
+                    if fd.readable() {
+                        self.accept_scrapes();
+                    }
+                }
+                Owner::Scrape(i) => {
+                    if fd.ready() {
+                        self.service_scrape(*i);
+                    }
+                }
             }
         }
         self.owners = owners;
         self.pollfds = pollfds;
+        self.scrapes.retain(|s| !s.closed);
+        self.collect_io();
+    }
+
+    /// Accept queued scrape connections (bounded by [`MAX_SCRAPES`]).
+    fn accept_scrapes(&mut self) {
+        loop {
+            let Some(listener) = &self.metrics_listener else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.scrapes.len() >= MAX_SCRAPES
+                        || stream.set_nonblocking(true).is_err()
+                    {
+                        continue; // refused: dropping the stream closes it
+                    }
+                    self.scrapes.push(Scrape {
+                        conn: stream,
+                        req: Vec::new(),
+                        resp: Vec::new(),
+                        wpos: 0,
+                        responding: false,
+                        closed: false,
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Advance one scrape: accumulate the request head, then drain the
+    /// rendered response.
+    fn service_scrape(&mut self, i: usize) {
+        let Some(s) = self.scrapes.get_mut(i) else { return };
+        if s.responding {
+            while s.wpos < s.resp.len() {
+                match s.conn.write(&s.resp[s.wpos..]) {
+                    Ok(0) => {
+                        s.closed = true;
+                        return;
+                    }
+                    Ok(k) => s.wpos += k,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        s.closed = true;
+                        return;
+                    }
+                }
+            }
+            s.closed = true; // response fully written
+            return;
+        }
+        let mut tmp = [0u8; 1024];
+        loop {
+            match s.conn.read(&mut tmp) {
+                Ok(0) => {
+                    s.closed = true;
+                    return;
+                }
+                Ok(k) => {
+                    s.req.extend_from_slice(&tmp[..k]);
+                    if s.req.len() > MAX_SCRAPE_REQ {
+                        s.closed = true; // not an HTTP scrape
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    s.closed = true;
+                    return;
+                }
+            }
+        }
+        if s.req.windows(4).any(|w| w == b"\r\n\r\n") {
+            self.scrape_respond(i);
+        }
+    }
+
+    /// Build the HTTP response for a completed request head and switch
+    /// the scrape to its write phase.
+    fn scrape_respond(&mut self, i: usize) {
+        let request_line = {
+            let req = &self.scrapes[i].req;
+            let end = req.iter().position(|&b| b == b'\r').unwrap_or(req.len());
+            String::from_utf8_lossy(&req[..end]).into_owned()
+        };
+        let metrics_get = request_line.starts_with("GET /metrics ")
+            || request_line.starts_with("GET /metrics\r")
+            || request_line == "GET /metrics";
+        let (status, body) = if metrics_get {
+            let body = self
+                .obs
+                .as_ref()
+                .map(|fo| fo.obs.metrics.render_prometheus())
+                .unwrap_or_default();
+            ("200 OK", body)
+        } else {
+            ("404 Not Found", String::from("only GET /metrics is served here\n"))
+        };
+        if let Some(fo) = &self.obs {
+            fo.scrapes.inc();
+        }
+        let mut resp = format!(
+            "HTTP/1.0 {status}\r\n\
+             Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\n\
+             Connection: close\r\n\r\n",
+            body.len()
+        );
+        resp.push_str(&body);
+        let s = &mut self.scrapes[i];
+        s.resp = resp.into_bytes();
+        s.wpos = 0;
+        s.responding = true;
+        // opportunistic flush: most expositions fit one socket buffer
+        self.service_scrape(i);
+    }
+
+    /// Harvest per-connection byte counters into the frame-I/O metrics
+    /// and journal (one entry per direction per turn, when nonzero).
+    fn collect_io(&mut self) {
+        if self.obs.is_none() {
+            return;
+        }
+        let mut bi = 0u64;
+        let mut bo = 0u64;
+        for slot in &mut self.slots {
+            if let Some(c) = &mut slot.conn {
+                let (i, o) = c.take_io();
+                bi += i;
+                bo += o;
+            }
+        }
+        for p in &mut self.pending {
+            let (i, o) = p.conn.take_io();
+            bi += i;
+            bo += o;
+        }
+        if bi == 0 && bo == 0 {
+            return;
+        }
+        let ts = self.clock_start.elapsed().as_secs_f64();
+        let fo = self.obs.as_ref().expect("checked above");
+        if bi > 0 {
+            fo.bytes_in.add(bi);
+            fo.obs.journal.record(ts, EventKind::FrameBytes, -1, -1, 0, bi as f64);
+        }
+        if bo > 0 {
+            fo.bytes_out.add(bo);
+            fo.obs.journal.record(ts, EventKind::FrameBytes, -1, -1, 1, bo as f64);
+        }
     }
 
     /// Accept every queued connection into the pending (pre-`Hello`)
@@ -438,9 +734,10 @@ impl FleetCluster {
             let mut remove =
                 now.duration_since(self.pending[i].since) > self.membership.hello_timeout;
             if remove {
-                eprintln!(
+                log_warn!(
                     "fleet master: rejecting {}: no Hello within {:?}",
-                    self.pending[i].peer, self.membership.hello_timeout
+                    self.pending[i].peer,
+                    self.membership.hello_timeout
                 );
             } else if self.pending[i].ready {
                 self.pending[i].ready = false;
@@ -451,7 +748,7 @@ impl FleetCluster {
                         remove = true;
                     }
                     Some(other) => {
-                        eprintln!(
+                        log_warn!(
                             "fleet master: rejecting {}: expected Hello, got {other:?}",
                             self.pending[i].peer
                         );
@@ -482,7 +779,7 @@ impl FleetCluster {
     /// `Hello` are absorbed immediately.
     fn admit_worker(&mut self, id: usize, conn: Connection, peer: &str) {
         let reject = |why: &str| {
-            eprintln!("fleet master: rejecting {peer}: {why}");
+            log_warn!("fleet master: rejecting {peer}: {why}");
         };
         if !self.started && id >= self.initial_n {
             reject(&format!("worker id {id} out of range (fleet of {})", self.initial_n));
@@ -526,7 +823,18 @@ impl FleetCluster {
         slot.last_seen = now;
         if self.started {
             self.staged.push(ClusterEvent::WorkerJoined { worker: id });
-            eprintln!(
+            if let Some(fo) = &self.obs {
+                fo.joins.inc();
+                fo.obs.journal.record(
+                    self.clock_start.elapsed().as_secs_f64(),
+                    EventKind::WorkerJoin,
+                    -1,
+                    -1,
+                    id as i64,
+                    if rejoin { 1.0 } else { 0.0 },
+                );
+            }
+            log_info!(
                 "fleet master: worker {id} {} the fleet (live {}/{})",
                 if rejoin { "rejoined" } else { "joined" },
                 self.live_workers(),
@@ -566,7 +874,7 @@ impl FleetCluster {
                 }
             }
             if replayed > 0 {
-                eprintln!(
+                log_info!(
                     "fleet master: replayed {replayed} open assignment(s) to rejoined worker {id}"
                 );
             }
@@ -641,7 +949,7 @@ impl FleetCluster {
             if checksum != self.sum_log[seq][worker] {
                 // byzantine: the worker did not do the work it was
                 // assigned — never trust it again
-                eprintln!(
+                log_warn!(
                     "fleet master: worker {worker} returned a bad checksum \
                      for round {r}; marking it byzantine"
                 );
@@ -682,7 +990,18 @@ impl FleetCluster {
         if was_live {
             if self.started {
                 self.staged.push(ClusterEvent::WorkerRetired { worker });
-                eprintln!("fleet master: retiring worker {worker} ({why})");
+                if let Some(fo) = &self.obs {
+                    fo.retires.inc();
+                    fo.obs.journal.record(
+                        self.clock_start.elapsed().as_secs_f64(),
+                        EventKind::WorkerRetire,
+                        -1,
+                        -1,
+                        worker as i64,
+                        0.0,
+                    );
+                }
+                log_warn!("fleet master: retiring worker {worker} ({why})");
             }
             self.stage_owed_deaths(worker);
         }
@@ -718,6 +1037,19 @@ impl FleetCluster {
             } else if gap > self.membership.heartbeat_timeout {
                 // recoverable: skip new Assigns while stale, but stage no
                 // WorkerDead (see `retire` for the permanent path)
+                if !self.slots[i].stale {
+                    if let Some(fo) = &self.obs {
+                        fo.stale_marks.inc();
+                        fo.obs.journal.record(
+                            self.clock_start.elapsed().as_secs_f64(),
+                            EventKind::HeartbeatStale,
+                            -1,
+                            -1,
+                            i as i64,
+                            gap.as_secs_f64(),
+                        );
+                    }
+                }
                 self.slots[i].stale = true;
             }
         }
@@ -897,6 +1229,8 @@ impl FleetCluster {
             p.conn.shutdown();
         }
         self.listener = None;
+        self.scrapes.clear(); // dropping the streams closes them
+        self.metrics_listener = None;
     }
 }
 
@@ -1014,11 +1348,38 @@ impl EventCluster for FleetCluster {
             // caller's liveness checks can fail the run loudly.
             let nothing_watched = !self.joins_open()
                 && self.pending.is_empty()
-                && self.slots.iter().all(|s| s.conn.is_none());
+                && self.slots.iter().all(|s| s.conn.is_none())
+                && self.metrics_listener.is_none()
+                && self.scrapes.is_empty();
             if timeout.is_none() && nothing_watched {
                 break;
             }
+            // Wake-slop: how far past its computed deadline a sleeping
+            // turn actually woke. Only turns that ran to their deadline
+            // count (an early socket wake is not slop).
+            let slept = match timeout {
+                Some(d) if !d.is_zero() && self.obs.is_some() => Some((Instant::now(), d)),
+                _ => None,
+            };
             self.reactor_turn(timeout);
+            if let Some((t0, d)) = slept {
+                let elapsed = t0.elapsed();
+                if elapsed >= d {
+                    let slop = (elapsed - d).as_secs_f64();
+                    let fo = self.obs.as_ref().expect("slept implies obs");
+                    fo.wake_slop.record(slop);
+                    if slop > 0.005 {
+                        fo.obs.journal.record(
+                            self.clock_start.elapsed().as_secs_f64(),
+                            EventKind::WakeSlop,
+                            -1,
+                            -1,
+                            -1,
+                            slop,
+                        );
+                    }
+                }
+            }
             self.process_pending();
             self.run_timers();
             if !self.staged.is_empty() {

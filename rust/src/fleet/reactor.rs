@@ -120,6 +120,10 @@ pub struct Connection {
     /// Consumed prefix of `wbuf` (compacted on the next queue).
     wpos: usize,
     dead: bool,
+    /// Bytes read off the socket since the last [`take_io`](Self::take_io).
+    bytes_in: u64,
+    /// Bytes written to the socket since the last [`take_io`](Self::take_io).
+    bytes_out: u64,
 }
 
 impl Connection {
@@ -128,7 +132,15 @@ impl Connection {
     pub fn new(stream: TcpStream) -> io::Result<Self> {
         stream.set_nonblocking(true)?;
         stream.set_nodelay(true).ok();
-        Ok(Connection { stream, rbuf: FrameBuffer::new(), wbuf: Vec::new(), wpos: 0, dead: false })
+        Ok(Connection {
+            stream,
+            rbuf: FrameBuffer::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            dead: false,
+            bytes_in: 0,
+            bytes_out: 0,
+        })
     }
 
     /// Raw fd for the reactor's poll set.
@@ -168,7 +180,10 @@ impl Connection {
                     self.dead = true;
                     return false;
                 }
-                Ok(k) => self.rbuf.feed(&tmp[..k]),
+                Ok(k) => {
+                    self.bytes_in += k as u64;
+                    self.rbuf.feed(&tmp[..k]);
+                }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
                 Err(_) => {
@@ -185,7 +200,7 @@ impl Connection {
         match self.rbuf.next_frame() {
             Ok(f) => f,
             Err(e) => {
-                eprintln!("fleet master: unframeable peer ({e}); dropping connection");
+                crate::log_warn!("fleet master: unframeable peer ({e}); dropping connection");
                 self.dead = true;
                 None
             }
@@ -219,7 +234,10 @@ impl Connection {
                     self.dead = true;
                     return false;
                 }
-                Ok(k) => self.wpos += k,
+                Ok(k) => {
+                    self.bytes_out += k as u64;
+                    self.wpos += k;
+                }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
                 Err(_) => {
@@ -234,6 +252,16 @@ impl Connection {
     /// Half-close both directions (best-effort; idempotent).
     pub fn shutdown(&self) {
         let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    /// Harvest and reset the byte counters accumulated since the last
+    /// call: `(bytes_in, bytes_out)`. The observability layer sums these
+    /// across connections each reactor turn.
+    pub fn take_io(&mut self) -> (u64, u64) {
+        let io = (self.bytes_in, self.bytes_out);
+        self.bytes_in = 0;
+        self.bytes_out = 0;
+        io
     }
 }
 

@@ -145,6 +145,7 @@ pub mod coding;
 pub mod coordinator;
 pub mod experiments;
 pub mod fleet;
+pub mod obs;
 pub mod probe;
 pub mod runtime;
 pub mod sched;

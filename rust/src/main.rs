@@ -8,6 +8,9 @@
 //!            [--late-join J] [--join-window S] [--reap-after S]
 //!            [--adapt] [--refit-budget K] [--swap-margin FRAC]
 //!            [--profile-decay D] [--regime-shift R]
+//!            [--metrics ADDR] [--metrics-hold S] [--journal PATH]
+//!            [--report-json PATH]
+//! sgc trace  export --journal PATH [--out PATH]
 //! sgc worker --master HOST:PORT --id K [--chaos-seed S]
 //! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
 //!            [--record-trace PREFIX]
@@ -58,9 +61,16 @@ use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    // --verbose raises the library log facade to info (diagnostics land
+    // on stderr; deliberate CLI output stays on stdout). SGC_LOG=debug
+    // etc. overrides finer-grained (see sgc::obs::log).
+    if args.has_flag("verbose") {
+        sgc::obs::log::set_level(sgc::obs::log::Level::Info);
+    }
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("worker") => cmd_worker(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("probe") => cmd_probe(&args),
@@ -68,7 +78,7 @@ fn main() -> anyhow::Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: sgc <run|serve|worker|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
+                "usage: sgc <run|serve|trace|worker|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
                  scheme spec: gc:S | gc-rep:S | sr-sgc:B,W,L | sr-sgc-rep:B,W,L | \
                  m-sgc:B,W,L | m-sgc-rep:B,W,L | uncoded\n\
                  fleet:       sgc run --fleet N (loopback workers) or --listen ADDR\n\
@@ -77,6 +87,9 @@ fn main() -> anyhow::Result<()> {
                  elastic:     serve --fleet K --late-join J [--join-window S] [--reap-after S]\n\
                  adaptive:    serve --adapt [--refit-budget K] [--swap-margin FRAC]\n\
                               [--profile-decay D] [--regime-shift R (sim only)]\n\
+                 observe:     serve [--metrics ADDR (fleet)] [--metrics-hold S]\n\
+                              [--journal PATH] [--report-json PATH]; --verbose anywhere\n\
+                              sgc trace export --journal PATH [--out PATH] (Chrome JSON)\n\
                  traces:      --record-trace FILE on run/sweep; --replay-trace FILE on run"
             );
             std::process::exit(2);
@@ -265,6 +278,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         None
     };
 
+    // Observability (sgc::obs): one shared hub feeds the scheduler's
+    // metrics/journal hooks, the backend's ground-truth/reactor hooks,
+    // and — fleet only — the reactor-served /metrics endpoint.
+    anyhow::ensure!(
+        fleet_n.is_some() || !args.has("metrics"),
+        "--metrics needs a TCP fleet (--fleet N): the simulator has no reactor to serve scrapes"
+    );
+    let obs = if args.has("metrics") || args.has("journal") {
+        Some(std::sync::Arc::new(sgc::obs::Obs::new()))
+    } else {
+        None
+    };
+
     let out: ScheduleReport = match fleet_n {
         Some(k) => {
             // --- one shared loopback TCP fleet for every session ---
@@ -284,16 +310,40 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             if late > 0 {
                 println!("late-joining {late} extra workers (ids {k}..{})", k + late - 1);
             }
+            if let Some(o) = &obs {
+                fleet.cluster.set_obs(o.clone());
+            }
+            if let Some(addr) = args.options.get("metrics") {
+                let bound = fleet.cluster.serve_metrics(addr)?;
+                println!("metrics: http://{bound}/metrics");
+            }
             let out = {
                 let mut sched = JobScheduler::with_policy(&mut fleet.cluster, policy()?);
                 if let Some(acfg) = adaptive.clone() {
                     sched.set_adaptive(acfg);
+                }
+                if let Some(o) = &obs {
+                    sched.set_obs(o.clone());
                 }
                 for _ in 0..jobs {
                     sched.admit(&spec)?;
                 }
                 sched.run()?
             };
+            // --metrics-hold S: keep the reactor pumping (and serving
+            // /metrics scrapes) for S more seconds so an external
+            // scraper can read the final series before shutdown.
+            let hold = args.get_parse("metrics-hold", 0.0f64);
+            if hold > 0.0 {
+                let end = fleet.cluster.now_s() + hold;
+                loop {
+                    let now = fleet.cluster.now_s();
+                    if now >= end {
+                        break;
+                    }
+                    let _ = fleet.cluster.poll((now + 0.25).min(end));
+                }
+            }
             // drain cut stragglers' late results so every worker is idle
             // before Shutdown (a worker whose Result write fails errors
             // its thread), then join the workers so a worker-side error
@@ -320,9 +370,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 }
                 None => ge_cluster(n, seed),
             };
+            if let Some(o) = &obs {
+                sim.set_obs(o.clone());
+            }
             let mut sched = JobScheduler::with_policy(&mut sim, policy()?);
             if let Some(acfg) = adaptive.clone() {
                 sched.set_adaptive(acfg);
+            }
+            if let Some(o) = &obs {
+                sched.set_obs(o.clone());
             }
             for _ in 0..jobs {
                 sched.admit(&spec)?;
@@ -345,6 +401,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("swap: {sw}");
     }
     println!("{}", out.utilization);
+    if let Some(path) = args.options.get("report-json") {
+        out.to_json().save(path)?;
+        println!("report → {path}");
+    }
+    if let Some(o) = &obs {
+        if let Some(path) = args.options.get("journal") {
+            o.journal.to_json().save(path)?;
+            println!("journal ({} events) → {path}", o.journal.len());
+        }
+    }
     let undecoded: usize = out
         .reports
         .iter()
@@ -352,6 +418,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .filter(|t| !t.is_finite())
         .count();
     anyhow::ensure!(undecoded == 0, "{undecoded} session jobs never became decodable");
+    Ok(())
+}
+
+/// Export a saved journal (`sgc serve --journal PATH`) as Chrome Trace
+/// Event Format JSON — load the output in `chrome://tracing` or
+/// Perfetto to see round spans, per-worker service bars and reactor
+/// instants on one timeline.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let verb = args.positional.first().map(String::as_str);
+    anyhow::ensure!(
+        verb == Some("export") && args.has("journal"),
+        "usage: sgc trace export --journal PATH [--out PATH]"
+    );
+    let input = args.get("journal", "");
+    let out_path = args.get("out", "target/experiments/trace.json");
+    let doc = sgc::util::json::Json::load(&input)?;
+    let events = sgc::obs::events_from_json(&doc)?;
+    let trace = sgc::obs::chrome_trace(&events);
+    trace.save(&out_path)?;
+    println!("chrome trace ({} events) → {out_path}", events.len());
     Ok(())
 }
 

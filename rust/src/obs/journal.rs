@@ -1,0 +1,403 @@
+//! Bounded structured event journal and Chrome Trace export.
+//!
+//! The journal is a preallocated ring buffer of fixed-size
+//! [`JournalEvent`] records: appending in steady state is a mutex
+//! lock plus a slot write — no allocation — and once full the ring
+//! overwrites its oldest entry and bumps a `dropped` counter, so a
+//! long-lived server's memory stays bounded no matter how many rounds
+//! it closes. Every layer journals against the *cluster clock*
+//! ([`crate::cluster::EventCluster::now_s`]): virtual seconds for
+//! simulators, wall seconds for fleets — so sim and fleet runs produce
+//! directly comparable timelines.
+//!
+//! [`chrome_trace`] converts a snapshot into Chrome Trace Event Format
+//! JSON (the `chrome://tracing` / Perfetto import format): each
+//! scheduler job becomes a trace *process*, round lifecycles become
+//! `B`/`E` duration spans, per-worker task executions become `X`
+//! complete spans on per-worker tracks, and everything else becomes an
+//! `i` instant.
+
+use crate::util::json::Json;
+use std::sync::Mutex;
+
+/// What a [`JournalEvent`] records. The event's `job`/`round`/`worker`/
+/// `value` fields are overloaded per kind; each variant documents its
+/// own encoding (unused integer fields hold `-1`, unused values `0.0`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A round's tasks were fanned out to workers (`job`, `round`).
+    RoundAssign,
+    /// One worker's result arrived (`worker` = logical id, `value` =
+    /// seconds since the round's fan-out; the span start is `ts_s -
+    /// value`).
+    WorkerArrive,
+    /// μ-cut decision at round close (`value` = κ seconds, `worker` =
+    /// number of detected stragglers).
+    CutDecision,
+    /// A round committed (`value` = protocol round duration in
+    /// seconds, `worker` = workers admitted past the μ-cutoff by the
+    /// wait-out policy).
+    RoundClose,
+    /// A paper-job became decodable (`round` = paper-job index).
+    JobDecode,
+    /// A scheduler job was admitted (`job`).
+    JobAdmit,
+    /// A scheduler job produced its final report (`job`).
+    JobFinish,
+    /// Scheduler queue depth changed (`value` = unfinished jobs).
+    QueueDepth,
+    /// An adaptive hot-swap executed at a job boundary (`value` =
+    /// predicted expected-runtime gain).
+    SchemeSwap,
+    /// The adaptive policy staged a swap for the next boundary
+    /// (`value` = predicted gain).
+    SwapStaged,
+    /// A budgeted background re-fit pass completed (`value` =
+    /// cumulative candidates evaluated).
+    RefitPass,
+    /// The delay profiler detected a straggler-regime shift (`job`).
+    RegimeShift,
+    /// A logical slot migrated off a dead worker (`worker` = new
+    /// physical id, `value` = old physical id).
+    Replacement,
+    /// Reactor wake overshoot past its computed poll deadline
+    /// (`value` = seconds of slop).
+    WakeSlop,
+    /// Reactor I/O since the previous `FrameBytes` entry (`worker` =
+    /// 0 for bytes in, 1 for bytes out; `value` = byte count).
+    FrameBytes,
+    /// A worker's heartbeats went stale — recoverable (`worker`).
+    HeartbeatStale,
+    /// A worker was permanently retired (`worker`).
+    WorkerRetire,
+    /// A worker joined the fleet mid-run (`worker`, `value` = 1 on
+    /// rejoin of a known identity, 0 on a fresh join).
+    WorkerJoin,
+    /// Simulator ground truth: stragglers drawn for one submission
+    /// (`value` = straggler count). Only virtual clusters emit this.
+    TrueStragglers,
+}
+
+/// Every kind, for iteration and parsing.
+const ALL_KINDS: [EventKind; 19] = [
+    EventKind::RoundAssign,
+    EventKind::WorkerArrive,
+    EventKind::CutDecision,
+    EventKind::RoundClose,
+    EventKind::JobDecode,
+    EventKind::JobAdmit,
+    EventKind::JobFinish,
+    EventKind::QueueDepth,
+    EventKind::SchemeSwap,
+    EventKind::SwapStaged,
+    EventKind::RefitPass,
+    EventKind::RegimeShift,
+    EventKind::Replacement,
+    EventKind::WakeSlop,
+    EventKind::FrameBytes,
+    EventKind::HeartbeatStale,
+    EventKind::WorkerRetire,
+    EventKind::WorkerJoin,
+    EventKind::TrueStragglers,
+];
+
+impl EventKind {
+    /// Stable snake_case name used in journal JSON and trace output.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::RoundAssign => "round_assign",
+            EventKind::WorkerArrive => "worker_arrive",
+            EventKind::CutDecision => "cut_decision",
+            EventKind::RoundClose => "round_close",
+            EventKind::JobDecode => "job_decode",
+            EventKind::JobAdmit => "job_admit",
+            EventKind::JobFinish => "job_finish",
+            EventKind::QueueDepth => "queue_depth",
+            EventKind::SchemeSwap => "scheme_swap",
+            EventKind::SwapStaged => "swap_staged",
+            EventKind::RefitPass => "refit_pass",
+            EventKind::RegimeShift => "regime_shift",
+            EventKind::Replacement => "replacement",
+            EventKind::WakeSlop => "wake_slop",
+            EventKind::FrameBytes => "frame_bytes",
+            EventKind::HeartbeatStale => "heartbeat_stale",
+            EventKind::WorkerRetire => "worker_retire",
+            EventKind::WorkerJoin => "worker_join",
+            EventKind::TrueStragglers => "true_stragglers",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str); `None` for unknown names.
+    pub fn from_name(s: &str) -> Option<EventKind> {
+        ALL_KINDS.into_iter().find(|k| k.as_str() == s)
+    }
+}
+
+/// One fixed-size journal record. Integer fields hold `-1` when the
+/// kind doesn't use them; see [`EventKind`] for each kind's encoding.
+#[derive(Clone, Copy, Debug)]
+pub struct JournalEvent {
+    /// Cluster-clock timestamp (virtual seconds for simulators, wall
+    /// seconds since master start for fleets).
+    pub ts_s: f64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Scheduler job id, or `-1` when not job-scoped.
+    pub job: i64,
+    /// Cluster round, or `-1` when not round-scoped.
+    pub round: i64,
+    /// Worker id or kind-specific small integer, or `-1`.
+    pub worker: i64,
+    /// Kind-specific measurement, or `0.0`.
+    pub value: f64,
+}
+
+struct Ring {
+    /// Preallocated to `cap` — pushes never reallocate.
+    buf: Vec<JournalEvent>,
+    cap: usize,
+    /// Index of the oldest entry once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+}
+
+/// Bounded ring-buffer journal. Thread-safe (one mutex); append is
+/// allocation-free in steady state. See the [module docs](self) for
+/// the overall model.
+pub struct Journal {
+    ring: Mutex<Ring>,
+}
+
+impl Journal {
+    /// Journal bounded at `cap` events (minimum 1). Memory for the
+    /// whole ring is reserved up front.
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Journal {
+            ring: Mutex::new(Ring { buf: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }),
+        }
+    }
+
+    /// Append one event, overwriting the oldest if full.
+    pub fn append(&self, ev: JournalEvent) {
+        let mut r = self.ring.lock().expect("journal poisoned");
+        if r.buf.len() < r.cap {
+            r.buf.push(ev);
+        } else {
+            let head = r.head;
+            r.buf[head] = ev;
+            r.head = (head + 1) % r.cap;
+            r.dropped += 1;
+        }
+    }
+
+    /// Append one event built from parts — the common call shape at
+    /// instrumentation sites.
+    pub fn record(&self, ts_s: f64, kind: EventKind, job: i64, round: i64, worker: i64, value: f64) {
+        self.append(JournalEvent { ts_s, kind, job, round, worker, value });
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("journal poisoned").buf.len()
+    }
+
+    /// True when nothing has been journaled yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().expect("journal poisoned").dropped
+    }
+
+    /// The configured bound.
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().expect("journal poisoned").cap
+    }
+
+    /// Copy out the current contents, oldest first.
+    pub fn snapshot(&self) -> Vec<JournalEvent> {
+        let r = self.ring.lock().expect("journal poisoned");
+        let mut out = Vec::with_capacity(r.buf.len());
+        out.extend_from_slice(&r.buf[r.head..]);
+        out.extend_from_slice(&r.buf[..r.head]);
+        out
+    }
+
+    /// Serialize the journal (capacity, drop count, events oldest
+    /// first) for `sgc serve --journal PATH`.
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .snapshot()
+            .iter()
+            .map(|e| {
+                let mut o = Json::obj();
+                o.set("ts", e.ts_s)
+                    .set("kind", e.kind.as_str())
+                    .set("job", e.job)
+                    .set("round", e.round)
+                    .set("worker", e.worker)
+                    .set("value", e.value);
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("capacity", self.capacity())
+            .set("dropped", self.dropped())
+            .set("events", Json::Arr(events));
+        o
+    }
+}
+
+/// Parse a journal serialized by [`Journal::to_json`] back into its
+/// event list (the input side of `sgc trace export`).
+pub fn events_from_json(doc: &Json) -> crate::Result<Vec<JournalEvent>> {
+    let events = doc
+        .get("events")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("journal JSON: missing \"events\" array"))?;
+    let mut out = Vec::with_capacity(events.len());
+    for (i, e) in events.iter().enumerate() {
+        let kind_name = e
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow::anyhow!("journal event {i}: missing \"kind\""))?;
+        let kind = EventKind::from_name(kind_name)
+            .ok_or_else(|| anyhow::anyhow!("journal event {i}: unknown kind {kind_name:?}"))?;
+        let f = |field: &str| e.get(field).and_then(|v| v.as_f64());
+        out.push(JournalEvent {
+            ts_s: f("ts").unwrap_or(0.0),
+            kind,
+            job: f("job").unwrap_or(-1.0) as i64,
+            round: f("round").unwrap_or(-1.0) as i64,
+            worker: f("worker").unwrap_or(-1.0) as i64,
+            value: f("value").unwrap_or(0.0),
+        });
+    }
+    Ok(out)
+}
+
+/// The trace "process" that hosts non-job-scoped events (reactor,
+/// cluster, scheduler housekeeping) in [`chrome_trace`] output.
+pub const TRACE_REACTOR_PID: i64 = 9999;
+
+/// Convert journal events into Chrome Trace Event Format JSON
+/// (`{"traceEvents": [...]}`), loadable by `chrome://tracing` and
+/// Perfetto. Mapping: each scheduler job is a process (`pid` = job id;
+/// `pid` [`TRACE_REACTOR_PID`] hosts reactor/cluster events);
+/// [`EventKind::RoundAssign`]/[`EventKind::RoundClose`] become `B`/`E`
+/// round spans on thread 0; [`EventKind::WorkerArrive`] becomes an
+/// `X` complete span of the task's service time on thread
+/// `worker + 1`; everything else becomes an `i` instant carrying its
+/// `value` in `args`. Timestamps convert to microseconds.
+pub fn chrome_trace(events: &[JournalEvent]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+
+    // name each job's process (metadata records), plus the shared one
+    let mut jobs: Vec<i64> = events.iter().map(|e| e.job).filter(|&j| j >= 0).collect();
+    jobs.sort_unstable();
+    jobs.dedup();
+    for j in jobs {
+        out.push(meta_process(j, &format!("job {j}")));
+    }
+    out.push(meta_process(TRACE_REACTOR_PID, "reactor / cluster"));
+
+    for e in events {
+        let pid = if e.job >= 0 { e.job } else { TRACE_REACTOR_PID };
+        let ts = e.ts_s * 1e6;
+        match e.kind {
+            EventKind::RoundAssign => {
+                let mut o = base(pid, 0, ts);
+                o.set("ph", "B").set("name", format!("round {}", e.round));
+                out.push(o);
+            }
+            EventKind::RoundClose => {
+                let mut args = Json::obj();
+                args.set("duration_s", e.value).set("waited_out", e.worker);
+                let mut o = base(pid, 0, ts);
+                o.set("ph", "E").set("args", args);
+                out.push(o);
+            }
+            EventKind::WorkerArrive => {
+                let mut args = Json::obj();
+                args.set("service_s", e.value);
+                let mut o = base(pid, e.worker + 1, (e.ts_s - e.value) * 1e6);
+                o.set("ph", "X")
+                    .set("name", format!("task r{}", e.round))
+                    .set("dur", e.value * 1e6)
+                    .set("args", args);
+                out.push(o);
+            }
+            _ => {
+                let mut args = Json::obj();
+                args.set("value", e.value).set("round", e.round).set("worker", e.worker);
+                let mut o = base(pid, 0, ts);
+                o.set("ph", "i").set("name", e.kind.as_str()).set("s", "t").set("args", args);
+                out.push(o);
+            }
+        }
+    }
+
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", "ms").set("traceEvents", Json::Arr(out));
+    doc
+}
+
+fn base(pid: i64, tid: i64, ts_us: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("pid", pid).set("tid", tid).set("ts", ts_us);
+    o
+}
+
+fn meta_process(pid: i64, name: &str) -> Json {
+    let mut args = Json::obj();
+    args.set("name", name);
+    let mut o = base(pid, 0, 0.0);
+    o.set("ph", "M").set("name", "process_name").set("args", args);
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let j = Journal::with_capacity(4);
+        for i in 0..10 {
+            j.record(i as f64, EventKind::RoundAssign, 0, i, -1, 0.0);
+        }
+        assert_eq!(j.len(), 4);
+        assert_eq!(j.capacity(), 4);
+        assert_eq!(j.dropped(), 6);
+        let rounds: Vec<i64> = j.snapshot().iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in ALL_KINDS {
+            assert_eq!(EventKind::from_name(k.as_str()), Some(k));
+        }
+        assert_eq!(EventKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_events() {
+        let j = Journal::with_capacity(16);
+        j.record(1.25, EventKind::WorkerArrive, 2, 7, 3, 0.5);
+        j.record(1.5, EventKind::QueueDepth, -1, -1, -1, 4.0);
+        let doc = Json::parse(&j.to_json().to_string()).unwrap();
+        let events = events_from_json(&doc).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, EventKind::WorkerArrive);
+        assert_eq!(events[0].job, 2);
+        assert_eq!(events[0].round, 7);
+        assert_eq!(events[0].worker, 3);
+        assert!((events[0].value - 0.5).abs() < 1e-12);
+        assert_eq!(events[1].kind, EventKind::QueueDepth);
+        assert_eq!(events[1].job, -1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Leveled logging facade for library diagnostics.
+//!
+//! The library layers (fleet master, reactor, trace recorder, bench
+//! harness, property-test harness) used to diagnose straight through
+//! bare `eprintln!`. This facade replaces those call sites with leveled
+//! emission controlled by the `SGC_LOG` environment variable
+//! (`off|error|warn|info|debug`) and programmatically by [`set_level`]
+//! (the `sgc --verbose` flag maps to [`Level::Info`]). The default is
+//! [`Level::Warn`]: errors and warnings always reach stderr, membership
+//! and progress chatter is opt-in.
+//!
+//! Cost model: an enabled-check is one relaxed atomic load, and the
+//! [`log_warn!`](crate::log_warn)-family macros only evaluate their
+//! format arguments *after* the check passes — a suppressed level costs
+//! nothing beyond that load. Deliberate CLI output (tables, reports,
+//! usage) stays on `println!` in `main.rs` and is not routed here.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Diagnostic severity. Higher levels include all lower ones: setting
+/// [`Level::Info`] shows errors, warnings and info lines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Suppress everything, including errors (`SGC_LOG=off`).
+    Off,
+    /// An operation failed and was abandoned.
+    Error,
+    /// Something unexpected that the code recovered from (default).
+    Warn,
+    /// Membership and progress chatter (`--verbose` / `SGC_LOG=info`).
+    Info,
+    /// Per-event detail (`SGC_LOG=debug`).
+    Debug,
+}
+
+impl Level {
+    /// Short lowercase label used as the stderr line prefix.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn rank(self) -> u8 {
+        match self {
+            Level::Off => 1,
+            Level::Error => 2,
+            Level::Warn => 3,
+            Level::Info => 4,
+            Level::Debug => 5,
+        }
+    }
+}
+
+/// 0 means "not yet initialized from the environment"; otherwise the
+/// stored value is `Level::rank()` of the active threshold.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn rank_from_env() -> u8 {
+    match std::env::var("SGC_LOG").ok().as_deref() {
+        Some("off") | Some("none") => Level::Off.rank(),
+        Some("error") => Level::Error.rank(),
+        Some("warn") => Level::Warn.rank(),
+        Some("info") => Level::Info.rank(),
+        Some("debug") => Level::Debug.rank(),
+        _ => Level::Warn.rank(),
+    }
+}
+
+fn current_rank() -> u8 {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => {
+            let r = rank_from_env();
+            LEVEL.store(r, Ordering::Relaxed);
+            r
+        }
+        r => r,
+    }
+}
+
+/// Set the active threshold, overriding `SGC_LOG`. `sgc --verbose`
+/// calls this with [`Level::Info`].
+pub fn set_level(level: Level) {
+    LEVEL.store(level.rank(), Ordering::Relaxed);
+}
+
+/// Would a message at `level` be emitted right now? The macros check
+/// this before formatting; call it directly to skip expensive argument
+/// preparation.
+pub fn enabled(level: Level) -> bool {
+    level != Level::Off && level.rank() <= current_rank()
+}
+
+/// Emit one pre-formatted diagnostic line to stderr. Prefer the
+/// [`log_warn!`](crate::log_warn)-family macros, which gate on
+/// [`enabled`] before formatting.
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    eprintln!("sgc[{}] {}", level.as_str(), args);
+}
+
+/// Log at [`Level::Error`]: the operation failed and was abandoned.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::emit($crate::obs::log::Level::Error, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at [`Level::Warn`]: unexpected but recovered. Shown by default.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::emit($crate::obs::log::Level::Warn, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at [`Level::Info`]: progress and membership chatter. Hidden
+/// unless `--verbose` / `SGC_LOG=info`.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::emit($crate::obs::log::Level::Info, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at [`Level::Debug`]: per-event detail (`SGC_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::emit($crate::obs::log::Level::Debug, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_gate_in_severity_order() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+
+        // restore the default so concurrently running tests keep the
+        // usual errors-and-warnings behavior
+        set_level(Level::Warn);
+    }
+}

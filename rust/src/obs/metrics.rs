@@ -1,0 +1,405 @@
+//! Metrics registry: counters, gauges and fixed-bucket latency
+//! histograms with Prometheus text exposition.
+//!
+//! Cost model, pinned by `tests/alloc.rs`: *registration* allocates
+//! (metric names, label strings, the bucket array); *recording* is
+//! allocation-free — a counter bump or gauge store is one relaxed
+//! atomic op, a histogram record is a scan over a fixed bucket array
+//! plus two atomic updates. Handles ([`Counter`], [`Gauge`],
+//! [`Histogram`]) are `Arc`-backed and cheap to clone, so layers hold
+//! their own handles and never touch the registry on the hot path.
+//! Rendering the Prometheus exposition ([`MetricsRegistry::render_prometheus`])
+//! is the cold scrape path and may allocate freely.
+//!
+//! Histograms expose p50/p90/p99 estimates by linear interpolation
+//! inside the owning bucket, rendered in Prometheus *summary* style
+//! (`name{quantile="0.5"} …` plus `name_sum`/`name_count`). The
+//! estimate's resolution is the bucket width — adequate for latency
+//! dashboards, and the fixed bounds are what keep recording
+//! allocation-free.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone event counter (wraps at `u64::MAX`, i.e. never in practice).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `k`.
+    #[inline]
+    pub fn add(&self, k: u64) {
+        self.0.fetch_add(k, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value, stored as `f64` bits.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Default latency bucket upper bounds in seconds: log-spaced from
+/// 1 ms to 64 s, which covers simulated rounds (tens of ms) through
+/// fleet wait-outs (multiple timeouts).
+pub const LATENCY_BUCKETS: [f64; 17] = [
+    0.001, 0.002, 0.004, 0.008, 0.016, 0.032, 0.064, 0.128, 0.256, 0.512, 1.0, 2.0, 4.0, 8.0,
+    16.0, 32.0, 64.0,
+];
+
+struct HistogramInner {
+    /// Sorted finite bucket upper bounds; observations above the last
+    /// bound land in an implicit overflow bucket.
+    bounds: Box<[f64]>,
+    /// One count per bound plus the overflow bucket (`bounds.len() + 1`).
+    counts: Box<[AtomicU64]>,
+    /// Atomic `f64` accumulator (bit-cast; CAS loop on record).
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket histogram with quantile estimation. Cloning shares the
+/// underlying buckets.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Histogram {
+    fn with_bounds(bounds: &[f64]) -> Self {
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistogramInner {
+            bounds: bounds.into(),
+            counts,
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }))
+    }
+
+    /// Record one observation. Allocation-free: a bucket scan plus two
+    /// atomic updates (the sum is a CAS loop, uncontended in the
+    /// single-threaded reactor and scheduler).
+    #[inline]
+    pub fn record(&self, v: f64) {
+        let h = &*self.0;
+        let mut idx = h.bounds.len();
+        for (i, b) in h.bounds.iter().enumerate() {
+            if v <= *b {
+                idx = i;
+                break;
+            }
+        }
+        h.counts[idx].fetch_add(1, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = h.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match h
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Estimate the `q`-quantile (`q` in `0.0..=1.0`) by linear
+    /// interpolation inside the bucket that holds it. Returns `NaN`
+    /// with no observations; observations in the overflow bucket
+    /// report the largest finite bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let h = &*self.0;
+        let total = h.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, cell) in h.counts.iter().enumerate() {
+            let c = cell.load(Ordering::Relaxed);
+            if c > 0 && seen + c >= target {
+                let lo = if i == 0 { 0.0 } else { h.bounds[i - 1] };
+                if i == h.bounds.len() {
+                    return lo; // overflow bucket: clamp to the last bound
+                }
+                let frac = (target - seen) as f64 / c as f64;
+                return lo + (h.bounds[i] - lo) * frac;
+            }
+            seen += c;
+        }
+        h.bounds.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Entry {
+    name: String,
+    labels: String,
+    help: String,
+    metric: Metric,
+}
+
+/// Registry of every metric the process exposes. Layers register once
+/// (allocating) and keep the returned handle; the `/metrics` endpoint
+/// renders the whole registry on demand. Registering the same
+/// `(name, labels)` pair again returns the existing handle, so
+/// re-instrumenting across scheduler runs never duplicates series.
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        MetricsRegistry { entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Register (or look up) a counter. `labels` is the literal
+    /// Prometheus label body, e.g. `job="0"`, or `""` for none.
+    pub fn counter(&self, name: &str, labels: &str, help: &str) -> Counter {
+        let mut entries = self.entries.lock().expect("metrics registry poisoned");
+        for e in entries.iter() {
+            if e.name == name && e.labels == labels {
+                if let Metric::Counter(c) = &e.metric {
+                    return c.clone();
+                }
+            }
+        }
+        let c = Counter(Arc::new(AtomicU64::new(0)));
+        entries.push(Entry {
+            name: name.to_string(),
+            labels: labels.to_string(),
+            help: help.to_string(),
+            metric: Metric::Counter(c.clone()),
+        });
+        c
+    }
+
+    /// Register (or look up) a gauge.
+    pub fn gauge(&self, name: &str, labels: &str, help: &str) -> Gauge {
+        let mut entries = self.entries.lock().expect("metrics registry poisoned");
+        for e in entries.iter() {
+            if e.name == name && e.labels == labels {
+                if let Metric::Gauge(g) = &e.metric {
+                    return g.clone();
+                }
+            }
+        }
+        let g = Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits())));
+        entries.push(Entry {
+            name: name.to_string(),
+            labels: labels.to_string(),
+            help: help.to_string(),
+            metric: Metric::Gauge(g.clone()),
+        });
+        g
+    }
+
+    /// Register (or look up) a latency histogram with the default
+    /// [`LATENCY_BUCKETS`].
+    pub fn histogram(&self, name: &str, labels: &str, help: &str) -> Histogram {
+        self.histogram_with_buckets(name, labels, help, &LATENCY_BUCKETS)
+    }
+
+    /// Register (or look up) a histogram with caller-chosen bucket
+    /// upper bounds (must be sorted ascending).
+    pub fn histogram_with_buckets(
+        &self,
+        name: &str,
+        labels: &str,
+        help: &str,
+        bounds: &[f64],
+    ) -> Histogram {
+        let mut entries = self.entries.lock().expect("metrics registry poisoned");
+        for e in entries.iter() {
+            if e.name == name && e.labels == labels {
+                if let Metric::Histogram(h) = &e.metric {
+                    return h.clone();
+                }
+            }
+        }
+        let h = Histogram::with_bounds(bounds);
+        entries.push(Entry {
+            name: name.to_string(),
+            labels: labels.to_string(),
+            help: help.to_string(),
+            metric: Metric::Histogram(h.clone()),
+        });
+        h
+    }
+
+    /// Render the whole registry in Prometheus text exposition format.
+    /// Histograms render as summaries with `quantile="0.5|0.9|0.99"`
+    /// series plus `_sum` and `_count`. Cold path; allocates.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let entries = self.entries.lock().expect("metrics registry poisoned");
+        let mut out = String::new();
+        let mut described: Vec<&str> = Vec::new();
+        for e in entries.iter() {
+            if !described.contains(&e.name.as_str()) {
+                described.push(&e.name);
+                let kind = match &e.metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) => "summary",
+                };
+                let _ = writeln!(out, "# HELP {} {}", e.name, e.help);
+                let _ = writeln!(out, "# TYPE {} {}", e.name, kind);
+            }
+            match &e.metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{} {}", series(&e.name, &e.labels, ""), c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{} {}", series(&e.name, &e.labels, ""), num(g.get()));
+                }
+                Metric::Histogram(h) => {
+                    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                        let _ = writeln!(
+                            out,
+                            "{} {}",
+                            series(&e.name, &e.labels, &format!("quantile=\"{label}\"")),
+                            num(h.quantile(q))
+                        );
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{} {}",
+                        series(&format!("{}_sum", e.name), &e.labels, ""),
+                        num(h.sum())
+                    );
+                    let _ = writeln!(
+                        out,
+                        "{} {}",
+                        series(&format!("{}_count", e.name), &e.labels, ""),
+                        h.count()
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One series head: `name`, `name{labels}`, `name{extra}` or
+/// `name{labels,extra}`.
+fn series(name: &str, labels: &str, extra: &str) -> String {
+    match (labels.is_empty(), extra.is_empty()) {
+        (true, true) => name.to_string(),
+        (true, false) => format!("{name}{{{extra}}}"),
+        (false, true) => format!("{name}{{{labels}}}"),
+        (false, false) => format!("{name}{{{labels},{extra}}}"),
+    }
+}
+
+/// Prometheus float rendering: `NaN` is the spec's literal for "no
+/// observations yet"; everything else uses Rust's shortest form.
+fn num(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let h = Histogram::with_bounds(&LATENCY_BUCKETS);
+        // 1..=100 observations at 10ms..1s, uniformly spaced
+        for i in 1..=100 {
+            h.record(i as f64 * 0.01);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 50.5).abs() < 1e-6);
+        let p50 = h.quantile(0.5);
+        assert!((0.25..=0.75).contains(&p50), "p50 estimate off: {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((0.75..=1.01).contains(&p99), "p99 estimate off: {p99}");
+        assert!(h.quantile(0.0) > 0.0);
+    }
+
+    #[test]
+    fn overflow_bucket_clamps_to_last_bound() {
+        let h = Histogram::with_bounds(&[0.1, 1.0]);
+        h.record(50.0);
+        assert_eq!(h.quantile(0.5), 1.0);
+        assert!(Histogram::with_bounds(&[0.1]).quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn reregistration_returns_the_same_series() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("sgc_x_total", "job=\"0\"", "x");
+        let b = reg.counter("sgc_x_total", "job=\"0\"", "x");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        let text = reg.render_prometheus();
+        assert_eq!(text.matches("sgc_x_total{job=\"0\"} 2").count(), 1);
+    }
+
+    #[test]
+    fn render_emits_type_lines_and_summary_series() {
+        let reg = MetricsRegistry::new();
+        reg.counter("sgc_t_total", "", "t").add(3);
+        reg.gauge("sgc_g", "", "g").set(2.5);
+        let h = reg.histogram("sgc_lat_seconds", "job=\"1\"", "lat");
+        h.record(0.02);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE sgc_t_total counter"));
+        assert!(text.contains("sgc_t_total 3\n"));
+        assert!(text.contains("# TYPE sgc_g gauge"));
+        assert!(text.contains("sgc_g 2.5\n"));
+        assert!(text.contains("# TYPE sgc_lat_seconds summary"));
+        assert!(text.contains("sgc_lat_seconds{job=\"1\",quantile=\"0.5\"}"));
+        assert!(text.contains("sgc_lat_seconds{job=\"1\",quantile=\"0.99\"}"));
+        assert!(text.contains("sgc_lat_seconds_count{job=\"1\"} 1\n"));
+    }
+}

@@ -1,0 +1,62 @@
+//! Observability: metrics registry, structured event journal, and the
+//! leveled log facade.
+//!
+//! Three invariants govern this module, all pinned by tests:
+//!
+//! 1. **Zero-cost when disabled.** Every layer holds an
+//!    `Option<…Obs…>`; with no bundle attached the hooks compile to a
+//!    `None` check and the log macros to one relaxed atomic load.
+//! 2. **Allocation-free when enabled.** Recording a counter, gauge or
+//!    histogram sample is pure atomics; a journal append writes into a
+//!    preallocated ring slot (`tests/alloc.rs` pins both at 0
+//!    allocations).
+//! 3. **Read-only.** Instrumentation observes decisions, it never
+//!    participates in them — a run with observability enabled produces
+//!    byte-identical `ScheduleReport`s to one without (`tests/obs.rs`
+//!    golden test).
+//!
+//! One [`Obs`] bundle is shared (`Arc`) across the scheduler, cluster
+//! backend and adaptive controller so a whole serving stack lands in a
+//! single registry and a single timeline. The fleet reactor renders
+//! the registry as Prometheus text on its own poll loop
+//! (`FleetCluster::serve_metrics`), and the journal exports to Chrome
+//! Trace Event Format via [`chrome_trace`] (`sgc trace export`).
+
+pub mod journal;
+pub mod log;
+pub mod metrics;
+
+pub use journal::{chrome_trace, events_from_json, EventKind, Journal, JournalEvent};
+pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry};
+
+/// Default journal bound: 64Ki events ≈ 3 MiB, hours of serving at
+/// typical round rates before the ring starts overwriting.
+pub const DEFAULT_JOURNAL_EVENTS: usize = 65_536;
+
+/// One observability bundle: the metric registry the `/metrics`
+/// endpoint renders, plus the bounded event journal. Shared across
+/// layers as `Arc<Obs>`.
+pub struct Obs {
+    /// Process-wide metric registry (counters, gauges, histograms).
+    pub metrics: MetricsRegistry,
+    /// Bounded structured event journal.
+    pub journal: Journal,
+}
+
+impl Obs {
+    /// Bundle with the [`DEFAULT_JOURNAL_EVENTS`] journal bound.
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_JOURNAL_EVENTS)
+    }
+
+    /// Bundle with a caller-chosen journal bound.
+    pub fn with_capacity(journal_events: usize) -> Self {
+        Obs { metrics: MetricsRegistry::new(), journal: Journal::with_capacity(journal_events) }
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Self::new()
+    }
+}

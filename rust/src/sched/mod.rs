@@ -80,7 +80,10 @@ use crate::adapt::{AdaptiveConfig, AdaptiveController, SchemeSwapped};
 use crate::cluster::{ClusterEvent, EventCluster, JobId, UNPLACED};
 use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::{merge_segments, RunReport};
+use crate::obs::{Counter, EventKind, Gauge, Histogram, Obs};
 use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
+use crate::util::json::Json;
+use std::sync::Arc;
 
 /// Which physical worker *initially* hosts a job's logical worker 0
 /// (elastic re-placement may later migrate individual slots off retired
@@ -247,6 +250,31 @@ impl std::fmt::Display for FleetUtilization {
     }
 }
 
+impl FleetUtilization {
+    /// Serialize every field (for `sgc serve --report-json`): CI smokes
+    /// and operators assert on structured output instead of scraping
+    /// stdout.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("workers", self.workers)
+            .set("jobs", self.jobs)
+            .set("makespan_s", self.makespan_s)
+            .set("total_session_s", self.total_session_s)
+            .set("rounds", self.rounds)
+            .set("worker_done_events", self.worker_done_events)
+            .set("worker_dead_events", self.worker_dead_events)
+            .set("worker_joined_events", self.worker_joined_events)
+            .set("worker_retired_events", self.worker_retired_events)
+            .set("replacements", self.replacements)
+            .set("scheme_swaps", self.scheme_swaps)
+            .set("refit_candidates", self.refit_candidates)
+            .set("profile_staleness", self.profile_staleness)
+            .set("multiplexing_gain", self.multiplexing_gain)
+            .set("placement", self.placement);
+        o
+    }
+}
+
 /// Everything a finished multi-job run produced.
 #[derive(Clone, Debug)]
 pub struct ScheduleReport {
@@ -259,6 +287,38 @@ pub struct ScheduleReport {
     pub swaps: Vec<SchemeSwapped>,
     /// Aggregate fleet-level accounting for the run.
     pub utilization: FleetUtilization,
+}
+
+impl ScheduleReport {
+    /// Full structured dump: per-job [`RunReport`]s (see
+    /// [`RunReport::to_json`]), executed swaps, and the utilization
+    /// summary.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("reports", Json::Arr(self.reports.iter().map(|r| r.to_json()).collect()))
+            .set("swaps", Json::Arr(self.swaps.iter().map(|s| s.to_json()).collect()))
+            .set("utilization", self.utilization.to_json());
+        o
+    }
+}
+
+/// Handles into an attached [`Obs`] bundle. Registered once (the
+/// allocating step); the per-round hooks then record through these
+/// handles with pure atomics and ring writes — never touching the
+/// registry on the hot path.
+struct SchedObs {
+    obs: Arc<Obs>,
+    /// Per-job round-latency summaries, indexed by job id; registered
+    /// at run start once the job count is known.
+    job_latency: Vec<Histogram>,
+    rounds: Counter,
+    arrivals: Counter,
+    deaths: Counter,
+    swaps: Counter,
+    replacements: Counter,
+    queue_depth: Gauge,
+    makespan: Gauge,
+    gain: Gauge,
 }
 
 /// One admitted job's scheduling state.
@@ -325,6 +385,8 @@ pub struct JobScheduler<'c> {
     pending: Vec<usize>,
     /// Adaptive control plane, when enabled (see [`crate::adapt`]).
     adapt: Option<AdaptiveController>,
+    /// Observability handles, when attached (see [`crate::obs`]).
+    obs: Option<SchedObs>,
     /// Hot-swaps executed so far, in execution order.
     swaps: Vec<SchemeSwapped>,
     // --- utilization counters ---
@@ -358,6 +420,7 @@ impl<'c> JobScheduler<'c> {
             state: Vec::new(),
             pending: Vec::new(),
             adapt: None,
+            obs: None,
             swaps: Vec::new(),
             done_events: 0,
             dead_events: 0,
@@ -380,6 +443,48 @@ impl<'c> JobScheduler<'c> {
     /// The adaptive controller, when adaptation is enabled (inspection).
     pub fn adaptive(&self) -> Option<&AdaptiveController> {
         self.adapt.as_ref()
+    }
+
+    /// Attach an observability bundle (see [`crate::obs`]): per-job
+    /// round-latency histograms, fleet-level counters/gauges, and
+    /// journaled round spans (assign → per-worker arrival → μ-cut →
+    /// close → decode). The hooks are read-only — an instrumented run
+    /// produces a byte-identical [`ScheduleReport`] (pinned by
+    /// `tests/obs.rs`) — and allocation-free per round in steady state
+    /// (pinned by `tests/alloc.rs`). Call before [`run`](Self::run);
+    /// the bundle is shared with the adaptive controller when one is
+    /// configured.
+    pub fn set_obs(&mut self, obs: Arc<Obs>) {
+        let m = &obs.metrics;
+        let rounds = m.counter("sgc_rounds_closed_total", "", "Rounds committed across all jobs");
+        let arrivals = m.counter("sgc_worker_done_total", "", "WorkerDone events absorbed");
+        let deaths = m.counter("sgc_worker_dead_total", "", "WorkerDead events absorbed");
+        let swaps = m.counter("sgc_scheme_swaps_total", "", "Adaptive hot-swaps executed");
+        let replacements = m.counter(
+            "sgc_replacements_total",
+            "",
+            "Logical slots migrated off retired workers onto live spares",
+        );
+        let queue_depth = m.gauge("sgc_jobs_unfinished", "", "Admitted jobs still running");
+        let makespan =
+            m.gauge("sgc_fleet_makespan_seconds", "", "Cluster-clock span of the last run");
+        let gain = m.gauge(
+            "sgc_fleet_multiplexing_gain",
+            "",
+            "Session seconds packed per shared-fleet second",
+        );
+        self.obs = Some(SchedObs {
+            obs,
+            job_latency: Vec::new(),
+            rounds,
+            arrivals,
+            deaths,
+            swaps,
+            replacements,
+            queue_depth,
+            makespan,
+            gain,
+        });
     }
 
     /// Admit one job; returns its [`JobId`] (also its index in
@@ -449,6 +554,28 @@ impl<'c> JobScheduler<'c> {
             slot.place = (0..sn).map(|i| (i + offset) % n).collect();
         }
         let start_s = self.cluster.now_s();
+
+        // Register per-job series and journal admissions now that the
+        // job count is final. Registration is the allocating step; the
+        // per-round hooks below only touch the returned handles.
+        if let Some(so) = &mut self.obs {
+            so.job_latency.clear();
+            for j in 0..jobs {
+                so.job_latency.push(so.obs.metrics.histogram(
+                    "sgc_round_latency_seconds",
+                    &format!("job=\"{j}\""),
+                    "Per-job protocol round latency",
+                ));
+                so.obs.journal.record(start_s, EventKind::JobAdmit, j as i64, -1, -1, 0.0);
+            }
+            so.queue_depth.set(jobs as f64);
+            so.obs.journal.record(start_s, EventKind::QueueDepth, -1, -1, -1, jobs as f64);
+        }
+        // share the bundle with the adaptive controller, whichever of
+        // set_obs / set_adaptive was called first
+        if let (Some(ad), Some(so)) = (self.adapt.as_mut(), self.obs.as_ref()) {
+            ad.set_obs(so.obs.clone());
+        }
 
         // Open round 1 of every job, in job-id order (determinism: the
         // backend's RNG draws follow submission order).
@@ -552,6 +679,11 @@ impl<'c> JobScheduler<'c> {
             multiplexing_gain: if makespan > 0.0 { total_session_s / makespan } else { 0.0 },
             placement: self.policy.label(),
         };
+        if let Some(so) = &self.obs {
+            so.makespan.set(utilization.makespan_s);
+            so.gain.set(utilization.multiplexing_gain);
+            so.queue_depth.set(0.0);
+        }
         Ok(ScheduleReport { reports, swaps, utilization })
     }
 
@@ -574,6 +706,9 @@ impl<'c> JobScheduler<'c> {
                 // never fill it, however alive it is now).
                 ClusterEvent::WorkerDone { job, round, worker, finish_s } => {
                     self.done_events += 1;
+                    if let Some(so) = &self.obs {
+                        so.arrivals.inc();
+                    }
                     let Some(slot) = self.slots.get_mut(job) else { continue };
                     if slot.open && round == slot.round {
                         // physical → logical through this round's
@@ -592,11 +727,26 @@ impl<'c> JobScheduler<'c> {
                             if let Some(ad) = self.adapt.as_mut() {
                                 ad.observe_done(job, round, logical, finish_s);
                             }
+                            if let Some(so) = &self.obs {
+                                // the arrival's wall instant is the
+                                // round origin plus the service time
+                                so.obs.journal.record(
+                                    slot.submit_s + finish_s,
+                                    EventKind::WorkerArrive,
+                                    job as i64,
+                                    round as i64,
+                                    logical as i64,
+                                    finish_s,
+                                );
+                            }
                         }
                     }
                 }
                 ClusterEvent::WorkerDead { job, round, worker } => {
                     self.dead_events += 1;
+                    if let Some(so) = &self.obs {
+                        so.deaths.inc();
+                    }
                     if let Some(slot) = self.slots.get_mut(job) {
                         if slot.open && round == slot.round {
                             if let Some(d) = slot.dead.get_mut(worker) {
@@ -695,12 +845,46 @@ impl<'c> JobScheduler<'c> {
         self.rounds_closed += 1;
         obs.round_closed(j, session, &slot.plan, &events)?;
         slot.open = false;
+        // Journal the commit: the μ-cut decision (κ, detected
+        // stragglers), the round span end, and any paper-jobs that
+        // became decodable — all read from the committed RoundRecord,
+        // never re-derived.
+        if let Some(so) = &self.obs {
+            if let Some(rec) = slot.session.as_ref().expect("closed slot").last_round() {
+                so.rounds.inc();
+                if let Some(h) = so.job_latency.get(j) {
+                    h.record(rec.duration_s);
+                }
+                let (jid, rid) = (j as i64, round as i64);
+                so.obs.journal.record(
+                    now,
+                    EventKind::CutDecision,
+                    jid,
+                    rid,
+                    rec.detected_stragglers as i64,
+                    rec.kappa_s,
+                );
+                so.obs.journal.record(
+                    now,
+                    EventKind::RoundClose,
+                    jid,
+                    rid,
+                    rec.waited_out as i64,
+                    rec.duration_s,
+                );
+                for ev in &events {
+                    if let SessionEvent::JobDecoded { job, .. } = ev {
+                        so.obs.journal.record(now, EventKind::JobDecode, jid, *job as i64, -1, 0.0);
+                    }
+                }
+            }
+        }
         // Adaptive step (no-op without `set_adaptive`): fold the closed
         // round into the profile, tick the background re-fit, and — once
         // a swap is staged — truncate the incumbent session so it drains
         // its decode tail toward the swap boundary.
         if self.adapt.is_some() {
-            self.adaptive_close(j);
+            self.adaptive_close(j, now);
         }
         let slot = &mut self.slots[j];
         if slot.session.as_ref().expect("closed slot").is_complete() {
@@ -718,10 +902,10 @@ impl<'c> JobScheduler<'c> {
     /// Folding, re-fit ticking and swap staging all happen here, between
     /// rounds — the swap itself executes in `finish_segment` once the
     /// truncated session completes its decode tail.
-    fn adaptive_close(&mut self, j: usize) {
+    fn adaptive_close(&mut self, j: usize, now: f64) {
         let round = self.slots[j].round;
         let ad = self.adapt.as_mut().expect("adaptive_close without a controller");
-        ad.round_closed(j, round, &self.slots[j].scheme);
+        ad.round_closed(j, round, &self.slots[j].scheme, now);
         if ad.pending_swap(j).is_some() {
             // Idempotent: every close while draining re-asserts the cap.
             self.slots[j]
@@ -768,6 +952,17 @@ impl<'c> JobScheduler<'c> {
                     predicted_gain: gain,
                     at_s: now,
                 });
+                if let Some(so) = &self.obs {
+                    so.swaps.inc();
+                    so.obs.journal.record(
+                        now,
+                        EventKind::SchemeSwap,
+                        j as i64,
+                        slot.round as i64,
+                        -1,
+                        gain,
+                    );
+                }
                 slot.round_base = slot.round;
                 slot.assigned_base = done;
                 slot.segments.push(segment);
@@ -783,14 +978,27 @@ impl<'c> JobScheduler<'c> {
                 // never swapped: the plain single-session path — the
                 // report is byte-identical to a non-adaptive run
                 slot.report = Some(segment);
+                self.note_job_finished(j, now);
                 Ok(())
             }
             None => {
                 slot.segments.push(segment);
                 slot.segment_assigned.push(assigned);
                 slot.report = Some(merge_segments(&slot.segments, &slot.segment_assigned));
+                self.note_job_finished(j, now);
                 Ok(())
             }
+        }
+    }
+
+    /// Journal a job's completion and refresh the queue-depth gauge
+    /// (read-only; no-op without an attached bundle).
+    fn note_job_finished(&self, j: usize, now: f64) {
+        if let Some(so) = &self.obs {
+            let depth = self.slots.iter().filter(|s| s.report.is_none()).count();
+            so.obs.journal.record(now, EventKind::JobFinish, j as i64, -1, -1, 0.0);
+            so.queue_depth.set(depth as f64);
+            so.obs.journal.record(now, EventKind::QueueDepth, -1, -1, -1, depth as f64);
         }
     }
 
@@ -817,6 +1025,17 @@ impl<'c> JobScheduler<'c> {
             if let Some(s) = spare {
                 slot.place[logical] = s;
                 self.replacements += 1;
+                if let Some(so) = &self.obs {
+                    so.replacements.inc();
+                    so.obs.journal.record(
+                        self.cluster.now_s(),
+                        EventKind::Replacement,
+                        j as i64,
+                        -1,
+                        s as i64,
+                        p as f64,
+                    );
+                }
             }
         }
     }
@@ -869,6 +1088,18 @@ impl<'c> JobScheduler<'c> {
         // μ-cutoff never fires early by the Assign-write duration.
         // Simulated clocks do not move inside `submit`, so this is exact.
         self.slots[j].submit_s = self.cluster.now_s();
+        if let Some(so) = &self.obs {
+            // round span start, stamped with the same origin the μ-rule
+            // measures arrivals against
+            so.obs.journal.record(
+                self.slots[j].submit_s,
+                EventKind::RoundAssign,
+                j as i64,
+                job_round as i64,
+                -1,
+                0.0,
+            );
+        }
         // Ground truth (simulators know it): un-permute into logical ids
         // so the report's true pattern is placement-agnostic.
         if let Some(state) = self.cluster.true_state(j, job_round) {

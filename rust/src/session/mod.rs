@@ -445,6 +445,15 @@ impl SgcSession {
         self.true_pattern.push_round(state.to_vec());
     }
 
+    /// The committed record of the most recently closed round — κ, the
+    /// detected-straggler count, the wait-out flag and the protocol
+    /// round duration. Observability layers journal the μ-cut decision
+    /// from here at round close instead of re-deriving it; `None`
+    /// before the first round commits.
+    pub fn last_round(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
     /// Workers whose completion time has not been submitted for the open
     /// round (empty outside a round).
     pub fn pending_workers(&self) -> Vec<usize> {

@@ -87,7 +87,7 @@ pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usi
         }
         // Re-run the smallest failure outside catch_unwind for the real
         // panic message/backtrace.
-        eprintln!(
+        crate::log_error!(
             "property '{name}' failed: seed={seed} case={case} size={smallest_failure} \
              (replay with SGC_PROP_SEED={seed})"
         );

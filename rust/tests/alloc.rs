@@ -122,4 +122,41 @@ fn steady_state_round_allocations_are_constant_and_small() {
          {sched_rounds} rounds) — the event-path allocation budget regressed \
          (expected ≤ 16; an O(n) event path costs hundreds at n = 256)"
     );
+
+    // --- Phase 3: the observability record path is allocation-free ---
+    // Counters, gauges, histogram records and journal appends are the
+    // per-event hot path of `sgc::obs` — registration allocates once up
+    // front; recording must never allocate, including after the journal
+    // ring wraps (2000 appends into a 1024-slot ring below cover the
+    // overwrite path).
+    let obs = sgc::obs::Obs::with_capacity(1024);
+    let c = obs.metrics.counter("alloc_test_total", "", "phase-3 counter");
+    let g = obs.metrics.gauge("alloc_test_gauge", "", "phase-3 gauge");
+    let h = obs.metrics.histogram("alloc_test_seconds", "", "phase-3 histogram");
+    // prime the ring to capacity so wraps are exercised from the start
+    for i in 0..1024 {
+        obs.journal.record(i as f64, sgc::obs::EventKind::RoundClose, 0, i as i64, 0, 0.5);
+    }
+    let iters = 2000usize;
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for i in 0..iters {
+        c.inc();
+        g.set(i as f64);
+        h.record(0.001 * i as f64);
+        obs.journal.record(
+            i as f64,
+            sgc::obs::EventKind::WorkerArrive,
+            0,
+            i as i64,
+            (i % 7) as i64,
+            0.25,
+        );
+    }
+    let total = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        total, 0,
+        "obs record path allocated {total} times over {iters} \
+         counter+gauge+histogram+journal iterations (expected 0: \
+         registration allocates, recording must not)"
+    );
 }

@@ -1,0 +1,191 @@
+//! Observability-stack integration tests (see `sgc::obs` and
+//! DESIGN.md §Observability):
+//!
+//! 1. **Zero perturbation** — an instrumented scheduler run produces a
+//!    byte-identical `ScheduleReport` to an uninstrumented one (the
+//!    hooks are read-only, and on the simulator they must not touch
+//!    the RNG stream).
+//! 2. **Journal coverage** — an instrumented run journals the full
+//!    round lifecycle (assign → arrivals → μ-cut → close → decode),
+//!    and the journal JSON round-trips through `events_from_json`.
+//! 3. **Chrome trace validity** — `chrome_trace` output parses back as
+//!    JSON and its `B`/`E` round spans balance per process.
+//! 4. **Reactor-served `/metrics`** — a real HTTP scrape over TCP
+//!    against a loopback fleet returns per-job latency quantiles,
+//!    served by the fleet's own poll(2) reactor (no metrics thread).
+
+use sgc::cluster::{EventCluster, SimCluster};
+use sgc::coding::SchemeConfig;
+use sgc::fleet::LoopbackFleet;
+use sgc::obs::{chrome_trace, events_from_json, EventKind, Obs};
+use sgc::sched::{JobScheduler, JobSpec};
+use sgc::session::SessionConfig;
+use sgc::straggler::GilbertElliot;
+use sgc::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One deterministic two-job scheduler run over the Gilbert-Elliot
+/// simulator, optionally instrumented; returns the report's JSON text.
+fn run_serve(obs: Option<&Arc<Obs>>) -> String {
+    let n = 12;
+    let mut sim =
+        SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 19), 19 ^ 0xc1);
+    if let Some(o) = obs {
+        sim.set_obs(o.clone());
+    }
+    let mut sched = JobScheduler::new(&mut sim);
+    if let Some(o) = obs {
+        sched.set_obs(o.clone());
+    }
+    let spec = JobSpec {
+        scheme: SchemeConfig::gc(n, 2),
+        session: SessionConfig { jobs: 6, ..Default::default() },
+    };
+    for _ in 0..2 {
+        sched.admit(&spec).expect("sizes match");
+    }
+    sched.run().expect("quiet run completes").to_json().to_string()
+}
+
+#[test]
+fn instrumented_run_report_is_byte_identical() {
+    let plain = run_serve(None);
+    let obs = Arc::new(Obs::new());
+    let instrumented = run_serve(Some(&obs));
+    assert_eq!(
+        plain, instrumented,
+        "observability hooks perturbed the run: reports differ"
+    );
+    // and the instrumentation actually observed the run
+    assert!(!obs.journal.is_empty(), "instrumented run journaled nothing");
+    let rendered = obs.metrics.render_prometheus();
+    assert!(
+        rendered.contains("sgc_round_latency_seconds{job=\"0\",quantile=\"0.5\"}"),
+        "missing per-job latency series:\n{rendered}"
+    );
+    assert!(rendered.contains("sgc_rounds_closed_total"), "{rendered}");
+}
+
+#[test]
+fn journal_covers_the_round_lifecycle_and_roundtrips() {
+    let obs = Arc::new(Obs::new());
+    run_serve(Some(&obs));
+    let events = obs.journal.snapshot();
+    for kind in [
+        EventKind::JobAdmit,
+        EventKind::RoundAssign,
+        EventKind::WorkerArrive,
+        EventKind::CutDecision,
+        EventKind::RoundClose,
+        EventKind::JobDecode,
+        EventKind::JobFinish,
+        EventKind::QueueDepth,
+        EventKind::TrueStragglers,
+    ] {
+        assert!(
+            events.iter().any(|e| e.kind == kind),
+            "no {:?} event journaled ({} events total)",
+            kind,
+            events.len()
+        );
+    }
+    // timestamps ride the cluster clock: non-negative and non-absurd
+    assert!(events.iter().all(|e| e.ts_s >= 0.0));
+    // JSON round-trip preserves the event list
+    let doc = Json::parse(&obs.journal.to_json().to_string()).expect("journal JSON parses");
+    let back = events_from_json(&doc).expect("journal JSON decodes");
+    assert_eq!(back.len(), events.len());
+    assert!(back
+        .iter()
+        .zip(&events)
+        .all(|(a, b)| a.kind == b.kind && a.job == b.job && a.round == b.round));
+}
+
+#[test]
+fn chrome_trace_is_valid_and_spans_balance() {
+    let obs = Arc::new(Obs::new());
+    run_serve(Some(&obs));
+    let trace = chrome_trace(&obs.journal.snapshot());
+    // must parse back as JSON and carry a non-empty traceEvents array
+    let doc = Json::parse(&trace.to_string()).expect("chrome trace parses");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    // B/E round spans must balance per pid; X spans must carry durations
+    let mut open: std::collections::HashMap<i64, i64> = std::collections::HashMap::new();
+    let mut complete_spans = 0usize;
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).expect("ph");
+        let pid = e.get("pid").and_then(|p| p.as_f64()).expect("pid") as i64;
+        match ph {
+            "B" => *open.entry(pid).or_insert(0) += 1,
+            "E" => {
+                let c = open.entry(pid).or_insert(0);
+                *c -= 1;
+                assert!(*c >= 0, "E without matching B on pid {pid}");
+            }
+            "X" => {
+                complete_spans += 1;
+                let dur = e.get("dur").and_then(|d| d.as_f64()).expect("dur");
+                assert!(dur >= 0.0);
+            }
+            "i" | "M" => {}
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert!(open.values().all(|&c| c == 0), "unbalanced round spans: {open:?}");
+    assert!(complete_spans > 0, "no worker task spans in the trace");
+}
+
+/// Scrape `/metrics` over a real TCP connection while the fleet's
+/// reactor serves it — the endpoint shares the master's poll(2) loop,
+/// so the scrape completes while the main thread pumps `poll`.
+#[test]
+fn fleet_reactor_serves_metrics_over_http() {
+    let mut fleet = LoopbackFleet::spawn(2, None).expect("spawn");
+    let obs = Arc::new(Obs::new());
+    fleet.cluster.set_obs(obs.clone());
+    let bound = fleet.cluster.serve_metrics("127.0.0.1:0").expect("bind metrics");
+    {
+        let mut sched = JobScheduler::new(&mut fleet.cluster);
+        sched.set_obs(obs.clone());
+        sched
+            .admit(&JobSpec {
+                scheme: SchemeConfig::gc(2, 1),
+                session: SessionConfig { jobs: 4, ..Default::default() },
+            })
+            .expect("sizes match");
+        sched.run().expect("fleet run completes");
+    }
+    let client = std::thread::spawn(move || {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&bound).expect("connect scrape");
+        s.write_all(b"GET /metrics HTTP/1.0\r\nHost: sgc\r\n\r\n").expect("send request");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read response");
+        out
+    });
+    // the reactor serves the scrape from inside poll()
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !client.is_finished() {
+        assert!(std::time::Instant::now() < deadline, "scrape never completed");
+        let now = fleet.cluster.now_s();
+        let _ = fleet.cluster.poll(now + 0.05);
+    }
+    let resp = client.join().expect("client thread");
+    assert!(resp.starts_with("HTTP/1.0 200"), "bad response head:\n{resp}");
+    assert!(resp.contains("Content-Type: text/plain; version=0.0.4"), "{resp}");
+    assert!(
+        resp.contains("sgc_round_latency_seconds{job=\"0\",quantile=\"0.5\"}"),
+        "missing p50 series:\n{resp}"
+    );
+    assert!(
+        resp.contains("sgc_round_latency_seconds{job=\"0\",quantile=\"0.99\"}"),
+        "missing p99 series:\n{resp}"
+    );
+    assert!(resp.contains("sgc_frame_bytes_in_total"), "{resp}");
+    fleet.shutdown().expect("shutdown");
+}
