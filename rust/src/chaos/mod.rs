@@ -1,0 +1,370 @@
+//! Deterministic chaos harness: scripted, seeded fault plans injected
+//! uniformly into the simulator and the TCP fleet.
+//!
+//! A [`ChaosPlan`] is parsed from a compact spec
+//! (`sgc serve --chaos crash@r2,hang@r4:w1 --chaos-seed 7`) and then
+//! *resolved* against a concrete fleet width: every fault without an
+//! explicit target draws its victim workers from a [`Pcg32`] stream
+//! keyed on `(seed, fault index)`, so the same spec + seed hits the
+//! same workers in the same rounds, run after run — which is what makes
+//! the chaos matrix tests (`tests/chaos.rs`) assert byte-identical
+//! reports across reruns.
+//!
+//! Fault rounds are **cluster submission ordinals** (1-based): the
+//! `k`-th `submit` call on the shared cluster, the same counter the
+//! fleet master uses for its wire-level sequence numbers. Injection
+//! sites:
+//!
+//! * [`crate::cluster::SimCluster::set_chaos`] — faults are applied
+//!   *after* the round's service-time draws, so a chaos run never
+//!   perturbs the RNG stream of the corresponding fault-free run
+//!   (unaffected jobs stay byte-identical);
+//! * [`crate::fleet::FleetCluster::set_chaos`] — master-side faults
+//!   (fleet shrink, inbound-frame partition);
+//! * [`crate::fleet::WorkerConfig::fault`] — worker-side faults
+//!   (crash, silent hang, byzantine corruption, socket drop +
+//!   delayed reconnect), scripted per worker via
+//!   [`ResolvedPlan::worker_fault`].
+//!
+//! Every injected fault is journaled as
+//! [`crate::obs::EventKind::ChaosFault`]; the recovery actions it
+//! provokes surface through the scheduler's failure-domain counters
+//! (`sgc_job_retries_total`, `sgc_degraded_rounds_total`, …).
+
+use crate::util::rng::Pcg32;
+
+/// The fault classes the harness can inject. The discriminant
+/// ([`FaultKind::discriminant`]) is what lands in the journal's
+/// `value` field for `chaos_fault` events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worker dies without ceremony: no further frames after the
+    /// scripted round. Fleet: the socket drops and the master retires
+    /// the slot; sim: `WorkerDead` for every owed submission.
+    Crash,
+    /// Silent hang: the worker stops producing results *and*
+    /// heartbeats but its socket stays open. Detected only by the
+    /// round-timeout backstop (fleet) or a staged `RoundTimeout`
+    /// (sim).
+    Hang,
+    /// Byzantine result corruption: the worker returns a wrong
+    /// checksum. The master verifies and permanently poisons the slot.
+    Byzantine,
+    /// Frame drop / network partition: the worker keeps computing but
+    /// its inbound frames are discarded for
+    /// [`ChaosPlan::partition_rounds`] submissions.
+    Partition,
+    /// Socket drop followed by a delayed reconnect: the worker's
+    /// results are lost for [`ChaosPlan::reconnect_rounds`]
+    /// submissions, then it rejoins (the master replays open assigns).
+    Reconnect,
+    /// Fleet shrink: `count` workers are retired at once — the
+    /// below-tolerance trigger for degraded-mode decode.
+    Shrink,
+}
+
+impl FaultKind {
+    /// Stable numeric code journaled with `chaos_fault` events.
+    pub fn discriminant(self) -> u8 {
+        match self {
+            FaultKind::Crash => 0,
+            FaultKind::Hang => 1,
+            FaultKind::Byzantine => 2,
+            FaultKind::Partition => 3,
+            FaultKind::Reconnect => 4,
+            FaultKind::Shrink => 5,
+        }
+    }
+
+    /// Spec keyword (`crash`, `hang`, …); inverse of the parser.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Hang => "hang",
+            FaultKind::Byzantine => "byzantine",
+            FaultKind::Partition => "partition",
+            FaultKind::Reconnect => "reconnect",
+            FaultKind::Shrink => "shrink",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultKind> {
+        Some(match s {
+            "crash" => FaultKind::Crash,
+            "hang" => FaultKind::Hang,
+            "byzantine" | "byz" => FaultKind::Byzantine,
+            "partition" | "part" => FaultKind::Partition,
+            "reconnect" | "rejoin" => FaultKind::Reconnect,
+            "shrink" => FaultKind::Shrink,
+            _ => return None,
+        })
+    }
+}
+
+/// One scripted fault, as parsed from the spec (targets may still be
+/// unresolved — see [`ChaosPlan::resolve`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// What to inject.
+    pub kind: FaultKind,
+    /// Cluster submission ordinal (1-based) at which the fault fires.
+    pub round: u64,
+    /// Explicit victim (`:wK` in the spec); `None` draws one from the
+    /// plan's RNG at resolve time.
+    pub worker: Option<usize>,
+    /// Victim count (shrink only; `:K` in the spec, default 1).
+    pub count: usize,
+}
+
+/// A parsed, seeded fault plan. Parse with [`ChaosPlan::parse`], then
+/// [`resolve`](Self::resolve) against the fleet width to fix victims.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosPlan {
+    /// Seed for deterministic victim selection.
+    pub seed: u64,
+    /// The scripted faults, in spec order.
+    pub faults: Vec<FaultEvent>,
+    /// How many submissions a partition swallows (default 2).
+    pub partition_rounds: u64,
+    /// How many submissions a reconnecting worker is away (default 2).
+    pub reconnect_rounds: u64,
+    /// Virtual seconds after which a simulated submission that still
+    /// owes events from a hung worker raises `RoundTimeout` (the sim's
+    /// stand-in for the fleet's `--round-timeout` backstop; default
+    /// 8.0).
+    pub sim_timeout_s: f64,
+}
+
+impl ChaosPlan {
+    /// Parse a fault spec: comma-separated entries of the form
+    /// `KIND@rROUND[:wWORKER][:COUNT]`, e.g.
+    /// `crash@r2,hang@r4:w1,shrink@r6:2`. Kinds: `crash`, `hang`,
+    /// `byzantine`, `partition`, `reconnect`, `shrink`.
+    pub fn parse(spec: &str, seed: u64) -> crate::Result<ChaosPlan> {
+        let mut faults = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind_s, rest) = entry
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("chaos entry {entry:?}: expected KIND@rROUND"))?;
+            let kind = FaultKind::parse(kind_s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "chaos entry {entry:?}: unknown fault {kind_s:?} \
+                     (crash|hang|byzantine|partition|reconnect|shrink)"
+                )
+            })?;
+            let mut parts = rest.split(':');
+            let round_s = parts.next().unwrap_or("");
+            let round: u64 = round_s
+                .strip_prefix('r')
+                .ok_or_else(|| anyhow::anyhow!("chaos entry {entry:?}: round must be rN"))?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("chaos entry {entry:?}: bad round {round_s:?}"))?;
+            anyhow::ensure!(round >= 1, "chaos entry {entry:?}: rounds are 1-based");
+            let mut worker = None;
+            let mut count = 1usize;
+            for p in parts {
+                if let Some(w) = p.strip_prefix('w') {
+                    worker = Some(w.parse().map_err(|_| {
+                        anyhow::anyhow!("chaos entry {entry:?}: bad worker {p:?}")
+                    })?);
+                } else {
+                    count = p.parse().map_err(|_| {
+                        anyhow::anyhow!("chaos entry {entry:?}: bad count {p:?}")
+                    })?;
+                    anyhow::ensure!(count >= 1, "chaos entry {entry:?}: count must be ≥ 1");
+                }
+            }
+            faults.push(FaultEvent { kind, round, worker, count });
+        }
+        anyhow::ensure!(!faults.is_empty(), "empty chaos spec");
+        Ok(ChaosPlan {
+            seed,
+            faults,
+            partition_rounds: 2,
+            reconnect_rounds: 2,
+            sim_timeout_s: 8.0,
+        })
+    }
+
+    /// Fix every fault's victim set against a fleet of `n` workers.
+    /// Victim selection is a pure function of `(seed, fault index, n)`
+    /// — re-resolving the same plan yields the same targets.
+    pub fn resolve(&self, n: usize) -> ResolvedPlan {
+        assert!(n > 0, "resolve against an empty fleet");
+        let mut faults = Vec::with_capacity(self.faults.len());
+        for (i, f) in self.faults.iter().enumerate() {
+            let mut rng = Pcg32::new(self.seed ^ 0xc4a0_5eed, (i as u64) << 8 | 0x3f);
+            let workers: Vec<usize> = match f.worker {
+                Some(w) => vec![w % n],
+                None => {
+                    // distinct victims, deterministic order
+                    let want = f.count.min(n);
+                    let mut picked = Vec::with_capacity(want);
+                    while picked.len() < want {
+                        let w = rng.below(n);
+                        if !picked.contains(&w) {
+                            picked.push(w);
+                        }
+                    }
+                    picked
+                }
+            };
+            faults.push(ResolvedFault { kind: f.kind, round: f.round, workers });
+        }
+        ResolvedPlan {
+            faults,
+            partition_rounds: self.partition_rounds,
+            reconnect_rounds: self.reconnect_rounds,
+            sim_timeout_s: self.sim_timeout_s,
+        }
+    }
+}
+
+/// One fault with its victim set fixed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResolvedFault {
+    /// What to inject.
+    pub kind: FaultKind,
+    /// Cluster submission ordinal (1-based) at which it fires.
+    pub round: u64,
+    /// The victims (one entry except for multi-worker shrinks).
+    pub workers: Vec<usize>,
+}
+
+/// A [`ChaosPlan`] resolved against a concrete fleet width — what the
+/// injection sites consume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResolvedPlan {
+    /// Faults in spec order, victims fixed.
+    pub faults: Vec<ResolvedFault>,
+    /// See [`ChaosPlan::partition_rounds`].
+    pub partition_rounds: u64,
+    /// See [`ChaosPlan::reconnect_rounds`].
+    pub reconnect_rounds: u64,
+    /// See [`ChaosPlan::sim_timeout_s`].
+    pub sim_timeout_s: f64,
+}
+
+/// A worker-side fault script embedded into a fleet
+/// [`crate::fleet::WorkerConfig`]: act out `kind` on receipt of the
+/// assignment after `at_round` served rounds (worker-local count, so
+/// `at_round == 0` strands the very first assignment — the handshake
+/// itself always succeeds, keeping fleet startup deterministic).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerFault {
+    /// Crash, hang, byzantine or reconnect (the worker-side kinds).
+    pub kind: FaultKind,
+    /// Worker-local served-round count at which the next assignment
+    /// triggers the fault.
+    pub at_round: u64,
+    /// For [`FaultKind::Reconnect`]: seconds to stay away before
+    /// redialing.
+    pub away_s: f64,
+}
+
+impl ResolvedPlan {
+    /// The worker-side fault scripted for worker `id`, if any (crash /
+    /// hang / byzantine / reconnect entries; shrink and partition are
+    /// master-side). The first matching fault wins.
+    pub fn worker_fault(&self, id: usize) -> Option<WorkerFault> {
+        self.faults.iter().find_map(|f| {
+            let worker_side = matches!(
+                f.kind,
+                FaultKind::Crash | FaultKind::Hang | FaultKind::Byzantine | FaultKind::Reconnect
+            );
+            if worker_side && f.workers.contains(&id) {
+                Some(WorkerFault {
+                    kind: f.kind,
+                    // a cluster submission ordinal approximates the
+                    // worker-local assignment count (every submission
+                    // assigns every placed worker once)
+                    at_round: f.round.saturating_sub(1),
+                    away_s: 0.2 * self.reconnect_rounds as f64,
+                })
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Master-side faults (shrink, partition), for
+    /// [`crate::fleet::FleetCluster::set_chaos`].
+    pub fn master_faults(&self) -> impl Iterator<Item = &ResolvedFault> {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f.kind, FaultKind::Shrink | FaultKind::Partition))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_smoke_spec() {
+        let plan = ChaosPlan::parse("crash@r2,hang@r4", 7).unwrap();
+        assert_eq!(plan.faults.len(), 2);
+        assert_eq!(plan.faults[0], FaultEvent {
+            kind: FaultKind::Crash,
+            round: 2,
+            worker: None,
+            count: 1
+        });
+        assert_eq!(plan.faults[1].kind, FaultKind::Hang);
+        assert_eq!(plan.faults[1].round, 4);
+    }
+
+    #[test]
+    fn parses_targets_and_counts() {
+        let plan = ChaosPlan::parse("hang@r4:w1,shrink@r6:2,byz@r3:w0", 7).unwrap();
+        assert_eq!(plan.faults[0].worker, Some(1));
+        assert_eq!(plan.faults[1].count, 2);
+        assert_eq!(plan.faults[2].kind, FaultKind::Byzantine);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(ChaosPlan::parse("", 7).is_err());
+        assert!(ChaosPlan::parse("crash", 7).is_err());
+        assert!(ChaosPlan::parse("crash@2", 7).is_err());
+        assert!(ChaosPlan::parse("crash@r0", 7).is_err());
+        assert!(ChaosPlan::parse("explode@r2", 7).is_err());
+        assert!(ChaosPlan::parse("crash@r2:q9", 7).is_err());
+    }
+
+    #[test]
+    fn resolution_is_deterministic_and_distinct() {
+        let plan = ChaosPlan::parse("shrink@r3:3,crash@r5", 42).unwrap();
+        let a = plan.resolve(8);
+        let b = plan.resolve(8);
+        assert_eq!(a, b, "same seed ⇒ same victims");
+        assert_eq!(a.faults[0].workers.len(), 3);
+        let mut uniq = a.faults[0].workers.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3, "shrink victims are distinct");
+        // a different seed picks different victims (overwhelmingly)
+        let other = ChaosPlan::parse("shrink@r3:3,crash@r5", 43).unwrap().resolve(8);
+        assert!(a != other || plan.resolve(8) == a);
+    }
+
+    #[test]
+    fn explicit_worker_wins_over_the_rng() {
+        let plan = ChaosPlan::parse("hang@r4:w5", 1).unwrap();
+        assert_eq!(plan.resolve(8).faults[0].workers, vec![5]);
+        // out-of-range explicit targets wrap rather than panic
+        assert_eq!(plan.resolve(4).faults[0].workers, vec![1]);
+    }
+
+    #[test]
+    fn worker_fault_routing() {
+        let plan = ChaosPlan::parse("crash@r2:w1,shrink@r3:w2,partition@r4:w3", 7).unwrap();
+        let r = plan.resolve(8);
+        let f = r.worker_fault(1).expect("worker 1 crashes");
+        assert_eq!(f.kind, FaultKind::Crash);
+        assert_eq!(f.at_round, 1);
+        assert!(r.worker_fault(2).is_none(), "shrink is master-side");
+        assert!(r.worker_fault(3).is_none(), "partition is master-side");
+        assert_eq!(r.master_faults().count(), 2);
+    }
+}

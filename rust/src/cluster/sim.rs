@@ -23,6 +23,7 @@
 use super::event::{ClusterEvent, EventCluster, JobId};
 use super::latency::LatencyParams;
 use super::storage::StorageParams;
+use crate::chaos::{FaultKind, ResolvedPlan};
 use crate::straggler::models::{GilbertElliot, StragglerProcess, TraceProcess};
 use crate::straggler::Pattern;
 use crate::util::rng::Pcg32;
@@ -45,6 +46,66 @@ struct SimTask {
     round: u64,
     submit_s: f64,
     service_s: f64,
+}
+
+/// A chaos-afflicted worker's fate for one submission.
+#[derive(Clone, Copy, PartialEq)]
+enum Fate {
+    /// Healthy: queue the task as usual.
+    Serve,
+    /// The master knows the worker is gone (crashed / retired / socket
+    /// dropped): the submission is owed an immediate `WorkerDead`.
+    Dead,
+    /// Silent loss (hang, partition): no completion, no death — only
+    /// the staged `RoundTimeout` backstop closes the round.
+    Silent,
+}
+
+/// Chaos-injection state attached via [`SimCluster::set_chaos`]. All
+/// effects are applied strictly *after* the round's service-time draws,
+/// so a chaos run never perturbs the RNG stream of the corresponding
+/// fault-free run.
+struct SimChaos {
+    plan: ResolvedPlan,
+    /// Cluster submission ordinal of the latest `submit` (1-based; the
+    /// counter fault rounds are scripted against).
+    submissions: u64,
+    /// Workers permanently gone (crash / byzantine / shrink victims).
+    dead: Vec<bool>,
+    /// Workers silently hung: deliveries vanish with no `WorkerDead`.
+    hung: Vec<bool>,
+    /// Per-worker partition window end (submission ordinal, exclusive).
+    silent_until: Vec<u64>,
+    /// Per-worker rejoin ordinal for reconnect faults (0 = not away):
+    /// the worker counts as dead until the cluster's submission ordinal
+    /// reaches this value, then a `WorkerJoined` is staged.
+    rejoin_at: Vec<u64>,
+    /// Membership / timeout events staged with their virtual due time.
+    staged: Vec<(f64, ClusterEvent)>,
+}
+
+impl SimChaos {
+    fn fate(&self, w: usize) -> Fate {
+        if self.dead[w] || self.rejoin_at[w] != 0 {
+            Fate::Dead
+        } else if self.hung[w] || self.submissions < self.silent_until[w] {
+            Fate::Silent
+        } else {
+            Fate::Serve
+        }
+    }
+}
+
+/// Stage a `RoundTimeout` for `(job, round)` at `due`, deduplicated —
+/// several silent victims may drain tasks of the same round. A free
+/// function so callers can hold disjoint borrows of the plan alongside.
+fn stage_timeout(staged: &mut Vec<(f64, ClusterEvent)>, due: f64, job: JobId, round: u64) {
+    let already = staged.iter().any(|(_, e)| {
+        matches!(e, ClusterEvent::RoundTimeout { job: j, round: r } if *j == job && *r == round)
+    });
+    if !already {
+        staged.push((due, ClusterEvent::RoundTimeout { job, round }));
+    }
 }
 
 /// The simulated cluster.
@@ -84,6 +145,10 @@ pub struct SimCluster {
     /// fleet has no ground truth). Never consulted by the simulation
     /// itself: the RNG stream is identical with or without it.
     obs: Option<std::sync::Arc<crate::obs::Obs>>,
+    /// Scripted fault injection (see [`Self::set_chaos`]); `None` in
+    /// ordinary runs — the fault-free path is byte-identical to the
+    /// pre-chaos simulator.
+    chaos: Option<SimChaos>,
 }
 
 impl SimCluster {
@@ -111,7 +176,38 @@ impl SimCluster {
             state_scratch: Vec::new(),
             max_events_per_poll: usize::MAX,
             obs: None,
+            chaos: None,
         }
+    }
+
+    /// Attach a resolved chaos plan (see [`crate::chaos`]): scripted
+    /// faults fire on the cluster's 1-based submission ordinal. The
+    /// plan is applied strictly *after* each round's service-time draws,
+    /// so the RNG stream — and therefore every unaffected worker's
+    /// completion time — is byte-identical to the fault-free run.
+    ///
+    /// * Crash / byzantine / shrink victims are retired: a
+    ///   [`ClusterEvent::WorkerRetired`] fires, their queued tasks
+    ///   convert to [`ClusterEvent::WorkerDead`]s, and every later
+    ///   submission placing them is owed an immediate `WorkerDead`.
+    /// * Hang / partition victims go *silent*: their completions are
+    ///   dropped with no death notice, and each affected submission
+    ///   stages a [`ClusterEvent::RoundTimeout`] at
+    ///   `submit + sim_timeout_s` — the sim's stand-in for the fleet's
+    ///   round-timeout backstop.
+    /// * Reconnect victims are retired and count as dead for
+    ///   `reconnect_rounds` submissions, then a
+    ///   [`ClusterEvent::WorkerJoined`] restores them.
+    pub fn set_chaos(&mut self, plan: ResolvedPlan) {
+        self.chaos = Some(SimChaos {
+            plan,
+            submissions: 0,
+            dead: vec![false; self.n],
+            hung: vec![false; self.n],
+            silent_until: vec![0; self.n],
+            rejoin_at: vec![0; self.n],
+            staged: Vec::new(),
+        });
     }
 
     /// Attach an observability hub (see [`crate::obs`]): each
@@ -230,6 +326,89 @@ impl EventCluster for SimCluster {
             );
         }
         let clock = self.clock;
+        // Chaos activation: advance the submission ordinal, restore
+        // workers whose reconnect window just closed, then fire every
+        // fault scripted for this ordinal. Runs strictly *after* the
+        // service draws above so the RNG stream matches the fault-free
+        // run byte for byte.
+        if let Some(ch) = &mut self.chaos {
+            ch.submissions += 1;
+            let k = ch.submissions;
+            for w in 0..self.n {
+                if ch.rejoin_at[w] != 0 && k >= ch.rejoin_at[w] {
+                    ch.rejoin_at[w] = 0;
+                    ch.staged.push((clock, ClusterEvent::WorkerJoined { worker: w }));
+                }
+            }
+            for fault in &ch.plan.faults {
+                if fault.round != k {
+                    continue;
+                }
+                let kind = fault.kind;
+                for &victim in &fault.workers {
+                    let w = victim % self.n;
+                    if let Some(obs) = &self.obs {
+                        obs.journal.record(
+                            clock,
+                            crate::obs::EventKind::ChaosFault,
+                            -1,
+                            k as i64,
+                            w as i64,
+                            f64::from(kind.discriminant()),
+                        );
+                    }
+                    match kind {
+                        FaultKind::Crash | FaultKind::Byzantine | FaultKind::Shrink => {
+                            // The master observes the loss (socket drop /
+                            // checksum reject): retire the slot and convert
+                            // its in-flight tasks to deaths.
+                            if !ch.dead[w] {
+                                ch.dead[w] = true;
+                                ch.staged.push((clock, ClusterEvent::WorkerRetired { worker: w }));
+                                while let Some(t) = self.queues[w].pop_front() {
+                                    ch.staged.push((
+                                        clock,
+                                        ClusterEvent::WorkerDead {
+                                            job: t.job,
+                                            round: t.round,
+                                            worker: w,
+                                        },
+                                    ));
+                                }
+                            }
+                        }
+                        FaultKind::Reconnect => {
+                            ch.rejoin_at[w] = k + ch.plan.reconnect_rounds;
+                            ch.staged.push((clock, ClusterEvent::WorkerRetired { worker: w }));
+                            while let Some(t) = self.queues[w].pop_front() {
+                                ch.staged.push((
+                                    clock,
+                                    ClusterEvent::WorkerDead {
+                                        job: t.job,
+                                        round: t.round,
+                                        worker: w,
+                                    },
+                                ));
+                            }
+                        }
+                        FaultKind::Hang | FaultKind::Partition => {
+                            // Silent loss: in-flight results vanish and
+                            // only the timeout backstop closes the rounds.
+                            if kind == FaultKind::Hang {
+                                ch.hung[w] = true;
+                            } else {
+                                ch.silent_until[w] = k + ch.plan.partition_rounds;
+                            }
+                            let due = clock + ch.plan.sim_timeout_s;
+                            while let Some(t) = self.queues[w].pop_front() {
+                                stage_timeout(&mut ch.staged, due, t.job, t.round);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut silent_loss = false;
         for w in 0..self.n {
             let q = &mut self.queues[w];
             // Same-job preemption: the fresh assignment supersedes any
@@ -246,8 +425,30 @@ impl EventCluster for SimCluster {
             // that just migrated out of the job's placement drops the
             // superseded assignment — but nothing new is queued.
             if loads[w] >= 0.0 {
-                q.push_back(SimTask { job, round, submit_s: clock, service_s: service[w] });
+                match self.chaos.as_ref().map_or(Fate::Serve, |ch| ch.fate(w)) {
+                    Fate::Serve => {
+                        self.queues[w].push_back(SimTask {
+                            job,
+                            round,
+                            submit_s: clock,
+                            service_s: service[w],
+                        });
+                    }
+                    Fate::Dead => {
+                        let ch = self.chaos.as_mut().expect("fate came from the plan");
+                        ch.staged.push((
+                            clock,
+                            ClusterEvent::WorkerDead { job, round, worker: w },
+                        ));
+                    }
+                    Fate::Silent => silent_loss = true,
+                }
             }
+        }
+        if silent_loss {
+            let ch = self.chaos.as_mut().expect("silent loss implies chaos");
+            let due = clock + ch.plan.sim_timeout_s;
+            stage_timeout(&mut ch.staged, due, job, round);
         }
         self.service_scratch = service;
         self.state_scratch = state;
@@ -259,6 +460,16 @@ impl EventCluster for SimCluster {
         // Events at or before the current clock are always deliverable,
         // even when the caller's horizon lies in the past.
         let horizon = until_s.max(self.clock);
+        // Earliest staged chaos event (membership changes, deaths,
+        // timeout backstops).
+        let mut earliest_staged = f64::INFINITY;
+        if let Some(ch) = &self.chaos {
+            for (due, _) in &ch.staged {
+                if *due < earliest_staged {
+                    earliest_staged = *due;
+                }
+            }
+        }
         // Earliest head-of-queue completion across workers.
         let mut earliest = f64::INFINITY;
         for w in 0..self.n {
@@ -268,6 +479,28 @@ impl EventCluster for SimCluster {
                     earliest = fin;
                 }
             }
+        }
+        // Staged chaos events win ties with completions at the same
+        // instant: membership changes and timeouts are what the round's
+        // fate hangs on, and a fixed order keeps reruns byte-identical.
+        if earliest_staged.is_finite() && earliest_staged <= horizon && earliest_staged <= earliest
+        {
+            self.clock = self.clock.max(earliest_staged);
+            let cap = self.max_events_per_poll;
+            let ch = self.chaos.as_mut().expect("staged events imply chaos");
+            let mut i = 0;
+            while i < ch.staged.len() {
+                if self.events_buf.len() >= cap {
+                    break; // rest of the tie delivered next call
+                }
+                if ch.staged[i].0 <= earliest_staged {
+                    let (_, ev) = ch.staged.remove(i);
+                    self.events_buf.push(ev);
+                } else {
+                    i += 1;
+                }
+            }
+            return &self.events_buf;
         }
         if earliest <= horizon {
             self.clock = self.clock.max(earliest);
@@ -512,6 +745,113 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn chaos_crash_retires_the_worker_and_converts_tasks_to_deaths() {
+        use crate::chaos::ChaosPlan;
+        let n = 4;
+        let mut c =
+            SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 9);
+        c.set_chaos(ChaosPlan::parse("crash@r2:w1", 7).unwrap().resolve(n));
+        let loads = vec![0.05; n];
+        c.submit(0, 1, &loads); // ordinal 1: healthy
+        c.submit(5, 1, &loads); // ordinal 2: worker 1 crashes
+        let evs = drain(&mut c);
+        assert!(evs.iter().any(|e| matches!(e, ClusterEvent::WorkerRetired { worker: 1 })));
+        // its in-flight ordinal-1 task converts to a death, and the
+        // crashing submission is owed an immediate one
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::WorkerDead { job: 0, round: 1, worker: 1 })));
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::WorkerDead { job: 5, round: 1, worker: 1 })));
+        let done_by_victim = evs
+            .iter()
+            .filter(|e| matches!(e, ClusterEvent::WorkerDone { worker: 1, .. }))
+            .count();
+        assert_eq!(done_by_victim, 0, "a crashed worker completes nothing");
+        let dones =
+            evs.iter().filter(|e| matches!(e, ClusterEvent::WorkerDone { .. })).count();
+        assert_eq!(dones, 2 * n - 2, "every survivor still completes both rounds");
+    }
+
+    #[test]
+    fn chaos_hang_raises_the_round_timeout_backstop() {
+        use crate::chaos::ChaosPlan;
+        let n = 3;
+        let mut c =
+            SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 11);
+        c.set_chaos(ChaosPlan::parse("hang@r1:w0", 7).unwrap().resolve(n));
+        c.submit(2, 4, &vec![0.05; n]);
+        let evs = drain(&mut c);
+        let dones =
+            evs.iter().filter(|e| matches!(e, ClusterEvent::WorkerDone { .. })).count();
+        assert_eq!(dones, n - 1, "the hung worker never reports");
+        assert!(
+            !evs.iter().any(|e| matches!(e, ClusterEvent::WorkerDead { .. })),
+            "a silent hang owes no death notice"
+        );
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::RoundTimeout { job: 2, round: 4 })));
+        // the backstop fires sim_timeout_s after the submit instant
+        assert!((c.now_s() - 8.0).abs() < 1e-9, "clock {}", c.now_s());
+    }
+
+    #[test]
+    fn chaos_leaves_the_survivors_rng_stream_intact() {
+        use crate::chaos::ChaosPlan;
+        let n = 4;
+        let mk = || SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 9);
+        let loads = vec![0.05; n];
+        let mut plain = mk();
+        plain.submit(0, 1, &loads);
+        let mut reference = vec![f64::NAN; n];
+        for e in drain(&mut plain) {
+            if let ClusterEvent::WorkerDone { worker, finish_s, .. } = e {
+                reference[worker] = finish_s;
+            }
+        }
+        let mut chaotic = mk();
+        chaotic.set_chaos(ChaosPlan::parse("crash@r1:w2", 7).unwrap().resolve(n));
+        chaotic.submit(0, 1, &loads);
+        for e in drain(&mut chaotic) {
+            if let ClusterEvent::WorkerDone { worker, finish_s, .. } = e {
+                assert_ne!(worker, 2, "the crashed worker must not report");
+                assert_eq!(
+                    finish_s, reference[worker],
+                    "chaos must not shift the survivors' RNG draws"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_reconnect_rejoins_after_the_away_window() {
+        use crate::chaos::ChaosPlan;
+        let n = 2;
+        let mut c =
+            SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), 13);
+        c.set_chaos(ChaosPlan::parse("reconnect@r1:w1", 7).unwrap().resolve(n));
+        let loads = vec![0.05; n];
+        c.submit(0, 1, &loads); // ordinal 1: worker 1 drops
+        let evs = drain(&mut c);
+        assert!(evs.iter().any(|e| matches!(e, ClusterEvent::WorkerRetired { worker: 1 })));
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::WorkerDead { job: 0, round: 1, worker: 1 })));
+        c.submit(0, 2, &loads); // ordinal 2: still away (window = 2)
+        let evs = drain(&mut c);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::WorkerDead { job: 0, round: 2, worker: 1 })));
+        assert!(!evs.iter().any(|e| matches!(e, ClusterEvent::WorkerJoined { .. })));
+        c.submit(0, 3, &loads); // ordinal 3: window closed — rejoined
+        let evs = drain(&mut c);
+        assert!(evs.iter().any(|e| matches!(e, ClusterEvent::WorkerJoined { worker: 1 })));
+        assert!(evs.iter().any(|e| matches!(e, ClusterEvent::WorkerDone { worker: 1, .. })));
     }
 
     #[test]

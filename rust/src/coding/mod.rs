@@ -105,6 +105,23 @@ impl SchemeConfig {
         }
     }
 
+    /// Stragglers the scheme tolerates in a single round while staying
+    /// decodable: `s` for GC, `λ` for the bursty schemes (their
+    /// per-round budget inside a window), 0 for uncoded. The scheduler
+    /// uses this to spot a live roster too small to ever conform —
+    /// `live < n - tolerance` — and enter degraded mode instead of
+    /// waiting forever.
+    pub fn per_round_tolerance(&self) -> usize {
+        match &self.kind {
+            SchemeKind::Gc { s } | SchemeKind::GcRep { s } => *s,
+            SchemeKind::SrSgc { lambda, .. }
+            | SchemeKind::SrSgcRep { lambda, .. }
+            | SchemeKind::MSgc { lambda, .. }
+            | SchemeKind::MSgcRep { lambda, .. } => *lambda,
+            SchemeKind::Uncoded => 0,
+        }
+    }
+
     /// Instantiate scheme state for a run of `jobs` jobs.
     pub fn build(&self, jobs: usize) -> Box<dyn Scheme> {
         match &self.kind {

@@ -43,6 +43,7 @@
 use super::reactor::{poll_fds, Connection, PollFd, POLLIN, POLLOUT};
 use super::wire::Frame;
 use super::worker::chunk_checksum;
+use crate::chaos::{FaultKind, ResolvedPlan};
 use crate::cluster::{ClusterEvent, EventCluster, JobId, RunTrace};
 use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::RunReport;
@@ -258,6 +259,19 @@ pub struct FleetCluster {
     metrics_listener: Option<TcpListener>,
     /// In-flight scrape connections.
     scrapes: Vec<Scrape>,
+    /// Scripted master-side fault plan, when injected (see
+    /// [`Self::set_chaos`]).
+    chaos: Option<FleetChaos>,
+}
+
+/// Master-side chaos state: the resolved plan plus the per-worker
+/// partition windows currently in force.
+struct FleetChaos {
+    plan: ResolvedPlan,
+    /// Inbound frames from worker `w` are discarded while
+    /// `submissions() < drop_until[w]` (submission ordinals, 1-based
+    /// like the wire `round` field).
+    drop_until: Vec<u64>,
 }
 
 impl FleetCluster {
@@ -321,6 +335,7 @@ impl FleetCluster {
             obs: None,
             metrics_listener: None,
             scrapes: Vec::new(),
+            chaos: None,
         };
         let deadline = Instant::now() + accept_timeout;
         while fleet.live_workers() < n {
@@ -383,6 +398,66 @@ impl FleetCluster {
     /// deadlines). Takes effect from the next `poll`.
     pub fn set_membership(&mut self, membership: MembershipConfig) {
         self.membership = membership;
+    }
+
+    /// Inject the master-side half of a scripted chaos plan (see
+    /// [`crate::chaos`]): at each scripted submission ordinal, a
+    /// [`FaultKind::Shrink`] retires its victims before the fan-out, and
+    /// a [`FaultKind::Partition`] discards the victims' inbound frames —
+    /// results *and* heartbeats — for the plan's partition window, so
+    /// the stale-heartbeat machinery sees a real network hole. The
+    /// worker-side kinds (crash, hang, byzantine, reconnect) are acted
+    /// out by the workers themselves via
+    /// [`WorkerConfig::fault`](super::WorkerConfig); this side only
+    /// journals and reacts.
+    pub fn set_chaos(&mut self, plan: ResolvedPlan) {
+        let n = self.slots.len();
+        self.chaos = Some(FleetChaos { plan, drop_until: vec![0; n] });
+    }
+
+    /// Act out the master-side faults scripted for submission `seq`
+    /// (called at the top of every `submit`, before the fan-out).
+    fn apply_chaos(&mut self, seq: u64) {
+        let Some(ch) = &self.chaos else { return };
+        let window = ch.plan.partition_rounds;
+        let mut acts: Vec<(FaultKind, usize)> = Vec::new();
+        for f in ch.plan.master_faults() {
+            if f.round == seq {
+                for &w in &f.workers {
+                    acts.push((f.kind, w));
+                }
+            }
+        }
+        for (kind, w) in acts {
+            if let Some(fo) = &self.obs {
+                fo.obs.journal.record(
+                    self.clock_start.elapsed().as_secs_f64(),
+                    EventKind::ChaosFault,
+                    -1,
+                    seq as i64,
+                    w as i64,
+                    f64::from(kind.discriminant()),
+                );
+            }
+            log_warn!(
+                "fleet master: chaos {kind:?} hits worker {w} at submission {seq}"
+            );
+            match kind {
+                FaultKind::Shrink => {
+                    if w < self.slots.len() {
+                        self.retire(w, "chaos shrink");
+                    }
+                }
+                _ => {
+                    let du =
+                        &mut self.chaos.as_mut().expect("chaos checked above").drop_until;
+                    if du.len() <= w {
+                        du.resize(w + 1, 0);
+                    }
+                    du[w] = seq + window;
+                }
+            }
+        }
     }
 
     /// Attach an observability hub (see [`crate::obs`]): frame byte
@@ -928,6 +1003,16 @@ impl FleetCluster {
     /// Process one inbound frame, translating results into staged
     /// [`ClusterEvent`]s.
     fn absorb(&mut self, worker: usize, frame: Frame, at: Instant) {
+        if let Some(ch) = &self.chaos {
+            // Scripted partition: the victim's inbound frames — results
+            // and heartbeats alike — vanish for the window, before they
+            // can refresh `last_seen`.
+            if (self.round_starts.len() as u64)
+                < ch.drop_until.get(worker).copied().unwrap_or(0)
+            {
+                return;
+            }
+        }
         {
             let slot = &mut self.slots[worker];
             slot.last_seen = at;
@@ -1269,6 +1354,11 @@ impl EventCluster for FleetCluster {
         assert!(!self.shut_down, "submit on a shut-down fleet");
         let cap = self.slots.len();
         let seq = self.round_starts.len() + 1;
+        // Scripted shrinks/partitions fire before the fan-out, so a
+        // shrink victim is already retired (→ immediate `WorkerDead`
+        // below) and a partition victim's frames start dropping with
+        // this submission.
+        self.apply_chaos(seq as u64);
         self.round_starts.push(Instant::now());
         self.seq_jobs.push((job, round));
         self.loads_log.push(loads.to_vec());

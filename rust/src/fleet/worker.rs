@@ -17,6 +17,7 @@
 //! live run is reproducible straggler-for-straggler.
 
 use super::wire::{read_frame, write_frame, Frame, WireError};
+use crate::chaos::{FaultKind, WorkerFault};
 use crate::cluster::latency::decayed_uplift;
 use crate::straggler::models::ge_step;
 use crate::util::rng::Pcg32;
@@ -124,6 +125,12 @@ pub struct WorkerConfig {
     /// rounds, crash — drop the connection with no `Shutdown` handshake,
     /// exactly like a worker process dying mid-fleet. `None` = never.
     pub fail_after_rounds: Option<usize>,
+    /// Scripted chaos fault (see [`crate::chaos`]): crash, silent hang,
+    /// byzantine corruption or socket-drop-and-reconnect, acted out at
+    /// the scripted assignment ordinal. Populated from
+    /// [`ResolvedPlan::worker_fault`](crate::chaos::ResolvedPlan::worker_fault)
+    /// by `sgc serve --chaos`. `None` = healthy.
+    pub fault: Option<WorkerFault>,
 }
 
 impl WorkerConfig {
@@ -139,6 +146,7 @@ impl WorkerConfig {
             heartbeat: Duration::from_millis(50),
             connect_retry: Duration::from_secs(5),
             fail_after_rounds: None,
+            fault: None,
         }
     }
 }
@@ -152,27 +160,94 @@ pub struct WorkerStats {
     pub chaos_rounds: usize,
 }
 
-/// Run the worker loop until the master sends `Shutdown` or disconnects.
-///
-/// The initial connect retries until [`WorkerConfig::connect_retry`]
-/// elapses, so a worker started moments before its master (or re-joining
-/// an elastic fleet) does not fail spuriously.
-pub fn run_worker(cfg: WorkerConfig) -> crate::Result<WorkerStats> {
-    let connect_deadline = Instant::now() + cfg.connect_retry;
-    let stream = loop {
+/// Dial the master until `deadline`, with capped exponential backoff
+/// and deterministic per-worker jitter between attempts: attempt `k`
+/// sleeps `min(10ms · 2ᵏ, 500ms) · (0.5 + 0.5·u)`, where `u` comes from
+/// a [`Pcg32`] stream keyed on the worker id — a herd of restarting
+/// workers spreads its redials out instead of hammering the listener in
+/// lockstep. Used by both the initial connect and mid-run reconnects.
+fn connect_with_backoff(cfg: &WorkerConfig, deadline: Instant) -> crate::Result<TcpStream> {
+    let mut rng = Pcg32::new(0x5e7_bacf ^ u64::from(cfg.id), 0xd1a1);
+    let mut attempt = 0u32;
+    loop {
         match TcpStream::connect(&cfg.master) {
-            Ok(s) => break s,
+            Ok(s) => return Ok(s),
             Err(e) => {
-                if Instant::now() >= connect_deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     return Err(anyhow::anyhow!(
                         "worker {}: connect {}: {e}",
                         cfg.id,
                         cfg.master
                     ));
                 }
-                std::thread::sleep(Duration::from_millis(25));
+                let base = Duration::from_millis(10u64 << attempt.min(6));
+                let jittered = base.min(Duration::from_millis(500)).mul_f64(0.5 + 0.5 * rng.f64());
+                std::thread::sleep(jittered.min(deadline - now));
+                attempt += 1;
             }
         }
+    }
+}
+
+/// Why one TCP session of the worker loop ended.
+enum SessionEnd {
+    /// Terminal: clean `Shutdown`, master EOF mid-run, or a scripted
+    /// crash/hang fault ran its course. The worker exits.
+    Done,
+    /// Scripted reconnect fault: drop the socket, stay away for
+    /// `away_s`, then redial and rejoin.
+    Redial {
+        away_s: f64,
+    },
+}
+
+/// Run the worker loop until the master sends `Shutdown` or disconnects.
+///
+/// Connects (initially and after a scripted reconnect fault) with
+/// capped exponential backoff until [`WorkerConfig::connect_retry`]
+/// elapses, so a worker started moments before its master — or
+/// re-joining an elastic fleet — does not fail spuriously.
+///
+/// Scripted faults ([`WorkerConfig::fault`]) always end in `Ok`: a
+/// chaos run's planned deaths are not errors the harness should
+/// propagate.
+pub fn run_worker(cfg: WorkerConfig) -> crate::Result<WorkerStats> {
+    let mut fault = cfg.fault;
+    let mut chaos = cfg.chaos.map(|c| ChaosState::new(c, cfg.id));
+    let mut stats = WorkerStats::default();
+    let mut deadline = Instant::now() + cfg.connect_retry;
+    let mut initial = true;
+    loop {
+        match serve_session(&cfg, initial, &mut fault, &mut chaos, &mut stats, deadline)? {
+            SessionEnd::Done => return Ok(stats),
+            SessionEnd::Redial { away_s } => {
+                std::thread::sleep(Duration::from_secs_f64(away_s.max(0.0)));
+                // fresh retry budget, same capped-backoff dial policy
+                deadline = Instant::now() + cfg.connect_retry;
+                initial = false;
+            }
+        }
+    }
+}
+
+/// One TCP session: connect, `Hello`, serve assignments (with heartbeat
+/// side thread) until shutdown, disconnect, or a scripted fault acts.
+fn serve_session(
+    cfg: &WorkerConfig,
+    initial: bool,
+    fault: &mut Option<WorkerFault>,
+    chaos: &mut Option<ChaosState>,
+    stats: &mut WorkerStats,
+    connect_deadline: Instant,
+) -> crate::Result<SessionEnd> {
+    let stream = match connect_with_backoff(cfg, connect_deadline) {
+        Ok(s) => s,
+        // A redial that finds no master is a clean exit, not an error:
+        // the fleet may simply have finished and shut down while this
+        // worker was acting out its scripted away window.
+        Err(_) if !initial => return Ok(SessionEnd::Done),
+        Err(e) => return Err(e),
     };
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -205,21 +280,59 @@ pub fn run_worker(cfg: WorkerConfig) -> crate::Result<WorkerStats> {
             .expect("spawn heartbeat thread")
     };
 
-    let mut chaos = cfg.chaos.map(|c| ChaosState::new(c, cfg.id));
-    let mut stats = WorkerStats::default();
     let result = loop {
         match read_frame(&mut reader) {
             Ok(Frame::Assign { round, work_units, chunks }) => {
+                // A scripted fault past its threshold acts on *receipt*
+                // of the next assignment — the in-flight round is what
+                // the fault strands, exactly like a process dying with
+                // work on its plate.
+                if let Some(f) = *fault {
+                    if stats.rounds_served as u64 >= f.at_round {
+                        match f.kind {
+                            FaultKind::Crash => {
+                                // dropped socket, no Shutdown handshake
+                                break Ok(SessionEnd::Done);
+                            }
+                            FaultKind::Hang => {
+                                // silent: stop results *and* heartbeats
+                                // but hold the socket open until the
+                                // master reaps us and hangs up
+                                stop.store(true, Ordering::Release);
+                                while read_frame(&mut reader).is_ok() {}
+                                break Ok(SessionEnd::Done);
+                            }
+                            FaultKind::Reconnect => {
+                                *fault = None; // one-shot
+                                break Ok(SessionEnd::Redial { away_s: f.away_s });
+                            }
+                            // byzantine corrupts the result below;
+                            // master-side kinds never reach a worker
+                            _ => {}
+                        }
+                    }
+                }
                 current_round.store(round, Ordering::Release);
                 let mult = chaos.as_mut().map_or(1.0, |c| c.next_multiplier());
                 if mult > 1.0 {
                     stats.chaos_rounds += 1;
                 }
                 let started = Instant::now();
-                let checksum = execute_minitask(
+                let mut checksum = execute_minitask(
                     &chunks,
                     (cfg.base_s + cfg.alpha_s * work_units) * mult,
                 );
+                if let Some(f) = *fault {
+                    if f.kind == FaultKind::Byzantine && stats.rounds_served as u64 >= f.at_round
+                    {
+                        // scripted corruption: claim the work was done
+                        // but return a wrong checksum — the master
+                        // verifies, marks us byzantine and retires the
+                        // slot for good
+                        checksum = !checksum;
+                        *fault = None; // one-shot; we are dead to the master anyway
+                    }
+                }
                 stats.rounds_served += 1;
                 let frame = Frame::Result {
                     worker_id: cfg.id,
@@ -234,24 +347,26 @@ pub fn run_worker(cfg: WorkerConfig) -> crate::Result<WorkerStats> {
                 // no Shutdown handshake, just a dropped socket, exactly
                 // like a worker process dying (membership tests)
                 if cfg.fail_after_rounds.is_some_and(|k| stats.rounds_served >= k) {
-                    break Ok(stats);
+                    break Ok(SessionEnd::Done);
                 }
             }
-            Ok(Frame::Shutdown) => break Ok(stats),
+            Ok(Frame::Shutdown) => break Ok(SessionEnd::Done),
             Ok(other) => {
                 break Err(anyhow::anyhow!("worker {}: unexpected frame {other:?}", cfg.id))
             }
             // EOF before the first assignment means the master rejected
             // this worker (duplicate/out-of-range id, or the fleet was
-            // already full) — that must not look like a clean run.
-            Err(WireError::Closed) if stats.rounds_served == 0 => {
+            // already full) — that must not look like a clean run. After
+            // a scripted reconnect (`!initial`) the same EOF just means
+            // the fleet wound down first.
+            Err(WireError::Closed) if stats.rounds_served == 0 && initial => {
                 break Err(anyhow::anyhow!(
                     "worker {}: master closed the connection before assigning any \
                      work (rejected handshake?)",
                     cfg.id
                 ))
             }
-            Err(WireError::Closed) => break Ok(stats), // master hung up mid-run
+            Err(WireError::Closed) => break Ok(SessionEnd::Done), // master hung up mid-run
             Err(e) => break Err(anyhow::anyhow!("worker {}: read: {e}", cfg.id)),
         }
     };

@@ -140,6 +140,7 @@
 
 pub mod adapt;
 pub mod bench_harness;
+pub mod chaos;
 pub mod cluster;
 pub mod coding;
 pub mod coordinator;

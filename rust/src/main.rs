@@ -9,7 +9,7 @@
 //!            [--adapt] [--refit-budget K] [--swap-margin FRAC]
 //!            [--profile-decay D] [--regime-shift R]
 //!            [--metrics ADDR] [--metrics-hold S] [--journal PATH]
-//!            [--report-json PATH]
+//!            [--report-json PATH] [--chaos SPEC] [--chaos-seed S]
 //! sgc trace  export --journal PATH [--out PATH]
 //! sgc worker --master HOST:PORT --id K [--chaos-seed S]
 //! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
@@ -43,6 +43,7 @@
 //! at cluster round `R` — the adaptive-serve smoke input.
 
 use sgc::adapt::AdaptiveConfig;
+use sgc::chaos::{ChaosPlan, ResolvedPlan};
 use sgc::cluster::{Cluster, EventCluster, RecordingCluster, RunTrace, SimCluster};
 use sgc::coding::SchemeConfig;
 use sgc::coordinator::RunReport;
@@ -87,6 +88,8 @@ fn main() -> anyhow::Result<()> {
                  elastic:     serve --fleet K --late-join J [--join-window S] [--reap-after S]\n\
                  adaptive:    serve --adapt [--refit-budget K] [--swap-margin FRAC]\n\
                               [--profile-decay D] [--regime-shift R (sim only)]\n\
+                 chaos:       serve --chaos crash@r2,hang@r4:w1,shrink@r6:2 [--chaos-seed S]\n\
+                              (kinds: crash hang byz part rejoin shrink; deterministic per seed)\n\
                  observe:     serve [--metrics ADDR (fleet)] [--metrics-hold S]\n\
                               [--journal PATH] [--report-json PATH]; --verbose anywhere\n\
                               sgc trace export --journal PATH [--out PATH] (Chrome JSON)\n\
@@ -121,14 +124,29 @@ fn membership(args: &Args) -> MembershipConfig {
 
 /// Spin up a loopback TCP fleet per the shared CLI flags
 /// (`--no-chaos`, `--chaos-seed`, `--round-timeout`, `--join-window`,
-/// `--reap-after`).
-fn spawn_loopback(args: &Args, workers: usize, seed: u64) -> anyhow::Result<LoopbackFleet> {
+/// `--reap-after`). `plan` is the scripted fault plan from `--chaos`,
+/// split across its two injection sites: each worker embeds its own
+/// fault ([`ResolvedPlan::worker_fault`]) and the master acts out the
+/// shrink/partition entries ([`FleetCluster::set_chaos`]).
+fn spawn_loopback(
+    args: &Args,
+    workers: usize,
+    seed: u64,
+    plan: Option<&ResolvedPlan>,
+) -> anyhow::Result<LoopbackFleet> {
     let chaos = if args.has_flag("no-chaos") {
         None
     } else {
         Some(ChaosConfig::default_fit(args.get_parse("chaos-seed", seed)))
     };
-    let mut fleet = LoopbackFleet::spawn(workers, chaos)?;
+    let mut fleet = LoopbackFleet::spawn_with(workers, |id, addr| {
+        let mut cfg = WorkerConfig::loopback(id, addr.to_string(), chaos);
+        cfg.fault = plan.and_then(|p| p.worker_fault(id as usize));
+        cfg
+    })?;
+    if let Some(p) = plan {
+        fleet.cluster.set_chaos(p.clone());
+    }
     fleet.cluster.set_round_timeout(round_timeout(args));
     fleet.cluster.set_membership(membership(args));
     Ok(fleet)
@@ -138,6 +156,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         !args.has_flag("fleet"),
         "--fleet needs a worker count (e.g. --fleet 8)"
+    );
+    anyhow::ensure!(
+        !args.has("chaos"),
+        "--chaos needs the failure-domain scheduler: use sgc serve --chaos SPEC"
     );
     let fleet_n = args.options.get("fleet").map(|v| v.parse::<usize>()).transpose()?;
     let n = match fleet_n {
@@ -160,7 +182,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         // --- live fleet: wall-clock μ-rule over streaming TCP arrivals ---
         let run = match fleet_n {
             Some(k) => {
-                let mut fleet = spawn_loopback(args, k, seed)?;
+                let mut fleet = spawn_loopback(args, k, seed, None)?;
                 let run = fleet::drive_fleet(&scheme, &cfg, &mut fleet.cluster)?;
                 // join the workers so a worker-side error fails the run
                 // instead of disappearing with its thread
@@ -249,6 +271,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let scheme = SchemeConfig::parse(n, &args.get("scheme", "gc:2"))?;
     let seed = args.get_parse("seed", 7u64);
+    // --chaos SPEC: scripted fault plan (e.g. crash@r2,hang@r4:w1),
+    // victims resolved deterministically from --chaos-seed — the same
+    // seed reproduces the identical fault script (see sgc::chaos).
+    let chaos_plan = args
+        .options
+        .get("chaos")
+        .map(|spec| ChaosPlan::parse(spec, args.get_parse("chaos-seed", seed)))
+        .transpose()?
+        .map(|p| p.resolve(n));
     let cfg = SessionConfig {
         jobs: args.get_parse("session-jobs", 24usize),
         mu: args.get_parse("mu", 1.0f64),
@@ -294,7 +325,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let out: ScheduleReport = match fleet_n {
         Some(k) => {
             // --- one shared loopback TCP fleet for every session ---
-            let mut fleet = spawn_loopback(args, k, seed)?;
+            let mut fleet = spawn_loopback(args, k, seed, chaos_plan.as_ref())?;
             // --late-join J: start J extra workers (ids k..k+J) that
             // Hello mid-run — the elastic-membership smoke. They are
             // tracked like the initial workers and joined at shutdown.
@@ -373,6 +404,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             if let Some(o) = &obs {
                 sim.set_obs(o.clone());
             }
+            if let Some(p) = &chaos_plan {
+                sim.set_chaos(p.clone());
+            }
             let mut sched = JobScheduler::with_policy(&mut sim, policy()?);
             if let Some(acfg) = adaptive.clone() {
                 sched.set_adaptive(acfg);
@@ -388,11 +422,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
 
     for (j, rep) in out.reports.iter().enumerate() {
+        let oc = out.outcomes.get(j);
         println!(
-            "job {j}: {:<18} runtime={:.2}s rounds={} waitouts={} violations={}",
+            "job {j}: {:<18} {:<11} runtime={:.2}s rounds={} retries={} waitouts={} violations={}",
             rep.scheme,
+            oc.map_or("completed", |o| o.status.as_str()),
             rep.total_runtime_s,
             rep.rounds.len(),
+            oc.map_or(0, |o| o.retries),
             rep.waitout_rounds(),
             rep.deadline_violations
         );
@@ -411,13 +448,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             println!("journal ({} events) → {path}", o.journal.len());
         }
     }
-    let undecoded: usize = out
-        .reports
-        .iter()
-        .flat_map(|r| r.job_completion_s.iter())
-        .filter(|t| !t.is_finite())
-        .count();
-    anyhow::ensure!(undecoded == 0, "{undecoded} session jobs never became decodable");
+    if chaos_plan.is_some() {
+        // Failure-domain contract: a scripted chaos run succeeds as long
+        // as the blast radius stayed contained — at least one job landed
+        // Completed or Degraded. Victims show up as retries/quarantines
+        // in the outcomes (and --report-json), not as a nonzero exit.
+        anyhow::ensure!(
+            !out.all_failed(),
+            "chaos run: every job was quarantined — failure domains leaked"
+        );
+    } else {
+        // No scripted faults: every session job must have decoded.
+        let undecoded: usize = out
+            .reports
+            .iter()
+            .flat_map(|r| r.job_completion_s.iter())
+            .filter(|t| !t.is_finite())
+            .count();
+        anyhow::ensure!(undecoded == 0, "{undecoded} session jobs never became decodable");
+    }
     Ok(())
 }
 

@@ -76,10 +76,24 @@ pub enum EventKind {
     /// Simulator ground truth: stragglers drawn for one submission
     /// (`value` = straggler count). Only virtual clusters emit this.
     TrueStragglers,
+    /// A faulted scheduler job was truncated and re-queued (`value` =
+    /// backoff seconds until its restart, `round` = cluster round of
+    /// the aborted attempt).
+    JobRetry,
+    /// A scheduler job exhausted its retry budget and was permanently
+    /// quarantined (`value` = retries spent).
+    JobQuarantine,
+    /// A round closed under degraded (never-wait) decode (`value` =
+    /// protocol round duration in seconds).
+    DegradedRound,
+    /// The chaos harness injected a scripted fault (`worker` = target
+    /// worker or `-1`, `value` = fault-kind discriminant — see
+    /// [`crate::chaos::FaultKind`]).
+    ChaosFault,
 }
 
 /// Every kind, for iteration and parsing.
-const ALL_KINDS: [EventKind; 19] = [
+const ALL_KINDS: [EventKind; 23] = [
     EventKind::RoundAssign,
     EventKind::WorkerArrive,
     EventKind::CutDecision,
@@ -99,6 +113,10 @@ const ALL_KINDS: [EventKind; 19] = [
     EventKind::WorkerRetire,
     EventKind::WorkerJoin,
     EventKind::TrueStragglers,
+    EventKind::JobRetry,
+    EventKind::JobQuarantine,
+    EventKind::DegradedRound,
+    EventKind::ChaosFault,
 ];
 
 impl EventKind {
@@ -124,6 +142,10 @@ impl EventKind {
             EventKind::WorkerRetire => "worker_retire",
             EventKind::WorkerJoin => "worker_join",
             EventKind::TrueStragglers => "true_stragglers",
+            EventKind::JobRetry => "job_retry",
+            EventKind::JobQuarantine => "job_quarantine",
+            EventKind::DegradedRound => "degraded_round",
+            EventKind::ChaosFault => "chaos_fault",
         }
     }
 

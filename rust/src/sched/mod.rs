@@ -81,8 +81,9 @@ use crate::cluster::{ClusterEvent, EventCluster, JobId, UNPLACED};
 use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::{merge_segments, RunReport};
 use crate::obs::{Counter, EventKind, Gauge, Histogram, Obs};
-use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession};
+use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession, WaitPolicy};
 use crate::util::json::Json;
+use crate::util::rng::Pcg32;
 use std::sync::Arc;
 
 /// Which physical worker *initially* hosts a job's logical worker 0
@@ -175,6 +176,107 @@ pub struct NoopObserver;
 
 impl RoundObserver for NoopObserver {}
 
+/// How the scheduler reacts when a job's round can no longer make
+/// progress: round timeout from the backend, or a wait-out stuck on
+/// permanently-dead workers. Instead of failing the whole run, the job
+/// is truncated at its last decoded paper-job, re-queued with capped
+/// exponential backoff + deterministic jitter, escalated to degraded
+/// (never-wait) decode, and finally quarantined — while every other
+/// job keeps running. See `rust/DESIGN.md` § Failure domains.
+#[derive(Clone, Debug)]
+pub struct FailurePolicy {
+    /// Re-queue attempts before the job is quarantined.
+    pub max_retries: u32,
+    /// Retries served with the admitted wait-out policy before the job
+    /// escalates to degraded [`WaitPolicy::NeverWait`] decode. A live
+    /// roster already below the scheme's straggler tolerance skips
+    /// straight to degraded mode.
+    pub degrade_after: u32,
+    /// First retry's backoff (doubles per retry).
+    pub backoff_base_s: f64,
+    /// Backoff ceiling.
+    pub backoff_cap_s: f64,
+    /// Seed for the deterministic backoff jitter (keyed per job and
+    /// retry, so identically-configured runs park and resume jobs at
+    /// identical instants).
+    pub jitter_seed: u64,
+}
+
+impl Default for FailurePolicy {
+    fn default() -> Self {
+        FailurePolicy {
+            max_retries: 3,
+            degrade_after: 1,
+            backoff_base_s: 0.5,
+            backoff_cap_s: 8.0,
+            jitter_seed: 0xbac0_ff5e,
+        }
+    }
+}
+
+/// Terminal state of one job's failure-domain state machine
+/// (`Running → Retrying → Degraded → Completed/Quarantined`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Every paper-job decoded exactly (retries may have occurred).
+    Completed,
+    /// The job finished but some paper-jobs never decoded — the report
+    /// carries the best available partial results and
+    /// [`JobOutcome::error_bound`] quantifies what is missing.
+    Degraded,
+    /// The job exhausted [`FailurePolicy::max_retries`] and was retired
+    /// with whatever its committed segments had decoded.
+    Quarantined,
+}
+
+impl JobStatus {
+    /// Stable lowercase name (report JSON, logs).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Completed => "completed",
+            JobStatus::Degraded => "degraded",
+            JobStatus::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// Per-job failure-domain accounting for one scheduler run.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    /// Job id (index into [`ScheduleReport::reports`]).
+    pub job: JobId,
+    /// Terminal state of the job's outcome state machine.
+    pub status: JobStatus,
+    /// Re-queue attempts consumed.
+    pub retries: u32,
+    /// Rounds committed under degraded (never-wait) decode.
+    pub degraded_rounds: u64,
+    /// Paper-jobs that decoded exactly.
+    pub completed_jobs: usize,
+    /// Paper-jobs that never decoded (missing from or `NaN` in the
+    /// job's report).
+    pub failed_jobs: usize,
+    /// Fraction of the job's gradient mass with no exact decode:
+    /// `failed_jobs / admitted jobs`. 0.0 for a completed job; an
+    /// operator-facing bound on how approximate the partial sums are.
+    pub error_bound: f64,
+}
+
+impl JobOutcome {
+    /// Serialize for `sgc serve --report-json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("job", self.job)
+            .set("status", self.status.as_str())
+            .set("retries", self.retries as u64)
+            .set("degraded_rounds", self.degraded_rounds)
+            .set("completed_jobs", self.completed_jobs)
+            .set("failed_jobs", self.failed_jobs)
+            .set("error_bound", self.error_bound);
+        o
+    }
+}
+
 /// Aggregate outcome of a multi-job run.
 #[derive(Clone, Debug)]
 pub struct FleetUtilization {
@@ -199,6 +301,15 @@ pub struct FleetUtilization {
     /// Logical slots migrated off retired workers onto live spares at
     /// round starts — "the report notes re-placement".
     pub replacements: u64,
+    /// Job re-queue attempts across all jobs (failure domains; see
+    /// [`FailurePolicy`]).
+    pub job_retries: u64,
+    /// Rounds committed under degraded (never-wait) decode.
+    pub degraded_rounds: u64,
+    /// Jobs that finished with approximate results ([`JobStatus::Degraded`]).
+    pub jobs_degraded: usize,
+    /// Jobs retired after exhausting retries ([`JobStatus::Quarantined`]).
+    pub jobs_quarantined: usize,
     /// Hot-swaps executed by the adaptive control plane (always 0
     /// without [`JobScheduler::set_adaptive`]).
     pub scheme_swaps: u64,
@@ -246,6 +357,15 @@ impl std::fmt::Display for FleetUtilization {
                 self.scheme_swaps, self.refit_candidates, self.profile_staleness
             )?;
         }
+        if self.job_retries + self.degraded_rounds > 0
+            || self.jobs_degraded + self.jobs_quarantined > 0
+        {
+            write!(
+                f,
+                ", {} retries, {} degraded rounds, {} degraded jobs, {} quarantined",
+                self.job_retries, self.degraded_rounds, self.jobs_degraded, self.jobs_quarantined
+            )?;
+        }
         Ok(())
     }
 }
@@ -266,6 +386,10 @@ impl FleetUtilization {
             .set("worker_joined_events", self.worker_joined_events)
             .set("worker_retired_events", self.worker_retired_events)
             .set("replacements", self.replacements)
+            .set("job_retries", self.job_retries)
+            .set("degraded_rounds", self.degraded_rounds)
+            .set("jobs_degraded", self.jobs_degraded)
+            .set("jobs_quarantined", self.jobs_quarantined)
             .set("scheme_swaps", self.scheme_swaps)
             .set("refit_candidates", self.refit_candidates)
             .set("profile_staleness", self.profile_staleness)
@@ -285,8 +409,25 @@ pub struct ScheduleReport {
     /// Hot-swaps executed during the run, in execution order (always
     /// empty without [`JobScheduler::set_adaptive`]).
     pub swaps: Vec<SchemeSwapped>,
+    /// Per-job failure-domain outcomes, in admission order. A run with
+    /// no faults reports every job [`JobStatus::Completed`] with zero
+    /// retries.
+    pub outcomes: Vec<JobOutcome>,
     /// Aggregate fleet-level accounting for the run.
     pub utilization: FleetUtilization,
+}
+
+impl ScheduleReport {
+    /// Jobs that ended [`JobStatus::Quarantined`].
+    pub fn quarantined(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.status == JobStatus::Quarantined).count()
+    }
+
+    /// True when *every* job was quarantined — the only condition under
+    /// which `sgc serve` exits nonzero.
+    pub fn all_failed(&self) -> bool {
+        !self.outcomes.is_empty() && self.quarantined() == self.outcomes.len()
+    }
 }
 
 impl ScheduleReport {
@@ -297,6 +438,7 @@ impl ScheduleReport {
         let mut o = Json::obj();
         o.set("reports", Json::Arr(self.reports.iter().map(|r| r.to_json()).collect()))
             .set("swaps", Json::Arr(self.swaps.iter().map(|s| s.to_json()).collect()))
+            .set("outcomes", Json::Arr(self.outcomes.iter().map(|o| o.to_json()).collect()))
             .set("utilization", self.utilization.to_json());
         o
     }
@@ -316,6 +458,9 @@ struct SchedObs {
     deaths: Counter,
     swaps: Counter,
     replacements: Counter,
+    retries: Counter,
+    degraded: Counter,
+    quarantines: Counter,
     queue_depth: Gauge,
     makespan: Gauge,
     gain: Gauge,
@@ -364,6 +509,18 @@ struct Slot {
     /// (`WorkerDead` events for `slot.round`; reset every round —
     /// backends re-report per submission).
     dead: Vec<bool>,
+    // --- failure domain (see [`FailurePolicy`]) ---
+    /// Re-queue attempts consumed so far.
+    retries: u32,
+    /// `Some(t)`: the job is parked until cluster clock `t`, when a
+    /// fresh session restarts its remaining paper-jobs.
+    retry_at_s: Option<f64>,
+    /// Future segments run degraded ([`WaitPolicy::NeverWait`]).
+    degraded: bool,
+    /// Rounds committed while degraded.
+    degraded_rounds: u64,
+    /// The job exhausted its retry budget and was retired.
+    failed: bool,
     report: Option<RunReport>,
 }
 
@@ -383,6 +540,8 @@ pub struct JobScheduler<'c> {
     loads: Vec<f64>,
     state: Vec<bool>,
     pending: Vec<usize>,
+    /// Per-job failure-domain policy (retry/degrade/quarantine).
+    failure: FailurePolicy,
     /// Adaptive control plane, when enabled (see [`crate::adapt`]).
     adapt: Option<AdaptiveController>,
     /// Observability handles, when attached (see [`crate::obs`]).
@@ -419,6 +578,7 @@ impl<'c> JobScheduler<'c> {
             loads: Vec::new(),
             state: Vec::new(),
             pending: Vec::new(),
+            failure: FailurePolicy::default(),
             adapt: None,
             obs: None,
             swaps: Vec::new(),
@@ -445,6 +605,12 @@ impl<'c> JobScheduler<'c> {
         self.adapt.as_ref()
     }
 
+    /// Replace the default [`FailurePolicy`] (retry budget, backoff
+    /// shape, degrade escalation). Call before [`run`](Self::run).
+    pub fn set_failure_policy(&mut self, policy: FailurePolicy) {
+        self.failure = policy;
+    }
+
     /// Attach an observability bundle (see [`crate::obs`]): per-job
     /// round-latency histograms, fleet-level counters/gauges, and
     /// journaled round spans (assign → per-worker arrival → μ-cut →
@@ -465,6 +631,21 @@ impl<'c> JobScheduler<'c> {
             "",
             "Logical slots migrated off retired workers onto live spares",
         );
+        let retries = m.counter(
+            "sgc_job_retries_total",
+            "",
+            "Job attempts truncated and re-queued by the failure domains",
+        );
+        let degraded = m.counter(
+            "sgc_degraded_rounds_total",
+            "",
+            "Rounds committed under degraded (never-wait) decode",
+        );
+        let quarantines = m.counter(
+            "sgc_jobs_quarantined_total",
+            "",
+            "Jobs retired after exhausting their retry budget",
+        );
         let queue_depth = m.gauge("sgc_jobs_unfinished", "", "Admitted jobs still running");
         let makespan =
             m.gauge("sgc_fleet_makespan_seconds", "", "Cluster-clock span of the last run");
@@ -481,6 +662,9 @@ impl<'c> JobScheduler<'c> {
             deaths,
             swaps,
             replacements,
+            retries,
+            degraded,
+            quarantines,
             queue_depth,
             makespan,
             gain,
@@ -519,6 +703,11 @@ impl<'c> JobScheduler<'c> {
             submit_s: 0.0,
             open: false,
             dead: vec![false; n],
+            retries: 0,
+            retry_at_s: None,
+            degraded: false,
+            degraded_rounds: 0,
+            failed: false,
             report: None,
         });
         Ok(job)
@@ -592,6 +781,13 @@ impl<'c> JobScheduler<'c> {
             let pre = self.cluster.now_s();
             let mut wake = f64::INFINITY;
             for slot in &self.slots {
+                // parked jobs wake at their scheduled retry instant
+                if let Some(t) = slot.retry_at_s {
+                    if t > pre && t < wake {
+                        wake = t;
+                    }
+                    continue;
+                }
                 if !slot.open {
                     continue;
                 }
@@ -656,6 +852,36 @@ impl<'c> JobScheduler<'c> {
             .map(|s| s.report.take().expect("all jobs finished"))
             .collect();
         let total_session_s: f64 = reports.iter().map(|r| r.total_runtime_s).sum();
+        // Per-job failure-domain outcomes: what each job's state machine
+        // ended on, and how approximate its report is.
+        let outcomes: Vec<JobOutcome> = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(j, s)| {
+                let rep = &reports[j];
+                let reported = rep.job_completion_s.len();
+                let undecoded =
+                    rep.job_completion_s.iter().filter(|t| !t.is_finite()).count();
+                let failed_jobs = s.jobs_total.saturating_sub(reported) + undecoded;
+                let status = if s.failed {
+                    JobStatus::Quarantined
+                } else if failed_jobs > 0 {
+                    JobStatus::Degraded
+                } else {
+                    JobStatus::Completed
+                };
+                JobOutcome {
+                    job: j,
+                    status,
+                    retries: s.retries,
+                    degraded_rounds: s.degraded_rounds,
+                    completed_jobs: s.jobs_total - failed_jobs.min(s.jobs_total),
+                    failed_jobs,
+                    error_bound: failed_jobs as f64 / s.jobs_total.max(1) as f64,
+                }
+            })
+            .collect();
         let swaps = std::mem::take(&mut self.swaps);
         let (refit_candidates, profile_staleness) = self
             .adapt
@@ -673,6 +899,13 @@ impl<'c> JobScheduler<'c> {
             worker_joined_events: self.joined_events,
             worker_retired_events: self.retired_events,
             replacements: self.replacements,
+            job_retries: outcomes.iter().map(|o| u64::from(o.retries)).sum(),
+            degraded_rounds: outcomes.iter().map(|o| o.degraded_rounds).sum(),
+            jobs_degraded: outcomes.iter().filter(|o| o.status == JobStatus::Degraded).count(),
+            jobs_quarantined: outcomes
+                .iter()
+                .filter(|o| o.status == JobStatus::Quarantined)
+                .count(),
             scheme_swaps: swaps.len() as u64,
             refit_candidates,
             profile_staleness,
@@ -684,7 +917,7 @@ impl<'c> JobScheduler<'c> {
             so.gain.set(utilization.multiplexing_gain);
             so.queue_depth.set(0.0);
         }
-        Ok(ScheduleReport { reports, swaps, utilization })
+        Ok(ScheduleReport { reports, swaps, outcomes, utilization })
     }
 
     /// Route one absorbed event batch into the owning sessions.
@@ -756,12 +989,18 @@ impl<'c> JobScheduler<'c> {
                     }
                 }
                 ClusterEvent::RoundTimeout { job, round } => {
-                    let Some(slot) = self.slots.get(job) else { continue };
-                    if slot.open && round == slot.round {
-                        anyhow::bail!(
-                            "job {job} round {round}: cluster round timeout with \
-                             workers still missing"
-                        );
+                    // Failure domain: the backend gave up on this round.
+                    // Truncate *this* job at its last decoded paper-job
+                    // and re-queue it; every other job keeps running. A
+                    // stale timeout (closed round, retried or quarantined
+                    // job) routes nowhere — `slot.round` only ever grows.
+                    let hit = self
+                        .slots
+                        .get(job)
+                        .is_some_and(|s| s.open && round == s.round);
+                    if hit {
+                        let now = self.cluster.now_s();
+                        self.fail_attempt(job, now);
                     }
                 }
                 // membership events maintain the live roster; placement
@@ -793,6 +1032,14 @@ impl<'c> JobScheduler<'c> {
         obs: &mut dyn RoundObserver,
     ) -> crate::Result<()> {
         let slot = &mut self.slots[j];
+        // A parked job restarts once the cluster clock reaches its
+        // backoff deadline (the pump's wake horizon includes it).
+        if let Some(t) = slot.retry_at_s {
+            if now >= t {
+                return self.restart_job(j, obs);
+            }
+            return Ok(());
+        }
         if !slot.open {
             return Ok(());
         }
@@ -820,31 +1067,31 @@ impl<'c> JobScheduler<'c> {
             if hint.is_none() && pending > 0 {
                 session.pending_workers_into(&mut self.pending);
                 if all_pending_dead(&self.pending, &slot.place, &slot.dead) {
-                    anyhow::bail!(
-                        "job {j} round {round}: workers {:?} are dead before any \
-                         arrival; the round can never close",
-                        self.pending
-                    );
+                    // no arrival can ever establish a cutoff: fail this
+                    // attempt (retry/degrade/quarantine), not the run
+                    self.fail_attempt(j, now);
                 }
             }
             return Ok(());
         }
         let events = session.try_close_round(now_rel);
         if matches!(events.first(), Some(SessionEvent::WaitingFor { .. })) {
-            // The wait-out policy needs an arrival that has not come.
+            // The wait-out policy needs an arrival that has not come; if
+            // every awaited worker is permanently dead the wait is
+            // hopeless — fail the attempt (retry/degrade/quarantine)
+            // instead of the whole run.
             session.pending_workers_into(&mut self.pending);
             if all_pending_dead(&self.pending, &slot.place, &slot.dead) {
-                anyhow::bail!(
-                    "job {j} round {round}: workers {:?} are dead and the wait-out \
-                     policy needs one of them; the straggler pattern cannot conform",
-                    self.pending
-                );
+                self.fail_attempt(j, now);
             }
             return Ok(());
         }
         self.rounds_closed += 1;
         obs.round_closed(j, session, &slot.plan, &events)?;
         slot.open = false;
+        if slot.degraded {
+            slot.degraded_rounds += 1;
+        }
         // Journal the commit: the μ-cut decision (κ, detected
         // stragglers), the round span end, and any paper-jobs that
         // became decodable — all read from the committed RoundRecord,
@@ -872,6 +1119,17 @@ impl<'c> JobScheduler<'c> {
                     rec.waited_out as i64,
                     rec.duration_s,
                 );
+                if slot.degraded {
+                    so.degraded.inc();
+                    so.obs.journal.record(
+                        now,
+                        EventKind::DegradedRound,
+                        jid,
+                        rid,
+                        -1,
+                        rec.duration_s,
+                    );
+                }
                 for ev in &events {
                     if let SessionEvent::JobDecoded { job, .. } = ev {
                         so.obs.journal.record(now, EventKind::JobDecode, jid, *job as i64, -1, 0.0);
@@ -914,6 +1172,127 @@ impl<'c> JobScheduler<'c> {
                 .expect("closed slot")
                 .finish_after_assigned();
         }
+    }
+
+    /// Deterministic capped exponential backoff for job `j`'s
+    /// `retry`-th re-queue: `base · 2^(retry-1)` capped, scaled by a
+    /// jitter in `[0.5, 1.0)` drawn from a PCG stream keyed on
+    /// `(jitter_seed, job, retry)` — identically-configured runs park
+    /// and resume identically.
+    fn backoff_s(&self, job: usize, retry: u32) -> f64 {
+        let p = &self.failure;
+        let exp = f64::from(1u32 << (retry.saturating_sub(1)).min(20));
+        let raw = (p.backoff_base_s * exp).min(p.backoff_cap_s);
+        let mut rng = Pcg32::new(p.jitter_seed ^ job as u64, u64::from(retry));
+        raw * (0.5 + 0.5 * rng.f64())
+    }
+
+    /// Can the live roster still conform to job `j`'s scheme? `false`
+    /// once fewer than `n - tolerance` placed workers are live — the
+    /// straggler pattern then exceeds the code's budget every round and
+    /// exact decode is impossible until membership recovers.
+    fn roster_below_tolerance(&self, j: usize) -> bool {
+        let slot = &self.slots[j];
+        let n = slot.place.len();
+        let live = slot.place.iter().filter(|&&p| self.live.get(p).copied().unwrap_or(false));
+        // count spares available for re-placement as live capacity
+        let spares = (0..self.live.len())
+            .filter(|&p| self.live[p] && !slot.place.contains(&p))
+            .count();
+        let usable = live.count() + spares.min(n);
+        usable.min(n) + slot.scheme.per_round_tolerance() < n
+    }
+
+    /// Fail job `j`'s current attempt: truncate at the last decoded
+    /// paper-job (the open round is dropped — only committed rounds
+    /// reach the report), bank the segment, and either park the job for
+    /// a backoff-delayed retry or quarantine it once the retry budget
+    /// is spent. Other jobs are untouched — this is the failure-domain
+    /// boundary.
+    fn fail_attempt(&mut self, j: usize, now: f64) {
+        let slot = &mut self.slots[j];
+        let session = slot.session.take().expect("failing a job with no session");
+        slot.open = false;
+        let decoded = session.decoded_prefix();
+        let segment = session.into_report();
+        // Rebase cluster round keys past the aborted round: stale events
+        // from this attempt can never reach the fresh session.
+        slot.round_base = slot.round;
+        slot.assigned_base += decoded;
+        slot.segments.push(segment);
+        slot.segment_assigned.push(decoded);
+        if let Some(ad) = self.adapt.as_mut() {
+            // a swap staged against the aborted segment is stale
+            let _ = ad.take_swap(j);
+        }
+        let slot = &mut self.slots[j];
+        if slot.retries >= self.failure.max_retries {
+            slot.failed = true;
+            slot.report = Some(merge_segments(&slot.segments, &slot.segment_assigned));
+            if let Some(so) = &self.obs {
+                so.quarantines.inc();
+                so.obs.journal.record(
+                    now,
+                    EventKind::JobQuarantine,
+                    j as i64,
+                    slot.round as i64,
+                    -1,
+                    f64::from(slot.retries),
+                );
+            }
+            self.note_job_finished(j, now);
+            return;
+        }
+        slot.retries += 1;
+        let retries = slot.retries;
+        let wait = self.backoff_s(j, retries);
+        let escalate = retries > self.failure.degrade_after || self.roster_below_tolerance(j);
+        let slot = &mut self.slots[j];
+        slot.retry_at_s = Some(now + wait);
+        if escalate {
+            slot.degraded = true;
+        }
+        if let Some(so) = &self.obs {
+            so.retries.inc();
+            so.obs.journal.record(
+                now,
+                EventKind::JobRetry,
+                j as i64,
+                slot.round as i64,
+                -1,
+                wait,
+            );
+        }
+    }
+
+    /// A parked job's backoff elapsed: restart its remaining paper-jobs
+    /// in a fresh session — degraded attempts run
+    /// [`WaitPolicy::NeverWait`] (approximate decode, never blocks on a
+    /// shrunken roster).
+    fn restart_job(&mut self, j: usize, obs: &mut dyn RoundObserver) -> crate::Result<()> {
+        let slot = &mut self.slots[j];
+        slot.retry_at_s = None;
+        let remaining = slot.jobs_total.saturating_sub(slot.assigned_base);
+        if remaining == 0 {
+            // the aborted round sat past the last decode: nothing left
+            slot.report = Some(merge_segments(&slot.segments, &slot.segment_assigned));
+            let now = self.cluster.now_s();
+            self.note_job_finished(j, now);
+            return Ok(());
+        }
+        // a roster that shrank below tolerance while parked escalates too
+        let escalate = self.roster_below_tolerance(j);
+        let slot = &mut self.slots[j];
+        if escalate {
+            slot.degraded = true;
+        }
+        let mut cfg = slot.session_cfg.clone();
+        cfg.jobs = remaining;
+        if slot.degraded {
+            cfg.wait_policy = WaitPolicy::NeverWait;
+        }
+        slot.session = Some(SgcSession::new(&slot.scheme, cfg));
+        self.start_round(j, obs)
     }
 
     /// A session ran to completion (possibly truncated toward a swap):
@@ -1299,21 +1678,291 @@ mod tests {
     }
 
     #[test]
-    fn waitall_needing_a_dead_worker_fails_the_run() {
-        // The uncoded scheme must wait for everyone; the dead worker can
-        // never report, so the run errors instead of waiting forever —
-        // and the stale-round resurrection bait must not mask the death.
+    fn waitall_on_a_dead_worker_degrades_instead_of_failing() {
+        // The uncoded scheme must wait for everyone and worker 2 can
+        // never report. Pre-failure-domain schedulers errored out of the
+        // whole run here; now the job is retried, escalated to degraded
+        // (never-wait) decode, and the run completes with an explicit
+        // error bound — the stale-round resurrection bait still must not
+        // mask the death.
         let mut cluster = DeadWorkerCluster::new(3, 2);
-        let err = drive_events(
-            &SchemeConfig::uncoded(3),
-            &SessionConfig { jobs: 2, ..Default::default() },
-            &mut cluster,
-        )
-        .unwrap_err();
-        assert!(
-            err.to_string().contains("wait-out policy needs one of them"),
-            "unexpected error: {err}"
+        let mut sched = JobScheduler::new(&mut cluster);
+        sched
+            .admit(&JobSpec {
+                scheme: SchemeConfig::uncoded(3),
+                session: SessionConfig { jobs: 2, ..Default::default() },
+            })
+            .unwrap();
+        let out = sched.run().unwrap();
+        let o = &out.outcomes[0];
+        assert_eq!(o.status, JobStatus::Degraded);
+        assert_eq!(o.retries, 2, "one same-policy retry, then degraded");
+        assert_eq!(o.failed_jobs, 2, "nothing the dead worker held can decode");
+        assert!((o.error_bound - 1.0).abs() < 1e-12);
+        assert!(o.degraded_rounds > 0, "degraded rounds are accounted");
+        assert_eq!(out.utilization.job_retries, 2);
+        assert_eq!(out.utilization.jobs_degraded, 1);
+        assert_eq!(out.utilization.jobs_quarantined, 0);
+        assert!(!out.all_failed(), "a degraded job is not a failed job");
+        // the degraded report carries NaN (undecoded) entries, not lies
+        assert!(out.reports[0].job_completion_s.iter().all(|t| !t.is_finite()));
+    }
+
+    /// Scripted backend that dooms exactly one job: every submission for
+    /// `victim` stages `WorkerDead` for all its placed workers (so no
+    /// μ-cutoff can ever be established), while other jobs' submissions
+    /// complete ~1s later. Pins the failure-domain boundary.
+    struct OneJobDoomed {
+        n: usize,
+        victim: JobId,
+        clock: f64,
+        staged: Vec<ClusterEvent>,
+        buf: Vec<ClusterEvent>,
+    }
+
+    impl OneJobDoomed {
+        fn new(n: usize, victim: JobId) -> Self {
+            OneJobDoomed { n, victim, clock: 0.0, staged: Vec::new(), buf: Vec::new() }
+        }
+    }
+
+    impl EventCluster for OneJobDoomed {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn now_s(&self) -> f64 {
+            self.clock
+        }
+
+        fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+            for (worker, &load) in loads.iter().enumerate() {
+                if load < 0.0 {
+                    continue; // unplaced spare
+                }
+                if job == self.victim {
+                    self.staged.push(ClusterEvent::WorkerDead { job, round, worker });
+                } else {
+                    self.staged.push(ClusterEvent::WorkerDone {
+                        job,
+                        round,
+                        worker,
+                        finish_s: 1.0 + worker as f64 * 0.01,
+                    });
+                }
+            }
+        }
+
+        fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+            self.buf.clear();
+            if self.staged.is_empty() {
+                if until_s.is_finite() && until_s > self.clock {
+                    self.clock = until_s;
+                }
+            } else {
+                self.clock += 0.5;
+                std::mem::swap(&mut self.buf, &mut self.staged);
+            }
+            &self.buf
+        }
+
+        fn true_state(&self, _job: JobId, _round: u64) -> Option<&[bool]> {
+            None
+        }
+    }
+
+    #[test]
+    fn hopeless_job_is_quarantined_while_the_other_completes() {
+        let mut cluster = OneJobDoomed::new(4, 1);
+        let out = {
+            let mut sched = JobScheduler::new(&mut cluster);
+            sched.admit(&spec(4, 1, 3)).unwrap();
+            sched.admit(&spec(4, 1, 3)).unwrap();
+            sched.run().unwrap()
+        };
+        // the healthy job is untouched by its neighbour's failure domain
+        let healthy = &out.reports[0];
+        assert_eq!(healthy.rounds.len(), 3);
+        assert_eq!(healthy.deadline_violations, 0);
+        assert!(healthy.job_completion_s.iter().all(|t| t.is_finite()));
+        assert_eq!(out.outcomes[0].status, JobStatus::Completed);
+        assert_eq!(out.outcomes[0].retries, 0);
+        // the doomed job burned its retry budget and was quarantined
+        let o = &out.outcomes[1];
+        assert_eq!(o.status, JobStatus::Quarantined);
+        assert_eq!(o.retries, FailurePolicy::default().max_retries);
+        assert_eq!(o.completed_jobs, 0);
+        assert_eq!(o.failed_jobs, 3);
+        assert!((o.error_bound - 1.0).abs() < 1e-12);
+        assert_eq!(out.utilization.jobs_quarantined, 1);
+        assert_eq!(out.quarantined(), 1);
+        assert!(!out.all_failed(), "one healthy job keeps the fleet green");
+    }
+
+    /// Scripted backend whose first submission times out (no completions
+    /// ever arrive for it); every later submission is healthy. Pins the
+    /// `RoundTimeout → retry → complete` path.
+    struct FirstRoundTimesOut {
+        n: usize,
+        submissions: usize,
+        clock: f64,
+        staged: Vec<ClusterEvent>,
+        buf: Vec<ClusterEvent>,
+    }
+
+    impl FirstRoundTimesOut {
+        fn new(n: usize) -> Self {
+            FirstRoundTimesOut { n, submissions: 0, clock: 0.0, staged: Vec::new(), buf: Vec::new() }
+        }
+    }
+
+    impl EventCluster for FirstRoundTimesOut {
+        fn n(&self) -> usize {
+            self.n
+        }
+
+        fn now_s(&self) -> f64 {
+            self.clock
+        }
+
+        fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+            assert_eq!(loads.len(), self.n);
+            self.submissions += 1;
+            if self.submissions == 1 {
+                self.staged.push(ClusterEvent::RoundTimeout { job, round });
+            } else {
+                for worker in 0..self.n {
+                    self.staged.push(ClusterEvent::WorkerDone {
+                        job,
+                        round,
+                        worker,
+                        finish_s: 1.0 + worker as f64 * 0.01,
+                    });
+                }
+            }
+        }
+
+        fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+            self.buf.clear();
+            if self.staged.is_empty() {
+                if until_s.is_finite() && until_s > self.clock {
+                    self.clock = until_s;
+                }
+            } else {
+                self.clock += 0.5;
+                std::mem::swap(&mut self.buf, &mut self.staged);
+            }
+            &self.buf
+        }
+
+        fn true_state(&self, _job: JobId, _round: u64) -> Option<&[bool]> {
+            None
+        }
+    }
+
+    #[test]
+    fn round_timeout_retries_the_job_and_it_completes_exactly() {
+        let mut cluster = FirstRoundTimesOut::new(4);
+        let out = {
+            let mut sched = JobScheduler::new(&mut cluster);
+            sched.admit(&spec(4, 1, 3)).unwrap();
+            sched.run().unwrap()
+        };
+        let o = &out.outcomes[0];
+        assert_eq!(o.status, JobStatus::Completed, "retry recovered everything");
+        assert_eq!(o.retries, 1);
+        assert_eq!(o.failed_jobs, 0);
+        assert_eq!(o.error_bound, 0.0);
+        assert_eq!(out.utilization.job_retries, 1);
+        assert_eq!(out.utilization.jobs_degraded, 0);
+        let rep = &out.reports[0];
+        assert_eq!(rep.job_completion_s.len(), 3);
+        assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+    }
+
+    #[test]
+    fn stale_events_for_a_quarantined_job_are_ignored() {
+        // After job 1 is quarantined its aborted submissions may still
+        // owe RoundTimeout / WorkerDead / WorkerDone events; delivering
+        // them must neither crash nor perturb the surviving jobs
+        // (regression for the fail-fast bail this module used to have).
+        struct LateGhostEvents {
+            inner: OneJobDoomed,
+            ghost_spam: bool,
+        }
+        impl EventCluster for LateGhostEvents {
+            fn n(&self) -> usize {
+                self.inner.n()
+            }
+            fn now_s(&self) -> f64 {
+                self.inner.now_s()
+            }
+            fn submit(&mut self, job: JobId, round: u64, loads: &[f64]) {
+                self.inner.submit(job, round, loads);
+                if self.ghost_spam {
+                    // stale events keyed to the victim's long-aborted
+                    // first attempt, re-delivered on every submission
+                    self.inner.staged.push(ClusterEvent::RoundTimeout { job: 1, round: 1 });
+                    self.inner.staged.push(ClusterEvent::WorkerDead {
+                        job: 1,
+                        round: 1,
+                        worker: 0,
+                    });
+                    self.inner.staged.push(ClusterEvent::WorkerDone {
+                        job: 1,
+                        round: 1,
+                        worker: 1,
+                        finish_s: 0.1,
+                    });
+                }
+                self.ghost_spam = true;
+            }
+            fn poll(&mut self, until_s: f64) -> &[ClusterEvent] {
+                self.inner.poll(until_s)
+            }
+            fn true_state(&self, job: JobId, round: u64) -> Option<&[bool]> {
+                self.inner.true_state(job, round)
+            }
+        }
+        let mut plain = OneJobDoomed::new(4, 1);
+        let baseline = {
+            let mut sched = JobScheduler::new(&mut plain);
+            sched.admit(&spec(4, 1, 3)).unwrap();
+            sched.admit(&spec(4, 1, 3)).unwrap();
+            sched.run().unwrap()
+        };
+        let mut noisy = LateGhostEvents { inner: OneJobDoomed::new(4, 1), ghost_spam: false };
+        let spammed = {
+            let mut sched = JobScheduler::new(&mut noisy);
+            sched.admit(&spec(4, 1, 3)).unwrap();
+            sched.admit(&spec(4, 1, 3)).unwrap();
+            sched.run().unwrap()
+        };
+        // the healthy job's report is byte-identical despite the spam
+        assert_eq!(
+            format!("{:?}", baseline.reports[0]),
+            format!("{:?}", spammed.reports[0])
         );
+        assert_eq!(spammed.outcomes[1].status, JobStatus::Quarantined);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let mut sim = quiet(4, 1);
+        let sched = JobScheduler::new(&mut sim);
+        let base = sched.failure.backoff_base_s;
+        let cap = sched.failure.backoff_cap_s;
+        for job in 0..3 {
+            for retry in 1..=8u32 {
+                let a = sched.backoff_s(job, retry);
+                let b = sched.backoff_s(job, retry);
+                assert_eq!(a, b, "jitter must be deterministic");
+                let raw = (base * f64::from(1u32 << (retry - 1))).min(cap);
+                assert!(a >= raw * 0.5 && a < raw, "jitter stays in [raw/2, raw)");
+            }
+        }
+        // distinct (job, retry) keys draw distinct jitter
+        assert_ne!(sched.backoff_s(0, 1), sched.backoff_s(1, 1));
     }
 
     #[test]

@@ -90,6 +90,18 @@ pub enum WaitPolicy {
     /// behaviour; also forced whenever the scheme tolerates no
     /// stragglers).
     WaitAll,
+    /// Degraded-mode approximate decode: never wait past the μ-cutoff,
+    /// no matter what the conformance checker or the job ledger say.
+    /// Every round closes at `(1+μ)·κ` with whatever responder set
+    /// arrived; jobs whose partials were lost simply never decode
+    /// (`job_completion_s` stays `NaN`, counted as deadline
+    /// violations). This is the always-on serving fallback for a
+    /// roster that has shrunk below the scheme's straggler tolerance —
+    /// the best available partial sum instead of an indefinite wait
+    /// (see `rust/DESIGN.md` §Failure domains). Unlike the other
+    /// policies it is *not* overridden to `WaitAll` for zero-tolerance
+    /// schemes: an explicit request for degraded mode wins.
+    NeverWait,
 }
 
 /// Protocol configuration for one session (previously `RunConfig`).
@@ -241,7 +253,13 @@ impl SgcSession {
         let scheme = scheme_cfg.build(cfg.jobs);
         let n = scheme.spec().n;
         let total_rounds = scheme.total_rounds();
-        let wait_policy = if matches!(scheme.spec().tolerance, ToleranceSpec::None) {
+        // Zero-tolerance schemes must normally wait for everyone — but
+        // an explicit NeverWait (degraded serving) takes precedence:
+        // waiting forever on a shrunken roster is exactly what degraded
+        // mode exists to avoid.
+        let wait_policy = if matches!(scheme.spec().tolerance, ToleranceSpec::None)
+            && cfg.wait_policy != WaitPolicy::NeverWait
+        {
             WaitPolicy::WaitAll
         } else {
             cfg.wait_policy
@@ -338,6 +356,16 @@ impl SgcSession {
     /// on a truncated session.
     pub fn assigned_jobs(&self) -> usize {
         self.round.min(self.truncated_jobs.unwrap_or(self.cfg.jobs))
+    }
+
+    /// Number of jobs decoded as a contiguous prefix `1..=k`: every job
+    /// in `1..=decoded_prefix()` has decoded; job
+    /// `decoded_prefix() + 1` has not (yet). This is the safe
+    /// truncation point for a failed session — the failure-domain
+    /// scheduler re-queues a faulted job from here, guaranteed not to
+    /// drop or double-count a paper-job.
+    pub fn decoded_prefix(&self) -> usize {
+        self.frontier - 1
     }
 
     /// Is the job ledger clean — has every assigned job been decoded?
@@ -747,6 +775,9 @@ fn decide_into(
                 Some(t) if !deadline_already_done => scheme.decodable_with(t, r, responded),
                 _ => true,
             },
+            // Degraded mode: the μ-cut responder set is final, whatever
+            // the checker or the ledger would have preferred.
+            WaitPolicy::NeverWait => true,
         };
         if satisfied {
             break;
@@ -1017,6 +1048,61 @@ mod tests {
             other => panic!("unexpected event {other:?}"),
         }
         assert_eq!(session.last_responded(), &[true, true, true, false]);
+    }
+
+    #[test]
+    fn never_wait_closes_at_the_cutoff_with_missing_workers() {
+        // GC(s=1) with two workers missing: ConformanceRepair would
+        // hold the round open (the pattern cannot conform), NeverWait
+        // cuts at (1+μ)κ and the due job simply fails to decode.
+        let mut session = SgcSession::new(
+            &SchemeConfig::gc(4, 1),
+            SessionConfig { jobs: 1, wait_policy: WaitPolicy::NeverWait, ..Default::default() },
+        );
+        session.begin_round();
+        session.submit(0, 1.0);
+        session.submit(1, 1.0);
+        let events = session.try_close_round(2.0);
+        match &events[0] {
+            SessionEvent::RoundClosed { duration_s, waited_out, .. } => {
+                assert!((*duration_s - 2.0).abs() < 1e-12, "round ends at (1+μ)κ");
+                assert_eq!(*waited_out, 0, "never-wait admits nobody");
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        assert!(
+            events.iter().any(|e| matches!(e, SessionEvent::DeadlineViolated { job: 1, .. })),
+            "the undecodable due job is reported, not waited for"
+        );
+        assert_eq!(session.decoded_prefix(), 0);
+        let report = session.into_report();
+        assert!(report.job_completion_s[0].is_nan(), "lost job stays NaN");
+    }
+
+    #[test]
+    fn never_wait_overrides_the_uncoded_wait_all_forcing() {
+        let mut session = SgcSession::new(
+            &SchemeConfig::uncoded(4),
+            SessionConfig { jobs: 1, wait_policy: WaitPolicy::NeverWait, ..Default::default() },
+        );
+        session.begin_round();
+        for w in 0..3 {
+            session.submit(w, 1.0);
+        }
+        // WaitAll would hold for worker 3 forever; degraded mode cuts.
+        let events = session.try_close_round(2.0);
+        assert!(matches!(events[0], SessionEvent::RoundClosed { .. }));
+        assert_eq!(session.last_responded(), &[true, true, true, false]);
+    }
+
+    #[test]
+    fn decoded_prefix_tracks_the_frontier() {
+        let mut session = gc_session(4, 1, 3);
+        assert_eq!(session.decoded_prefix(), 0);
+        session.begin_round();
+        session.submit_all(&[1.0, 1.0, 1.0, 1.0]);
+        session.close_round();
+        assert_eq!(session.decoded_prefix(), 1, "job 1 decoded in round 1");
     }
 
     #[test]

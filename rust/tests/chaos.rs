@@ -1,0 +1,262 @@
+//! Chaos-matrix integration tests: every scripted fault kind, injected
+//! into both execution backends (virtual-time simulator and loopback TCP
+//! fleet), with the multi-job scheduler's failure domains absorbing the
+//! blast — plus the same-seed determinism contract of the harness.
+
+use sgc::chaos::{ChaosPlan, FaultKind};
+use sgc::cluster::SimCluster;
+use sgc::coding::SchemeConfig;
+use sgc::fleet::LoopbackFleet;
+use sgc::sched::{JobScheduler, JobSpec, JobStatus, ScheduleReport};
+use sgc::session::SessionConfig;
+use sgc::straggler::GilbertElliot;
+use std::time::Duration;
+
+const KINDS: [&str; 6] = ["crash", "hang", "byz", "part", "rejoin", "shrink"];
+
+/// One multi-job simulator run under the given chaos spec: 3 jobs of a
+/// 1-straggler-tolerant GC scheme over 6 workers, fully virtual time.
+fn sim_run(spec: &str, chaos_seed: u64) -> ScheduleReport {
+    let n = 6;
+    let plan = ChaosPlan::parse(spec, chaos_seed).expect("parse chaos spec").resolve(n);
+    let mut sim =
+        SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 21), 21 ^ 0xc1);
+    sim.set_chaos(plan);
+    let mut sched = JobScheduler::new(&mut sim);
+    let spec = JobSpec {
+        scheme: SchemeConfig::gc(n, 1),
+        session: SessionConfig { jobs: 3, ..Default::default() },
+    };
+    for _ in 0..3 {
+        sched.admit(&spec).expect("admit");
+    }
+    sched.run().expect("scheduler run survives scripted chaos")
+}
+
+#[test]
+fn sim_matrix_every_fault_kind_is_absorbed_by_tolerance() {
+    // gc(6, 1) tolerates one missing worker per round, so each
+    // single-victim fault must leave all three jobs green — the fault is
+    // absorbed by the code, not by retries.
+    for kind in KINDS {
+        let out = sim_run(&format!("{kind}@r4:w2"), 0xc405);
+        assert_eq!(out.reports.len(), 3, "{kind}");
+        assert!(!out.all_failed(), "{kind}: no job may fail");
+        for (j, o) in out.outcomes.iter().enumerate() {
+            assert_eq!(
+                o.status,
+                JobStatus::Completed,
+                "{kind}: job {j} should complete under a tolerated fault: {o:?}"
+            );
+        }
+        for (j, rep) in out.reports.iter().enumerate() {
+            assert!(
+                rep.job_completion_s.iter().all(|t| t.is_finite()),
+                "{kind}: job {j} left undecoded paper-jobs"
+            );
+        }
+    }
+}
+
+#[test]
+fn sim_an_armed_but_unfired_plan_is_byte_identical_to_no_chaos() {
+    // Per-job isolation rests on the harness being free until a fault
+    // actually fires: an armed plan whose rounds never arrive must not
+    // perturb a single service-time draw, so the whole report matches
+    // the plain run byte for byte (the cluster-level RNG-parity pin is
+    // `sim::tests::chaos_leaves_the_survivors_rng_stream_intact`).
+    let plain = {
+        let n = 6;
+        let mut sim =
+            SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 21), 21 ^ 0xc1);
+        let mut sched = JobScheduler::new(&mut sim);
+        let spec = JobSpec {
+            scheme: SchemeConfig::gc(n, 1),
+            session: SessionConfig { jobs: 3, ..Default::default() },
+        };
+        for _ in 0..3 {
+            sched.admit(&spec).expect("admit");
+        }
+        sched.run().expect("plain run")
+    };
+    let chaotic = sim_run("crash@r999,shrink@r900:3", 0xc405);
+    assert_eq!(
+        format!("{plain:?}"),
+        format!("{chaotic:?}"),
+        "an unfired chaos plan must be invisible in the report"
+    );
+}
+
+#[test]
+fn sim_chaos_is_deterministic_for_a_fixed_seed() {
+    // The whole report — per-round timings, retries, outcomes,
+    // utilization counters — must be byte-identical across two runs with
+    // the same chaos spec and seed, for every fault kind.
+    for kind in KINDS {
+        let spec = format!("{kind}@r3:w1,{kind}@r7");
+        let a = sim_run(&spec, 7);
+        let b = sim_run(&spec, 7);
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "{kind}: same seed must reproduce the identical run"
+        );
+    }
+}
+
+#[test]
+fn chaos_plan_resolution_is_a_pure_function_of_the_seed() {
+    // A spec without an explicit :w picks its victim from the seed; the
+    // plan (not the run) is where the nondeterminism would live, so pin
+    // it at the plan level: resolution is a pure function of the seed.
+    let spec = "crash@r2,hang@r5";
+    let a = ChaosPlan::parse(spec, 1).unwrap().resolve(8);
+    let b = ChaosPlan::parse(spec, 1).unwrap().resolve(8);
+    assert_eq!(a, b, "same seed, same victims");
+    let kinds: Vec<FaultKind> = a.faults.iter().map(|f| f.kind).collect();
+    assert_eq!(kinds, [FaultKind::Crash, FaultKind::Hang]);
+}
+
+#[test]
+fn sim_wait_all_jobs_degrade_in_isolation_instead_of_failing_the_run() {
+    // Zero-tolerance (uncoded, wait-all) jobs cannot absorb a crashed
+    // worker: the failure-domain machinery must retry, escalate each
+    // affected job to degraded never-wait decode, and still finish the
+    // run with an explicit error bound — never a scheduler error exit.
+    let n = 4;
+    let plan = ChaosPlan::parse("crash@r3:w1", 9).unwrap().resolve(n);
+    let mut sim =
+        SimCluster::from_gilbert_elliot(n, GilbertElliot::default_fit(n, 3), 3 ^ 0xc1);
+    sim.set_chaos(plan);
+    let out = {
+        let mut sched = JobScheduler::new(&mut sim);
+        let spec = JobSpec {
+            scheme: SchemeConfig::uncoded(n),
+            session: SessionConfig { jobs: 3, ..Default::default() },
+        };
+        sched.admit(&spec).expect("admit 0");
+        sched.admit(&spec).expect("admit 1");
+        sched.run().expect("run must survive a crash under wait-all")
+    };
+    assert!(!out.all_failed(), "degraded jobs are not failed jobs");
+    assert!(
+        out.outcomes.iter().any(|o| o.status == JobStatus::Degraded),
+        "a wait-all job hit by the crash must end degraded: {:?}",
+        out.outcomes
+    );
+    assert!(out.utilization.job_retries >= 1, "{}", out.utilization);
+    assert!(out.utilization.degraded_rounds >= 1, "{}", out.utilization);
+    // degraded reports advertise what is missing instead of inventing it
+    for o in &out.outcomes {
+        if o.status == JobStatus::Degraded {
+            assert!(o.error_bound > 0.0 && o.error_bound <= 1.0, "{o:?}");
+        }
+    }
+}
+
+/// One multi-job loopback-fleet run under the given chaos spec: 2 jobs
+/// of a 1-straggler-tolerant GC scheme over 4 real TCP workers.
+fn fleet_run(spec: &str) -> ScheduleReport {
+    let n = 4;
+    let plan = ChaosPlan::parse(spec, 0xf1ee7).expect("parse chaos spec").resolve(n);
+    let worker_plan = plan.clone();
+    let mut fleet = LoopbackFleet::spawn_with(n, move |id, addr| {
+        let mut cfg = sgc::fleet::WorkerConfig::loopback(id, addr.to_string(), None);
+        cfg.fault = worker_plan.worker_fault(id as usize);
+        cfg
+    })
+    .expect("spawn fleet");
+    fleet.cluster.set_chaos(plan);
+    // tight reaping so a hung worker is retired within the test budget
+    fleet.cluster.set_membership(sgc::fleet::MembershipConfig {
+        reap_after: Duration::from_secs(2),
+        ..Default::default()
+    });
+    let out = {
+        let mut sched = JobScheduler::new(&mut fleet.cluster);
+        let spec = JobSpec {
+            scheme: SchemeConfig::gc(n, 1),
+            session: SessionConfig { jobs: 4, ..Default::default() },
+        };
+        sched.admit(&spec).expect("admit 0");
+        sched.admit(&spec).expect("admit 1");
+        sched.run().expect("fleet run survives scripted chaos")
+    };
+    // drain stragglers' late results so workers are idle at Shutdown
+    let _ = fleet.cluster.finish_trace(Duration::from_secs(5), 1.0);
+    fleet.shutdown().expect("chaos workers still exit cleanly");
+    out
+}
+
+#[test]
+fn fleet_crash_is_absorbed_and_the_run_completes() {
+    let out = fleet_run("crash@r3:w1");
+    assert!(!out.all_failed());
+    assert!(
+        out.outcomes.iter().all(|o| o.status == JobStatus::Completed),
+        "gc(4,1) tolerates the crashed worker: {:?}",
+        out.outcomes
+    );
+    assert!(out.utilization.worker_retired_events >= 1, "{}", out.utilization);
+}
+
+#[test]
+fn fleet_hang_is_absorbed_and_the_run_completes() {
+    let out = fleet_run("hang@r3:w1");
+    assert!(!out.all_failed());
+    assert!(
+        out.outcomes.iter().all(|o| o.status != JobStatus::Quarantined),
+        "{:?}",
+        out.outcomes
+    );
+    for rep in &out.reports {
+        assert_eq!(rep.rounds.len(), 4, "every job's rounds must commit");
+    }
+}
+
+#[test]
+fn fleet_byzantine_worker_is_retired_and_the_run_completes() {
+    let out = fleet_run("byz@r2:w2");
+    assert!(!out.all_failed());
+    assert!(
+        out.outcomes.iter().all(|o| o.status == JobStatus::Completed),
+        "{:?}",
+        out.outcomes
+    );
+    // the corrupted Result got the worker retired for good
+    assert!(out.utilization.worker_retired_events >= 1, "{}", out.utilization);
+}
+
+#[test]
+fn fleet_partition_heals_and_the_run_completes() {
+    let out = fleet_run("part@r2:w0");
+    assert!(!out.all_failed());
+    assert!(
+        out.outcomes.iter().all(|o| o.status != JobStatus::Quarantined),
+        "{:?}",
+        out.outcomes
+    );
+}
+
+#[test]
+fn fleet_shrink_retires_the_victim_and_the_run_completes() {
+    let out = fleet_run("shrink@r2:w3");
+    assert!(!out.all_failed());
+    assert!(
+        out.outcomes.iter().all(|o| o.status == JobStatus::Completed),
+        "{:?}",
+        out.outcomes
+    );
+    assert!(out.utilization.worker_retired_events >= 1, "{}", out.utilization);
+}
+
+#[test]
+fn fleet_reconnect_rejoins_and_the_run_completes() {
+    let out = fleet_run("rejoin@r2:w1");
+    assert!(!out.all_failed());
+    assert!(
+        out.outcomes.iter().all(|o| o.status != JobStatus::Quarantined),
+        "{:?}",
+        out.outcomes
+    );
+}

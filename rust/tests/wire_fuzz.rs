@@ -1,0 +1,161 @@
+//! Property/fuzz tests for the fleet wire codec: deterministic seeded
+//! corpora of truncated, extended, bit-flipped and purely random byte
+//! strings must decode to `Err`/`Ok`, never panic, hang, or over-read —
+//! the master's reactor feeds attacker-controlled bytes straight into
+//! these paths.
+
+use sgc::fleet::{Frame, FrameBuffer};
+use sgc::util::rng::Pcg32;
+
+/// The valid-frame corpus the mutations start from.
+fn corpus() -> Vec<Frame> {
+    vec![
+        Frame::Hello { worker_id: 0 },
+        Frame::Hello { worker_id: u32::MAX },
+        Frame::Assign { round: 1, work_units: 0.25, chunks: vec![1, 2, 3] },
+        Frame::Assign { round: u32::MAX, work_units: f64::MAX, chunks: vec![] },
+        Frame::Assign { round: 7, work_units: -0.0, chunks: (0..64).collect() },
+        Frame::Result { worker_id: 3, round: 9, compute_s: 0.001, checksum: u64::MAX },
+        Frame::Result { worker_id: 0, round: 0, compute_s: f64::NAN, checksum: 0 },
+        Frame::Heartbeat { worker_id: 12, round: 4096 },
+        Frame::Shutdown,
+    ]
+}
+
+/// Run one mutated byte string through every decode surface. Success is
+/// simply "no panic, no over-read": `Frame::decode` and `read_frame` may
+/// return any `Ok`/`Err`, and the incremental `FrameBuffer` must either
+/// produce frames, ask for more bytes, or die with a framing error.
+fn exercise_all_decoders(bytes: &[u8]) {
+    let _ = Frame::decode(bytes);
+
+    // blocking reader over the same bytes: drain until EOF or error
+    let mut r = bytes;
+    for _ in 0..bytes.len() + 1 {
+        if sgc::fleet::wire::read_frame(&mut r).is_err() {
+            break;
+        }
+    }
+
+    // incremental reassembly, fed in two arbitrary halves
+    let mid = bytes.len() / 2;
+    let mut fb = FrameBuffer::new();
+    fb.feed(&bytes[..mid]);
+    loop {
+        match fb.next_frame() {
+            Ok(Some(_)) => continue,
+            Ok(None) | Err(_) => break,
+        }
+    }
+    fb.feed(&bytes[mid..]);
+    loop {
+        match fb.next_frame() {
+            Ok(Some(_)) => continue,
+            Ok(None) | Err(_) => break,
+        }
+    }
+}
+
+#[test]
+fn truncations_never_panic() {
+    for frame in corpus() {
+        let bytes = frame.encode();
+        for cut in 0..bytes.len() {
+            exercise_all_decoders(&bytes[..cut]);
+            // a strict prefix must never decode as a whole frame
+            assert!(
+                Frame::decode(&bytes[..cut]).is_err(),
+                "truncated {frame:?} at {cut} decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_extensions_never_panic() {
+    let mut rng = Pcg32::seeded(0x51ab);
+    for frame in corpus() {
+        let base = frame.encode();
+        for extra in [1usize, 3, 8, 64] {
+            let mut bytes = base.clone();
+            for _ in 0..extra {
+                bytes.push(rng.next_u32() as u8);
+            }
+            exercise_all_decoders(&bytes);
+            // whole-buffer decode must reject the trailing garbage
+            assert!(
+                Frame::decode(&bytes).is_err(),
+                "extended {frame:?} by {extra} decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_bit_flips_never_panic_or_over_read() {
+    for frame in corpus() {
+        let base = frame.encode();
+        for byte in 0..base.len() {
+            for bit in 0..8 {
+                let mut bytes = base.clone();
+                bytes[byte] ^= 1 << bit;
+                exercise_all_decoders(&bytes);
+            }
+        }
+    }
+}
+
+#[test]
+fn random_byte_soup_never_panics() {
+    let mut rng = Pcg32::seeded(0xbad_5009);
+    for _ in 0..2000 {
+        let len = rng.below(96);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        exercise_all_decoders(&bytes);
+    }
+}
+
+#[test]
+fn adversarial_length_prefixes_never_allocate_unboundedly() {
+    let mut rng = Pcg32::seeded(0x1e47);
+    // hand-crafted length prefixes around every boundary the codec checks
+    let lens: Vec<u32> = vec![
+        0,
+        1,
+        2,
+        3,
+        sgc::fleet::wire::MAX_FRAME_LEN - 1,
+        sgc::fleet::wire::MAX_FRAME_LEN,
+        sgc::fleet::wire::MAX_FRAME_LEN + 1,
+        u32::MAX,
+        rng.next_u32(),
+        rng.next_u32(),
+    ];
+    for len in lens {
+        let mut bytes = len.to_le_bytes().to_vec();
+        // a short body regardless of the declared length
+        for _ in 0..rng.below(16) {
+            bytes.push(rng.next_u32() as u8);
+        }
+        exercise_all_decoders(&bytes);
+    }
+}
+
+#[test]
+fn chunk_count_mutations_never_allocate_unboundedly() {
+    // mutate the chunk-count field of a valid Assign through hostile
+    // values; decode must reject without allocating `count` elements
+    let frame = Frame::Assign { round: 2, work_units: 0.5, chunks: vec![9, 9, 9] };
+    let base = frame.encode();
+    // layout: 4 len + 1 ver + 1 tag + 4 round + 8 work_units, then count
+    let count_off = 4 + 1 + 1 + 4 + 8;
+    for hostile in [4u32, 5, 1000, 1 << 20, u32::MAX] {
+        let mut bytes = base.clone();
+        bytes[count_off..count_off + 4].copy_from_slice(&hostile.to_le_bytes());
+        exercise_all_decoders(&bytes);
+        assert!(
+            Frame::decode(&bytes).is_err(),
+            "hostile chunk count {hostile} decoded"
+        );
+    }
+}
