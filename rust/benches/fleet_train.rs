@@ -1,0 +1,146 @@
+//! End-to-end training bench for the gradient data plane (§Measurement):
+//! GC vs SR-SGC vs M-SGC run real coded partial gradients over the
+//! loopback TCP fleet — partitions shipped, MLP forward/backward at the
+//! workers, β-decode + Adam at the master — and the measured wall-clock
+//! per round is compared against the virtual-time simulator's prediction
+//! for the *same* delay profile (the workers' own `base_s + α·load`
+//! pacing model, jitter-free). The gap between the two columns is the
+//! real-world overhead the simulator does not model: TCP, the reactor,
+//! serialization and the gradient math itself.
+//!
+//! Emits the repo-level `BENCH_9.json` snapshot (per-scheme fleet vs
+//! sim round times, their ratio, and the loss drop actually trained)
+//! so the fleet/sim fidelity trajectory accumulates across PRs.
+
+use sgc::bench_harness::Bench;
+use sgc::cluster::{LatencyParams, SimCluster};
+use sgc::coding::SchemeConfig;
+use sgc::fleet::{LoopbackFleet, WorkerConfig};
+use sgc::grad::{DataPlane, GradConfig, GradJobSummary, GradPump};
+use sgc::sched::{drive_events, JobScheduler, JobSpec, JobStatus};
+use sgc::session::SessionConfig;
+use sgc::straggler::NoStragglers;
+use std::time::Duration;
+
+/// What one fleet training run leaves behind for the comparison table.
+struct FleetRun {
+    /// Mean protocol-clock round duration (real seconds on the fleet).
+    round_s: f64,
+    /// Rounds the session actually ran (≥ jobs for delayed schemes).
+    rounds: usize,
+    sum: GradJobSummary,
+}
+
+/// One full training run on a fresh loopback fleet: spawn, ship
+/// partitions, train `jobs` paper jobs with real coded gradients,
+/// shut down.
+fn fleet_train(scheme: &SchemeConfig, jobs: usize, seed: u64) -> FleetRun {
+    let n = scheme.n;
+    let mut fleet = LoopbackFleet::spawn(n, None).expect("spawn fleet");
+    let cfg = GradConfig { seed, batch: 64, train_size: 512, ..Default::default() };
+    let mut pump = GradPump::new(DataPlane::shared(), cfg);
+    fleet.cluster.set_dataplane(pump.dataplane());
+    let out = {
+        let mut sched = JobScheduler::new(&mut fleet.cluster);
+        sched.set_dataplane(pump.dataplane());
+        let spec = JobSpec {
+            scheme: scheme.clone(),
+            session: SessionConfig { jobs, ..Default::default() },
+        };
+        let j = sched.admit(&spec).expect("admit");
+        pump.configure_job(j, scheme).expect("configure");
+        sched.run_observed(&mut pump).expect("fleet run")
+    };
+    let _ = fleet.cluster.finish_trace(Duration::from_secs(5), 1.0);
+    fleet.shutdown().expect("clean shutdown");
+    assert!(
+        out.outcomes.iter().all(|o| o.status == JobStatus::Completed),
+        "healthy fleet run must complete: {:?}",
+        out.outcomes
+    );
+    let rep = &out.reports[0];
+    let sum = pump.summary().remove(0);
+    assert_eq!(sum.steps, jobs, "every paper job must decode into an optimizer step");
+    FleetRun { round_s: rep.mean_round_s(), rounds: rep.rounds.len(), sum }
+}
+
+/// The simulator's prediction for the identical workload: same scheme,
+/// same job count, and the fleet workers' own pacing profile
+/// (`WorkerConfig::{base_s, alpha_s}`) as a jitter-free latency model.
+fn sim_predict(scheme: &SchemeConfig, jobs: usize, seed: u64) -> (f64, usize) {
+    let n = scheme.n;
+    let wc = WorkerConfig::loopback(0, String::new(), None);
+    let params = LatencyParams {
+        overhead_median_s: wc.base_s,
+        overhead_sigma: 0.0,
+        alpha_s_per_load: wc.alpha_s,
+        compute_jitter: 0.0,
+        ..Default::default()
+    };
+    let mut sim = SimCluster::new(n, params, Box::new(NoStragglers { n }), seed);
+    let rep = drive_events(scheme, &SessionConfig { jobs, ..Default::default() }, &mut sim)
+        .expect("sim prediction");
+    (rep.mean_round_s(), rep.rounds.len())
+}
+
+fn main() {
+    let fast = std::env::var("SGC_BENCH_FAST").ok().as_deref() == Some("1");
+    let mut b = Bench::new("fleet_train");
+    b.header();
+    let n = 4;
+    let jobs = if fast { 5 } else { 16 };
+    let reps: u64 = if fast { 1 } else { 3 };
+    let seed = 0x9_bea_c09u64;
+    let schemes = [
+        ("gc", SchemeConfig::gc(n, 1)),
+        ("sr_sgc", SchemeConfig::sr_sgc(n, 1, 2, 1)),
+        ("m_sgc", SchemeConfig::msgc(n, 1, 2, 1)),
+    ];
+
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for (key, scheme) in &schemes {
+        let label = format!("fleet_train_{key}(n={n},jobs={jobs})");
+        let mut last: Option<FleetRun> = None;
+        b.run_n(&label, reps, || last = Some(fleet_train(scheme, jobs, seed)));
+        let run = last.expect("run_n executed at least once");
+        let (sim_round_s, sim_rounds) = sim_predict(scheme, jobs, seed ^ 0x51);
+        if run.rounds != sim_rounds {
+            // CI jitter can cost the fleet a re-attempt round; surface
+            // the divergence instead of failing the bench on it
+            println!("  {key}: fleet ran {} rounds, sim predicted {}", run.rounds, sim_rounds);
+        }
+        let ratio = run.round_s / sim_round_s.max(1e-12);
+        let s = &run.sum;
+        println!(
+            "  {:<28} fleet {:>7.1} ms/round vs sim {:>7.1} ms predicted (x{:.2}); \
+             loss {:.4} -> {:.4} over {} steps (fallbacks={})",
+            scheme.label(),
+            run.round_s * 1e3,
+            sim_round_s * 1e3,
+            ratio,
+            s.first_loss,
+            s.last_loss,
+            s.steps,
+            s.fallback_decodes,
+        );
+        assert!(
+            s.last_loss < s.first_loss,
+            "{key}: real training must reduce the loss: {:?}",
+            s.losses
+        );
+        metrics.push((format!("{key}_fleet_round_s"), run.round_s));
+        metrics.push((format!("{key}_sim_round_s"), sim_round_s));
+        metrics.push((format!("{key}_fleet_vs_sim"), ratio));
+        metrics.push((
+            format!("{key}_loss_drop"),
+            (s.first_loss - s.last_loss) / s.first_loss.abs().max(1e-12),
+        ));
+        metrics.push((format!("{key}_fallback_decodes"), s.fallback_decodes as f64));
+    }
+
+    b.save();
+    metrics.push(("fleet_jobs".to_string(), jobs as f64));
+    metrics.push(("fleet_workers".to_string(), n as f64));
+    let named: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    b.save_snapshot("BENCH_9.json", &named);
+}

@@ -41,15 +41,20 @@
 //! longer reap deadline, which retires the worker for good.
 
 use super::reactor::{poll_fds, Connection, PollFd, POLLIN, POLLOUT};
-use super::wire::Frame;
+use super::wire::{
+    tensor_slices, Frame, GradUnit, TensorAssembly, WireError, ERR_BAD_HANDSHAKE,
+    ERR_BAD_VERSION, WIRE_VERSION,
+};
 use super::worker::chunk_checksum;
 use crate::chaos::{FaultKind, ResolvedPlan};
 use crate::cluster::{ClusterEvent, EventCluster, JobId, RunTrace};
 use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::RunReport;
+use crate::grad::dataplane::SharedDataPlane;
 use crate::obs::{Counter, EventKind, Histogram, Obs};
 use crate::session::SessionConfig;
 use crate::{log_info, log_warn};
+use std::collections::{BTreeSet, HashMap};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
@@ -121,11 +126,22 @@ struct WorkerSlot {
     /// deaths — a transient stall on a loaded box must not evict a
     /// healthy worker.
     stale: bool,
-    /// Returned a result failing checksum verification: permanent —
-    /// nothing it sends is trusted again, and the slot id can never be
-    /// reclaimed.
+    /// Returned a result failing verification — a bad synthetic
+    /// checksum, or a gradient payload the decode audit pinned on this
+    /// worker: permanent — nothing it sends is trusted again, and the
+    /// slot id can never be reclaimed.
     byzantine: bool,
     last_seen: Instant,
+    /// Jobs whose `JobSpec` went out on the *current* connection
+    /// (cleared on every admit: a fresh socket knows nothing).
+    sent_specs: BTreeSet<u32>,
+    /// `(job, chunk)` partitions delivered on the current connection.
+    sent_chunks: BTreeSet<(u32, u32)>,
+    /// Latest parameter version broadcast per job on the current
+    /// connection.
+    sent_params: HashMap<u32, u32>,
+    /// In-flight `GradResult` reassembly, keyed `(job, wire round)`.
+    grad_asm: HashMap<(u32, u32), TensorAssembly>,
 }
 
 impl WorkerSlot {
@@ -137,6 +153,10 @@ impl WorkerSlot {
             stale: false,
             byzantine: false,
             last_seen: now,
+            sent_specs: BTreeSet::new(),
+            sent_chunks: BTreeSet::new(),
+            sent_params: HashMap::new(),
+            grad_asm: HashMap::new(),
         }
     }
 
@@ -179,6 +199,24 @@ struct FleetObs {
     stale_marks: Counter,
     scrapes: Counter,
     wake_slop: Histogram,
+    /// Master-side time to enqueue one job's parameter broadcast.
+    param_broadcast: Histogram,
+    /// Per-job `sgc_grad_bytes_total` handles, created on first use.
+    grad_bytes: HashMap<u32, Counter>,
+}
+
+impl FleetObs {
+    /// The `sgc_grad_bytes_total{job=...}` counter for `job`.
+    fn grad_bytes_counter(&mut self, job: u32) -> &Counter {
+        let obs = &self.obs;
+        self.grad_bytes.entry(job).or_insert_with(|| {
+            obs.metrics.counter(
+                "sgc_grad_bytes_total",
+                &format!("job=\"{job}\""),
+                "Gradient payload bytes received from workers",
+            )
+        })
+    }
 }
 
 /// One in-flight HTTP scrape connection, serviced by the same reactor
@@ -262,6 +300,12 @@ pub struct FleetCluster {
     /// Scripted master-side fault plan, when injected (see
     /// [`Self::set_chaos`]).
     chaos: Option<FleetChaos>,
+    /// The gradient data plane, when real-gradient jobs are served (see
+    /// [`Self::set_dataplane`]).
+    dp: Option<SharedDataPlane>,
+    /// `GradAssign` fan-out per submission per worker (for mid-round
+    /// rejoin replay, mirroring the synthetic `Assign` replay).
+    grad_assign_log: Vec<HashMap<usize, Frame>>,
 }
 
 /// Master-side chaos state: the resolved plan plus the per-worker
@@ -272,6 +316,25 @@ struct FleetChaos {
     /// `submissions() < drop_until[w]` (submission ordinals, 1-based
     /// like the wire `round` field).
     drop_until: Vec<u64>,
+}
+
+/// The distinct chunk ids a set of wire units touches (what a worker
+/// must hold to serve them).
+fn units_chunks(units: &[GradUnit]) -> Vec<u32> {
+    let mut set = BTreeSet::new();
+    for u in units {
+        match u {
+            GradUnit::Plain { chunk, .. } => {
+                set.insert(*chunk);
+            }
+            GradUnit::Coded { terms, .. } => {
+                for &(c, _) in terms {
+                    set.insert(c);
+                }
+            }
+        }
+    }
+    set.into_iter().collect()
 }
 
 impl FleetCluster {
@@ -336,6 +399,8 @@ impl FleetCluster {
             metrics_listener: None,
             scrapes: Vec::new(),
             chaos: None,
+            dp: None,
+            grad_assign_log: Vec::new(),
         };
         let deadline = Instant::now() + accept_timeout;
         while fleet.live_workers() < n {
@@ -460,6 +525,129 @@ impl FleetCluster {
         }
     }
 
+    /// Queue a frame on worker `w`'s connection. `false` if the worker
+    /// has no connection or the write failed fatally.
+    fn send_to(&mut self, w: usize, frame: &Frame) -> bool {
+        match &mut self.slots[w].conn {
+            Some(c) => c.send(frame),
+            None => false,
+        }
+    }
+
+    /// Ship everything worker `w`'s current connection is missing before
+    /// a `GradAssign` of `job` pinned at parameter `version`: the
+    /// `JobSpec` (once per connection), the partitions backing `needed`
+    /// chunks, and the parameter broadcast. Delivery is tracked per
+    /// connection, so a reconnect or late join re-ships from scratch
+    /// (the worker's `off == 0` assembly restart makes that idempotent)
+    /// while steady-state rounds cost one `Params` sweep per optimizer
+    /// step and nothing else. Returns `false` on a write failure (the
+    /// caller retires the worker).
+    fn ship_grad_prereqs(&mut self, w: usize, job: u32, version: u32, needed: &[u32]) -> bool {
+        let Some(dp) = self.dp.clone() else { return false };
+        let guard = dp.lock().expect("data plane lock poisoned");
+        let Some(jd) = guard.job(job) else { return false };
+        let ts = self.clock_start.elapsed().as_secs_f64();
+        if !self.slots[w].sent_specs.contains(&job) {
+            let d = jd.dims;
+            let frame = Frame::JobSpec {
+                job,
+                input: d.input as u32,
+                classes: d.classes as u32,
+                hidden1: d.hidden1 as u32,
+                hidden2: d.hidden2 as u32,
+            };
+            if !self.send_to(w, &frame) {
+                return false;
+            }
+            self.slots[w].sent_specs.insert(job);
+        }
+        for &chunk in needed {
+            if self.slots[w].sent_chunks.contains(&(job, chunk)) {
+                continue;
+            }
+            let Some(cd) = jd.chunks.get(chunk as usize) else { continue };
+            let flat = cd.flat();
+            let total = flat.len() as u32;
+            for (off, slice) in tensor_slices(&flat) {
+                let frame = Frame::Partition {
+                    job,
+                    chunk,
+                    rows: cd.rows as u32,
+                    off,
+                    total,
+                    data: slice.to_vec(),
+                };
+                if !self.send_to(w, &frame) {
+                    return false;
+                }
+            }
+            self.slots[w].sent_chunks.insert((job, chunk));
+            if let Some(fo) = &self.obs {
+                fo.obs.journal.record(
+                    ts,
+                    EventKind::PartitionSent,
+                    job as i64,
+                    -1,
+                    w as i64,
+                    flat.len() as f64,
+                );
+            }
+        }
+        if self.slots[w].sent_params.get(&job) != Some(&version) {
+            let Some(params) = jd.params_at(version) else {
+                // replaying a round staged too many optimizer steps ago:
+                // the connection is fine, the worker just sits it out
+                log_warn!(
+                    "fleet master: job {job} params v{version} no longer retained; \
+                     worker {w} will stay silent this round"
+                );
+                return true;
+            };
+            let t0 = Instant::now();
+            let total = params.len() as u32;
+            for (off, slice) in tensor_slices(params) {
+                let frame = Frame::Params { job, version, off, total, data: slice.to_vec() };
+                if !self.send_to(w, &frame) {
+                    return false;
+                }
+            }
+            self.slots[w].sent_params.insert(job, version);
+            if let Some(fo) = &self.obs {
+                fo.param_broadcast.record(t0.elapsed().as_secs_f64());
+                fo.obs.journal.record(
+                    ts,
+                    EventKind::ParamBroadcast,
+                    job as i64,
+                    -1,
+                    w as i64,
+                    f64::from(version),
+                );
+            }
+        }
+        true
+    }
+
+    /// Retire workers the decode pass flagged as byzantine (a gradient
+    /// payload inconsistent with the code's redundancy, pinned by the
+    /// audit) — the gradient-plane analogue of the synthetic checksum
+    /// check. Runs every reactor turn; draining an empty flag list is a
+    /// lock-and-swap.
+    fn drain_grad_flags(&mut self) {
+        let Some(dp) = self.dp.clone() else { return };
+        let flagged = dp.lock().expect("data plane lock poisoned").take_flagged();
+        for w in flagged {
+            if w < self.slots.len() && !self.slots[w].byzantine {
+                log_warn!(
+                    "fleet master: worker {w} failed the gradient redundancy audit; \
+                     marking it byzantine"
+                );
+                self.slots[w].byzantine = true;
+                self.retire(w, "byzantine gradient payload");
+            }
+        }
+    }
+
     /// Attach an observability hub (see [`crate::obs`]): frame byte
     /// counters, membership counters and the reactor wake-slop
     /// histogram, plus journal entries for joins, retirements, stale
@@ -488,6 +676,11 @@ impl FleetCluster {
             "Reactor wake overshoot past the computed poll(2) deadline",
             &SLOP_BUCKETS,
         );
+        let param_broadcast = m.histogram(
+            "sgc_param_broadcast_seconds",
+            "",
+            "Master-side time to enqueue one job's parameter broadcast",
+        );
         self.obs = Some(FleetObs {
             obs,
             bytes_in,
@@ -497,7 +690,21 @@ impl FleetCluster {
             stale_marks,
             scrapes,
             wake_slop,
+            param_broadcast,
+            grad_bytes: HashMap::new(),
         });
+    }
+
+    /// Attach the gradient data plane (see [`crate::grad`]): submissions
+    /// of jobs with a staged round entry fan out `JobSpec` / `Partition`
+    /// / `Params` / [`Frame::GradAssign`] instead of the synthetic
+    /// `Assign`, and inbound [`Frame::GradResult`] slices are
+    /// reassembled into the plane's staged entries. Share the same
+    /// handle with the [`JobScheduler`](crate::sched::JobScheduler)
+    /// (which stages the rounds) and the
+    /// [`GradPump`](crate::grad::GradPump) (which decodes them).
+    pub fn set_dataplane(&mut self, dp: SharedDataPlane) {
+        self.dp = Some(dp);
     }
 
     /// Serve Prometheus text-format metrics on `addr` from the reactor
@@ -817,22 +1024,56 @@ impl FleetCluster {
             } else if self.pending[i].ready {
                 self.pending[i].ready = false;
                 let alive = self.pending[i].conn.fill();
-                match self.pending[i].conn.next_frame() {
-                    Some(Frame::Hello { worker_id }) => {
+                match self.pending[i].conn.try_next_frame() {
+                    Ok(Some(Frame::Hello { worker_id })) => {
                         admit = Some(worker_id as usize);
                         remove = true;
                     }
-                    Some(other) => {
+                    Ok(Some(other)) => {
                         log_warn!(
                             "fleet master: rejecting {}: expected Hello, got {other:?}",
                             self.pending[i].peer
                         );
+                        let conn = &mut self.pending[i].conn;
+                        conn.send(&Frame::Error {
+                            code: ERR_BAD_HANDSHAKE,
+                            msg: "expected Hello as the first frame".to_string(),
+                        });
+                        conn.flush();
                         remove = true;
                     }
-                    None => {
+                    Ok(None) => {
                         if !alive || self.pending[i].conn.is_dead() {
                             remove = true;
                         }
+                    }
+                    // Version-compat gate: an old-wire peer gets a
+                    // v2 farewell frame naming both versions before the
+                    // close — a clear error on its side, never a panic
+                    // or silent hangup on ours.
+                    Err(WireError::BadVersion(v)) => {
+                        log_warn!(
+                            "fleet master: rejecting {}: wire version {v} \
+                             (this master speaks v{WIRE_VERSION})",
+                            self.pending[i].peer
+                        );
+                        let conn = &mut self.pending[i].conn;
+                        conn.send(&Frame::Error {
+                            code: ERR_BAD_VERSION,
+                            msg: format!(
+                                "unsupported wire version {v}: this master speaks \
+                                 v{WIRE_VERSION}; upgrade the worker"
+                            ),
+                        });
+                        conn.flush();
+                        remove = true;
+                    }
+                    Err(e) => {
+                        log_warn!(
+                            "fleet master: rejecting {}: malformed handshake ({e})",
+                            self.pending[i].peer
+                        );
+                        remove = true;
                     }
                 }
             }
@@ -896,6 +1137,14 @@ impl FleetCluster {
         slot.ever_joined = true;
         slot.stale = false;
         slot.last_seen = now;
+        // A fresh connection has seen nothing: forget what the old one
+        // was shipped so the gradient prereqs go out again. (The worker
+        // may have kept its caches across a reconnect — re-shipping is
+        // idempotent there, and a genuinely new process needs it all.)
+        slot.sent_specs.clear();
+        slot.sent_chunks.clear();
+        slot.sent_params.clear();
+        slot.grad_asm.clear();
         if self.started {
             self.staged.push(ClusterEvent::WorkerJoined { worker: id });
             if let Some(fo) = &self.obs {
@@ -930,16 +1179,30 @@ impl FleetCluster {
                     && self.finish_log[seq][id].is_none()
                     && !self.timeout_emitted[seq]
                 {
-                    let load = self.loads_log[seq][id];
-                    let chunks = vec![(seq + 1) as u32, id as u32, (load * 1e6) as u32];
-                    let frame = Frame::Assign {
-                        round: (seq + 1) as u32,
-                        work_units: load,
-                        chunks,
-                    };
-                    let sent = match &mut self.slots[id].conn {
-                        Some(c) => c.send(&frame),
-                        None => false,
+                    let sent = if let Some(frame) =
+                        self.grad_assign_log[seq].get(&id).cloned()
+                    {
+                        // gradient round: the prereqs (spec, partitions,
+                        // the pinned param version) must land on the new
+                        // connection before the assignment itself
+                        let Frame::GradAssign { job, param_version, ref units, .. } =
+                            frame
+                        else {
+                            unreachable!("grad_assign_log holds GradAssign frames only")
+                        };
+                        let needed = units_chunks(units);
+                        self.ship_grad_prereqs(id, job, param_version, &needed)
+                            && self.send_to(id, &frame)
+                    } else {
+                        let load = self.loads_log[seq][id];
+                        let chunks =
+                            vec![(seq + 1) as u32, id as u32, (load * 1e6) as u32];
+                        let frame = Frame::Assign {
+                            round: (seq + 1) as u32,
+                            work_units: load,
+                            chunks,
+                        };
+                        self.send_to(id, &frame)
                     };
                     if !sent {
                         self.retire(id, "assign replay write failed");
@@ -1019,43 +1282,118 @@ impl FleetCluster {
             // a live frame resurrects a stale-heartbeat false positive
             slot.stale = false;
         }
-        if let Frame::Result { round: r, checksum, .. } = frame {
-            if self.slots[worker].byzantine {
-                return; // nothing from a byzantine worker is trusted
+        match frame {
+            Frame::Result { round: r, checksum, .. } => {
+                if self.slots[worker].byzantine {
+                    return; // nothing from a byzantine worker is trusted
+                }
+                let idx = r as usize;
+                if idx == 0 || idx > self.round_starts.len() {
+                    return;
+                }
+                let seq = idx - 1;
+                if worker >= self.finish_log[seq].len() {
+                    return; // joined after this submission was fanned out
+                }
+                if checksum != self.sum_log[seq][worker] {
+                    // byzantine: the worker did not do the work it was
+                    // assigned — never trust it again
+                    log_warn!(
+                        "fleet master: worker {worker} returned a bad checksum \
+                         for round {r}; marking it byzantine"
+                    );
+                    self.slots[worker].byzantine = true;
+                    self.retire(worker, "byzantine result");
+                    return;
+                }
+                let rel = at
+                    .checked_duration_since(self.round_starts[seq])
+                    .map_or(0.0, |d| d.as_secs_f64())
+                    .max(1e-9);
+                if self.finish_log[seq][worker].is_none() {
+                    self.finish_log[seq][worker] = Some(rel);
+                    let (job, round) = self.seq_jobs[seq];
+                    self.staged.push(ClusterEvent::WorkerDone {
+                        job,
+                        round,
+                        worker,
+                        finish_s: rel,
+                    });
+                }
             }
-            let idx = r as usize;
-            if idx == 0 || idx > self.round_starts.len() {
-                return;
+            Frame::GradResult { job, round: r, param_version, off, total, data, .. } => {
+                if self.slots[worker].byzantine {
+                    return; // nothing from a byzantine worker is trusted
+                }
+                let idx = r as usize;
+                if idx == 0 || idx > self.round_starts.len() {
+                    return;
+                }
+                let seq = idx - 1;
+                if worker >= self.finish_log[seq].len() {
+                    return; // joined after this submission was fanned out
+                }
+                let (sjob, sround) = self.seq_jobs[seq];
+                if sjob as u32 != job {
+                    return; // job id does not match the answered submission
+                }
+                let key = (job, r);
+                if off == 0 {
+                    // a resend restarts the assembly (worker-side slices
+                    // always begin at 0)
+                    self.slots[worker].grad_asm.insert(key, TensorAssembly::new(total));
+                }
+                let Some(asm) = self.slots[worker].grad_asm.get_mut(&key) else {
+                    return; // slice of an abandoned assembly
+                };
+                match asm.accept(off, &data) {
+                    Ok(false) => return, // more slices coming
+                    Ok(true) => {}
+                    Err(_) => {
+                        self.slots[worker].grad_asm.remove(&key);
+                        return;
+                    }
+                }
+                let asm =
+                    self.slots[worker].grad_asm.remove(&key).expect("assembly completed");
+                let payload = asm.take();
+                let bytes = payload.len() as u64 * 4;
+                // Store into the staged round entry; a `false` means the
+                // round already folded (a μ-cut straggler reporting late)
+                // or the version is stale — the payload is dropped, like
+                // a late synthetic Result is ignored.
+                let stored = {
+                    let Some(dp) = self.dp.clone() else { return };
+                    let mut d = dp.lock().expect("data plane lock poisoned");
+                    let ok = d.store_payload(job, sround, worker, param_version, payload);
+                    if ok {
+                        d.add_grad_bytes(job, bytes);
+                    }
+                    ok
+                };
+                if stored {
+                    if let Some(fo) = &mut self.obs {
+                        fo.grad_bytes_counter(job).add(bytes);
+                    }
+                }
+                // The worker completed its round either way: time the
+                // arrival for the μ-rule (a dropped stale payload is a
+                // data-plane concern, not a liveness one).
+                let rel = at
+                    .checked_duration_since(self.round_starts[seq])
+                    .map_or(0.0, |d| d.as_secs_f64())
+                    .max(1e-9);
+                if self.finish_log[seq][worker].is_none() {
+                    self.finish_log[seq][worker] = Some(rel);
+                    self.staged.push(ClusterEvent::WorkerDone {
+                        job: sjob,
+                        round: sround,
+                        worker,
+                        finish_s: rel,
+                    });
+                }
             }
-            let seq = idx - 1;
-            if worker >= self.finish_log[seq].len() {
-                return; // joined after this submission was fanned out
-            }
-            if checksum != self.sum_log[seq][worker] {
-                // byzantine: the worker did not do the work it was
-                // assigned — never trust it again
-                log_warn!(
-                    "fleet master: worker {worker} returned a bad checksum \
-                     for round {r}; marking it byzantine"
-                );
-                self.slots[worker].byzantine = true;
-                self.retire(worker, "byzantine result");
-                return;
-            }
-            let rel = at
-                .checked_duration_since(self.round_starts[seq])
-                .map_or(0.0, |d| d.as_secs_f64())
-                .max(1e-9);
-            if self.finish_log[seq][worker].is_none() {
-                self.finish_log[seq][worker] = Some(rel);
-                let (job, round) = self.seq_jobs[seq];
-                self.staged.push(ClusterEvent::WorkerDone {
-                    job,
-                    round,
-                    worker,
-                    finish_s: rel,
-                });
-            }
+            _ => {}
         }
     }
 
@@ -1111,6 +1449,7 @@ impl FleetCluster {
     /// Run the time-based checks: heartbeat staleness, the reap policy
     /// and per-submission hard caps.
     fn run_timers(&mut self) {
+        self.drain_grad_flags();
         let now = Instant::now();
         for i in 0..self.slots.len() {
             if !self.slots[i].live {
@@ -1367,31 +1706,61 @@ impl EventCluster for FleetCluster {
         self.dead_notified.push(vec![false; cap]);
         self.timeout_emitted.push(false);
         self.sum_log.push(vec![0; cap]);
+        self.grad_assign_log.push(HashMap::new());
+        // A staged data-plane entry switches this submission's fan-out
+        // to the gradient protocol for every worker it gives real work;
+        // workers the entry leaves unit-less (noop rounds) still get the
+        // synthetic Assign so the μ-rule sees their completion times.
+        let grad_ctx: Option<(u32, Vec<Vec<GradUnit>>)> = self.dp.as_ref().and_then(|dp| {
+            let d = dp.lock().expect("data plane lock poisoned");
+            d.round(job as u32, round).map(|e| (e.param_version, e.wire.clone()))
+        });
         for worker in 0..cap {
             if loads[worker] < 0.0 {
                 // UNPLACED: outside this submission — owes nothing
                 continue;
             }
             let mut lost = !self.slots[worker].usable();
+            let grad_units = grad_ctx.as_ref().and_then(|(v, wire)| {
+                wire.get(worker).filter(|u| !u.is_empty()).map(|u| (*v, u.clone()))
+            });
             if !lost {
-                // The metadata protocol ships no real chunk ids; a
-                // synthetic (seq, worker, quantized load) triplet keeps
-                // the byzantine check meaningful — every Result must
-                // echo the checksum of *its own* assignment, so a worker
-                // replaying another round's (or worker's) answer, or
-                // skipping the work, is still caught. Real chunk shipping
-                // returns with the real-compute fleet (ROADMAP).
-                let chunks =
-                    vec![seq as u32, worker as u32, (loads[worker] * 1e6) as u32];
-                self.sum_log.last_mut().unwrap()[worker] = chunk_checksum(&chunks);
-                let frame = Frame::Assign {
-                    round: seq as u32,
-                    work_units: loads[worker],
-                    chunks,
-                };
-                let sent = match &mut self.slots[worker].conn {
-                    Some(c) => c.send(&frame),
-                    None => false,
+                let sent = if let Some((version, units)) = grad_units {
+                    // real-gradient fan-out: prereqs (spec, missing
+                    // partitions, the pinned param broadcast) ride the
+                    // same in-order stream ahead of the assignment
+                    let needed = units_chunks(&units);
+                    let frame = Frame::GradAssign {
+                        job: job as u32,
+                        round: seq as u32,
+                        param_version: version,
+                        work_units: loads[worker],
+                        units,
+                    };
+                    let ok = self.ship_grad_prereqs(worker, job as u32, version, &needed)
+                        && self.send_to(worker, &frame);
+                    if ok {
+                        self.grad_assign_log.last_mut().unwrap().insert(worker, frame);
+                    }
+                    ok
+                } else {
+                    // The metadata protocol ships no real chunk ids; a
+                    // synthetic (seq, worker, quantized load) triplet
+                    // keeps the byzantine check meaningful — every
+                    // Result must echo the checksum of *its own*
+                    // assignment, so a worker replaying another round's
+                    // (or worker's) answer, or skipping the work, is
+                    // still caught. Jobs on the gradient data plane ship
+                    // real partitions above instead.
+                    let chunks =
+                        vec![seq as u32, worker as u32, (loads[worker] * 1e6) as u32];
+                    self.sum_log.last_mut().unwrap()[worker] = chunk_checksum(&chunks);
+                    let frame = Frame::Assign {
+                        round: seq as u32,
+                        work_units: loads[worker],
+                        chunks,
+                    };
+                    self.send_to(worker, &frame)
                 };
                 if sent {
                     self.assigned_log.last_mut().unwrap()[worker] = true;

@@ -197,7 +197,7 @@ impl Connection {
     /// Next complete inbound frame, if one is buffered. A framing error
     /// kills the connection (the byte stream can no longer be trusted).
     pub fn next_frame(&mut self) -> Option<Frame> {
-        match self.rbuf.next_frame() {
+        match self.try_next_frame() {
             Ok(f) => f,
             Err(e) => {
                 crate::log_warn!("fleet master: unframeable peer ({e}); dropping connection");
@@ -205,6 +205,16 @@ impl Connection {
                 None
             }
         }
+    }
+
+    /// Like [`next_frame`](Self::next_frame), but surfaces the framing
+    /// error instead of latching the connection dead — the handshake
+    /// compat gate uses this to answer a wrong-version peer with a
+    /// structured [`Frame::Error`] before closing. After an `Err` the
+    /// caller must stop reading (the byte stream can no longer be
+    /// trusted); writes still work so a farewell frame can go out.
+    pub fn try_next_frame(&mut self) -> Result<Option<Frame>, super::wire::WireError> {
+        self.rbuf.next_frame()
     }
 
     /// Queue `frame` and opportunistically flush. Returns `false` once

@@ -11,20 +11,41 @@
 //!       len = 2 + payload length (covers ver + tag + payload)
 //! ```
 //!
-//! Integers are little-endian; `f64` travels as its IEEE-754 bit pattern.
-//! A reader rejects frames whose version byte is not [`WIRE_VERSION`],
-//! whose length exceeds [`MAX_FRAME_LEN`], or whose payload is truncated
-//! or over-long for the tag — a malformed peer can never make the master
-//! allocate unboundedly or mis-parse.
+//! Integers are little-endian; `f64`/`f32` travel as their IEEE-754 bit
+//! patterns. A reader rejects frames whose version byte is not
+//! [`WIRE_VERSION`], whose length exceeds [`MAX_FRAME_LEN`], or whose
+//! payload is truncated or over-long for the tag — a malformed peer can
+//! never make the master allocate unboundedly or mis-parse.
+//!
+//! Version 2 adds the gradient data plane: tensor-bearing frames
+//! ([`Frame::JobSpec`], [`Frame::Partition`], [`Frame::Params`],
+//! [`Frame::GradAssign`], [`Frame::GradResult`]) whose float payloads
+//! are chunked so no single frame exceeds [`MAX_FRAME_LEN`], plus the
+//! [`Frame::Error`] reply a master sends before closing an incompatible
+//! (v1) or misbehaving connection.
 
 use std::io::{self, Read, Write};
 
-/// Protocol version; bump on any incompatible frame change.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version; bump on any incompatible frame change. Version 2
+/// introduced the gradient data-plane frames (tags 6–11).
+pub const WIRE_VERSION: u8 = 2;
 
 /// Upper bound on one frame's `len` field (1 MiB): an `Assign` for a
-/// full-replication task at n = 4096 chunks is still < 20 KiB.
+/// full-replication task at n = 4096 chunks is still < 20 KiB, and
+/// tensor payloads are chunked at [`DATA_FLOATS_PER_FRAME`] floats.
 pub const MAX_FRAME_LEN: u32 = 1 << 20;
+
+/// Tensor floats carried per data-plane frame (256 KiB of payload —
+/// comfortably under [`MAX_FRAME_LEN`] with headers).
+pub const DATA_FLOATS_PER_FRAME: usize = 1 << 16;
+
+/// Hard cap on a reassembled tensor's declared `total` float count
+/// (64 MiB): a lying length prefix can never force the receiver to
+/// allocate beyond this.
+pub const MAX_TENSOR_FLOATS: u32 = 1 << 24;
+
+/// Longest [`Frame::Error`] message accepted on decode.
+pub const MAX_ERROR_MSG: usize = 1024;
 
 /// Everything that can go wrong decoding a frame.
 #[derive(Debug)]
@@ -89,13 +110,142 @@ pub enum Frame {
     Heartbeat { worker_id: u32, round: u32 },
     /// Master → worker: exit the serve loop.
     Shutdown,
+    /// Master → worker: the connection is being refused or torn down
+    /// deliberately (`code` = [`ERR_BAD_VERSION`] etc.) with a short
+    /// human-readable reason. Sent before close so an incompatible peer
+    /// sees a clear rejection instead of a silent hangup.
+    Error {
+        /// Machine-readable reason (`ERR_*` constants).
+        code: u8,
+        /// Human-readable detail (≤ [`MAX_ERROR_MSG`] bytes on decode).
+        msg: String,
+    },
+    /// Master → worker: dimensions of a real-gradient job's model. Sent
+    /// once per `(job, connection)` before any [`Frame::Partition`].
+    JobSpec {
+        /// Scheduler job id.
+        job: u32,
+        /// Input feature width.
+        input: u32,
+        /// Output class count.
+        classes: u32,
+        /// First hidden-layer width.
+        hidden1: u32,
+        /// Second hidden-layer width.
+        hidden2: u32,
+    },
+    /// Master → worker: one slice of a data partition. The full tensor
+    /// for a chunk is `x ‖ y ‖ w` flattened (`rows·input + rows·classes
+    /// + rows` floats); `off`/`total` are float offsets into it and
+    /// slices carry ≤ [`DATA_FLOATS_PER_FRAME`] floats each.
+    Partition {
+        /// Scheduler job id.
+        job: u32,
+        /// Chunk id within the job's sharding.
+        chunk: u32,
+        /// Sample rows in the chunk (padding rows carry weight 0).
+        rows: u32,
+        /// Float offset of `data` within the full tensor.
+        off: u32,
+        /// Total float count of the full tensor.
+        total: u32,
+        /// This slice's floats.
+        data: Vec<f32>,
+    },
+    /// Master → worker: one slice of a job's flattened parameter vector
+    /// (same `off`/`total` chunking as [`Frame::Partition`]).
+    Params {
+        /// Scheduler job id.
+        job: u32,
+        /// Monotonic parameter version (bumped per optimizer step).
+        version: u32,
+        /// Float offset of `data` within the flat parameter vector.
+        off: u32,
+        /// Total float count of the flat parameter vector.
+        total: u32,
+        /// This slice's floats.
+        data: Vec<f32>,
+    },
+    /// Master → worker: execute one round's real-gradient task — run
+    /// forward/backward over each unit's chunks and return the encoded
+    /// partial gradient as [`Frame::GradResult`] slices.
+    GradAssign {
+        /// Scheduler job id.
+        job: u32,
+        /// Cluster round (the master's submission sequence number).
+        round: u32,
+        /// Parameter version the gradients must be computed against.
+        param_version: u32,
+        /// Normalized load (drives the synthetic latency padding).
+        work_units: f64,
+        /// The work units, with encoding coefficients resolved by the
+        /// master (workers never need the code plan).
+        units: Vec<GradUnit>,
+    },
+    /// Worker → master: one slice of a round's encoded gradient payload
+    /// (concatenated per-unit gradient vectors, in unit order).
+    GradResult {
+        /// Sender's worker id.
+        worker_id: u32,
+        /// Scheduler job id.
+        job: u32,
+        /// Cluster round being answered.
+        round: u32,
+        /// Parameter version the gradient was computed against (stale
+        /// versions are dropped by the master).
+        param_version: u32,
+        /// Worker-measured compute seconds (diagnostic only).
+        compute_s: f64,
+        /// Float offset of `data` within the full payload.
+        off: u32,
+        /// Total float count of the full payload.
+        total: u32,
+        /// This slice's floats.
+        data: Vec<f32>,
+    },
 }
+
+/// One work unit inside a [`Frame::GradAssign`]: which chunk gradients
+/// to compute and how to combine them. The master resolves encoding
+/// coefficients from its code plan before serializing, so workers apply
+/// plain weighted sums without knowing `(n, s)` or the `B` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GradUnit {
+    /// Return chunk `chunk`'s gradient for paper-job `job` unscaled.
+    Plain {
+        /// Paper-job (iteration) index the gradient serves.
+        job: u32,
+        /// Chunk id to differentiate over.
+        chunk: u32,
+    },
+    /// Return `Σ coeff·g_chunk` over `terms` for paper-job `job`.
+    Coded {
+        /// Paper-job (iteration) index the combination serves.
+        job: u32,
+        /// `(chunk, coefficient)` terms of the linear combination.
+        terms: Vec<(u32, f64)>,
+    },
+}
+
+/// [`Frame::Error`] code: the peer spoke an unsupported wire version.
+pub const ERR_BAD_VERSION: u8 = 1;
+/// [`Frame::Error`] code: the handshake frame was not a valid `Hello`.
+pub const ERR_BAD_HANDSHAKE: u8 = 2;
 
 const TAG_HELLO: u8 = 1;
 const TAG_ASSIGN: u8 = 2;
 const TAG_RESULT: u8 = 3;
 const TAG_HEARTBEAT: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_ERROR: u8 = 6;
+const TAG_JOB_SPEC: u8 = 7;
+const TAG_PARTITION: u8 = 8;
+const TAG_PARAMS: u8 = 9;
+const TAG_GRAD_ASSIGN: u8 = 10;
+const TAG_GRAD_RESULT: u8 = 11;
+
+const UNIT_PLAIN: u8 = 1;
+const UNIT_CODED: u8 = 2;
 
 impl Frame {
     fn tag(&self) -> u8 {
@@ -105,6 +255,12 @@ impl Frame {
             Frame::Result { .. } => TAG_RESULT,
             Frame::Heartbeat { .. } => TAG_HEARTBEAT,
             Frame::Shutdown => TAG_SHUTDOWN,
+            Frame::Error { .. } => TAG_ERROR,
+            Frame::JobSpec { .. } => TAG_JOB_SPEC,
+            Frame::Partition { .. } => TAG_PARTITION,
+            Frame::Params { .. } => TAG_PARAMS,
+            Frame::GradAssign { .. } => TAG_GRAD_ASSIGN,
+            Frame::GradResult { .. } => TAG_GRAD_RESULT,
         }
     }
 
@@ -132,6 +288,79 @@ impl Frame {
                 put_u32(&mut payload, *round);
             }
             Frame::Shutdown => {}
+            Frame::Error { code, msg } => {
+                payload.push(*code);
+                let bytes = msg.as_bytes();
+                let take = bytes.len().min(MAX_ERROR_MSG);
+                put_u32(&mut payload, take as u32);
+                payload.extend_from_slice(&bytes[..take]);
+            }
+            Frame::JobSpec { job, input, classes, hidden1, hidden2 } => {
+                put_u32(&mut payload, *job);
+                put_u32(&mut payload, *input);
+                put_u32(&mut payload, *classes);
+                put_u32(&mut payload, *hidden1);
+                put_u32(&mut payload, *hidden2);
+            }
+            Frame::Partition { job, chunk, rows, off, total, data } => {
+                put_u32(&mut payload, *job);
+                put_u32(&mut payload, *chunk);
+                put_u32(&mut payload, *rows);
+                put_u32(&mut payload, *off);
+                put_u32(&mut payload, *total);
+                put_f32s(&mut payload, data);
+            }
+            Frame::Params { job, version, off, total, data } => {
+                put_u32(&mut payload, *job);
+                put_u32(&mut payload, *version);
+                put_u32(&mut payload, *off);
+                put_u32(&mut payload, *total);
+                put_f32s(&mut payload, data);
+            }
+            Frame::GradAssign { job, round, param_version, work_units, units } => {
+                put_u32(&mut payload, *job);
+                put_u32(&mut payload, *round);
+                put_u32(&mut payload, *param_version);
+                put_f64(&mut payload, *work_units);
+                put_u32(&mut payload, units.len() as u32);
+                for u in units {
+                    match u {
+                        GradUnit::Plain { job, chunk } => {
+                            payload.push(UNIT_PLAIN);
+                            put_u32(&mut payload, *job);
+                            put_u32(&mut payload, *chunk);
+                        }
+                        GradUnit::Coded { job, terms } => {
+                            payload.push(UNIT_CODED);
+                            put_u32(&mut payload, *job);
+                            put_u32(&mut payload, terms.len() as u32);
+                            for (c, coeff) in terms {
+                                put_u32(&mut payload, *c);
+                                put_f64(&mut payload, *coeff);
+                            }
+                        }
+                    }
+                }
+            }
+            Frame::GradResult {
+                worker_id,
+                job,
+                round,
+                param_version,
+                compute_s,
+                off,
+                total,
+                data,
+            } => {
+                put_u32(&mut payload, *worker_id);
+                put_u32(&mut payload, *job);
+                put_u32(&mut payload, *round);
+                put_u32(&mut payload, *param_version);
+                put_f64(&mut payload, *compute_s);
+                put_u32(&mut payload, *off);
+                put_u32(&mut payload, *total);
+                put_f32s(&mut payload, data);
+            }
         }
         let len = (payload.len() + 2) as u32;
         let mut out = Vec::with_capacity(4 + len as usize);
@@ -189,12 +418,153 @@ impl Frame {
             },
             TAG_HEARTBEAT => Frame::Heartbeat { worker_id: cur.u32()?, round: cur.u32()? },
             TAG_SHUTDOWN => Frame::Shutdown,
+            TAG_ERROR => {
+                let code = cur.u8()?;
+                let len = cur.u32()? as usize;
+                if len > MAX_ERROR_MSG || len > cur.remaining() {
+                    return Err(WireError::Truncated);
+                }
+                let msg = String::from_utf8_lossy(cur.take(len)?).into_owned();
+                Frame::Error { code, msg }
+            }
+            TAG_JOB_SPEC => Frame::JobSpec {
+                job: cur.u32()?,
+                input: cur.u32()?,
+                classes: cur.u32()?,
+                hidden1: cur.u32()?,
+                hidden2: cur.u32()?,
+            },
+            TAG_PARTITION => {
+                let job = cur.u32()?;
+                let chunk = cur.u32()?;
+                let rows = cur.u32()?;
+                let (off, total) = cur.slice_header()?;
+                let data = cur.f32s()?;
+                check_slice(off, &data, total)?;
+                Frame::Partition { job, chunk, rows, off, total, data }
+            }
+            TAG_PARAMS => {
+                let job = cur.u32()?;
+                let version = cur.u32()?;
+                let (off, total) = cur.slice_header()?;
+                let data = cur.f32s()?;
+                check_slice(off, &data, total)?;
+                Frame::Params { job, version, off, total, data }
+            }
+            TAG_GRAD_ASSIGN => {
+                let job = cur.u32()?;
+                let round = cur.u32()?;
+                let param_version = cur.u32()?;
+                let work_units = cur.f64()?;
+                let count = cur.u32()? as usize;
+                // a unit is at least 9 bytes (kind + job + chunk/count);
+                // reject counts the payload cannot hold
+                if count > cur.remaining() / 9 {
+                    return Err(WireError::Truncated);
+                }
+                let mut units = Vec::with_capacity(count);
+                for _ in 0..count {
+                    units.push(match cur.u8()? {
+                        UNIT_PLAIN => GradUnit::Plain { job: cur.u32()?, chunk: cur.u32()? },
+                        UNIT_CODED => {
+                            let job = cur.u32()?;
+                            let terms = cur.u32()? as usize;
+                            // a term is 12 bytes (chunk + coeff)
+                            if terms > cur.remaining() / 12 {
+                                return Err(WireError::Truncated);
+                            }
+                            let terms = (0..terms)
+                                .map(|_| Ok((cur.u32()?, cur.f64()?)))
+                                .collect::<Result<_, WireError>>()?;
+                            GradUnit::Coded { job, terms }
+                        }
+                        t => return Err(WireError::BadTag(t)),
+                    });
+                }
+                Frame::GradAssign { job, round, param_version, work_units, units }
+            }
+            TAG_GRAD_RESULT => {
+                let worker_id = cur.u32()?;
+                let job = cur.u32()?;
+                let round = cur.u32()?;
+                let param_version = cur.u32()?;
+                let compute_s = cur.f64()?;
+                let (off, total) = cur.slice_header()?;
+                let data = cur.f32s()?;
+                check_slice(off, &data, total)?;
+                Frame::GradResult {
+                    worker_id,
+                    job,
+                    round,
+                    param_version,
+                    compute_s,
+                    off,
+                    total,
+                    data,
+                }
+            }
             t => return Err(WireError::BadTag(t)),
         };
         if cur.remaining() != 0 {
             return Err(WireError::TrailingBytes);
         }
         Ok(frame)
+    }
+}
+
+/// A tensor slice must land inside its declared `total`.
+fn check_slice(off: u32, data: &[f32], total: u32) -> Result<(), WireError> {
+    if off as usize + data.len() > total as usize {
+        return Err(WireError::TrailingBytes);
+    }
+    Ok(())
+}
+
+/// Split a tensor into `(off, slice)` pieces of at most
+/// [`DATA_FLOATS_PER_FRAME`] floats for framing (an empty tensor yields
+/// one empty slice so the receiver still sees a frame).
+pub fn tensor_slices(data: &[f32]) -> Vec<(u32, &[f32])> {
+    if data.is_empty() {
+        return vec![(0, data)];
+    }
+    data.chunks(DATA_FLOATS_PER_FRAME)
+        .enumerate()
+        .map(|(i, c)| ((i * DATA_FLOATS_PER_FRAME) as u32, c))
+        .collect()
+}
+
+/// Reassembles a tensor from in-order `(off, slice)` pieces (the
+/// receive side of [`tensor_slices`]). The declared `total` was already
+/// capped at [`MAX_TENSOR_FLOATS`] by frame decoding, so construction
+/// never over-allocates. Out-of-order or overlapping slices are
+/// rejected (`accept` returns `Err`) — TCP delivers our frames in
+/// order, so any other arrival pattern means a confused or hostile
+/// peer.
+#[derive(Debug)]
+pub struct TensorAssembly {
+    total: usize,
+    data: Vec<f32>,
+}
+
+impl TensorAssembly {
+    /// Empty assembly expecting `total` floats.
+    pub fn new(total: u32) -> Self {
+        let total = total.min(MAX_TENSOR_FLOATS) as usize;
+        TensorAssembly { total, data: Vec::with_capacity(total) }
+    }
+
+    /// Add the next slice; `Ok(true)` once the tensor is complete.
+    pub fn accept(&mut self, off: u32, slice: &[f32]) -> Result<bool, WireError> {
+        if off as usize != self.data.len() || self.data.len() + slice.len() > self.total {
+            return Err(WireError::TrailingBytes);
+        }
+        self.data.extend_from_slice(slice);
+        Ok(self.data.len() == self.total)
+    }
+
+    /// The reassembled floats (call once `accept` returned `Ok(true)`).
+    pub fn take(self) -> Vec<f32> {
+        self.data
     }
 }
 
@@ -321,6 +691,18 @@ fn put_f64(out: &mut Vec<u8>, x: f64) {
     out.extend_from_slice(&x.to_bits().to_le_bytes());
 }
 
+/// Length-prefixed f32 slice (count then bit patterns).
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    debug_assert!(
+        xs.len() <= DATA_FLOATS_PER_FRAME,
+        "tensor slices must be chunked at DATA_FLOATS_PER_FRAME"
+    );
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
 struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -355,6 +737,35 @@ impl Cursor<'_> {
     fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_bits(self.u64()?))
     }
+
+    /// The `off`/`total` header of a tensor slice, with the
+    /// lying-length-prefix guards: `total` capped at
+    /// [`MAX_TENSOR_FLOATS`] and `off` inside it.
+    fn slice_header(&mut self) -> Result<(u32, u32), WireError> {
+        let off = self.u32()?;
+        let total = self.u32()?;
+        if total > MAX_TENSOR_FLOATS {
+            return Err(WireError::BadLength(total));
+        }
+        if off > total {
+            return Err(WireError::Truncated);
+        }
+        Ok((off, total))
+    }
+
+    /// Length-prefixed f32 slice; the count must fit the remaining
+    /// payload (4 bytes per float), so a hostile count never allocates.
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let count = self.u32()? as usize;
+        if count > self.remaining() / 4 {
+            return Err(WireError::Truncated);
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(f32::from_bits(self.u32()?));
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -369,6 +780,37 @@ mod tests {
             Frame::Result { worker_id: 2, round: 3, compute_s: 0.0421, checksum: 0xdead_beef },
             Frame::Heartbeat { worker_id: 9, round: 12 },
             Frame::Shutdown,
+            Frame::Error { code: ERR_BAD_VERSION, msg: "wire version 1".into() },
+            Frame::JobSpec { job: 0, input: 64, classes: 10, hidden1: 64, hidden2: 32 },
+            Frame::Partition {
+                job: 1,
+                chunk: 3,
+                rows: 2,
+                off: 4,
+                total: 150,
+                data: vec![1.0, -0.5, 3.25, 1e-20],
+            },
+            Frame::Params { job: 1, version: 9, off: 0, total: 3, data: vec![0.1, 0.2, 0.3] },
+            Frame::GradAssign {
+                job: 2,
+                round: 11,
+                param_version: 9,
+                work_units: 0.5,
+                units: vec![
+                    GradUnit::Plain { job: 4, chunk: 1 },
+                    GradUnit::Coded { job: 5, terms: vec![(0, 1.0), (3, -0.25)] },
+                ],
+            },
+            Frame::GradResult {
+                worker_id: 3,
+                job: 2,
+                round: 11,
+                param_version: 9,
+                compute_s: 0.004,
+                off: 0,
+                total: 2,
+                data: vec![-1.0, 2.5],
+            },
         ]
     }
 
@@ -493,6 +935,87 @@ mod tests {
         let mut fb = FrameBuffer::new();
         fb.feed(&(MAX_FRAME_LEN + 1).to_le_bytes());
         assert!(matches!(fb.next_frame(), Err(WireError::BadLength(_))));
+    }
+
+    #[test]
+    fn f32_tensor_payloads_are_bit_exact_including_nan() {
+        let specials = vec![0.0f32, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1e-38];
+        let f = Frame::Params { job: 0, version: 1, off: 0, total: 6, data: specials.clone() };
+        match Frame::decode(&f.encode()).unwrap() {
+            Frame::Params { data, .. } => {
+                assert_eq!(data.len(), specials.len());
+                for (a, b) in data.iter().zip(&specials) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_lying_tensor_totals_without_allocating() {
+        // total beyond the hard cap
+        let f = Frame::Params { job: 0, version: 1, off: 0, total: 4, data: vec![1.0; 4] };
+        let mut bytes = f.encode();
+        // layout: 4 len + 1 ver + 1 tag + 4 job + 4 version + 4 off, then total
+        let total_off = 4 + 1 + 1 + 4 + 4 + 4;
+        bytes[total_off..total_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadLength(_))));
+        // float count larger than the payload holds
+        let count_off = total_off + 4;
+        let mut lying = f.encode();
+        lying[count_off..count_off + 4].copy_from_slice(&(1u32 << 20).to_le_bytes());
+        assert!(matches!(Frame::decode(&lying), Err(WireError::Truncated)));
+        // a slice overrunning its declared total
+        let short = Frame::Params { job: 0, version: 1, off: 3, total: 4, data: vec![1.0; 4] };
+        assert!(Frame::decode(&short.encode()).is_err());
+    }
+
+    #[test]
+    fn rejects_hostile_grad_unit_counts() {
+        let f = Frame::GradAssign {
+            job: 0,
+            round: 1,
+            param_version: 0,
+            work_units: 0.25,
+            units: vec![GradUnit::Coded { job: 1, terms: vec![(0, 1.0)] }],
+        };
+        let base = f.encode();
+        // layout: 4 len + 1 ver + 1 tag + 4 job + 4 round + 4 ver + 8 wu, then count
+        let count_off = 4 + 1 + 1 + 4 + 4 + 4 + 8;
+        for hostile in [1000u32, 1 << 24, u32::MAX] {
+            let mut bytes = base.clone();
+            bytes[count_off..count_off + 4].copy_from_slice(&hostile.to_le_bytes());
+            assert!(
+                matches!(Frame::decode(&bytes), Err(WireError::Truncated)),
+                "hostile unit count {hostile} decoded"
+            );
+        }
+        // hostile term count inside the coded unit
+        let term_count_off = count_off + 4 + 1 + 4;
+        let mut bytes = base.clone();
+        bytes[term_count_off..term_count_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn error_frame_bounds_its_message() {
+        // an over-long message is truncated on encode…
+        let long = "x".repeat(MAX_ERROR_MSG + 500);
+        let f = Frame::Error { code: ERR_BAD_HANDSHAKE, msg: long };
+        match Frame::decode(&f.encode()).unwrap() {
+            Frame::Error { code, msg } => {
+                assert_eq!(code, ERR_BAD_HANDSHAKE);
+                assert_eq!(msg.len(), MAX_ERROR_MSG);
+            }
+            other => panic!("{other:?}"),
+        }
+        // …and a lying length prefix is rejected on decode
+        let ok = Frame::Error { code: 1, msg: "hi".into() };
+        let mut bytes = ok.encode();
+        let len_off = 4 + 1 + 1 + 1;
+        bytes[len_off..len_off + 4].copy_from_slice(&(MAX_ERROR_MSG as u32 + 1).to_le_bytes());
+        assert!(Frame::decode(&bytes).is_err());
     }
 
     #[test]

@@ -16,11 +16,17 @@
 //! [`cluster::LatencyParams`](crate::cluster::LatencyParams), so a seeded
 //! live run is reproducible straggler-for-straggler.
 
-use super::wire::{read_frame, write_frame, Frame, WireError};
+use super::wire::{
+    read_frame, tensor_slices, write_frame, Frame, GradUnit, TensorAssembly, WireError,
+};
 use crate::chaos::{FaultKind, WorkerFault};
 use crate::cluster::latency::decayed_uplift;
+use crate::grad::dataplane::ChunkData;
+use crate::grad::mlp;
+use crate::runtime::ModelDims;
 use crate::straggler::models::ge_step;
 use crate::util::rng::Pcg32;
+use std::collections::{BTreeSet, HashMap};
 use std::io::BufReader;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
@@ -190,6 +196,84 @@ fn connect_with_backoff(cfg: &WorkerConfig, deadline: Instant) -> crate::Result<
     }
 }
 
+/// Gradient data-plane state for one job, cached across rounds *and*
+/// redials: a reconnecting worker keeps its partitions and only fetches
+/// what the master re-ships.
+struct GradJob {
+    dims: ModelDims,
+    /// Latest fully assembled `(version, tensors)` parameter broadcast.
+    params: Option<(u32, Vec<Vec<f32>>)>,
+    /// Cached partitions keyed by chunk id.
+    chunks: HashMap<u32, ChunkData>,
+    /// In-flight partition reassembly: chunk id → (rows, assembly).
+    part_asm: HashMap<u32, (u32, TensorAssembly)>,
+    /// In-flight parameter reassembly: (version, assembly).
+    params_asm: Option<(u32, TensorAssembly)>,
+}
+
+impl GradJob {
+    fn new(dims: ModelDims) -> Self {
+        GradJob {
+            dims,
+            params: None,
+            chunks: HashMap::new(),
+            part_asm: HashMap::new(),
+            params_asm: None,
+        }
+    }
+}
+
+/// Compute the framed payload for a `GradAssign`: per distinct chunk one
+/// real forward/backward pass, then per wire unit either the raw chunk
+/// gradient or the coded combination with the master-resolved
+/// coefficients, concatenated in unit order (`param_count` floats each).
+///
+/// `None` — stay silent, let the straggler path absorb it — when the
+/// worker cannot answer faithfully: params missing or at a different
+/// version than the assignment pins, or a partition not yet cached.
+fn compute_grad_units(gj: &GradJob, version: u32, units: &[GradUnit]) -> Option<Vec<f32>> {
+    let (v, params) = gj.params.as_ref()?;
+    if *v != version {
+        return None;
+    }
+    let pc = gj.dims.param_count();
+    let mut wanted: BTreeSet<u32> = BTreeSet::new();
+    for u in units {
+        match u {
+            GradUnit::Plain { chunk, .. } => {
+                wanted.insert(*chunk);
+            }
+            GradUnit::Coded { terms, .. } => {
+                for &(c, _) in terms {
+                    wanted.insert(c);
+                }
+            }
+        }
+    }
+    let mut grads: HashMap<u32, Vec<f32>> = HashMap::new();
+    for &c in &wanted {
+        let ch = gj.chunks.get(&c)?;
+        let (_, g) = mlp::grad_chunk(&gj.dims, params, &ch.x, &ch.y, &ch.w);
+        grads.insert(c, mlp::flatten(&g));
+    }
+    let mut out = Vec::with_capacity(pc * units.len());
+    for u in units {
+        match u {
+            GradUnit::Plain { chunk, .. } => out.extend_from_slice(&grads[chunk]),
+            GradUnit::Coded { terms, .. } => {
+                let mut ell = vec![0.0f32; pc];
+                for &(c, coeff) in terms {
+                    for (e, &x) in ell.iter_mut().zip(&grads[&c]) {
+                        *e += coeff as f32 * x;
+                    }
+                }
+                out.extend_from_slice(&ell);
+            }
+        }
+    }
+    Some(out)
+}
+
 /// Why one TCP session of the worker loop ended.
 enum SessionEnd {
     /// Terminal: clean `Shutdown`, master EOF mid-run, or a scripted
@@ -216,10 +300,15 @@ pub fn run_worker(cfg: WorkerConfig) -> crate::Result<WorkerStats> {
     let mut fault = cfg.fault;
     let mut chaos = cfg.chaos.map(|c| ChaosState::new(c, cfg.id));
     let mut stats = WorkerStats::default();
+    // Gradient data-plane cache, deliberately outside the session loop:
+    // partitions survive a scripted reconnect, and the master re-ships
+    // only what the rejoined connection reports missing.
+    let mut grad: HashMap<u32, GradJob> = HashMap::new();
     let mut deadline = Instant::now() + cfg.connect_retry;
     let mut initial = true;
     loop {
-        match serve_session(&cfg, initial, &mut fault, &mut chaos, &mut stats, deadline)? {
+        match serve_session(&cfg, initial, &mut fault, &mut chaos, &mut stats, &mut grad, deadline)?
+        {
             SessionEnd::Done => return Ok(stats),
             SessionEnd::Redial { away_s } => {
                 std::thread::sleep(Duration::from_secs_f64(away_s.max(0.0)));
@@ -239,6 +328,7 @@ fn serve_session(
     fault: &mut Option<WorkerFault>,
     chaos: &mut Option<ChaosState>,
     stats: &mut WorkerStats,
+    grad: &mut HashMap<u32, GradJob>,
     connect_deadline: Instant,
 ) -> crate::Result<SessionEnd> {
     let stream = match connect_with_backoff(cfg, connect_deadline) {
@@ -306,8 +396,9 @@ fn serve_session(
                                 *fault = None; // one-shot
                                 break Ok(SessionEnd::Redial { away_s: f.away_s });
                             }
-                            // byzantine corrupts the result below;
-                            // master-side kinds never reach a worker
+                            // byzantine corrupts the gradient payload
+                            // (see the GradAssign arm); master-side
+                            // kinds never reach a worker
                             _ => {}
                         }
                     }
@@ -318,21 +409,10 @@ fn serve_session(
                     stats.chaos_rounds += 1;
                 }
                 let started = Instant::now();
-                let mut checksum = execute_minitask(
+                let checksum = execute_minitask(
                     &chunks,
                     (cfg.base_s + cfg.alpha_s * work_units) * mult,
                 );
-                if let Some(f) = *fault {
-                    if f.kind == FaultKind::Byzantine && stats.rounds_served as u64 >= f.at_round
-                    {
-                        // scripted corruption: claim the work was done
-                        // but return a wrong checksum — the master
-                        // verifies, marks us byzantine and retires the
-                        // slot for good
-                        checksum = !checksum;
-                        *fault = None; // one-shot; we are dead to the master anyway
-                    }
-                }
                 stats.rounds_served += 1;
                 let frame = Frame::Result {
                     worker_id: cfg.id,
@@ -351,6 +431,186 @@ fn serve_session(
                 }
             }
             Ok(Frame::Shutdown) => break Ok(SessionEnd::Done),
+            // The master refuses the session deliberately (version
+            // mismatch, bad handshake): surface its reason instead of
+            // the generic "closed before assigning work".
+            Ok(Frame::Error { code, msg }) => {
+                break Err(anyhow::anyhow!(
+                    "worker {}: master refused the session (code {code}): {msg}",
+                    cfg.id
+                ))
+            }
+            Ok(Frame::JobSpec { job, input, classes, hidden1, hidden2 }) => {
+                let dims = ModelDims {
+                    input: input as usize,
+                    classes: classes as usize,
+                    hidden1: hidden1 as usize,
+                    hidden2: hidden2 as usize,
+                    // batch sharding is the master's concern; the worker
+                    // only ever sees materialised partitions
+                    chunk: 0,
+                };
+                grad.entry(job).or_insert_with(|| GradJob::new(dims));
+            }
+            Ok(Frame::Partition { job, chunk, rows, off, total, data }) => {
+                let Some(gj) = grad.get_mut(&job) else { continue };
+                if off == 0 {
+                    // a re-ship always restarts the assembly — a stale
+                    // half-built partition from before a redial must
+                    // not poison the fresh copy
+                    gj.part_asm.insert(chunk, (rows, TensorAssembly::new(total)));
+                }
+                let Some((_, asm)) = gj.part_asm.get_mut(&chunk) else { continue };
+                match asm.accept(off, &data) {
+                    Ok(false) => {}
+                    Ok(true) => {
+                        let (rows, asm) =
+                            gj.part_asm.remove(&chunk).expect("assembly just completed");
+                        match ChunkData::from_flat(&gj.dims, rows as usize, &asm.take()) {
+                            Some(cd) => {
+                                gj.chunks.insert(chunk, cd);
+                            }
+                            None => eprintln!(
+                                "worker {}: job {job} chunk {chunk}: partition shape \
+                                 mismatch; dropped",
+                                cfg.id
+                            ),
+                        }
+                    }
+                    Err(e) => {
+                        gj.part_asm.remove(&chunk);
+                        eprintln!(
+                            "worker {}: job {job} chunk {chunk}: bad partition slice \
+                             ({e}); dropped",
+                            cfg.id
+                        );
+                    }
+                }
+            }
+            Ok(Frame::Params { job, version, off, total, data }) => {
+                let Some(gj) = grad.get_mut(&job) else { continue };
+                if off == 0 {
+                    gj.params_asm = Some((version, TensorAssembly::new(total)));
+                }
+                let Some((v, asm)) = gj.params_asm.as_mut() else { continue };
+                if *v != version {
+                    continue; // slice of an abandoned broadcast
+                }
+                match asm.accept(off, &data) {
+                    Ok(false) => {}
+                    Ok(true) => {
+                        let (v, asm) = gj.params_asm.take().expect("assembly just completed");
+                        match mlp::unflatten(&gj.dims, &asm.take()) {
+                            Some(p) => gj.params = Some((v, p)),
+                            None => eprintln!(
+                                "worker {}: job {job}: params v{v} length mismatch; \
+                                 dropped",
+                                cfg.id
+                            ),
+                        }
+                    }
+                    Err(e) => {
+                        gj.params_asm = None;
+                        eprintln!(
+                            "worker {}: job {job}: bad params slice ({e}); dropped",
+                            cfg.id
+                        );
+                    }
+                }
+            }
+            Ok(Frame::GradAssign { job, round, param_version, work_units, units }) => {
+                // same scripted-fault gate as the synthetic path: a
+                // fault past its threshold acts on receipt
+                if let Some(f) = *fault {
+                    if stats.rounds_served as u64 >= f.at_round {
+                        match f.kind {
+                            FaultKind::Crash => break Ok(SessionEnd::Done),
+                            FaultKind::Hang => {
+                                stop.store(true, Ordering::Release);
+                                while read_frame(&mut reader).is_ok() {}
+                                break Ok(SessionEnd::Done);
+                            }
+                            FaultKind::Reconnect => {
+                                *fault = None; // one-shot
+                                break Ok(SessionEnd::Redial { away_s: f.away_s });
+                            }
+                            // byzantine corrupts the payload below
+                            _ => {}
+                        }
+                    }
+                }
+                current_round.store(round, Ordering::Release);
+                let mult = chaos.as_mut().map_or(1.0, |c| c.next_multiplier());
+                if mult > 1.0 {
+                    stats.chaos_rounds += 1;
+                }
+                let started = Instant::now();
+                let payload =
+                    grad.get(&job).and_then(|gj| compute_grad_units(gj, param_version, &units));
+                // Chaos stretches *real* compute: hold the worker until
+                // the modelled duration elapses, gradient math included,
+                // so fleet and sim stay on the same time axis.
+                let target = (cfg.base_s + cfg.alpha_s * work_units) * mult;
+                let elapsed = started.elapsed().as_secs_f64();
+                if target > elapsed {
+                    std::thread::sleep(Duration::from_secs_f64(target - elapsed));
+                }
+                let Some(mut payload) = payload else {
+                    // missing chunks, or params absent / at the wrong
+                    // version: answering would poison the decode, so
+                    // stay silent and let the straggler machinery
+                    // absorb the gap
+                    eprintln!(
+                        "worker {}: job {job} round {round}: cannot serve param \
+                         v{param_version}; staying silent",
+                        cfg.id
+                    );
+                    continue;
+                };
+                if let Some(f) = *fault {
+                    if f.kind == FaultKind::Byzantine && stats.rounds_served as u64 >= f.at_round
+                    {
+                        // scripted corruption: a well-formed, plausible
+                        // payload with every sign flipped — only the
+                        // code's redundancy can catch it. The fault stays
+                        // armed (every later round lies too): a single
+                        // flipped round can slip through when a decode
+                        // closes with no spare responder, but a liar that
+                        // keeps lying is caught the first time any group
+                        // decodes with redundancy — and then the master
+                        // audits, flags and retires us for good.
+                        for v in payload.iter_mut() {
+                            *v = -*v;
+                        }
+                    }
+                }
+                stats.rounds_served += 1;
+                let compute_s = started.elapsed().as_secs_f64();
+                let total = payload.len() as u32;
+                let mut send_err = None;
+                for (off, slice) in tensor_slices(&payload) {
+                    let frame = Frame::GradResult {
+                        worker_id: cfg.id,
+                        job,
+                        round,
+                        param_version,
+                        compute_s,
+                        off,
+                        total,
+                        data: slice.to_vec(),
+                    };
+                    if let Err(e) = write_frame(&mut *writer.lock().unwrap(), &frame) {
+                        send_err = Some(e);
+                        break;
+                    }
+                }
+                if let Some(e) = send_err {
+                    break Err(anyhow::anyhow!("worker {}: send gradient: {e}", cfg.id));
+                }
+                if cfg.fail_after_rounds.is_some_and(|k| stats.rounds_served >= k) {
+                    break Ok(SessionEnd::Done);
+                }
+            }
             Ok(other) => {
                 break Err(anyhow::anyhow!("worker {}: unexpected frame {other:?}", cfg.id))
             }

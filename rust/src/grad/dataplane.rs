@@ -1,0 +1,427 @@
+//! Master-side state of the gradient data plane.
+//!
+//! The `DataPlane` owns, per scheduler job: the model dimensions, the
+//! partitioned training chunks (what `Partition` frames ship), the
+//! current flat parameter vector (what `Params` frames broadcast,
+//! versioned), and per-cluster-round staging entries that pin — at the
+//! moment the scheduler launches a round — which wire work units each
+//! physical worker must compute and which parameter version they must
+//! be computed against.
+//!
+//! It is shared between the scheduler (stages rounds), the fleet master
+//! (ships partitions/params/assignments, stores reassembled payloads)
+//! and the [`super::GradPump`] observer (folds payloads, decodes,
+//! steps the optimizer) behind a mutex: every touch is short and
+//! allocation-light, and the fleet master already runs single-threaded
+//! around its poll loop.
+
+use crate::coding::{CodePlanCache, Scheme, WorkUnit};
+use crate::fleet::wire::GradUnit;
+use crate::runtime::ModelDims;
+use crate::session::RoundPlan;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Placement sentinel: logical worker has no physical seat this round.
+pub const UNPLACED_WORKER: usize = usize::MAX;
+
+/// How many historical parameter versions a job keeps for payload
+/// audits (delay schemes fold payloads computed a few versions back).
+const PARAM_HISTORY: usize = 8;
+
+/// One training partition: the padded tensors a worker needs to compute
+/// the chunk's partial gradient.
+#[derive(Clone, Debug)]
+pub struct ChunkData {
+    /// Padded row count (`x` is `rows × input`, `y` is `rows × classes`).
+    pub rows: usize,
+    /// Row-major inputs.
+    pub x: Vec<f32>,
+    /// One-hot labels.
+    pub y: Vec<f32>,
+    /// Per-sample weights (0 for padding rows).
+    pub w: Vec<f32>,
+}
+
+impl ChunkData {
+    /// Wire layout: `x ‖ y ‖ w` as one flat tensor.
+    pub fn flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.x.len() + self.y.len() + self.w.len());
+        out.extend_from_slice(&self.x);
+        out.extend_from_slice(&self.y);
+        out.extend_from_slice(&self.w);
+        out
+    }
+
+    /// Flat length implied by `dims` and `rows`.
+    pub fn flat_len(dims: &ModelDims, rows: usize) -> usize {
+        rows * (dims.input + dims.classes + 1)
+    }
+
+    /// Rebuild from the wire layout; `None` on a length mismatch.
+    pub fn from_flat(dims: &ModelDims, rows: usize, flat: &[f32]) -> Option<Self> {
+        if flat.len() != Self::flat_len(dims, rows) {
+            return None;
+        }
+        let nx = rows * dims.input;
+        let ny = rows * dims.classes;
+        Some(ChunkData {
+            rows,
+            x: flat[..nx].to_vec(),
+            y: flat[nx..nx + ny].to_vec(),
+            w: flat[nx + ny..].to_vec(),
+        })
+    }
+}
+
+/// Everything the data plane knows about one scheduler job.
+#[derive(Clone, Debug)]
+pub struct JobData {
+    /// Model shapes (what `JobSpec` frames announce).
+    pub dims: ModelDims,
+    /// Replication-style coding (coefficients are all 1).
+    pub rep: bool,
+    /// The k partitions, indexed by chunk id.
+    pub chunks: Vec<ChunkData>,
+    /// Current flat parameter vector.
+    pub params: Vec<f32>,
+    /// Monotone parameter version; bumped on every optimizer step.
+    pub version: u32,
+    /// Recent `(version, params)` snapshots for payload audits.
+    history: Vec<(u32, Vec<f32>)>,
+}
+
+impl JobData {
+    /// Parameters as they were at `version`, if still retained.
+    pub fn params_at(&self, version: u32) -> Option<&[f32]> {
+        if version == self.version {
+            return Some(&self.params);
+        }
+        self.history.iter().find(|(v, _)| *v == version).map(|(_, p)| p.as_slice())
+    }
+}
+
+/// Fold-time view of one wire work unit (what the decode pass needs to
+/// attribute a payload segment; coefficients were applied worker-side).
+#[derive(Clone, Copy, Debug)]
+pub enum FoldUnit {
+    /// Raw partial gradient of `chunk` for paper job `job`.
+    Plain {
+        /// 1-based paper job.
+        job: usize,
+        /// Chunk id.
+        chunk: usize,
+    },
+    /// Coded combination `ℓ_{row,group}(job)`.
+    Coded {
+        /// 1-based paper job.
+        job: usize,
+        /// Ledger group index.
+        group: usize,
+        /// Encoding-matrix row (== logical worker).
+        row: usize,
+    },
+}
+
+/// Per-cluster-round staging: the work units shipped to each physical
+/// worker and the payloads that came back.
+#[derive(Clone, Debug)]
+pub struct RoundEntry {
+    /// The session's 1-based round index this entry serves.
+    pub session_round: usize,
+    /// Parameter version the assignments were staged against.
+    pub param_version: u32,
+    /// Logical worker → physical seat ([`UNPLACED_WORKER`] if none).
+    pub place: Vec<usize>,
+    /// Wire units per physical worker (empty = nothing to send).
+    pub wire: Vec<Vec<GradUnit>>,
+    /// Fold metadata per physical worker, aligned with `wire`.
+    pub fold: Vec<Vec<FoldUnit>>,
+    /// Reassembled payload per physical worker.
+    pub payloads: Vec<Option<Vec<f32>>>,
+}
+
+/// The shared handle every layer holds.
+pub type SharedDataPlane = Arc<Mutex<DataPlane>>;
+
+/// Master-side gradient data-plane state (see module docs).
+#[derive(Debug, Default)]
+pub struct DataPlane {
+    jobs: HashMap<u32, JobData>,
+    rounds: HashMap<(u32, u64), RoundEntry>,
+    by_session: HashMap<(u32, usize), u64>,
+    flagged: Vec<usize>,
+    grad_bytes: HashMap<u32, u64>,
+}
+
+impl DataPlane {
+    /// Empty data plane (no job opted in).
+    pub fn new() -> Self {
+        DataPlane::default()
+    }
+
+    /// Empty data plane behind the shared handle.
+    pub fn shared() -> SharedDataPlane {
+        Arc::new(Mutex::new(DataPlane::new()))
+    }
+
+    /// Opt a scheduler job into the real-gradient path.
+    pub fn configure_job(
+        &mut self,
+        job: u32,
+        dims: ModelDims,
+        rep: bool,
+        chunks: Vec<ChunkData>,
+        params: Vec<f32>,
+    ) {
+        assert_eq!(params.len(), dims.param_count(), "flat params must match dims");
+        self.jobs.insert(
+            job,
+            JobData { dims, rep, chunks, params, version: 1, history: Vec::new() },
+        );
+    }
+
+    /// Is this scheduler job on the real-gradient path?
+    pub fn is_grad_job(&self, job: u32) -> bool {
+        self.jobs.contains_key(&job)
+    }
+
+    /// The job's data, if configured.
+    pub fn job(&self, job: u32) -> Option<&JobData> {
+        self.jobs.get(&job)
+    }
+
+    /// Install freshly stepped parameters, bumping the version (the old
+    /// vector is retained for audits of in-flight payloads).
+    pub fn set_params(&mut self, job: u32, params: Vec<f32>) -> u32 {
+        let jd = self.jobs.get_mut(&job).expect("set_params on unconfigured job");
+        assert_eq!(params.len(), jd.dims.param_count());
+        let old = std::mem::replace(&mut jd.params, params);
+        jd.history.push((jd.version, old));
+        if jd.history.len() > PARAM_HISTORY {
+            jd.history.remove(0);
+        }
+        jd.version += 1;
+        jd.version
+    }
+
+    /// Stage the launching round: translate the session's task plan into
+    /// wire units (resolving the GC coefficients master-side, so workers
+    /// never need the code plan) and pin the parameter version.
+    ///
+    /// Called by the scheduler after placement, before the cluster
+    /// `submit`, so the fleet master finds the entry when it fans the
+    /// round out.
+    pub fn stage_round(
+        &mut self,
+        job: u32,
+        cluster_round: u64,
+        scheme: &dyn Scheme,
+        plan: &RoundPlan,
+        place: &[usize],
+        physical_n: usize,
+    ) {
+        let Some(jd) = self.jobs.get(&job) else { return };
+        let n = scheme.spec().n;
+        let paper_jobs = scheme.jobs();
+        let mut wire: Vec<Vec<GradUnit>> = vec![Vec::new(); physical_n];
+        let mut fold: Vec<Vec<FoldUnit>> = vec![Vec::new(); physical_n];
+        for (logical, task) in plan.tasks.iter().enumerate() {
+            let phys = place.get(logical).copied().unwrap_or(UNPLACED_WORKER);
+            if phys == UNPLACED_WORKER || phys >= physical_n {
+                continue;
+            }
+            for unit in &task.units {
+                match unit {
+                    WorkUnit::Noop => {}
+                    WorkUnit::Plain { job: t, chunk } => {
+                        if *t < 1 || *t > paper_jobs {
+                            continue;
+                        }
+                        wire[phys]
+                            .push(GradUnit::Plain { job: *t as u32, chunk: *chunk as u32 });
+                        fold[phys].push(FoldUnit::Plain { job: *t, chunk: *chunk });
+                    }
+                    WorkUnit::Coded { job: t, group, row, chunks } => {
+                        if *t < 1 || *t > paper_jobs {
+                            continue;
+                        }
+                        let need = scheme.ledger(*t).coded_need[*group];
+                        let terms: Vec<(u32, f64)> = chunks
+                            .iter()
+                            .map(|&c| {
+                                let coeff = if jd.rep || need <= 1 {
+                                    1.0f64
+                                } else {
+                                    let s = n - need;
+                                    let plan_b = CodePlanCache::global().get(n, s);
+                                    plan_b.b()[(*row, c % n)]
+                                };
+                                (c as u32, coeff)
+                            })
+                            .collect();
+                        wire[phys].push(GradUnit::Coded { job: *t as u32, terms });
+                        fold[phys].push(FoldUnit::Coded { job: *t, group: *group, row: *row });
+                    }
+                }
+            }
+        }
+        let entry = RoundEntry {
+            session_round: plan.round,
+            param_version: jd.version,
+            place: place.to_vec(),
+            wire,
+            fold,
+            payloads: vec![None; physical_n],
+        };
+        self.by_session.insert((job, plan.round), cluster_round);
+        self.rounds.insert((job, cluster_round), entry);
+    }
+
+    /// The staged entry for a cluster round, if any (what the fleet
+    /// master consults when fanning out assignments).
+    pub fn round(&self, job: u32, cluster_round: u64) -> Option<&RoundEntry> {
+        self.rounds.get(&(job, cluster_round))
+    }
+
+    /// Store a worker's reassembled payload for a staged round.
+    ///
+    /// `false` when the entry is gone (round already folded — a very
+    /// late straggler) or the version is stale: the payload is dropped.
+    pub fn store_payload(
+        &mut self,
+        job: u32,
+        cluster_round: u64,
+        physical: usize,
+        param_version: u32,
+        payload: Vec<f32>,
+    ) -> bool {
+        let Some(entry) = self.rounds.get_mut(&(job, cluster_round)) else {
+            return false;
+        };
+        if entry.param_version != param_version || physical >= entry.payloads.len() {
+            return false;
+        }
+        entry.payloads[physical] = Some(payload);
+        true
+    }
+
+    /// Remove and return the entry serving a session round (the decode
+    /// pass consumes it exactly once, at round close).
+    pub fn take_session_round(&mut self, job: u32, session_round: usize) -> Option<RoundEntry> {
+        let cluster_round = self.by_session.remove(&(job, session_round))?;
+        self.rounds.remove(&(job, cluster_round))
+    }
+
+    /// Mark a physical worker as byzantine; the fleet master drains
+    /// these via [`DataPlane::take_flagged`] and retires them.
+    pub fn flag_worker(&mut self, physical: usize) {
+        if !self.flagged.contains(&physical) {
+            self.flagged.push(physical);
+        }
+    }
+
+    /// Drain the byzantine flags raised since the last call.
+    pub fn take_flagged(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.flagged)
+    }
+
+    /// Count gradient payload bytes received for a job.
+    pub fn add_grad_bytes(&mut self, job: u32, bytes: u64) {
+        *self.grad_bytes.entry(job).or_insert(0) += bytes;
+    }
+
+    /// Total gradient payload bytes received for a job.
+    pub fn grad_bytes(&self, job: u32) -> u64 {
+        self.grad_bytes.get(&job).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { input: 4, classes: 2, hidden1: 3, hidden2: 3, chunk: 2 }
+    }
+
+    fn chunk(rows: usize, fill: f32) -> ChunkData {
+        let d = dims();
+        ChunkData {
+            rows,
+            x: vec![fill; rows * d.input],
+            y: vec![0.0; rows * d.classes],
+            w: vec![1.0; rows],
+        }
+    }
+
+    #[test]
+    fn chunk_flat_round_trips() {
+        let c = chunk(3, 0.5);
+        let flat = c.flat();
+        assert_eq!(flat.len(), ChunkData::flat_len(&dims(), 3));
+        let back = ChunkData::from_flat(&dims(), 3, &flat).unwrap();
+        assert_eq!(back.x, c.x);
+        assert_eq!(back.y, c.y);
+        assert_eq!(back.w, c.w);
+        assert!(ChunkData::from_flat(&dims(), 4, &flat).is_none(), "bad rows rejected");
+    }
+
+    #[test]
+    fn params_versioning_retains_history() {
+        let mut dp = DataPlane::new();
+        let d = dims();
+        let p0 = vec![0.0f32; d.param_count()];
+        dp.configure_job(7, d, false, vec![chunk(2, 0.1)], p0.clone());
+        assert!(dp.is_grad_job(7));
+        assert!(!dp.is_grad_job(8));
+        assert_eq!(dp.job(7).unwrap().version, 1);
+        let p1 = vec![1.0f32; d.param_count()];
+        let v = dp.set_params(7, p1.clone());
+        assert_eq!(v, 2);
+        let jd = dp.job(7).unwrap();
+        assert_eq!(jd.params_at(2).unwrap(), &p1[..]);
+        assert_eq!(jd.params_at(1).unwrap(), &p0[..]);
+        assert!(jd.params_at(3).is_none());
+    }
+
+    #[test]
+    fn payload_store_rejects_stale_version_and_unknown_round() {
+        let mut dp = DataPlane::new();
+        let d = dims();
+        dp.configure_job(0, d, false, vec![chunk(1, 0.0)], vec![0.0; d.param_count()]);
+        // no staged entry yet
+        assert!(!dp.store_payload(0, 5, 0, 1, vec![1.0]));
+        dp.rounds.insert(
+            (0, 5),
+            RoundEntry {
+                session_round: 1,
+                param_version: 1,
+                place: vec![0],
+                wire: vec![Vec::new()],
+                fold: vec![Vec::new()],
+                payloads: vec![None],
+            },
+        );
+        dp.by_session.insert((0, 1), 5);
+        assert!(!dp.store_payload(0, 5, 0, 2, vec![1.0]), "stale version dropped");
+        assert!(dp.store_payload(0, 5, 0, 1, vec![1.0]));
+        let entry = dp.take_session_round(0, 1).unwrap();
+        assert_eq!(entry.payloads[0].as_deref(), Some(&[1.0f32][..]));
+        assert!(dp.take_session_round(0, 1).is_none(), "consumed exactly once");
+    }
+
+    #[test]
+    fn flags_and_byte_counters_accumulate() {
+        let mut dp = DataPlane::new();
+        dp.flag_worker(2);
+        dp.flag_worker(2);
+        dp.flag_worker(1);
+        assert_eq!(dp.take_flagged(), vec![2, 1]);
+        assert!(dp.take_flagged().is_empty());
+        dp.add_grad_bytes(3, 100);
+        dp.add_grad_bytes(3, 28);
+        assert_eq!(dp.grad_bytes(3), 128);
+        assert_eq!(dp.grad_bytes(4), 0);
+    }
+}

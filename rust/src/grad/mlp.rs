@@ -1,0 +1,380 @@
+//! CPU forward/backward for the 3-layer MLP the AOT artifact lowers
+//! (`runtime::artifact`): relu → relu → softmax cross-entropy, with
+//! per-sample weights so padded rows (weight 0) contribute nothing and
+//! partial gradients over chunks sum to the full-batch gradient.
+//!
+//! This is the worker-side compute of the gradient data plane. It
+//! mirrors the compiled PJRT program's contract
+//! `(W1,b1,W2,b2,W3,b3,x,y,wgt) → (loss_sum, gW1..gb3)` exactly, but in
+//! portable scalar Rust, so the loopback fleet computes *real*
+//! gradients without the `pjrt` feature. Determinism matters more than
+//! speed here: plain loops in a fixed order give bit-identical results
+//! on every platform, which the decode bit-stability tests pin.
+
+use crate::runtime::ModelDims;
+use crate::util::rng::Pcg32;
+
+/// Deterministic He-style initialization of the 6 parameter tensors.
+///
+/// Weights are `normal · sqrt(2 / fan_in)`, biases zero, all drawn from
+/// a stream derived only from `seed` — master and tests can regenerate
+/// the exact same starting point.
+pub fn init_params(dims: &ModelDims, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::new(seed, 0x6d1b);
+    dims.param_shapes()
+        .iter()
+        .map(|&(rows, cols)| {
+            if rows == 1 {
+                vec![0.0; cols]
+            } else {
+                let scale = (2.0 / rows as f64).sqrt();
+                (0..rows * cols).map(|_| (rng.normal() * scale) as f32).collect()
+            }
+        })
+        .collect()
+}
+
+/// Flatten the 6 tensors into one wire-ready vector (program order).
+pub fn flatten(params: &[Vec<f32>]) -> Vec<f32> {
+    params.iter().flat_map(|p| p.iter().copied()).collect()
+}
+
+/// Split a flat vector back into the 6 tensors of `dims`.
+///
+/// `None` if the length does not match [`ModelDims::param_count`] — a
+/// stale or corrupt broadcast must not panic the worker.
+pub fn unflatten(dims: &ModelDims, flat: &[f32]) -> Option<Vec<Vec<f32>>> {
+    if flat.len() != dims.param_count() {
+        return None;
+    }
+    let mut out = Vec::with_capacity(6);
+    let mut off = 0;
+    for len in dims.param_lens() {
+        out.push(flat[off..off + len].to_vec());
+        off += len;
+    }
+    Some(out)
+}
+
+/// `y = x·W + b` for row-major `x: rows×in`, `w: in×out`, `b: out`.
+fn affine(x: &[f32], w: &[f32], b: &[f32], rows: usize, nin: usize, nout: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; rows * nout];
+    for r in 0..rows {
+        let xr = &x[r * nin..(r + 1) * nin];
+        let yr = &mut y[r * nout..(r + 1) * nout];
+        yr.copy_from_slice(b);
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi != 0.0 {
+                let wrow = &w[i * nout..(i + 1) * nout];
+                for (yj, &wj) in yr.iter_mut().zip(wrow) {
+                    *yj += xi * wj;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// One forward pass, returning pre-activations and activations.
+struct Forward {
+    z1: Vec<f32>,
+    a1: Vec<f32>,
+    z2: Vec<f32>,
+    a2: Vec<f32>,
+    /// Softmax probabilities, rows × classes.
+    p: Vec<f32>,
+}
+
+fn forward(dims: &ModelDims, params: &[Vec<f32>], x: &[f32], rows: usize) -> Forward {
+    let (ni, h1, h2, nc) = (dims.input, dims.hidden1, dims.hidden2, dims.classes);
+    let z1 = affine(x, &params[0], &params[1], rows, ni, h1);
+    let a1: Vec<f32> = z1.iter().map(|&v| v.max(0.0)).collect();
+    let z2 = affine(&a1, &params[2], &params[3], rows, h1, h2);
+    let a2: Vec<f32> = z2.iter().map(|&v| v.max(0.0)).collect();
+    let z3 = affine(&a2, &params[4], &params[5], rows, h2, nc);
+    let mut p = z3;
+    for r in 0..rows {
+        let row = &mut p[r * nc..(r + 1) * nc];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    Forward { z1, a1, z2, a2, p }
+}
+
+/// Weighted loss sum over one chunk: `Σᵢ wgtᵢ · CE(softmax(f(xᵢ)), yᵢ)`.
+///
+/// Row count is taken from `wgt.len()`; `x`/`y` must match it.
+pub fn loss_chunk(dims: &ModelDims, params: &[Vec<f32>], x: &[f32], y: &[f32], wgt: &[f32]) -> f32 {
+    let rows = wgt.len();
+    assert_eq!(x.len(), rows * dims.input, "x shape");
+    assert_eq!(y.len(), rows * dims.classes, "y shape");
+    let f = forward(dims, params, x, rows);
+    let nc = dims.classes;
+    let mut loss = 0.0f32;
+    for (r, &w) in wgt.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        for c in 0..nc {
+            let t = y[r * nc + c];
+            if t != 0.0 {
+                loss += w * t * -(f.p[r * nc + c].max(1e-12).ln());
+            }
+        }
+    }
+    loss
+}
+
+/// `(loss_sum, grads)` for one chunk — the CPU mirror of
+/// `GradExecutable::grad_chunk`.
+///
+/// * `params` — 6 flattened tensors per [`ModelDims::param_shapes`].
+/// * `x` — `rows × input`, row-major; `y` — `rows × classes` one-hot;
+///   `wgt` — `rows` per-sample weights (0 for padding).
+///
+/// With weight `1/batch` on every real sample, the per-chunk gradients
+/// of a partition sum to the mean full-batch gradient, which is exactly
+/// the linearity the gradient code's decode relies on.
+pub fn grad_chunk(
+    dims: &ModelDims,
+    params: &[Vec<f32>],
+    x: &[f32],
+    y: &[f32],
+    wgt: &[f32],
+) -> (f32, Vec<Vec<f32>>) {
+    let rows = wgt.len();
+    assert_eq!(params.len(), 6, "expected 6 parameter tensors");
+    assert_eq!(x.len(), rows * dims.input, "x shape");
+    assert_eq!(y.len(), rows * dims.classes, "y shape");
+    let (ni, h1, h2, nc) = (dims.input, dims.hidden1, dims.hidden2, dims.classes);
+    let f = forward(dims, params, x, rows);
+
+    let mut loss = 0.0f32;
+    // dz3 = wgt · (p − y), the weighted softmax-CE gradient
+    let mut dz3 = vec![0.0f32; rows * nc];
+    for (r, &w) in wgt.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        for c in 0..nc {
+            let t = y[r * nc + c];
+            let p = f.p[r * nc + c];
+            if t != 0.0 {
+                loss += w * t * -(p.max(1e-12).ln());
+            }
+            dz3[r * nc + c] = w * (p - t);
+        }
+    }
+
+    // layer 3 grads + backprop through W3
+    let (g_w3, g_b3) = grad_affine(&f.a2, &dz3, rows, h2, nc);
+    let mut dz2 = matmul_t(&dz3, &params[4], rows, nc, h2);
+    for (d, &z) in dz2.iter_mut().zip(&f.z2) {
+        if z <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    let (g_w2, g_b2) = grad_affine(&f.a1, &dz2, rows, h1, h2);
+    let mut dz1 = matmul_t(&dz2, &params[2], rows, h2, h1);
+    for (d, &z) in dz1.iter_mut().zip(&f.z1) {
+        if z <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    let (g_w1, g_b1) = grad_affine(x, &dz1, rows, ni, h1);
+
+    (loss, vec![g_w1, g_b1, g_w2, g_b2, g_w3, g_b3])
+}
+
+/// `(gW, gb) = (aᵀ·dz, Σᵣ dz)` for `a: rows×nin`, `dz: rows×nout`.
+fn grad_affine(a: &[f32], dz: &[f32], rows: usize, nin: usize, nout: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut gw = vec![0.0f32; nin * nout];
+    let mut gb = vec![0.0f32; nout];
+    for r in 0..rows {
+        let dzr = &dz[r * nout..(r + 1) * nout];
+        for (gbj, &d) in gb.iter_mut().zip(dzr) {
+            *gbj += d;
+        }
+        let ar = &a[r * nin..(r + 1) * nin];
+        for (i, &ai) in ar.iter().enumerate() {
+            if ai != 0.0 {
+                let gwrow = &mut gw[i * nout..(i + 1) * nout];
+                for (g, &d) in gwrow.iter_mut().zip(dzr) {
+                    *g += ai * d;
+                }
+            }
+        }
+    }
+    (gw, gb)
+}
+
+/// `da = dz·Wᵀ` for `dz: rows×nout`, `w: nin×nout` → `rows×nin`.
+fn matmul_t(dz: &[f32], w: &[f32], rows: usize, nout: usize, nin: usize) -> Vec<f32> {
+    let mut da = vec![0.0f32; rows * nin];
+    for r in 0..rows {
+        let dzr = &dz[r * nout..(r + 1) * nout];
+        let dar = &mut da[r * nin..(r + 1) * nin];
+        for (i, d) in dar.iter_mut().enumerate() {
+            let wrow = &w[i * nout..(i + 1) * nout];
+            let mut acc = 0.0f32;
+            for (&z, &wj) in dzr.iter().zip(wrow) {
+                acc += z * wj;
+            }
+            *d = acc;
+        }
+    }
+    da
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::{Adam, Dataset, DatasetConfig};
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims { input: 5, classes: 3, hidden1: 4, hidden2: 4, chunk: 6 }
+    }
+
+    fn tiny_batch(dims: &ModelDims, rows: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed, 77);
+        let x: Vec<f32> = (0..rows * dims.input).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0.0f32; rows * dims.classes];
+        for r in 0..rows {
+            y[r * dims.classes + rng.below(dims.classes)] = 1.0;
+        }
+        let w = vec![1.0 / rows as f32; rows];
+        (x, y, w)
+    }
+
+    #[test]
+    fn init_is_deterministic_and_shaped() {
+        let dims = tiny_dims();
+        let a = init_params(&dims, 9);
+        let b = init_params(&dims, 9);
+        assert_eq!(a, b);
+        let lens: Vec<usize> = a.iter().map(|p| p.len()).collect();
+        assert_eq!(lens, dims.param_lens());
+        assert!(a[1].iter().all(|&v| v == 0.0), "biases start at zero");
+    }
+
+    #[test]
+    fn flatten_unflatten_round_trips() {
+        let dims = tiny_dims();
+        let p = init_params(&dims, 3);
+        let flat = flatten(&p);
+        assert_eq!(flat.len(), dims.param_count());
+        assert_eq!(unflatten(&dims, &flat).unwrap(), p);
+        assert!(unflatten(&dims, &flat[1..]).is_none(), "wrong length is rejected");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let dims = tiny_dims();
+        let params = init_params(&dims, 5);
+        let (x, y, w) = tiny_batch(&dims, 4, 1);
+        let (_, grads) = grad_chunk(&dims, &params, &x, &y, &w);
+        // probe a few coordinates of every tensor with central differences
+        let eps = 1e-2f32;
+        for t in 0..6 {
+            for &i in &[0usize, params[t].len() / 2, params[t].len() - 1] {
+                let mut up = params.clone();
+                up[t][i] += eps;
+                let mut dn = params.clone();
+                dn[t][i] -= eps;
+                let num = (loss_chunk(&dims, &up, &x, &y, &w)
+                    - loss_chunk(&dims, &dn, &x, &y, &w))
+                    / (2.0 * eps);
+                let ana = grads[t][i];
+                assert!(
+                    (num - ana).abs() < 2e-3 + 0.05 * ana.abs(),
+                    "tensor {t} idx {i}: fd {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_gradients_sum_to_the_batch_gradient() {
+        // the linearity the gradient code's decode relies on: splitting a
+        // batch into chunks and summing per-chunk gradients reproduces the
+        // full-batch gradient (same per-sample weights throughout)
+        let dims = tiny_dims();
+        let params = init_params(&dims, 8);
+        let rows = 6;
+        let (x, y, _) = tiny_batch(&dims, rows, 2);
+        let w = vec![1.0 / rows as f32; rows];
+        let (full_loss, full) = grad_chunk(&dims, &params, &x, &y, &w);
+        let cut = 2; // rows 0..2 and 2..6
+        let (la, ga) = grad_chunk(
+            &dims,
+            &params,
+            &x[..cut * dims.input],
+            &y[..cut * dims.classes],
+            &w[..cut],
+        );
+        let (lb, gb) = grad_chunk(
+            &dims,
+            &params,
+            &x[cut * dims.input..],
+            &y[cut * dims.classes..],
+            &w[cut..],
+        );
+        assert!((full_loss - (la + lb)).abs() < 1e-5);
+        for t in 0..6 {
+            for i in 0..full[t].len() {
+                assert!(
+                    (full[t][i] - (ga[t][i] + gb[t][i])).abs() < 1e-5,
+                    "tensor {t} idx {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weight_rows_contribute_nothing() {
+        let dims = tiny_dims();
+        let params = init_params(&dims, 4);
+        let (x, y, w) = tiny_batch(&dims, 3, 3);
+        let (loss, grads) = grad_chunk(&dims, &params, &x, &y, &w);
+        // pad with garbage rows at weight 0
+        let mut xp = x.clone();
+        xp.extend(vec![7.5f32; 2 * dims.input]);
+        let mut yp = y.clone();
+        yp.extend(vec![0.0f32; 2 * dims.classes]);
+        let mut wp = w.clone();
+        wp.extend([0.0, 0.0]);
+        let (loss_p, grads_p) = grad_chunk(&dims, &params, &xp, &yp, &wp);
+        assert_eq!(loss, loss_p);
+        assert_eq!(grads, grads_p);
+    }
+
+    #[test]
+    fn adam_on_mlp_gradients_learns_the_dataset() {
+        let data = Dataset::generate(DatasetConfig {
+            input: 16,
+            classes: 4,
+            train_size: 128,
+            noise: 0.3,
+            seed: 11,
+        });
+        let dims = ModelDims { input: 16, classes: 4, hidden1: 16, hidden2: 8, chunk: 128 };
+        let mut params = init_params(&dims, 1);
+        let mut adam = Adam::new(5e-3, &dims.param_lens());
+        let idx: Vec<usize> = (0..data.len()).collect();
+        let (x, y, w) = data.chunk_tensors(&idx, data.len(), 1.0 / data.len() as f32);
+        let first = loss_chunk(&dims, &params, &x, &y, &w);
+        for _ in 0..60 {
+            let (_, grads) = grad_chunk(&dims, &params, &x, &y, &w);
+            adam.update(&mut params, &grads);
+        }
+        let last = loss_chunk(&dims, &params, &x, &y, &w);
+        assert!(last < 0.5 * first, "loss must drop: {first} → {last}");
+    }
+}

@@ -1,0 +1,25 @@
+//! The gradient data plane: real partial-gradient compute over the
+//! fleet's wire protocol.
+//!
+//! Three pieces, one per side of the TCP boundary plus the glue:
+//!
+//! * [`mlp`] — portable CPU forward/backward for the 3-layer MLP,
+//!   bit-deterministic, shared by workers (compute), the master
+//!   (audits, fallback decode, loss eval) and tests (reference sums).
+//! * [`dataplane`] — the master-side state: partitions, versioned
+//!   params, per-round staging of wire work units with master-resolved
+//!   GC coefficients, reassembled payloads, byzantine flags.
+//! * [`pump`] — the [`crate::sched::RoundObserver`] that folds
+//!   payloads at round close, β-decodes each paper job, audits the
+//!   code's redundancy, and steps Adam.
+//!
+//! The plane is strictly opt-in per scheduler job: jobs never
+//! configured through [`GradPump::configure_job`] keep the legacy
+//! synthetic minitask path, byte for byte.
+
+pub mod dataplane;
+pub mod mlp;
+pub mod pump;
+
+pub use dataplane::{ChunkData, DataPlane, FoldUnit, RoundEntry, SharedDataPlane};
+pub use pump::{GradConfig, GradJobSummary, GradPump};

@@ -1,0 +1,503 @@
+//! The decode side of the gradient data plane: a [`RoundObserver`]
+//! that folds worker payloads at every round close, numerically decodes
+//! each paper job the session reports complete, audits the code's
+//! redundancy for byzantine payloads, and steps Adam.
+//!
+//! This is the fleet twin of `train::trainer`'s `TrainPump`: the same
+//! coefficient and β-decode logic, but the per-chunk gradients arrive
+//! over TCP as coded payloads instead of being computed locally, so the
+//! pump never touches the dataset on the hot path — only for audits.
+
+use crate::cluster::JobId;
+use crate::coding::{CodePlanCache, Scheme, SchemeConfig, SchemeKind};
+use crate::fleet::wire::GradUnit;
+use crate::grad::dataplane::{ChunkData, FoldUnit, RoundEntry, SharedDataPlane};
+use crate::grad::mlp;
+use crate::runtime::ModelDims;
+use crate::sched::RoundObserver;
+use crate::session::{RoundPlan, SessionEvent, SgcSession};
+use crate::train::{Adam, Dataset, DatasetConfig};
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+
+/// Relative tolerance before two decodes of the same group are called
+/// inconsistent (triggers a payload audit).
+const CONSISTENCY_RTOL: f32 = 1e-3;
+
+/// Configuration of the real-gradient path for one scheduler job.
+#[derive(Clone, Debug)]
+pub struct GradConfig {
+    /// Model shapes; `chunk` is recomputed from the batch split.
+    pub dims: ModelDims,
+    /// Fixed batch the job trains on (full-batch GD per paper job, so
+    /// decoded gradients are reproducible round over round).
+    pub batch: usize,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Root seed for data generation, batch choice and init.
+    pub seed: u64,
+    /// Dataset noise level.
+    pub noise: f64,
+    /// Generated corpus size.
+    pub train_size: usize,
+}
+
+impl Default for GradConfig {
+    fn default() -> Self {
+        GradConfig {
+            dims: ModelDims { input: 64, classes: 10, hidden1: 64, hidden2: 32, chunk: 0 },
+            batch: 256,
+            lr: 2e-3,
+            seed: 7,
+            noise: 0.8,
+            train_size: 2048,
+        }
+    }
+}
+
+/// One coded result retained until its paper job decodes.
+#[derive(Clone, Debug)]
+struct CodedResult {
+    /// Encoding-matrix row (logical worker).
+    row: usize,
+    /// The coded payload segment, flat.
+    ell: Vec<f32>,
+    /// Physical seat that produced it (for flagging).
+    physical: usize,
+    /// Parameter version it was computed against.
+    version: u32,
+    /// `(chunk, coefficient)` terms the worker was told to apply.
+    terms: Vec<(u32, f64)>,
+}
+
+/// Accumulated contributions of one paper job.
+#[derive(Debug, Default)]
+struct PaperState {
+    plain: Option<Vec<f32>>,
+    delivered_chunks: HashSet<usize>,
+    coded: HashMap<usize, Vec<CodedResult>>,
+}
+
+/// Per-scheduler-job pump state.
+struct PumpJob {
+    dims: ModelDims,
+    params: Vec<Vec<f32>>,
+    opt: Adam,
+    paper: HashMap<usize, PaperState>,
+    /// Full-batch loss after each decode (index 0 = at init).
+    losses: Vec<f64>,
+    decoded: usize,
+    /// Logical rows caught corrupting payloads.
+    flagged_rows: HashSet<usize>,
+    audits: usize,
+    fallback_decodes: usize,
+}
+
+/// Loss trajectory and decode counters of one job, for reports.
+#[derive(Clone, Debug)]
+pub struct GradJobSummary {
+    /// Scheduler job id.
+    pub job: JobId,
+    /// Optimizer steps taken (paper jobs decoded).
+    pub steps: usize,
+    /// Full-batch loss at initialization.
+    pub first_loss: f64,
+    /// Full-batch loss after the last decode.
+    pub last_loss: f64,
+    /// Loss after every decode (index 0 = at init).
+    pub losses: Vec<f64>,
+    /// Payload audits triggered by inconsistent decodes.
+    pub audits: usize,
+    /// Decodes that fell back to a master-computed reference gradient.
+    pub fallback_decodes: usize,
+}
+
+/// The real-gradient decode observer (see module docs).
+pub struct GradPump {
+    dp: SharedDataPlane,
+    cfg: GradConfig,
+    jobs: HashMap<JobId, PumpJob>,
+}
+
+impl GradPump {
+    /// A pump folding payloads out of `dp`.
+    pub fn new(dp: SharedDataPlane, cfg: GradConfig) -> Self {
+        GradPump { dp, cfg, jobs: HashMap::new() }
+    }
+
+    /// The shared data plane this pump decodes from.
+    pub fn dataplane(&self) -> SharedDataPlane {
+        std::sync::Arc::clone(&self.dp)
+    }
+
+    /// Opt scheduler job `job` into the real-gradient path: generate its
+    /// dataset, shard the fixed batch into the scheme's chunks, install
+    /// partitions + initial params into the data plane.
+    pub fn configure_job(&mut self, job: JobId, scheme: &SchemeConfig) -> Result<()> {
+        let rep = matches!(
+            scheme.kind,
+            SchemeKind::GcRep { .. } | SchemeKind::SrSgcRep { .. } | SchemeKind::MSgcRep { .. }
+        );
+        let (dims, chunks, params) = build_job(&self.cfg, job, scheme);
+        let first_loss = full_loss(&dims, &params, &chunks);
+        self.dp.lock().unwrap().configure_job(
+            job as u32,
+            dims,
+            rep,
+            chunks,
+            mlp::flatten(&params),
+        );
+        self.jobs.insert(
+            job,
+            PumpJob {
+                dims,
+                opt: Adam::new(self.cfg.lr, &dims.param_lens()),
+                params,
+                paper: HashMap::new(),
+                losses: vec![first_loss],
+                decoded: 0,
+                flagged_rows: HashSet::new(),
+                audits: 0,
+                fallback_decodes: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// The exact reference trajectory the fleet path must reproduce:
+    /// plain per-chunk gradient sums (no coding), stepping the same
+    /// Adam over the same dataset, sharding and init that
+    /// [`Self::configure_job`] installs for `job`. `steps` optimizer
+    /// steps produce `steps + 1` losses (index 0 = at init). The e2e
+    /// contract — pinned by `tests/grad_fleet.rs` — is that a healthy
+    /// fleet run's decoded losses match this within float noise.
+    pub fn reference_losses(
+        cfg: &GradConfig,
+        job: JobId,
+        scheme: &SchemeConfig,
+        steps: usize,
+    ) -> Vec<f64> {
+        let (dims, chunks, mut params) = build_job(cfg, job, scheme);
+        let mut opt = Adam::new(cfg.lr, &dims.param_lens());
+        let mut losses = vec![full_loss(&dims, &params, &chunks)];
+        for _ in 0..steps {
+            let mut total = vec![0.0f32; dims.param_count()];
+            for ch in &chunks {
+                let (_, g) = mlp::grad_chunk(&dims, &params, &ch.x, &ch.y, &ch.w);
+                add_into(&mut total, &mlp::flatten(&g));
+            }
+            let grads =
+                mlp::unflatten(&dims, &total).expect("reference gradient has the param length");
+            opt.update(&mut params, &grads);
+            losses.push(full_loss(&dims, &params, &chunks));
+        }
+        losses
+    }
+
+    /// Per-job summaries for reports (sorted by job id).
+    pub fn summary(&self) -> Vec<GradJobSummary> {
+        let mut out: Vec<GradJobSummary> = self
+            .jobs
+            .iter()
+            .map(|(&job, pj)| GradJobSummary {
+                job,
+                steps: pj.decoded,
+                first_loss: pj.losses.first().copied().unwrap_or(f64::NAN),
+                last_loss: pj.losses.last().copied().unwrap_or(f64::NAN),
+                losses: pj.losses.clone(),
+                audits: pj.audits,
+                fallback_decodes: pj.fallback_decodes,
+            })
+            .collect();
+        out.sort_by_key(|s| s.job);
+        out
+    }
+
+    /// Fold the responders' payload segments of one consumed entry into
+    /// the paper-job accumulators.
+    fn fold_entry(pj: &mut PumpJob, entry: &RoundEntry, responded: &[bool]) {
+        let pc = pj.dims.param_count();
+        for (logical, &resp) in responded.iter().enumerate() {
+            if !resp {
+                continue;
+            }
+            let Some(&phys) = entry.place.get(logical) else { continue };
+            if phys >= entry.payloads.len() {
+                continue;
+            }
+            let Some(payload) = &entry.payloads[phys] else { continue };
+            let units = &entry.fold[phys];
+            if payload.len() != pc * units.len() {
+                continue; // malformed payload: treat as a non-response
+            }
+            for (k, fu) in units.iter().enumerate() {
+                let seg = &payload[k * pc..(k + 1) * pc];
+                match fu {
+                    FoldUnit::Plain { job: t, chunk } => {
+                        let st = pj.paper.entry(*t).or_default();
+                        if st.delivered_chunks.insert(*chunk) {
+                            match &mut st.plain {
+                                None => st.plain = Some(seg.to_vec()),
+                                Some(acc) => {
+                                    for (a, &v) in acc.iter_mut().zip(seg) {
+                                        *a += v;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    FoldUnit::Coded { job: t, group, row } => {
+                        let terms = match &entry.wire[phys][k] {
+                            GradUnit::Coded { terms, .. } => terms.clone(),
+                            _ => Vec::new(),
+                        };
+                        let st = pj.paper.entry(*t).or_default();
+                        let results = st.coded.entry(*group).or_default();
+                        if !results.iter().any(|r| r.row == *row) {
+                            results.push(CodedResult {
+                                row: *row,
+                                ell: seg.to_vec(),
+                                physical: phys,
+                                version: entry.param_version,
+                                terms,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode paper job `t` of scheduler job `job`, audit if the
+    /// redundancy disagrees, step Adam, publish the new params.
+    fn finalize(&mut self, job: JobId, t: usize, scheme: &dyn Scheme) -> Result<()> {
+        let n = scheme.spec().n;
+        let pj = self.jobs.get_mut(&job).expect("finalize on unconfigured job");
+        let pc = pj.dims.param_count();
+        let st = pj.paper.remove(&t).unwrap_or_default();
+        let mut total = st.plain.unwrap_or_else(|| vec![0.0f32; pc]);
+        let ledger = scheme.ledger(t);
+        let mut fallback = false;
+        for (g, &need) in ledger.coded_need.iter().enumerate() {
+            let empty = Vec::new();
+            let results = st.coded.get(&g).unwrap_or(&empty);
+            // drop results from rows already caught corrupting payloads
+            let mut clean: Vec<&CodedResult> =
+                results.iter().filter(|r| !pj.flagged_rows.contains(&r.row)).collect();
+            clean.sort_by_key(|r| r.row);
+            if need <= 1 {
+                match clean.first() {
+                    Some(r) => add_into(&mut total, &r.ell),
+                    None => fallback = true,
+                }
+                continue;
+            }
+            let s = n - need;
+            let plan = CodePlanCache::global().get(n, s);
+            let decode = |subset: &[&CodedResult]| -> Option<Vec<f32>> {
+                let rows: Vec<usize> = subset.iter().map(|r| r.row).collect();
+                let beta = plan.decode_coeffs(&rows)?;
+                let mut sum = vec![0.0f32; pc];
+                for (k, r) in subset.iter().enumerate() {
+                    let b = beta[k] as f32;
+                    for (x, &v) in sum.iter_mut().zip(&r.ell) {
+                        *x += b * v;
+                    }
+                }
+                Some(sum)
+            };
+            if clean.len() < need {
+                fallback = true;
+                continue;
+            }
+            let primary: Vec<&CodedResult> = clean[..need].to_vec();
+            let Some(mut group_sum) = decode(&primary) else {
+                fallback = true;
+                continue;
+            };
+            // Redundancy check: a spare responder lets us decode the same
+            // group from a different subset; disagreement means some
+            // payload lies, and the audit pins down which.
+            if clean.len() > need {
+                let mut alt: Vec<&CodedResult> = clean[clean.len() - need..].to_vec();
+                alt.sort_by_key(|r| r.row);
+                if let Some(alt_sum) = decode(&alt) {
+                    if !close(&group_sum, &alt_sum, CONSISTENCY_RTOL) {
+                        pj.audits += 1;
+                        let culprits = audit_group(&self.dp, job, results);
+                        for &(row, phys) in &culprits {
+                            pj.flagged_rows.insert(row);
+                            self.dp.lock().unwrap().flag_worker(phys);
+                        }
+                        let mut verified: Vec<&CodedResult> = results
+                            .iter()
+                            .filter(|r| !pj.flagged_rows.contains(&r.row))
+                            .collect();
+                        verified.sort_by_key(|r| r.row);
+                        verified.truncate(need);
+                        match (verified.len() >= need).then(|| decode(&verified)).flatten() {
+                            Some(sum) => group_sum = sum,
+                            None => {
+                                fallback = true;
+                                continue;
+                            }
+                        }
+                    }
+                }
+            }
+            add_into(&mut total, &group_sum);
+        }
+        if fallback {
+            // Not enough trustworthy payloads: the master computes the
+            // reference gradient itself so the run keeps making progress.
+            pj.fallback_decodes += 1;
+            total = reference_gradient(&self.dp, job, pj);
+        }
+        let grads = mlp::unflatten(&pj.dims, &total)
+            .ok_or_else(|| anyhow::anyhow!("decoded gradient has wrong length"))?;
+        pj.opt.update(&mut pj.params, &grads);
+        let dims = pj.dims;
+        let flat = mlp::flatten(&pj.params);
+        let loss = {
+            let mut dp = self.dp.lock().unwrap();
+            dp.set_params(job as u32, flat);
+            let jd = dp.job(job as u32).expect("configured");
+            full_loss(&dims, &pj.params, &jd.chunks)
+        };
+        pj.losses.push(loss);
+        pj.decoded += 1;
+        Ok(())
+    }
+}
+
+impl RoundObserver for GradPump {
+    fn round_closed(
+        &mut self,
+        job: JobId,
+        session: &SgcSession,
+        plan: &RoundPlan,
+        events: &[SessionEvent],
+    ) -> crate::Result<()> {
+        let entry = self.dp.lock().unwrap().take_session_round(job as u32, plan.round);
+        let Some(entry) = entry else {
+            return Ok(()); // not a real-gradient job
+        };
+        if let Some(pj) = self.jobs.get_mut(&job) {
+            Self::fold_entry(pj, &entry, session.last_responded());
+        }
+        for ev in events {
+            if let SessionEvent::JobDecoded { job: t, .. } = ev {
+                self.finalize(job, *t, session.scheme())?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Everything [`GradPump::configure_job`] derives from the config for
+/// one job: the dims (chunk capacity resolved from the scheme's batch
+/// split), the sharded fixed batch, and the initial parameters.
+fn build_job(
+    cfg: &GradConfig,
+    job: JobId,
+    scheme: &SchemeConfig,
+) -> (ModelDims, Vec<ChunkData>, Vec<Vec<f32>>) {
+    let spec_holder = scheme.build(1);
+    let spec = spec_holder.spec();
+    let data = Dataset::generate(DatasetConfig {
+        input: cfg.dims.input,
+        classes: cfg.dims.classes,
+        train_size: cfg.train_size,
+        noise: cfg.noise,
+        seed: cfg.seed ^ 0xda7a_0000 ^ job as u64,
+    });
+    let mut rng = Pcg32::new(cfg.seed ^ 0xba7c, job as u64 + 1);
+    let batch = data.sample_batch(cfg.batch, &mut rng);
+    let parts = Dataset::split_batch(&batch, &spec.chunk_sizes);
+    let chunk_cap = parts.iter().map(|p| p.len()).max().unwrap_or(1).max(1);
+    let dims = ModelDims { chunk: chunk_cap, ..cfg.dims };
+    let weight = 1.0 / batch.len() as f32;
+    let chunks: Vec<ChunkData> = parts
+        .iter()
+        .map(|idx| {
+            let (x, y, w) = data.chunk_tensors(idx, chunk_cap, weight);
+            ChunkData { rows: chunk_cap, x, y, w }
+        })
+        .collect();
+    let params = mlp::init_params(&dims, cfg.seed ^ 0x1219 ^ job as u64);
+    (dims, chunks, params)
+}
+
+/// Full-batch loss: sum of weighted chunk losses (weights are `1/batch`
+/// so this is the mean sample loss).
+fn full_loss(dims: &ModelDims, params: &[Vec<f32>], chunks: &[ChunkData]) -> f64 {
+    chunks
+        .iter()
+        .map(|c| mlp::loss_chunk(dims, params, &c.x, &c.y, &c.w) as f64)
+        .sum()
+}
+
+fn add_into(acc: &mut [f32], v: &[f32]) {
+    for (a, &x) in acc.iter_mut().zip(v) {
+        *a += x;
+    }
+}
+
+/// `‖a − b‖∞ ≤ rtol · (1 + max(‖a‖∞, ‖b‖∞))`?
+fn close(a: &[f32], b: &[f32], rtol: f32) -> bool {
+    let mut diff = 0.0f32;
+    let mut mag = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        diff = diff.max((x - y).abs());
+        mag = mag.max(x.abs()).max(y.abs());
+    }
+    diff <= rtol * (1.0 + mag)
+}
+
+/// Recompute every result's expected coded payload from the master's own
+/// partitions and flag the ones that do not match. Returns
+/// `(row, physical)` culprits.
+fn audit_group(
+    dp: &SharedDataPlane,
+    job: JobId,
+    results: &[CodedResult],
+) -> Vec<(usize, usize)> {
+    let dp = dp.lock().unwrap();
+    let Some(jd) = dp.job(job as u32) else { return Vec::new() };
+    let mut chunk_grads: HashMap<(u32, u32), Vec<f32>> = HashMap::new();
+    let mut culprits = Vec::new();
+    for r in results {
+        let Some(params_flat) = jd.params_at(r.version) else { continue };
+        let Some(params) = mlp::unflatten(&jd.dims, params_flat) else { continue };
+        let mut expected = vec![0.0f32; jd.dims.param_count()];
+        for &(c, coeff) in &r.terms {
+            let grads = chunk_grads.entry((c, r.version)).or_insert_with(|| {
+                let ch = &jd.chunks[c as usize % jd.chunks.len()];
+                let (_, g) = mlp::grad_chunk(&jd.dims, &params, &ch.x, &ch.y, &ch.w);
+                mlp::flatten(&g)
+            });
+            for (e, &g) in expected.iter_mut().zip(grads.iter()) {
+                *e += coeff as f32 * g;
+            }
+        }
+        if !close(&expected, &r.ell, CONSISTENCY_RTOL) {
+            culprits.push((r.row, r.physical));
+        }
+    }
+    culprits
+}
+
+/// The master's own full-batch gradient at the current params — the
+/// degraded-decode fallback when payloads cannot be trusted or are
+/// insufficient.
+fn reference_gradient(dp: &SharedDataPlane, job: JobId, pj: &PumpJob) -> Vec<f32> {
+    let dp = dp.lock().unwrap();
+    let mut total = vec![0.0f32; pj.dims.param_count()];
+    let Some(jd) = dp.job(job as u32) else { return total };
+    for ch in &jd.chunks {
+        let (_, g) = mlp::grad_chunk(&pj.dims, &pj.params, &ch.x, &ch.y, &ch.w);
+        add_into(&mut total, &mlp::flatten(&g));
+    }
+    total
+}

@@ -146,6 +146,7 @@ pub mod coding;
 pub mod coordinator;
 pub mod experiments;
 pub mod fleet;
+pub mod grad;
 pub mod obs;
 pub mod probe;
 pub mod runtime;

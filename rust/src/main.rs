@@ -10,6 +10,7 @@
 //!            [--profile-decay D] [--regime-shift R]
 //!            [--metrics ADDR] [--metrics-hold S] [--journal PATH]
 //!            [--report-json PATH] [--chaos SPEC] [--chaos-seed S]
+//!            [--real-grad]
 //! sgc trace  export --journal PATH [--out PATH]
 //! sgc worker --master HOST:PORT --id K [--chaos-seed S]
 //! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
@@ -34,6 +35,13 @@
 //! admitted (absent = forever), and `--reap-after S` retires workers
 //! whose heartbeats stay silent. See `rust/docs/OPERATIONS.md`.
 //!
+//! `--real-grad` (fleet only) puts every served job on the gradient
+//! data plane (`sgc::grad`): the master ships dataset partitions and
+//! versioned parameters to the workers, workers compute real coded
+//! partial gradients over TCP, and the master β-decodes the batch
+//! gradient and steps Adam at every paper-job decode — printing each
+//! job's loss trajectory alongside the protocol report.
+//!
 //! `--adapt` turns on the adaptive control plane (`sgc::adapt`): the
 //! scheduler profiles live arrivals, re-fits `(B, W, λ)` in the
 //! background (`--refit-budget` candidates per round close), and
@@ -48,6 +56,7 @@ use sgc::cluster::{Cluster, EventCluster, RecordingCluster, RunTrace, SimCluster
 use sgc::coding::SchemeConfig;
 use sgc::coordinator::RunReport;
 use sgc::fleet::{self, ChaosConfig, FleetCluster, LoopbackFleet, MembershipConfig, WorkerConfig};
+use sgc::grad::{DataPlane, GradConfig, GradJobSummary, GradPump};
 use sgc::probe::{grid_search, DelayProfile, SearchSpace};
 use sgc::sched::{
     self, DisjointPlacement, JobScheduler, JobSpec, PlacementPolicy, RoundRobinPlacement,
@@ -90,6 +99,7 @@ fn main() -> anyhow::Result<()> {
                               [--profile-decay D] [--regime-shift R (sim only)]\n\
                  chaos:       serve --chaos crash@r2,hang@r4:w1,shrink@r6:2 [--chaos-seed S]\n\
                               (kinds: crash hang byz part rejoin shrink; deterministic per seed)\n\
+                 gradients:   serve --fleet K --real-grad — real coded partial gradients\n\
                  observe:     serve [--metrics ADDR (fleet)] [--metrics-hold S]\n\
                               [--journal PATH] [--report-json PATH]; --verbose anywhere\n\
                               sgc trace export --journal PATH [--out PATH] (Chrome JSON)\n\
@@ -316,12 +326,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         fleet_n.is_some() || !args.has("metrics"),
         "--metrics needs a TCP fleet (--fleet N): the simulator has no reactor to serve scrapes"
     );
+    // --real-grad: put every job on the gradient data plane — real
+    // partitions, params and coded partial gradients over the wire
+    // (sgc::grad module docs + OPERATIONS.md §real gradients).
+    let real_grad = args.has("real-grad");
+    anyhow::ensure!(
+        fleet_n.is_some() || !real_grad,
+        "--real-grad needs a TCP fleet (--fleet N): partitions and gradients ship over the wire"
+    );
     let obs = if args.has("metrics") || args.has("journal") {
         Some(std::sync::Arc::new(sgc::obs::Obs::new()))
     } else {
         None
     };
 
+    let mut grad_summaries: Option<Vec<GradJobSummary>> = None;
     let out: ScheduleReport = match fleet_n {
         Some(k) => {
             // --- one shared loopback TCP fleet for every session ---
@@ -348,6 +367,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 let bound = fleet.cluster.serve_metrics(addr)?;
                 println!("metrics: http://{bound}/metrics");
             }
+            // The pump owns the decode/optimizer side; the same shared
+            // data plane is handed to the master (partition/param
+            // shipping, payload reassembly) and the scheduler (round
+            // staging).
+            let mut pump = real_grad.then(|| {
+                GradPump::new(DataPlane::shared(), GradConfig { seed, ..Default::default() })
+            });
+            if let Some(p) = &pump {
+                fleet.cluster.set_dataplane(p.dataplane());
+            }
             let out = {
                 let mut sched = JobScheduler::with_policy(&mut fleet.cluster, policy()?);
                 if let Some(acfg) = adaptive.clone() {
@@ -356,11 +385,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 if let Some(o) = &obs {
                     sched.set_obs(o.clone());
                 }
-                for _ in 0..jobs {
-                    sched.admit(&spec)?;
+                if let Some(p) = &pump {
+                    sched.set_dataplane(p.dataplane());
                 }
-                sched.run()?
+                for _ in 0..jobs {
+                    let j = sched.admit(&spec)?;
+                    if let Some(p) = &mut pump {
+                        p.configure_job(j, &spec.scheme)?;
+                    }
+                }
+                match &mut pump {
+                    Some(p) => sched.run_observed(p)?,
+                    None => sched.run()?,
+                }
             };
+            if let Some(p) = &pump {
+                grad_summaries = Some(p.summary());
+            }
             // --metrics-hold S: keep the reactor pumping (and serving
             // /metrics scrapes) for S more seconds so an external
             // scraper can read the final series before shutdown.
@@ -437,9 +478,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     for sw in &out.swaps {
         println!("swap: {sw}");
     }
+    if let Some(sums) = &grad_summaries {
+        for s in sums {
+            println!(
+                "job {}: loss {:.4} → {:.4} over {} optimizer steps (audits={} fallbacks={})",
+                s.job, s.first_loss, s.last_loss, s.steps, s.audits, s.fallback_decodes
+            );
+        }
+    }
     println!("{}", out.utilization);
     if let Some(path) = args.options.get("report-json") {
-        out.to_json().save(path)?;
+        let mut doc = out.to_json();
+        if let Some(sums) = &grad_summaries {
+            doc.set("grad", sgc::util::json::Json::Arr(sums.iter().map(grad_json).collect()));
+        }
+        doc.save(path)?;
         println!("report → {path}");
     }
     if let Some(o) = &obs {
@@ -468,6 +521,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(undecoded == 0, "{undecoded} session jobs never became decodable");
     }
     Ok(())
+}
+
+/// One `--report-json` entry per real-gradient job: the loss trajectory
+/// and decode counters of a [`GradJobSummary`].
+fn grad_json(s: &GradJobSummary) -> sgc::util::json::Json {
+    use sgc::util::json::Json;
+    let mut o = Json::obj();
+    o.set("job", s.job)
+        .set("steps", s.steps)
+        .set("first_loss", s.first_loss)
+        .set("last_loss", s.last_loss)
+        .set("audits", s.audits)
+        .set("fallback_decodes", s.fallback_decodes)
+        .set("losses", Json::Arr(s.losses.iter().map(|&l| Json::from(l)).collect()));
+    o
 }
 
 /// Export a saved journal (`sgc serve --journal PATH`) as Chrome Trace

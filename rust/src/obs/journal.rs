@@ -90,10 +90,19 @@ pub enum EventKind {
     /// worker or `-1`, `value` = fault-kind discriminant — see
     /// [`crate::chaos::FaultKind`]).
     ChaosFault,
+    /// The master shipped a dataset partition to a worker (`worker` =
+    /// physical id, `value` = flat f32 count).
+    PartitionSent,
+    /// The master broadcast model parameters to a worker (`worker` =
+    /// physical id, `value` = parameter version).
+    ParamBroadcast,
+    /// The gradient data plane reconstructed a full batch gradient for
+    /// a decoded paper-job (`round` = paper-job index).
+    GradientDecoded,
 }
 
 /// Every kind, for iteration and parsing.
-const ALL_KINDS: [EventKind; 23] = [
+const ALL_KINDS: [EventKind; 26] = [
     EventKind::RoundAssign,
     EventKind::WorkerArrive,
     EventKind::CutDecision,
@@ -117,6 +126,9 @@ const ALL_KINDS: [EventKind; 23] = [
     EventKind::JobQuarantine,
     EventKind::DegradedRound,
     EventKind::ChaosFault,
+    EventKind::PartitionSent,
+    EventKind::ParamBroadcast,
+    EventKind::GradientDecoded,
 ];
 
 impl EventKind {
@@ -146,6 +158,9 @@ impl EventKind {
             EventKind::JobQuarantine => "job_quarantine",
             EventKind::DegradedRound => "degraded_round",
             EventKind::ChaosFault => "chaos_fault",
+            EventKind::PartitionSent => "partition_sent",
+            EventKind::ParamBroadcast => "param_broadcast",
+            EventKind::GradientDecoded => "gradient_decoded",
         }
     }
 

@@ -80,6 +80,7 @@ use crate::adapt::{AdaptiveConfig, AdaptiveController, SchemeSwapped};
 use crate::cluster::{ClusterEvent, EventCluster, JobId, UNPLACED};
 use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::{merge_segments, RunReport};
+use crate::grad::dataplane::SharedDataPlane;
 use crate::obs::{Counter, EventKind, Gauge, Histogram, Obs};
 use crate::session::{RoundPlan, SessionConfig, SessionEvent, SgcSession, WaitPolicy};
 use crate::util::json::Json;
@@ -546,6 +547,9 @@ pub struct JobScheduler<'c> {
     adapt: Option<AdaptiveController>,
     /// Observability handles, when attached (see [`crate::obs`]).
     obs: Option<SchedObs>,
+    /// The gradient data plane, when real-gradient jobs are admitted
+    /// (see [`Self::set_dataplane`]).
+    dp: Option<SharedDataPlane>,
     /// Hot-swaps executed so far, in execution order.
     swaps: Vec<SchemeSwapped>,
     // --- utilization counters ---
@@ -581,6 +585,7 @@ impl<'c> JobScheduler<'c> {
             failure: FailurePolicy::default(),
             adapt: None,
             obs: None,
+            dp: None,
             swaps: Vec::new(),
             done_events: 0,
             dead_events: 0,
@@ -609,6 +614,18 @@ impl<'c> JobScheduler<'c> {
     /// shape, degrade escalation). Call before [`run`](Self::run).
     pub fn set_failure_policy(&mut self, policy: FailurePolicy) {
         self.failure = policy;
+    }
+
+    /// Attach the gradient data plane (see [`crate::grad`]): every round
+    /// start of a job the plane was configured for stages the round's
+    /// wire work units — with the GC coefficients resolved master-side
+    /// and the parameter version pinned — *before* the cluster fan-out,
+    /// so a fleet backend finds the entry when it ships assignments.
+    /// Jobs the plane does not know keep the synthetic path untouched.
+    /// Share the same handle with the fleet master and the
+    /// [`GradPump`](crate::grad::GradPump) observer.
+    pub fn set_dataplane(&mut self, dp: SharedDataPlane) {
+        self.dp = Some(dp);
     }
 
     /// Attach an observability bundle (see [`crate::obs`]): per-job
@@ -1130,9 +1147,25 @@ impl<'c> JobScheduler<'c> {
                         rec.duration_s,
                     );
                 }
+                // Real-gradient jobs additionally journal the data-plane
+                // decode event, so operators can line gradient
+                // reconstruction up against the protocol-level decode.
+                let grad_job = self.dp.as_ref().is_some_and(|dp| {
+                    dp.lock().expect("data plane lock poisoned").is_grad_job(j as u32)
+                });
                 for ev in &events {
                     if let SessionEvent::JobDecoded { job, .. } = ev {
                         so.obs.journal.record(now, EventKind::JobDecode, jid, *job as i64, -1, 0.0);
+                        if grad_job {
+                            so.obs.journal.record(
+                                now,
+                                EventKind::GradientDecoded,
+                                jid,
+                                *job as i64,
+                                -1,
+                                0.0,
+                            );
+                        }
                     }
                 }
             }
@@ -1454,6 +1487,20 @@ impl<'c> JobScheduler<'c> {
             slot.inv.resize(cap, usize::MAX);
             for (logical, &p) in slot.place.iter().enumerate() {
                 slot.inv[p] = logical;
+            }
+            // Stage the gradient-data-plane round BEFORE the cluster
+            // fan-out: a fleet backend resolves its GradAssign frames
+            // from this entry inside `submit`. No-op for jobs the plane
+            // was never configured for.
+            if let Some(dp) = &self.dp {
+                dp.lock().expect("data plane lock poisoned").stage_round(
+                    j as u32,
+                    slot.round,
+                    session.scheme(),
+                    &slot.plan,
+                    &slot.place,
+                    cap,
+                );
             }
             if let Some(ad) = self.adapt.as_mut() {
                 ad.register_round(j, slot.round, &slot.place, &slot.plan.loads);

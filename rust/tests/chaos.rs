@@ -7,6 +7,7 @@ use sgc::chaos::{ChaosPlan, FaultKind};
 use sgc::cluster::SimCluster;
 use sgc::coding::SchemeConfig;
 use sgc::fleet::LoopbackFleet;
+use sgc::grad::{DataPlane, GradConfig, GradPump};
 use sgc::sched::{JobScheduler, JobSpec, JobStatus, ScheduleReport};
 use sgc::session::SessionConfig;
 use sgc::straggler::GilbertElliot;
@@ -155,7 +156,12 @@ fn sim_wait_all_jobs_degrade_in_isolation_instead_of_failing_the_run() {
 }
 
 /// One multi-job loopback-fleet run under the given chaos spec: 2 jobs
-/// of a 1-straggler-tolerant GC scheme over 4 real TCP workers.
+/// of a 1-straggler-tolerant GC scheme over 4 real TCP workers, both
+/// jobs on the real-gradient data plane — so every fault kind is also
+/// exercised against partition shipping, param broadcast and coded
+/// payload decode (byzantine in particular only manifests there: the
+/// scripted liar sign-flips its gradient payloads and must be caught by
+/// the code's redundancy, audited and retired).
 fn fleet_run(spec: &str) -> ScheduleReport {
     let n = 4;
     let plan = ChaosPlan::parse(spec, 0xf1ee7).expect("parse chaos spec").resolve(n);
@@ -172,15 +178,23 @@ fn fleet_run(spec: &str) -> ScheduleReport {
         reap_after: Duration::from_secs(2),
         ..Default::default()
     });
+    let mut pump = GradPump::new(
+        DataPlane::shared(),
+        GradConfig { seed: 0xf1ee7, batch: 64, train_size: 256, ..Default::default() },
+    );
+    fleet.cluster.set_dataplane(pump.dataplane());
     let out = {
         let mut sched = JobScheduler::new(&mut fleet.cluster);
+        sched.set_dataplane(pump.dataplane());
         let spec = JobSpec {
             scheme: SchemeConfig::gc(n, 1),
             session: SessionConfig { jobs: 4, ..Default::default() },
         };
-        sched.admit(&spec).expect("admit 0");
-        sched.admit(&spec).expect("admit 1");
-        sched.run().expect("fleet run survives scripted chaos")
+        let j0 = sched.admit(&spec).expect("admit 0");
+        pump.configure_job(j0, &spec.scheme).expect("configure 0");
+        let j1 = sched.admit(&spec).expect("admit 1");
+        pump.configure_job(j1, &spec.scheme).expect("configure 1");
+        sched.run_observed(&mut pump).expect("fleet run survives scripted chaos")
     };
     // drain stragglers' late results so workers are idle at Shutdown
     let _ = fleet.cluster.finish_trace(Duration::from_secs(5), 1.0);
@@ -223,7 +237,8 @@ fn fleet_byzantine_worker_is_retired_and_the_run_completes() {
         "{:?}",
         out.outcomes
     );
-    // the corrupted Result got the worker retired for good
+    // the corrupted gradient payloads failed the redundancy audit and
+    // got the worker retired for good
     assert!(out.utilization.worker_retired_events >= 1, "{}", out.utilization);
 }
 

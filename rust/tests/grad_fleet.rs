@@ -1,0 +1,233 @@
+//! End-to-end tests of the real gradient data plane over a loopback TCP
+//! fleet: partitions ship to workers, workers compute coded partial
+//! gradients with the real MLP, the master β-decodes and steps Adam —
+//! and the result must match the plain uncoded gradient sum, survive
+//! worker loss with re-placement onto a late-joining spare, and reject
+//! incompatible (v1) peers with a clear error frame.
+
+use sgc::cluster::EventCluster;
+use sgc::coding::SchemeConfig;
+use sgc::fleet::wire::{read_frame, ERR_BAD_VERSION};
+use sgc::fleet::{Frame, LoopbackFleet, MembershipConfig, WireError, WorkerConfig};
+use sgc::grad::{DataPlane, GradConfig, GradPump};
+use sgc::obs::{EventKind, Obs};
+use sgc::sched::{JobScheduler, JobSpec, JobStatus};
+use sgc::session::SessionConfig;
+use std::io::Write;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The small-but-real training config the tests share: 64-sample fixed
+/// batch over a 4-chunk shard keeps each worker's forward/backward well
+/// under the loopback round budget.
+fn grad_cfg(seed: u64) -> GradConfig {
+    GradConfig { seed, batch: 64, train_size: 512, ..Default::default() }
+}
+
+/// Relative loss-trajectory comparison against the uncoded reference.
+fn assert_losses_match(fleet_losses: &[f64], reference: &[f64]) {
+    assert_eq!(fleet_losses.len(), reference.len(), "trajectory lengths differ");
+    for (i, (a, b)) in fleet_losses.iter().zip(reference).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+            "step {i}: fleet loss {a} vs uncoded reference {b}"
+        );
+    }
+}
+
+#[test]
+fn decoded_coded_sums_match_the_uncoded_reference() {
+    // gc(4, 1): every round's gradient reaches the master only as coded
+    // payloads (β-decoded from 3-of-4 responders). The resulting loss
+    // trajectory must match exact full-batch GD — the plain per-chunk
+    // sum with no coding — within float noise.
+    let n = 4;
+    let scheme = SchemeConfig::gc(n, 1);
+    let cfg = grad_cfg(0x9e2e);
+    let mut fleet = LoopbackFleet::spawn(n, None).expect("spawn fleet");
+    let mut pump = GradPump::new(DataPlane::shared(), cfg.clone());
+    fleet.cluster.set_dataplane(pump.dataplane());
+    let out = {
+        let mut sched = JobScheduler::new(&mut fleet.cluster);
+        sched.set_dataplane(pump.dataplane());
+        let spec = JobSpec {
+            scheme: scheme.clone(),
+            session: SessionConfig { jobs: 4, ..Default::default() },
+        };
+        let j = sched.admit(&spec).expect("admit");
+        pump.configure_job(j, &scheme).expect("configure");
+        sched.run_observed(&mut pump).expect("fleet run")
+    };
+    let _ = fleet.cluster.finish_trace(Duration::from_secs(5), 1.0);
+    fleet.shutdown().expect("clean shutdown");
+
+    assert!(out.outcomes.iter().all(|o| o.status == JobStatus::Completed), "{:?}", out.outcomes);
+    let sums = pump.summary();
+    assert_eq!(sums.len(), 1);
+    let s = &sums[0];
+    assert_eq!(s.steps, 4, "every paper job must decode into an optimizer step");
+    assert_eq!(s.fallback_decodes, 0, "the wire payloads must carry the decode, not the fallback");
+    assert_eq!(s.audits, 0, "healthy workers must not trip the redundancy audit");
+    let reference = GradPump::reference_losses(&cfg, s.job, &scheme, s.steps);
+    assert_losses_match(&s.losses, &reference);
+}
+
+#[test]
+fn loss_strictly_decreases_over_twenty_rounds() {
+    let n = 4;
+    let scheme = SchemeConfig::gc(n, 1);
+    let cfg = grad_cfg(0x10_55);
+    let mut fleet = LoopbackFleet::spawn(n, None).expect("spawn fleet");
+    let mut pump = GradPump::new(DataPlane::shared(), cfg);
+    fleet.cluster.set_dataplane(pump.dataplane());
+    let out = {
+        let mut sched = JobScheduler::new(&mut fleet.cluster);
+        sched.set_dataplane(pump.dataplane());
+        let spec = JobSpec {
+            scheme: scheme.clone(),
+            session: SessionConfig { jobs: 20, ..Default::default() },
+        };
+        let j = sched.admit(&spec).expect("admit");
+        pump.configure_job(j, &scheme).expect("configure");
+        sched.run_observed(&mut pump).expect("fleet run")
+    };
+    let _ = fleet.cluster.finish_trace(Duration::from_secs(5), 1.0);
+    fleet.shutdown().expect("clean shutdown");
+
+    assert!(out.outcomes.iter().all(|o| o.status == JobStatus::Completed), "{:?}", out.outcomes);
+    let sums = pump.summary();
+    let s = &sums[0];
+    assert_eq!(s.steps, 20);
+    assert_eq!(s.losses.len(), 21, "20 steps = 21 losses including init");
+    for w in s.losses.windows(2) {
+        assert!(
+            w[1] < w[0],
+            "full-batch GD at this lr must descend strictly: {:?}",
+            s.losses
+        );
+    }
+}
+
+#[test]
+fn replacement_spare_fetches_partitions_and_the_decode_is_unchanged() {
+    // Worker 2 dies after three served rounds; a late-joined spare
+    // (id 4) takes over its logical seat. The master must ship the
+    // spare the job spec, the missing partitions and the *current*
+    // params before its first GradAssign — and the decoded trajectory
+    // must stay byte-for-byte on the uncoded reference, crash and all.
+    let n = 4;
+    let scheme = SchemeConfig::gc(n, 1);
+    let cfg = grad_cfg(0x51a2e);
+    let mut fleet = LoopbackFleet::spawn_with(n, |id, addr| {
+        let mut c = WorkerConfig::loopback(id, addr.to_string(), None);
+        if id == 2 {
+            c.fail_after_rounds = Some(3);
+        }
+        c
+    })
+    .expect("spawn fleet");
+    fleet.cluster.set_membership(MembershipConfig {
+        reap_after: Duration::from_secs(1),
+        ..Default::default()
+    });
+    fleet.join_worker(WorkerConfig::loopback(n as u32, String::new(), None));
+    let obs = Arc::new(Obs::new());
+    fleet.cluster.set_obs(obs.clone());
+    let mut pump = GradPump::new(DataPlane::shared(), cfg.clone());
+    fleet.cluster.set_dataplane(pump.dataplane());
+    let out = {
+        let mut sched = JobScheduler::new(&mut fleet.cluster);
+        sched.set_obs(obs.clone());
+        sched.set_dataplane(pump.dataplane());
+        let spec = JobSpec {
+            scheme: scheme.clone(),
+            session: SessionConfig { jobs: 12, ..Default::default() },
+        };
+        let j = sched.admit(&spec).expect("admit");
+        pump.configure_job(j, &scheme).expect("configure");
+        sched.run_observed(&mut pump).expect("fleet run")
+    };
+    let _ = fleet.cluster.finish_trace(Duration::from_secs(5), 1.0);
+    fleet.shutdown().expect("clean shutdown");
+
+    assert!(out.outcomes.iter().all(|o| o.status == JobStatus::Completed), "{:?}", out.outcomes);
+    assert!(out.utilization.worker_retired_events >= 1, "{}", out.utilization);
+    let events = obs.journal.snapshot();
+    assert!(
+        events.iter().any(|e| e.kind == EventKind::Replacement),
+        "the dead seat must be re-placed onto the spare"
+    );
+    assert!(
+        events.iter().any(|e| e.kind == EventKind::PartitionSent && e.worker == n as i64),
+        "the spare (worker {n}) must be shipped the partitions it lacks"
+    );
+    assert!(
+        events.iter().any(|e| e.kind == EventKind::ParamBroadcast && e.worker == n as i64),
+        "the spare (worker {n}) must be shipped the current params"
+    );
+    assert!(
+        events.iter().any(|e| e.kind == EventKind::GradientDecoded),
+        "real-gradient decodes must be journaled"
+    );
+    let sums = pump.summary();
+    let s = &sums[0];
+    assert_eq!(s.steps, 12);
+    assert_eq!(s.fallback_decodes, 0, "re-placement must not force the master-side fallback");
+    let reference = GradPump::reference_losses(&cfg, s.job, &scheme, s.steps);
+    assert_losses_match(&s.losses, &reference);
+}
+
+#[test]
+fn master_rejects_a_v1_hello_with_a_clear_error_frame() {
+    // An old (v1) worker dialing a v2 master must receive a readable
+    // Error frame — never a panic, never a silent hangup.
+    let n = 2;
+    let mut fleet = LoopbackFleet::spawn(n, None).expect("spawn fleet");
+    let addr = fleet.cluster.addr().to_string();
+    let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .expect("set timeout");
+    // a v1 Hello: identical layout, version byte 1
+    let mut bytes = Frame::Hello { worker_id: 9 }.encode();
+    bytes[4] = 1;
+    stream.write_all(&bytes).expect("send v1 hello");
+    stream.flush().expect("flush");
+    // single-threaded reactor: pump it until the farewell arrives
+    let mut reply = None;
+    for _ in 0..100 {
+        let now = fleet.cluster.now_s();
+        let _ = fleet.cluster.poll(now + 0.02);
+        match read_frame(&mut stream) {
+            Ok(f) => {
+                reply = Some(f);
+                break;
+            }
+            Err(WireError::Io(_)) => continue, // timeout: not processed yet
+            Err(e) => panic!("expected an Error frame, got {e}"),
+        }
+    }
+    match reply {
+        Some(Frame::Error { code, msg }) => {
+            assert_eq!(code, ERR_BAD_VERSION);
+            assert!(msg.contains("version"), "unhelpful rejection: {msg:?}");
+        }
+        other => panic!("expected an Error frame, got {other:?}"),
+    }
+    // …and the master then hangs up on us (possibly after a last poll)
+    let mut closed = false;
+    for _ in 0..100 {
+        let now = fleet.cluster.now_s();
+        let _ = fleet.cluster.poll(now + 0.02);
+        match read_frame(&mut stream) {
+            Err(WireError::Closed) => {
+                closed = true;
+                break;
+            }
+            Err(WireError::Io(_)) => continue,
+            other => panic!("expected the connection to close, got {other:?}"),
+        }
+    }
+    assert!(closed, "master kept the incompatible connection open");
+    fleet.shutdown().expect("healthy workers still shut down");
+}

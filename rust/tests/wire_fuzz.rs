@@ -4,10 +4,12 @@
 //! the master's reactor feeds attacker-controlled bytes straight into
 //! these paths.
 
+use sgc::fleet::wire::{GradUnit, TensorAssembly, MAX_TENSOR_FLOATS};
 use sgc::fleet::{Frame, FrameBuffer};
 use sgc::util::rng::Pcg32;
 
-/// The valid-frame corpus the mutations start from.
+/// The valid-frame corpus the mutations start from — every v1 frame
+/// plus the v2 gradient data-plane frames, with NaN/Inf/extreme payloads.
 fn corpus() -> Vec<Frame> {
     vec![
         Frame::Hello { worker_id: 0 },
@@ -19,6 +21,71 @@ fn corpus() -> Vec<Frame> {
         Frame::Result { worker_id: 0, round: 0, compute_s: f64::NAN, checksum: 0 },
         Frame::Heartbeat { worker_id: 12, round: 4096 },
         Frame::Shutdown,
+        Frame::Error { code: 0, msg: String::new() },
+        Frame::Error { code: u8::MAX, msg: "wire version 1 (expected 2)".into() },
+        Frame::JobSpec { job: 0, input: 64, classes: 10, hidden1: 64, hidden2: 32 },
+        Frame::JobSpec {
+            job: u32::MAX,
+            input: u32::MAX,
+            classes: 0,
+            hidden1: 1,
+            hidden2: u32::MAX,
+        },
+        Frame::Partition { job: 1, chunk: 0, rows: 4, off: 0, total: 0, data: vec![] },
+        Frame::Partition {
+            job: 1,
+            chunk: 3,
+            rows: 2,
+            off: 8,
+            total: MAX_TENSOR_FLOATS,
+            data: vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1e-38, f32::MAX],
+        },
+        Frame::Params { job: 2, version: 1, off: 0, total: 3, data: vec![0.5, -0.5, 0.0] },
+        Frame::Params {
+            job: 2,
+            version: u32::MAX,
+            off: MAX_TENSOR_FLOATS,
+            total: MAX_TENSOR_FLOATS,
+            data: vec![],
+        },
+        Frame::GradAssign {
+            job: 3,
+            round: 9,
+            param_version: 2,
+            work_units: 0.125,
+            units: vec![
+                GradUnit::Plain { job: 0, chunk: 7 },
+                GradUnit::Coded { job: 1, terms: vec![(0, f64::NAN), (3, f64::INFINITY)] },
+                GradUnit::Coded { job: 2, terms: vec![] },
+            ],
+        },
+        Frame::GradAssign {
+            job: u32::MAX,
+            round: u32::MAX,
+            param_version: u32::MAX,
+            work_units: f64::NEG_INFINITY,
+            units: vec![],
+        },
+        Frame::GradResult {
+            worker_id: 3,
+            job: 1,
+            round: 5,
+            param_version: 2,
+            compute_s: f64::NAN,
+            off: 0,
+            total: 4,
+            data: vec![f32::NAN, -f32::INFINITY, 0.0, 2.5],
+        },
+        Frame::GradResult {
+            worker_id: 0,
+            job: 0,
+            round: 0,
+            param_version: 0,
+            compute_s: 0.0,
+            off: 0,
+            total: 0,
+            data: vec![],
+        },
     ]
 }
 
@@ -138,6 +205,79 @@ fn adversarial_length_prefixes_never_allocate_unboundedly() {
             bytes.push(rng.next_u32() as u8);
         }
         exercise_all_decoders(&bytes);
+    }
+}
+
+#[test]
+fn tensor_header_mutations_never_allocate_unboundedly() {
+    // mutate the off/total/float-count headers of every tensor-bearing
+    // frame through hostile values; decode must reject (or produce a
+    // harmless frame) without trusting the lying prefix
+    let frames = vec![
+        Frame::Partition { job: 1, chunk: 2, rows: 3, off: 0, total: 4, data: vec![1.0; 4] },
+        Frame::Params { job: 1, version: 7, off: 0, total: 4, data: vec![1.0; 4] },
+        Frame::GradResult {
+            worker_id: 2,
+            job: 1,
+            round: 3,
+            param_version: 7,
+            compute_s: 0.01,
+            off: 0,
+            total: 4,
+            data: vec![1.0; 4],
+        },
+    ];
+    for frame in frames {
+        let base = frame.encode();
+        // the off/total/count words are the 12 bytes before the floats
+        let data_off = base.len() - 4 * 4;
+        for field in 0..3 {
+            let at = data_off - 12 + 4 * field;
+            for hostile in [5u32, 1000, MAX_TENSOR_FLOATS, MAX_TENSOR_FLOATS + 1, u32::MAX] {
+                let mut bytes = base.clone();
+                bytes[at..at + 4].copy_from_slice(&hostile.to_le_bytes());
+                exercise_all_decoders(&bytes);
+            }
+        }
+    }
+}
+
+#[test]
+fn tensor_assembly_rejects_hostile_slices_without_overallocating() {
+    // a lying `total` is clamped at construction: a hostile peer cannot
+    // make the receiver reserve more than MAX_TENSOR_FLOATS
+    let mut asm = TensorAssembly::new(u32::MAX);
+    assert!(asm.accept(0, &[1.0, 2.0]).is_ok());
+    // out-of-order and overlapping slices are framing errors
+    let mut asm = TensorAssembly::new(8);
+    assert!(asm.accept(4, &[0.0; 4]).is_err(), "out-of-order slice accepted");
+    assert!(!asm.accept(0, &[0.0; 4]).unwrap());
+    assert!(asm.accept(0, &[0.0; 4]).is_err(), "overlapping slice accepted");
+    assert!(asm.accept(4, &[0.0; 8]).is_err(), "overrunning slice accepted");
+    assert!(asm.accept(4, &[0.0; 4]).unwrap(), "completing slice rejected");
+}
+
+#[test]
+fn grad_assign_term_mutations_never_panic() {
+    let frame = Frame::GradAssign {
+        job: 1,
+        round: 2,
+        param_version: 3,
+        work_units: 0.5,
+        units: vec![
+            GradUnit::Coded { job: 0, terms: vec![(0, 1.0), (1, -1.0), (2, 0.5)] },
+            GradUnit::Plain { job: 0, chunk: 9 },
+        ],
+    };
+    let base = frame.encode();
+    // walk a hostile u32 through every aligned offset of the body: this
+    // sweeps the unit count, unit kinds, term counts and term chunks
+    for at in (6..base.len() - 4).step_by(4) {
+        for hostile in [0u32, 3, 255, 1 << 16, u32::MAX] {
+            let mut bytes = base.clone();
+            bytes[at..at + 4].copy_from_slice(&hostile.to_le_bytes());
+            exercise_all_decoders(&bytes);
+        }
     }
 }
 
