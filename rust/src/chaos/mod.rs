@@ -61,6 +61,13 @@ pub enum FaultKind {
     /// Fleet shrink: `count` workers are retired at once — the
     /// below-tolerance trigger for degraded-mode decode.
     Shrink,
+    /// Admission burst (`adm@rR:K`): `count` synthetic job submissions
+    /// arrive at once when the serving loop has closed `round` cluster
+    /// rounds — the scripted overload that exercises queue bounds,
+    /// load-shedding and preemption. Routed to the serving loop's
+    /// admission source ([`ResolvedPlan::admission_faults`]), not to
+    /// the cluster backends.
+    AdmissionBurst,
 }
 
 impl FaultKind {
@@ -73,6 +80,7 @@ impl FaultKind {
             FaultKind::Partition => 3,
             FaultKind::Reconnect => 4,
             FaultKind::Shrink => 5,
+            FaultKind::AdmissionBurst => 6,
         }
     }
 
@@ -85,6 +93,7 @@ impl FaultKind {
             FaultKind::Partition => "partition",
             FaultKind::Reconnect => "reconnect",
             FaultKind::Shrink => "shrink",
+            FaultKind::AdmissionBurst => "adm",
         }
     }
 
@@ -96,6 +105,7 @@ impl FaultKind {
             "partition" | "part" => FaultKind::Partition,
             "reconnect" | "rejoin" => FaultKind::Reconnect,
             "shrink" => FaultKind::Shrink,
+            "adm" | "burst" => FaultKind::AdmissionBurst,
             _ => return None,
         })
     }
@@ -149,7 +159,7 @@ impl ChaosPlan {
             let kind = FaultKind::parse(kind_s).ok_or_else(|| {
                 anyhow::anyhow!(
                     "chaos entry {entry:?}: unknown fault {kind_s:?} \
-                     (crash|hang|byzantine|partition|reconnect|shrink)"
+                     (crash|hang|byzantine|partition|reconnect|shrink|adm)"
                 )
             })?;
             let mut parts = rest.split(':');
@@ -195,6 +205,8 @@ impl ChaosPlan {
         for (i, f) in self.faults.iter().enumerate() {
             let mut rng = Pcg32::new(self.seed ^ 0xc4a0_5eed, (i as u64) << 8 | 0x3f);
             let workers: Vec<usize> = match f.worker {
+                // admission bursts target the serving loop, not workers
+                _ if f.kind == FaultKind::AdmissionBurst => Vec::new(),
                 Some(w) => vec![w % n],
                 None => {
                     // distinct victims, deterministic order
@@ -209,7 +221,7 @@ impl ChaosPlan {
                     picked
                 }
             };
-            faults.push(ResolvedFault { kind: f.kind, round: f.round, workers });
+            faults.push(ResolvedFault { kind: f.kind, round: f.round, workers, count: f.count });
         }
         ResolvedPlan {
             faults,
@@ -227,8 +239,13 @@ pub struct ResolvedFault {
     pub kind: FaultKind,
     /// Cluster submission ordinal (1-based) at which it fires.
     pub round: u64,
-    /// The victims (one entry except for multi-worker shrinks).
+    /// The victims (one entry except for multi-worker shrinks; empty
+    /// for admission bursts, which have no worker targets).
     pub workers: Vec<usize>,
+    /// The spec's raw count — the burst size for
+    /// [`FaultKind::AdmissionBurst`] (victim counts are already baked
+    /// into `workers` for the other kinds).
+    pub count: usize,
 }
 
 /// A [`ChaosPlan`] resolved against a concrete fleet width — what the
@@ -293,6 +310,16 @@ impl ResolvedPlan {
         self.faults
             .iter()
             .filter(|f| matches!(f.kind, FaultKind::Shrink | FaultKind::Partition))
+    }
+
+    /// Admission-burst faults (`adm@rR:K`), for the serving loop's
+    /// scripted admission source: each yields `(rounds_closed trigger,
+    /// burst size)`.
+    pub fn admission_faults(&self) -> impl Iterator<Item = (u64, usize)> + '_ {
+        self.faults
+            .iter()
+            .filter(|f| f.kind == FaultKind::AdmissionBurst)
+            .map(|f| (f.round, f.count.max(1)))
     }
 }
 
@@ -366,5 +393,24 @@ mod tests {
         assert!(r.worker_fault(2).is_none(), "shrink is master-side");
         assert!(r.worker_fault(3).is_none(), "partition is master-side");
         assert_eq!(r.master_faults().count(), 2);
+    }
+
+    #[test]
+    fn admission_bursts_route_to_the_serving_loop() {
+        let plan = ChaosPlan::parse("adm@r3:5,burst@r7,crash@r2", 7).unwrap();
+        let r = plan.resolve(8);
+        assert_eq!(r.faults[0].kind, FaultKind::AdmissionBurst);
+        assert!(r.faults[0].workers.is_empty(), "bursts draw no victims");
+        let bursts: Vec<_> = r.admission_faults().collect();
+        assert_eq!(bursts, vec![(3, 5), (7, 1)], "count defaults to 1");
+        // bursts touch neither workers nor the master's fault feed
+        for w in 0..8 {
+            if let Some(f) = r.worker_fault(w) {
+                assert_eq!(f.kind, FaultKind::Crash);
+            }
+        }
+        assert_eq!(r.master_faults().count(), 0);
+        // and resolution stays deterministic with bursts in the mix
+        assert_eq!(plan.resolve(8), r);
     }
 }

@@ -52,6 +52,7 @@ use crate::coding::SchemeConfig;
 use crate::coordinator::metrics::RunReport;
 use crate::grad::dataplane::SharedDataPlane;
 use crate::obs::{Counter, EventKind, Histogram, Obs};
+use crate::sched::{ControlQueue, RawSubmit, RawVerdict, SharedControl};
 use crate::session::SessionConfig;
 use crate::{log_info, log_warn};
 use std::collections::{BTreeSet, HashMap};
@@ -76,6 +77,11 @@ const MAX_SCRAPES: usize = 32;
 
 /// Byte cap on a scrape request head; anything longer is not a scrape.
 const MAX_SCRAPE_REQ: usize = 8 * 1024;
+
+/// Concurrent job-submission connections the reactor will hold; new
+/// control connections past this are refused at accept (each submits
+/// once and leaves — this bounds misbehaving clients, not throughput).
+const MAX_CTRL_CONNS: usize = 32;
 
 /// Wake-slop histogram bounds: a healthy reactor overshoots its poll
 /// deadline by well under a millisecond; the tail buckets make a loaded
@@ -185,6 +191,24 @@ enum Owner {
     Metrics,
     /// An in-flight scrape connection.
     Scrape(usize),
+    /// The job-submission listener (when serving).
+    Jobs,
+    /// An in-flight job-submission (control) connection.
+    Control(usize),
+}
+
+/// One in-flight job-submission connection on the control socket,
+/// serviced by the same reactor that drives the workers: one `Submit`
+/// frame in, one `Accepted`/`Rejected` (or `Error`) farewell out, then
+/// the socket closes.
+struct CtrlConn {
+    conn: Connection,
+    peer: String,
+    /// Token of the forwarded [`RawSubmit`], once one was accepted off
+    /// this connection; the matching verdict closes the connection.
+    token: Option<u64>,
+    /// Farewell queued: drain the write buffer, then reap.
+    done: bool,
 }
 
 /// Metric handles and the shared journal for the fleet layer (see
@@ -297,6 +321,15 @@ pub struct FleetCluster {
     metrics_listener: Option<TcpListener>,
     /// In-flight scrape connections.
     scrapes: Vec<Scrape>,
+    /// Listener for job submissions (`sgc serve --listen-jobs`).
+    jobs_listener: Option<TcpListener>,
+    /// In-flight job-submission connections.
+    ctrl_conns: Vec<CtrlConn>,
+    /// The master ↔ serving-loop handoff queue, once
+    /// [`serve_jobs`](Self::serve_jobs) opened the control socket.
+    control: Option<SharedControl>,
+    /// Next submission token (also the verdict correlation key).
+    next_ctrl_token: u64,
     /// Scripted master-side fault plan, when injected (see
     /// [`Self::set_chaos`]).
     chaos: Option<FleetChaos>,
@@ -398,6 +431,10 @@ impl FleetCluster {
             obs: None,
             metrics_listener: None,
             scrapes: Vec::new(),
+            jobs_listener: None,
+            ctrl_conns: Vec::new(),
+            control: None,
+            next_ctrl_token: 1,
             chaos: None,
             dp: None,
             grad_assign_log: Vec::new(),
@@ -725,6 +762,36 @@ impl FleetCluster {
         Ok(bound)
     }
 
+    /// Serve the job-submission control socket on `addr` from the
+    /// reactor itself, exactly like [`serve_metrics`](Self::serve_metrics):
+    /// the listener and every control connection are just more `Owner`s
+    /// in the single `poll(2)` fd set. Inbound [`Frame::Submit`]s are
+    /// queued on a [`ControlQueue`]; the serving loop
+    /// ([`JobScheduler::serve`](crate::sched::JobScheduler::serve) with a
+    /// [`QueueSource`](crate::sched::QueueSource)) drains them and posts
+    /// verdicts that the reactor answers as [`Frame::Accepted`] /
+    /// [`Frame::Rejected`]. Returns the bound address (useful with port
+    /// `0`). Grab the shared queue with [`control`](Self::control).
+    pub fn serve_jobs(&mut self, addr: &str) -> crate::Result<String> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("job endpoint: bind {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let bound = listener.local_addr()?.to_string();
+        self.jobs_listener = Some(listener);
+        if self.control.is_none() {
+            self.control = Some(ControlQueue::shared());
+        }
+        Ok(bound)
+    }
+
+    /// The shared admission queue backing the control socket, once
+    /// [`serve_jobs`](Self::serve_jobs) has been called. Hand this to a
+    /// [`QueueSource`](crate::sched::QueueSource) so the serving loop
+    /// sees the reactor's submissions.
+    pub fn control(&self) -> Option<SharedControl> {
+        self.control.clone()
+    }
+
     /// The shared observability hub, when one is attached.
     pub fn obs(&self) -> Option<&Arc<Obs>> {
         self.obs.as_ref().map(|fo| &fo.obs)
@@ -751,6 +818,7 @@ impl FleetCluster {
     /// `timeout`, then service every ready fd. With nothing to watch the
     /// turn degenerates to a precise bounded sleep.
     fn reactor_turn(&mut self, timeout: Option<Duration>) {
+        self.deliver_ctrl_verdicts();
         self.pollfds.clear();
         self.owners.clear();
         if self.joins_open() {
@@ -777,6 +845,14 @@ impl FleetCluster {
             let interest = if s.responding { POLLOUT } else { POLLIN };
             self.pollfds.push(PollFd::new(s.conn.as_raw_fd(), interest));
             self.owners.push(Owner::Scrape(i));
+        }
+        if let Some(l) = &self.jobs_listener {
+            self.pollfds.push(PollFd::new(l.as_raw_fd(), POLLIN));
+            self.owners.push(Owner::Jobs);
+        }
+        for (i, c) in self.ctrl_conns.iter().enumerate() {
+            self.pollfds.push(PollFd::new(c.conn.fd(), c.conn.interest()));
+            self.owners.push(Owner::Control(i));
         }
         if self.pollfds.is_empty() {
             if let Some(t) = timeout {
@@ -823,11 +899,25 @@ impl FleetCluster {
                         self.service_scrape(*i);
                     }
                 }
+                Owner::Jobs => {
+                    if fd.readable() {
+                        self.accept_ctrl();
+                    }
+                }
+                Owner::Control(i) => {
+                    if fd.readable() {
+                        self.read_ctrl(*i);
+                    }
+                    if fd.writable() {
+                        self.flush_ctrl(*i);
+                    }
+                }
             }
         }
         self.owners = owners;
         self.pollfds = pollfds;
         self.scrapes.retain(|s| !s.closed);
+        self.reap_ctrl();
         self.collect_io();
     }
 
@@ -947,6 +1037,159 @@ impl FleetCluster {
         self.service_scrape(i);
     }
 
+    /// Accept queued control connections (bounded by
+    /// [`MAX_CTRL_CONNS`]). A control client speaks the worker wire
+    /// protocol but its whole conversation is one `Submit` in, one
+    /// `Accepted` / `Rejected` / `Error` out.
+    fn accept_ctrl(&mut self) {
+        loop {
+            let Some(listener) = &self.jobs_listener else { return };
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    if self.ctrl_conns.len() >= MAX_CTRL_CONNS {
+                        continue; // refused: dropping the stream closes it
+                    }
+                    if let Ok(conn) = Connection::new(stream) {
+                        self.ctrl_conns.push(CtrlConn {
+                            conn,
+                            peer: peer.to_string(),
+                            token: None,
+                            done: false,
+                        });
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Advance one control connection: parse its `Submit`, queue it for
+    /// the serving loop, farewell protocol violators.
+    fn read_ctrl(&mut self, i: usize) {
+        let Some(c) = self.ctrl_conns.get_mut(i) else { return };
+        let alive = c.conn.fill();
+        if c.done {
+            return; // draining until the verdict flushes; ignore extra bytes
+        }
+        match c.conn.try_next_frame() {
+            Ok(Some(Frame::Submit { name, scheme, session_jobs, priority })) => {
+                let token = self.next_ctrl_token;
+                self.next_ctrl_token += 1;
+                c.token = Some(token);
+                if let Some(ctrl) = &self.control {
+                    ctrl.lock()
+                        .expect("control queue lock poisoned")
+                        .incoming
+                        .push_back(RawSubmit { token, name, scheme, session_jobs, priority });
+                } else {
+                    // serve_jobs always installs a queue; defensive only.
+                    c.conn.send(&Frame::Rejected {
+                        reason: "no serving loop attached".to_string(),
+                    });
+                    c.conn.flush();
+                    c.done = true;
+                }
+            }
+            Ok(Some(other)) => {
+                log_warn!(
+                    "fleet master: rejecting control peer {}: expected Submit, \
+                     got {other:?}",
+                    c.peer
+                );
+                c.conn.send(&Frame::Error {
+                    code: ERR_BAD_HANDSHAKE,
+                    msg: "expected Submit as the first frame".to_string(),
+                });
+                c.conn.flush();
+                c.done = true;
+            }
+            Ok(None) => {
+                if !alive || c.conn.is_dead() {
+                    c.done = true;
+                }
+            }
+            Err(WireError::BadVersion(v)) => {
+                log_warn!(
+                    "fleet master: rejecting control peer {}: wire version {v} \
+                     (this master speaks v{WIRE_VERSION})",
+                    c.peer
+                );
+                c.conn.send(&Frame::Error {
+                    code: ERR_BAD_VERSION,
+                    msg: format!(
+                        "unsupported wire version {v}: this master speaks \
+                         v{WIRE_VERSION}; upgrade the client"
+                    ),
+                });
+                c.conn.flush();
+                c.done = true;
+            }
+            Err(e) => {
+                log_warn!(
+                    "fleet master: rejecting control peer {}: malformed submit ({e})",
+                    c.peer
+                );
+                c.conn.send(&Frame::Error {
+                    code: ERR_BAD_HANDSHAKE,
+                    msg: format!("malformed submission: {e}"),
+                });
+                c.conn.flush();
+                c.done = true;
+            }
+        }
+    }
+
+    /// Drain a control connection's outbound buffer.
+    fn flush_ctrl(&mut self, i: usize) {
+        if let Some(c) = self.ctrl_conns.get_mut(i) {
+            c.conn.flush();
+        }
+    }
+
+    /// Answer every verdict the serving loop has posted: find the
+    /// control connection that carried the matching token and send it
+    /// `Accepted` / `Rejected` as its farewell.
+    fn deliver_ctrl_verdicts(&mut self) {
+        let Some(ctrl) = &self.control else { return };
+        let verdicts: Vec<(u64, RawVerdict)> = {
+            let mut q = ctrl.lock().expect("control queue lock poisoned");
+            q.verdicts.drain(..).collect()
+        };
+        for (token, verdict) in verdicts {
+            let Some(c) = self
+                .ctrl_conns
+                .iter_mut()
+                .find(|c| c.token == Some(token) && !c.done)
+            else {
+                continue; // peer hung up before its verdict arrived
+            };
+            let frame = match verdict {
+                RawVerdict::Accepted { job, queue_depth } => {
+                    Frame::Accepted { job, queue_depth }
+                }
+                RawVerdict::Rejected { reason } => Frame::Rejected { reason },
+            };
+            c.conn.send(&frame);
+            c.conn.flush();
+            c.done = true;
+        }
+    }
+
+    /// Drop control connections that have said their piece (verdict
+    /// flushed) or died underneath us.
+    fn reap_ctrl(&mut self) {
+        let mut i = 0;
+        while i < self.ctrl_conns.len() {
+            let c = &self.ctrl_conns[i];
+            if c.conn.is_dead() || (c.done && !c.conn.wants_write()) {
+                self.ctrl_conns.swap_remove(i).conn.shutdown();
+                continue; // swap_remove moved a new entry into `i`
+            }
+            i += 1;
+        }
+    }
+
     /// Harvest per-connection byte counters into the frame-I/O metrics
     /// and journal (one entry per direction per turn, when nonzero).
     fn collect_io(&mut self) {
@@ -964,6 +1207,11 @@ impl FleetCluster {
         }
         for p in &mut self.pending {
             let (i, o) = p.conn.take_io();
+            bi += i;
+            bo += o;
+        }
+        for c in &mut self.ctrl_conns {
+            let (i, o) = c.conn.take_io();
             bi += i;
             bo += o;
         }
@@ -1655,6 +1903,13 @@ impl FleetCluster {
         self.listener = None;
         self.scrapes.clear(); // dropping the streams closes them
         self.metrics_listener = None;
+        for c in self.ctrl_conns.drain(..) {
+            c.conn.shutdown();
+        }
+        self.jobs_listener = None;
+        if let Some(ctrl) = &self.control {
+            ctrl.lock().expect("control queue lock poisoned").closed = true;
+        }
     }
 }
 
@@ -1809,7 +2064,9 @@ impl EventCluster for FleetCluster {
                 && self.pending.is_empty()
                 && self.slots.iter().all(|s| s.conn.is_none())
                 && self.metrics_listener.is_none()
-                && self.scrapes.is_empty();
+                && self.scrapes.is_empty()
+                && self.jobs_listener.is_none()
+                && self.ctrl_conns.is_empty();
             if timeout.is_none() && nothing_watched {
                 break;
             }
@@ -1842,6 +2099,15 @@ impl EventCluster for FleetCluster {
             self.process_pending();
             self.run_timers();
             if !self.staged.is_empty() {
+                break;
+            }
+            // A queued submission is as wake-worthy as a cluster event:
+            // return control so the serving loop can run admission.
+            if self
+                .control
+                .as_ref()
+                .is_some_and(|c| !c.lock().expect("control queue lock poisoned").incoming.is_empty())
+            {
                 break;
             }
             match horizon {

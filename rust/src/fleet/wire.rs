@@ -23,6 +23,13 @@
 //! are chunked so no single frame exceeds [`MAX_FRAME_LEN`], plus the
 //! [`Frame::Error`] reply a master sends before closing an incompatible
 //! (v1) or misbehaving connection.
+//!
+//! The serving control plane (`sgc serve --listen-jobs`) speaks the
+//! same protocol on a separate listener: a client sends one
+//! [`Frame::Submit`] and receives exactly one [`Frame::Accepted`] or
+//! [`Frame::Rejected`] (or an [`Frame::Error`] farewell when the frame
+//! is malformed). All strings are length-bounded on decode, so a
+//! hostile client can neither over-allocate nor wedge the reactor.
 
 use std::io::{self, Read, Write};
 
@@ -46,6 +53,14 @@ pub const MAX_TENSOR_FLOATS: u32 = 1 << 24;
 
 /// Longest [`Frame::Error`] message accepted on decode.
 pub const MAX_ERROR_MSG: usize = 1024;
+
+/// Longest job name accepted in a [`Frame::Submit`] (decode rejects
+/// longer, so a hostile client can never make the admission queue
+/// buffer unbounded names).
+pub const MAX_JOB_NAME: usize = 64;
+
+/// Longest scheme-spec string accepted in a [`Frame::Submit`].
+pub const MAX_SUBMIT_SPEC: usize = 256;
 
 /// Everything that can go wrong decoding a frame.
 #[derive(Debug)]
@@ -203,6 +218,35 @@ pub enum Frame {
         /// This slice's floats.
         data: Vec<f32>,
     },
+    /// Client → master: ask the serving loop to admit one job. Answered
+    /// with exactly one [`Frame::Accepted`] or [`Frame::Rejected`] (or a
+    /// [`Frame::Error`] farewell when the frame itself is malformed).
+    Submit {
+        /// Client-chosen job name (≤ [`MAX_JOB_NAME`] bytes on decode;
+        /// duplicates among queued/active jobs are rejected).
+        name: String,
+        /// Scheme spec string, e.g. `gc:2` (≤ [`MAX_SUBMIT_SPEC`] bytes
+        /// on decode; parsed master-side against the fleet width).
+        scheme: String,
+        /// Session jobs (paper iterations) the job runs.
+        session_jobs: u32,
+        /// Admission priority: higher activates first; preemption evicts
+        /// the lowest first.
+        priority: u8,
+    },
+    /// Master → client: the submission was admitted into the queue.
+    Accepted {
+        /// Scheduler job id assigned to the submission.
+        job: u32,
+        /// Queue depth (queued, not yet active) right after admission.
+        queue_depth: u32,
+    },
+    /// Master → client: the submission was load-shed.
+    Rejected {
+        /// Why (`queue full`, `duplicate job name …`, `scheme … exceeds
+        /// fleet capacity`, …; ≤ [`MAX_ERROR_MSG`] bytes on decode).
+        reason: String,
+    },
 }
 
 /// One work unit inside a [`Frame::GradAssign`]: which chunk gradients
@@ -243,6 +287,9 @@ const TAG_PARTITION: u8 = 8;
 const TAG_PARAMS: u8 = 9;
 const TAG_GRAD_ASSIGN: u8 = 10;
 const TAG_GRAD_RESULT: u8 = 11;
+const TAG_SUBMIT: u8 = 12;
+const TAG_ACCEPTED: u8 = 13;
+const TAG_REJECTED: u8 = 14;
 
 const UNIT_PLAIN: u8 = 1;
 const UNIT_CODED: u8 = 2;
@@ -261,6 +308,9 @@ impl Frame {
             Frame::Params { .. } => TAG_PARAMS,
             Frame::GradAssign { .. } => TAG_GRAD_ASSIGN,
             Frame::GradResult { .. } => TAG_GRAD_RESULT,
+            Frame::Submit { .. } => TAG_SUBMIT,
+            Frame::Accepted { .. } => TAG_ACCEPTED,
+            Frame::Rejected { .. } => TAG_REJECTED,
         }
     }
 
@@ -361,6 +411,17 @@ impl Frame {
                 put_u32(&mut payload, *total);
                 put_f32s(&mut payload, data);
             }
+            Frame::Submit { name, scheme, session_jobs, priority } => {
+                put_str(&mut payload, name, MAX_JOB_NAME);
+                put_str(&mut payload, scheme, MAX_SUBMIT_SPEC);
+                put_u32(&mut payload, *session_jobs);
+                payload.push(*priority);
+            }
+            Frame::Accepted { job, queue_depth } => {
+                put_u32(&mut payload, *job);
+                put_u32(&mut payload, *queue_depth);
+            }
+            Frame::Rejected { reason } => put_str(&mut payload, reason, MAX_ERROR_MSG),
         }
         let len = (payload.len() + 2) as u32;
         let mut out = Vec::with_capacity(4 + len as usize);
@@ -503,6 +564,15 @@ impl Frame {
                     data,
                 }
             }
+            TAG_SUBMIT => {
+                let name = cur.str(MAX_JOB_NAME)?;
+                let scheme = cur.str(MAX_SUBMIT_SPEC)?;
+                let session_jobs = cur.u32()?;
+                let priority = cur.u8()?;
+                Frame::Submit { name, scheme, session_jobs, priority }
+            }
+            TAG_ACCEPTED => Frame::Accepted { job: cur.u32()?, queue_depth: cur.u32()? },
+            TAG_REJECTED => Frame::Rejected { reason: cur.str(MAX_ERROR_MSG)? },
             t => return Err(WireError::BadTag(t)),
         };
         if cur.remaining() != 0 {
@@ -691,6 +761,19 @@ fn put_f64(out: &mut Vec<u8>, x: f64) {
     out.extend_from_slice(&x.to_bits().to_le_bytes());
 }
 
+/// Length-prefixed byte string, truncated at `cap` on encode (decode
+/// rejects anything longer via [`Cursor::str`]).
+fn put_str(out: &mut Vec<u8>, s: &str, cap: usize) {
+    let bytes = s.as_bytes();
+    let mut take = bytes.len().min(cap);
+    // never split a UTF-8 sequence: back off to a char boundary
+    while take > 0 && !s.is_char_boundary(take) {
+        take -= 1;
+    }
+    put_u32(out, take as u32);
+    out.extend_from_slice(&bytes[..take]);
+}
+
 /// Length-prefixed f32 slice (count then bit patterns).
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
     debug_assert!(
@@ -753,6 +836,16 @@ impl Cursor<'_> {
         Ok((off, total))
     }
 
+    /// Length-prefixed byte string bounded at `cap`: a hostile length
+    /// prefix is rejected before any allocation.
+    fn str(&mut self, cap: usize) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        if len > cap || len > self.remaining() {
+            return Err(WireError::Truncated);
+        }
+        Ok(String::from_utf8_lossy(self.take(len)?).into_owned())
+    }
+
     /// Length-prefixed f32 slice; the count must fit the remaining
     /// payload (4 bytes per float), so a hostile count never allocates.
     fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
@@ -811,6 +904,16 @@ mod tests {
                 total: 2,
                 data: vec![-1.0, 2.5],
             },
+            Frame::Submit {
+                name: "train-a".into(),
+                scheme: "m-sgc:1,2,4".into(),
+                session_jobs: 24,
+                priority: 7,
+            },
+            Frame::Submit { name: String::new(), scheme: String::new(), session_jobs: 0, priority: 0 },
+            Frame::Accepted { job: 3, queue_depth: 2 },
+            Frame::Rejected { reason: "queue full (max 3)".into() },
+            Frame::Rejected { reason: String::new() },
         ]
     }
 
@@ -1016,6 +1119,46 @@ mod tests {
         let len_off = 4 + 1 + 1 + 1;
         bytes[len_off..len_off + 4].copy_from_slice(&(MAX_ERROR_MSG as u32 + 1).to_le_bytes());
         assert!(Frame::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn submit_frame_bounds_its_strings() {
+        // over-long name/spec are truncated on encode (at a char
+        // boundary) so the frame always re-decodes…
+        let f = Frame::Submit {
+            name: "n".repeat(MAX_JOB_NAME + 30),
+            scheme: "é".repeat(MAX_SUBMIT_SPEC), // 2 bytes per char
+            session_jobs: 1,
+            priority: 255,
+        };
+        match Frame::decode(&f.encode()).unwrap() {
+            Frame::Submit { name, scheme, .. } => {
+                assert_eq!(name.len(), MAX_JOB_NAME);
+                assert!(scheme.len() <= MAX_SUBMIT_SPEC);
+                assert!(scheme.chars().all(|c| c == 'é'), "char split on truncation");
+            }
+            other => panic!("{other:?}"),
+        }
+        // …and a lying name-length prefix is rejected on decode without
+        // allocating
+        let ok = Frame::Submit {
+            name: "a".into(),
+            scheme: "gc:1".into(),
+            session_jobs: 2,
+            priority: 0,
+        };
+        let mut bytes = ok.encode();
+        let name_len_off = 4 + 1 + 1;
+        for hostile in [MAX_JOB_NAME as u32 + 1, u32::MAX] {
+            bytes[name_len_off..name_len_off + 4].copy_from_slice(&hostile.to_le_bytes());
+            assert!(matches!(Frame::decode(&bytes), Err(WireError::Truncated)));
+        }
+        // Rejected reasons are bounded like Error messages
+        let loud = Frame::Rejected { reason: "r".repeat(MAX_ERROR_MSG + 9) };
+        match Frame::decode(&loud.encode()).unwrap() {
+            Frame::Rejected { reason } => assert_eq!(reason.len(), MAX_ERROR_MSG),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

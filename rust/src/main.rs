@@ -11,6 +11,10 @@
 //!            [--metrics ADDR] [--metrics-hold S] [--journal PATH]
 //!            [--report-json PATH] [--chaos SPEC] [--chaos-seed S]
 //!            [--real-grad]
+//!            [--listen-jobs ADDR] [--max-queue N] [--max-active N]
+//!            [--oversub F] [--serve-for S]
+//! sgc submit --master HOST:PORT [--name NAME] [--scheme SPEC]
+//!            [--session-jobs N] [--priority P]
 //! sgc trace  export --journal PATH [--out PATH]
 //! sgc worker --master HOST:PORT --id K [--chaos-seed S]
 //! sgc sweep  --n 256 --schemes gc:15+m-sgc:1,2,27+uncoded --reps 4
@@ -42,6 +46,16 @@
 //! gradient and steps Adam at every paper-job decode — printing each
 //! job's loss trajectory alongside the protocol report.
 //!
+//! `--listen-jobs ADDR` (fleet only) turns `sgc serve` into a
+//! long-lived serving loop: the reactor accepts `sgc submit` clients on
+//! a control socket (same `poll(2)` fd set as the workers — no extra
+//! thread) and the scheduler admits their jobs dynamically with
+//! per-priority placement, preemption when the fleet shrinks below
+//! aggregate demand, and `--max-queue`-bounded admission backpressure.
+//! `--serve-for S` bounds the loop's lifetime (absent = serve until
+//! killed); `--max-active` caps concurrently running jobs and
+//! `--oversub` sets the demand-to-worker budget ratio.
+//!
 //! `--adapt` turns on the adaptive control plane (`sgc::adapt`): the
 //! scheduler profiles live arrivals, re-fits `(B, W, λ)` in the
 //! background (`--refit-budget` candidates per round close), and
@@ -55,12 +69,14 @@ use sgc::chaos::{ChaosPlan, ResolvedPlan};
 use sgc::cluster::{Cluster, EventCluster, RecordingCluster, RunTrace, SimCluster};
 use sgc::coding::SchemeConfig;
 use sgc::coordinator::RunReport;
-use sgc::fleet::{self, ChaosConfig, FleetCluster, LoopbackFleet, MembershipConfig, WorkerConfig};
+use sgc::fleet::{
+    self, ChaosConfig, FleetCluster, Frame, LoopbackFleet, MembershipConfig, WorkerConfig,
+};
 use sgc::grad::{DataPlane, GradConfig, GradJobSummary, GradPump};
 use sgc::probe::{grid_search, DelayProfile, SearchSpace};
 use sgc::sched::{
-    self, DisjointPlacement, JobScheduler, JobSpec, PlacementPolicy, RoundRobinPlacement,
-    ScheduleReport,
+    self, DisjointPlacement, JobScheduler, JobSpec, NoopObserver, PlacementPolicy,
+    QueueSource, RoundRobinPlacement, ScheduleReport, ServeConfig,
 };
 use sgc::session::{self, BatchItem, SessionConfig};
 use sgc::straggler::{GilbertElliot, Pattern};
@@ -80,6 +96,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
         Some("trace") => cmd_trace(&args),
         Some("worker") => cmd_worker(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -88,7 +105,7 @@ fn main() -> anyhow::Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: sgc <run|serve|trace|worker|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
+                "usage: sgc <run|serve|submit|trace|worker|sweep|probe|train|info> [--n N] [--scheme SPEC] …\n\
                  scheme spec: gc:S | gc-rep:S | sr-sgc:B,W,L | sr-sgc-rep:B,W,L | \
                  m-sgc:B,W,L | m-sgc-rep:B,W,L | uncoded\n\
                  fleet:       sgc run --fleet N (loopback workers) or --listen ADDR\n\
@@ -100,6 +117,10 @@ fn main() -> anyhow::Result<()> {
                  chaos:       serve --chaos crash@r2,hang@r4:w1,shrink@r6:2 [--chaos-seed S]\n\
                               (kinds: crash hang byz part rejoin shrink; deterministic per seed)\n\
                  gradients:   serve --fleet K --real-grad — real coded partial gradients\n\
+                 serving:     serve --fleet K --listen-jobs ADDR [--max-queue N]\n\
+                              [--max-active N] [--oversub F] [--serve-for S]\n\
+                              + sgc submit --master ADDR [--name NAME] [--scheme SPEC]\n\
+                              [--session-jobs N] [--priority P] per dynamic job\n\
                  observe:     serve [--metrics ADDR (fleet)] [--metrics-hold S]\n\
                               [--journal PATH] [--report-json PATH]; --verbose anywhere\n\
                               sgc trace export --journal PATH [--out PATH] (Chrome JSON)\n\
@@ -273,7 +294,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         !args.has_flag("fleet"),
         "--fleet needs a worker count (e.g. --fleet 8)"
     );
-    let jobs = args.get_parse("jobs", 4usize).max(1);
+    // --listen-jobs ADDR: long-lived serving loop fed by a reactor-side
+    // control socket (see `sgc submit`). Pre-admitted --jobs default to
+    // zero there: the socket is the admission path.
+    let listen_jobs = args.options.get("listen-jobs").cloned();
+    let jobs = if listen_jobs.is_some() {
+        args.get_parse("jobs", 0usize)
+    } else {
+        args.get_parse("jobs", 4usize).max(1)
+    };
     let fleet_n = args.options.get("fleet").map(|v| v.parse::<usize>()).transpose()?;
     let n = match fleet_n {
         Some(k) => k,
@@ -326,6 +355,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         fleet_n.is_some() || !args.has("metrics"),
         "--metrics needs a TCP fleet (--fleet N): the simulator has no reactor to serve scrapes"
     );
+    anyhow::ensure!(
+        fleet_n.is_some() || listen_jobs.is_none(),
+        "--listen-jobs needs a TCP fleet (--fleet N): the control socket lives on the reactor"
+    );
     // --real-grad: put every job on the gradient data plane — real
     // partitions, params and coded partial gradients over the wire
     // (sgc::grad module docs + OPERATIONS.md §real gradients).
@@ -367,6 +400,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 let bound = fleet.cluster.serve_metrics(addr)?;
                 println!("metrics: http://{bound}/metrics");
             }
+            // --listen-jobs: open the control socket on the reactor and
+            // keep the shared admission queue for the serving loop below.
+            let control = match &listen_jobs {
+                Some(addr) => {
+                    let bound = fleet.cluster.serve_jobs(addr)?;
+                    println!("jobs: sgc submit --master {bound} --scheme SPEC");
+                    fleet.cluster.control()
+                }
+                None => None,
+            };
             // The pump owns the decode/optimizer side; the same shared
             // data plane is handed to the master (partition/param
             // shipping, payload reassembly) and the scheduler (round
@@ -394,9 +437,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                         p.configure_job(j, &spec.scheme)?;
                     }
                 }
-                match &mut pump {
-                    Some(p) => sched.run_observed(p)?,
-                    None => sched.run()?,
+                match &control {
+                    Some(ctrl) => {
+                        // Long-lived serving loop: admissions arrive on
+                        // the control socket; pre-admitted --jobs (if
+                        // any) queue ahead of them.
+                        let mut src = QueueSource::new(ctrl.clone(), k, cfg.clone());
+                        let scfg = ServeConfig {
+                            max_queue: args.get_parse("max-queue", 64usize),
+                            max_active: args.get_parse("max-active", 8usize),
+                            oversub: args.get_parse("oversub", 4.0f64),
+                            serve_for_s: args
+                                .options
+                                .get("serve-for")
+                                .map(|v| v.parse())
+                                .transpose()?,
+                        };
+                        match &mut pump {
+                            Some(p) => sched.serve(&mut src, &scfg, p)?,
+                            None => sched.serve(&mut src, &scfg, &mut NoopObserver)?,
+                        }
+                    }
+                    None => match &mut pump {
+                        Some(p) => sched.run_observed(p)?,
+                        None => sched.run()?,
+                    },
                 }
             };
             if let Some(p) = &pump {
@@ -521,6 +586,42 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(undecoded == 0, "{undecoded} session jobs never became decodable");
     }
     Ok(())
+}
+
+/// Submit one job to a live `sgc serve --listen-jobs` control socket
+/// and print the verdict: exit 0 on `Accepted`, nonzero on `Rejected`
+/// or a protocol error. One connection, one `Submit`, one reply.
+fn cmd_submit(args: &Args) -> anyhow::Result<()> {
+    let master = args.get("master", "127.0.0.1:7171");
+    let name = args.get("name", "cli-job");
+    let scheme = args.get("scheme", "gc:2");
+    // 0 = inherit the server's --session-jobs template
+    let session_jobs = args.get_parse("session-jobs", 0u32);
+    let priority = args.get_parse("priority", 0u8);
+    let timeout = Duration::from_secs_f64(args.get_parse("timeout", 30.0f64));
+    let mut stream = std::net::TcpStream::connect(&master)
+        .map_err(|e| anyhow::anyhow!("connect {master}: {e}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    fleet::wire::write_frame(
+        &mut stream,
+        &Frame::Submit { name: name.clone(), scheme, session_jobs, priority },
+    )?;
+    match fleet::wire::read_frame(&mut stream) {
+        Ok(Frame::Accepted { job, queue_depth }) => {
+            println!("accepted: {name} as job {job} (queue depth {queue_depth})");
+            Ok(())
+        }
+        Ok(Frame::Rejected { reason }) => {
+            eprintln!("rejected: {name}: {reason}");
+            std::process::exit(1);
+        }
+        Ok(Frame::Error { code, msg }) => {
+            eprintln!("server error {code}: {msg}");
+            std::process::exit(1);
+        }
+        Ok(other) => anyhow::bail!("unexpected reply from {master}: {other:?}"),
+        Err(e) => anyhow::bail!("reading verdict from {master}: {e}"),
+    }
 }
 
 /// One `--report-json` entry per real-gradient job: the loss trajectory

@@ -99,10 +99,23 @@ pub enum EventKind {
     /// The gradient data plane reconstructed a full batch gradient for
     /// a decoded paper-job (`round` = paper-job index).
     GradientDecoded,
+    /// The serving loop received a submission (`job` = assigned id, or
+    /// `-1` when the submission was rejected before an id existed;
+    /// `value` = priority).
+    JobSubmit,
+    /// The serving loop load-shed a submission (`value` = queue depth
+    /// at rejection).
+    JobReject,
+    /// An active job was preempted to shed load (`job`, `value` =
+    /// paper-jobs banked before eviction).
+    JobPreempt,
+    /// A preempted job was re-activated (`job`, `value` = paper-jobs
+    /// still remaining).
+    JobResume,
 }
 
 /// Every kind, for iteration and parsing.
-const ALL_KINDS: [EventKind; 26] = [
+const ALL_KINDS: [EventKind; 30] = [
     EventKind::RoundAssign,
     EventKind::WorkerArrive,
     EventKind::CutDecision,
@@ -129,6 +142,10 @@ const ALL_KINDS: [EventKind; 26] = [
     EventKind::PartitionSent,
     EventKind::ParamBroadcast,
     EventKind::GradientDecoded,
+    EventKind::JobSubmit,
+    EventKind::JobReject,
+    EventKind::JobPreempt,
+    EventKind::JobResume,
 ];
 
 impl EventKind {
@@ -161,6 +178,10 @@ impl EventKind {
             EventKind::PartitionSent => "partition_sent",
             EventKind::ParamBroadcast => "param_broadcast",
             EventKind::GradientDecoded => "gradient_decoded",
+            EventKind::JobSubmit => "job_submit",
+            EventKind::JobReject => "job_reject",
+            EventKind::JobPreempt => "job_preempt",
+            EventKind::JobResume => "job_resume",
         }
     }
 

@@ -87,6 +87,13 @@ use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use std::sync::Arc;
 
+mod serve;
+
+pub use serve::{
+    AdmissionSource, AdmissionVerdict, ArrivalAt, ControlQueue, QueueSource, RawSubmit,
+    RawVerdict, ScriptedSource, ServeConfig, SharedControl, SubmitRequest,
+};
+
 /// Which physical worker *initially* hosts a job's logical worker 0
 /// (elastic re-placement may later migrate individual slots off retired
 /// workers). Placement must be deterministic — two
@@ -320,10 +327,24 @@ pub struct FleetUtilization {
     /// Rounds folded into the live profile since the last completed
     /// re-fit pass — how stale the fitted parameters were at run end.
     pub profile_staleness: u64,
-    /// `total_session_s / makespan_s`: how much session time the
-    /// scheduler packed into each second of shared-fleet time (> 1 means
-    /// sessions genuinely overlapped).
+    /// Length of the union of the jobs' `[admission, finish]` windows on
+    /// the cluster clock. Equal to [`makespan_s`](Self::makespan_s) when
+    /// every job is admitted up front (the [`JobScheduler::run`] path);
+    /// under dynamic admission ([`JobScheduler::serve`]) it excludes the
+    /// idle gaps between admission waves, so a mostly-idle serving loop
+    /// does not deflate utilization.
+    pub busy_span_s: f64,
+    /// `total_session_s / busy_span_s`: how much session time the
+    /// scheduler packed into each second the fleet actually had work
+    /// (> 1 means sessions genuinely overlapped).
     pub multiplexing_gain: f64,
+    /// Active jobs evicted (banked and re-queued) to shed load when the
+    /// fleet shrank below aggregate demand (always 0 under
+    /// [`JobScheduler::run`]).
+    pub preemptions: u64,
+    /// Submissions load-shed by admission control (always 0 under
+    /// [`JobScheduler::run`]).
+    pub jobs_rejected: u64,
     /// Placement policy that produced this run.
     pub placement: &'static str,
 }
@@ -367,6 +388,13 @@ impl std::fmt::Display for FleetUtilization {
                 self.job_retries, self.degraded_rounds, self.jobs_degraded, self.jobs_quarantined
             )?;
         }
+        if self.preemptions + self.jobs_rejected > 0 {
+            write!(
+                f,
+                ", {} preempted, {} rejected",
+                self.preemptions, self.jobs_rejected
+            )?;
+        }
         Ok(())
     }
 }
@@ -394,7 +422,10 @@ impl FleetUtilization {
             .set("scheme_swaps", self.scheme_swaps)
             .set("refit_candidates", self.refit_candidates)
             .set("profile_staleness", self.profile_staleness)
+            .set("busy_span_s", self.busy_span_s)
             .set("multiplexing_gain", self.multiplexing_gain)
+            .set("preemptions", self.preemptions)
+            .set("jobs_rejected", self.jobs_rejected)
             .set("placement", self.placement);
         o
     }
@@ -462,7 +493,11 @@ struct SchedObs {
     retries: Counter,
     degraded: Counter,
     quarantines: Counter,
+    submitted: Counter,
+    rejected: Counter,
+    preempted: Counter,
     queue_depth: Gauge,
+    adm_queue: Gauge,
     makespan: Gauge,
     gain: Gauge,
 }
@@ -523,6 +558,24 @@ struct Slot {
     /// The job exhausted its retry budget and was retired.
     failed: bool,
     report: Option<RunReport>,
+    // --- serving loop (see [`JobScheduler::serve`]) ---
+    /// Admission priority: higher runs first, ties broken by job id
+    /// (always 0 under [`JobScheduler::run`]).
+    priority: u8,
+    /// Submitter-chosen name, echoed in journals and reports.
+    name: String,
+    /// Accepted but not yet activated (or re-queued by preemption); a
+    /// queued slot holds no session and consumes no fleet capacity.
+    queued: bool,
+    /// Marked for eviction: the current segment finishes its already-
+    /// assigned jobs ([`SgcSession::finish_after_assigned`]), banks its
+    /// ledger, and the slot returns to the queue.
+    preempt: bool,
+    /// Cluster clock when the job was first activated (None until then;
+    /// `run` stamps every slot with the run's start).
+    admit_s: Option<f64>,
+    /// Cluster clock when the job finished (report or quarantine).
+    finish_s: Option<f64>,
 }
 
 /// Multiplexes `N` admitted [`SgcSession`] jobs over one shared
@@ -559,6 +612,12 @@ pub struct JobScheduler<'c> {
     retired_events: u64,
     replacements: u64,
     rounds_closed: usize,
+    /// Active jobs banked and re-queued by the serving loop's balancer.
+    preemptions: u64,
+    /// Submissions offered to [`Self::serve`] (accepted or rejected).
+    submitted_total: u64,
+    /// Submissions load-shed by admission control.
+    rejected_total: u64,
 }
 
 impl<'c> JobScheduler<'c> {
@@ -593,6 +652,9 @@ impl<'c> JobScheduler<'c> {
             retired_events: 0,
             replacements: 0,
             rounds_closed: 0,
+            preemptions: 0,
+            submitted_total: 0,
+            rejected_total: 0,
         }
     }
 
@@ -663,7 +725,27 @@ impl<'c> JobScheduler<'c> {
             "",
             "Jobs retired after exhausting their retry budget",
         );
+        let submitted = m.counter(
+            "sgc_jobs_submitted_total",
+            "",
+            "Submissions offered to the serving loop (accepted or not)",
+        );
+        let rejected = m.counter(
+            "sgc_jobs_rejected_total",
+            "",
+            "Submissions load-shed by admission control",
+        );
+        let preempted = m.counter(
+            "sgc_jobs_preempted_total",
+            "",
+            "Active jobs banked and re-queued to shed load on a shrunken fleet",
+        );
         let queue_depth = m.gauge("sgc_jobs_unfinished", "", "Admitted jobs still running");
+        let adm_queue = m.gauge(
+            "sgc_admission_queue_depth",
+            "",
+            "Jobs accepted but not yet activated by the serving loop",
+        );
         let makespan =
             m.gauge("sgc_fleet_makespan_seconds", "", "Cluster-clock span of the last run");
         let gain = m.gauge(
@@ -682,7 +764,11 @@ impl<'c> JobScheduler<'c> {
             retries,
             degraded,
             quarantines,
+            submitted,
+            rejected,
+            preempted,
             queue_depth,
+            adm_queue,
             makespan,
             gain,
         });
@@ -695,6 +781,14 @@ impl<'c> JobScheduler<'c> {
     /// elastic re-placement.
     pub fn admit(&mut self, spec: &JobSpec) -> crate::Result<JobId> {
         anyhow::ensure!(!self.ran, "JobScheduler::admit after run");
+        self.admit_slot(spec)
+    }
+
+    /// [`admit`](Self::admit) without the `admit`-before-`run` guard:
+    /// the serving loop ([`Self::serve`]) admits dynamically while the
+    /// pump is live, so its slots join mid-flight (queued until
+    /// activation).
+    fn admit_slot(&mut self, spec: &JobSpec) -> crate::Result<JobId> {
         let session = SgcSession::new(&spec.scheme, spec.session.clone());
         let n = self.cluster.n();
         anyhow::ensure!(
@@ -726,6 +820,12 @@ impl<'c> JobScheduler<'c> {
             degraded_rounds: 0,
             failed: false,
             report: None,
+            priority: 0,
+            name: format!("job-{job}"),
+            queued: false,
+            preempt: false,
+            admit_s: None,
+            finish_s: None,
         });
         Ok(job)
     }
@@ -760,6 +860,11 @@ impl<'c> JobScheduler<'c> {
             slot.place = (0..sn).map(|i| (i + offset) % n).collect();
         }
         let start_s = self.cluster.now_s();
+        // all jobs are co-admitted on this path; the busy-span union in
+        // build_report then degenerates to the plain makespan
+        for slot in &mut self.slots {
+            slot.admit_s.get_or_insert(start_s);
+        }
 
         // Register per-job series and journal admissions now that the
         // job count is final. Registration is the allocating step; the
@@ -862,13 +967,33 @@ impl<'c> JobScheduler<'c> {
             );
         }
 
-        let makespan = (self.cluster.now_s() - start_s).max(0.0);
+        Ok(self.build_report(start_s, n))
+    }
+
+    /// Fold the finished slots into a [`ScheduleReport`] — the shared
+    /// tail of [`run_observed`](Self::run_observed) and
+    /// [`serve`](Self::serve). Every slot must hold a report.
+    fn build_report(&mut self, start_s: f64, workers: usize) -> ScheduleReport {
+        let end_s = self.cluster.now_s();
+        let makespan = (end_s - start_s).max(0.0);
+        let jobs = self.slots.len();
         let reports: Vec<RunReport> = self
             .slots
             .iter_mut()
             .map(|s| s.report.take().expect("all jobs finished"))
             .collect();
         let total_session_s: f64 = reports.iter().map(|r| r.total_runtime_s).sum();
+        // Busy span: the union of per-job `[admission, finish]` windows,
+        // so idle gaps between admission waves don't deflate the gain.
+        // Under `run` every window starts at `start_s` and the last
+        // finish is the clock the pump exited on, so this equals the
+        // plain makespan and the gain formula is unchanged there.
+        let mut windows: Vec<(f64, f64)> = self
+            .slots
+            .iter()
+            .map(|s| (s.admit_s.unwrap_or(start_s), s.finish_s.unwrap_or(end_s)))
+            .collect();
+        let busy_span = union_span(&mut windows);
         // Per-job failure-domain outcomes: what each job's state machine
         // ended on, and how approximate its report is.
         let outcomes: Vec<JobOutcome> = self
@@ -906,7 +1031,7 @@ impl<'c> JobScheduler<'c> {
             .map(|ad| (ad.candidates_evaluated(), ad.profile_staleness()))
             .unwrap_or((0, 0));
         let utilization = FleetUtilization {
-            workers: n,
+            workers,
             jobs,
             makespan_s: makespan,
             total_session_s,
@@ -926,7 +1051,10 @@ impl<'c> JobScheduler<'c> {
             scheme_swaps: swaps.len() as u64,
             refit_candidates,
             profile_staleness,
-            multiplexing_gain: if makespan > 0.0 { total_session_s / makespan } else { 0.0 },
+            busy_span_s: busy_span,
+            multiplexing_gain: if busy_span > 0.0 { total_session_s / busy_span } else { 0.0 },
+            preemptions: self.preemptions,
+            jobs_rejected: self.rejected_total,
             placement: self.policy.label(),
         };
         if let Some(so) = &self.obs {
@@ -934,7 +1062,7 @@ impl<'c> JobScheduler<'c> {
             so.gain.set(utilization.multiplexing_gain);
             so.queue_depth.set(0.0);
         }
-        Ok(ScheduleReport { reports, swaps, outcomes, utilization })
+        ScheduleReport { reports, swaps, outcomes, utilization }
     }
 
     /// Route one absorbed event batch into the owning sessions.
@@ -1177,6 +1305,16 @@ impl<'c> JobScheduler<'c> {
         if self.adapt.is_some() {
             self.adaptive_close(j, now);
         }
+        // A preemption mark drains the session exactly like a staged
+        // swap: finish what is assigned, then bank and re-queue in
+        // finish_segment. Re-asserted at every close (idempotent).
+        if self.slots[j].preempt {
+            self.slots[j]
+                .session
+                .as_mut()
+                .expect("closed slot")
+                .finish_after_assigned();
+        }
         let slot = &mut self.slots[j];
         if slot.session.as_ref().expect("closed slot").is_complete() {
             let finished = slot.session.take().expect("closed slot");
@@ -1342,6 +1480,40 @@ impl<'c> JobScheduler<'c> {
     ) -> crate::Result<()> {
         let done = self.slots[j].assigned_base + assigned;
         let remaining = self.slots[j].jobs_total.saturating_sub(done);
+        // Preemption wins over a staged swap: bank the drained segment
+        // and return the job to the queue; the balancer re-activates it
+        // (with a fresh session over the remaining work) once capacity
+        // recovers. A preempted job that happens to have nothing left
+        // just finishes normally below.
+        if self.slots[j].preempt && remaining > 0 {
+            if let Some(ad) = self.adapt.as_mut() {
+                // the fleet the swap was fitted against is gone
+                let _ = ad.take_swap(j);
+            }
+            let slot = &mut self.slots[j];
+            slot.preempt = false;
+            slot.queued = true;
+            slot.round_base = slot.round;
+            slot.assigned_base = done;
+            slot.segments.push(segment);
+            slot.segment_assigned.push(assigned);
+            slot.session = None;
+            slot.place.clear();
+            self.preemptions += 1;
+            if let Some(so) = &self.obs {
+                so.preempted.inc();
+                so.obs.journal.record(
+                    now,
+                    EventKind::JobPreempt,
+                    j as i64,
+                    self.slots[j].round as i64,
+                    -1,
+                    assigned as f64,
+                );
+            }
+            return Ok(());
+        }
+        self.slots[j].preempt = false;
         let swap = match self.adapt.as_mut() {
             Some(ad) if remaining > 0 => ad.take_swap(j),
             Some(ad) => {
@@ -1403,9 +1575,10 @@ impl<'c> JobScheduler<'c> {
         }
     }
 
-    /// Journal a job's completion and refresh the queue-depth gauge
-    /// (read-only; no-op without an attached bundle).
-    fn note_job_finished(&self, j: usize, now: f64) {
+    /// Stamp a job's finish instant (for the busy-span union), journal
+    /// its completion, and refresh the queue-depth gauge.
+    fn note_job_finished(&mut self, j: usize, now: f64) {
+        self.slots[j].finish_s = Some(now);
         if let Some(so) = &self.obs {
             let depth = self.slots.iter().filter(|s| s.report.is_none()).count();
             so.obs.journal.record(now, EventKind::JobFinish, j as i64, -1, -1, 0.0);
@@ -1557,6 +1730,31 @@ pub fn drive_events(
     sched.admit(&JobSpec { scheme: scheme_cfg.clone(), session: cfg.clone() })?;
     let mut out = sched.run()?;
     Ok(out.reports.remove(0))
+}
+
+/// Total length of the union of half-open intervals `[start, end)`,
+/// sorted and merged in place. Non-positive intervals contribute
+/// nothing. The [`FleetUtilization::busy_span_s`] primitive: overlap is
+/// counted once, gaps between admission waves not at all.
+pub(crate) fn union_span(windows: &mut Vec<(f64, f64)>) -> f64 {
+    windows.retain(|w| w.1 > w.0);
+    windows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for &(s, e) in windows.iter() {
+        match cur {
+            Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+            Some((cs, ce)) => {
+                total += ce - cs;
+                cur = Some((s, e));
+            }
+            None => cur = Some((s, e)),
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
 }
 
 #[cfg(test)]
@@ -2170,5 +2368,65 @@ mod tests {
         assert_eq!(counter.closed, 10);
         assert_eq!(counter.decoded, 10, "every job of every session decodes");
         assert_eq!(out.utilization.rounds, 10);
+    }
+
+    #[test]
+    fn union_span_merges_overlaps_and_skips_gaps() {
+        // disjoint: lengths add
+        let mut w = vec![(0.0, 1.0), (2.0, 3.5)];
+        assert!((union_span(&mut w) - 2.5).abs() < 1e-12);
+        // overlapping: counted once
+        let mut w = vec![(0.0, 2.0), (1.0, 3.0)];
+        assert!((union_span(&mut w) - 3.0).abs() < 1e-12);
+        // contained: inner window adds nothing
+        let mut w = vec![(0.0, 4.0), (1.0, 2.0)];
+        assert!((union_span(&mut w) - 4.0).abs() < 1e-12);
+        // touching endpoints merge (half-open adjacency)
+        let mut w = vec![(1.0, 2.0), (0.0, 1.0)];
+        assert!((union_span(&mut w) - 2.0).abs() < 1e-12);
+        // empty / degenerate windows contribute nothing
+        let mut w = vec![(1.0, 1.0), (3.0, 2.0)];
+        assert_eq!(union_span(&mut w), 0.0);
+        let mut w: Vec<(f64, f64)> = Vec::new();
+        assert_eq!(union_span(&mut w), 0.0);
+    }
+
+    #[test]
+    fn utilization_is_admission_time_aware() {
+        // Two identical same-seed single-job runs, executed back-to-back
+        // on one cluster clock: the second job is "admitted" long after
+        // the first finished. A wall-clock gain (total_session_s over
+        // the full makespan) would count the idle gap between them; the
+        // busy-span union must not.
+        let n = 6;
+        let mut sim = quiet(n, 11);
+        let r1 = {
+            let mut sched = JobScheduler::new(&mut sim);
+            sched.admit(&spec(n, 1, 4)).unwrap();
+            sched.run().unwrap()
+        };
+        let u1 = &r1.utilization;
+        // co-admitted path: busy span IS the makespan, gain unchanged
+        assert!((u1.busy_span_s - u1.makespan_s).abs() < 1e-9);
+        assert!(
+            (u1.multiplexing_gain - u1.total_session_s / u1.makespan_s).abs() < 1e-9,
+            "single-wave gain must equal the legacy formula"
+        );
+        assert_eq!((u1.preemptions, u1.jobs_rejected), (0, 0));
+        // the JSON face carries the new fields
+        let js = u1.to_json().to_string();
+        assert!(js.contains("busy_span_s"), "{js}");
+        assert!(js.contains("jobs_rejected"), "{js}");
+
+        // Pin the corrected formula itself: windows with a gap between
+        // admission waves yield gain = Σsession / union, not Σ/makespan.
+        let mut windows = vec![(0.0, 10.0), (50.0, 60.0)];
+        let busy = union_span(&mut windows);
+        assert!((busy - 20.0).abs() < 1e-12);
+        let total_session_s = 18.0;
+        let wall_makespan = 60.0;
+        let corrected = total_session_s / busy;
+        let deflated = total_session_s / wall_makespan;
+        assert!(corrected > deflated * 2.5, "gap no longer deflates the gain");
     }
 }

@@ -1,0 +1,898 @@
+//! Always-on serving loop: dynamic admission, priorities, preemption,
+//! and backpressure over one long-lived [`JobScheduler`].
+//!
+//! [`JobScheduler::run`] freezes the job set up front — the paper's
+//! batch shape. This module lifts that restriction into
+//! [`JobScheduler::serve`]: an [`AdmissionSource`] feeds submissions
+//! into the live event pump, each is admitted (queued) or load-shed
+//! with a [`Rejected`](AdmissionVerdict::Rejected) verdict, queued jobs
+//! activate highest-priority-first while the fleet has headroom, and
+//! when membership shrinks below aggregate demand the lowest-priority
+//! active jobs are *preempted* — drained after their already-assigned
+//! paper-jobs (the [`SgcSession::finish_after_assigned`] machinery the
+//! failure domains and adaptive hot-swap already rely on), banked as a
+//! ledger segment, and returned to the queue for re-activation once
+//! capacity recovers.
+//!
+//! Two sources ship:
+//!
+//! * [`ScriptedSource`] — deterministic in-process arrivals keyed on
+//!   cluster time or closed-round counts (soak/property tests, chaos
+//!   `adm@rR:K` bursts).
+//! * [`QueueSource`] — drains a [`SharedControl`] queue the fleet
+//!   master fills from `Submit` wire frames on its control socket, and
+//!   pushes verdicts back for the reactor to answer with
+//!   `Accepted`/`Rejected` frames.
+//!
+//! The loop stays event-driven: its wake horizon is the minimum of the
+//! jobs' μ-cutoffs, parked retries, the source's next timed arrival,
+//! and the optional serve deadline — a fleet backend still sleeps in
+//! one `poll(2)` and is woken early by control-socket traffic, so an
+//! idle serving loop burns no CPU.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::*;
+
+/// One submission offered to the serving loop.
+#[derive(Debug, Clone)]
+pub struct SubmitRequest {
+    /// Source-chosen correlation id, echoed in the verdict
+    /// ([`AdmissionSource::notify`]); the fleet master keys reply
+    /// connections on it.
+    pub token: u64,
+    /// Submitter-chosen display name (journals, reports).
+    pub name: String,
+    /// Admission priority: higher activates first; ties break toward
+    /// the older submission.
+    pub priority: u8,
+    /// The parsed job, or the parse error. Carrying the `Err` through
+    /// the loop (instead of dropping it source-side) keeps every
+    /// rejection in the same counters and journal.
+    pub spec: Result<JobSpec, String>,
+}
+
+/// The serving loop's answer to one [`SubmitRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionVerdict {
+    /// Admitted: the job's scheduler id and the admission-queue depth
+    /// right after it joined.
+    Accepted { job: JobId, queue_depth: usize },
+    /// Load-shed (queue full, bad spec, oversized scheme, shutdown).
+    Rejected { reason: String },
+}
+
+/// Where [`JobScheduler::serve`] gets its submissions.
+pub trait AdmissionSource {
+    /// Append every submission due at cluster clock `now_s` with
+    /// `rounds_closed` total rounds committed. The loop passes
+    /// `u64::MAX` when no further round can ever close, so
+    /// rounds-keyed arrivals cannot deadlock an idle fleet.
+    fn poll_requests(&mut self, now_s: f64, rounds_closed: u64, out: &mut Vec<SubmitRequest>);
+
+    /// Earliest *time-keyed* arrival still pending (a wake horizon), if
+    /// any. Rounds-keyed and externally-fed arrivals return `None`.
+    fn next_arrival_s(&self, now_s: f64) -> Option<f64>;
+
+    /// No further submission will ever arrive.
+    fn exhausted(&self) -> bool;
+
+    /// Deliver the verdict for the request submitted with `token`.
+    fn notify(&mut self, token: u64, verdict: AdmissionVerdict);
+}
+
+/// When a scripted arrival fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalAt {
+    /// At cluster clock `t` (seconds).
+    Time(f64),
+    /// Once `k` rounds have been committed across all jobs.
+    RoundsClosed(u64),
+}
+
+/// Deterministic in-process [`AdmissionSource`] for tests and sim
+/// drivers: arrivals fire on cluster time or closed-round counts, in
+/// insertion order within a tick, and every verdict is logged for
+/// assertion.
+#[derive(Default)]
+pub struct ScriptedSource {
+    pending: VecDeque<(ArrivalAt, SubmitRequest)>,
+    next_token: u64,
+    /// Every verdict delivered, in delivery order.
+    pub verdicts: Vec<(u64, AdmissionVerdict)>,
+}
+
+impl ScriptedSource {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage `spec` to arrive at `at`; returns the assigned token.
+    pub fn submit_at(
+        &mut self,
+        at: ArrivalAt,
+        name: &str,
+        priority: u8,
+        spec: JobSpec,
+    ) -> u64 {
+        let token = self.next_token;
+        self.next_token += 1;
+        self.pending.push_back((
+            at,
+            SubmitRequest { token, name: name.into(), priority, spec: Ok(spec) },
+        ));
+        token
+    }
+
+    /// Stage a deliberately malformed submission (exercises the
+    /// rejection path end to end).
+    pub fn submit_bad_at(&mut self, at: ArrivalAt, name: &str, error: &str) -> u64 {
+        let token = self.next_token;
+        self.next_token += 1;
+        self.pending.push_back((
+            at,
+            SubmitRequest {
+                token,
+                name: name.into(),
+                priority: 0,
+                spec: Err(error.into()),
+            },
+        ));
+        token
+    }
+
+    /// Stage one burst per `adm@rR:K` fault in `plan`: `K` copies of
+    /// `mk(round, i)` arriving once `R` rounds have closed — the chaos
+    /// harness's hook into the serving loop.
+    pub fn stage_bursts<F>(&mut self, plan: &crate::chaos::ResolvedPlan, mut mk: F)
+    where
+        F: FnMut(u64, usize) -> (String, u8, JobSpec),
+    {
+        for (round, count) in plan.admission_faults() {
+            for i in 0..count {
+                let (name, priority, spec) = mk(round, i);
+                self.submit_at(ArrivalAt::RoundsClosed(round), &name, priority, spec);
+            }
+        }
+    }
+
+    /// Verdicts that accepted, in delivery order.
+    pub fn accepted(&self) -> usize {
+        self.verdicts
+            .iter()
+            .filter(|(_, v)| matches!(v, AdmissionVerdict::Accepted { .. }))
+            .count()
+    }
+
+    /// Verdicts that rejected, in delivery order.
+    pub fn rejected(&self) -> usize {
+        self.verdicts.len() - self.accepted()
+    }
+}
+
+impl AdmissionSource for ScriptedSource {
+    fn poll_requests(&mut self, now_s: f64, rounds_closed: u64, out: &mut Vec<SubmitRequest>) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            let due = match self.pending[i].0 {
+                ArrivalAt::Time(t) => t <= now_s,
+                ArrivalAt::RoundsClosed(r) => r <= rounds_closed,
+            };
+            if due {
+                let (_, req) = self.pending.remove(i).expect("index in range");
+                out.push(req);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn next_arrival_s(&self, _now_s: f64) -> Option<f64> {
+        self.pending
+            .iter()
+            .filter_map(|(at, _)| match at {
+                ArrivalAt::Time(t) => Some(*t),
+                ArrivalAt::RoundsClosed(_) => None,
+            })
+            .fold(None, |acc: Option<f64>, t| {
+                Some(acc.map_or(t, |a| a.min(t)))
+            })
+    }
+
+    fn exhausted(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    fn notify(&mut self, token: u64, verdict: AdmissionVerdict) {
+        self.verdicts.push((token, verdict));
+    }
+}
+
+/// One raw submission as the control socket received it (unparsed: the
+/// reactor thread never touches scheme code).
+#[derive(Debug, Clone)]
+pub struct RawSubmit {
+    /// Reactor-assigned token identifying the submitting connection.
+    pub token: u64,
+    pub name: String,
+    /// Scheme spec string, parsed by [`QueueSource`] against the
+    /// cluster's worker count (e.g. `gc:2`, `srsgc:2,4,1`).
+    pub scheme: String,
+    /// Paper-jobs for the session; `0` means "template default".
+    pub session_jobs: u32,
+    pub priority: u8,
+}
+
+/// A verdict queued for the reactor to ship back on the submitting
+/// connection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RawVerdict {
+    Accepted { job: u32, queue_depth: u32 },
+    Rejected { reason: String },
+}
+
+/// The master ↔ serving-loop handoff queue behind the control socket:
+/// the reactor pushes [`RawSubmit`]s in, [`QueueSource`] drains them,
+/// and verdicts flow back the other way.
+#[derive(Default)]
+pub struct ControlQueue {
+    pub incoming: VecDeque<RawSubmit>,
+    pub verdicts: VecDeque<(u64, RawVerdict)>,
+    /// Set on shutdown: no further submission will arrive, letting the
+    /// serving loop's exit condition fire.
+    pub closed: bool,
+}
+
+/// Shared handle on a [`ControlQueue`].
+pub type SharedControl = Arc<Mutex<ControlQueue>>;
+
+impl ControlQueue {
+    pub fn shared() -> SharedControl {
+        Arc::new(Mutex::new(ControlQueue::default()))
+    }
+}
+
+/// [`AdmissionSource`] over a [`SharedControl`] queue: parses each raw
+/// submission against the cluster's worker count and a template
+/// [`SessionConfig`], and routes verdicts back for the reactor to
+/// answer on the wire.
+pub struct QueueSource {
+    control: SharedControl,
+    /// Worker count schemes are parsed against.
+    n: usize,
+    /// Session defaults (μ, wait policy, …); `session_jobs` overrides
+    /// the job count when non-zero.
+    template: SessionConfig,
+}
+
+impl QueueSource {
+    pub fn new(control: SharedControl, n: usize, template: SessionConfig) -> Self {
+        QueueSource { control, n, template }
+    }
+}
+
+impl AdmissionSource for QueueSource {
+    fn poll_requests(&mut self, _now_s: f64, _rounds_closed: u64, out: &mut Vec<SubmitRequest>) {
+        let mut q = self.control.lock().expect("control queue lock poisoned");
+        while let Some(raw) = q.incoming.pop_front() {
+            let spec = SchemeConfig::parse(self.n, &raw.scheme)
+                .map(|scheme| {
+                    let mut session = self.template.clone();
+                    if raw.session_jobs > 0 {
+                        session.jobs = raw.session_jobs as usize;
+                    }
+                    JobSpec { scheme, session }
+                })
+                .map_err(|e| e.to_string());
+            out.push(SubmitRequest {
+                token: raw.token,
+                name: raw.name,
+                priority: raw.priority,
+                spec,
+            });
+        }
+    }
+
+    fn next_arrival_s(&self, _now_s: f64) -> Option<f64> {
+        None
+    }
+
+    fn exhausted(&self) -> bool {
+        let q = self.control.lock().expect("control queue lock poisoned");
+        q.closed && q.incoming.is_empty()
+    }
+
+    fn notify(&mut self, token: u64, verdict: AdmissionVerdict) {
+        let raw = match verdict {
+            AdmissionVerdict::Accepted { job, queue_depth } => RawVerdict::Accepted {
+                job: job as u32,
+                queue_depth: queue_depth as u32,
+            },
+            AdmissionVerdict::Rejected { reason } => RawVerdict::Rejected { reason },
+        };
+        self.control
+            .lock()
+            .expect("control queue lock poisoned")
+            .verdicts
+            .push_back((token, raw));
+    }
+}
+
+/// Admission-control knobs for [`JobScheduler::serve`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Accepted-but-not-activated jobs the loop will hold before
+    /// load-shedding (`Rejected { "queue full …" }`).
+    pub max_queue: usize,
+    /// Jobs multiplexed concurrently at most.
+    pub max_active: usize,
+    /// Capacity budget as a multiple of the live worker count:
+    /// aggregate active demand (Σ scheme `n`) above
+    /// `oversub × live` triggers preemption; activation stops at it.
+    pub oversub: f64,
+    /// Stop accepting after this many seconds on the cluster clock;
+    /// already-accepted jobs still run to completion. `None` serves
+    /// until the source is exhausted.
+    pub serve_for_s: Option<f64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_queue: 64, max_active: 8, oversub: 4.0, serve_for_s: None }
+    }
+}
+
+impl<'c> JobScheduler<'c> {
+    /// Serve jobs from `source` until it is exhausted (or the
+    /// [`ServeConfig::serve_for_s`] deadline passes) *and* every
+    /// accepted job has finished. Jobs admitted via
+    /// [`admit`](Self::admit) before the call join the queue like any
+    /// dynamic submission (priority 0).
+    ///
+    /// The event pump is [`run_observed`](Self::run_observed)'s, with
+    /// three extra phases per iteration: drain the source (accept or
+    /// load-shed each request), rebalance (mark preemptions when live
+    /// membership no longer covers aggregate demand; activate queued
+    /// jobs highest-priority-first into the headroom), and an exit
+    /// check. Identically-seeded backends and scripts produce
+    /// byte-identical reports.
+    pub fn serve(
+        &mut self,
+        source: &mut dyn AdmissionSource,
+        cfg: &ServeConfig,
+        obs: &mut dyn RoundObserver,
+    ) -> crate::Result<ScheduleReport> {
+        anyhow::ensure!(!self.ran, "JobScheduler::serve after run");
+        self.ran = true;
+        let n = self.cluster.n();
+        self.live.resize(n, true);
+        let start_s = self.cluster.now_s();
+        let deadline = cfg.serve_for_s.map(|d| start_s + d);
+
+        for slot in &mut self.slots {
+            slot.queued = true;
+        }
+        if let Some(so) = &mut self.obs {
+            so.job_latency.clear();
+            for j in 0..self.slots.len() {
+                let pri = f64::from(self.slots[j].priority);
+                so.job_latency.push(so.obs.metrics.histogram(
+                    "sgc_round_latency_seconds",
+                    &format!("job=\"{j}\""),
+                    "Per-job protocol round latency",
+                ));
+                so.obs.journal.record(start_s, EventKind::JobAdmit, j as i64, -1, -1, pri);
+            }
+        }
+        if let (Some(ad), Some(so)) = (self.adapt.as_mut(), self.obs.as_ref()) {
+            ad.set_obs(so.obs.clone());
+        }
+
+        let mut requests: Vec<SubmitRequest> = Vec::new();
+        let mut stalls = 0u32;
+        loop {
+            let pre = self.cluster.now_s();
+
+            // Admission. When nothing is active and no timed arrival is
+            // coming, no further round can ever close — rounds-keyed
+            // arrivals are released unconditionally so a later wave
+            // cannot deadlock a quiet fleet.
+            let idle = !self.slots.iter().any(|s| s.report.is_none() && !s.queued);
+            let rounds_key = if idle && source.next_arrival_s(pre).is_none() {
+                u64::MAX
+            } else {
+                self.rounds_closed as u64
+            };
+            requests.clear();
+            source.poll_requests(pre, rounds_key, &mut requests);
+            for req in requests.drain(..) {
+                self.admit_request(req, cfg, deadline, pre, source);
+            }
+
+            self.rebalance(cfg, pre, obs)?;
+
+            let all_done = self.slots.iter().all(|s| s.report.is_some());
+            let source_done = source.exhausted() || deadline.is_some_and(|d| pre >= d);
+            if all_done && source_done {
+                break;
+            }
+
+            // Wake horizon: earliest μ-cutoff, parked retry, timed
+            // arrival, or the serve deadline — whichever comes first.
+            let mut wake = f64::INFINITY;
+            for slot in &self.slots {
+                if let Some(t) = slot.retry_at_s {
+                    if t > pre && t < wake {
+                        wake = t;
+                    }
+                    continue;
+                }
+                if !slot.open {
+                    continue;
+                }
+                if let Some(h) = slot.session.as_ref().expect("open slot").deadline_hint() {
+                    let t = slot.submit_s + h;
+                    if t > pre && t < wake {
+                        wake = t;
+                    }
+                }
+            }
+            if let Some(t) = source.next_arrival_s(pre) {
+                if t > pre && t < wake {
+                    wake = t;
+                }
+            }
+            if let Some(d) = deadline {
+                if d > pre && d < wake {
+                    wake = d;
+                }
+            }
+
+            // Pump: poll, co-timed drain, absorb, advance — identical
+            // to the batch loop (order pins determinism).
+            let batch = self.cluster.poll(wake);
+            self.events.clear();
+            self.events.extend_from_slice(batch);
+            let now = self.cluster.now_s();
+            loop {
+                let more = self.cluster.poll(now);
+                if more.is_empty() {
+                    break;
+                }
+                self.events.extend_from_slice(more);
+            }
+            self.absorb_events()?;
+            let closed_before = self.rounds_closed;
+            for j in 0..self.slots.len() {
+                self.try_advance(j, now, obs)?;
+            }
+
+            let progressed = !self.events.is_empty()
+                || self.rounds_closed > closed_before
+                || self.cluster.now_s() > pre;
+            stalls = if progressed { 0 } else { stalls + 1 };
+            anyhow::ensure!(
+                stalls < 1000,
+                "serving loop made no progress with {} jobs unfinished (deadlocked backend?)",
+                self.slots.iter().filter(|s| s.report.is_none()).count()
+            );
+        }
+
+        // One zero-horizon turn so a fleet backend can flush the last
+        // admission verdicts before the clock freezes into the report.
+        let now = self.cluster.now_s();
+        let _ = self.cluster.poll(now);
+        Ok(self.build_report(start_s, n))
+    }
+
+    /// Accept (queue) or load-shed one submission, feed the counters
+    /// and journal, and deliver the verdict.
+    fn admit_request(
+        &mut self,
+        req: SubmitRequest,
+        cfg: &ServeConfig,
+        deadline: Option<f64>,
+        now: f64,
+        source: &mut dyn AdmissionSource,
+    ) {
+        self.submitted_total += 1;
+        if let Some(so) = &self.obs {
+            so.submitted.inc();
+            so.obs.journal.record(
+                now,
+                EventKind::JobSubmit,
+                -1,
+                -1,
+                -1,
+                f64::from(req.priority),
+            );
+        }
+        let queued = self.slots.iter().filter(|s| s.queued).count();
+        let outcome: Result<JobId, String> = if deadline.is_some_and(|d| now >= d) {
+            Err("shutting down".into())
+        } else if queued >= cfg.max_queue {
+            Err(format!("queue full (max {})", cfg.max_queue))
+        } else {
+            match &req.spec {
+                Err(e) => Err(format!("bad spec: {e}")),
+                Ok(spec) => self.admit_slot(spec).map_err(|e| e.to_string()),
+            }
+        };
+        match outcome {
+            Ok(job) => {
+                let slot = &mut self.slots[job];
+                slot.priority = req.priority;
+                slot.name = req.name;
+                slot.queued = true;
+                let depth = queued + 1;
+                if let Some(so) = &mut self.obs {
+                    so.job_latency.push(so.obs.metrics.histogram(
+                        "sgc_round_latency_seconds",
+                        &format!("job=\"{job}\""),
+                        "Per-job protocol round latency",
+                    ));
+                    so.obs.journal.record(
+                        now,
+                        EventKind::JobAdmit,
+                        job as i64,
+                        -1,
+                        -1,
+                        f64::from(req.priority),
+                    );
+                    so.adm_queue.set(depth as f64);
+                    let unfinished =
+                        self.slots.iter().filter(|s| s.report.is_none()).count();
+                    so.queue_depth.set(unfinished as f64);
+                }
+                source.notify(req.token, AdmissionVerdict::Accepted { job, queue_depth: depth });
+            }
+            Err(reason) => {
+                self.rejected_total += 1;
+                if let Some(so) = &self.obs {
+                    so.rejected.inc();
+                    so.obs.journal.record(
+                        now,
+                        EventKind::JobReject,
+                        -1,
+                        -1,
+                        -1,
+                        f64::from(req.priority),
+                    );
+                }
+                source.notify(req.token, AdmissionVerdict::Rejected { reason });
+            }
+        }
+    }
+
+    /// One balance pass: shed load low-priority-first when the live
+    /// roster no longer covers aggregate demand, then activate queued
+    /// jobs highest-priority-first into the remaining headroom.
+    fn rebalance(
+        &mut self,
+        cfg: &ServeConfig,
+        now: f64,
+        obs: &mut dyn RoundObserver,
+    ) -> crate::Result<()> {
+        let live_workers = self.live.iter().filter(|&&l| l).count().max(1);
+        let budget = cfg.oversub * live_workers as f64;
+        let active: Vec<usize> = (0..self.slots.len())
+            .filter(|&j| {
+                let s = &self.slots[j];
+                !s.queued && s.report.is_none()
+            })
+            .collect();
+        let mut demand: f64 = active.iter().map(|&j| self.slots[j].scheme.n as f64).sum();
+
+        // Preemption marks: lowest priority first, youngest id first on
+        // ties, always keeping at least one job unmarked. The marked
+        // session is truncated at each round close and banks + re-queues
+        // in finish_segment.
+        if demand > budget && active.len() > 1 {
+            let mut victims = active.clone();
+            victims.sort_by(|&a, &b| {
+                self.slots[a]
+                    .priority
+                    .cmp(&self.slots[b].priority)
+                    .then(b.cmp(&a))
+            });
+            let mut unmarked = active.iter().filter(|&&j| !self.slots[j].preempt).count();
+            for &j in &victims {
+                if demand <= budget || unmarked <= 1 {
+                    break;
+                }
+                let s = &mut self.slots[j];
+                // parked slots hold no session to drain; their retry
+                // path already re-fits them to the shrunken roster
+                if s.preempt || s.session.is_none() {
+                    continue;
+                }
+                s.preempt = true;
+                unmarked -= 1;
+                demand -= s.scheme.n as f64;
+            }
+        }
+
+        // Activation: an idle fleet always takes one job; beyond that,
+        // only while aggregate demand stays within the budget.
+        loop {
+            let active_count = self
+                .slots
+                .iter()
+                .filter(|s| !s.queued && s.report.is_none())
+                .count();
+            if active_count >= cfg.max_active {
+                break;
+            }
+            let mut best: Option<usize> = None;
+            for j in 0..self.slots.len() {
+                if !self.slots[j].queued {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        let (s, sb) = (&self.slots[j], &self.slots[b]);
+                        (s.priority, std::cmp::Reverse(j)) > (sb.priority, std::cmp::Reverse(b))
+                    }
+                };
+                if better {
+                    best = Some(j);
+                }
+            }
+            let Some(j) = best else { break };
+            let need = self.slots[j].scheme.n as f64;
+            if active_count > 0 && demand + need > budget {
+                break;
+            }
+            self.activate(j, now, obs)?;
+            demand += need;
+        }
+        if let Some(so) = &self.obs {
+            let queued = self.slots.iter().filter(|s| s.queued).count();
+            so.adm_queue.set(queued as f64);
+        }
+        Ok(())
+    }
+
+    /// Take job `j` off the queue and open its first round: fresh
+    /// session over the remaining paper-jobs when none is banked
+    /// (first activation, or resume after preemption/retry), placement
+    /// re-derived against the *current* roster when empty.
+    fn activate(&mut self, j: usize, now: f64, obs: &mut dyn RoundObserver) -> crate::Result<()> {
+        let n = self.cluster.n();
+        let jobs = self.slots.len();
+        let resumed = {
+            let slot = &mut self.slots[j];
+            slot.queued = false;
+            slot.admit_s.get_or_insert(now);
+            let resumed = !slot.segments.is_empty();
+            if slot.session.is_none() {
+                let remaining = slot.jobs_total.saturating_sub(slot.assigned_base);
+                let mut scfg = slot.session_cfg.clone();
+                scfg.jobs = remaining.max(1);
+                if slot.degraded {
+                    scfg.wait_policy = WaitPolicy::NeverWait;
+                }
+                slot.session = Some(SgcSession::new(&slot.scheme, scfg));
+            }
+            resumed
+        };
+        if self.slots[j].place.is_empty() {
+            let offset = self.policy.offset(j, n, jobs) % n.max(1);
+            let sn = self.slots[j].session.as_ref().expect("session just ensured").n();
+            self.slots[j].place = (0..sn).map(|i| (i + offset) % n).collect();
+        }
+        if resumed {
+            if let Some(so) = &self.obs {
+                so.obs.journal.record(now, EventKind::JobResume, j as i64, -1, -1, 0.0);
+            }
+        }
+        self.start_round(j, obs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::ChaosPlan;
+    use crate::cluster::{LatencyParams, SimCluster};
+    use crate::straggler::models::NoStragglers;
+
+    fn quiet(n: usize, seed: u64) -> SimCluster {
+        SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), seed)
+    }
+
+    fn spec(n: usize, s: usize, jobs: usize) -> JobSpec {
+        JobSpec {
+            scheme: SchemeConfig::gc(n, s),
+            session: SessionConfig { jobs, ..Default::default() },
+        }
+    }
+
+    fn serve_quiet(seed: u64) -> (ScheduleReport, ScriptedSource) {
+        let n = 8;
+        let mut sim = quiet(n, seed);
+        let mut src = ScriptedSource::new();
+        // wave 1 at t=0, wave 2 long after wave 1 drained: two disjoint
+        // admission waves over one live loop
+        src.submit_at(ArrivalAt::Time(0.0), "w1-a", 1, spec(n, 1, 3));
+        src.submit_at(ArrivalAt::Time(0.0), "w1-b", 0, spec(n, 1, 3));
+        src.submit_at(ArrivalAt::Time(5_000.0), "w2-a", 2, spec(n, 2, 4));
+        src.submit_at(ArrivalAt::Time(5_000.0), "w2-b", 0, spec(n, 1, 2));
+        let mut sched = JobScheduler::new(&mut sim);
+        let out = sched
+            .serve(&mut src, &ServeConfig::default(), &mut NoopObserver)
+            .unwrap();
+        (out, src)
+    }
+
+    #[test]
+    fn serve_survives_two_disjoint_admission_waves() {
+        let (out, src) = serve_quiet(42);
+        assert_eq!(out.reports.len(), 4);
+        assert_eq!(src.accepted(), 4);
+        assert_eq!(src.rejected(), 0);
+        for o in &out.outcomes {
+            assert_eq!(o.status, JobStatus::Completed, "job {}", o.job);
+        }
+        let u = &out.utilization;
+        assert_eq!((u.jobs, u.jobs_rejected, u.preemptions), (4, 0, 0));
+        // the idle gap between waves is excluded from the busy span …
+        assert!(
+            u.busy_span_s < u.makespan_s - 1_000.0,
+            "busy {} vs makespan {}",
+            u.busy_span_s,
+            u.makespan_s
+        );
+        // … so the gain reflects real multiplexing, not wall idle time
+        assert!(u.multiplexing_gain > u.total_session_s / u.makespan_s);
+    }
+
+    #[test]
+    fn serve_is_deterministic_for_a_fixed_seed() {
+        let (a, _) = serve_quiet(9);
+        let (b, _) = serve_quiet(9);
+        assert_eq!(format!("{:?}", a.reports), format!("{:?}", b.reports));
+        assert_eq!(format!("{:?}", a.outcomes), format!("{:?}", b.outcomes));
+    }
+
+    #[test]
+    fn backpressure_sheds_load_beyond_max_queue() {
+        let n = 6;
+        let mut sim = quiet(n, 3);
+        let mut src = ScriptedSource::new();
+        for i in 0..4 {
+            src.submit_at(ArrivalAt::Time(0.0), &format!("j{i}"), 0, spec(n, 1, 2));
+        }
+        src.submit_bad_at(ArrivalAt::Time(0.0), "broken", "no such scheme");
+        let cfg = ServeConfig { max_queue: 1, ..Default::default() };
+        let mut sched = JobScheduler::new(&mut sim);
+        let out = sched.serve(&mut src, &cfg, &mut NoopObserver).unwrap();
+        // one request fills the queue; the rest of the co-timed burst is
+        // shed, and the malformed one rejects regardless
+        assert_eq!(src.accepted(), 1);
+        assert_eq!(src.rejected(), 4);
+        assert_eq!(out.utilization.jobs_rejected, 4);
+        assert!(src.verdicts.iter().any(|(_, v)| matches!(
+            v,
+            AdmissionVerdict::Rejected { reason } if reason.contains("queue full (max 1)")
+        )));
+        assert!(src.verdicts.iter().any(|(_, v)| matches!(
+            v,
+            AdmissionVerdict::Rejected { reason } if reason.contains("bad spec")
+        )));
+        assert_eq!(out.reports.len(), 1);
+        assert_eq!(out.outcomes[0].status, JobStatus::Completed);
+    }
+
+    #[test]
+    fn shrink_preempts_the_low_priority_job_then_resumes_it() {
+        let n = 8;
+        let mut sim = quiet(n, 17);
+        // retire 4 of 8 workers at the 4th submission: the fleet drops
+        // below the aggregate demand of two co-active n=8 jobs
+        sim.set_chaos(ChaosPlan::parse("shrink@r4:4", 5).unwrap().resolve(n));
+        let mut src = ScriptedSource::new();
+        src.submit_at(ArrivalAt::Time(0.0), "hi", 9, spec(n, 4, 6));
+        src.submit_at(ArrivalAt::Time(0.0), "lo", 1, spec(n, 4, 6));
+        let cfg = ServeConfig { oversub: 2.0, ..Default::default() };
+        let mut sched = JobScheduler::new(&mut sim);
+        let out = sched.serve(&mut src, &cfg, &mut NoopObserver).unwrap();
+        assert_eq!(src.accepted(), 2);
+        assert!(out.utilization.preemptions >= 1, "{}", out.utilization);
+        // the preempted job resumed and finished its full ledger
+        assert_eq!(out.reports.len(), 2);
+        for (o, rep) in out.outcomes.iter().zip(&out.reports) {
+            assert_eq!(o.status, JobStatus::Completed, "job {}", o.job);
+            assert_eq!(rep.job_completion_s.len(), 6);
+            assert!(rep.job_completion_s.iter().all(|t| t.is_finite()));
+        }
+    }
+
+    #[test]
+    fn chaos_bursts_feed_the_scripted_source() {
+        let n = 6;
+        let mut sim = quiet(n, 23);
+        let plan = ChaosPlan::parse("adm@r2:3", 1).unwrap().resolve(n);
+        let mut src = ScriptedSource::new();
+        src.submit_at(ArrivalAt::Time(0.0), "seed", 0, spec(n, 1, 3));
+        src.stage_bursts(&plan, |round, i| {
+            (format!("burst-r{round}-{i}"), 1, spec(n, 1, 2))
+        });
+        let mut sched = JobScheduler::new(&mut sim);
+        let out = sched
+            .serve(&mut src, &ServeConfig::default(), &mut NoopObserver)
+            .unwrap();
+        assert_eq!(out.reports.len(), 4, "seed job + 3-job burst");
+        assert_eq!(src.accepted(), 4);
+        for o in &out.outcomes {
+            assert_eq!(o.status, JobStatus::Completed);
+        }
+    }
+
+    #[test]
+    fn queue_source_parses_and_answers_on_the_control_queue() {
+        let n = 6;
+        let control = ControlQueue::shared();
+        {
+            let mut q = control.lock().unwrap();
+            q.incoming.push_back(RawSubmit {
+                token: 7,
+                name: "wire-a".into(),
+                scheme: "gc:1".into(),
+                session_jobs: 2,
+                priority: 3,
+            });
+            q.incoming.push_back(RawSubmit {
+                token: 8,
+                name: "wire-bad".into(),
+                scheme: "nonsense".into(),
+                session_jobs: 0,
+                priority: 0,
+            });
+            q.closed = true;
+        }
+        let template = SessionConfig { jobs: 5, ..Default::default() };
+        let mut src = QueueSource::new(control.clone(), n, template);
+        let mut sim = quiet(n, 4);
+        let mut sched = JobScheduler::new(&mut sim);
+        let out = sched
+            .serve(&mut src, &ServeConfig::default(), &mut NoopObserver)
+            .unwrap();
+        assert_eq!(out.reports.len(), 1);
+        assert_eq!(out.reports[0].job_completion_s.len(), 2, "session_jobs override");
+        assert_eq!(out.utilization.jobs_rejected, 1);
+        let q = control.lock().unwrap();
+        let verdicts: Vec<_> = q.verdicts.iter().cloned().collect();
+        assert_eq!(verdicts.len(), 2);
+        assert_eq!(verdicts[0], (7, RawVerdict::Accepted { job: 0, queue_depth: 1 }));
+        assert!(matches!(
+            &verdicts[1],
+            (8, RawVerdict::Rejected { reason }) if reason.contains("bad spec")
+        ));
+    }
+
+    #[test]
+    fn serve_for_deadline_rejects_late_submissions_but_drains_accepted() {
+        let n = 6;
+        let mut sim = quiet(n, 31);
+        let mut src = ScriptedSource::new();
+        src.submit_at(ArrivalAt::Time(0.0), "early", 0, spec(n, 1, 3));
+        // lands exactly on the deadline: drained on the shutdown tick
+        // and shed with the shutting-down verdict
+        src.submit_at(ArrivalAt::Time(1_000.0), "late", 5, spec(n, 1, 3));
+        let cfg = ServeConfig { serve_for_s: Some(1_000.0), ..Default::default() };
+        let mut sched = JobScheduler::new(&mut sim);
+        let out = sched.serve(&mut src, &cfg, &mut NoopObserver).unwrap();
+        assert_eq!(src.accepted(), 1);
+        assert_eq!(src.rejected(), 1);
+        assert!(src.verdicts.iter().any(|(_, v)| matches!(
+            v,
+            AdmissionVerdict::Rejected { reason } if reason.contains("shutting down")
+        )));
+        assert_eq!(out.reports.len(), 1);
+        assert_eq!(out.outcomes[0].status, JobStatus::Completed);
+        assert_eq!(out.reports[0].job_completion_s.len(), 3);
+    }
+}

@@ -624,3 +624,232 @@ fn prop_submit_order_invariance() {
         assert_eq!(a.detected_pattern, b.detected_pattern);
     });
 }
+
+/// Serving-loop invariant (ISSUE 10): a co-timed burst of submissions
+/// is admitted deterministically and *activated* in priority-then-id
+/// order, no matter how the cluster batches its event delivery. Runs
+/// the same scripted burst with unbounded event batching and with
+/// `set_max_events_per_poll(1)` (one event per poll) and demands
+/// byte-identical verdicts, reports, and first-activation order.
+#[test]
+fn prop_serve_admission_order_priority_then_id_batching_invariant() {
+    use sgc::cluster::SimCluster;
+    use sgc::coding::SchemeConfig;
+    use sgc::obs::{EventKind, Obs};
+    use sgc::sched::{
+        ArrivalAt, JobScheduler, JobSpec, NoopObserver, ScriptedSource, ServeConfig,
+    };
+    use sgc::session::SessionConfig;
+    use sgc::straggler::GilbertElliot;
+    use std::sync::Arc;
+
+    check("serve-admission-order", 12, |g: &mut Gen| {
+        let n = g.usize_in(6, 10);
+        let k = g.usize_in(3, 6);
+        let pris: Vec<u8> = (0..k).map(|_| g.usize_in(0, 4) as u8).collect();
+        let seed = g.rng().next_u64();
+
+        let run = |batch: usize| {
+            let mut sim = SimCluster::from_gilbert_elliot(
+                n,
+                GilbertElliot::new(n, 0.05, 0.6, seed),
+                seed ^ 0x21,
+            );
+            if batch > 0 {
+                sim.set_max_events_per_poll(batch);
+            }
+            let obs = Arc::new(Obs::new());
+            sim.set_obs(obs.clone());
+            let mut src = ScriptedSource::new();
+            for (i, &p) in pris.iter().enumerate() {
+                src.submit_at(
+                    ArrivalAt::Time(0.0),
+                    &format!("burst-{i}"),
+                    p,
+                    JobSpec {
+                        scheme: SchemeConfig::gc(n, 1),
+                        session: SessionConfig { jobs: 2, ..Default::default() },
+                    },
+                );
+            }
+            // max_active 1 serialises activations, making the
+            // priority-then-id activation order directly observable
+            let cfg = ServeConfig { max_active: 1, ..Default::default() };
+            let mut sched = JobScheduler::new(&mut sim);
+            sched.set_obs(obs.clone());
+            let out = sched.serve(&mut src, &cfg, &mut NoopObserver).unwrap();
+            assert_eq!(out.reports.len(), k, "n={n} pris={pris:?}");
+            let mut order: Vec<usize> = Vec::new();
+            for e in obs.journal.snapshot() {
+                if matches!(e.kind, EventKind::RoundAssign) {
+                    let j = e.job as usize;
+                    if e.job >= 0 && !order.contains(&j) {
+                        order.push(j);
+                    }
+                }
+            }
+            (format!("{:?}", out.reports), format!("{:?}", src.verdicts), order)
+        };
+
+        let (rep_a, ver_a, ord_a) = run(0);
+        // co-timed requests admit (and take job ids) in submission
+        // order; activation is highest-priority first, ties by id
+        let mut expect: Vec<usize> = (0..k).collect();
+        expect.sort_by_key(|&j| (std::cmp::Reverse(pris[j]), j));
+        assert_eq!(
+            ord_a, expect,
+            "activation order is not priority-then-id (pris {pris:?})"
+        );
+
+        let (rep_b, ver_b, ord_b) = run(1);
+        assert_eq!(ord_a, ord_b, "event batching changed activation order");
+        assert_eq!(ver_a, ver_b, "event batching changed admission verdicts");
+        assert_eq!(rep_a, rep_b, "event batching leaked into the served schedule");
+    });
+}
+
+/// Serving-loop invariant (ISSUE 10): preemption is safe. A low-
+/// priority job that is preempted when the fleet shrinks below the
+/// capacity budget, then resumed once the high-priority job drains,
+/// ends with exactly the same completed-job ledger as an unpreempted
+/// run of the same seed — every paper-job decoded, none lost or
+/// duplicated across the banked segments.
+#[test]
+fn prop_serve_preemption_preserves_the_job_ledger() {
+    use sgc::chaos::ChaosPlan;
+    use sgc::cluster::{LatencyParams, SimCluster};
+    use sgc::coding::SchemeConfig;
+    use sgc::sched::{
+        ArrivalAt, JobScheduler, JobSpec, JobStatus, NoopObserver, ScriptedSource,
+        ServeConfig,
+    };
+    use sgc::session::SessionConfig;
+    use sgc::straggler::NoStragglers;
+
+    check("serve-preemption-safety", 10, |g: &mut Gen| {
+        let n = 8;
+        let jobs = g.usize_in(5, 8);
+        let shrink_at = g.usize_in(3, 5);
+        let seed = g.rng().next_u64();
+        let spec = JobSpec {
+            scheme: SchemeConfig::gc(n, 4),
+            session: SessionConfig { jobs, ..Default::default() },
+        };
+
+        let run = |preempt: bool| {
+            let mut sim =
+                SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), seed);
+            if preempt {
+                // retire half the fleet mid-stream: two co-active n=8
+                // jobs (demand 16) overrun budget 2.0 × 4 = 8
+                let plan = ChaosPlan::parse(&format!("shrink@r{shrink_at}:4"), seed ^ 0x7e)
+                    .unwrap()
+                    .resolve(n);
+                sim.set_chaos(plan);
+            }
+            let mut src = ScriptedSource::new();
+            src.submit_at(ArrivalAt::Time(0.0), "hi", 9, spec.clone());
+            src.submit_at(ArrivalAt::Time(0.0), "lo", 1, spec.clone());
+            let cfg = ServeConfig { oversub: 2.0, ..Default::default() };
+            let mut sched = JobScheduler::new(&mut sim);
+            sched.serve(&mut src, &cfg, &mut NoopObserver).unwrap()
+        };
+
+        let base = run(false);
+        let out = run(true);
+        assert_eq!(base.utilization.preemptions, 0);
+        assert!(
+            out.utilization.preemptions >= 1,
+            "shrink@r{shrink_at} with jobs={jobs} never preempted: {}",
+            out.utilization
+        );
+
+        // ledger equality: same job count, same per-job completed
+        // ledger length, everything decoded, in both runs
+        assert_eq!(base.reports.len(), out.reports.len());
+        for ((bo, br), (oo, or)) in base
+            .outcomes
+            .iter()
+            .zip(&base.reports)
+            .zip(out.outcomes.iter().zip(&out.reports))
+        {
+            assert_eq!(bo.status, JobStatus::Completed, "job {}", bo.job);
+            assert_eq!(oo.status, JobStatus::Completed, "job {} (preempted run)", oo.job);
+            assert_eq!(
+                br.job_completion_s.len(),
+                or.job_completion_s.len(),
+                "job {}: preemption changed the ledger length",
+                bo.job
+            );
+            assert_eq!(or.job_completion_s.len(), jobs);
+            assert!(br.job_completion_s.iter().all(|t| t.is_finite()));
+            assert!(
+                or.job_completion_s.iter().all(|t| t.is_finite()),
+                "job {}: preempted run lost a paper-job",
+                oo.job
+            );
+            assert_eq!(br.deadline_violations, or.deadline_violations);
+        }
+    });
+}
+
+/// Serving-loop invariant (ISSUE 10): backpressure is monotone in
+/// offered load. At a fixed `max_queue` capacity, submitting more
+/// co-timed jobs never *reduces* the number of rejections, and the
+/// shed count is exactly `offered − min(offered, max_queue)`.
+#[test]
+fn prop_serve_backpressure_monotone_in_offered_load() {
+    use sgc::cluster::{LatencyParams, SimCluster};
+    use sgc::coding::SchemeConfig;
+    use sgc::sched::{
+        ArrivalAt, JobScheduler, JobSpec, NoopObserver, ScriptedSource, ServeConfig,
+    };
+    use sgc::session::SessionConfig;
+    use sgc::straggler::NoStragglers;
+
+    check("serve-backpressure-monotone", 12, |g: &mut Gen| {
+        let n = 6;
+        let q = g.usize_in(1, 4);
+        let seed = g.rng().next_u64();
+
+        let rejections = |offered: usize| {
+            let mut sim =
+                SimCluster::new(n, LatencyParams::default(), Box::new(NoStragglers { n }), seed);
+            let mut src = ScriptedSource::new();
+            for i in 0..offered {
+                src.submit_at(
+                    ArrivalAt::Time(0.0),
+                    &format!("load-{i}"),
+                    0,
+                    JobSpec {
+                        scheme: SchemeConfig::gc(n, 1),
+                        session: SessionConfig { jobs: 2, ..Default::default() },
+                    },
+                );
+            }
+            let cfg = ServeConfig { max_queue: q, ..Default::default() };
+            let mut sched = JobScheduler::new(&mut sim);
+            let out = sched.serve(&mut src, &cfg, &mut NoopObserver).unwrap();
+            assert_eq!(
+                out.utilization.jobs_rejected as usize,
+                src.rejected(),
+                "utilization disagrees with delivered verdicts"
+            );
+            assert_eq!(src.accepted() + src.rejected(), offered);
+            src.rejected()
+        };
+
+        let lo = g.usize_in(0, 8);
+        let hi = lo + g.usize_in(0, 6);
+        let r_lo = rejections(lo);
+        let r_hi = rejections(hi);
+        // exact shedding for a co-timed burst against an idle loop …
+        assert_eq!(r_lo, lo.saturating_sub(q), "offered={lo} max_queue={q}");
+        assert_eq!(r_hi, hi.saturating_sub(q), "offered={hi} max_queue={q}");
+        // … hence rejections are nondecreasing in offered load
+        assert!(
+            r_hi >= r_lo,
+            "rejections fell from {r_lo} to {r_hi} as load rose {lo}→{hi} (q={q})"
+        );
+    });
+}

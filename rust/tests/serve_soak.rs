@@ -1,0 +1,190 @@
+//! Serving-loop soak test (ISSUE 10 satellite): a scripted admission
+//! source streams 40 short jobs — mixed priorities, mixed schemes, the
+//! first few on the real-gradient data plane — into a live sim-backed
+//! `JobScheduler::serve` loop while a chaos plan crashes one worker and
+//! shrinks the fleet mid-stream. Asserts:
+//!
+//! 1. every non-quarantined job completes (exactly or degraded, with a
+//!    report for every admitted job);
+//! 2. priority inversion never exceeds one round: within one admission
+//!    wave, a higher-priority job activates no more than one committed
+//!    round after any lower-priority job;
+//! 3. same-seed runs produce byte-identical per-job reports;
+//! 4. the admission queue drains back to zero by the end of the run.
+
+use sgc::chaos::ChaosPlan;
+use sgc::cluster::SimCluster;
+use sgc::coding::SchemeConfig;
+use sgc::grad::{DataPlane, GradConfig, GradPump};
+use sgc::obs::{EventKind, Obs};
+use sgc::sched::{
+    ArrivalAt, JobScheduler, JobSpec, JobStatus, ScheduleReport, ScriptedSource, ServeConfig,
+};
+use sgc::session::SessionConfig;
+use sgc::straggler::GilbertElliot;
+use std::sync::Arc;
+
+const N: usize = 8;
+const WAVES: usize = 5;
+const PER_WAVE: usize = 8;
+
+/// Wave `w`, slot `i` → (priority, spec). Schemes rotate through three
+/// straggler tolerances; priorities cycle 0/3/6 so every wave mixes
+/// background and urgent jobs.
+fn job_shape(w: usize, i: usize) -> (u8, JobSpec) {
+    let tolerance = 1 + (w + i) % 3; // gc:1 | gc:2 | gc:3
+    let spec = JobSpec {
+        scheme: SchemeConfig::gc(N, tolerance),
+        session: SessionConfig { jobs: 2, ..Default::default() },
+    };
+    (((i % 3) * 3) as u8, spec)
+}
+
+/// One full soak run: 5 waves × 8 jobs, 25 s apart on the virtual
+/// clock, `max_active 3` so waves overlap and queue, chaos mid-stream,
+/// and the first three jobs riding the gradient data plane (the sim
+/// returns no payloads, so their decodes exercise the master-side
+/// fallback path — still fully deterministic).
+fn soak(seed: u64) -> (ScheduleReport, ScriptedSource, Arc<Obs>, Vec<u8>) {
+    let mut sim = SimCluster::from_gilbert_elliot(
+        N,
+        GilbertElliot::default_fit(N, seed),
+        seed ^ 0xc1,
+    );
+    sim.set_chaos(
+        ChaosPlan::parse("crash@r10:w2,shrink@r30:1", seed ^ 0x50a4)
+            .expect("chaos spec parses")
+            .resolve(N),
+    );
+    let obs = Arc::new(Obs::new());
+    sim.set_obs(obs.clone());
+
+    let mut src = ScriptedSource::new();
+    let mut priorities = Vec::with_capacity(WAVES * PER_WAVE);
+    for w in 0..WAVES {
+        for i in 0..PER_WAVE {
+            let (pri, spec) = job_shape(w, i);
+            src.submit_at(
+                ArrivalAt::Time(w as f64 * 25.0),
+                &format!("soak-w{w}-{i}"),
+                pri,
+                spec,
+            );
+            priorities.push(pri);
+        }
+    }
+
+    // Real-grad subset: co-timed arrivals admit in submission order, so
+    // the first wave's first three submissions become jobs 0, 1, 2.
+    let mut pump = GradPump::new(
+        DataPlane::shared(),
+        GradConfig { seed, batch: 32, train_size: 128, ..Default::default() },
+    );
+    for j in 0..3 {
+        let (_, spec) = job_shape(0, j);
+        pump.configure_job(j, &spec.scheme).expect("configure grad job");
+    }
+
+    let cfg = ServeConfig { max_active: 3, max_queue: 64, ..Default::default() };
+    let out = {
+        let mut sched = JobScheduler::new(&mut sim);
+        sched.set_obs(obs.clone());
+        sched.set_dataplane(pump.dataplane());
+        sched.serve(&mut src, &cfg, &mut pump).expect("soak run survives chaos")
+    };
+    // every configured grad job decoded its full session ledger
+    for s in pump.summary() {
+        assert_eq!(s.steps, 2, "grad job {} missed decodes", s.job);
+        assert!(s.last_loss.is_finite());
+    }
+    (out, src, obs, priorities)
+}
+
+#[test]
+fn soak_forty_jobs_under_chaos_all_complete_and_queue_drains() {
+    let (out, src, obs, priorities) = soak(0x50ab);
+    let total = WAVES * PER_WAVE;
+    assert_eq!(out.reports.len(), total);
+    assert_eq!(src.accepted(), total);
+    assert_eq!(src.rejected(), 0);
+
+    // 1. every non-quarantined job completes, exactly or degraded
+    assert!(!out.all_failed());
+    for o in &out.outcomes {
+        if o.status == JobStatus::Quarantined {
+            continue; // chaos victims may legitimately quarantine
+        }
+        assert!(
+            matches!(o.status, JobStatus::Completed | JobStatus::Degraded),
+            "job {}: {o:?}",
+            o.job
+        );
+        if o.status == JobStatus::Completed {
+            assert!(
+                out.reports[o.job].job_completion_s.iter().all(|t| t.is_finite()),
+                "job {} completed with undecoded paper-jobs",
+                o.job
+            );
+        }
+    }
+
+    // 2. priority inversion ≤ one round: within a wave, a higher-
+    //    priority job's first activation trails any lower-priority
+    //    job's by at most one committed round.
+    let events = obs.journal.snapshot();
+    let mut act_round: Vec<Option<u64>> = vec![None; total];
+    let mut closed = 0u64;
+    for e in &events {
+        match e.kind {
+            EventKind::RoundClose => closed += 1,
+            EventKind::RoundAssign => {
+                let j = e.job as usize;
+                if e.job >= 0 && j < total && act_round[j].is_none() {
+                    act_round[j] = Some(closed);
+                }
+            }
+            _ => {}
+        }
+    }
+    for w in 0..WAVES {
+        let wave = w * PER_WAVE..(w + 1) * PER_WAVE;
+        for a in wave.clone() {
+            for b in wave.clone() {
+                let (Some(ra), Some(rb)) = (act_round[a], act_round[b]) else {
+                    continue;
+                };
+                if priorities[a] > priorities[b] {
+                    assert!(
+                        ra <= rb + 1,
+                        "priority inversion: job {a} (pri {}) activated at round {ra}, \
+                         after job {b} (pri {}) at round {rb}",
+                        priorities[a],
+                        priorities[b]
+                    );
+                }
+            }
+        }
+    }
+
+    // 4. the admission queue is empty again at the end of the run
+    let rendered = obs.metrics.render_prometheus();
+    assert!(
+        rendered.contains("sgc_admission_queue_depth 0"),
+        "queue depth did not return to zero:\n{rendered}"
+    );
+    assert!(rendered.contains("sgc_jobs_submitted_total 40"), "{rendered}");
+    assert!(rendered.contains("sgc_jobs_rejected_total 0"), "{rendered}");
+}
+
+#[test]
+fn soak_is_byte_identical_for_a_fixed_seed() {
+    let (a, _, _, _) = soak(0x5eed);
+    let (b, _, _, _) = soak(0x5eed);
+    assert_eq!(
+        format!("{:?}", a.reports),
+        format!("{:?}", b.reports),
+        "same-seed soak runs must produce byte-identical per-job reports"
+    );
+    assert_eq!(format!("{:?}", a.outcomes), format!("{:?}", b.outcomes));
+    assert_eq!(format!("{}", a.utilization), format!("{}", b.utilization));
+}

@@ -86,6 +86,30 @@ fn corpus() -> Vec<Frame> {
             total: 0,
             data: vec![],
         },
+        // serving-loop control frames (ISSUE 10): every mutation suite
+        // below also sweeps the admission path the job endpoint exposes
+        Frame::Submit {
+            name: "soak-w0-0".into(),
+            scheme: "m-sgc:1,2,2".into(),
+            session_jobs: 4,
+            priority: 9,
+        },
+        Frame::Submit {
+            name: String::new(),
+            scheme: String::new(),
+            session_jobs: 0,
+            priority: 0,
+        },
+        Frame::Submit {
+            name: "dup".into(),
+            scheme: "gc:2".into(),
+            session_jobs: u32::MAX,
+            priority: u8::MAX,
+        },
+        Frame::Accepted { job: 0, queue_depth: 0 },
+        Frame::Accepted { job: u32::MAX, queue_depth: u32::MAX },
+        Frame::Rejected { reason: "queue full (max 64)".into() },
+        Frame::Rejected { reason: String::new() },
     ]
 }
 
@@ -279,6 +303,97 @@ fn grad_assign_term_mutations_never_panic() {
             exercise_all_decoders(&bytes);
         }
     }
+}
+
+#[test]
+fn submission_string_length_mutations_never_allocate_unboundedly() {
+    use sgc::fleet::wire::{MAX_JOB_NAME, MAX_SUBMIT_SPEC};
+    // mutate the name/scheme length words of a valid Submit through
+    // hostile values; decode must reject without allocating `len` bytes
+    let frame = Frame::Submit {
+        name: "job-a".into(),
+        scheme: "gc:2".into(),
+        session_jobs: 2,
+        priority: 5,
+    };
+    let base = frame.encode();
+    // layout: 4 len + 1 ver + 1 tag, then name (u32 count + bytes),
+    // scheme (u32 count + bytes), session_jobs u32, priority u8
+    let name_at = 4 + 1 + 1;
+    let scheme_at = name_at + 4 + "job-a".len();
+    for (at, cap) in [(name_at, MAX_JOB_NAME), (scheme_at, MAX_SUBMIT_SPEC)] {
+        for hostile in [cap as u32 + 1, 1 << 20, u32::MAX] {
+            let mut bytes = base.clone();
+            bytes[at..at + 4].copy_from_slice(&hostile.to_le_bytes());
+            exercise_all_decoders(&bytes);
+            assert!(
+                Frame::decode(&bytes).is_err(),
+                "hostile string length {hostile} at byte {at} decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn oversized_submission_strings_truncate_on_encode_and_stay_bounded() {
+    use sgc::fleet::wire::{MAX_JOB_NAME, MAX_SUBMIT_SPEC};
+    // a client shovelling a 4×-oversized name/spec must still produce a
+    // bounded, decodable frame — the encoder truncates, the decoder
+    // sees strings at exactly the caps
+    let f = Frame::Submit {
+        name: "n".repeat(MAX_JOB_NAME * 4),
+        scheme: "s".repeat(MAX_SUBMIT_SPEC * 4),
+        session_jobs: 1,
+        priority: 1,
+    };
+    let bytes = f.encode();
+    assert!(
+        bytes.len() <= 4 + 2 + (4 + MAX_JOB_NAME) + (4 + MAX_SUBMIT_SPEC) + 4 + 1,
+        "oversized Submit encoded to {} bytes",
+        bytes.len()
+    );
+    match Frame::decode(&bytes).expect("truncated-on-encode Submit decodes") {
+        Frame::Submit { name, scheme, session_jobs, priority } => {
+            assert_eq!(name.len(), MAX_JOB_NAME);
+            assert_eq!(scheme.len(), MAX_SUBMIT_SPEC);
+            assert_eq!((session_jobs, priority), (1, 1));
+        }
+        other => panic!("decoded {other:?}"),
+    }
+    exercise_all_decoders(&bytes);
+}
+
+#[test]
+fn duplicate_submissions_stream_cleanly_through_the_frame_buffer() {
+    // the codec is policy-free: forty byte-identical Submit frames (the
+    // same job name resubmitted over and over) must reassemble
+    // one-for-one even when a slow sender splits the stream at
+    // arbitrary chunk boundaries — duplicate handling is the serving
+    // loop's job, never the decoder's
+    let submit = Frame::Submit {
+        name: "dup-job".into(),
+        scheme: "gc:1".into(),
+        session_jobs: 2,
+        priority: 0,
+    };
+    let one = submit.encode();
+    let mut stream = Vec::new();
+    for _ in 0..40 {
+        stream.extend_from_slice(&one);
+    }
+    let mut rng = Pcg32::seeded(0xd0b);
+    let mut fb = FrameBuffer::new();
+    let (mut fed, mut got) = (0usize, 0usize);
+    while fed < stream.len() {
+        let take = (1 + rng.below(23)).min(stream.len() - fed);
+        fb.feed(&stream[fed..fed + take]);
+        fed += take;
+        while let Ok(Some(f)) = fb.next_frame() {
+            assert_eq!(f, submit);
+            got += 1;
+        }
+    }
+    assert_eq!(got, 40, "frame buffer dropped or invented submissions");
 }
 
 #[test]
